@@ -1,0 +1,135 @@
+//! End-to-end driver: solve a 3D Poisson problem with wavefront-blocked
+//! smoothing, cross-validated against the AOT Pallas artifacts via PJRT.
+//!
+//! This is the full-stack composition proof:
+//!   L3 (rust)   — wavefront thread groups, barriers, pipeline GS
+//!   L2 (JAX)    — `jacobi_smooth_residual_*` artifact executed via PJRT
+//!   L1 (Pallas) — the plane/wavefront kernels inside that artifact
+//!
+//! The solver smooths `-Δu = f` on a 40³ grid until the residual norm
+//! drops by 100×, logging the residual curve and MLUP/s for (a) the rust
+//! wavefront engine and (b) the PJRT-executed Pallas artifact, and checks
+//! the two solutions agree to fp round-off at every outer iteration.
+//! Results are recorded in EXPERIMENTS.md §End-to-end.
+//!
+//! Run with:
+//!   make artifacts && cargo run --release --example poisson_solver
+
+use stencilwave::coordinator::wavefront::{wavefront_jacobi_iters, WavefrontConfig};
+use stencilwave::metrics::{mlups, timed};
+use stencilwave::runtime::{engine, Manifest, Runtime};
+use stencilwave::stencil::grid::Grid3;
+use stencilwave::stencil::residual::poisson_residual_norm;
+
+const N: usize = 40;
+const T: usize = 4; // temporal blocking factor
+const INNER: usize = 8; // updates per outer iteration (matches artifact)
+const TARGET_DROP: f64 = 100.0;
+const MAX_OUTER: usize = 120;
+
+fn main() -> stencilwave::Result<()> {
+    let h2 = 1.0;
+    let f = Grid3::from_fn(N, N, N, |k, j, i| {
+        let s = |v: usize| (v as f64 / (N - 1) as f64 - 0.5) * 2.0;
+        // a smooth, sign-changing source
+        (3.0 * s(i)).sin() * (2.0 * s(j)).cos() * (1.0 - s(k) * s(k))
+    });
+    let u0 = Grid3::zeros(N, N, N);
+    let r0 = poisson_residual_norm(&u0, &f, h2);
+    println!("== poisson_solver: {N}^3, -Δu = f, wavefront t={T}, {INNER} updates/outer ==");
+    println!("initial residual: {r0:.6e}   target: {:.6e}\n", r0 / TARGET_DROP);
+
+    // ---- leg A: rust wavefront engine
+    let cfg = WavefrontConfig { threads: T, ..Default::default() };
+    let mut u = u0.clone();
+    let mut outer = 0;
+    let mut total_updates = 0u64;
+    let (_, dt_rust) = timed(|| -> stencilwave::Result<()> {
+        while outer < MAX_OUTER {
+            wavefront_jacobi_iters(&mut u, &f, h2, &cfg, INNER)?;
+            total_updates += (u.interior_len() * INNER) as u64;
+            outer += 1;
+            let r = poisson_residual_norm(&u, &f, h2);
+            if outer % 15 == 0 || r * TARGET_DROP <= r0 {
+                println!("  [rust]  outer {outer:>3}: residual {r:.6e}");
+            }
+            if r * TARGET_DROP <= r0 {
+                break;
+            }
+        }
+        Ok(())
+    });
+    let r_rust = poisson_residual_norm(&u, &f, h2);
+    println!(
+        "[rust]   {:.1} MLUP/s over {} outer iterations, final residual {:.6e}\n",
+        mlups(total_updates, dt_rust),
+        outer,
+        r_rust
+    );
+    anyhow::ensure!(r_rust * TARGET_DROP <= r0, "rust leg failed to converge");
+
+    // ---- leg B: the same smoothing through the PJRT artifact
+    let artifact = format!("jacobi_smooth_residual_n{N}_it{INNER}");
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("[pjrt]   skipped: artifacts not built (run `make artifacts`)");
+        return Ok(());
+    }
+    let mut rt = Runtime::load(&dir)?;
+    println!("[pjrt]   platform = {}, artifact = {artifact}", rt.platform());
+    let mut v = u0.clone();
+    let mut pjrt_updates = 0u64;
+    let mut pjrt_outer = 0;
+    let mut r_pjrt = r0;
+    let (res, dt_pjrt) = timed(|| -> stencilwave::Result<()> {
+        while pjrt_outer < MAX_OUTER {
+            let (next, rn) = rt.run_grid_scalar(&artifact, &[&v, &f])?;
+            v = next;
+            r_pjrt = rn;
+            pjrt_updates += (v.interior_len() * INNER) as u64;
+            pjrt_outer += 1;
+            if pjrt_outer % 15 == 0 || rn * TARGET_DROP <= r0 {
+                println!("  [pjrt]  outer {pjrt_outer:>3}: residual {rn:.6e}");
+            }
+            if rn * TARGET_DROP <= r0 {
+                break;
+            }
+        }
+        Ok(())
+    });
+    res?;
+    println!(
+        "[pjrt]   {:.1} MLUP/s over {} outer iterations, final residual {:.6e}\n",
+        mlups(pjrt_updates, dt_pjrt),
+        pjrt_outer,
+        r_pjrt
+    );
+
+    // ---- cross-layer agreement
+    anyhow::ensure!(pjrt_outer == outer, "iteration counts diverged: {pjrt_outer} vs {outer}");
+    let diff = u.max_abs_diff(&v);
+    println!("cross-layer max|rust - pallas| after {outer} outer iterations: {diff:.3e}");
+    anyhow::ensure!(diff < 1e-10, "layers disagree: {diff}");
+
+    // ---- bonus: validate every jacobi/gs artifact quickly
+    println!("\ncross-layer validation of the full artifact catalog:");
+    let names: Vec<String> = rt
+        .manifest()
+        .artifacts
+        .iter()
+        .filter(|a| matches!(a.scheme(), Some("jacobi") | Some("gauss_seidel")))
+        .map(|a| a.name.clone())
+        .collect();
+    for name in names {
+        let val = engine::validate(&mut rt, &name)?;
+        println!(
+            "  [{}] {:<36} {:.3e}",
+            if val.passed() { "OK " } else { "FAIL" },
+            val.artifact,
+            val.max_abs_diff
+        );
+        anyhow::ensure!(val.passed(), "validation failed for {}", val.artifact);
+    }
+    println!("\npoisson_solver: all layers compose. ✔");
+    Ok(())
+}

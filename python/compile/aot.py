@@ -1,0 +1,160 @@
+"""AOT lowering: JAX smoother graphs → HLO text artifacts for the rust runtime.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the published ``xla`` crate) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Every artifact is described in ``artifacts/manifest.json`` so the rust
+runtime can discover shapes, dtypes, and static parameters without parsing
+HLO. Usage::
+
+    cd python && python -m compile.aot --out-dir ../artifacts [--small-only]
+
+``make artifacts`` wraps this and is a no-op while inputs are unchanged.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402  (after x64 flag)
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+DTYPE = jnp.float64
+H2 = 1.0  # unit grid spacing baked into the artifacts (h² = 1)
+
+
+@dataclass
+class Entry:
+    """One AOT entry point: a traced function plus its example shapes."""
+
+    name: str
+    fn: Callable[..., Any]
+    arg_shapes: list[tuple[int, ...]]
+    params: dict[str, Any] = field(default_factory=dict)
+    n_outputs: int = 1
+
+
+def _spec(shape: tuple[int, ...]) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, DTYPE)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple for the loader)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def entries(small_only: bool = False) -> list[Entry]:
+    """The artifact catalog. 16³ entries serve fast tests, 40³ the examples."""
+    cat: list[Entry] = []
+
+    def grid_entries(n: int, iters: int, wf_t: int) -> list[Entry]:
+        g = (n, n, n)
+        return [
+            Entry(
+                f"jacobi_step_n{n}",
+                lambda u, f: model.jacobi_smoother(u, f, H2, 1),
+                [g, g],
+                {"h2": H2, "iters": 1, "scheme": "jacobi"},
+            ),
+            Entry(
+                f"jacobi_sweep_n{n}_it{iters}",
+                lambda u, f, it=iters: model.jacobi_smoother(u, f, H2, it),
+                [g, g],
+                {"h2": H2, "iters": iters, "scheme": "jacobi"},
+            ),
+            Entry(
+                f"jacobi_wavefront_n{n}_t{wf_t}",
+                lambda u, f, t=wf_t: model.jacobi_wavefront_smoother(u, f, H2, t, 1),
+                [g, g],
+                {"h2": H2, "iters": wf_t, "wavefront_t": wf_t, "scheme": "jacobi"},
+            ),
+            Entry(
+                f"gs_sweep_n{n}",
+                lambda u: model.gs_smoother(u, 1),
+                [g],
+                {"iters": 1, "scheme": "gauss_seidel"},
+            ),
+            Entry(
+                f"jacobi_smooth_residual_n{n}_it{iters}",
+                lambda u, f, it=iters: model.jacobi_smooth_and_residual(u, f, H2, it),
+                [g, g],
+                {"h2": H2, "iters": iters, "scheme": "jacobi"},
+                n_outputs=2,
+            ),
+            Entry(
+                f"gs_smooth_residual_n{n}_it{iters}",
+                lambda u, it=iters: model.gs_smooth_and_residual(u, it),
+                [g],
+                {"iters": iters, "scheme": "gauss_seidel"},
+                n_outputs=2,
+            ),
+            Entry(
+                f"residual_n{n}",
+                lambda u, f: model.residual_norm(u, f, H2),
+                [g, g],
+                {"h2": H2, "scheme": "residual"},
+            ),
+        ]
+
+    cat += grid_entries(16, iters=4, wf_t=2)
+    if not small_only:
+        cat += grid_entries(40, iters=8, wf_t=4)
+    return cat
+
+
+def build(out_dir: str, small_only: bool = False) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest: dict[str, Any] = {"dtype": "f64", "artifacts": []}
+    for e in entries(small_only):
+        specs = [_spec(s) for s in e.arg_shapes]
+        lowered = jax.jit(e.fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{e.name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as fh:
+            fh.write(text)
+        manifest["artifacts"].append(
+            {
+                "name": e.name,
+                "file": fname,
+                "inputs": [{"shape": list(s), "dtype": "f64"} for s in e.arg_shapes],
+                "n_outputs": e.n_outputs,
+                "params": e.params,
+            }
+        )
+        print(f"  lowered {e.name}: {len(text)} chars")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=2)
+    print(f"wrote {len(manifest['artifacts'])} artifacts to {out_dir}")
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--out", dest="out_dir_compat", default=None, help=argparse.SUPPRESS)
+    p.add_argument("--small-only", action="store_true")
+    args = p.parse_args()
+    out_dir = args.out_dir
+    if args.out_dir_compat:  # legacy single-file arg from the scaffold Makefile
+        out_dir = os.path.dirname(args.out_dir_compat) or "."
+    build(out_dir, args.small_only)
+
+
+if __name__ == "__main__":
+    main()

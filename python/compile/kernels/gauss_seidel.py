@@ -1,0 +1,111 @@
+"""Pallas implementation of the lexicographic Gauss-Seidel plane update.
+
+Gauss-Seidel is the hard case of the paper: the in-place update carries a
+true dependency along all three axes, which rules out SIMD on the central
+line and makes pipelining the bottleneck (Sec. 3). The paper's optimized
+assembly kernel interleaves two updates to break register dependency
+chains. The vector-hardware analog of that trick is to *solve* the x
+recurrence instead of executing it serially: the line update
+
+    v[i] = b · ( v[i-1] + known[i] )          (b = 1/6)
+
+is a first-order affine recurrence ``v[i] = a·v[i-1] + c[i]``, which an
+``associative_scan`` evaluates in O(log nx) depth on the VPU — the maximal
+generalization of "interleave two updates" (interleaving by 2 halves the
+chain; the scan reduces it to log). Lexicographic update *order* (and hence
+bitwise semantics up to fp reassociation) is preserved: plane k consumes
+plane k-1 NEW and plane k+1 OLD, line j consumes line j-1 NEW, exactly as
+the paper's pipeline-parallel scheme (Fig. 5) requires.
+
+The kernel operates on one z-plane; the L2 model composes planes with a
+``lax.scan`` carrying the updated k-1 plane — the same producer/consumer
+chain the rust coordinator implements with threads and barriers.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from .ref import ONE_SIXTH
+
+
+def _affine_combine(f, g):
+    """Compose affine maps: apply f first, then g. Pairs are (A, C): v ↦ A·v + C."""
+    a1, c1 = f
+    a2, c2 = g
+    return a2 * a1, a2 * c1 + c2
+
+
+def _gs_plane_kernel(prev_ref, cen_ref, nxt_ref, o_ref):
+    """Lexicographic GS update of one interior plane (blocks = full plane)."""
+    prev_new = prev_ref[...]   # plane k-1, already updated this sweep
+    center = cen_ref[...]      # plane k, pre-sweep values
+    nxt_old = nxt_ref[...]     # plane k+1, pre-sweep values
+    ny, nx = center.shape
+    b = ONE_SIXTH
+
+    def line_update(prev_new_line, j):
+        cen_j = center[j]
+        # Terms known before the x recursion starts: new k-1 plane, old k+1
+        # plane, new j-1 line, old j+1 line, old x+1 neighbor.
+        known = prev_new[j] + nxt_old[j] + prev_new_line + center[j + 1]
+        rhs = known + jnp.roll(cen_j, -1)
+        # Affine recurrence v[i] = b·v[i-1] + b·rhs[i] on i = 1..nx-2,
+        # seeded by the Dirichlet value v[0] = cen_j[0]. Solved by an
+        # associative scan (the vectorized "dependency break").
+        a = jnp.full((nx - 2,), b, center.dtype)
+        c = b * rhs[1 : nx - 1]
+        # Fold the seed into the first element so the scan is self-contained.
+        c = c.at[0].add(b * cen_j[0])
+        _, v = lax.associative_scan(_affine_combine, (a, c))
+        new_line = cen_j.at[1 : nx - 1].set(v)
+        return new_line, new_line
+
+    js = jnp.arange(1, ny - 1)
+    _, lines = lax.scan(line_update, center[0], js)
+    o_ref[...] = center.at[1 : ny - 1].set(lines)
+
+
+def gs_plane_update(
+    prev_new: jnp.ndarray, center: jnp.ndarray, nxt_old: jnp.ndarray
+) -> jnp.ndarray:
+    """Update one interior plane via the Pallas kernel (whole-plane block)."""
+    ny, nx = center.shape
+    return pl.pallas_call(
+        _gs_plane_kernel,
+        out_shape=jax.ShapeDtypeStruct((ny, nx), center.dtype),
+        interpret=True,
+    )(prev_new, center, nxt_old)
+
+
+def gs_sweep(u: jnp.ndarray) -> jnp.ndarray:
+    """One full lexicographic GS sweep built from Pallas plane updates.
+
+    The z scan carries the freshly updated k-1 plane while reading the
+    still-old k and k+1 planes from ``u`` — in-place semantics without
+    in-place buffers, mirroring the paper's pipelined plane chain.
+    """
+    nz = u.shape[0]
+
+    def plane_body(carry, k):
+        center = lax.dynamic_index_in_dim(u, k, axis=0, keepdims=False)
+        nxt = lax.dynamic_index_in_dim(u, k + 1, axis=0, keepdims=False)
+        new_plane = gs_plane_update(carry, center, nxt)
+        return new_plane, new_plane
+
+    ks = jnp.arange(1, nz - 1)
+    _, planes = lax.scan(plane_body, u[0], ks)
+    return u.at[1 : nz - 1].set(planes)
+
+
+def gs_sweeps(u: jnp.ndarray, n: int) -> jnp.ndarray:
+    """``n`` consecutive lexicographic GS sweeps."""
+
+    def body(carry, _):
+        return gs_sweep(carry), None
+
+    out, _ = lax.scan(body, u, None, length=n)
+    return out

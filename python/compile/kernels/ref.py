@@ -1,0 +1,206 @@
+"""Pure-reference oracles for the stencil kernels.
+
+These are the *correctness ground truth* for every Pallas kernel in this
+package and (via the AOT artifacts) for the rust execution engine as well.
+Two styles are provided on purpose:
+
+* ``jnp``-vectorized references (`jacobi_step`, `jacobi_steps`,
+  `residual`, `l2_norm`, `gauss_seidel_sweep`) — fast enough to run inside
+  lowered graphs and to serve as the in-graph baseline the paper calls the
+  "C implementation".
+* ``numpy`` loop references (`gauss_seidel_sweep_np`, `jacobi_step_np`) —
+  direct transliterations of the paper's C listings (Sec. 3), used only in
+  pytest. Being triple-loop scalar code they are slow but unarguably
+  correct, including the lexicographic update order of Gauss-Seidel.
+
+Conventions
+-----------
+Grids are ``(nz, ny, nx)`` double-precision arrays (the paper uses double
+precision throughout; Eq. 1 assumes 8-byte values). The outermost index is
+``z`` (planes), then ``y`` (lines), then ``x`` (contiguous). Dirichlet
+boundaries: the faces of the box are never updated.
+
+The Jacobi smoother targets a Poisson problem  ``-Δu = f``:
+
+    u'[k,j,i] = (1/6) * ( u[k±1,j,i] + u[k,j±1,i] + u[k,j,i±1] + h²·f[k,j,i] )
+
+The Gauss-Seidel smoother targets a Laplace problem (``f = 0``) with the
+in-place lexicographic update of the paper:
+
+    u[k,j,i] = (1/6) * ( u[k-1,j,i] + u[k,j-1,i] + u[k,j,i-1]      (new)
+                       + u[k+1,j,i] + u[k,j+1,i] + u[k,j,i+1] )    (old)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+#: Central weight of the 7-point stencil for the unit Laplacian.
+ONE_SIXTH = 1.0 / 6.0
+
+
+def interior_mask(shape: tuple[int, int, int]) -> jnp.ndarray:
+    """Boolean mask that is True on interior points, False on the boundary."""
+    nz, ny, nx = shape
+    z = jnp.arange(nz)[:, None, None]
+    y = jnp.arange(ny)[None, :, None]
+    x = jnp.arange(nx)[None, None, :]
+    return (
+        (z > 0) & (z < nz - 1) & (y > 0) & (y < ny - 1) & (x > 0) & (x < nx - 1)
+    )
+
+
+def neighbor_sum(u: jnp.ndarray) -> jnp.ndarray:
+    """Sum of the six axis neighbors, valid on interior points only.
+
+    Uses rolls; values produced on boundary points are garbage and must be
+    masked by the caller. Rolls (instead of padded slicing) keep the shapes
+    static, which matters for AOT lowering.
+    """
+    return (
+        jnp.roll(u, 1, axis=0)
+        + jnp.roll(u, -1, axis=0)
+        + jnp.roll(u, 1, axis=1)
+        + jnp.roll(u, -1, axis=1)
+        + jnp.roll(u, 1, axis=2)
+        + jnp.roll(u, -1, axis=2)
+    )
+
+
+def jacobi_step(u: jnp.ndarray, f: jnp.ndarray, h2: float) -> jnp.ndarray:
+    """One out-of-place Jacobi update on the interior; boundary copied."""
+    upd = ONE_SIXTH * (neighbor_sum(u) + h2 * f)
+    return jnp.where(interior_mask(u.shape), upd, u)
+
+
+def jacobi_steps(u: jnp.ndarray, f: jnp.ndarray, h2: float, n: int) -> jnp.ndarray:
+    """``n`` consecutive Jacobi updates (the temporal-blocking ground truth)."""
+
+    def body(carry, _):
+        return jacobi_step(carry, f, h2), None
+
+    out, _ = lax.scan(body, u, None, length=n)
+    return out
+
+
+def residual(u: jnp.ndarray, f: jnp.ndarray, h2: float) -> jnp.ndarray:
+    """Pointwise residual  r = h²·f + Δu  (zero on the boundary)."""
+    r = neighbor_sum(u) - 6.0 * u + h2 * f
+    return jnp.where(interior_mask(u.shape), r, 0.0)
+
+
+def l2_norm(r: jnp.ndarray) -> jnp.ndarray:
+    """Euclidean norm of a residual field."""
+    return jnp.sqrt(jnp.sum(r * r))
+
+
+def gauss_seidel_plane(
+    u_prev_new: jnp.ndarray, u_center: jnp.ndarray, u_next_old: jnp.ndarray
+) -> jnp.ndarray:
+    """Reference lexicographic GS update of a single interior plane.
+
+    ``u_prev_new`` is plane ``k-1`` *after* its update this sweep,
+    ``u_center`` plane ``k`` before, ``u_next_old`` plane ``k+1`` before.
+    Implemented with a scan over lines (y) and a first-order linear
+    recurrence along x — mathematically identical to the paper's triple
+    loop; boundary rows/columns untouched.
+    """
+    ny, nx = u_center.shape
+    b = ONE_SIXTH
+
+    def line_update(prev_new_line, j):
+        center = u_center[j]
+        known = (
+            u_prev_new[j]      # new k-1 plane, same line
+            + u_next_old[j]    # old k+1 plane
+            + prev_new_line    # new j-1 line of this plane
+            + u_center[j + 1]  # old j+1 line
+        )
+        # x recursion on the interior: v[i] = b * (v[i-1] + known[i] + old
+        # x+1 neighbor). First-order affine recurrence solved by a scan.
+        rhs = known + jnp.roll(center, -1)
+
+        def x_body(v_prev, i):
+            v = b * (v_prev + rhs[i])
+            return v, v
+
+        idx = jnp.arange(1, nx - 1)
+        _, interior = lax.scan(x_body, center[0], idx)
+        new_line = center.at[1 : nx - 1].set(interior)
+        return new_line, new_line
+
+    # scan over interior lines; carry = previously updated line (j-1).
+    js = jnp.arange(1, ny - 1)
+    _, lines = lax.scan(line_update, u_center[0], js)
+    return u_center.at[1 : ny - 1].set(lines)
+
+
+def gauss_seidel_sweep(u: jnp.ndarray) -> jnp.ndarray:
+    """One full lexicographic GS sweep (Laplace), jnp reference.
+
+    Scans over interior z planes carrying the updated previous plane: plane
+    ``k`` reads plane ``k-1`` NEW (the carry) and plane ``k+1`` OLD (still
+    unmodified in ``u``) — exactly the in-place semantics of the paper's
+    listing. The numpy oracle below proves this in the test suite.
+    """
+    nz = u.shape[0]
+
+    def u_dyn(a, k):
+        return lax.dynamic_index_in_dim(a, k, axis=0, keepdims=False)
+
+    def plane_body(carry, k):
+        new_plane = gauss_seidel_plane(carry, u_dyn(u, k), u_dyn(u, k + 1))
+        return new_plane, new_plane
+
+    ks = jnp.arange(1, nz - 1)
+    _, planes = lax.scan(plane_body, u[0], ks)
+    return u.at[1 : nz - 1].set(planes)
+
+
+def gauss_seidel_sweeps(u: jnp.ndarray, n: int) -> jnp.ndarray:
+    """``n`` consecutive lexicographic GS sweeps."""
+
+    def body(carry, _):
+        return gauss_seidel_sweep(carry), None
+
+    out, _ = lax.scan(body, u, None, length=n)
+    return out
+
+
+def jacobi_step_np(u: np.ndarray, f: np.ndarray, h2: float) -> np.ndarray:
+    """Triple-loop transliteration of the paper's Jacobi listing (Sec. 3)."""
+    nz, ny, nx = u.shape
+    dst = u.copy()
+    for k in range(1, nz - 1):
+        for j in range(1, ny - 1):
+            for i in range(1, nx - 1):
+                dst[k, j, i] = ONE_SIXTH * (
+                    u[k, j, i - 1]
+                    + u[k, j, i + 1]
+                    + u[k, j - 1, i]
+                    + u[k, j + 1, i]
+                    + u[k - 1, j, i]
+                    + u[k + 1, j, i]
+                    + h2 * f[k, j, i]
+                )
+    return dst
+
+
+def gauss_seidel_sweep_np(u: np.ndarray) -> np.ndarray:
+    """Triple-loop transliteration of the paper's Gauss-Seidel listing."""
+    nz, ny, nx = u.shape
+    v = u.copy()
+    for k in range(1, nz - 1):
+        for j in range(1, ny - 1):
+            for i in range(1, nx - 1):
+                v[k, j, i] = ONE_SIXTH * (
+                    v[k, j, i - 1]
+                    + v[k, j, i + 1]
+                    + v[k, j - 1, i]
+                    + v[k, j + 1, i]
+                    + v[k - 1, j, i]
+                    + v[k + 1, j, i]
+                )
+    return v

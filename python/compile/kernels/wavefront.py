@@ -1,0 +1,130 @@
+"""Fused temporal-wavefront Jacobi kernel — the paper's contribution on TPU.
+
+The paper's multicore wavefront (Sec. 4, Fig. 6) runs ``t`` time-shifted
+sweeps through the grid so that a plane updated by thread ``s`` is consumed
+by thread ``s+1`` straight out of the shared outer-level cache; only the
+first sweep reads and only the last sweep writes main memory, cutting DRAM
+traffic per ``t`` updates from ``t·(8+8) B`` to ``16 B`` per lattice site.
+
+On a TPU there are no cache-sharing cores, but there is the same two-level
+bandwidth cliff: VMEM (~TB/s) vs HBM. The faithful adaptation is *kernel
+fusion over time*: one Pallas kernel computes the ``t``-times-updated value
+of each output plane while every intermediate value lives in VMEM
+(registers/scratch of the kernel instance). The rolling window of
+``2t + 1`` source planes that the paper keeps in L3 becomes the kernel's
+input footprint, expressed with ``2t + 1`` shifted ``BlockSpec`` windows
+over a z-padded copy of the source — the ``BlockSpec`` index maps ARE the
+wavefront schedule (HBM→VMEM plane streaming), exactly the role the
+thread-group scheduling played on the CPU.
+
+VMEM footprint per grid step: ``(2t+1) · ny · nx · 8 B`` for the stack plus
+``(2t+1)`` rhs planes — e.g. t=4, 200×200 planes → 9·0.32 MB ·2 ≈ 5.8 MB,
+comfortably inside 16 MB VMEM; see DESIGN.md §Perf for the full table.
+
+Correctness contract (pytest-enforced): for every t ≥ 1,
+``wavefront_steps(u, f, h2, t) == ref.jacobi_steps(u, f, h2, t)`` to fp64
+round-off.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import ONE_SIXTH
+
+
+def _wavefront_kernel(*refs, t: int, nz: int, h2: float):
+    """Compute the t-step Jacobi value of one output plane.
+
+    ``refs`` = 2t+1 source-plane windows, 2t+1 rhs-plane windows, out ref.
+    The stack of 2t+1 planes is updated in place (functionally) t times;
+    entry ``m`` has global z index ``g = k + 1 - t + m`` (k = program id),
+    clamped copies beyond the physical domain are masked out and never
+    consumed by a live entry.
+    """
+    n = 2 * t + 1
+    u_refs, f_refs, o_ref = refs[:n], refs[n : 2 * n], refs[2 * n]
+    stack = jnp.concatenate([r[...] for r in u_refs], axis=0)   # (2t+1, ny, nx)
+    rhs = jnp.concatenate([r[...] for r in f_refs], axis=0)
+    _, ny, nx = stack.shape
+
+    k = pl.program_id(0)
+    g = k + 1 - t + jnp.arange(n)                       # global z per entry
+    mask_z = ((g >= 1) & (g <= nz - 2))[1:-1, None, None]
+    y = jax.lax.broadcasted_iota(jnp.int32, (n - 2, ny, nx), 1)
+    x = jax.lax.broadcasted_iota(jnp.int32, (n - 2, ny, nx), 2)
+    interior = mask_z & (y > 0) & (y < ny - 1) & (x > 0) & (x < nx - 1)
+
+    for _step in range(t):
+        center = stack[1:-1]
+        nbr = (
+            stack[:-2]
+            + stack[2:]
+            + jnp.roll(center, 1, axis=1)
+            + jnp.roll(center, -1, axis=1)
+            + jnp.roll(center, 1, axis=2)
+            + jnp.roll(center, -1, axis=2)
+        )
+        upd = ONE_SIXTH * (nbr + h2 * rhs[1:-1])
+        new_center = jnp.where(interior, upd, center)
+        stack = jnp.concatenate([stack[:1], new_center, stack[-1:]], axis=0)
+
+    o_ref[...] = stack[t : t + 1]
+
+
+def wavefront_steps(u: jnp.ndarray, f: jnp.ndarray, h2: float, t: int) -> jnp.ndarray:
+    """``t`` fused Jacobi updates with all intermediates VMEM-resident.
+
+    Equivalent to ``ref.jacobi_steps(u, f, h2, t)`` but with a single pass
+    over the grid — the TPU rendering of the paper's thread-group wavefront
+    with temporal blocking factor ``t``.
+    """
+    if t < 1:
+        return u
+    nz, ny, nx = u.shape
+    if nz < 3:
+        return u
+    n = 2 * t + 1
+    plane = (1, ny, nx)
+    # Replicate the Dirichlet boundary planes t deep so every window is in
+    # range; the replicas are masked inside the kernel (g outside [1,nz-2]).
+    pad_u = jnp.concatenate(
+        [jnp.broadcast_to(u[:1], (t, ny, nx)), u, jnp.broadcast_to(u[-1:], (t, ny, nx))],
+        axis=0,
+    )
+    pad_f = jnp.concatenate(
+        [jnp.broadcast_to(f[:1], (t, ny, nx)), f, jnp.broadcast_to(f[-1:], (t, ny, nx))],
+        axis=0,
+    )
+    # Window for output plane k+1 occupies padded z indices [k+1, k+1+2t].
+    in_specs = [
+        pl.BlockSpec(plane, functools.partial(lambda k, m: (k + 1 + m, 0, 0), m=m))
+        for m in range(n)
+    ] * 2
+    interior = pl.pallas_call(
+        functools.partial(_wavefront_kernel, t=t, nz=nz, h2=h2),
+        grid=(nz - 2,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec(plane, lambda k: (k, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nz - 2, ny, nx), u.dtype),
+        interpret=True,
+    )(*([pad_u] * n), *([pad_f] * n))
+    return jnp.concatenate([u[:1], interior, u[-1:]], axis=0)
+
+
+def vmem_footprint_bytes(ny: int, nx: int, t: int, dtype_bytes: int = 8) -> int:
+    """Static VMEM footprint estimate of one kernel instance (DESIGN §Perf)."""
+    planes = 2 * (2 * t + 1)          # source stack + rhs stack
+    return planes * ny * nx * dtype_bytes
+
+
+def max_temporal_depth(ny: int, nx: int, vmem_bytes: int = 16 * 2**20) -> int:
+    """Largest blocking factor t whose rolling window fits VMEM."""
+    t = 0
+    while vmem_footprint_bytes(ny, nx, t + 1) <= vmem_bytes:
+        t += 1
+    return t

@@ -1,0 +1,88 @@
+"""L2 — JAX compute graphs for the iterative smoothers.
+
+These functions compose the L1 Pallas kernels into the multi-iteration
+smoothers the paper benchmarks, plus the residual diagnostics the
+end-to-end example needs. Everything here is build-time only: ``aot.py``
+lowers each entry point once to HLO text, and the rust runtime executes the
+artifacts — Python is never on the request path.
+
+Iteration counts use ``lax.scan`` so the lowered HLO stays O(1) in the
+number of iterations (a while loop over a fixed body) instead of unrolling
+— see DESIGN.md §Perf (L2).
+
+All graphs are double precision (the paper's Eq. 1 assumes 8-byte values);
+``aot.py`` enables x64 before tracing.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import gauss_seidel as gs_kernels
+from .kernels import jacobi as jacobi_kernels
+from .kernels import ref
+from .kernels import wavefront as wavefront_kernels
+
+
+def jacobi_smoother(u: jnp.ndarray, f: jnp.ndarray, h2: float, n_iter: int) -> jnp.ndarray:
+    """``n_iter`` Jacobi updates via the Pallas plane kernel (baseline path).
+
+    This is the paper's *non-temporally-blocked* Jacobi: every iteration
+    streams the whole grid, so DRAM traffic is ``n_iter · 16 B`` per site.
+    """
+
+    def body(carry, _):
+        return jacobi_kernels.jacobi_step(carry, f, h2), None
+
+    out, _ = lax.scan(body, u, None, length=n_iter)
+    return out
+
+
+def jacobi_wavefront_smoother(
+    u: jnp.ndarray, f: jnp.ndarray, h2: float, t: int, n_outer: int
+) -> jnp.ndarray:
+    """``n_outer`` fused wavefront passes of temporal depth ``t``.
+
+    Performs ``n_outer · t`` Jacobi updates while touching HBM only
+    ``n_outer`` times per plane — the TPU rendering of the paper's
+    thread-group wavefront (Fig. 6). Numerically identical to
+    ``jacobi_smoother(u, f, h2, t * n_outer)``.
+    """
+
+    def body(carry, _):
+        return wavefront_kernels.wavefront_steps(carry, f, h2, t), None
+
+    out, _ = lax.scan(body, u, None, length=n_outer)
+    return out
+
+
+def gs_smoother(u: jnp.ndarray, n_iter: int) -> jnp.ndarray:
+    """``n_iter`` lexicographic Gauss-Seidel sweeps (Laplace problem)."""
+    return gs_kernels.gs_sweeps(u, n_iter)
+
+
+def residual_norm(u: jnp.ndarray, f: jnp.ndarray, h2: float) -> jnp.ndarray:
+    """L2 norm of the Poisson residual (pure-jnp diagnostic graph)."""
+    return ref.l2_norm(ref.residual(u, f, h2))
+
+
+def jacobi_smooth_and_residual(
+    u: jnp.ndarray, f: jnp.ndarray, h2: float, n_iter: int
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Smoother step fused with its convergence diagnostic.
+
+    One artifact, one PJRT dispatch per outer solver iteration — the shape
+    the rust Poisson driver (examples/poisson_solver.rs) wants.
+    """
+    out = jacobi_smoother(u, f, h2, n_iter)
+    return out, residual_norm(out, f, h2)
+
+
+def gs_smooth_and_residual(
+    u: jnp.ndarray, n_iter: int
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """GS sweeps fused with the Laplace residual norm (f = 0)."""
+    out = gs_smoother(u, n_iter)
+    zero = jnp.zeros_like(out)
+    return out, residual_norm(out, zero, 1.0)

@@ -1,0 +1,13 @@
+"""Shared pytest fixtures: enable x64 before any kernel import."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(12345)

@@ -1,0 +1,55 @@
+"""AOT pipeline: catalog structure and HLO text emission."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+
+
+def test_catalog_structure():
+    cat = aot.entries(small_only=True)
+    names = [e.name for e in cat]
+    assert len(names) == len(set(names)), "artifact names must be unique"
+    assert "jacobi_step_n16" in names
+    assert "gs_sweep_n16" in names
+    for e in cat:
+        assert e.arg_shapes, e.name
+        for s in e.arg_shapes:
+            assert len(s) == 3
+        assert e.n_outputs in (1, 2)
+
+
+def test_full_catalog_superset_of_small():
+    small = {e.name for e in aot.entries(small_only=True)}
+    full = {e.name for e in aot.entries(small_only=False)}
+    assert small < full
+    assert any("n40" in n for n in full)
+
+
+def test_hlo_text_emission_smoke():
+    spec = jax.ShapeDtypeStruct((8, 8, 8), jnp.float64)
+    lowered = jax.jit(lambda u, f: model.jacobi_smoother(u, f, 1.0, 2)).lower(spec, spec)
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    assert "f64[8,8,8]" in text
+    # return_tuple=True: the root must be a tuple for the rust loader
+    assert "tuple" in text
+
+
+def test_hlo_is_iteration_count_stable():
+    """Scan keeps HLO size O(1) in iteration count (DESIGN §Perf L2)."""
+    spec = jax.ShapeDtypeStruct((8, 8, 8), jnp.float64)
+
+    def size(n):
+        lowered = jax.jit(lambda u, f: model.jacobi_smoother(u, f, 1.0, n)).lower(spec, spec)
+        return len(aot.to_hlo_text(lowered))
+
+    assert size(64) < 1.3 * size(2)
+
+
+@pytest.mark.parametrize("bad", ["--out-dir"])
+def test_cli_entrypoint_exists(bad):
+    # main() is argparse-based; just assert the module exposes it
+    assert callable(aot.main)

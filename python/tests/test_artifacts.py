@@ -1,0 +1,73 @@
+"""Artifact catalog sanity: manifest ↔ files ↔ declared shapes.
+
+These tests only run when ``make artifacts`` has produced the catalog;
+they guard the contract the rust runtime relies on.
+"""
+
+import json
+import os
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+def _manifest():
+    with open(os.path.join(ART, "manifest.json")) as fh:
+        return json.load(fh)
+
+
+def test_manifest_lists_existing_files():
+    m = _manifest()
+    assert m["dtype"] == "f64"
+    assert len(m["artifacts"]) >= 7
+    for a in m["artifacts"]:
+        path = os.path.join(ART, a["file"])
+        assert os.path.exists(path), a["file"]
+        assert os.path.getsize(path) > 100
+
+
+def test_artifacts_are_hlo_text():
+    m = _manifest()
+    for a in m["artifacts"]:
+        with open(os.path.join(ART, a["file"])) as fh:
+            head = fh.read(4096)
+        assert "HloModule" in head, a["file"]
+        assert "ENTRY" in open(os.path.join(ART, a["file"])).read(), a["file"]
+
+
+def test_declared_shapes_appear_in_hlo():
+    m = _manifest()
+    for a in m["artifacts"]:
+        text = open(os.path.join(ART, a["file"])).read()
+        for inp in a["inputs"]:
+            dims = ",".join(str(d) for d in inp["shape"])
+            assert f"f64[{dims}]" in text, (a["name"], dims)
+
+
+def test_catalog_covers_both_schemes_and_sizes():
+    m = _manifest()
+    names = {a["name"] for a in m["artifacts"]}
+    for required in [
+        "jacobi_step_n16",
+        "gs_sweep_n16",
+        "jacobi_wavefront_n16_t2",
+        "residual_n16",
+    ]:
+        assert required in names
+    schemes = {a["params"].get("scheme") for a in m["artifacts"]}
+    assert {"jacobi", "gauss_seidel", "residual"} <= schemes
+
+
+def test_wavefront_params_recorded():
+    m = _manifest()
+    wf = [a for a in m["artifacts"] if "wavefront" in a["name"]]
+    assert wf
+    for a in wf:
+        assert a["params"]["wavefront_t"] >= 1
+        assert a["params"]["iters"] == a["params"]["wavefront_t"]

@@ -1,0 +1,83 @@
+"""L2 model graphs: smoother composition, wavefront equivalence, residuals."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+@pytest.fixture
+def problem(rng):
+    u = jnp.asarray(rng.standard_normal((8, 8, 8)))
+    f = jnp.asarray(rng.standard_normal((8, 8, 8)))
+    return u, f
+
+
+def test_jacobi_smoother_equals_ref_steps(problem):
+    u, f = problem
+    got = model.jacobi_smoother(u, f, 1.0, 5)
+    want = ref.jacobi_steps(u, f, 1.0, 5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-13)
+
+
+@pytest.mark.parametrize("t,n_outer", [(2, 3), (3, 2), (4, 1), (1, 4)])
+def test_wavefront_smoother_equals_plain_smoother(problem, t, n_outer):
+    """t·n_outer fused updates ≡ t·n_outer plain updates — the paper's
+    headline invariant: temporal blocking changes traffic, not numerics."""
+    u, f = problem
+    fused = model.jacobi_wavefront_smoother(u, f, 1.0, t, n_outer)
+    plain = model.jacobi_smoother(u, f, 1.0, t * n_outer)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(plain), atol=1e-11)
+
+
+def test_gs_smoother_equals_listing(rng):
+    u = rng.standard_normal((6, 6, 6))
+    got = np.asarray(model.gs_smoother(jnp.asarray(u), 2))
+    want = ref.gauss_seidel_sweep_np(ref.gauss_seidel_sweep_np(u))
+    np.testing.assert_allclose(got, want, atol=1e-12)
+
+
+def test_smooth_and_residual_outputs(problem):
+    u, f = problem
+    out, rn = model.jacobi_smooth_and_residual(u, f, 1.0, 3)
+    want_out = ref.jacobi_steps(u, f, 1.0, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want_out), atol=1e-13)
+    want_rn = ref.l2_norm(ref.residual(want_out, f, 1.0))
+    np.testing.assert_allclose(float(rn), float(want_rn), rtol=1e-12)
+
+
+def test_gs_smooth_and_residual_decreases(rng):
+    u = jnp.asarray(rng.standard_normal((8, 8, 8)))
+    _, r1 = model.gs_smooth_and_residual(u, 1)
+    _, r3 = model.gs_smooth_and_residual(u, 3)
+    assert float(r3) < float(r1)
+
+
+def test_residual_norm_nonnegative(problem):
+    u, f = problem
+    assert float(model.residual_norm(u, f, 1.0)) >= 0.0
+
+
+def test_graphs_are_jittable(problem):
+    u, f = problem
+    j = jax.jit(lambda a, b: model.jacobi_wavefront_smoother(a, b, 1.0, 2, 2))
+    eager = model.jacobi_wavefront_smoother(u, f, 1.0, 2, 2)
+    np.testing.assert_allclose(np.asarray(j(u, f)), np.asarray(eager), atol=1e-13)
+
+
+def test_scan_keeps_hlo_size_constant(problem):
+    """DESIGN §Perf L2: lowered HLO must be O(1) in n_iter (scan, no unroll)."""
+    u, f = problem
+    spec = jax.ShapeDtypeStruct(u.shape, u.dtype)
+
+    def size(n):
+        low = jax.jit(lambda a, b, n=n: model.jacobi_smoother(a, b, 1.0, n)).lower(
+            spec, spec
+        )
+        return len(low.compiler_ir("stablehlo").__str__())
+
+    s2, s32 = size(2), size(32)
+    assert s32 < 1.2 * s2, (s2, s32)

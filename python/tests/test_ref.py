@@ -1,0 +1,110 @@
+"""Internal consistency of the reference oracles.
+
+The jnp-vectorized references must agree with the triple-loop numpy
+transliterations of the paper's C listings — this anchors everything else
+in the repo to the paper's exact update equations.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+
+
+def _rand(rng, shape):
+    return rng.standard_normal(shape)
+
+
+SHAPES = [(3, 3, 3), (4, 5, 6), (8, 7, 9), (6, 6, 6), (3, 8, 4)]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_jacobi_jnp_matches_paper_listing(rng, shape):
+    u = _rand(rng, shape)
+    f = _rand(rng, shape)
+    got = np.asarray(ref.jacobi_step(jnp.asarray(u), jnp.asarray(f), 0.7))
+    want = ref.jacobi_step_np(u, f, 0.7)
+    np.testing.assert_allclose(got, want, rtol=0, atol=1e-14)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_gs_jnp_matches_paper_listing(rng, shape):
+    u = _rand(rng, shape)
+    got = np.asarray(ref.gauss_seidel_sweep(jnp.asarray(u)))
+    want = ref.gauss_seidel_sweep_np(u)
+    np.testing.assert_allclose(got, want, rtol=0, atol=1e-13)
+
+
+def test_jacobi_boundary_untouched(rng):
+    u = _rand(rng, (6, 6, 6))
+    f = _rand(rng, (6, 6, 6))
+    out = np.asarray(ref.jacobi_step(jnp.asarray(u), jnp.asarray(f), 1.0))
+    np.testing.assert_array_equal(out[0], u[0])
+    np.testing.assert_array_equal(out[-1], u[-1])
+    np.testing.assert_array_equal(out[:, 0], u[:, 0])
+    np.testing.assert_array_equal(out[:, -1], u[:, -1])
+    np.testing.assert_array_equal(out[:, :, 0], u[:, :, 0])
+    np.testing.assert_array_equal(out[:, :, -1], u[:, :, -1])
+
+
+def test_gs_boundary_untouched(rng):
+    u = _rand(rng, (6, 7, 5))
+    out = np.asarray(ref.gauss_seidel_sweep(jnp.asarray(u)))
+    np.testing.assert_array_equal(out[0], u[0])
+    np.testing.assert_array_equal(out[-1], u[-1])
+    np.testing.assert_array_equal(out[:, 0], u[:, 0])
+    np.testing.assert_array_equal(out[:, -1], u[:, -1])
+    np.testing.assert_array_equal(out[:, :, 0], u[:, :, 0])
+    np.testing.assert_array_equal(out[:, :, -1], u[:, :, -1])
+
+
+def test_jacobi_fixed_point_of_harmonic(rng):
+    """A discrete-harmonic field (Laplace, f=0) is a Jacobi fixed point."""
+    nz, ny, nx = 6, 6, 6
+    z, y, x = np.meshgrid(
+        np.arange(nz), np.arange(ny), np.arange(nx), indexing="ij"
+    )
+    u = (x + 2.0 * y - 3.0 * z).astype(np.float64)  # linear => harmonic
+    out = np.asarray(ref.jacobi_step(jnp.asarray(u), jnp.zeros((nz, ny, nx)), 1.0))
+    np.testing.assert_allclose(out, u, atol=1e-13)
+
+
+def test_gs_fixed_point_of_harmonic():
+    nz, ny, nx = 6, 6, 6
+    z, y, x = np.meshgrid(
+        np.arange(nz), np.arange(ny), np.arange(nx), indexing="ij"
+    )
+    u = (x - y + 0.5 * z).astype(np.float64)
+    out = np.asarray(ref.gauss_seidel_sweep(jnp.asarray(u)))
+    np.testing.assert_allclose(out, u, atol=1e-13)
+
+
+def test_residual_zero_for_exact_solution():
+    nz = 6
+    z, y, x = np.meshgrid(
+        np.arange(nz), np.arange(nz), np.arange(nz), indexing="ij"
+    )
+    u = (x * 1.0 + y * 2.0 + z * 3.0).astype(np.float64)
+    r = np.asarray(ref.residual(jnp.asarray(u), jnp.zeros_like(jnp.asarray(u)), 1.0))
+    np.testing.assert_allclose(r, 0.0, atol=1e-12)
+
+
+def test_gs_converges_on_laplace(rng):
+    """Repeated GS sweeps must reduce the Laplace residual monotonically."""
+    u = jnp.asarray(rng.standard_normal((10, 10, 10)))
+    zero = jnp.zeros_like(u)
+    norms = []
+    cur = u
+    for _ in range(5):
+        cur = ref.gauss_seidel_sweep(cur)
+        norms.append(float(ref.l2_norm(ref.residual(cur, zero, 1.0))))
+    assert all(b < a for a, b in zip(norms, norms[1:]))
+
+
+def test_jacobi_steps_composes(rng):
+    u = jnp.asarray(rng.standard_normal((5, 5, 5)))
+    f = jnp.asarray(rng.standard_normal((5, 5, 5)))
+    a = ref.jacobi_steps(u, f, 1.0, 3)
+    b = ref.jacobi_step(ref.jacobi_step(ref.jacobi_step(u, f, 1.0), f, 1.0), f, 1.0)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=0)

@@ -1,0 +1,67 @@
+"""Fused temporal-wavefront kernel ≡ t sequential Jacobi steps.
+
+This is the core correctness claim of the TPU adaptation (DESIGN.md
+§Hardware-Adaptation): temporal fusion must be *exactly* the composition of
+t reference steps, for every t and every shape, including the boundary
+windows where the rolling stack is fed clamped replica planes.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, wavefront
+
+dims = st.integers(min_value=3, max_value=10)
+
+
+@settings(max_examples=20, deadline=None)
+@given(nz=dims, ny=dims, nx=dims, t=st.integers(1, 5), seed=st.integers(0, 2**31))
+def test_wavefront_matches_t_ref_steps(nz, ny, nx, t, seed):
+    rng = np.random.default_rng(seed)
+    u = jnp.asarray(rng.standard_normal((nz, ny, nx)))
+    f = jnp.asarray(rng.standard_normal((nz, ny, nx)))
+    got = np.asarray(wavefront.wavefront_steps(u, f, 1.0, t))
+    want = np.asarray(ref.jacobi_steps(u, f, 1.0, t))
+    np.testing.assert_allclose(got, want, rtol=0, atol=1e-12)
+
+
+@pytest.mark.parametrize("t", [1, 2, 3, 4, 6, 8])
+def test_wavefront_depths_on_fixed_grid(rng, t):
+    """The paper's blocking factors (2…8 threads per group) as fusion depths."""
+    u = jnp.asarray(rng.standard_normal((12, 9, 11)))
+    f = jnp.asarray(rng.standard_normal((12, 9, 11)))
+    got = np.asarray(wavefront.wavefront_steps(u, f, 0.5, t))
+    want = np.asarray(ref.jacobi_steps(u, f, 0.5, t))
+    np.testing.assert_allclose(got, want, rtol=0, atol=1e-12)
+
+
+def test_t_zero_is_identity(rng):
+    u = jnp.asarray(rng.standard_normal((5, 5, 5)))
+    f = jnp.zeros_like(u)
+    np.testing.assert_array_equal(
+        np.asarray(wavefront.wavefront_steps(u, f, 1.0, 0)), np.asarray(u)
+    )
+
+
+def test_small_z_window_dominated(rng):
+    """nz=3: single interior plane, windows are mostly clamped replicas."""
+    u = jnp.asarray(rng.standard_normal((3, 6, 6)))
+    f = jnp.asarray(rng.standard_normal((3, 6, 6)))
+    for t in (1, 2, 4):
+        got = np.asarray(wavefront.wavefront_steps(u, f, 1.0, t))
+        want = np.asarray(ref.jacobi_steps(u, f, 1.0, t))
+        np.testing.assert_allclose(got, want, atol=1e-12)
+
+
+def test_vmem_footprint_model():
+    """Footprint accounting used by DESIGN.md §Perf must be monotone and sane."""
+    assert wavefront.vmem_footprint_bytes(200, 200, 4) == 2 * 9 * 200 * 200 * 8
+    assert wavefront.vmem_footprint_bytes(100, 100, 2) < wavefront.vmem_footprint_bytes(
+        100, 100, 3
+    )
+    t_max = wavefront.max_temporal_depth(200, 200)
+    assert t_max >= 1
+    assert wavefront.vmem_footprint_bytes(200, 200, t_max) <= 16 * 2**20
+    assert wavefront.vmem_footprint_bytes(200, 200, t_max + 1) > 16 * 2**20

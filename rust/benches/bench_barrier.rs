@@ -1,0 +1,49 @@
+//! Barrier ablation bench (Sec. 4's synchronization discussion).
+//!
+//! Measures the real spin and tree barriers over many rounds at several
+//! thread counts, then prints the calibrated testbed cost model the
+//! simulator uses. On this 1-core host absolute numbers reflect scheduler
+//! round-robin, but the *relative* spin-vs-tree ordering under
+//! oversubscription mirrors the paper's SMT finding.
+
+use std::sync::Arc;
+
+use stencilwave::benchkit;
+use stencilwave::coordinator::barrier::AnyBarrier;
+use stencilwave::figures;
+use stencilwave::simulator::perfmodel::BarrierKind;
+
+fn rounds_per_sec(kind: BarrierKind, threads: usize, rounds: usize) -> f64 {
+    let barrier = Arc::new(AnyBarrier::new(kind, threads));
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|scope| {
+        for id in 0..threads {
+            let b = Arc::clone(&barrier);
+            scope.spawn(move || {
+                for _ in 0..rounds {
+                    b.wait(id);
+                }
+            });
+        }
+    });
+    rounds as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    benchkit::header("real barrier throughput on this host");
+    for threads in [1usize, 2, 4, 8] {
+        for kind in [BarrierKind::Spin, BarrierKind::Tree] {
+            let rps = rounds_per_sec(kind, threads, 10_000);
+            let s = benchkit::bench(
+                &format!("{kind:?} barrier x{threads} (10k rounds)"),
+                0,
+                3,
+                || rounds_per_sec(kind, threads, 2_000),
+            );
+            benchkit::report(&s);
+            println!("{:<44} {rps:>10.0} rounds/s", "  -> sustained");
+        }
+    }
+
+    println!("\n{}", figures::render("barrier").unwrap());
+}

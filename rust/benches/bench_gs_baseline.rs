@@ -1,0 +1,43 @@
+//! Fig. 4 bench: Gauss-Seidel baselines — real kernels + modeled testbed.
+//!
+//! Measures the naive ("C") and dependency-interleaved ("asm") GS line
+//! kernels for real — the host ratio between them is the live analog of
+//! the paper's Fig. 4(a) C-vs-asm gap — plus the pipeline-parallel
+//! threaded sweep, then regenerates the modeled five-machine figures.
+
+use stencilwave::benchkit;
+use stencilwave::coordinator::pipeline::{pipeline_gs_sweep, PipelineConfig};
+use stencilwave::figures;
+use stencilwave::stencil::gauss_seidel::{gs_sweep, GsKernel};
+use stencilwave::stencil::grid::Grid3;
+
+fn main() {
+    benchkit::header("Fig. 4(a) host leg — serial GS sweep (real)");
+    for (label, nz, ny, nx) in [
+        ("100x50x50 (cache dataset)", 100usize, 50usize, 50usize),
+        ("200x100x100", 200, 100, 100),
+    ] {
+        let updates = ((nz - 2) * (ny - 2) * (nx - 2)) as u64;
+        for (kname, kernel) in [("C/naive", GsKernel::Naive), ("optimized", GsKernel::Interleaved)] {
+            let mut u = Grid3::random(nz, ny, nx, 3);
+            let s = benchkit::bench_mlups(&format!("gs {kname} {label}"), updates, 1, 5, || {
+                gs_sweep(&mut u, kernel);
+            });
+            benchkit::report(&s);
+        }
+    }
+
+    benchkit::header("Fig. 4(b) host leg — pipeline-parallel GS (real)");
+    for threads in [1usize, 2, 4] {
+        let mut u = Grid3::random(128, 96, 96, 4);
+        let updates = u.interior_len() as u64;
+        let cfg = PipelineConfig { threads, kernel: GsKernel::Interleaved };
+        let s = benchkit::bench_mlups(&format!("gs pipeline threads={threads} 128x96x96"), updates, 1, 5, || {
+            pipeline_gs_sweep(&mut u, &cfg).unwrap();
+        });
+        benchkit::report(&s);
+    }
+
+    println!("\n{}", figures::render("fig4a").unwrap());
+    println!("{}", figures::render("fig4b").unwrap());
+}

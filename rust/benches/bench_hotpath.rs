@@ -1,0 +1,74 @@
+//! Hot-path microbenchmarks for the perf pass (EXPERIMENTS.md §Perf).
+//!
+//! Profiles the L3 building blocks in isolation so optimization work can
+//! target the true bottleneck:
+//!  * the Jacobi line-update kernel (per-line cost, vectorization),
+//!  * the GS line kernels (naive vs interleaved — the ILP gap),
+//!  * cache-simulator throughput (accesses/s),
+//!  * trace generation throughput,
+//!  * ECM model evaluation (figures must regenerate in milliseconds).
+
+use stencilwave::benchkit::{self, black_box};
+use stencilwave::figures;
+use stencilwave::simulator::cache::Hierarchy;
+use stencilwave::simulator::trace::{jacobi_sweep_trace, run_trace, Dims};
+use stencilwave::stencil::gauss_seidel::{gs_line_update_interleaved, gs_line_update_naive};
+use stencilwave::stencil::grid::Grid3;
+use stencilwave::stencil::jacobi::{jacobi_line_update, jacobi_sweep};
+
+fn main() {
+    let nx = 512usize;
+    let lines: Vec<Vec<f64>> = (0..6).map(|i| Grid3::random(1, 1, nx, i).data().to_vec()).collect();
+    let mut dst = vec![0.0f64; nx];
+
+    benchkit::header("line-update kernels (512-wide lines)");
+    let s = benchkit::bench_mlups("jacobi_line_update", (nx - 2) as u64, 10, 50, || {
+        jacobi_line_update(
+            &mut dst, &lines[0], &lines[1], &lines[2], &lines[3], &lines[4], &lines[5], 1.0,
+        );
+        black_box(&dst);
+    });
+    benchkit::report(&s);
+
+    let mut line = lines[0].clone();
+    let s = benchkit::bench_mlups("gs_line_update_naive", (nx - 2) as u64, 10, 50, || {
+        gs_line_update_naive(&mut line, &lines[1], &lines[2], &lines[3], &lines[4]);
+        black_box(&line);
+    });
+    benchkit::report(&s);
+    let s = benchkit::bench_mlups("gs_line_update_interleaved", (nx - 2) as u64, 10, 50, || {
+        gs_line_update_interleaved(&mut line, &lines[1], &lines[2], &lines[3], &lines[4]);
+        black_box(&line);
+    });
+    benchkit::report(&s);
+
+    benchkit::header("full sweeps");
+    let src = Grid3::random(96, 96, 96, 1);
+    let f = Grid3::random(96, 96, 96, 2);
+    let mut out = Grid3::zeros(96, 96, 96);
+    let s = benchkit::bench_mlups("jacobi_sweep 96^3", src.interior_len() as u64, 1, 5, || {
+        jacobi_sweep(&mut out, &src, &f, 1.0);
+    });
+    benchkit::report(&s);
+
+    benchkit::header("simulator throughput");
+    let d = Dims::new(34, 32, 32);
+    let s = benchkit::bench("trace generation 34x32x32", 1, 5, || {
+        black_box(jacobi_sweep_trace(d, false).len())
+    });
+    benchkit::report(&s);
+    let trace = jacobi_sweep_trace(d, false);
+    let s = benchkit::bench(&format!("cache sim ({} accesses)", trace.len()), 1, 5, || {
+        let mut h = Hierarchy::uniform(1, 32 << 10, 256 << 10, 2 << 20);
+        black_box(run_trace(&mut h, &trace))
+    });
+    benchkit::report(&s);
+
+    benchkit::header("figure regeneration (must be interactive-fast)");
+    let s = benchkit::bench("all 9 figures", 1, 5, || {
+        for id in figures::ALL_FIGURES {
+            black_box(figures::render(id).unwrap().len());
+        }
+    });
+    benchkit::report(&s);
+}

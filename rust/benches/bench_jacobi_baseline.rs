@@ -1,0 +1,36 @@
+//! Fig. 3 bench: Jacobi baselines — real kernels + modeled testbed.
+//!
+//! (a) serial: the line-update kernel on cache-resident (100×50×50) and
+//!     memory-resident (this host: largest feasible) datasets;
+//! (b) threaded socket predictions with the Eq. (1) limit.
+//!
+//! The host rows give real MLUP/s for the kernel implementations; the
+//! modeled rows regenerate the paper's five-machine comparison.
+
+use stencilwave::benchkit;
+use stencilwave::figures;
+use stencilwave::stencil::grid::Grid3;
+use stencilwave::stencil::jacobi::jacobi_sweep;
+
+fn bench_size(label: &str, nz: usize, ny: usize, nx: usize) {
+    let src = Grid3::random(nz, ny, nx, 1);
+    let f = Grid3::random(nz, ny, nx, 2);
+    let mut dst = Grid3::zeros(nz, ny, nx);
+    let updates = src.interior_len() as u64;
+    let s = benchkit::bench_mlups(label, updates, 1, 5, || {
+        jacobi_sweep(&mut dst, &src, &f, 1.0);
+    });
+    benchkit::report(&s);
+}
+
+fn main() {
+    benchkit::header("Fig. 3(a) host leg — serial Jacobi sweep (real)");
+    // the paper's cache dataset: 100×50×50 ≈ 4 MB for two arrays
+    bench_size("jacobi serial 100x50x50 (cache dataset)", 100, 50, 50);
+    // a larger dataset exercising the memory hierarchy of this host
+    bench_size("jacobi serial 200x100x100", 200, 100, 100);
+    bench_size("jacobi serial 256x128x128", 256, 128, 128);
+
+    println!("\n{}", figures::render("fig3a").unwrap());
+    println!("{}", figures::render("fig3b").unwrap());
+}

@@ -1,0 +1,43 @@
+//! Tab. 1 bench: STREAM triad — host measurement + testbed model.
+//!
+//! Regenerates the bandwidth block of Tab. 1 from the machine models and
+//! measures the real triad on this host at STREAM-standard working-set
+//! sizes, so the simulator's bandwidth assumptions can be sanity-checked
+//! against at least one physical machine.
+
+use stencilwave::benchkit::{self, black_box};
+use stencilwave::figures;
+use stencilwave::simulator::machine::MachineSpec;
+use stencilwave::simulator::memory::StoreMode;
+use stencilwave::simulator::stream::{triad_bandwidth_gbs, triad_updates_per_sec};
+use stencilwave::stencil::streambench::stream_triad;
+
+fn main() {
+    println!("{}", figures::render("tab1").unwrap());
+
+    benchkit::header("host STREAM triad (real)");
+    for exp in [16usize, 20, 24] {
+        let n = 1usize << exp;
+        let s = benchkit::bench(&format!("triad n=2^{exp} ({} MB)", 3 * n * 8 >> 20), 1, 5, || {
+            black_box(stream_triad(n, 1))
+        });
+        benchkit::report(&s);
+        let r = stream_triad(n, 3);
+        println!("{:<44} best {:.2} GB/s", "  -> bandwidth", r.best_gbs);
+    }
+
+    println!("\n=== modeled triad scaling (GB/s vs threads) ===");
+    println!("{:<14} {:>4} {:>10} {:>10} {:>14}", "machine", "thr", "NT", "noNT", "upd/s (NT)");
+    for m in MachineSpec::testbed() {
+        for threads in [1, 2, m.cores] {
+            println!(
+                "{:<14} {:>4} {:>10.1} {:>10.1} {:>14.2e}",
+                m.name,
+                threads,
+                triad_bandwidth_gbs(&m, threads, StoreMode::NonTemporal),
+                triad_bandwidth_gbs(&m, threads, StoreMode::WriteAllocate),
+                triad_updates_per_sec(&m, threads, StoreMode::NonTemporal),
+            );
+        }
+    }
+}

@@ -1,0 +1,54 @@
+//! Fig. 9 bench: Gauss-Seidel wavefront temporal blocking.
+//!
+//! Host leg: S simultaneous pipelined sweeps vs S sequential pipelined
+//! sweeps (the threaded baseline of Fig. 9's right axis). Model leg: the
+//! full five-machine Fig. 9 sweep.
+
+use stencilwave::benchkit;
+use stencilwave::coordinator::pipeline::{pipeline_gs_sweeps, PipelineConfig};
+use stencilwave::coordinator::wavefront_gs::{wavefront_gs, GsWavefrontConfig};
+use stencilwave::figures;
+use stencilwave::stencil::gauss_seidel::GsKernel;
+use stencilwave::stencil::grid::Grid3;
+
+fn main() {
+    benchkit::header("Fig. 9 host leg — GS wavefront vs pipelined baseline (real)");
+    for n in [48usize, 64, 96] {
+        for s_count in [2usize, 4] {
+            let u0 = Grid3::random(n, n, n, 9);
+            let updates = (u0.interior_len() * s_count) as u64;
+            let base = PipelineConfig { threads: 2, kernel: GsKernel::Interleaved };
+            let s = benchkit::bench_mlups(
+                &format!("baseline {s_count} pipelined sweeps {n}^3"),
+                updates,
+                1,
+                3,
+                || {
+                    let mut u = u0.clone();
+                    pipeline_gs_sweeps(&mut u, &base, s_count).unwrap();
+                    benchkit::black_box(u);
+                },
+            );
+            benchkit::report(&s);
+            let cfg = GsWavefrontConfig {
+                sweeps: s_count,
+                threads_per_group: 2,
+                kernel: GsKernel::Interleaved,
+            };
+            let s = benchkit::bench_mlups(
+                &format!("wavefront S={s_count}x2 {n}^3"),
+                updates,
+                1,
+                3,
+                || {
+                    let mut u = u0.clone();
+                    wavefront_gs(&mut u, &cfg).unwrap();
+                    benchkit::black_box(u);
+                },
+            );
+            benchkit::report(&s);
+        }
+    }
+
+    println!("\n{}", figures::render("fig9").unwrap());
+}

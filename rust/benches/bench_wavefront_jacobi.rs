@@ -1,0 +1,44 @@
+//! Fig. 8 bench: Jacobi wavefront temporal blocking.
+//!
+//! Host leg: the real threaded wavefront engine vs the t-sweep baseline,
+//! per-update throughput at several sizes and blocking factors, plus the
+//! blocked (spatial × temporal) variant. Model leg: the full Fig. 8 sweep
+//! over the five-machine testbed.
+
+use stencilwave::benchkit;
+use stencilwave::coordinator::spatial::{blocked_wavefront_jacobi, SpatialConfig};
+use stencilwave::coordinator::wavefront::{wavefront_jacobi, WavefrontConfig};
+use stencilwave::figures;
+use stencilwave::stencil::grid::Grid3;
+use stencilwave::stencil::jacobi::jacobi_steps;
+
+fn main() {
+    benchkit::header("Fig. 8 host leg — wavefront vs t separate sweeps (real)");
+    for n in [48usize, 64, 96] {
+        for t in [2usize, 4] {
+            let f = Grid3::random(n, n, n, 1);
+            let u0 = Grid3::random(n, n, n, 2);
+            let updates = (u0.interior_len() * t) as u64;
+            let s = benchkit::bench_mlups(&format!("baseline {t} sweeps {n}^3"), updates, 1, 3, || {
+                benchkit::black_box(jacobi_steps(&u0, &f, 1.0, t));
+            });
+            benchkit::report(&s);
+            let cfg = WavefrontConfig { threads: t, ..Default::default() };
+            let s = benchkit::bench_mlups(&format!("wavefront t={t} {n}^3"), updates, 1, 3, || {
+                let mut u = u0.clone();
+                wavefront_jacobi(&mut u, &f, 1.0, &cfg).unwrap();
+                benchkit::black_box(u);
+            });
+            benchkit::report(&s);
+            let sp = SpatialConfig { t, blocks: 4 };
+            let s = benchkit::bench_mlups(&format!("blocked wavefront t={t} B=4 {n}^3"), updates, 1, 3, || {
+                let mut u = u0.clone();
+                blocked_wavefront_jacobi(&mut u, &f, 1.0, &sp).unwrap();
+                benchkit::black_box(u);
+            });
+            benchkit::report(&s);
+        }
+    }
+
+    println!("\n{}", figures::render("fig8").unwrap());
+}

@@ -1,0 +1,54 @@
+//! Fig. 10 bench: Gauss-Seidel wavefront with SMT.
+//!
+//! SMT cannot be exercised on this 1-core host, so the host leg shows the
+//! *oversubscription analog* (2 logical threads per "core slot": S groups
+//! × 2 pipeline threads vs S × 1), and the model leg regenerates Fig. 10
+//! — including the paper's three observations, asserted in the test
+//! suite: EP/Westmere ≈ 2.5× their threaded baseline, EX up to 5×, and
+//! EP ≈ Westmere ≈ EX absolute performance (arithmetic plateau).
+
+use stencilwave::benchkit;
+use stencilwave::coordinator::wavefront_gs::{wavefront_gs, GsWavefrontConfig};
+use stencilwave::figures;
+use stencilwave::simulator::ecm::{Kernel, KernelClass};
+use stencilwave::simulator::machine::Microarch;
+use stencilwave::stencil::gauss_seidel::GsKernel;
+use stencilwave::stencil::grid::Grid3;
+
+fn main() {
+    benchkit::header("Fig. 10 host leg — GS wavefront width 1 vs 2 (SMT analog)");
+    for n in [48usize, 64] {
+        for width in [1usize, 2] {
+            let u0 = Grid3::random(n, n, n, 11);
+            let updates = (u0.interior_len() * 4) as u64;
+            let cfg = GsWavefrontConfig {
+                sweeps: 4,
+                threads_per_group: width,
+                kernel: GsKernel::Interleaved,
+            };
+            let s = benchkit::bench_mlups(
+                &format!("gs wavefront S=4 width={width} {n}^3"),
+                updates,
+                1,
+                3,
+                || {
+                    let mut u = u0.clone();
+                    wavefront_gs(&mut u, &cfg).unwrap();
+                    benchkit::black_box(u);
+                },
+            );
+            benchkit::report(&s);
+        }
+    }
+
+    println!("\n=== SMT in-core model: effective cycles per LUP ===");
+    println!("{:<14} {:>10} {:>10} {:>8}", "kernel", "1 thread", "2 SMT", "gain");
+    for k in [Kernel::JacobiOpt, Kernel::GsC, Kernel::GsOpt] {
+        let c = KernelClass::of(k, Microarch::Nehalem);
+        let one = c.effective_cpl(1);
+        let two = c.effective_cpl(2);
+        println!("{:<14} {:>10.2} {:>10.2} {:>7.2}x", format!("{k:?}"), one, two, one / two);
+    }
+
+    println!("\n{}", figures::render("fig10").unwrap());
+}

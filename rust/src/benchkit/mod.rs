@@ -1,0 +1,114 @@
+//! In-tree micro-benchmark harness (offline build: no criterion).
+//!
+//! Provides warmup + repeated timed runs with min/median/mean reporting,
+//! a `black_box` sink, and an aligned table printer. Every bench binary
+//! under `rust/benches/` uses this; output is plain text designed to be
+//! `tee`-able into `bench_output.txt`.
+
+use std::time::{Duration, Instant};
+
+/// Re-export of the optimizer barrier.
+pub use std::hint::black_box;
+
+/// Timing summary of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub name: String,
+    pub reps: usize,
+    pub min: Duration,
+    pub median: Duration,
+    pub mean: Duration,
+    /// Optional throughput in MLUP/s (filled by [`bench_mlups`]).
+    pub mlups: Option<f64>,
+}
+
+impl Sample {
+    pub fn min_secs(&self) -> f64 {
+        self.min.as_secs_f64()
+    }
+}
+
+/// Run `f` with `warmup` untimed and `reps` timed repetitions.
+pub fn bench<T>(name: &str, warmup: usize, reps: usize, mut f: impl FnMut() -> T) -> Sample {
+    assert!(reps >= 1);
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut times: Vec<Duration> = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        black_box(f());
+        times.push(t0.elapsed());
+    }
+    times.sort();
+    let min = times[0];
+    let median = times[times.len() / 2];
+    let mean = times.iter().sum::<Duration>() / reps as u32;
+    Sample { name: name.to_string(), reps, min, median, mean, mlups: None }
+}
+
+/// Like [`bench`] but derives MLUP/s from `updates` per invocation.
+pub fn bench_mlups<T>(
+    name: &str,
+    updates: u64,
+    warmup: usize,
+    reps: usize,
+    f: impl FnMut() -> T,
+) -> Sample {
+    let mut s = bench(name, warmup, reps, f);
+    s.mlups = Some(updates as f64 / s.min_secs() / 1e6);
+    s
+}
+
+/// Print a header for a bench table.
+pub fn header(title: &str) {
+    println!("\n=== {title} ===");
+    println!(
+        "{:<44} {:>10} {:>10} {:>10} {:>12}",
+        "case", "min(ms)", "median(ms)", "mean(ms)", "MLUP/s"
+    );
+}
+
+/// Print one sample row.
+pub fn report(s: &Sample) {
+    println!(
+        "{:<44} {:>10.3} {:>10.3} {:>10.3} {:>12}",
+        s.name,
+        s.min.as_secs_f64() * 1e3,
+        s.median.as_secs_f64() * 1e3,
+        s.mean.as_secs_f64() * 1e3,
+        s.mlups.map(|m| format!("{m:.1}")).unwrap_or_else(|| "-".into()),
+    );
+}
+
+/// Convenience: run + report, returning the sample for assertions.
+pub fn run_case<T>(name: &str, updates: u64, f: impl FnMut() -> T) -> Sample {
+    let s = bench_mlups(name, updates, 1, 5, f);
+    report(&s);
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_ordered_stats() {
+        let s = bench("spin", 1, 5, || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            acc
+        });
+        assert_eq!(s.reps, 5);
+        assert!(s.min <= s.median && s.median <= s.mean * 2);
+    }
+
+    #[test]
+    fn mlups_uses_min_time() {
+        let s = bench_mlups("m", 1_000_000, 0, 3, || std::thread::sleep(Duration::from_millis(2)));
+        let m = s.mlups.unwrap();
+        assert!(m > 0.0 && m < 1000.0, "{m}");
+    }
+}

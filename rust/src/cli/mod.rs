@@ -1,0 +1,104 @@
+//! Minimal argument parser for the CLI (offline build: no clap).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and
+//! positional arguments, with typed getters and an unknown-flag check —
+//! the subset the `stencilwave` subcommands need.
+
+use std::collections::BTreeMap;
+
+use crate::Result;
+
+/// Parsed arguments of one subcommand invocation.
+#[derive(Debug, Default)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw arguments. Flags may appear as `--k v` or `--k=v`;
+    /// flags in `boolean` take no value.
+    pub fn parse(raw: &[String], boolean: &[&str]) -> Result<Self> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if boolean.contains(&name) {
+                    out.flags.insert(name.to_string(), "true".to_string());
+                } else {
+                    i += 1;
+                    let v = raw
+                        .get(i)
+                        .ok_or_else(|| anyhow::anyhow!("--{name} requires a value"))?;
+                    out.flags.insert(name.to_string(), v.clone());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    /// Reject flags outside the allowed set (catches typos).
+    pub fn check_known(&self, known: &[&str]) -> Result<()> {
+        for k in self.flags.keys() {
+            anyhow::ensure!(known.contains(&k.as_str()), "unknown flag --{k} (known: {known:?})");
+        }
+        Ok(())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--{key}: {e}")),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true"))
+    }
+
+    pub fn positional(&self, idx: usize) -> Option<&str> {
+        self.positional.get(idx).map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        let a = Args::parse(&v(&["fig8", "--n", "64", "--csv", "--out=x.txt"]), &["csv"]).unwrap();
+        assert_eq!(a.positional(0), Some("fig8"));
+        assert_eq!(a.get_usize("n", 0).unwrap(), 64);
+        assert!(a.get_bool("csv"));
+        assert_eq!(a.get("out"), Some("x.txt"));
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn missing_value_is_an_error() {
+        assert!(Args::parse(&v(&["--n"]), &[]).is_err());
+    }
+
+    #[test]
+    fn unknown_flags_are_caught() {
+        let a = Args::parse(&v(&["--typo", "1"]), &[]).unwrap();
+        assert!(a.check_known(&["n", "t"]).is_err());
+        let b = Args::parse(&v(&["--n", "1"]), &[]).unwrap();
+        b.check_known(&["n"]).unwrap();
+    }
+}

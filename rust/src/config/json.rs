@@ -1,0 +1,270 @@
+//! Minimal JSON parser for the artifact manifest (offline build: no serde).
+//!
+//! Supports the full JSON grammar the `aot.py` manifest uses — objects,
+//! arrays, strings (with escapes), numbers, booleans, null — with an API
+//! shaped like `serde_json::Value` so the call sites read naturally.
+
+use std::collections::BTreeMap;
+
+use crate::Result;
+
+/// A parsed JSON value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Value>),
+    Obj(BTreeMap<String, Value>),
+}
+
+impl Value {
+    /// Member lookup on objects.
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Value::Num(n) if *n >= 0.0 && n.fract() == 0.0 => Some(*n as u64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// Parse a complete JSON document.
+pub fn parse(text: &str) -> Result<Value> {
+    let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+    p.skip_ws();
+    let v = p.value()?;
+    p.skip_ws();
+    anyhow::ensure!(p.pos == p.bytes.len(), "trailing garbage at byte {}", p.pos);
+    Ok(v)
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Result<u8> {
+        let b = self.peek().ok_or_else(|| anyhow::anyhow!("unexpected end of input"))?;
+        self.pos += 1;
+        Ok(b)
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        let got = self.bump()?;
+        anyhow::ensure!(got == b, "expected '{}' at byte {}, got '{}'", b as char, self.pos - 1, got as char);
+        Ok(())
+    }
+
+    fn literal(&mut self, word: &str, v: Value) -> Result<Value> {
+        anyhow::ensure!(
+            self.bytes[self.pos..].starts_with(word.as_bytes()),
+            "invalid literal at byte {}",
+            self.pos
+        );
+        self.pos += word.len();
+        Ok(v)
+    }
+
+    fn value(&mut self) -> Result<Value> {
+        self.skip_ws();
+        match self.peek().ok_or_else(|| anyhow::anyhow!("unexpected end of input"))? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Value::Str(self.string()?)),
+            b't' => self.literal("true", Value::Bool(true)),
+            b'f' => self.literal("false", Value::Bool(false)),
+            b'n' => self.literal("null", Value::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn object(&mut self) -> Result<Value> {
+        self.expect(b'{')?;
+        let mut map = BTreeMap::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Value::Obj(map));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let val = self.value()?;
+            map.insert(key, val);
+            self.skip_ws();
+            match self.bump()? {
+                b',' => continue,
+                b'}' => return Ok(Value::Obj(map)),
+                c => anyhow::bail!("expected ',' or '}}' at byte {}, got '{}'", self.pos - 1, c as char),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Value> {
+        self.expect(b'[')?;
+        let mut out = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Value::Arr(out));
+        }
+        loop {
+            out.push(self.value()?);
+            self.skip_ws();
+            match self.bump()? {
+                b',' => continue,
+                b']' => return Ok(Value::Arr(out)),
+                c => anyhow::bail!("expected ',' or ']' at byte {}, got '{}'", self.pos - 1, c as char),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut s = String::new();
+        loop {
+            match self.bump()? {
+                b'"' => return Ok(s),
+                b'\\' => match self.bump()? {
+                    b'"' => s.push('"'),
+                    b'\\' => s.push('\\'),
+                    b'/' => s.push('/'),
+                    b'b' => s.push('\u{0008}'),
+                    b'f' => s.push('\u{000C}'),
+                    b'n' => s.push('\n'),
+                    b'r' => s.push('\r'),
+                    b't' => s.push('\t'),
+                    b'u' => {
+                        let mut code = 0u32;
+                        for _ in 0..4 {
+                            let h = self.bump()?;
+                            code = code * 16
+                                + (h as char)
+                                    .to_digit(16)
+                                    .ok_or_else(|| anyhow::anyhow!("bad \\u escape"))?;
+                        }
+                        s.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
+                    }
+                    c => anyhow::bail!("bad escape '\\{}'", c as char),
+                },
+                c => s.push(c as char),
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Value> {
+        let start = self.pos;
+        while matches!(
+            self.peek(),
+            Some(b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        ) {
+            self.pos += 1;
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos])?;
+        let n: f64 = text
+            .parse()
+            .map_err(|e| anyhow::anyhow!("bad number '{text}' at byte {start}: {e}"))?;
+        Ok(Value::Num(n))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_shaped_document() {
+        let v = parse(
+            r#"{"dtype": "f64", "artifacts": [
+                {"name": "a", "inputs": [{"shape": [16, 16, 16]}],
+                 "n_outputs": 2, "params": {"h2": 1.0, "scheme": "jacobi"}}
+            ]}"#,
+        )
+        .unwrap();
+        assert_eq!(v.get("dtype").unwrap().as_str(), Some("f64"));
+        let arts = v.get("artifacts").unwrap().as_array().unwrap();
+        assert_eq!(arts.len(), 1);
+        let a = &arts[0];
+        assert_eq!(a.get("n_outputs").unwrap().as_u64(), Some(2));
+        let shape = a.get("inputs").unwrap().as_array().unwrap()[0]
+            .get("shape")
+            .unwrap()
+            .as_array()
+            .unwrap();
+        assert_eq!(shape.iter().filter_map(|v| v.as_u64()).collect::<Vec<_>>(), [16, 16, 16]);
+        assert_eq!(a.get("params").unwrap().get("h2").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn scalars_and_escapes() {
+        assert_eq!(parse("true").unwrap(), Value::Bool(true));
+        assert_eq!(parse("null").unwrap(), Value::Null);
+        assert_eq!(parse("-1.5e3").unwrap().as_f64(), Some(-1500.0));
+        assert_eq!(parse(r#""a\nbA""#).unwrap().as_str(), Some("a\nbA"));
+        assert_eq!(parse("[]").unwrap(), Value::Arr(vec![]));
+        assert_eq!(parse("{}").unwrap(), Value::Obj(Default::default()));
+    }
+
+    #[test]
+    fn rejects_malformed_documents() {
+        for bad in ["{", "[1,", "\"unterminated", "{\"a\" 1}", "tru", "1 2", "{\"a\":}"] {
+            assert!(parse(bad).is_err(), "should reject: {bad}");
+        }
+    }
+
+    #[test]
+    fn non_integer_numbers_are_not_u64() {
+        assert_eq!(parse("1.5").unwrap().as_u64(), None);
+        assert_eq!(parse("-3").unwrap().as_u64(), None);
+        assert_eq!(parse("7").unwrap().as_u64(), Some(7));
+    }
+}

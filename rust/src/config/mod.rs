@@ -1,0 +1,303 @@
+//! Experiment configuration: file-loadable run descriptions.
+//!
+//! A [`RunConfig`] fully determines one experiment — scheme, kernel,
+//! problem size, wavefront parameters, target machine model — so every
+//! figure regeneration and every CLI invocation is reproducible from a
+//! file. The format is a TOML-compatible `key = value` subset parsed
+//! in-tree (offline build: no external parser crates); `configs/` ships
+//! the paper's standard setups.
+
+pub mod json;
+
+use crate::simulator::ecm::Kernel;
+use crate::simulator::machine::MachineSpec;
+use crate::simulator::memory::StoreMode;
+use crate::simulator::perfmodel::BarrierKind;
+use crate::Result;
+
+/// Which algorithm family a run exercises.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scheme {
+    /// Plain (threaded) Jacobi baseline.
+    JacobiBaseline,
+    /// Wavefront temporally-blocked Jacobi (Sec. 4, Fig. 6).
+    JacobiWavefront,
+    /// Pipeline-parallel Gauss-Seidel baseline (Fig. 5a).
+    GsBaseline,
+    /// Wavefront temporally-blocked Gauss-Seidel (Fig. 5b).
+    GsWavefront,
+}
+
+impl Scheme {
+    pub fn is_gs(self) -> bool {
+        matches!(self, Scheme::GsBaseline | Scheme::GsWavefront)
+    }
+
+    pub fn kernel(self, optimized: bool) -> Kernel {
+        match (self.is_gs(), optimized) {
+            (false, true) => Kernel::JacobiOpt,
+            (false, false) => Kernel::JacobiC,
+            (true, true) => Kernel::GsOpt,
+            (true, false) => Kernel::GsC,
+        }
+    }
+
+    /// Parse `jacobi_wavefront` / `jacobi-wavefront` style names.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.trim().replace('-', "_").as_str() {
+            "jacobi_baseline" => Scheme::JacobiBaseline,
+            "jacobi_wavefront" => Scheme::JacobiWavefront,
+            "gs_baseline" => Scheme::GsBaseline,
+            "gs_wavefront" => Scheme::GsWavefront,
+            other => anyhow::bail!("unknown scheme '{other}'"),
+        })
+    }
+}
+
+/// One experiment description.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub scheme: Scheme,
+    /// Problem size (nz, ny, nx).
+    pub size: (usize, usize, usize),
+    /// Temporal blocking factor t (threads per group).
+    pub t: usize,
+    /// Number of thread groups.
+    pub groups: usize,
+    /// Updates to perform in total (multiple of t for wavefront Jacobi).
+    pub iters: usize,
+    pub smt: bool,
+    pub optimized_kernel: bool,
+    pub nt_stores: bool,
+    pub barrier: BarrierKind,
+    /// Machine model to predict on (`None` = host execution only).
+    pub machine: Option<String>,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            scheme: Scheme::JacobiWavefront,
+            size: (64, 64, 64),
+            t: 4,
+            groups: 1,
+            iters: 4,
+            smt: false,
+            optimized_kernel: true,
+            nt_stores: true,
+            barrier: BarrierKind::Spin,
+            machine: None,
+        }
+    }
+}
+
+fn parse_bool(v: &str) -> Result<bool> {
+    match v {
+        "true" => Ok(true),
+        "false" => Ok(false),
+        other => anyhow::bail!("expected true/false, got '{other}'"),
+    }
+}
+
+impl RunConfig {
+    pub fn store_mode(&self) -> StoreMode {
+        if self.nt_stores && !self.scheme.is_gs() {
+            StoreMode::NonTemporal
+        } else {
+            StoreMode::WriteAllocate
+        }
+    }
+
+    pub fn machine_spec(&self) -> Option<MachineSpec> {
+        self.machine.as_deref().and_then(MachineSpec::by_name)
+    }
+
+    /// Parse the `key = value` config format:
+    ///
+    /// ```text
+    /// scheme = "jacobi_wavefront"   # comments allowed
+    /// size = [64, 64, 64]
+    /// t = 4
+    /// smt = false
+    /// machine = "Nehalem EX"
+    /// ```
+    pub fn from_text(text: &str) -> Result<Self> {
+        let mut cfg = RunConfig::default();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("line {}: expected key = value", lineno + 1))?;
+            let key = key.trim();
+            let value = value.trim().trim_matches('"');
+            match key {
+                "scheme" => cfg.scheme = Scheme::parse(value)?,
+                "size" => {
+                    let nums: Vec<usize> = value
+                        .trim_start_matches('[')
+                        .trim_end_matches(']')
+                        .split(',')
+                        .map(|s| s.trim().parse::<usize>())
+                        .collect::<std::result::Result<_, _>>()
+                        .map_err(|e| anyhow::anyhow!("line {}: bad size: {e}", lineno + 1))?;
+                    anyhow::ensure!(nums.len() == 3, "line {}: size needs 3 dims", lineno + 1);
+                    cfg.size = (nums[0], nums[1], nums[2]);
+                }
+                "t" => cfg.t = value.parse()?,
+                "groups" => cfg.groups = value.parse()?,
+                "iters" => cfg.iters = value.parse()?,
+                "smt" => cfg.smt = parse_bool(value)?,
+                "optimized_kernel" => cfg.optimized_kernel = parse_bool(value)?,
+                "nt_stores" => cfg.nt_stores = parse_bool(value)?,
+                "barrier" => {
+                    cfg.barrier = match value {
+                        "spin" => BarrierKind::Spin,
+                        "tree" => BarrierKind::Tree,
+                        "pthread" => BarrierKind::Pthread,
+                        other => anyhow::bail!("line {}: unknown barrier '{other}'", lineno + 1),
+                    }
+                }
+                "machine" => cfg.machine = Some(value.to_string()),
+                other => anyhow::bail!("line {}: unknown key '{other}'", lineno + 1),
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a config file.
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        Self::from_text(&std::fs::read_to_string(path)?)
+    }
+
+    /// Serialize back to the config format.
+    pub fn to_text(&self) -> String {
+        let scheme = match self.scheme {
+            Scheme::JacobiBaseline => "jacobi_baseline",
+            Scheme::JacobiWavefront => "jacobi_wavefront",
+            Scheme::GsBaseline => "gs_baseline",
+            Scheme::GsWavefront => "gs_wavefront",
+        };
+        let barrier = match self.barrier {
+            BarrierKind::Spin => "spin",
+            BarrierKind::Tree => "tree",
+            BarrierKind::Pthread => "pthread",
+        };
+        let mut s = format!(
+            "scheme = \"{scheme}\"\nsize = [{}, {}, {}]\nt = {}\ngroups = {}\niters = {}\n\
+             smt = {}\noptimized_kernel = {}\nnt_stores = {}\nbarrier = \"{barrier}\"\n",
+            self.size.0,
+            self.size.1,
+            self.size.2,
+            self.t,
+            self.groups,
+            self.iters,
+            self.smt,
+            self.optimized_kernel,
+            self.nt_stores,
+        );
+        if let Some(m) = &self.machine {
+            s += &format!("machine = \"{m}\"\n");
+        }
+        s
+    }
+
+    /// Validate internal consistency.
+    pub fn validate(&self) -> Result<()> {
+        let (nz, ny, nx) = self.size;
+        anyhow::ensure!(nz >= 3 && ny >= 3 && nx >= 3, "grid too small: {:?}", self.size);
+        anyhow::ensure!(self.t >= 1, "blocking factor must be >= 1");
+        anyhow::ensure!(self.groups >= 1, "need at least one thread group");
+        if matches!(self.scheme, Scheme::JacobiWavefront) {
+            anyhow::ensure!(self.t % 2 == 0, "wavefront Jacobi needs even t (in-place tmp scheme)");
+            anyhow::ensure!(
+                self.iters % self.t == 0,
+                "iters ({}) must be a multiple of t ({})",
+                self.iters,
+                self.t
+            );
+        }
+        if let Some(name) = &self.machine {
+            anyhow::ensure!(MachineSpec::by_name(name).is_some(), "unknown machine '{name}'");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn text_roundtrip() {
+        let cfg = RunConfig {
+            scheme: Scheme::GsWavefront,
+            size: (40, 50, 60),
+            t: 6,
+            groups: 2,
+            iters: 12,
+            smt: true,
+            optimized_kernel: false,
+            nt_stores: false,
+            barrier: BarrierKind::Tree,
+            machine: Some("Westmere".into()),
+        };
+        let back = RunConfig::from_text(&cfg.to_text()).unwrap();
+        assert_eq!(back.size, cfg.size);
+        assert_eq!(back.scheme, cfg.scheme);
+        assert_eq!(back.t, 6);
+        assert!(back.smt);
+        assert!(!back.optimized_kernel);
+        assert_eq!(back.barrier, BarrierKind::Tree);
+        assert_eq!(back.machine.as_deref(), Some("Westmere"));
+        back.validate().unwrap();
+    }
+
+    #[test]
+    fn minimal_text_uses_defaults() {
+        let cfg = RunConfig::from_text(
+            "scheme = \"gs_baseline\"  # the pipelined baseline\nsize = [32, 32, 32]\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.t, 4);
+        assert_eq!(cfg.groups, 1);
+        assert!(cfg.optimized_kernel);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn validation_catches_bad_configs() {
+        let mut cfg =
+            RunConfig::from_text("scheme = \"jacobi_wavefront\"\nsize = [32,32,32]\n").unwrap();
+        cfg.t = 3; // odd
+        assert!(cfg.validate().is_err());
+        cfg.t = 4;
+        cfg.iters = 6; // not a multiple of 4
+        assert!(cfg.validate().is_err());
+        cfg.iters = 8;
+        cfg.validate().unwrap();
+        cfg.machine = Some("pentium4".into());
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn parse_errors_carry_line_numbers() {
+        let err = RunConfig::from_text("scheme = \"gs_baseline\"\nbogus_key = 3\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("line 2"), "{err}");
+        assert!(RunConfig::from_text("not a kv line\n").is_err());
+    }
+
+    #[test]
+    fn scheme_kernel_mapping() {
+        assert_eq!(Scheme::JacobiBaseline.kernel(true), Kernel::JacobiOpt);
+        assert_eq!(Scheme::GsWavefront.kernel(false), Kernel::GsC);
+        assert!(Scheme::GsBaseline.is_gs());
+        assert!(!Scheme::JacobiWavefront.is_gs());
+        assert!(Scheme::parse("jacobi-wavefront").is_ok());
+        assert!(Scheme::parse("nope").is_err());
+    }
+}

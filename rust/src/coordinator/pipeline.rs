@@ -1,0 +1,187 @@
+//! Pipeline-parallel lexicographic Gauss-Seidel (paper Sec. 3, Fig. 5a).
+//!
+//! A straightforward domain decomposition cannot parallelize GS — the
+//! update at `(k, j, i)` needs *new* values at `(k-1, j, i)`, `(k, j-1, i)`
+//! and `(k, j, i-1)`. Instead of switching to red-black ordering, the
+//! paper pipelines the *same* lexicographic algorithm: threads partition
+//! the y dimension into contiguous chunks, and thread `p` starts plane `k`
+//! only after thread `p-1` has finished plane `k` — so thread p's first
+//! line reads thread p-1's freshly updated last line, and thread p+1's
+//! chunk is still untouched (old values) when thread p reads across its
+//! upper edge. Plane updates of the threads are thereby "shifted in time"
+//! exactly as Fig. 5a shows, and the result is **bit-identical** to the
+//! serial sweep.
+
+use std::sync::atomic::{AtomicIsize, Ordering};
+
+use crate::stencil::gauss_seidel::{gs_plane_line_raw, gs_sweep, GsKernel};
+use crate::stencil::grid::Grid3;
+use crate::Result;
+
+/// Configuration of a pipeline-parallel GS run.
+#[derive(Clone, Copy, Debug)]
+pub struct PipelineConfig {
+    /// Threads = y-chunks.
+    pub threads: usize,
+    pub kernel: GsKernel,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        Self { threads: 4, kernel: GsKernel::Interleaved }
+    }
+}
+
+/// Split `1..ny-1` interior lines into `p` contiguous chunks.
+///
+/// Returns `(start, end)` half-open ranges; empty chunks allowed when
+/// `p > ny - 2` (those threads simply keep pace in the pipeline).
+pub fn chunk_lines(ny: usize, p: usize) -> Vec<(usize, usize)> {
+    let interior = ny.saturating_sub(2);
+    let base = interior / p;
+    let extra = interior % p;
+    let mut out = Vec::with_capacity(p);
+    let mut start = 1;
+    for i in 0..p {
+        let len = base + usize::from(i < extra);
+        out.push((start, start + len));
+        start += len;
+    }
+    out
+}
+
+#[derive(Clone, Copy)]
+struct SharedPtr(*mut f64);
+unsafe impl Send for SharedPtr {}
+unsafe impl Sync for SharedPtr {}
+
+impl SharedPtr {
+    /// Accessor (method, not field) so closures capture the whole wrapper
+    /// — RFC 2229 disjoint capture would otherwise capture the bare
+    /// pointer, which is not `Send`.
+    #[inline(always)]
+    fn get(self) -> *mut f64 {
+        self.0
+    }
+}
+
+/// One in-place lexicographic GS sweep, pipeline-parallel over y-chunks.
+///
+/// Bit-identical to [`gs_sweep`] for every thread count.
+pub fn pipeline_gs_sweep(u: &mut Grid3, cfg: &PipelineConfig) -> Result<()> {
+    let p = cfg.threads;
+    anyhow::ensure!(p >= 1, "need at least one thread");
+    let (nz, ny, nx) = u.shape();
+    if nz < 3 || ny < 3 || nx < 3 {
+        return Ok(());
+    }
+    if p == 1 {
+        gs_sweep(u, cfg.kernel);
+        return Ok(());
+    }
+    let chunks = chunk_lines(ny, p);
+    let progress: Vec<AtomicIsize> = (0..p).map(|_| AtomicIsize::new(0)).collect();
+    let base = SharedPtr(u.data_mut().as_mut_ptr());
+    let kernel = cfg.kernel;
+
+    std::thread::scope(|scope| {
+        for (tid, &(j0, j1)) in chunks.iter().enumerate() {
+            let progress = &progress;
+            let ptr = base;
+            scope.spawn(move || {
+                for k in 1..nz - 1 {
+                    if tid > 0 {
+                        // thread p-1 must have completed this plane so our
+                        // first line sees its new last line, and it stopped
+                        // reading across our lower edge.
+                        super::barrier::spin_wait(|| {
+                            progress[tid - 1].load(Ordering::Acquire) >= k as isize
+                        });
+                    }
+                    // SAFETY: chunks are disjoint line ranges; the progress
+                    // protocol guarantees the only cross-chunk reads (j0-1
+                    // from below = new, j1 from above = old) are race-free:
+                    // below has finished plane k, above has not started it.
+                    unsafe {
+                        for j in j0..j1 {
+                            gs_plane_line_raw(ptr.get(), ny, nx, k, j, kernel);
+                        }
+                    }
+                    progress[tid].store(k as isize, Ordering::Release);
+                }
+            });
+        }
+    });
+    Ok(())
+}
+
+/// `n` pipelined sweeps.
+pub fn pipeline_gs_sweeps(u: &mut Grid3, cfg: &PipelineConfig, n: usize) -> Result<()> {
+    for _ in 0..n {
+        pipeline_gs_sweep(u, cfg)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check(nz: usize, ny: usize, nx: usize, threads: usize) {
+        let mut u = Grid3::random(nz, ny, nx, 31);
+        let mut want = u.clone();
+        gs_sweep(&mut want, GsKernel::Interleaved);
+        let cfg = PipelineConfig { threads, kernel: GsKernel::Interleaved };
+        pipeline_gs_sweep(&mut u, &cfg).unwrap();
+        assert_eq!(u.max_abs_diff(&want), 0.0, "{nz}x{ny}x{nx} p={threads}");
+    }
+
+    #[test]
+    fn bit_identical_small_thread_counts() {
+        for p in 1..=4 {
+            check(8, 10, 9, p);
+        }
+    }
+
+    #[test]
+    fn bit_identical_many_threads() {
+        check(6, 20, 8, 6);
+        check(6, 9, 8, 8); // more threads than can be busy
+        check(5, 5, 5, 7); // p > interior lines: some chunks empty
+    }
+
+    #[test]
+    fn chunks_partition_interior() {
+        for (ny, p) in [(10, 3), (20, 6), (5, 8), (3, 2)] {
+            let ch = chunk_lines(ny, p);
+            assert_eq!(ch.len(), p);
+            assert_eq!(ch[0].0, 1);
+            assert_eq!(ch.last().unwrap().1, ny - 1);
+            for w in ch.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "contiguous");
+            }
+        }
+    }
+
+    #[test]
+    fn multi_sweep_matches_serial() {
+        let mut u = Grid3::random(7, 12, 8, 55);
+        let mut want = u.clone();
+        for _ in 0..3 {
+            gs_sweep(&mut want, GsKernel::Interleaved);
+        }
+        pipeline_gs_sweeps(&mut u, &PipelineConfig { threads: 3, ..Default::default() }, 3)
+            .unwrap();
+        assert_eq!(u.max_abs_diff(&want), 0.0);
+    }
+
+    #[test]
+    fn naive_kernel_also_exact() {
+        let mut u = Grid3::random(6, 8, 7, 3);
+        let mut want = u.clone();
+        gs_sweep(&mut want, GsKernel::Naive);
+        pipeline_gs_sweep(&mut u, &PipelineConfig { threads: 3, kernel: GsKernel::Naive })
+            .unwrap();
+        assert_eq!(u.max_abs_diff(&want), 0.0);
+    }
+}

@@ -1,0 +1,285 @@
+//! Spatial blocking for the wavefront scheme (paper Sec. 4, Fig. 7).
+//!
+//! For large planes, the rolling window of a whole-domain wavefront
+//! overflows the shared cache, so the domain is decomposed into `B` blocks
+//! along y and each block is swept with the full temporal depth `t` before
+//! the next one starts. Because a site's step-`s` update needs step-`s-1`
+//! neighbors, the per-level update regions are *skewed*: level `s` of
+//! block `b` covers `[start_b - (s-1), end_b - (s-1))` (clamped to the
+//! domain at the first/last block, where the Dirichlet boundary makes the
+//! shift unnecessary).
+//!
+//! At a block interface the next block needs values the rolling temporary
+//! buffer has already recycled; the paper: "a boundary array must thus
+//! hold t planes in z-x direction. Hence no additional computations are
+//! necessary for the boundary treatment." Concretely (and provably — see
+//! the tests): *even*-level values at the interface survive in `src`
+//! because every later even level's region ends strictly left of them,
+//! but *odd*-level values live in the 4-slot temporary ring and are gone
+//! — so for each odd level the last two lines of its region are saved,
+//! for every plane, into a boundary array the next block reads from.
+//!
+//! Result: bit-identical to `t` serial Jacobi sweeps for every `(B, t)`.
+
+use crate::stencil::grid::Grid3;
+use crate::stencil::jacobi::ONE_SIXTH;
+use crate::Result;
+
+/// Temporary-ring slots per odd level (as in the threaded wavefront).
+const TMP_SLOTS: usize = 4;
+
+/// Configuration of a blocked (spatially + temporally) sweep.
+#[derive(Clone, Copy, Debug)]
+pub struct SpatialConfig {
+    /// Temporal blocking factor `t` (even, ≥ 2).
+    pub t: usize,
+    /// Number of y blocks `B` (Fig. 7 uses 8).
+    pub blocks: usize,
+}
+
+impl Default for SpatialConfig {
+    fn default() -> Self {
+        Self { t: 4, blocks: 2 }
+    }
+}
+
+/// Perform exactly `cfg.t` Jacobi updates on `u` in place, block by block.
+pub fn blocked_wavefront_jacobi(
+    u: &mut Grid3,
+    f: &Grid3,
+    h2: f64,
+    cfg: &SpatialConfig,
+) -> Result<()> {
+    let t = cfg.t;
+    let b_count = cfg.blocks;
+    anyhow::ensure!(t >= 2 && t % 2 == 0, "blocked wavefront needs even t >= 2, got {t}");
+    anyhow::ensure!(b_count >= 1, "need at least one block");
+    anyhow::ensure!(u.shape() == f.shape(), "u/f shape mismatch");
+    let (nz, ny, nx) = u.shape();
+    if nz < 3 || ny < 3 || nx < 3 {
+        return Ok(());
+    }
+
+    let plane = ny * nx;
+    let levels = t / 2; // odd levels 1, 3, …, t-1 → index u = (s-1)/2
+    let mut tmp = vec![0.0f64; levels * TMP_SLOTS * plane];
+    // boundary arrays: per odd level, per z plane, two x-lines; double
+    // buffered across blocks (read side = previous block's writes).
+    let bnd_stride = nz * 2 * nx;
+    let mut bnd_read = vec![0.0f64; levels * bnd_stride];
+    let mut bnd_write = vec![0.0f64; levels * bnd_stride];
+
+    // block boundaries over the interior lines [1, ny-1)
+    let interior = ny - 2;
+    let starts: Vec<usize> = (0..=b_count)
+        .map(|b| 1 + b * interior / b_count)
+        .collect();
+
+    let last_round = (nz - 2) + 2 * (t - 1);
+    // scratch line reused across every (round, level, y) iteration —
+    // allocating here instead of per plane was a 1.2–1.4× win on the
+    // blocked-wavefront bench (EXPERIMENTS.md §Perf).
+    let mut out = vec![0.0f64; nx];
+    for b in 0..b_count {
+        let block_start = starts[b];
+        let block_end = starts[b + 1];
+        if block_start == block_end {
+            continue; // degenerate empty block (more blocks than lines)
+        }
+        // per-level y region of this block (clamped skew)
+        let region = |s: usize| -> (usize, usize) {
+            let shift = s - 1;
+            let lo = if b == 0 { 1 } else { block_start.saturating_sub(shift).max(1) };
+            let hi = if b + 1 == b_count { ny - 1 } else { block_end.saturating_sub(shift).max(1) };
+            (lo, hi)
+        };
+
+        for r in 1..=last_round {
+            for s in 1..=t {
+                let k = r as isize - 2 * (s as isize - 1);
+                if k < 1 || k > (nz - 2) as isize {
+                    continue;
+                }
+                let k = k as usize;
+                let (y_lo, y_hi) = region(s);
+                let lvl = (s - 1) / 2; // odd-level index for writes of odd s
+                for y in y_lo..y_hi {
+                    {
+                        // gather the six level-(s-1) neighbor lines + rhs
+                        let c = read_line(u, &tmp, &bnd_read, b, s, k, y, &starts, nz, ny, nx);
+                        let ym = read_line(u, &tmp, &bnd_read, b, s, k, y - 1, &starts, nz, ny, nx);
+                        let yp = read_line(u, &tmp, &bnd_read, b, s, k, y + 1, &starts, nz, ny, nx);
+                        let zm = read_line(u, &tmp, &bnd_read, b, s, k - 1, y, &starts, nz, ny, nx);
+                        let zp = read_line(u, &tmp, &bnd_read, b, s, k + 1, y, &starts, nz, ny, nx);
+                        let rhs = f.line(k, y);
+                        out[0] = c[0];
+                        out[nx - 1] = c[nx - 1];
+                        for i in 1..nx - 1 {
+                            out[i] = ONE_SIXTH
+                                * (c[i - 1]
+                                    + c[i + 1]
+                                    + ym[i]
+                                    + yp[i]
+                                    + zm[i]
+                                    + zp[i]
+                                    + h2 * rhs[i]);
+                        }
+                    }
+                    // write to the level-s home (tmp ring for odd, src for
+                    // even), plus the boundary array when this line is one
+                    // of the last two of an odd level's region.
+                    if s % 2 == 1 {
+                        let slot = (lvl * TMP_SLOTS + k % TMP_SLOTS) * plane + y * nx;
+                        tmp[slot..slot + nx].copy_from_slice(&out);
+                        if b + 1 < b_count {
+                            // interface lines end_b - s - 1 and end_b - s:
+                            // save whichever of the two this line is (the
+                            // other may be a boundary line or produced by
+                            // an earlier block — see the forwarding pass).
+                            let iface_lo = block_end as isize - s as isize - 1;
+                            let idx = y as isize - iface_lo;
+                            if idx == 0 || idx == 1 {
+                                let o = lvl * bnd_stride + (k * 2 + idx as usize) * nx;
+                                bnd_write[o..o + nx].copy_from_slice(&out);
+                            }
+                        }
+                    } else {
+                        u.line_mut(k, y).copy_from_slice(&out);
+                    }
+                }
+            }
+        }
+        // Forwarding pass: for narrow blocks (width 1) an interface line
+        // block b+1 needs was not produced by block b at all — it was
+        // produced earlier and still sits in `bnd_read` (one slot to the
+        // left). Carry it over so the boundary chain stays unbroken.
+        if b + 1 < b_count {
+            for o in (1..=t).step_by(2) {
+                let lvl = (o - 1) / 2;
+                let (region_lo, region_hi) = region(o);
+                for idx in 0..2usize {
+                    let y = block_end as isize - o as isize - 1 + idx as isize;
+                    if y < 1 {
+                        continue; // boundary line: reads redirect to src
+                    }
+                    let y = y as usize;
+                    if y >= region_lo && y < region_hi {
+                        continue; // produced this block: already saved
+                    }
+                    let ridx = y as isize - (block_start as isize - o as isize - 1);
+                    if ridx == 0 || ridx == 1 {
+                        for k in 0..nz {
+                            let dst = lvl * bnd_stride + (k * 2 + idx) * nx;
+                            let src_off = lvl * bnd_stride + (k * 2 + ridx as usize) * nx;
+                            bnd_write[dst..dst + nx]
+                                .copy_from_slice(&bnd_read[src_off..src_off + nx]);
+                        }
+                    }
+                }
+            }
+        }
+        std::mem::swap(&mut bnd_read, &mut bnd_write);
+    }
+    Ok(())
+}
+
+/// Read the level-`s-1` value of line `(k, y)` during block `b`, level `s`.
+#[allow(clippy::too_many_arguments)]
+fn read_line<'a>(
+    u: &'a Grid3,
+    tmp: &'a [f64],
+    bnd: &'a [f64],
+    b: usize,
+    s: usize,
+    k: usize,
+    y: usize,
+    starts: &[usize],
+    nz: usize,
+    ny: usize,
+    nx: usize,
+) -> &'a [f64] {
+    let plane = ny * nx;
+    // z or y domain boundary: level-invariant original values in src
+    if k == 0 || k == nz - 1 || y == 0 || y == ny - 1 {
+        return u.line(k, y);
+    }
+    let prev = s - 1;
+    if prev % 2 == 0 {
+        // even levels (incl. 0 = original) live in src: the highest even
+        // level whose region covered this line is exactly `prev`.
+        return u.line(k, y);
+    }
+    // odd level: the temporary ring if the line was produced during this
+    // block's sweep, else the previous block's boundary array.
+    let lvl = (prev - 1) / 2;
+    let block_start = starts[b];
+    let region_lo = if b == 0 { 1 } else { block_start.saturating_sub(prev - 1).max(1) };
+    if y >= region_lo {
+        let slot = (lvl * TMP_SLOTS + k % TMP_SLOTS) * plane + y * nx;
+        &tmp[slot..slot + nx]
+    } else {
+        // lines start_b - prev - 1 and start_b - prev of the previous
+        // block's level-`prev` region, saved as boundary index 0 / 1
+        let iface_lo = block_start - prev - 1;
+        debug_assert!(y == iface_lo || y == iface_lo + 1, "y={y} iface_lo={iface_lo} s={s}");
+        let idx = y - iface_lo;
+        let stride = nz * 2 * nx;
+        let o = lvl * stride + (k * 2 + idx) * nx;
+        &bnd[o..o + nx]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::wavefront::serial_reference;
+
+    fn check(nz: usize, ny: usize, nx: usize, t: usize, blocks: usize) {
+        let f = Grid3::random(nz, ny, nx, 17);
+        let mut u = Grid3::random(nz, ny, nx, 18);
+        let want = serial_reference(&u, &f, 1.1, t);
+        blocked_wavefront_jacobi(&mut u, &f, 1.1, &SpatialConfig { t, blocks }).unwrap();
+        assert_eq!(u.max_abs_diff(&want), 0.0, "{nz}x{ny}x{nx} t={t} B={blocks}");
+    }
+
+    #[test]
+    fn single_block_matches_serial() {
+        check(10, 9, 8, 2, 1);
+        check(10, 9, 8, 4, 1);
+    }
+
+    #[test]
+    fn two_blocks_match_serial() {
+        check(10, 12, 8, 2, 2);
+        check(10, 12, 8, 4, 2);
+        check(8, 16, 9, 6, 2);
+    }
+
+    #[test]
+    fn many_blocks_match_serial() {
+        check(8, 24, 8, 4, 4);
+        check(8, 24, 8, 4, 8); // blocks with very few lines
+        check(6, 30, 7, 6, 5);
+    }
+
+    #[test]
+    fn uneven_block_sizes() {
+        // interior lines not divisible by block count
+        check(8, 13, 8, 4, 3);
+        check(8, 11, 8, 2, 4);
+    }
+
+    #[test]
+    fn more_blocks_than_lines_degenerates_gracefully() {
+        check(6, 6, 6, 2, 10);
+    }
+
+    #[test]
+    fn odd_t_rejected() {
+        let mut u = Grid3::random(8, 8, 8, 1);
+        let f = Grid3::zeros(8, 8, 8);
+        assert!(
+            blocked_wavefront_jacobi(&mut u, &f, 1.0, &SpatialConfig { t: 3, blocks: 2 }).is_err()
+        );
+    }
+}

@@ -1,0 +1,321 @@
+//! Temporal wavefront blocking for Jacobi (paper Sec. 4, Fig. 6).
+//!
+//! A *thread group* of `t` threads performs `t` time-shifted sweeps over
+//! the grid. Thread `s` (0-based) executes update step `s+1`, trailing
+//! thread `s-1` by two planes so its three-plane read window only touches
+//! completed planes. Odd-numbered updates are written to a small
+//! round-robin temporary buffer; even-numbered updates go back to the
+//! `src` array — so after the group passes, `src` holds the `t`-times
+//! updated grid *in place*, without the second full grid of the
+//! out-of-place Jacobi (the paper's "the second grid ... is not required").
+//!
+//! The temporary buffer holds 4 z-x planes per odd update level
+//! (`2t` planes total for the paper's `t = 4` example, matching "for our
+//! example eight"): producer step `2u+1` writes plane `k` to slot
+//! `k mod 4` of region `u`, consumer step `2u+2` trails by exactly two
+//! planes and reads slots `k-1 … k+1` — four live slots.
+//!
+//! ## Safety argument (also enforced by the progress protocol)
+//!
+//! * thread `s` updates plane `k` only once `progress[s-1] ≥ k+1`
+//!   (its entire read window holds step-`s` values);
+//! * thread `s` never runs more than `TMP_SLOTS - 1` planes ahead of
+//!   thread `s+1` (back-pressure), so no live temporary slot is reused;
+//! * `src` writes by thread `s` land strictly behind every plane thread
+//!   `s-2`'s window can still read (distance ≥ 4).
+//!
+//! Boundary planes (`k = 0`, `k = nz-1`) are never updated at any step,
+//! so every step's "value" of a boundary plane is the original `src`
+//! plane — window reads are redirected there instead of the temporary.
+//!
+//! Numerics are bit-identical to `t` serial [`jacobi_sweep`]s: same
+//! kernel, same fp order — tests assert exact equality.
+
+use std::sync::atomic::{AtomicIsize, Ordering};
+
+use crate::simulator::perfmodel::BarrierKind;
+use crate::stencil::grid::Grid3;
+use crate::stencil::jacobi::{jacobi_line_update, jacobi_sweep};
+use crate::Result;
+
+use super::barrier::AnyBarrier;
+
+/// Temporary-buffer slots per odd update level (see module docs).
+const TMP_SLOTS: usize = 4;
+
+/// How threads of a group synchronize plane hand-off.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum SyncMode {
+    /// Global barrier after every plane round (the paper's scheme).
+    #[default]
+    Barrier,
+    /// Point-to-point progress flags (producer/consumer flow control) —
+    /// the "highly efficient synchronization" refinement: threads only
+    /// wait for the neighbors they actually depend on.
+    Flow,
+}
+
+/// Configuration of one wavefront thread group.
+#[derive(Clone, Copy, Debug)]
+pub struct WavefrontConfig {
+    /// Threads in the group = temporal blocking factor `t` (even, ≥ 2).
+    pub threads: usize,
+    pub barrier: BarrierKind,
+    pub sync: SyncMode,
+}
+
+impl Default for WavefrontConfig {
+    fn default() -> Self {
+        Self { threads: 4, barrier: BarrierKind::Spin, sync: SyncMode::Barrier }
+    }
+}
+
+/// Raw shared-grid pointer that the scoped threads index disjointly.
+#[derive(Clone, Copy)]
+struct SharedPtr(*mut f64);
+unsafe impl Send for SharedPtr {}
+unsafe impl Sync for SharedPtr {}
+
+impl SharedPtr {
+    /// Accessor (method, not field) so closures capture the whole wrapper
+    /// — RFC 2229 disjoint capture would otherwise capture the bare
+    /// pointer, which is not `Send`.
+    #[inline(always)]
+    fn get(self) -> *mut f64 {
+        self.0
+    }
+}
+
+/// Perform exactly `cfg.threads` Jacobi updates on `u` in place.
+///
+/// Functionally equal to `cfg.threads` calls of [`jacobi_sweep`] with
+/// ping-pong buffers, but executed by one wavefront thread group.
+pub fn wavefront_jacobi(u: &mut Grid3, f: &Grid3, h2: f64, cfg: &WavefrontConfig) -> Result<()> {
+    let t = cfg.threads;
+    anyhow::ensure!(t >= 2 && t % 2 == 0, "wavefront needs an even thread count >= 2, got {t}");
+    anyhow::ensure!(u.shape() == f.shape(), "u/f shape mismatch");
+    let (nz, ny, nx) = u.shape();
+    if nz < 3 || ny < 3 || nx < 3 {
+        return Ok(());
+    }
+
+    let plane = ny * nx;
+    let mut tmp = vec![0.0f64; (t / 2) * TMP_SLOTS * plane];
+    let src_ptr = SharedPtr(u.data_mut().as_mut_ptr());
+    let tmp_ptr = SharedPtr(tmp.as_mut_ptr());
+    let f_ptr = f.data().as_ptr() as usize;
+
+    let barrier = AnyBarrier::new(cfg.barrier, t);
+    let progress: Vec<AtomicIsize> = (0..t).map(|_| AtomicIsize::new(0)).collect();
+    let last_round = (nz - 2) as isize + 2 * (t as isize - 1);
+
+    std::thread::scope(|scope| {
+        for s in 0..t {
+            let barrier = &barrier;
+            let progress = &progress;
+            let src = src_ptr;
+            let tmpp = tmp_ptr;
+            scope.spawn(move || {
+                let f_base = f_ptr as *const f64;
+                // plane base pointer holding the step-`s` values of plane kk
+                // as seen by thread `s` (its read side).
+                let read_plane = |kk: usize| -> *const f64 {
+                    if kk == 0 || kk == nz - 1 || s % 2 == 0 {
+                        unsafe { src.get().add(kk * plane) as *const f64 }
+                    } else {
+                        let region = (s / 2) * TMP_SLOTS;
+                        unsafe { tmpp.get().add((region + kk % TMP_SLOTS) * plane) as *const f64 }
+                    }
+                };
+                let write_plane = |k: usize| -> *mut f64 {
+                    if s % 2 == 0 {
+                        let region = (s / 2) * TMP_SLOTS;
+                        unsafe { tmpp.get().add((region + k % TMP_SLOTS) * plane) }
+                    } else {
+                        unsafe { src.get().add(k * plane) }
+                    }
+                };
+
+                for r in 1..=last_round {
+                    let k = r - 2 * s as isize;
+                    if k >= 1 && k <= (nz - 2) as isize {
+                        let k = k as usize;
+                        if cfg.sync == SyncMode::Flow {
+                            // forward dependency: window complete at step s.
+                            // Plane nz-1 is boundary and never processed, so
+                            // at k = nz-2 the window is complete once the
+                            // producer finished its own last interior plane.
+                            if s > 0 {
+                                let need = (k as isize + 1).min((nz - 2) as isize);
+                                super::barrier::spin_wait(|| {
+                                    progress[s - 1].load(Ordering::Acquire) >= need
+                                });
+                            }
+                            // back-pressure: do not overwrite a tmp slot the
+                            // consumer may still read
+                            if s + 1 < t {
+                                super::barrier::spin_wait(|| {
+                                    progress[s + 1].load(Ordering::Acquire)
+                                        >= k as isize - (TMP_SLOTS as isize - 1)
+                                });
+                            }
+                        }
+                        // SAFETY: the schedule guarantees exclusive write
+                        // access to plane k of the write side and that every
+                        // read plane holds completed step values (see module
+                        // docs); lines below are disjoint slices.
+                        unsafe {
+                            let zm = read_plane(k - 1);
+                            let zc = read_plane(k);
+                            let zp = read_plane(k + 1);
+                            let out = write_plane(k);
+                            // boundary lines of the output plane must carry
+                            // the (step-invariant) boundary values so later
+                            // steps read correct y-edges from the tmp.
+                            if s % 2 == 0 {
+                                let src_line0 = src.get().add(k * plane) as *const f64;
+                                std::ptr::copy_nonoverlapping(src_line0, out, nx);
+                                std::ptr::copy_nonoverlapping(
+                                    src_line0.add((ny - 1) * nx),
+                                    out.add((ny - 1) * nx),
+                                    nx,
+                                );
+                                // x-edge columns are copied per line below.
+                            }
+                            for j in 1..ny - 1 {
+                                let dst = std::slice::from_raw_parts_mut(out.add(j * nx), nx);
+                                let center = std::slice::from_raw_parts(zc.add(j * nx), nx);
+                                if s % 2 == 0 {
+                                    // carry the Dirichlet x-edges into tmp
+                                    dst[0] = center[0];
+                                    dst[nx - 1] = center[nx - 1];
+                                }
+                                jacobi_line_update(
+                                    dst,
+                                    center,
+                                    std::slice::from_raw_parts(zc.add((j - 1) * nx), nx),
+                                    std::slice::from_raw_parts(zc.add((j + 1) * nx), nx),
+                                    std::slice::from_raw_parts(zm.add(j * nx), nx),
+                                    std::slice::from_raw_parts(zp.add(j * nx), nx),
+                                    std::slice::from_raw_parts(f_base.add((k * ny + j) * nx), nx),
+                                    h2,
+                                );
+                            }
+                        }
+                        progress[s].store(k as isize, Ordering::Release);
+                    }
+                    if cfg.sync == SyncMode::Barrier {
+                        barrier.wait(s);
+                    }
+                }
+            });
+        }
+    });
+    Ok(())
+}
+
+/// Run `iters` updates (a multiple of `cfg.threads`) via repeated passes.
+pub fn wavefront_jacobi_iters(
+    u: &mut Grid3,
+    f: &Grid3,
+    h2: f64,
+    cfg: &WavefrontConfig,
+    iters: usize,
+) -> Result<()> {
+    anyhow::ensure!(
+        iters % cfg.threads == 0,
+        "iters ({iters}) must be a multiple of the blocking factor ({})",
+        cfg.threads
+    );
+    for _ in 0..iters / cfg.threads {
+        wavefront_jacobi(u, f, h2, cfg)?;
+    }
+    Ok(())
+}
+
+/// Reference: `n` serial Jacobi sweeps, returning the result.
+pub fn serial_reference(u: &Grid3, f: &Grid3, h2: f64, n: usize) -> Grid3 {
+    let mut a = u.clone();
+    let mut b = u.clone();
+    for _ in 0..n {
+        jacobi_sweep(&mut b, &a, f, h2);
+        std::mem::swap(&mut a, &mut b);
+    }
+    a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check(nz: usize, ny: usize, nx: usize, t: usize, sync: SyncMode, barrier: BarrierKind) {
+        let f = Grid3::random(nz, ny, nx, 77);
+        let mut u = Grid3::random(nz, ny, nx, 42);
+        let want = serial_reference(&u, &f, 0.8, t);
+        let cfg = WavefrontConfig { threads: t, barrier, sync };
+        wavefront_jacobi(&mut u, &f, 0.8, &cfg).unwrap();
+        assert_eq!(
+            u.max_abs_diff(&want),
+            0.0,
+            "bit-exactness {nz}x{ny}x{nx} t={t} {sync:?} {barrier:?}"
+        );
+    }
+
+    #[test]
+    fn bit_identical_to_serial_t2() {
+        check(12, 9, 11, 2, SyncMode::Barrier, BarrierKind::Spin);
+        check(12, 9, 11, 2, SyncMode::Flow, BarrierKind::Spin);
+    }
+
+    #[test]
+    fn bit_identical_to_serial_t4() {
+        check(16, 10, 12, 4, SyncMode::Barrier, BarrierKind::Spin);
+        check(16, 10, 12, 4, SyncMode::Flow, BarrierKind::Spin);
+        check(16, 10, 12, 4, SyncMode::Barrier, BarrierKind::Tree);
+    }
+
+    #[test]
+    fn bit_identical_to_serial_t6_t8() {
+        check(20, 8, 9, 6, SyncMode::Barrier, BarrierKind::Spin);
+        check(22, 7, 9, 8, SyncMode::Flow, BarrierKind::Spin);
+        check(22, 7, 9, 8, SyncMode::Barrier, BarrierKind::Tree);
+    }
+
+    #[test]
+    fn small_grids_where_wavefronts_overlap_fully() {
+        // nz-2 < 2t: every thread is inside the pipeline fill/drain region.
+        check(5, 6, 6, 4, SyncMode::Barrier, BarrierKind::Spin);
+        check(4, 5, 5, 6, SyncMode::Flow, BarrierKind::Spin);
+        check(3, 4, 4, 2, SyncMode::Barrier, BarrierKind::Spin);
+    }
+
+    #[test]
+    fn odd_thread_count_rejected() {
+        let mut u = Grid3::random(8, 8, 8, 1);
+        let f = Grid3::zeros(8, 8, 8);
+        let cfg = WavefrontConfig { threads: 3, ..Default::default() };
+        assert!(wavefront_jacobi(&mut u, &f, 1.0, &cfg).is_err());
+    }
+
+    #[test]
+    fn iters_multiple_passes() {
+        let f = Grid3::random(10, 8, 8, 5);
+        let mut u = Grid3::random(10, 8, 8, 6);
+        let want = serial_reference(&u, &f, 1.0, 8);
+        let cfg = WavefrontConfig { threads: 4, ..Default::default() };
+        wavefront_jacobi_iters(&mut u, &f, 1.0, &cfg, 8).unwrap();
+        assert_eq!(u.max_abs_diff(&want), 0.0);
+        // non-multiple is an error
+        let mut v = Grid3::random(10, 8, 8, 6);
+        assert!(wavefront_jacobi_iters(&mut v, &f, 1.0, &cfg, 6).is_err());
+    }
+
+    #[test]
+    fn degenerate_grid_is_identity() {
+        let mut u = Grid3::random(2, 6, 6, 9);
+        let orig = u.clone();
+        let f = Grid3::zeros(2, 6, 6);
+        wavefront_jacobi(&mut u, &f, 1.0, &WavefrontConfig::default()).unwrap();
+        assert_eq!(u, orig);
+    }
+}

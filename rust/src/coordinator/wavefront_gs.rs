@@ -1,0 +1,200 @@
+//! Wavefront temporal blocking for Gauss-Seidel (paper Sec. 4, Fig. 5b).
+//!
+//! The adaptation of the wavefront scheme to the in-place GS method: since
+//! all updates operate on one array, no temporary planes are needed at
+//! all. A pass runs `S` complete sweeps through the grid *simultaneously*:
+//! sweep `s` (a thread group, itself pipeline-parallel over y as in
+//! Fig. 5a) trails sweep `s-1` in z so that when it updates plane `k`,
+//! plane `k+1` already carries post-sweep-`s-1` values and plane `k-1`
+//! carries its own freshly written values — the exact lexicographic
+//! semantics, `S` times, in one traversal of memory.
+//!
+//! Dependencies enforced by the progress protocol:
+//! * pipeline (within sweep `s`): thread `p` starts plane `k` after thread
+//!   `p-1` finishes plane `k`;
+//! * wavefront (between sweeps): sweep `s` starts plane `k` after *all*
+//!   threads of sweep `s-1` finish plane `k+1`.
+//!
+//! Bit-identical to `S` serial sweeps — asserted by tests for all shapes,
+//! group counts and pipeline widths.
+
+use std::sync::atomic::{AtomicIsize, Ordering};
+
+use crate::stencil::gauss_seidel::{gs_plane_line_raw, gs_sweep, GsKernel};
+use crate::stencil::grid::Grid3;
+use crate::Result;
+
+use super::pipeline::chunk_lines;
+
+/// Configuration of a GS wavefront pass.
+#[derive(Clone, Copy, Debug)]
+pub struct GsWavefrontConfig {
+    /// Simultaneous sweeps `S` = temporal blocking factor = thread groups.
+    pub sweeps: usize,
+    /// Threads per group (pipeline width over y). With SMT the paper runs
+    /// two logical threads per core here.
+    pub threads_per_group: usize,
+    pub kernel: GsKernel,
+}
+
+impl Default for GsWavefrontConfig {
+    fn default() -> Self {
+        Self { sweeps: 4, threads_per_group: 1, kernel: GsKernel::Interleaved }
+    }
+}
+
+#[derive(Clone, Copy)]
+struct SharedPtr(*mut f64);
+unsafe impl Send for SharedPtr {}
+unsafe impl Sync for SharedPtr {}
+
+impl SharedPtr {
+    /// Accessor (method, not field) so closures capture the whole wrapper
+    /// — RFC 2229 disjoint capture would otherwise capture the bare
+    /// pointer, which is not `Send`.
+    #[inline(always)]
+    fn get(self) -> *mut f64 {
+        self.0
+    }
+}
+
+/// Run `cfg.sweeps` lexicographic GS sweeps in one wavefront pass.
+pub fn wavefront_gs(u: &mut Grid3, cfg: &GsWavefrontConfig) -> Result<()> {
+    let s_count = cfg.sweeps;
+    let width = cfg.threads_per_group;
+    anyhow::ensure!(s_count >= 1, "need at least one sweep");
+    anyhow::ensure!(width >= 1, "need at least one thread per group");
+    let (nz, ny, nx) = u.shape();
+    if nz < 3 || ny < 3 || nx < 3 {
+        return Ok(());
+    }
+    if s_count == 1 && width == 1 {
+        gs_sweep(u, cfg.kernel);
+        return Ok(());
+    }
+
+    let chunks = chunk_lines(ny, width);
+    // progress[s * width + p] = last plane completed by thread p of sweep s
+    let progress: Vec<AtomicIsize> =
+        (0..s_count * width).map(|_| AtomicIsize::new(0)).collect();
+    let base = SharedPtr(u.data_mut().as_mut_ptr());
+    let kernel = cfg.kernel;
+
+    std::thread::scope(|scope| {
+        for s in 0..s_count {
+            for (p, &(j0, j1)) in chunks.iter().enumerate() {
+                let progress = &progress;
+                let ptr = base;
+                scope.spawn(move || {
+                    for k in 1..nz - 1 {
+                        // wavefront dependency: previous sweep fully past
+                        // plane k+1 (so k+1 holds post-sweep-(s-1) values
+                        // and nobody still reads our plane k).
+                        if s > 0 {
+                            let need = (k + 1).min(nz - 2) as isize;
+                            for q in 0..width {
+                                super::barrier::spin_wait(|| {
+                                    progress[(s - 1) * width + q].load(Ordering::Acquire) >= need
+                                });
+                            }
+                        }
+                        // pipeline dependency within the sweep.
+                        if p > 0 {
+                            super::barrier::spin_wait(|| {
+                                progress[s * width + p - 1].load(Ordering::Acquire) >= k as isize
+                            });
+                        }
+                        // SAFETY: plane/chunk exclusivity by the protocol
+                        // above; neighbor lines are only read in states the
+                        // protocol freezes (see module docs).
+                        unsafe {
+                            for j in j0..j1 {
+                                gs_plane_line_raw(ptr.get(), ny, nx, k, j, kernel);
+                            }
+                        }
+                        progress[s * width + p].store(k as isize, Ordering::Release);
+                    }
+                });
+            }
+        }
+    });
+    Ok(())
+}
+
+/// `iters` sweeps via passes of `cfg.sweeps` each (+ a remainder pass).
+pub fn wavefront_gs_iters(u: &mut Grid3, cfg: &GsWavefrontConfig, iters: usize) -> Result<()> {
+    let full = iters / cfg.sweeps;
+    for _ in 0..full {
+        wavefront_gs(u, cfg)?;
+    }
+    let rest = iters % cfg.sweeps;
+    if rest > 0 {
+        let tail = GsWavefrontConfig { sweeps: rest, ..*cfg };
+        wavefront_gs(u, &tail)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stencil::gauss_seidel::gs_sweeps;
+
+    fn check(nz: usize, ny: usize, nx: usize, sweeps: usize, width: usize) {
+        let mut u = Grid3::random(nz, ny, nx, 123);
+        let mut want = u.clone();
+        gs_sweeps(&mut want, sweeps, GsKernel::Interleaved);
+        let cfg = GsWavefrontConfig { sweeps, threads_per_group: width, kernel: GsKernel::Interleaved };
+        wavefront_gs(&mut u, &cfg).unwrap();
+        assert_eq!(
+            u.max_abs_diff(&want),
+            0.0,
+            "{nz}x{ny}x{nx} S={sweeps} width={width}"
+        );
+    }
+
+    #[test]
+    fn single_sweep_single_thread_is_serial() {
+        check(8, 8, 8, 1, 1);
+    }
+
+    #[test]
+    fn pure_temporal_wavefront() {
+        // groups of one thread each — the Fig. 5b shifts in isolation
+        for s in [2, 3, 4, 6] {
+            check(14, 9, 8, s, 1);
+        }
+    }
+
+    #[test]
+    fn pipelined_groups() {
+        // sweeps × pipeline width — the full Fig. 5b composition
+        check(10, 12, 8, 2, 2);
+        check(10, 12, 8, 4, 2);
+        check(8, 16, 8, 2, 4);
+        check(8, 10, 8, 3, 3);
+    }
+
+    #[test]
+    fn smt_like_oversubscription() {
+        // more logical threads than this box has cores: 8 × 2 = 16 threads
+        check(9, 18, 8, 8, 2);
+    }
+
+    #[test]
+    fn more_sweeps_than_planes() {
+        // pathological: pipeline longer than the z extent
+        check(4, 6, 6, 6, 1);
+        check(3, 5, 5, 4, 2);
+    }
+
+    #[test]
+    fn iters_with_remainder() {
+        let mut u = Grid3::random(9, 9, 9, 7);
+        let mut want = u.clone();
+        gs_sweeps(&mut want, 7, GsKernel::Interleaved);
+        let cfg = GsWavefrontConfig { sweeps: 3, threads_per_group: 2, kernel: GsKernel::Interleaved };
+        wavefront_gs_iters(&mut u, &cfg, 7).unwrap();
+        assert_eq!(u.max_abs_diff(&want), 0.0);
+    }
+}

@@ -1,0 +1,377 @@
+//! Regenerators for every table and figure of the paper's evaluation.
+//!
+//! Each `figN*` function returns structured rows (testable) and the CLI
+//! renders them as aligned text tables. Absolute MLUP/s live on the
+//! simulator substrate (DESIGN.md §2), so what must match the paper is the
+//! *shape*: who wins, by what factor, where the crossovers fall — asserted
+//! in `rust/tests/figures.rs`.
+
+
+use crate::simulator::ecm::{EcmModel, Kernel};
+use crate::simulator::machine::MachineSpec;
+use crate::simulator::memory::{Dataset, StoreMode};
+use crate::simulator::perfmodel::{
+    self, eq1_limit_mlups, BarrierKind, WavefrontParams,
+};
+use crate::simulator::stream;
+
+/// The paper's serial-baseline domain sizes (Fig. 3 caption).
+pub const CACHE_SIZE: (usize, usize, usize) = (100, 50, 50);
+pub const MEMORY_SIZE: (usize, usize, usize) = (400, 200, 200);
+/// Threaded-baseline reference size (Figs. 8–10 right axis).
+pub const BASELINE_SIZE: (usize, usize, usize) = (200, 200, 200);
+/// Problem-size sweep of the wavefront figures (cubic N³).
+pub const SWEEP_SIZES: [usize; 8] = [120, 160, 200, 240, 280, 320, 360, 400];
+
+/// One machine's row in a baseline figure.
+#[derive(Clone, Debug)]
+pub struct BaselineRow {
+    pub machine: String,
+    pub c_cache: f64,
+    pub c_memory: f64,
+    pub opt_cache: f64,
+    pub opt_memory: f64,
+    /// Eq. (1) bandwidth ceiling (threaded figures only; 0 for serial).
+    pub eq1_limit: f64,
+}
+
+/// One point of a wavefront sweep figure.
+#[derive(Clone, Debug)]
+pub struct WavefrontPoint {
+    pub machine: String,
+    pub n: usize,
+    pub wavefront_mlups: f64,
+    pub baseline_mlups: f64,
+    pub speedup: f64,
+    pub blocking_factor: usize,
+}
+
+/// Tab. 1 — machine specs and STREAM bandwidths.
+pub fn tab1() -> Vec<stream::StreamRow> {
+    stream::tab1_rows()
+}
+
+/// Fig. 3(a) — serial Jacobi, C vs optimized kernel, cache vs memory.
+pub fn fig3a() -> Vec<BaselineRow> {
+    MachineSpec::testbed()
+        .into_iter()
+        .map(|m| {
+            let e = EcmModel::new(m.clone());
+            BaselineRow {
+                machine: m.name,
+                c_cache: e.serial(Kernel::JacobiC, Dataset::Cache, StoreMode::WriteAllocate),
+                c_memory: e.serial(Kernel::JacobiC, Dataset::Memory, StoreMode::WriteAllocate),
+                opt_cache: e.serial(Kernel::JacobiOpt, Dataset::Cache, StoreMode::NonTemporal),
+                opt_memory: e.serial(Kernel::JacobiOpt, Dataset::Memory, StoreMode::NonTemporal),
+                eq1_limit: 0.0,
+            }
+        })
+        .collect()
+}
+
+/// Fig. 3(b) — threaded socket Jacobi vs the Eq. (1) limit.
+pub fn fig3b() -> Vec<BaselineRow> {
+    MachineSpec::testbed()
+        .into_iter()
+        .map(|m| {
+            let e = EcmModel::new(m.clone());
+            let n = m.cores;
+            BaselineRow {
+                eq1_limit: eq1_limit_mlups(&m, Kernel::JacobiOpt),
+                c_cache: e.socket(Kernel::JacobiC, Dataset::Cache, StoreMode::WriteAllocate, n, false).mlups,
+                c_memory: e.socket(Kernel::JacobiC, Dataset::Memory, StoreMode::WriteAllocate, n, false).mlups,
+                opt_cache: e.socket(Kernel::JacobiOpt, Dataset::Cache, StoreMode::NonTemporal, n, false).mlups,
+                opt_memory: e.socket(Kernel::JacobiOpt, Dataset::Memory, StoreMode::NonTemporal, n, false).mlups,
+                machine: m.name,
+            }
+        })
+        .collect()
+}
+
+/// Fig. 4(a) — serial Gauss-Seidel (C without the dependency optimization).
+pub fn fig4a() -> Vec<BaselineRow> {
+    MachineSpec::testbed()
+        .into_iter()
+        .map(|m| {
+            let e = EcmModel::new(m.clone());
+            BaselineRow {
+                machine: m.name,
+                c_cache: e.serial(Kernel::GsC, Dataset::Cache, StoreMode::WriteAllocate),
+                c_memory: e.serial(Kernel::GsC, Dataset::Memory, StoreMode::WriteAllocate),
+                opt_cache: e.serial(Kernel::GsOpt, Dataset::Cache, StoreMode::WriteAllocate),
+                opt_memory: e.serial(Kernel::GsOpt, Dataset::Memory, StoreMode::WriteAllocate),
+                eq1_limit: 0.0,
+            }
+        })
+        .collect()
+}
+
+/// Fig. 4(b) — threaded pipeline-parallel GS vs the noNT Eq. (1) limit.
+pub fn fig4b() -> Vec<BaselineRow> {
+    MachineSpec::testbed()
+        .into_iter()
+        .map(|m| {
+            let e = EcmModel::new(m.clone());
+            let n = m.cores;
+            BaselineRow {
+                eq1_limit: eq1_limit_mlups(&m, Kernel::GsOpt),
+                c_cache: e.socket(Kernel::GsC, Dataset::Cache, StoreMode::WriteAllocate, n, false).mlups,
+                c_memory: e.socket(Kernel::GsC, Dataset::Memory, StoreMode::WriteAllocate, n, false).mlups,
+                opt_cache: e.socket(Kernel::GsOpt, Dataset::Cache, StoreMode::WriteAllocate, n, false).mlups,
+                opt_memory: e.socket(Kernel::GsOpt, Dataset::Memory, StoreMode::WriteAllocate, n, false).mlups,
+                machine: m.name,
+            }
+        })
+        .collect()
+}
+
+fn wavefront_sweep(kernel: Kernel, smt: bool) -> Vec<WavefrontPoint> {
+    let mut out = Vec::new();
+    for m in MachineSpec::testbed() {
+        if smt && m.smt_per_core < 2 {
+            continue; // Fig. 10 has no Core 2 / Istanbul SMT curves
+        }
+        let params = WavefrontParams::standard(&m, kernel, smt);
+        let store = if kernel.is_gs() { StoreMode::WriteAllocate } else { StoreMode::NonTemporal };
+        let base = perfmodel::baseline_threaded(&m, kernel, store).mlups;
+        for n in SWEEP_SIZES {
+            let p = perfmodel::wavefront_prediction(&m, &params, (n, n, n));
+            out.push(WavefrontPoint {
+                machine: m.name.clone(),
+                n,
+                wavefront_mlups: p.mlups,
+                baseline_mlups: base,
+                speedup: p.mlups / base,
+                blocking_factor: params.t,
+            });
+        }
+    }
+    out
+}
+
+/// Fig. 8 — Jacobi wavefront blocking vs problem size, all machines.
+pub fn fig8() -> Vec<WavefrontPoint> {
+    wavefront_sweep(Kernel::JacobiOpt, false)
+}
+
+/// Fig. 9 — Gauss-Seidel wavefront blocking vs problem size.
+pub fn fig9() -> Vec<WavefrontPoint> {
+    wavefront_sweep(Kernel::GsOpt, false)
+}
+
+/// Fig. 10 — Gauss-Seidel wavefront with SMT (Nehalem machines only).
+pub fn fig10() -> Vec<WavefrontPoint> {
+    wavefront_sweep(Kernel::GsOpt, true)
+}
+
+/// Barrier-cost ablation (Sec. 4's synchronization discussion).
+#[derive(Clone, Debug)]
+pub struct BarrierRow {
+    pub threads: usize,
+    pub pthread_cycles: f64,
+    pub spin_cycles: f64,
+    pub tree_cycles: f64,
+    pub spin_cycles_smt: f64,
+    pub tree_cycles_smt: f64,
+}
+
+pub fn barrier_table() -> Vec<BarrierRow> {
+    [2usize, 4, 6, 8, 12, 16]
+        .into_iter()
+        .map(|t| BarrierRow {
+            threads: t,
+            pthread_cycles: BarrierKind::Pthread.cycles(t, false),
+            spin_cycles: BarrierKind::Spin.cycles(t, false),
+            tree_cycles: BarrierKind::Tree.cycles(t, false),
+            spin_cycles_smt: BarrierKind::Spin.cycles(t, true),
+            tree_cycles_smt: BarrierKind::Tree.cycles(t, true),
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------- rendering
+
+fn fmt_row(cells: &[String], widths: &[usize]) -> String {
+    cells
+        .iter()
+        .zip(widths)
+        .map(|(c, w)| format!("{c:>w$}"))
+        .collect::<Vec<_>>()
+        .join("  ")
+}
+
+/// Render a baseline figure as an aligned text table.
+pub fn render_baseline(title: &str, rows: &[BaselineRow], threaded: bool) -> String {
+    let mut out = format!("## {title}\n\n");
+    let mut header = vec![
+        "machine".to_string(),
+        "C cache".into(),
+        "C memory".into(),
+        "opt cache".into(),
+        "opt memory".into(),
+    ];
+    if threaded {
+        header.push("Eq.(1) limit".into());
+    }
+    let widths: Vec<usize> = header.iter().map(|h| h.len().max(12)).collect();
+    out += &fmt_row(&header, &widths);
+    out.push('\n');
+    for r in rows {
+        let mut cells = vec![
+            r.machine.clone(),
+            format!("{:.0}", r.c_cache),
+            format!("{:.0}", r.c_memory),
+            format!("{:.0}", r.opt_cache),
+            format!("{:.0}", r.opt_memory),
+        ];
+        if threaded {
+            cells.push(format!("{:.0}", r.eq1_limit));
+        }
+        out += &fmt_row(&cells, &widths);
+        out.push('\n');
+    }
+    out += "\n(all values in MLUP/s)\n";
+    out
+}
+
+/// Render a wavefront sweep figure.
+pub fn render_wavefront(title: &str, points: &[WavefrontPoint]) -> String {
+    let mut out = format!("## {title}\n\n");
+    let header: Vec<String> = ["machine", "N", "t", "wavefront", "baseline", "speedup"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    let widths = [12usize, 5, 3, 12, 12, 8];
+    out += &fmt_row(&header, &widths);
+    out.push('\n');
+    for p in points {
+        out += &fmt_row(
+            &[
+                p.machine.clone(),
+                p.n.to_string(),
+                p.blocking_factor.to_string(),
+                format!("{:.0}", p.wavefront_mlups),
+                format!("{:.0}", p.baseline_mlups),
+                format!("{:.2}x", p.speedup),
+            ],
+            &widths,
+        );
+        out.push('\n');
+    }
+    out += "\n(MLUP/s; baseline = threaded 200^3 without temporal blocking)\n";
+    out
+}
+
+/// Render Tab. 1.
+pub fn render_tab1(rows: &[stream::StreamRow]) -> String {
+    let mut out = String::from("## Tab. 1 — testbed bandwidths (modeled)\n\n");
+    let header: Vec<String> =
+        ["machine", "theoretical", "STREAM 1T", "socket NT", "socket noNT", "NT eff"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+    let widths = [12usize, 12, 12, 12, 12, 8];
+    out += &fmt_row(&header, &widths);
+    out.push('\n');
+    for r in rows {
+        out += &fmt_row(
+            &[
+                r.machine.clone(),
+                format!("{:.1}", r.bw_theoretical_gbs),
+                format!("{:.1}", r.stream_1t_gbs),
+                format!("{:.1}", r.stream_socket_nt_gbs),
+                format!("{:.1}", r.stream_socket_nont_gbs),
+                format!("{:.0}%", r.nt_efficiency * 100.0),
+            ],
+            &widths,
+        );
+        out.push('\n');
+    }
+    out += "\n(GB/s; noNT row counts write-allocate bus traffic, as in the paper)\n";
+    out
+}
+
+/// Render the barrier ablation.
+pub fn render_barriers(rows: &[BarrierRow]) -> String {
+    let mut out = String::from("## Barrier cost model (cycles per synchronization)\n\n");
+    let header: Vec<String> =
+        ["threads", "pthread", "spin", "tree", "spin+SMT", "tree+SMT"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+    let widths = [8usize; 6];
+    out += &fmt_row(&header, &widths.to_vec());
+    out.push('\n');
+    for r in rows {
+        out += &fmt_row(
+            &[
+                r.threads.to_string(),
+                format!("{:.0}", r.pthread_cycles),
+                format!("{:.0}", r.spin_cycles),
+                format!("{:.0}", r.tree_cycles),
+                format!("{:.0}", r.spin_cycles_smt),
+                format!("{:.0}", r.tree_cycles_smt),
+            ],
+            &widths.to_vec(),
+        );
+        out.push('\n');
+    }
+    out
+}
+
+/// Render any figure by id ("tab1", "fig3a", … "fig10", "barrier").
+pub fn render(id: &str) -> Option<String> {
+    Some(match id {
+        "tab1" => render_tab1(&tab1()),
+        "fig3a" => render_baseline("Fig. 3(a) — serial Jacobi baseline", &fig3a(), false),
+        "fig3b" => render_baseline("Fig. 3(b) — threaded socket Jacobi", &fig3b(), true),
+        "fig4a" => render_baseline("Fig. 4(a) — serial Gauss-Seidel baseline", &fig4a(), false),
+        "fig4b" => render_baseline("Fig. 4(b) — threaded pipelined Gauss-Seidel", &fig4b(), true),
+        "fig8" => render_wavefront("Fig. 8 — Jacobi wavefront temporal blocking", &fig8()),
+        "fig9" => render_wavefront("Fig. 9 — Gauss-Seidel wavefront temporal blocking", &fig9()),
+        "fig10" => render_wavefront("Fig. 10 — Gauss-Seidel wavefront with SMT", &fig10()),
+        "barrier" => render_barriers(&barrier_table()),
+        _ => return None,
+    })
+}
+
+/// Every figure id in paper order.
+pub const ALL_FIGURES: [&str; 9] =
+    ["tab1", "fig3a", "fig3b", "fig4a", "fig4b", "fig8", "fig9", "fig10", "barrier"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_figures_render() {
+        for id in ALL_FIGURES {
+            let text = render(id).unwrap();
+            assert!(text.len() > 100, "{id} too short");
+        }
+        assert!(render("fig99").is_none());
+    }
+
+    #[test]
+    fn fig3a_has_five_machines() {
+        assert_eq!(fig3a().len(), 5);
+        assert_eq!(fig4b().len(), 5);
+    }
+
+    #[test]
+    fn fig10_excludes_non_smt_machines() {
+        let pts = fig10();
+        assert!(pts.iter().all(|p| p.machine != "Core 2" && p.machine != "Istanbul"));
+        assert_eq!(pts.len(), 3 * SWEEP_SIZES.len());
+    }
+
+    #[test]
+    fn sweeps_cover_all_sizes() {
+        let pts = fig8();
+        assert_eq!(pts.len(), 5 * SWEEP_SIZES.len());
+        for p in &pts {
+            assert!(p.wavefront_mlups > 0.0);
+            assert!(p.speedup > 0.5, "{}: {}", p.machine, p.speedup);
+        }
+    }
+}

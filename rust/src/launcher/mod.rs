@@ -1,0 +1,243 @@
+//! Experiment launcher: run configs on the host, predict on the testbed.
+//!
+//! Every experiment has two legs:
+//! * **execute** — run the configured schedule for real on this box with
+//!   real threads and real barriers, measure MLUP/s, and *verify* the
+//!   result grid against the serial reference (numerical exactness is
+//!   checked on every launch, not only in tests);
+//! * **predict** — evaluate the same configuration on a Tab. 1 machine
+//!   model, yielding the MLUP/s the paper's testbed would see.
+//!
+//! The CLI (`stencilwave run|sweep`) and the figure regenerators are thin
+//! wrappers over this module. Sweeps fan out over scoped threads so a
+//! parameter grid keeps the host busy end to end.
+
+
+use crate::config::{RunConfig, Scheme};
+use crate::coordinator::pipeline::{pipeline_gs_sweeps, PipelineConfig};
+use crate::coordinator::wavefront::{wavefront_jacobi_iters, SyncMode, WavefrontConfig};
+use crate::coordinator::wavefront_gs::{wavefront_gs_iters, GsWavefrontConfig};
+use crate::metrics::{mlups, timed};
+use crate::simulator::ecm::{EcmModel, Prediction};
+use crate::simulator::memory::Dataset;
+use crate::simulator::perfmodel::{wavefront_prediction, WavefrontParams};
+use crate::stencil::gauss_seidel::{gs_sweeps, GsKernel};
+use crate::stencil::grid::Grid3;
+use crate::stencil::jacobi::jacobi_steps;
+use crate::Result;
+
+/// Outcome of one launched experiment.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub scheme: Scheme,
+    pub size: (usize, usize, usize),
+    pub iters: usize,
+    pub t: usize,
+    pub groups: usize,
+    /// Measured on this host (functional leg).
+    pub host_mlups: f64,
+    pub host_seconds: f64,
+    /// Max |diff| against the serial reference (must be 0.0).
+    pub verification_diff: f64,
+    /// Modeled performance on the requested Tab. 1 machine, if any.
+    pub predicted_mlups: Option<f64>,
+    pub machine: Option<String>,
+}
+
+/// Execute one configuration: real run + verification + prediction.
+pub fn run_experiment(cfg: &RunConfig) -> Result<RunReport> {
+    cfg.validate()?;
+    let (nz, ny, nx) = cfg.size;
+    let kernel = if cfg.optimized_kernel { GsKernel::Interleaved } else { GsKernel::Naive };
+    let f = Grid3::random(nz, ny, nx, 7);
+    let u0 = Grid3::random(nz, ny, nx, 8);
+    let h2 = 1.0;
+
+    // ---- functional leg on the host
+    let mut u = u0.clone();
+    let (res, dt) = timed(|| -> Result<()> {
+        match cfg.scheme {
+            Scheme::JacobiBaseline => {
+                u = jacobi_steps(&u0, &f, h2, cfg.iters);
+                Ok(())
+            }
+            Scheme::JacobiWavefront => {
+                let wf = WavefrontConfig {
+                    threads: cfg.t,
+                    barrier: cfg.barrier,
+                    sync: SyncMode::Barrier,
+                };
+                wavefront_jacobi_iters(&mut u, &f, h2, &wf, cfg.iters)
+            }
+            Scheme::GsBaseline => {
+                let p = PipelineConfig { threads: cfg.t, kernel };
+                pipeline_gs_sweeps(&mut u, &p, cfg.iters)
+            }
+            Scheme::GsWavefront => {
+                let w = GsWavefrontConfig {
+                    sweeps: cfg.t,
+                    threads_per_group: cfg.groups,
+                    kernel,
+                };
+                wavefront_gs_iters(&mut u, &w, cfg.iters)
+            }
+        }
+    });
+    res?;
+
+    // ---- verification against the serial reference
+    let reference = if cfg.scheme.is_gs() {
+        let mut r = u0.clone();
+        gs_sweeps(&mut r, cfg.iters, kernel);
+        r
+    } else {
+        jacobi_steps(&u0, &f, h2, cfg.iters)
+    };
+    let diff = u.max_abs_diff(&reference);
+
+    // ---- prediction leg on the paper testbed
+    let predicted = cfg.machine_spec().map(|m| {
+        let kernel = cfg.scheme.kernel(cfg.optimized_kernel);
+        match cfg.scheme {
+            Scheme::JacobiWavefront | Scheme::GsWavefront => {
+                let p = WavefrontParams {
+                    t: cfg.t,
+                    groups: cfg.groups,
+                    smt: cfg.smt,
+                    kernel,
+                    store: cfg.store_mode(),
+                    barrier: cfg.barrier,
+                };
+                wavefront_prediction(&m, &p, cfg.size).mlups
+            }
+            Scheme::JacobiBaseline | Scheme::GsBaseline => {
+                let e = EcmModel::new(m.clone());
+                let pred: Prediction = e.socket(
+                    kernel,
+                    Dataset::Memory,
+                    cfg.store_mode(),
+                    m.socket_threads(cfg.smt),
+                    cfg.smt,
+                );
+                pred.mlups
+            }
+        }
+    });
+
+    let updates = (u0.interior_len() * cfg.iters) as u64;
+    Ok(RunReport {
+        scheme: cfg.scheme,
+        size: cfg.size,
+        iters: cfg.iters,
+        t: cfg.t,
+        groups: cfg.groups,
+        host_mlups: mlups(updates, dt),
+        host_seconds: dt.as_secs_f64(),
+        verification_diff: diff,
+        predicted_mlups: predicted,
+        machine: cfg.machine.clone(),
+    })
+}
+
+/// Run a set of configurations, one scoped thread each.
+///
+/// Experiments already saturate the host with their own thread teams, so
+/// the sweep runs them with modest outer concurrency: chunks of
+/// `max_parallel` at a time (1 = fully sequential, the default for
+/// benchmarking; larger for functional sweeps).
+pub fn sweep(configs: Vec<RunConfig>, max_parallel: usize) -> Vec<Result<RunReport>> {
+    let max_parallel = max_parallel.max(1);
+    let mut out = Vec::with_capacity(configs.len());
+    for chunk in configs.chunks(max_parallel) {
+        let mut results: Vec<Option<Result<RunReport>>> =
+            (0..chunk.len()).map(|_| None).collect();
+        std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for cfg in chunk {
+                handles.push(scope.spawn(move || run_experiment(cfg)));
+            }
+            for (slot, h) in results.iter_mut().zip(handles) {
+                *slot = Some(h.join().unwrap_or_else(|_| Err(anyhow::anyhow!("worker panicked"))));
+            }
+        });
+        out.extend(results.into_iter().map(|r| r.expect("filled")));
+    }
+    out
+}
+
+/// Render reports as a CSV block (one row per report).
+pub fn to_csv(reports: &[RunReport]) -> String {
+    let mut s = String::from(
+        "scheme,nz,ny,nx,iters,t,groups,host_mlups,verify_diff,machine,predicted_mlups\n",
+    );
+    for r in reports {
+        s += &format!(
+            "{:?},{},{},{},{},{},{},{:.2},{:.3e},{},{}\n",
+            r.scheme,
+            r.size.0,
+            r.size.1,
+            r.size.2,
+            r.iters,
+            r.t,
+            r.groups,
+            r.host_mlups,
+            r.verification_diff,
+            r.machine.as_deref().unwrap_or("-"),
+            r.predicted_mlups.map(|v| format!("{v:.0}")).unwrap_or_else(|| "-".into()),
+        );
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::perfmodel::BarrierKind;
+
+    fn cfg(scheme: Scheme) -> RunConfig {
+        RunConfig {
+            scheme,
+            size: (12, 12, 12),
+            t: 4,
+            groups: 2,
+            iters: 4,
+            smt: false,
+            optimized_kernel: true,
+            nt_stores: true,
+            barrier: BarrierKind::Spin,
+            machine: Some("Nehalem EP".into()),
+        }
+    }
+
+    #[test]
+    fn all_schemes_run_verified() {
+        for scheme in [
+            Scheme::JacobiBaseline,
+            Scheme::JacobiWavefront,
+            Scheme::GsBaseline,
+            Scheme::GsWavefront,
+        ] {
+            let report = run_experiment(&cfg(scheme)).unwrap();
+            assert_eq!(report.verification_diff, 0.0, "{scheme:?} must be exact");
+            assert!(report.host_mlups > 0.0);
+            assert!(report.predicted_mlups.unwrap() > 0.0);
+        }
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let r = run_experiment(&cfg(Scheme::JacobiBaseline)).unwrap();
+        let csv = to_csv(&[r]);
+        assert_eq!(csv.lines().count(), 2);
+        assert!(csv.starts_with("scheme,"));
+    }
+
+    #[test]
+    fn sweep_runs_all_configs() {
+        let reports = sweep(vec![cfg(Scheme::JacobiBaseline), cfg(Scheme::GsBaseline)], 2);
+        assert_eq!(reports.len(), 2);
+        for r in reports {
+            assert_eq!(r.unwrap().verification_diff, 0.0);
+        }
+    }
+}

@@ -1,0 +1,51 @@
+//! # stencilwave
+//!
+//! A reproduction of *"Efficient multicore-aware parallelization strategies
+//! for iterative stencil computations"* (Treibig, Wellein, Hager, 2010,
+//! DOI 10.1016/j.jocs.2011.01.010) as a three-layer rust + JAX + Pallas
+//! system.
+//!
+//! The paper's contribution — temporal blocking of Jacobi and Gauss-Seidel
+//! smoothers via *multicore-aware wavefront parallelization* — lives in
+//! [`coordinator`]: thread groups run time-shifted sweeps through the grid
+//! so intermediate updates stay in the shared outer-level cache, plus the
+//! pipeline-parallel scheme that extends it to the lexicographic
+//! Gauss-Seidel method and the SMT-aware synchronization primitives.
+//!
+//! Because the paper's evaluation is performance on five 2008–2010 x86
+//! sockets, [`simulator`] provides the testbed substrate: parameterized
+//! machine models (Tab. 1), an ECM-style analytic performance model
+//! (ref. [14] of the paper), a set-associative cache simulator driven by
+//! exact access traces, and a STREAM triad model for the Eq. (1) roofline.
+//!
+//! [`stencil`] holds the numerical substrate (grids, line-update kernels,
+//! residuals); [`runtime`] loads the AOT-compiled JAX/Pallas artifacts via
+//! PJRT and is the cross-layer validation oracle; [`config`], [`launcher`]
+//! and [`figures`] form the experiment harness that regenerates every
+//! table and figure of the paper.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use stencilwave::stencil::grid::Grid3;
+//! use stencilwave::coordinator::wavefront::{WavefrontConfig, wavefront_jacobi};
+//!
+//! let mut u = Grid3::from_fn(64, 64, 64, |k, j, i| (k + j + i) as f64);
+//! let f = Grid3::zeros(64, 64, 64);
+//! let cfg = WavefrontConfig { threads: 4, ..Default::default() };
+//! wavefront_jacobi(&mut u, &f, 1.0, &cfg).unwrap();
+//! ```
+
+pub mod benchkit;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod figures;
+pub mod launcher;
+pub mod metrics;
+pub mod runtime;
+pub mod simulator;
+pub mod stencil;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,199 @@
+//! `stencilwave` CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//! * `run`      — execute one experiment (config file or flags), verified
+//!                against the serial reference, with optional testbed
+//!                prediction.
+//! * `figures`  — regenerate any/all of the paper's tables and figures.
+//! * `stream`   — run the real STREAM triad on this host and show the
+//!                modeled Tab. 1 bandwidths next to it.
+//! * `validate` — cross-layer check: rust engine vs the AOT Pallas
+//!                artifacts via PJRT.
+//! * `machines` — list the modeled testbed.
+
+use stencilwave::cli::Args;
+use stencilwave::config::{RunConfig, Scheme};
+use stencilwave::figures;
+use stencilwave::launcher;
+use stencilwave::metrics;
+use stencilwave::runtime::{engine::validate, Manifest, Runtime};
+use stencilwave::simulator::machine::MachineSpec;
+use stencilwave::stencil::streambench::stream_triad;
+use stencilwave::Result;
+
+const USAGE: &str = "\
+stencilwave — multicore-aware wavefront parallelization for iterative
+stencil computations (Treibig, Wellein, Hager 2010)
+
+USAGE: stencilwave <COMMAND> [FLAGS]
+
+COMMANDS:
+  run        run one experiment
+               --config <file> | --scheme <s> --n <N> --t <T> --groups <G>
+               --iters <I> --machine <name> --csv
+               schemes: jacobi-baseline jacobi-wavefront gs-baseline gs-wavefront
+  figures    regenerate paper tables/figures
+               [id|all] --out-dir <dir>
+               ids: tab1 fig3a fig3b fig4a fig4b fig8 fig9 fig10 barrier
+  stream     host STREAM triad + modeled Tab. 1
+               --n <elements> --reps <R>
+  validate   cross-layer validation vs AOT artifacts
+               --artifact <name> --dir <artifacts-dir>
+  machines   list the modeled testbed
+";
+
+fn cmd_run(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "config", "scheme", "n", "t", "groups", "iters", "machine", "csv", "smt",
+    ])?;
+    let cfg = match args.get("config") {
+        Some(path) => RunConfig::load(std::path::Path::new(path))?,
+        None => {
+            let n = args.get_usize("n", 64)?;
+            RunConfig {
+                scheme: Scheme::parse(args.get("scheme").unwrap_or("jacobi-wavefront"))?,
+                size: (n, n, n),
+                t: args.get_usize("t", 4)?,
+                groups: args.get_usize("groups", 1)?,
+                iters: args.get_usize("iters", 4)?,
+                smt: args.get_bool("smt"),
+                machine: args.get("machine").map(|s| s.to_string()),
+                ..Default::default()
+            }
+        }
+    };
+    let report = launcher::run_experiment(&cfg)?;
+    if args.get_bool("csv") {
+        print!("{}", launcher::to_csv(&[report]));
+    } else {
+        println!(
+            "{:?} {:?} iters={} t={} groups={}",
+            report.scheme, report.size, report.iters, report.t, report.groups
+        );
+        println!(
+            "  host: {:.1} MLUP/s in {:.3}s  (verification max|diff| = {:.1e})",
+            report.host_mlups, report.host_seconds, report.verification_diff
+        );
+        if let (Some(m), Some(p)) = (&report.machine, report.predicted_mlups) {
+            println!("  model[{m}]: {p:.0} MLUP/s");
+        }
+        anyhow::ensure!(
+            report.verification_diff == 0.0,
+            "verification failed: schedules must be bit-exact"
+        );
+    }
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    args.check_known(&["out-dir"])?;
+    let id = args.positional(0).unwrap_or("all");
+    let ids: Vec<&str> =
+        if id == "all" { figures::ALL_FIGURES.to_vec() } else { vec![id] };
+    for id in ids {
+        let text = figures::render(id).ok_or_else(|| {
+            anyhow::anyhow!("unknown figure '{id}' (try: {:?})", figures::ALL_FIGURES)
+        })?;
+        match args.get("out-dir") {
+            Some(dir) => {
+                let dir = std::path::Path::new(dir);
+                std::fs::create_dir_all(dir)?;
+                let path = dir.join(format!("{id}.txt"));
+                std::fs::write(&path, &text)?;
+                println!("wrote {}", path.display());
+            }
+            None => println!("{text}"),
+        }
+    }
+    Ok(())
+}
+
+fn cmd_stream(args: &Args) -> Result<()> {
+    args.check_known(&["n", "reps"])?;
+    let n = args.get_usize("n", 1 << 22)?;
+    let reps = args.get_usize("reps", 5)?;
+    let (r, _) = metrics::timed(|| stream_triad(n, reps));
+    println!(
+        "host STREAM triad ({} MB working set): best {:.2} GB/s, mean {:.2} GB/s\n",
+        r.bytes / (1 << 20),
+        r.best_gbs,
+        r.mean_gbs
+    );
+    println!("{}", figures::render("tab1").unwrap());
+    Ok(())
+}
+
+fn cmd_validate(args: &Args) -> Result<()> {
+    args.check_known(&["artifact", "dir"])?;
+    let dir = args
+        .get("dir")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(Manifest::default_dir);
+    let mut rt = Runtime::load(&dir)?;
+    println!("PJRT platform: {}", rt.platform());
+    let names: Vec<String> = match args.get("artifact") {
+        Some(a) => vec![a.to_string()],
+        None => rt
+            .manifest()
+            .artifacts
+            .iter()
+            .filter(|a| matches!(a.scheme(), Some("jacobi") | Some("gauss_seidel")))
+            .map(|a| a.name.clone())
+            .collect(),
+    };
+    let mut failures = 0;
+    for name in names {
+        let v = validate(&mut rt, &name)?;
+        let status = if v.passed() { "OK " } else { "FAIL" };
+        println!(
+            "  [{status}] {:<36} max|rust - pallas| = {:.3e} (tol {:.1e})",
+            v.artifact, v.max_abs_diff, v.tolerance
+        );
+        if !v.passed() {
+            failures += 1;
+        }
+    }
+    anyhow::ensure!(failures == 0, "{failures} artifact(s) failed cross-layer validation");
+    Ok(())
+}
+
+fn cmd_machines() -> Result<()> {
+    for m in MachineSpec::testbed() {
+        println!(
+            "{:<12} {:<14} {} cores × {} SMT @ {:.2} GHz, OLC {} MB shared by {}, STREAM NT {:.1} GB/s",
+            m.name,
+            m.model,
+            m.cores,
+            m.smt_per_core,
+            m.clock_ghz,
+            m.olc_bytes() >> 20,
+            m.cache_group_cores(),
+            m.stream_socket_nt_gbs,
+        );
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = raw.first().map(|s| s.as_str()) else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let args = Args::parse(&raw[1..], &["csv", "smt"])?;
+    match cmd {
+        "run" => cmd_run(&args),
+        "figures" => cmd_figures(&args),
+        "stream" => cmd_stream(&args),
+        "validate" => cmd_validate(&args),
+        "machines" => cmd_machines(),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            eprint!("{USAGE}");
+            anyhow::bail!("unknown command '{other}'")
+        }
+    }
+}

@@ -1,0 +1,99 @@
+//! Measurement utilities: the MLUP/s metric, timers, simple statistics.
+//!
+//! The paper reports lattice-site updates per second (LUP/s, Sec. 3);
+//! every bench and example funnels through [`mlups`] so the unit is
+//! consistent across real runs and simulator predictions.
+
+use std::time::{Duration, Instant};
+
+/// Million lattice-site updates per second.
+pub fn mlups(updates: u64, elapsed: Duration) -> f64 {
+    updates as f64 / elapsed.as_secs_f64() / 1e6
+}
+
+/// Time a closure, returning `(result, elapsed)`.
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed())
+}
+
+/// Run `f` `reps` times, returning the minimum elapsed time (STREAM-style
+/// best-of-N, robust against scheduler noise on a busy box).
+pub fn best_of<T>(reps: usize, mut f: impl FnMut() -> T) -> (T, Duration) {
+    assert!(reps >= 1);
+    let (mut out, mut best) = timed(&mut f);
+    for _ in 1..reps {
+        let (r, dt) = timed(&mut f);
+        if dt < best {
+            best = dt;
+            out = r;
+        }
+    }
+    (out, best)
+}
+
+/// Online mean/min/max accumulator for series reporting.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Stats {
+    pub n: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Stats {
+    pub fn push(&mut self, v: f64) {
+        if self.n == 0 {
+            self.min = v;
+            self.max = v;
+        } else {
+            self.min = self.min.min(v);
+            self.max = self.max.max(v);
+        }
+        self.n += 1;
+        self.sum += v;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mlups_arithmetic() {
+        let p = mlups(2_000_000, Duration::from_secs(2));
+        assert!((p - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut s = Stats::default();
+        for v in [2.0, 4.0, 6.0] {
+            s.push(v);
+        }
+        assert_eq!(s.n, 3);
+        assert_eq!(s.min, 2.0);
+        assert_eq!(s.max, 6.0);
+        assert!((s.mean() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn best_of_returns_min() {
+        let mut calls = 0;
+        let (_, dt) = best_of(3, || {
+            calls += 1;
+            std::thread::sleep(Duration::from_millis(1));
+        });
+        assert_eq!(calls, 3);
+        assert!(dt >= Duration::from_millis(1));
+    }
+}

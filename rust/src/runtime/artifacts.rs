@@ -1,0 +1,180 @@
+//! The artifact manifest contract shared with `python/compile/aot.py`.
+
+use std::path::{Path, PathBuf};
+
+use crate::config::json::{self, Value};
+use crate::Result;
+
+/// Input tensor description.
+#[derive(Clone, Debug)]
+pub struct TensorInfo {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One AOT-compiled entry point.
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorInfo>,
+    pub n_outputs: usize,
+    /// Static parameters recorded at lowering time (h2, iters, scheme, …).
+    pub params: Value,
+}
+
+impl ArtifactInfo {
+    fn from_json(v: &Value) -> Result<Self> {
+        let name = v
+            .get("name")
+            .and_then(Value::as_str)
+            .ok_or_else(|| anyhow::anyhow!("artifact missing 'name'"))?
+            .to_string();
+        let file = v
+            .get("file")
+            .and_then(Value::as_str)
+            .ok_or_else(|| anyhow::anyhow!("{name}: missing 'file'"))?
+            .to_string();
+        let inputs = v
+            .get("inputs")
+            .and_then(Value::as_array)
+            .ok_or_else(|| anyhow::anyhow!("{name}: missing 'inputs'"))?
+            .iter()
+            .map(|t| -> Result<TensorInfo> {
+                let shape = t
+                    .get("shape")
+                    .and_then(Value::as_array)
+                    .ok_or_else(|| anyhow::anyhow!("{name}: input missing 'shape'"))?
+                    .iter()
+                    .map(|d| d.as_u64().map(|v| v as usize))
+                    .collect::<Option<Vec<_>>>()
+                    .ok_or_else(|| anyhow::anyhow!("{name}: non-integer dim"))?;
+                let dtype =
+                    t.get("dtype").and_then(Value::as_str).unwrap_or("f64").to_string();
+                Ok(TensorInfo { shape, dtype })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let n_outputs = v.get("n_outputs").and_then(Value::as_u64).unwrap_or(1) as usize;
+        let params = v.get("params").cloned().unwrap_or(Value::Null);
+        Ok(Self { name, file, inputs, n_outputs, params })
+    }
+
+    /// Grid shape of the first input `(nz, ny, nx)`.
+    pub fn grid_shape(&self) -> Option<(usize, usize, usize)> {
+        match self.inputs.first().map(|t| t.shape.as_slice()) {
+            Some([nz, ny, nx]) => Some((*nz, *ny, *nx)),
+            _ => None,
+        }
+    }
+
+    /// A named numeric parameter recorded at lowering time.
+    pub fn param_f64(&self, key: &str) -> Option<f64> {
+        self.params.get(key).and_then(Value::as_f64)
+    }
+
+    /// A named integer parameter.
+    pub fn param_usize(&self, key: &str) -> Option<usize> {
+        self.params.get(key).and_then(Value::as_u64).map(|v| v as usize)
+    }
+
+    /// The scheme tag ("jacobi" / "gauss_seidel" / "residual").
+    pub fn scheme(&self) -> Option<&str> {
+        self.params.get("scheme").and_then(Value::as_str)
+    }
+}
+
+/// The `artifacts/manifest.json` catalog.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dtype: String,
+    pub artifacts: Vec<ArtifactInfo>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Parse manifest JSON text.
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let v = json::parse(text)?;
+        let dtype = v.get("dtype").and_then(Value::as_str).unwrap_or("f64").to_string();
+        let artifacts = v
+            .get("artifacts")
+            .and_then(Value::as_array)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing 'artifacts'"))?
+            .iter()
+            .map(ArtifactInfo::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self { dtype, artifacts, dir: dir.to_path_buf() })
+    }
+
+    /// Load the manifest from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Default artifacts directory: `$STENCILWAVE_ARTIFACTS` or `artifacts/`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("STENCILWAVE_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// Find an artifact by name.
+    pub fn get(&self, name: &str) -> Option<&ArtifactInfo> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Absolute path of an artifact's HLO text file.
+    pub fn path_of(&self, a: &ArtifactInfo) -> PathBuf {
+        self.dir.join(&a.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_catalog_json() {
+        let text = r#"{
+            "dtype": "f64",
+            "artifacts": [{
+                "name": "jacobi_step_n16",
+                "file": "jacobi_step_n16.hlo.txt",
+                "inputs": [{"shape": [16,16,16], "dtype": "f64"},
+                           {"shape": [16,16,16], "dtype": "f64"}],
+                "n_outputs": 1,
+                "params": {"h2": 1.0, "iters": 1, "scheme": "jacobi"}
+            }]
+        }"#;
+        let m = Manifest::parse(text, Path::new("/tmp")).unwrap();
+        assert_eq!(m.dtype, "f64");
+        assert_eq!(m.artifacts.len(), 1);
+        let a = m.get("jacobi_step_n16").unwrap();
+        assert_eq!(a.grid_shape(), Some((16, 16, 16)));
+        assert_eq!(a.param_f64("h2"), Some(1.0));
+        assert_eq!(a.param_usize("iters"), Some(1));
+        assert_eq!(a.scheme(), Some("jacobi"));
+        assert_eq!(a.inputs.len(), 2);
+        assert!(m.get("nope").is_none());
+        assert_eq!(m.path_of(a), PathBuf::from("/tmp/jacobi_step_n16.hlo.txt"));
+    }
+
+    #[test]
+    fn missing_fields_are_errors() {
+        assert!(Manifest::parse(r#"{"dtype": "f64"}"#, Path::new(".")).is_err());
+        assert!(
+            Manifest::parse(r#"{"artifacts": [{"file": "x"}]}"#, Path::new(".")).is_err()
+        );
+    }
+
+    #[test]
+    fn real_manifest_parses_when_built() {
+        let dir = Manifest::default_dir();
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.artifacts.len() >= 7);
+            assert!(m.get("jacobi_step_n16").is_some());
+        }
+    }
+}

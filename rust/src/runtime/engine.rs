@@ -1,0 +1,192 @@
+//! PJRT execution engine: compile-once, execute-many artifact runner.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::stencil::grid::Grid3;
+use crate::Result;
+
+use super::artifacts::Manifest;
+
+/// A loaded PJRT runtime holding compiled executables.
+///
+/// Compilation is lazy and cached: the first `run_*` of an artifact
+/// compiles it on the CPU PJRT client, later calls reuse the executable —
+/// the request path is load → execute only.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and read the artifact manifest.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT: {e}"))?;
+        let manifest = Manifest::load(dir)?;
+        Ok(Self { client, manifest, compiled: HashMap::new() })
+    }
+
+    /// Load from the default artifacts directory.
+    pub fn load_default() -> Result<Self> {
+        Self::load(&Manifest::default_dir())
+    }
+
+    /// The artifact catalog.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.compiled.contains_key(name) {
+            let info = self
+                .manifest
+                .get(name)
+                .ok_or_else(|| anyhow::anyhow!("unknown artifact '{name}'"))?
+                .clone();
+            let path = self.manifest.path_of(&info);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow::anyhow!("parse {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compile {name}: {e}"))?;
+            self.compiled.insert(name.to_string(), exe);
+        }
+        Ok(&self.compiled[name])
+    }
+
+    fn grid_literal(g: &Grid3) -> Result<xla::Literal> {
+        let (nz, ny, nx) = g.shape();
+        xla::Literal::vec1(g.data())
+            .reshape(&[nz as i64, ny as i64, nx as i64])
+            .map_err(|e| anyhow::anyhow!("reshape literal: {e}"))
+    }
+
+    fn literal_grid(lit: &xla::Literal, shape: (usize, usize, usize)) -> Result<Grid3> {
+        let data = lit.to_vec::<f64>().map_err(|e| anyhow::anyhow!("to_vec: {e}"))?;
+        let (nz, ny, nx) = shape;
+        anyhow::ensure!(data.len() == nz * ny * nx, "output size mismatch");
+        let mut g = Grid3::zeros(nz, ny, nx);
+        g.data_mut().copy_from_slice(&data);
+        Ok(g)
+    }
+
+    /// Execute an artifact on grid inputs; returns the raw output tuple.
+    fn run_raw(&mut self, name: &str, inputs: &[&Grid3]) -> Result<Vec<xla::Literal>> {
+        let info = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown artifact '{name}'"))?;
+        anyhow::ensure!(
+            info.inputs.len() == inputs.len(),
+            "{name}: expected {} inputs, got {}",
+            info.inputs.len(),
+            inputs.len()
+        );
+        for (t, g) in info.inputs.iter().zip(inputs) {
+            let want = (t.shape[0], t.shape[1], t.shape[2]);
+            anyhow::ensure!(g.shape() == want, "{name}: input shape {:?} != {:?}", g.shape(), want);
+        }
+        let n_outputs = info.n_outputs;
+        let lits: Vec<xla::Literal> =
+            inputs.iter().map(|g| Self::grid_literal(g)).collect::<Result<_>>()?;
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow::anyhow!("execute {name}: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal {name}: {e}"))?;
+        // aot.py lowers with return_tuple=True: always a tuple at top level.
+        let parts = result.to_tuple().map_err(|e| anyhow::anyhow!("untuple {name}: {e}"))?;
+        anyhow::ensure!(parts.len() == n_outputs, "{name}: {} outputs, expected {n_outputs}", parts.len());
+        Ok(parts)
+    }
+
+    /// Execute a grid→grid artifact (smoother step / sweep).
+    pub fn run_grid(&mut self, name: &str, inputs: &[&Grid3]) -> Result<Grid3> {
+        let shape = inputs[0].shape();
+        let parts = self.run_raw(name, inputs)?;
+        Self::literal_grid(&parts[0], shape)
+    }
+
+    /// Execute a grid→scalar artifact (residual norm).
+    pub fn run_scalar(&mut self, name: &str, inputs: &[&Grid3]) -> Result<f64> {
+        let parts = self.run_raw(name, inputs)?;
+        let v = parts[0].to_vec::<f64>().map_err(|e| anyhow::anyhow!("to_vec: {e}"))?;
+        anyhow::ensure!(v.len() == 1, "expected a scalar, got {} values", v.len());
+        Ok(v[0])
+    }
+
+    /// Execute a grid→(grid, scalar) artifact (smooth_and_residual).
+    pub fn run_grid_scalar(&mut self, name: &str, inputs: &[&Grid3]) -> Result<(Grid3, f64)> {
+        let shape = inputs[0].shape();
+        let parts = self.run_raw(name, inputs)?;
+        anyhow::ensure!(parts.len() == 2, "expected 2 outputs");
+        let g = Self::literal_grid(&parts[0], shape)?;
+        let s = parts[1].to_vec::<f64>().map_err(|e| anyhow::anyhow!("to_vec: {e}"))?;
+        Ok((g, s[0]))
+    }
+}
+
+/// Result of one cross-layer validation comparison.
+#[derive(Clone, Debug)]
+pub struct Validation {
+    pub artifact: String,
+    pub max_abs_diff: f64,
+    pub tolerance: f64,
+}
+
+impl Validation {
+    pub fn passed(&self) -> bool {
+        self.max_abs_diff <= self.tolerance
+    }
+}
+
+/// Compare the rust engine against a Pallas artifact on random inputs.
+///
+/// The two layers implement the same update with different fp association
+/// (jnp reductions vs scalar loops), so the tolerance is round-off-scale
+/// but not zero.
+pub fn validate(rt: &mut Runtime, name: &str) -> Result<Validation> {
+    use crate::stencil::gauss_seidel::{gs_sweeps, GsKernel};
+    use crate::stencil::jacobi::jacobi_steps;
+
+    let info = rt
+        .manifest()
+        .get(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown artifact '{name}'"))?
+        .clone();
+    let shape = info.grid_shape().ok_or_else(|| anyhow::anyhow!("{name}: no grid input"))?;
+    let (nz, ny, nx) = shape;
+    let u = Grid3::random(nz, ny, nx, 2024);
+    let f = Grid3::random(nz, ny, nx, 4048);
+    let h2 = info.param_f64("h2").unwrap_or(1.0);
+    let iters = info.param_usize("iters").unwrap_or(1);
+    let scheme = info.params.get("scheme").and_then(|v| v.as_str()).unwrap_or("jacobi");
+
+    let (pallas, rust) = match scheme {
+        "gauss_seidel" => {
+            let out = rt.run_grid(name, &[&u])?;
+            let mut mine = u.clone();
+            gs_sweeps(&mut mine, iters, GsKernel::Interleaved);
+            (out, mine)
+        }
+        "jacobi" => {
+            let out = rt.run_grid(name, &[&u, &f])?;
+            (out, jacobi_steps(&u, &f, h2, iters))
+        }
+        other => anyhow::bail!("cannot validate scheme '{other}'"),
+    };
+    Ok(Validation {
+        artifact: name.to_string(),
+        max_abs_diff: rust.max_abs_diff(&pallas),
+        tolerance: 1e-11 * iters.max(1) as f64,
+    })
+}

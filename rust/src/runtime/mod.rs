@@ -1,0 +1,21 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! The compile path (`python/compile/aot.py`) lowers the L2 smoother
+//! graphs — which call the L1 Pallas kernels — to HLO *text* once;
+//! this module loads the text through the `xla` crate
+//! (`HloModuleProto::from_text_file` → `XlaComputation` → PJRT compile)
+//! and executes it on the CPU PJRT client. Python never runs at runtime.
+//!
+//! The runtime has two jobs in this system:
+//! * **cross-layer validation**: the rust stencil engine and the Pallas
+//!   kernels must agree to fp round-off on identical inputs
+//!   ([`validate`], exercised by the `validate` CLI subcommand and the
+//!   integration tests);
+//! * **artifact execution** for the examples (e.g. the Poisson driver
+//!   dispatches `jacobi_smooth_residual_*` once per outer iteration).
+
+pub mod artifacts;
+pub mod engine;
+
+pub use artifacts::Manifest;
+pub use engine::{Runtime, Validation};

@@ -1,0 +1,308 @@
+//! Set-associative LRU cache-hierarchy simulator.
+//!
+//! The ECM model *assumes* traffic volumes ("intermediate planes stay in
+//! the shared cache"); this simulator *verifies* them: it executes the
+//! exact cacheline access stream of a schedule against the Tab. 1 cache
+//! topologies and reports per-level hits, misses and memory traffic. The
+//! wavefront residency claim of Sec. 4 becomes a testable property:
+//! memory bytes per LUP ≈ 16/t instead of 16–24.
+//!
+//! Model scope (documented simplifications):
+//! * inclusive hierarchy with LRU replacement and write-back/write-allocate
+//!   lines; an exclusive (victim) mode doubles inter-level volume
+//!   accounting rather than simulating victim buffers cycle-accurately;
+//! * coherence is not simulated — shared lines are served from the
+//!   outermost shared level, which is exactly the sharing pattern the
+//!   wavefront scheme is designed around;
+//! * non-temporal stores bypass the hierarchy and count as pure memory
+//!   write traffic.
+
+use super::machine::MachineSpec;
+use super::CACHELINE_BYTES;
+
+/// Hit/miss/traffic counters for one cache instance.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub writebacks: u64,
+}
+
+impl CacheStats {
+    pub fn accesses(&self) -> u64 {
+        self.hits + self.misses
+    }
+    pub fn hit_rate(&self) -> f64 {
+        if self.accesses() == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.accesses() as f64
+        }
+    }
+}
+
+/// One set-associative, write-back, LRU cache instance.
+#[derive(Clone, Debug)]
+pub struct Cache {
+    sets: Vec<Vec<(u64, bool)>>, // (line tag, dirty), MRU at the back
+    assoc: usize,
+    n_sets: u64,
+    set_shift: u32,
+    pub stats: CacheStats,
+}
+
+impl Cache {
+    /// Build a cache of `bytes` capacity and `assoc` ways (64 B lines).
+    ///
+    /// Set count need not be a power of two (Westmere's 12 MB/16-way L3
+    /// has 12288 sets); indexing uses modulo, which is exact for the
+    /// power-of-two case and a faithful hash otherwise.
+    pub fn new(bytes: usize, assoc: usize) -> Self {
+        let lines = bytes / CACHELINE_BYTES;
+        let n_sets = (lines / assoc).max(1);
+        Self {
+            sets: vec![Vec::with_capacity(assoc); n_sets],
+            assoc,
+            n_sets: n_sets as u64,
+            set_shift: CACHELINE_BYTES.trailing_zeros(),
+            stats: CacheStats::default(),
+        }
+    }
+
+    #[inline]
+    fn set_of(&self, addr: u64) -> usize {
+        ((addr >> self.set_shift) % self.n_sets) as usize
+    }
+
+    #[inline]
+    fn tag_of(&self, addr: u64) -> u64 {
+        addr >> self.set_shift
+    }
+
+    /// Access a byte address. Returns `Hit` or `Miss { evicted_dirty }`.
+    pub fn access(&mut self, addr: u64, write: bool) -> AccessResult {
+        let set_idx = self.set_of(addr);
+        let tag = self.tag_of(addr);
+        let set = &mut self.sets[set_idx];
+        if let Some(pos) = set.iter().position(|(t, _)| *t == tag) {
+            let (_, dirty) = set.remove(pos);
+            set.push((tag, dirty || write));
+            self.stats.hits += 1;
+            return AccessResult::Hit;
+        }
+        self.stats.misses += 1;
+        let mut evicted_dirty = false;
+        if set.len() >= self.assoc {
+            let (_, dirty) = set.remove(0); // LRU front
+            evicted_dirty = dirty;
+            if dirty {
+                self.stats.writebacks += 1;
+            }
+        }
+        set.push((tag, write));
+        AccessResult::Miss { evicted_dirty }
+    }
+
+    /// Is the line containing `addr` currently resident?
+    pub fn contains(&self, addr: u64) -> bool {
+        let set = &self.sets[self.set_of(addr)];
+        let tag = self.tag_of(addr);
+        set.iter().any(|(t, _)| *t == tag)
+    }
+}
+
+/// Outcome of a single cache access.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AccessResult {
+    Hit,
+    Miss { evicted_dirty: bool },
+}
+
+/// A multicore cache hierarchy: per-core L1/L2, shared outer level.
+#[derive(Debug)]
+pub struct Hierarchy {
+    l1: Vec<Cache>,
+    l2: Vec<Cache>,
+    /// Map core → L2 instance (Harpertown: two cores share one L2).
+    l2_of_core: Vec<usize>,
+    olc: Cache,
+    /// Exclusive-hierarchy volume factor (2 for Istanbul).
+    volume_factor: u64,
+    /// Bytes transferred from/to main memory.
+    pub mem_read_bytes: u64,
+    pub mem_write_bytes: u64,
+    /// Bytes crossing the L2↔OLC boundary (volume-factor adjusted).
+    pub olc_transfer_bytes: u64,
+}
+
+impl Hierarchy {
+    /// Build the hierarchy of `m` for `cores` active cores.
+    pub fn for_machine(m: &MachineSpec, cores: usize) -> Self {
+        let l2_instances = cores.div_ceil(m.l2.shared_by);
+        let olc = match m.l3 {
+            Some(l3) => Cache::new(l3.bytes, l3.assoc),
+            // Core 2: the shared L2 *is* the OLC; give cores tiny private
+            // "L2"s so the level structure stays uniform.
+            None => Cache::new(m.l2.bytes, m.l2.assoc),
+        };
+        let per_core_l2_bytes = if m.l3.is_some() { m.l2.bytes } else { 32 << 10 };
+        let per_core_l2_assoc = if m.l3.is_some() { m.l2.assoc } else { 8 };
+        Self {
+            l1: (0..cores).map(|_| Cache::new(m.l1.bytes, m.l1.assoc)).collect(),
+            l2: (0..l2_instances.max(1))
+                .map(|_| Cache::new(per_core_l2_bytes, per_core_l2_assoc))
+                .collect(),
+            l2_of_core: (0..cores).map(|c| c / m.l2.shared_by.max(1)).collect(),
+            olc,
+            volume_factor: if m.exclusive { 2 } else { 1 },
+            mem_read_bytes: 0,
+            mem_write_bytes: 0,
+            olc_transfer_bytes: 0,
+        }
+    }
+
+    /// Simple uniform hierarchy for tests: `cores` × (l1, l2) + shared olc.
+    pub fn uniform(cores: usize, l1_bytes: usize, l2_bytes: usize, olc_bytes: usize) -> Self {
+        Self {
+            l1: (0..cores).map(|_| Cache::new(l1_bytes, 8)).collect(),
+            l2: (0..cores).map(|_| Cache::new(l2_bytes, 8)).collect(),
+            l2_of_core: (0..cores).collect(),
+            olc: Cache::new(olc_bytes, 16),
+            volume_factor: 1,
+            mem_read_bytes: 0,
+            mem_write_bytes: 0,
+            olc_transfer_bytes: 0,
+        }
+    }
+
+    /// One load/store by `core` at byte address `addr`.
+    pub fn access(&mut self, core: usize, addr: u64, write: bool) {
+        let line = CACHELINE_BYTES as u64;
+        if let AccessResult::Hit = self.l1[core].access(addr, write) {
+            return;
+        }
+        let l2i = self.l2_of_core[core];
+        if let AccessResult::Hit = self.l2[l2i].access(addr, write) {
+            return;
+        }
+        self.olc_transfer_bytes += line * self.volume_factor;
+        match self.olc.access(addr, write) {
+            AccessResult::Hit => {}
+            AccessResult::Miss { evicted_dirty } => {
+                self.mem_read_bytes += line;
+                if evicted_dirty {
+                    self.mem_write_bytes += line;
+                }
+            }
+        }
+    }
+
+    /// A non-temporal store: bypasses all levels, pure memory write.
+    pub fn nt_store(&mut self, _core: usize, _addr: u64) {
+        self.mem_write_bytes += CACHELINE_BYTES as u64;
+    }
+
+    /// Total main-memory traffic.
+    pub fn mem_bytes(&self) -> u64 {
+        self.mem_read_bytes + self.mem_write_bytes
+    }
+
+    /// Is the line resident in the shared outer cache?
+    pub fn olc_contains(&self, addr: u64) -> bool {
+        self.olc.contains(addr)
+    }
+
+    /// Outer-level cache statistics.
+    pub fn olc_stats(&self) -> CacheStats {
+        self.olc.stats
+    }
+
+    /// Aggregate L1 statistics.
+    pub fn l1_stats(&self) -> CacheStats {
+        let mut s = CacheStats::default();
+        for c in &self.l1 {
+            s.hits += c.stats.hits;
+            s.misses += c.stats.misses;
+            s.writebacks += c.stats.writebacks;
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lru_within_a_set() {
+        // 4 lines capacity, 2-way: 2 sets. Addresses mapping to set 0:
+        // multiples of 128.
+        let mut c = Cache::new(4 * 64, 2);
+        assert_eq!(c.access(0, false), AccessResult::Miss { evicted_dirty: false });
+        assert_eq!(c.access(128, false), AccessResult::Miss { evicted_dirty: false });
+        assert_eq!(c.access(0, false), AccessResult::Hit);
+        // 256 evicts LRU = 128 (0 was just touched)
+        assert_eq!(c.access(256, false), AccessResult::Miss { evicted_dirty: false });
+        assert!(c.contains(0));
+        assert!(!c.contains(128));
+    }
+
+    #[test]
+    fn dirty_eviction_counts_writeback() {
+        let mut c = Cache::new(2 * 64, 1); // direct-mapped, 2 sets
+        c.access(0, true); // dirty line in set 0
+        match c.access(128, false) {
+            AccessResult::Miss { evicted_dirty } => assert!(evicted_dirty),
+            _ => panic!("expected miss"),
+        }
+        assert_eq!(c.stats.writebacks, 1);
+    }
+
+    #[test]
+    fn hierarchy_serves_repeats_from_l1() {
+        let mut h = Hierarchy::uniform(2, 1 << 10, 1 << 12, 1 << 16);
+        h.access(0, 0, false);
+        let mem_after_first = h.mem_bytes();
+        for _ in 0..100 {
+            h.access(0, 0, false);
+        }
+        assert_eq!(h.mem_bytes(), mem_after_first, "L1 hits cost no memory traffic");
+    }
+
+    #[test]
+    fn shared_olc_serves_sibling_core() {
+        let mut h = Hierarchy::uniform(2, 1 << 10, 1 << 12, 1 << 20);
+        h.access(0, 4096, false); // core 0 pulls the line in
+        let mem = h.mem_bytes();
+        h.access(1, 4096, false); // core 1 misses private levels, hits OLC
+        assert_eq!(h.mem_bytes(), mem, "no extra memory traffic for the sibling");
+        assert!(h.olc_stats().hits >= 1);
+    }
+
+    #[test]
+    fn streaming_overflows_small_cache() {
+        let mut h = Hierarchy::uniform(1, 1 << 10, 1 << 12, 1 << 14); // 16 KB OLC
+        // stream 1 MB: every line must come from memory
+        let lines = (1 << 20) / 64;
+        for i in 0..lines {
+            h.access(0, (i * 64) as u64, false);
+        }
+        assert_eq!(h.mem_read_bytes, 1 << 20);
+    }
+
+    #[test]
+    fn nt_store_bypasses_hierarchy() {
+        let mut h = Hierarchy::uniform(1, 1 << 10, 1 << 12, 1 << 16);
+        h.nt_store(0, 0);
+        assert_eq!(h.mem_write_bytes, 64);
+        assert!(!h.olc_contains(0));
+    }
+
+    #[test]
+    fn machine_hierarchies_build() {
+        for m in MachineSpec::testbed() {
+            let h = Hierarchy::for_machine(&m, m.cores);
+            assert_eq!(h.l1.len(), m.cores);
+        }
+    }
+}

@@ -1,0 +1,370 @@
+//! ECM-style analytic performance model (paper ref. [14], same authors).
+//!
+//! The Execution-Cache-Memory model predicts loop-kernel performance from
+//! (a) in-core execution cycles and (b) cacheline transfer cycles through
+//! the memory hierarchy, with no overlap between transfer phases on Intel
+//! cores. It is the model the paper itself uses to explain every figure,
+//! which makes it the right substitute for the missing hardware: all its
+//! inputs come from Tab. 1 plus a small, documented calibration table of
+//! in-core cycle counts.
+//!
+//! ## Kernel classes
+//!
+//! The four baseline kernels of Figs. 3/4 — Jacobi and Gauss-Seidel, each
+//! as straightforward C and as the optimized kernel — are characterized by
+//! two in-core numbers (cycles per LUP):
+//!
+//! * `lat_cpl` — the dependency-bound (latency-limited) cost one thread
+//!   sees. For Gauss-Seidel this is dominated by the `add → mul` chain of
+//!   the x recursion the paper describes; for Jacobi it is near the
+//!   throughput bound because there is no loop-carried dependency.
+//! * `thr_cpl` — the port-throughput lower bound with perfect scheduling.
+//!
+//! SMT is modeled exactly as the paper argues (Sec. 4): two hardware
+//! threads interleave independent chains, so the effective in-core cost is
+//! `max(lat/2, thr)` — a large win for Gauss-Seidel, none for Jacobi.
+//!
+//! All calibration constants live in [`KernelClass`] constructors and are
+//! cross-checked against the paper's reported baselines in the test suite.
+
+
+use super::machine::{MachineSpec, Microarch};
+use super::memory::{self, Dataset, StoreMode};
+
+/// Which stencil kernel the model prices.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    /// Straightforward C Jacobi (compiler-vectorized at best).
+    JacobiC,
+    /// Optimized (assembly) Jacobi line-update kernel.
+    JacobiOpt,
+    /// Straightforward C Gauss-Seidel (exposed recursion).
+    GsC,
+    /// Dependency-interleaved Gauss-Seidel (the paper's optimized kernel).
+    GsOpt,
+}
+
+impl Kernel {
+    /// Is this an in-place Gauss-Seidel variant?
+    pub fn is_gs(self) -> bool {
+        matches!(self, Kernel::GsC | Kernel::GsOpt)
+    }
+}
+
+/// In-core cost model of one kernel on one microarchitecture.
+#[derive(Clone, Copy, Debug)]
+pub struct KernelClass {
+    /// Dependency-bound cycles per LUP (single thread).
+    pub lat_cpl: f64,
+    /// Port-throughput-bound cycles per LUP.
+    pub thr_cpl: f64,
+}
+
+impl KernelClass {
+    /// Calibration table (cycles per lattice-site update).
+    ///
+    /// Anchors: Fig. 3(a) — optimized in-cache Jacobi tracks clock speed on
+    /// Intel (≈ 2 cy/LUP ⇒ 1600 MLUP/s at 3.2 GHz on Core 2); Fig. 4(a) —
+    /// the interleaving optimization roughly doubles serial GS performance;
+    /// the C Gauss-Seidel is pipeline-stalled at ≈ 2× the optimized cost.
+    /// Istanbul's weak in-core showing is modeled via its transfer costs
+    /// (exclusive hierarchy), not via different arithmetic.
+    pub fn of(kernel: Kernel, arch: Microarch) -> Self {
+        let (lat, thr) = match (kernel, arch) {
+            (Kernel::JacobiOpt, Microarch::Istanbul) => (2.6, 2.4),
+            (Kernel::JacobiOpt, _) => (2.2, 2.0),
+            (Kernel::JacobiC, Microarch::Istanbul) => (3.6, 3.4),
+            (Kernel::JacobiC, _) => (3.2, 3.0),
+            // GS: latency of the add→mul recursion chain dominates.
+            (Kernel::GsOpt, Microarch::Istanbul) => (6.5, 3.6),
+            (Kernel::GsOpt, _) => (6.0, 3.0),
+            (Kernel::GsC, Microarch::Istanbul) => (12.5, 4.4),
+            (Kernel::GsC, _) => (12.0, 4.0),
+        };
+        Self { lat_cpl: lat, thr_cpl: thr }
+    }
+
+    /// Effective in-core cycles per LUP for `smt_threads` threads per core.
+    ///
+    /// The paper's SMT argument: hardware threads fill each other's
+    /// pipeline bubbles, bounded below by port throughput.
+    pub fn effective_cpl(&self, smt_threads: usize) -> f64 {
+        (self.lat_cpl / smt_threads.max(1) as f64).max(self.thr_cpl)
+    }
+}
+
+/// Per-architecture cacheline transfer capabilities (bytes per core cycle).
+#[derive(Clone, Copy, Debug)]
+pub struct TransferModel {
+    /// L1 ↔ L2 bandwidth, bytes per core cycle.
+    pub l1l2_bpc: f64,
+    /// L2 ↔ outer-level cache bandwidth, bytes per core cycle.
+    pub l2olc_bpc: f64,
+    /// Multiplier on all in-hierarchy transfer volumes (2 for the
+    /// exclusive Istanbul hierarchy: every fill is also a victim copy).
+    pub volume_factor: f64,
+    /// Fraction of the shorter of {core phase, memory phase} hidden
+    /// behind the longer one (hardware prefetching). The classic ECM
+    /// no-overlap rule is 0; Nehalem's aggressive prefetchers hide about
+    /// half, Core 2's FSB much less, Istanbul's almost nothing — this is
+    /// what makes the paper's EP "small drop" and Core 2 "largest drop"
+    /// (Fig. 3a) come out of one formula.
+    pub mem_overlap: f64,
+}
+
+impl TransferModel {
+    pub fn of(m: &MachineSpec) -> Self {
+        match m.arch {
+            Microarch::Core2 => {
+                Self { l1l2_bpc: 32.0, l2olc_bpc: 32.0, volume_factor: 1.0, mem_overlap: 0.3 }
+            }
+            Microarch::Nehalem => {
+                Self { l1l2_bpc: 32.0, l2olc_bpc: 16.0, volume_factor: 1.0, mem_overlap: 0.5 }
+            }
+            // Exclusive caches + large latency overheads (paper Sec. 3 and
+            // ref. [14]): halved usable transfer width, doubled volume.
+            Microarch::Istanbul => {
+                Self { l1l2_bpc: 16.0, l2olc_bpc: 8.0, volume_factor: 2.0, mem_overlap: 0.2 }
+            }
+        }
+    }
+}
+
+/// Hierarchy traffic of one LUP (bytes that cross each boundary).
+///
+/// Five read streams + one write stream, three planes resident in the
+/// outer cache (Fig. 2): per LUP, 2 lines' worth of reads miss L1 and one
+/// store line returns — 24 B across L1↔L2 and L2↔OLC; the memory boundary
+/// moves [`memory::jacobi_mem_bytes_per_lup`] only for memory datasets.
+fn hierarchy_bytes_per_lup(kernel: Kernel) -> f64 {
+    // GS touches one array in place: slightly lower hierarchy traffic.
+    if kernel.is_gs() {
+        16.0
+    } else {
+        24.0
+    }
+}
+
+/// Combine an execution phase and a memory phase (both in MLUP/s) with a
+/// partial-overlap rule: the longer phase counts fully, `overlap` of the
+/// shorter phase is hidden behind it.
+fn combine_phases(a_mlups: f64, b_mlups: f64, overlap: f64) -> f64 {
+    let (ta, tb) = (1.0 / a_mlups, 1.0 / b_mlups);
+    let (long, short) = if ta >= tb { (ta, tb) } else { (tb, ta) };
+    1.0 / (long + (1.0 - overlap) * short)
+}
+
+/// The full ECM prediction machinery for one machine.
+#[derive(Clone, Debug)]
+pub struct EcmModel {
+    pub machine: MachineSpec,
+    pub transfer: TransferModel,
+}
+
+/// A prediction with its constituent rooflines (all in MLUP/s).
+#[derive(Clone, Copy, Debug)]
+pub struct Prediction {
+    /// The predicted performance: min over the rooflines × sync efficiency.
+    pub mlups: f64,
+    /// In-core + in-hierarchy execution roofline.
+    pub compute_mlups: f64,
+    /// Outer-level-cache bandwidth roofline.
+    pub olc_mlups: f64,
+    /// Main-memory bandwidth roofline (∞ for cache-resident datasets).
+    pub mem_mlups: f64,
+    /// Fraction of time not lost to synchronization.
+    pub sync_efficiency: f64,
+}
+
+impl Prediction {
+    pub(crate) fn min3(compute: f64, olc: f64, mem: f64, sync_eff: f64) -> Self {
+        let mlups = compute.min(olc).min(mem) * sync_eff;
+        Self { mlups, compute_mlups: compute, olc_mlups: olc, mem_mlups: mem, sync_efficiency: sync_eff }
+    }
+}
+
+impl EcmModel {
+    pub fn new(machine: MachineSpec) -> Self {
+        let transfer = TransferModel::of(&machine);
+        Self { machine, transfer }
+    }
+
+    /// Serial in-core + hierarchy cycles per LUP (no memory term).
+    fn core_and_cache_cpl(&self, kernel: Kernel, smt_threads: usize) -> f64 {
+        let class = KernelClass::of(kernel, self.machine.arch);
+        let t_core = class.effective_cpl(smt_threads);
+        let vol = hierarchy_bytes_per_lup(kernel) * self.transfer.volume_factor;
+        // Intel ECM: transfer phases do not overlap with core execution.
+        let t_l1l2 = vol / self.transfer.l1l2_bpc;
+        let t_l2olc =
+            vol / self.transfer.l2olc_bpc * (self.machine.clock_ghz / self.machine.uncore_ghz);
+        t_core + t_l1l2 + t_l2olc
+    }
+
+    /// Single-core performance in MLUP/s (Fig. 3a / 4a).
+    pub fn serial(&self, kernel: Kernel, dataset: Dataset, store: StoreMode) -> f64 {
+        let cpl = self.core_and_cache_cpl(kernel, 1);
+        let compute = self.machine.clock_ghz * 1e3 / cpl; // MLUP/s
+        match dataset {
+            Dataset::Cache => compute,
+            Dataset::Memory => {
+                let bytes = if kernel.is_gs() {
+                    memory::gs_mem_bytes_per_lup()
+                } else {
+                    memory::jacobi_mem_bytes_per_lup(store)
+                };
+                let mem = self.machine.stream_1t_gbs * 1e3 / bytes; // MLUP/s
+                // ECM with partial overlap: the longer phase fully counts,
+                // `mem_overlap` of the shorter phase hides behind it.
+                combine_phases(compute, mem, self.transfer.mem_overlap)
+            }
+        }
+    }
+
+    /// Threaded socket performance (Fig. 3b / 4b baselines).
+    ///
+    /// `threads` = logical threads; `smt` ⇒ two per core share a pipeline.
+    pub fn socket(
+        &self,
+        kernel: Kernel,
+        dataset: Dataset,
+        store: StoreMode,
+        threads: usize,
+        smt: bool,
+    ) -> Prediction {
+        let smt_per_core = if smt { self.machine.smt_per_core } else { 1 };
+        let cores = threads.div_ceil(smt_per_core).min(self.machine.cores);
+        let cpl = self.core_and_cache_cpl(kernel, smt_per_core);
+        let compute = cores as f64 * self.machine.clock_ghz * 1e3 / cpl;
+        let vol = hierarchy_bytes_per_lup(kernel) * self.transfer.volume_factor;
+        let olc = self.machine.olc_bandwidth_gbs(cores) * 1e3 / vol;
+        let (compute, mem) = match dataset {
+            Dataset::Cache => (compute, f64::INFINITY),
+            Dataset::Memory => {
+                let bytes = if kernel.is_gs() {
+                    memory::gs_mem_bytes_per_lup()
+                } else {
+                    memory::jacobi_mem_bytes_per_lup(store)
+                };
+                let nt = matches!(store, StoreMode::NonTemporal) && !kernel.is_gs();
+                // Per-thread ECM: the memory phase does not overlap with
+                // execution (Intel rule), so each thread runs at the
+                // harmonic combination; threads then scale until the bus
+                // saturates at the socket STREAM limit.
+                let mem_thread = self.machine.stream_1t_gbs * 1e3 / bytes;
+                let compute_thread = compute / cores as f64;
+                let thread = combine_phases(compute_thread, mem_thread, self.transfer.mem_overlap);
+                let mem_roof = self.machine.memory_bandwidth_gbs(threads, nt) * 1e3 / bytes;
+                (cores as f64 * thread.min(compute_thread), mem_roof)
+            }
+        };
+        // GS pipeline-parallel fill/drain cost is folded into sync
+        // efficiency by the wavefront predictor; the plain baseline is
+        // long-running enough to amortize it.
+        Prediction::min3(compute, olc, mem, 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ep() -> EcmModel {
+        EcmModel::new(MachineSpec::nehalem_ep())
+    }
+
+    #[test]
+    fn smt_helps_gs_not_jacobi() {
+        let gs = KernelClass::of(Kernel::GsOpt, Microarch::Nehalem);
+        let jac = KernelClass::of(Kernel::JacobiOpt, Microarch::Nehalem);
+        let gs_gain = gs.effective_cpl(1) / gs.effective_cpl(2);
+        let jac_gain = jac.effective_cpl(1) / jac.effective_cpl(2);
+        assert!(gs_gain > 1.5, "GS SMT gain {gs_gain}");
+        assert!(jac_gain < 1.15, "Jacobi SMT gain {jac_gain}");
+    }
+
+    #[test]
+    fn optimized_kernels_beat_c() {
+        for m in MachineSpec::testbed() {
+            let e = EcmModel::new(m);
+            for (c, opt) in [(Kernel::JacobiC, Kernel::JacobiOpt), (Kernel::GsC, Kernel::GsOpt)] {
+                let pc = e.serial(c, Dataset::Cache, StoreMode::NonTemporal);
+                let po = e.serial(opt, Dataset::Cache, StoreMode::NonTemporal);
+                assert!(po > pc, "{}: {:?} {po} <= {:?} {pc}", e.machine.name, opt, c);
+            }
+        }
+    }
+
+    #[test]
+    fn harpertown_has_largest_cache_to_memory_drop_for_jacobi() {
+        // Paper Fig. 3a: "the highly clocked but bandwidth-starved
+        // Harpertown shows the largest drop".
+        let mut drops = vec![];
+        for m in MachineSpec::testbed() {
+            let e = EcmModel::new(m.clone());
+            let pc = e.serial(Kernel::JacobiOpt, Dataset::Cache, StoreMode::NonTemporal);
+            let pm = e.serial(Kernel::JacobiOpt, Dataset::Memory, StoreMode::NonTemporal);
+            drops.push((m.name.clone(), pc / pm));
+        }
+        let core2 = drops.iter().find(|(n, _)| n == "Core 2").unwrap().1;
+        for (name, d) in &drops {
+            if name != "Core 2" && name != "Nehalem EX" {
+                assert!(core2 >= *d, "Core2 drop {core2} vs {name} {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn ep_socket_jacobi_near_1008_mlups() {
+        // Paper Sec. 4: "the threaded memory performance utilizing
+        // non-temporal stores is already 1008 MLUPS" on Nehalem EP.
+        let p = ep().socket(Kernel::JacobiOpt, Dataset::Memory, StoreMode::NonTemporal, 4, false);
+        assert!(
+            (p.mlups - 1008.0).abs() / 1008.0 < 0.2,
+            "EP NT Jacobi socket: {} MLUP/s (paper: 1008)",
+            p.mlups
+        );
+    }
+
+    #[test]
+    fn socket_memory_bound_below_cache_bound() {
+        for m in MachineSpec::testbed() {
+            let e = EcmModel::new(m.clone());
+            let n = e.machine.cores;
+            let mem = e.socket(Kernel::JacobiOpt, Dataset::Memory, StoreMode::NonTemporal, n, false);
+            let cache = e.socket(Kernel::JacobiOpt, Dataset::Cache, StoreMode::NonTemporal, n, false);
+            assert!(
+                mem.mlups <= cache.mlups * 1.001,
+                "{}: memory {} > cache {}",
+                m.name,
+                mem.mlups,
+                cache.mlups
+            );
+        }
+    }
+
+    #[test]
+    fn gs_slower_than_jacobi_despite_less_traffic() {
+        // Paper: "Gauss-Seidel performance is inferior to Jacobi despite
+        // comparable data transfer volumes and less computations".
+        for m in MachineSpec::testbed() {
+            let e = EcmModel::new(m.clone());
+            let j = e.serial(Kernel::JacobiOpt, Dataset::Cache, StoreMode::NonTemporal);
+            let g = e.serial(Kernel::GsOpt, Dataset::Cache, StoreMode::NonTemporal);
+            assert!(g < j, "{}: GS {} !< Jacobi {}", m.name, g, j);
+        }
+    }
+
+    #[test]
+    fn istanbul_opt_gains_are_muted_in_cache() {
+        // Paper Fig. 3a: on Istanbul "the applied optimizations do not show
+        // a larger effect" because transfers dominate.
+        let ist = EcmModel::new(MachineSpec::istanbul());
+        let ratio_ist = ist.serial(Kernel::JacobiOpt, Dataset::Cache, StoreMode::NonTemporal)
+            / ist.serial(Kernel::JacobiC, Dataset::Cache, StoreMode::NonTemporal);
+        let ep = ep();
+        let ratio_ep = ep.serial(Kernel::JacobiOpt, Dataset::Cache, StoreMode::NonTemporal)
+            / ep.serial(Kernel::JacobiC, Dataset::Cache, StoreMode::NonTemporal);
+        assert!(ratio_ist < ratio_ep, "ist {ratio_ist} vs ep {ratio_ep}");
+    }
+}

@@ -1,0 +1,331 @@
+//! Machine descriptions for the paper's testbed (Sec. 2, Tab. 1).
+//!
+//! Every quantity the performance model needs is a field here; the five
+//! constructors encode Tab. 1. Where the scanned table is ambiguous the
+//! assignment follows the paper's prose (e.g. "bandwidth-starved
+//! Harpertown", "Nehalem EX equipped with only half of the possible
+//! memory cards") and is documented in DESIGN.md §2.
+
+
+/// One cache level of the hierarchy.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CacheLevel {
+    /// Capacity in bytes (per instance of this cache).
+    pub bytes: usize,
+    /// Associativity (ways).
+    pub assoc: usize,
+    /// Number of cores sharing one instance.
+    pub shared_by: usize,
+}
+
+impl CacheLevel {
+    /// Number of sets, assuming 64 B lines.
+    pub fn sets(&self) -> usize {
+        self.bytes / super::CACHELINE_BYTES / self.assoc
+    }
+}
+
+/// Microarchitecture family — switches model behaviours, not parameters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Microarch {
+    /// Intel Core 2 (Harpertown): FSB, no L3, inclusive L2 groups.
+    Core2,
+    /// Intel Nehalem / Westmere / Nehalem EX: inclusive shared L3, SMT-2.
+    Nehalem,
+    /// AMD Istanbul: exclusive cache hierarchy, high transfer overheads.
+    Istanbul,
+}
+
+/// A socket of the paper's testbed with everything Tab. 1 reports.
+#[derive(Clone, Debug)]
+pub struct MachineSpec {
+    /// Display name used in figures ("Core 2", "Nehalem EP", ...).
+    pub name: String,
+    /// Vendor model ("Xeon X5482", ...).
+    pub model: String,
+    pub arch: Microarch,
+    /// Core clock in GHz.
+    pub clock_ghz: f64,
+    /// Uncore (L3 + memory controller) clock in GHz — the paper notes
+    /// Westmere's uncore runs at Nehalem EP speed, capping its L3 gains.
+    pub uncore_ghz: f64,
+    /// Physical cores per socket.
+    pub cores: usize,
+    /// Hardware (SMT) threads per core; 1 = no SMT.
+    pub smt_per_core: usize,
+    pub l1: CacheLevel,
+    pub l2: CacheLevel,
+    /// Outer-level cache; `None` for Core 2 (its shared L2 is the OLC).
+    pub l3: Option<CacheLevel>,
+    /// Exclusive (victim) hierarchy — Istanbul; costs extra transfers.
+    pub exclusive: bool,
+    /// Theoretical socket memory bandwidth in GB/s.
+    pub bw_theoretical_gbs: f64,
+    /// STREAM triad, one thread, GB/s.
+    pub stream_1t_gbs: f64,
+    /// STREAM triad, full socket, non-temporal stores, GB/s.
+    pub stream_socket_nt_gbs: f64,
+    /// STREAM triad, full socket, regular stores (bus traffic incl.
+    /// write-allocate), GB/s.
+    pub stream_socket_nont_gbs: f64,
+    /// Outer-level-cache bandwidth per core in bytes/cycle (uncore cycles).
+    pub olc_bytes_per_cycle_core: f64,
+    /// Whether OLC bandwidth scales with cores (Nehalem EX segmented L3)
+    /// or saturates (fraction of linear scaling retained per extra core).
+    pub olc_scaling: f64,
+}
+
+impl MachineSpec {
+    /// The cache group the wavefront scheme targets: cores sharing the OLC.
+    ///
+    /// Harpertown is "two independent dual-core processors" (L2 groups);
+    /// everything else is the full socket (L3 group).
+    pub fn cache_group_cores(&self) -> usize {
+        match self.l3 {
+            Some(l3) => l3.shared_by,
+            None => self.l2.shared_by,
+        }
+    }
+
+    /// Capacity of the outer-level (shared) cache in bytes.
+    pub fn olc_bytes(&self) -> usize {
+        self.l3.map(|l| l.bytes).unwrap_or(self.l2.bytes)
+    }
+
+    /// Maximum wavefront blocking factor: one update step per thread in
+    /// the cache group (paper: "the maximum number of blocked updates is
+    /// determined by the number of threads available").
+    pub fn max_blocking_factor(&self, use_smt: bool) -> usize {
+        let t = if use_smt { self.smt_per_core } else { 1 };
+        self.cache_group_cores() * t
+    }
+
+    /// Logical threads on one socket.
+    pub fn socket_threads(&self, use_smt: bool) -> usize {
+        self.cores * if use_smt { self.smt_per_core } else { 1 }
+    }
+
+    /// Aggregate OLC bandwidth in GB/s when `n` cores stream from it.
+    ///
+    /// Linear up to the scaling fraction: each additional core adds
+    /// `olc_scaling` of the first core's bandwidth (1.0 = perfect scaleup,
+    /// the paper's Nehalem EX; < 1 models uncore saturation).
+    pub fn olc_bandwidth_gbs(&self, n_cores: usize) -> f64 {
+        let per_core = self.olc_bytes_per_cycle_core * self.uncore_ghz; // GB/s
+        if n_cores == 0 {
+            return 0.0;
+        }
+        per_core * (1.0 + self.olc_scaling * (n_cores as f64 - 1.0))
+    }
+
+    /// Memory bandwidth reachable by `n` threads (saturating, paper Fig. 3:
+    /// Nehalem bandwidth "scales with the number of cores" until the
+    /// socket limit).
+    pub fn memory_bandwidth_gbs(&self, n_threads: usize, nt_stores: bool) -> f64 {
+        let socket = if nt_stores { self.stream_socket_nt_gbs } else { self.stream_socket_nont_gbs };
+        if n_threads == 0 {
+            return 0.0;
+        }
+        (self.stream_1t_gbs * n_threads as f64).min(socket)
+    }
+
+    // ---- The five testbed machines (Tab. 1) -------------------------------
+
+    /// Intel Core 2 "Harpertown" Xeon X5482 — treated as an L2 group of 2.
+    pub fn core2_harpertown() -> Self {
+        Self {
+            name: "Core 2".into(),
+            model: "Xeon X5482".into(),
+            arch: Microarch::Core2,
+            clock_ghz: 3.2,
+            uncore_ghz: 3.2,
+            cores: 4,
+            smt_per_core: 1,
+            l1: CacheLevel { bytes: 32 << 10, assoc: 8, shared_by: 1 },
+            // two independent 6 MB L2s, each shared by 2 cores (Fig. 1a)
+            l2: CacheLevel { bytes: 6 << 20, assoc: 24, shared_by: 2 },
+            l3: None,
+            exclusive: false,
+            bw_theoretical_gbs: 12.8,
+            stream_1t_gbs: 4.6,
+            stream_socket_nt_gbs: 4.8,
+            stream_socket_nont_gbs: 5.6,
+            olc_bytes_per_cycle_core: 8.0,
+            olc_scaling: 0.55,
+        }
+    }
+
+    /// Intel Nehalem EP Xeon X5550 — first quad-core with shared L3, SMT-2.
+    pub fn nehalem_ep() -> Self {
+        Self {
+            name: "Nehalem EP".into(),
+            model: "Xeon X5550".into(),
+            arch: Microarch::Nehalem,
+            clock_ghz: 2.66,
+            uncore_ghz: 2.66,
+            cores: 4,
+            smt_per_core: 2,
+            l1: CacheLevel { bytes: 32 << 10, assoc: 8, shared_by: 1 },
+            l2: CacheLevel { bytes: 256 << 10, assoc: 8, shared_by: 1 },
+            l3: Some(CacheLevel { bytes: 8 << 20, assoc: 16, shared_by: 4 }),
+            exclusive: false,
+            bw_theoretical_gbs: 32.0,
+            stream_1t_gbs: 11.0,
+            stream_socket_nt_gbs: 18.5,
+            stream_socket_nont_gbs: 23.7,
+            olc_bytes_per_cycle_core: 8.6,
+            olc_scaling: 0.25,
+        }
+    }
+
+    /// Intel Westmere EP Xeon X5670 — 6 cores, 12 MB L3, same uncore clock
+    /// as Nehalem EP (paper: "the uncore has the same clock speed ... and
+    /// therefore reaches similar in-cache performance").
+    pub fn westmere() -> Self {
+        Self {
+            name: "Westmere".into(),
+            model: "Xeon X5670".into(),
+            arch: Microarch::Nehalem,
+            clock_ghz: 2.93,
+            uncore_ghz: 2.66,
+            cores: 6,
+            smt_per_core: 2,
+            l1: CacheLevel { bytes: 32 << 10, assoc: 8, shared_by: 1 },
+            l2: CacheLevel { bytes: 256 << 10, assoc: 8, shared_by: 1 },
+            l3: Some(CacheLevel { bytes: 12 << 20, assoc: 16, shared_by: 6 }),
+            exclusive: false,
+            bw_theoretical_gbs: 32.0,
+            stream_1t_gbs: 11.9,
+            stream_socket_nt_gbs: 21.0,
+            stream_socket_nont_gbs: 23.6,
+            olc_bytes_per_cycle_core: 8.0,
+            olc_scaling: 0.32,
+        }
+    }
+
+    /// Intel Nehalem EX Xeon X7560 — 8 cores, segmented 24 MB L3 with near
+    /// perfect bandwidth scale-up; test system had half the memory cards,
+    /// so socket bandwidth is artificially halved (paper Sec. 2).
+    pub fn nehalem_ex() -> Self {
+        Self {
+            name: "Nehalem EX".into(),
+            model: "Xeon X7560".into(),
+            arch: Microarch::Nehalem,
+            clock_ghz: 2.26,
+            uncore_ghz: 2.26,
+            cores: 8,
+            smt_per_core: 2,
+            l1: CacheLevel { bytes: 32 << 10, assoc: 8, shared_by: 1 },
+            l2: CacheLevel { bytes: 256 << 10, assoc: 8, shared_by: 1 },
+            l3: Some(CacheLevel { bytes: 24 << 20, assoc: 24, shared_by: 8 }),
+            exclusive: false,
+            bw_theoretical_gbs: 17.1,
+            stream_1t_gbs: 5.3,
+            stream_socket_nt_gbs: 9.8,
+            stream_socket_nont_gbs: 11.4,
+            olc_bytes_per_cycle_core: 3.4,
+            // the paper: "a novel segmented L3 cache which shows a near to
+            // perfect bandwidth scaleup with the number of cores"
+            olc_scaling: 0.95,
+        }
+    }
+
+    /// AMD Istanbul Opteron 2435 — exclusive hierarchy, 6 MB L3/48-way.
+    pub fn istanbul() -> Self {
+        Self {
+            name: "Istanbul".into(),
+            model: "Opteron 2435".into(),
+            arch: Microarch::Istanbul,
+            clock_ghz: 2.6,
+            uncore_ghz: 2.2,
+            cores: 6,
+            smt_per_core: 1,
+            l1: CacheLevel { bytes: 64 << 10, assoc: 2, shared_by: 1 },
+            l2: CacheLevel { bytes: 512 << 10, assoc: 16, shared_by: 1 },
+            l3: Some(CacheLevel { bytes: 6 << 20, assoc: 48, shared_by: 6 }),
+            exclusive: true,
+            bw_theoretical_gbs: 17.1,
+            stream_1t_gbs: 7.2,
+            stream_socket_nt_gbs: 9.1,
+            stream_socket_nont_gbs: 13.6,
+            olc_bytes_per_cycle_core: 6.0,
+            olc_scaling: 0.40,
+        }
+    }
+
+    /// The full testbed in the paper's column order.
+    pub fn testbed() -> Vec<Self> {
+        vec![
+            Self::core2_harpertown(),
+            Self::nehalem_ep(),
+            Self::westmere(),
+            Self::nehalem_ex(),
+            Self::istanbul(),
+        ]
+    }
+
+    /// Look a machine up by (case-insensitive, space/dash-insensitive) name.
+    pub fn by_name(name: &str) -> Option<Self> {
+        let norm = |s: &str| s.to_lowercase().replace([' ', '-', '_'], "");
+        Self::testbed().into_iter().find(|m| norm(&m.name) == norm(name))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn testbed_matches_tab1_topology() {
+        let tb = MachineSpec::testbed();
+        assert_eq!(tb.len(), 5);
+        let core2 = &tb[0];
+        assert_eq!(core2.cache_group_cores(), 2, "Harpertown = two L2 groups");
+        assert_eq!(core2.max_blocking_factor(false), 2);
+        let ep = &tb[1];
+        assert_eq!(ep.cache_group_cores(), 4);
+        assert_eq!(ep.max_blocking_factor(true), 8, "SMT doubles the factor");
+        let wm = &tb[2];
+        assert_eq!(wm.cache_group_cores(), 6);
+        let ex = &tb[3];
+        assert_eq!(ex.cache_group_cores(), 8);
+        assert_eq!(ex.l3.unwrap().bytes, 24 << 20);
+        let ist = &tb[4];
+        assert!(ist.exclusive);
+        assert_eq!(ist.smt_per_core, 1);
+    }
+
+    #[test]
+    fn bandwidth_saturates_at_socket_limit() {
+        let ep = MachineSpec::nehalem_ep();
+        assert!((ep.memory_bandwidth_gbs(1, true) - 11.0).abs() < 1e-12);
+        assert!((ep.memory_bandwidth_gbs(4, true) - 18.5).abs() < 1e-12);
+        assert!((ep.memory_bandwidth_gbs(8, true) - 18.5).abs() < 1e-12);
+        assert!(ep.memory_bandwidth_gbs(4, false) > ep.memory_bandwidth_gbs(4, true));
+    }
+
+    #[test]
+    fn ex_l3_scales_nearly_linearly() {
+        let ex = MachineSpec::nehalem_ex();
+        let b1 = ex.olc_bandwidth_gbs(1);
+        let b8 = ex.olc_bandwidth_gbs(8);
+        assert!(b8 / b1 > 7.0, "segmented L3 must scale: {}", b8 / b1);
+        let ep = MachineSpec::nehalem_ep();
+        let r = ep.olc_bandwidth_gbs(4) / ep.olc_bandwidth_gbs(1);
+        assert!(r < 3.0, "EP L3 must saturate: {r}");
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(MachineSpec::by_name("nehalem-ep").is_some());
+        assert!(MachineSpec::by_name("NEHALEM EX").is_some());
+        assert!(MachineSpec::by_name("core2").is_some());
+        assert!(MachineSpec::by_name("no-such").is_none());
+    }
+
+    #[test]
+    fn cache_level_sets() {
+        let l1 = CacheLevel { bytes: 32 << 10, assoc: 8, shared_by: 1 };
+        assert_eq!(l1.sets(), 64);
+    }
+}

@@ -1,0 +1,121 @@
+//! Data-traffic accounting: bytes each scheme moves per lattice-site update.
+//!
+//! The paper's whole argument is a traffic argument (Sec. 3–4): once the
+//! bus is saturated, performance is `bandwidth / bytes-per-LUP`, so every
+//! optimization is a reduction of the numerator. This module encodes the
+//! per-scheme accounting that feeds Eq. (1) and the ECM model.
+
+
+/// Where the working set lives — the two columns of Figs. 3/4.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dataset {
+    /// Fits in the outer-level cache (e.g. 100×50×50 ≈ 4 MB).
+    Cache,
+    /// Must stream from main memory (e.g. 400×200×200 ≈ 256 MB per array).
+    Memory,
+}
+
+/// Store instruction flavour.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StoreMode {
+    /// Non-temporal (streaming) stores: no write-allocate transfer.
+    NonTemporal,
+    /// Regular stores: each store line is first loaded (write-allocate).
+    WriteAllocate,
+}
+
+/// Main-memory bytes per LUP for one plain Jacobi update.
+///
+/// Fig. 2: with three planes resident in the outer cache only the `src`
+/// load stream misses (8 B) plus the `dst` store stream (8 B, +8 B
+/// write-allocate without NT stores).
+pub fn jacobi_mem_bytes_per_lup(store: StoreMode) -> f64 {
+    match store {
+        StoreMode::NonTemporal => 16.0,
+        StoreMode::WriteAllocate => 24.0,
+    }
+}
+
+/// Main-memory bytes per LUP for one Gauss-Seidel update.
+///
+/// In-place: the single array is loaded and stored; the in-place store
+/// cannot use NT stores (paper Sec. 3), but the store hits the line the
+/// load just brought in, so no *extra* write-allocate: 8 B in + 8 B out.
+pub fn gs_mem_bytes_per_lup() -> f64 {
+    16.0
+}
+
+/// Main-memory bytes per LUP for the wavefront scheme with blocking
+/// factor `t` (Sec. 4): one load of the initial sweep and one store of the
+/// final sweep amortized over `t` updates per site.
+///
+/// `boundary_overhead` adds the inter-block boundary-array traffic
+/// (t z-x planes per block interface; small, grows with block count).
+pub fn wavefront_mem_bytes_per_lup(t: usize, store: StoreMode, boundary_overhead: f64) -> f64 {
+    assert!(t >= 1);
+    jacobi_mem_bytes_per_lup(store) / t as f64 * (1.0 + boundary_overhead)
+}
+
+/// Outer-level-cache bytes per LUP inside a wavefront thread group.
+///
+/// Jacobi: each intermediate update reads its window from one array and
+/// writes to another (plus the in-cache write allocate) — ~24 B/LUP of
+/// OLC traffic. Gauss-Seidel is in place: read + write of one line,
+/// 16 B/LUP. The exclusive hierarchy (Istanbul) pays every transfer
+/// twice (victim copy-back), which is the paper's explanation for its
+/// disappointing wavefront gains.
+pub fn wavefront_olc_bytes_per_lup(is_gs: bool, exclusive: bool) -> f64 {
+    let base = if is_gs { 16.0 } else { 24.0 };
+    if exclusive {
+        2.0 * base
+    } else {
+        base
+    }
+}
+
+/// STREAM triad bus bytes per element: load b, load c, store a
+/// (+ write-allocate for a without NT stores).
+pub fn stream_triad_bytes_per_elem(store: StoreMode) -> f64 {
+    match store {
+        StoreMode::NonTemporal => 24.0,
+        StoreMode::WriteAllocate => 32.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq1_constants() {
+        assert_eq!(jacobi_mem_bytes_per_lup(StoreMode::NonTemporal), 16.0);
+        assert_eq!(jacobi_mem_bytes_per_lup(StoreMode::WriteAllocate), 24.0);
+        assert_eq!(gs_mem_bytes_per_lup(), 16.0);
+    }
+
+    #[test]
+    fn wavefront_divides_traffic_by_t() {
+        let base = jacobi_mem_bytes_per_lup(StoreMode::NonTemporal);
+        for t in 1..=8 {
+            let w = wavefront_mem_bytes_per_lup(t, StoreMode::NonTemporal, 0.0);
+            assert!((w - base / t as f64).abs() < 1e-12);
+        }
+        // boundary overhead strictly increases traffic
+        assert!(
+            wavefront_mem_bytes_per_lup(4, StoreMode::NonTemporal, 0.05)
+                > wavefront_mem_bytes_per_lup(4, StoreMode::NonTemporal, 0.0)
+        );
+    }
+
+    #[test]
+    fn exclusive_hierarchy_doubles_olc_traffic() {
+        for is_gs in [false, true] {
+            assert_eq!(
+                wavefront_olc_bytes_per_lup(is_gs, true),
+                2.0 * wavefront_olc_bytes_per_lup(is_gs, false)
+            );
+        }
+        // in-place GS moves less through the shared cache than Jacobi
+        assert!(wavefront_olc_bytes_per_lup(true, false) < wavefront_olc_bytes_per_lup(false, false));
+    }
+}

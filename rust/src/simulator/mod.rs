@@ -1,0 +1,36 @@
+//! The hardware testbed substrate (paper Sec. 2, Tab. 1).
+//!
+//! The paper's evaluation runs on five 2008–2010 x86 sockets. This box is
+//! a single-core sandbox, so — per the reproduction's substitution rule —
+//! the testbed is rebuilt as a simulator with three cooperating parts:
+//!
+//! * [`machine`] — parameterized machine descriptions carrying every
+//!   Tab. 1 quantity (clock, cores, SMT, cache topology, STREAM
+//!   bandwidths) for Harpertown, Nehalem EP, Westmere, Nehalem EX and
+//!   Istanbul.
+//! * [`ecm`] — an Execution-Cache-Memory analytic performance model (after
+//!   ref. [14] of the paper, by the same authors): per-cacheline in-core
+//!   cycles plus per-level transfer cycles, with the Intel no-overlap rule,
+//!   the Istanbul exclusive-cache penalty and the SMT bubble-filling model.
+//!   This is what regenerates every figure.
+//! * [`cache`] + [`trace`] — a set-associative LRU cache hierarchy
+//!   simulator driven by exact cacheline traces of the schedules, used to
+//!   *verify* the residency claims behind the wavefront scheme
+//!   ("intermediate planes never leave the shared cache") and to
+//!   cross-check the traffic terms the ECM model assumes.
+//!
+//! [`stream`] models the STREAM triad rows of Tab. 1; [`perfmodel`] holds
+//! Eq. (1) and the composite predictors used by the figure generators.
+
+pub mod cache;
+pub mod ecm;
+pub mod machine;
+pub mod memory;
+pub mod perfmodel;
+pub mod stream;
+pub mod trace;
+
+/// Cacheline size shared by every paper machine (Tab. 1 caption).
+pub const CACHELINE_BYTES: usize = 64;
+/// Doubles per cacheline.
+pub const DOUBLES_PER_CL: usize = CACHELINE_BYTES / 8;

@@ -1,0 +1,344 @@
+//! Composite performance predictors: Eq. (1) and the wavefront model.
+//!
+//! [`eq1_limit_mlups`] is the paper's Eq. (1): `P0 = M_S / 16 B` with the
+//! appropriate STREAM figure. [`wavefront_prediction`] combines the ECM
+//! kernel model, the traffic accounting, the OLC capacity constraint that
+//! drives spatial blocking, and the barrier cost model into the curves of
+//! Figs. 8–10.
+
+
+use super::ecm::{EcmModel, Kernel, KernelClass, Prediction};
+use super::machine::MachineSpec;
+use super::memory::{self, StoreMode};
+
+/// Paper Eq. (1): the bandwidth ceiling in MLUP/s.
+///
+/// Jacobi uses the NT-store STREAM figure over 16 B/LUP; Gauss-Seidel the
+/// no-NT figure (Sec. 3: "we therefore use the STREAM triad measurements
+/// without non-temporal stores in the performance model for Gauss-Seidel").
+pub fn eq1_limit_mlups(m: &MachineSpec, kernel: Kernel) -> f64 {
+    let ms = if kernel.is_gs() { m.stream_socket_nont_gbs } else { m.stream_socket_nt_gbs };
+    ms * 1e3 / 16.0
+}
+
+/// Synchronization primitive (Sec. 4: pthread barriers are unusable for
+/// fine-grained parallelism; spin barriers win for physical cores; tree
+/// barriers win as soon as SMT threads share cores).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum BarrierKind {
+    /// POSIX `pthread_barrier_t` (kernel futex round trip).
+    Pthread,
+    /// Busy-wait on a shared counter.
+    #[default]
+    Spin,
+    /// Pairwise tree of flags — O(log t) depth, SMT-friendly.
+    Tree,
+}
+
+impl BarrierKind {
+    /// Modeled cost in core cycles for `threads` participants.
+    ///
+    /// Calibration: a futex barrier costs O(µs) (~5000 cy); a spin barrier
+    /// ~100 cy per participant of coherence traffic, but spinning SMT
+    /// siblings steal pipeline slots from the worker thread (3× penalty);
+    /// a tree barrier pays ~150 cy per level of its log₂ depth.
+    pub fn cycles(self, threads: usize, smt: bool) -> f64 {
+        let t = threads.max(1) as f64;
+        match self {
+            BarrierKind::Pthread => 5000.0 + 400.0 * t,
+            BarrierKind::Spin => {
+                let base = 120.0 * t;
+                if smt {
+                    3.0 * base
+                } else {
+                    base
+                }
+            }
+            BarrierKind::Tree => 150.0 * (t.log2().ceil().max(1.0)) * if smt { 1.3 } else { 1.0 },
+        }
+    }
+}
+
+/// Configuration of a wavefront run (Sec. 4 parameters).
+#[derive(Clone, Copy, Debug)]
+pub struct WavefrontParams {
+    /// Threads per thread group = temporal blocking factor `t`.
+    pub t: usize,
+    /// Number of thread groups `N`.
+    pub groups: usize,
+    /// Use SMT hardware threads (two logical threads per core).
+    pub smt: bool,
+    /// Kernel the sweeps run.
+    pub kernel: Kernel,
+    /// Store flavour of the final sweep (Jacobi only).
+    pub store: StoreMode,
+    /// Synchronization primitive.
+    pub barrier: BarrierKind,
+}
+
+impl WavefrontParams {
+    /// The paper's standard configuration for a machine: one thread group
+    /// spanning the cache group, blocking factor = threads available.
+    pub fn standard(m: &MachineSpec, kernel: Kernel, smt: bool) -> Self {
+        Self {
+            t: m.max_blocking_factor(smt),
+            groups: m.cores / m.cache_group_cores(),
+            smt,
+            kernel,
+            store: StoreMode::NonTemporal,
+            barrier: if smt { BarrierKind::Tree } else { BarrierKind::Spin },
+        }
+    }
+
+    /// Logical threads this configuration occupies.
+    pub fn total_threads(&self) -> usize {
+        self.t * self.groups
+    }
+}
+
+/// Spatial blocking derived from the OLC capacity constraint (Sec. 4:
+/// "block sizes must be chosen so that the temporary data can be kept in
+/// the outermost cache level").
+#[derive(Clone, Copy, Debug)]
+pub struct Blocking {
+    /// Lines of y per block.
+    pub block_y: usize,
+    /// Number of blocks B along y.
+    pub blocks: usize,
+    /// Working-set bytes per thread group at this blocking.
+    pub working_set_bytes: usize,
+}
+
+/// Choose the y block size for a problem `(nz, ny, nx)`.
+///
+/// The rolling window holds `2t + 2` planes of `block_y × nx` doubles per
+/// thread group (t temporary planes + t source planes + halo); all groups
+/// share the OLC, of which a utilization fraction is realistically usable.
+pub fn choose_blocking(m: &MachineSpec, t: usize, groups: usize, ny: usize, nx: usize) -> Blocking {
+    const UTILIZATION: f64 = 0.5;
+    let cap = (m.olc_bytes() as f64 * UTILIZATION / groups.max(1) as f64) as usize;
+    let bytes_per_line = (2 * t + 2) * nx * 8;
+    let block_y = (cap / bytes_per_line).clamp(1, ny);
+    let blocks = ny.div_ceil(block_y);
+    Blocking { block_y, blocks, working_set_bytes: bytes_per_line * block_y }
+}
+
+/// Predicted wavefront performance for one problem size (Figs. 8–10).
+pub fn wavefront_prediction(
+    m: &MachineSpec,
+    p: &WavefrontParams,
+    (_nz, ny, nx): (usize, usize, usize),
+) -> Prediction {
+    let ecm = EcmModel::new(m.clone());
+    let smt_per_core = if p.smt { m.smt_per_core } else { 1 };
+    let physical_cores = p.total_threads().div_ceil(smt_per_core).min(m.cores);
+    let blocking = choose_blocking(m, p.t, p.groups, ny, nx);
+
+    // --- compute roofline: all t threads of each group do useful sweeps.
+    let class = KernelClass::of(p.kernel, m.arch);
+    let t_core = class.effective_cpl(smt_per_core);
+    // in-hierarchy transfers now go through the *shared* cache each step
+    let vol = memory::wavefront_olc_bytes_per_lup(p.kernel.is_gs(), m.exclusive);
+    let transfer = super::ecm::TransferModel::of(m);
+    let t_data = vol / transfer.l1l2_bpc + vol / transfer.l2olc_bpc * (m.clock_ghz / m.uncore_ghz);
+    let cpl = t_core + t_data;
+    let compute = physical_cores as f64 * m.clock_ghz * 1e3 / cpl;
+
+    // --- OLC bandwidth roofline: every intermediate update is an OLC
+    // round trip for all groups sharing it.
+    let olc = m.olc_bandwidth_gbs(physical_cores) * 1e3 / vol;
+
+    // --- memory roofline: 1/t of the baseline traffic + boundary arrays.
+    let boundary_overhead = if blocking.blocks > 1 {
+        // (B-1) interfaces × t planes × nz·nx sites × 16 B round trip per
+        // pass, relative to nz·ny·nx·t useful updates.
+        16.0 * (blocking.blocks as f64 - 1.0) / ny as f64 / 16.0
+    } else {
+        0.0
+    };
+    let mem_bytes = if p.kernel.is_gs() {
+        memory::gs_mem_bytes_per_lup() / p.t as f64 * (1.0 + boundary_overhead)
+    } else {
+        memory::wavefront_mem_bytes_per_lup(p.t, p.store, boundary_overhead)
+    };
+    let nt = matches!(p.store, StoreMode::NonTemporal) && !p.kernel.is_gs();
+    let mem = m.memory_bandwidth_gbs(p.total_threads(), nt) * 1e3 / mem_bytes;
+
+    // --- synchronization efficiency: one barrier per block-plane step.
+    let sites_between_barriers = (blocking.block_y * nx) as f64;
+    let work_cycles = sites_between_barriers * cpl;
+    let barrier_cycles = p.barrier.cycles(p.t, p.smt);
+    let sync_eff = work_cycles / (work_cycles + barrier_cycles);
+
+    let pred = Prediction::min3(compute, olc, mem, sync_eff);
+    let _ = ecm; // EcmModel retained for API symmetry / future terms
+    pred
+}
+
+/// Baseline threaded prediction at the paper's 200³ reference size.
+pub fn baseline_threaded(m: &MachineSpec, kernel: Kernel, store: StoreMode) -> Prediction {
+    let ecm = EcmModel::new(m.clone());
+    ecm.socket(kernel, memory::Dataset::Memory, store, m.cores, false)
+}
+
+/// Speedup of the wavefront configuration over the threaded baseline.
+pub fn wavefront_speedup(
+    m: &MachineSpec,
+    p: &WavefrontParams,
+    problem: (usize, usize, usize),
+) -> f64 {
+    let base_store = if p.kernel.is_gs() { StoreMode::WriteAllocate } else { StoreMode::NonTemporal };
+    let base = baseline_threaded(m, p.kernel, base_store).mlups;
+    wavefront_prediction(m, p, problem).mlups / base
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SIZE: (usize, usize, usize) = (200, 200, 200);
+
+    #[test]
+    fn eq1_matches_paper_arithmetic() {
+        let ep = MachineSpec::nehalem_ep();
+        // 18.5 GB/s / 16 B = 1156 MLUP/s
+        assert!((eq1_limit_mlups(&ep, Kernel::JacobiOpt) - 1156.25).abs() < 0.1);
+        // GS uses the noNT figure: 23.7 / 16 = 1481
+        assert!((eq1_limit_mlups(&ep, Kernel::GsOpt) - 1481.25).abs() < 0.1);
+    }
+
+    #[test]
+    fn pthread_barrier_is_unusable_spin_wins_tree_wins_smt() {
+        // Sec. 4's synchronization findings.
+        for t in [2usize, 4, 6, 8] {
+            let pthread = BarrierKind::Pthread.cycles(t, false);
+            let spin = BarrierKind::Spin.cycles(t, false);
+            let tree = BarrierKind::Tree.cycles(t, false);
+            assert!(spin < pthread && tree < pthread);
+            assert!(spin <= tree * 6.0);
+        }
+        // with SMT the tree barrier must beat the spin barrier
+        for t in [4usize, 8, 12, 16] {
+            assert!(
+                BarrierKind::Tree.cycles(t, true) < BarrierKind::Spin.cycles(t, true),
+                "t={t}"
+            );
+        }
+    }
+
+    #[test]
+    fn blocking_respects_olc_capacity() {
+        for m in MachineSpec::testbed() {
+            let t = m.max_blocking_factor(false);
+            let b = choose_blocking(&m, t, 1, 200, 200);
+            assert!(b.block_y >= 1);
+            assert!(b.working_set_bytes <= m.olc_bytes());
+            assert_eq!(b.blocks, 200usize.div_ceil(b.block_y));
+        }
+    }
+
+    #[test]
+    fn jacobi_wavefront_speedups_match_fig8_shape() {
+        // Fig. 8 prose: Core 2 ≈ 2×; Nehalem EP 1.25–1.5×; Nehalem EX ≈ 4×;
+        // Istanbul comparable to Nehalem EP despite its bigger gap.
+        let check = |m: MachineSpec, lo: f64, hi: f64| {
+            let p = WavefrontParams::standard(&m, Kernel::JacobiOpt, false);
+            let s = wavefront_speedup(&m, &p, SIZE);
+            assert!(s >= lo && s <= hi, "{}: speedup {s} ∉ [{lo},{hi}]", m.name);
+        };
+        check(MachineSpec::core2_harpertown(), 1.6, 2.6);
+        check(MachineSpec::nehalem_ep(), 1.1, 1.7);
+        check(MachineSpec::westmere(), 1.2, 2.0);
+        check(MachineSpec::nehalem_ex(), 3.0, 5.0);
+        check(MachineSpec::istanbul(), 1.0, 2.0);
+    }
+
+    #[test]
+    fn gs_wavefront_speedups_match_fig9_shape() {
+        // Fig. 9 prose: Core 2 ≈ 2×; EP 1.3–1.4×; Westmere > 1.5×; EX 3.8×.
+        let check = |m: MachineSpec, lo: f64, hi: f64| {
+            let p = WavefrontParams::standard(&m, Kernel::GsOpt, false);
+            let s = wavefront_speedup(&m, &p, SIZE);
+            assert!(s >= lo && s <= hi, "{}: speedup {s} ∉ [{lo},{hi}]", m.name);
+        };
+        check(MachineSpec::core2_harpertown(), 1.5, 2.5);
+        check(MachineSpec::nehalem_ep(), 1.1, 1.8);
+        check(MachineSpec::westmere(), 1.3, 2.2);
+        check(MachineSpec::nehalem_ex(), 2.8, 4.8);
+        check(MachineSpec::istanbul(), 1.0, 2.2);
+    }
+
+    #[test]
+    fn smt_lifts_gs_wavefront_to_fig10_levels() {
+        // Fig. 10 prose: EP and Westmere reach ≈ 2.5× their threaded
+        // baseline; EX reaches up to 5×; EP/Westmere/EX end up comparable.
+        for (m, lo, hi) in [
+            (MachineSpec::nehalem_ep(), 2.0, 3.2),
+            (MachineSpec::westmere(), 1.8, 3.2),
+            (MachineSpec::nehalem_ex(), 3.5, 5.5),
+        ] {
+            let p = WavefrontParams::standard(&m, Kernel::GsOpt, true);
+            let s = wavefront_speedup(&m, &p, SIZE);
+            assert!(s >= lo && s <= hi, "{}: SMT speedup {s} ∉ [{lo},{hi}]", m.name);
+        }
+        // absolute performance plateau: EP ≈ Westmere ≈ EX within 35%
+        let perf: Vec<f64> = [MachineSpec::nehalem_ep(), MachineSpec::westmere(), MachineSpec::nehalem_ex()]
+            .into_iter()
+            .map(|m| {
+                let p = WavefrontParams::standard(&m, Kernel::GsOpt, true);
+                wavefront_prediction(&m, &p, SIZE).mlups
+            })
+            .collect();
+        let max = perf.iter().cloned().fold(0.0, f64::max);
+        let min = perf.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(max / min < 1.6, "plateau spread too wide: {perf:?}");
+    }
+
+    #[test]
+    fn smt_gain_small_on_ex_for_gs() {
+        // Paper: "The SMT benefit on Nehalem EX is not that large" —
+        // it is already arithmetically limited.
+        let ex = MachineSpec::nehalem_ex();
+        let p_no = WavefrontParams::standard(&ex, Kernel::GsOpt, false);
+        let p_smt = WavefrontParams::standard(&ex, Kernel::GsOpt, true);
+        let gain = wavefront_prediction(&ex, &p_smt, SIZE).mlups
+            / wavefront_prediction(&ex, &p_no, SIZE).mlups;
+        let ep = MachineSpec::nehalem_ep();
+        let e_no = WavefrontParams::standard(&ep, Kernel::GsOpt, false);
+        let e_smt = WavefrontParams::standard(&ep, Kernel::GsOpt, true);
+        let gain_ep = wavefront_prediction(&ep, &e_smt, SIZE).mlups
+            / wavefront_prediction(&ep, &e_no, SIZE).mlups;
+        assert!(gain < gain_ep, "EX SMT gain {gain} !< EP {gain_ep}");
+    }
+}
+
+#[cfg(test)]
+mod diag {
+    use super::*;
+
+    #[test]
+    #[ignore]
+    fn print_components() {
+        const SIZE: (usize, usize, usize) = (200, 200, 200);
+        for m in MachineSpec::testbed() {
+            for (kernel, smt) in [
+                (Kernel::JacobiOpt, false),
+                (Kernel::GsOpt, false),
+                (Kernel::GsOpt, true),
+            ] {
+                if smt && m.smt_per_core < 2 { continue; }
+                let p = WavefrontParams::standard(&m, kernel, smt);
+                let pred = wavefront_prediction(&m, &p, SIZE);
+                let store = if kernel.is_gs() { StoreMode::WriteAllocate } else { StoreMode::NonTemporal };
+                let base = baseline_threaded(&m, kernel, store);
+                println!(
+                    "{:<11} {:?} smt={} t={} | wf: {:.0} (c {:.0} olc {:.0} mem {:.0} sync {:.2}) | base {:.0} (c {:.0} olc {:.0} mem {:.0}) | speedup {:.2}",
+                    m.name, kernel, smt, p.t,
+                    pred.mlups, pred.compute_mlups, pred.olc_mlups, pred.mem_mlups, pred.sync_efficiency,
+                    base.mlups, base.compute_mlups, base.olc_mlups, base.mem_mlups,
+                    pred.mlups / base.mlups
+                );
+            }
+        }
+    }
+}

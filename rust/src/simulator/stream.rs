@@ -1,0 +1,90 @@
+//! STREAM triad model — regenerates the bandwidth rows of Tab. 1.
+//!
+//! Tab. 1 reports three STREAM numbers per machine: single-thread triad,
+//! socket triad with NT stores, and socket triad counting the full bus
+//! traffic (write-allocate included) without NT stores. The machine specs
+//! carry the measured end points; this module reconstructs the whole
+//! thread-scaling curve from them (saturating-bus model) so the Tab. 1
+//! generator and the baseline figures can query bandwidth at any thread
+//! count, and so the real in-process triad ([`crate::stencil::streambench`])
+//! can be compared against the model on this box.
+
+use super::machine::MachineSpec;
+use super::memory::{stream_triad_bytes_per_elem, StoreMode};
+
+/// One row of the Tab. 1 bandwidth block.
+#[derive(Clone, Debug)]
+pub struct StreamRow {
+    pub machine: String,
+    pub bw_theoretical_gbs: f64,
+    pub stream_1t_gbs: f64,
+    pub stream_socket_nt_gbs: f64,
+    pub stream_socket_nont_gbs: f64,
+    /// Fraction of the theoretical bus the NT triad achieves.
+    pub nt_efficiency: f64,
+}
+
+/// Modeled triad bandwidth for `n` threads (GB/s of *useful* traffic).
+pub fn triad_bandwidth_gbs(m: &MachineSpec, n_threads: usize, store: StoreMode) -> f64 {
+    let nt = matches!(store, StoreMode::NonTemporal);
+    m.memory_bandwidth_gbs(n_threads, nt)
+}
+
+/// Triad performance in updates/s for `n` threads — the quantity a user
+/// observes; bandwidth divided by bytes per element.
+pub fn triad_updates_per_sec(m: &MachineSpec, n_threads: usize, store: StoreMode) -> f64 {
+    triad_bandwidth_gbs(m, n_threads, store) * 1e9 / stream_triad_bytes_per_elem(store)
+}
+
+/// Regenerate the Tab. 1 bandwidth block for the whole testbed.
+pub fn tab1_rows() -> Vec<StreamRow> {
+    MachineSpec::testbed()
+        .into_iter()
+        .map(|m| StreamRow {
+            nt_efficiency: m.stream_socket_nt_gbs / m.bw_theoretical_gbs,
+            machine: m.name.clone(),
+            bw_theoretical_gbs: m.bw_theoretical_gbs,
+            stream_1t_gbs: m.stream_1t_gbs,
+            stream_socket_nt_gbs: m.stream_socket_nt_gbs,
+            stream_socket_nont_gbs: m.stream_socket_nont_gbs,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tab1_has_five_machines_with_sane_numbers() {
+        let rows = tab1_rows();
+        assert_eq!(rows.len(), 5);
+        for r in &rows {
+            assert!(r.stream_1t_gbs > 0.0);
+            assert!(r.stream_socket_nt_gbs <= r.bw_theoretical_gbs,
+                "{}: STREAM cannot beat the bus", r.machine);
+            assert!(r.stream_socket_nont_gbs >= r.stream_socket_nt_gbs,
+                "{}: noNT row counts write-allocate traffic too", r.machine);
+            assert!(r.nt_efficiency > 0.2 && r.nt_efficiency <= 1.0);
+        }
+    }
+
+    #[test]
+    fn triad_scaling_saturates() {
+        let ep = MachineSpec::nehalem_ep();
+        let one = triad_bandwidth_gbs(&ep, 1, StoreMode::NonTemporal);
+        let four = triad_bandwidth_gbs(&ep, 4, StoreMode::NonTemporal);
+        let eight = triad_bandwidth_gbs(&ep, 8, StoreMode::NonTemporal);
+        assert!(four > one);
+        assert_eq!(four, eight, "socket limit reached");
+    }
+
+    #[test]
+    fn updates_per_sec_accounts_write_allocate() {
+        let wm = MachineSpec::westmere();
+        let nt = triad_updates_per_sec(&wm, 6, StoreMode::NonTemporal);
+        let wa = triad_updates_per_sec(&wm, 6, StoreMode::WriteAllocate);
+        // NT wins on updates/s even though the noNT *bus* figure is larger.
+        assert!(nt > wa, "nt={nt} wa={wa}");
+    }
+}

@@ -1,0 +1,286 @@
+//! Exact cacheline access traces for stencil schedules.
+//!
+//! Bridges the coordinator's schedules and the cache simulator: each
+//! generator emits the memory access stream (cacheline granularity) that a
+//! schedule produces, with realistic array placement, so the hierarchy
+//! simulator can measure what actually stays in cache. This is the
+//! verification path for the paper's central claim — the wavefront scheme
+//! turns `t` sweeps' worth of memory traffic into one.
+
+use super::cache::Hierarchy;
+use super::CACHELINE_BYTES;
+
+/// One memory access of a trace.
+#[derive(Clone, Copy, Debug)]
+pub struct Access {
+    /// Executing core (logical thread mapped to a core).
+    pub core: usize,
+    /// Byte address.
+    pub addr: u64,
+    pub write: bool,
+    /// Non-temporal store (bypasses the hierarchy).
+    pub nt: bool,
+}
+
+/// A sequence of accesses in (simulated) program order.
+pub type Trace = Vec<Access>;
+
+/// Grid dimensions used by the generators.
+#[derive(Clone, Copy, Debug)]
+pub struct Dims {
+    pub nz: usize,
+    pub ny: usize,
+    pub nx: usize,
+}
+
+impl Dims {
+    pub fn new(nz: usize, ny: usize, nx: usize) -> Self {
+        Self { nz, ny, nx }
+    }
+    #[inline]
+    fn idx(&self, k: usize, j: usize, i: usize) -> u64 {
+        ((k * self.ny + j) * self.nx + i) as u64
+    }
+    /// Bytes of one array.
+    pub fn bytes(&self) -> u64 {
+        (self.nz * self.ny * self.nx * 8) as u64
+    }
+    /// Interior lattice sites.
+    pub fn interior(&self) -> u64 {
+        ((self.nz - 2) * (self.ny - 2) * (self.nx - 2)) as u64
+    }
+}
+
+/// Array placement: spaced, page-aligned base addresses.
+#[derive(Clone, Copy, Debug)]
+pub struct Layout {
+    pub src: u64,
+    pub dst: u64,
+    pub rhs: u64,
+    pub tmp: u64,
+}
+
+impl Layout {
+    pub fn for_dims(d: Dims) -> Self {
+        let span = (d.bytes() + 4096).next_multiple_of(4096);
+        Self { src: 0, dst: span, rhs: 2 * span, tmp: 3 * span }
+    }
+}
+
+/// Append the accesses of one x-line of a stream (every cacheline once).
+fn touch_line(trace: &mut Trace, core: usize, base: u64, d: Dims, k: usize, j: usize, write: bool, nt: bool) {
+    let start = base + d.idx(k, j, 0) * 8;
+    let end = base + d.idx(k, j, d.nx - 1) * 8;
+    let mut addr = start & !(CACHELINE_BYTES as u64 - 1);
+    while addr <= end {
+        trace.push(Access { core, addr, write, nt });
+        addr += CACHELINE_BYTES as u64;
+    }
+}
+
+/// Accesses of one Jacobi line update (Fig. 2's five read streams + store).
+#[allow(clippy::too_many_arguments)]
+fn jacobi_line(
+    trace: &mut Trace,
+    core: usize,
+    src: u64,
+    dst: u64,
+    rhs: u64,
+    d: Dims,
+    k: usize,
+    j: usize,
+    nt_store: bool,
+) {
+    touch_line(trace, core, src, d, k, j - 1, false, false);
+    touch_line(trace, core, src, d, k, j, false, false);
+    touch_line(trace, core, src, d, k, j + 1, false, false);
+    touch_line(trace, core, src, d, k - 1, j, false, false);
+    touch_line(trace, core, src, d, k + 1, j, false, false);
+    touch_line(trace, core, rhs, d, k, j, false, false);
+    touch_line(trace, core, dst, d, k, j, true, nt_store);
+}
+
+/// Serial Jacobi sweep trace (the paper's baseline, one core).
+pub fn jacobi_sweep_trace(d: Dims, nt_store: bool) -> Trace {
+    let l = Layout::for_dims(d);
+    let mut t = Trace::new();
+    for k in 1..d.nz - 1 {
+        for j in 1..d.ny - 1 {
+            jacobi_line(&mut t, 0, l.src, l.dst, l.rhs, d, k, j, nt_store);
+        }
+    }
+    t
+}
+
+/// `n` serial Jacobi sweeps (ping-pong buffers) — baseline for `n` updates.
+pub fn jacobi_steps_trace(d: Dims, n: usize, nt_store: bool) -> Trace {
+    let l = Layout::for_dims(d);
+    let mut t = Trace::new();
+    let (mut a, mut b) = (l.src, l.dst);
+    for _ in 0..n {
+        for k in 1..d.nz - 1 {
+            for j in 1..d.ny - 1 {
+                jacobi_line(&mut t, 0, a, b, l.rhs, d, k, j, nt_store);
+            }
+        }
+        std::mem::swap(&mut a, &mut b);
+    }
+    t
+}
+
+/// Wavefront Jacobi trace: one thread group of `t` threads (= blocking
+/// factor), barrier-synchronized plane rounds, temporary array of `2t`
+/// z-x planes reused round-robin (Sec. 4 / Fig. 6).
+///
+/// Thread `s` performs update step `s+1`; even steps (0-based threads with
+/// even index) read `src`-side and write `tmp`-side and vice versa, the
+/// final thread stores to `src` (in-place semantics of the scheme). Thread
+/// `s` processes plane `r - 2s` in round `r` — the spatial shift of 2.
+pub fn wavefront_jacobi_trace(d: Dims, t: usize, nt_store: bool) -> Trace {
+    assert!(t >= 2 && t % 2 == 0, "paper configurations use even t >= 2");
+    let l = Layout::for_dims(d);
+    let mut trace = Trace::new();
+    let tmp_planes = 2 * t as u64;
+    let plane_bytes = (d.ny * d.nx * 8) as u64;
+    // tmp plane address for logical plane k of odd-update level `lvl`
+    let tmp_addr = |lvl: u64, k: usize| {
+        l.tmp + (lvl * tmp_planes / 2 + (k as u64 % (tmp_planes / 2))) * plane_bytes
+    };
+    let last_round = (d.nz - 2) + 2 * (t - 1);
+    for r in 1..=last_round {
+        for s in 0..t {
+            let k = r as isize - 2 * s as isize;
+            if k < 1 || k as usize > d.nz - 2 {
+                continue;
+            }
+            let k = k as usize;
+            let lvl = (s / 2) as u64;
+            // read side: thread 0 reads src; odd threads read tmp planes
+            // written by thread s-1; even threads read src planes written
+            // by thread s-1.
+            for dk in [-1isize, 0, 1] {
+                let kk = (k as isize + dk).clamp(0, d.nz as isize - 1) as usize;
+                if s % 2 == 0 {
+                    // reads from src (level s state)
+                    for j in 1..d.ny - 1 {
+                        touch_line(&mut trace, s, l.src, d, kk, j, false, false);
+                    }
+                } else {
+                    let a = tmp_addr(lvl, kk);
+                    for j in 1..d.ny - 1 {
+                        let start = a + (j * d.nx * 8) as u64;
+                        let mut addr = start & !(CACHELINE_BYTES as u64 - 1);
+                        let end = a + ((j + 1) * d.nx * 8 - 8) as u64;
+                        while addr <= end {
+                            trace.push(Access { core: s, addr, write: false, nt: false });
+                            addr += CACHELINE_BYTES as u64;
+                        }
+                    }
+                }
+            }
+            // rhs stream (first update only needs it in the Poisson case;
+            // every level reads it in general)
+            for j in 1..d.ny - 1 {
+                touch_line(&mut trace, s, l.rhs, d, k, j, false, false);
+            }
+            // write side
+            if s % 2 == 0 {
+                let a = tmp_addr(lvl, k);
+                for j in 1..d.ny - 1 {
+                    let start = a + (j * d.nx * 8) as u64;
+                    let mut addr = start & !(CACHELINE_BYTES as u64 - 1);
+                    let end = a + ((j + 1) * d.nx * 8 - 8) as u64;
+                    while addr <= end {
+                        trace.push(Access { core: s, addr, write: true, nt: false });
+                        addr += CACHELINE_BYTES as u64;
+                    }
+                }
+            } else {
+                let nt = nt_store && s == t - 1;
+                for j in 1..d.ny - 1 {
+                    touch_line(&mut trace, s, l.src, d, k, j, true, nt);
+                }
+            }
+        }
+    }
+    trace
+}
+
+/// Run a trace against a hierarchy; returns memory bytes moved.
+pub fn run_trace(h: &mut Hierarchy, trace: &Trace) -> u64 {
+    for a in trace {
+        if a.nt {
+            h.nt_store(a.core, a.addr);
+        } else {
+            h.access(a.core, a.addr, a.write);
+        }
+    }
+    h.mem_bytes()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::cache::Hierarchy;
+
+    const D: Dims = Dims { nz: 34, ny: 32, nx: 32 };
+
+    /// A hierarchy scaled so one plane set fits the OLC but the full grid
+    /// does not: grid = 256 KB/array, OLC = 128 KB.
+    fn small_hierarchy(cores: usize) -> Hierarchy {
+        Hierarchy::uniform(cores, 8 << 10, 32 << 10, 384 << 10)
+    }
+
+    #[test]
+    fn baseline_traffic_near_model() {
+        // One sweep over a memory-resident grid: ≥ src load + dst store.
+        let mut h = small_hierarchy(1);
+        let t = jacobi_sweep_trace(D, false);
+        let mem = run_trace(&mut h, &t) as f64;
+        let per_lup = mem / D.interior() as f64;
+        assert!(per_lup >= 14.0, "at least load+store per LUP, got {per_lup}");
+        assert!(per_lup <= 40.0, "three-plane reuse must hold, got {per_lup}");
+    }
+
+    #[test]
+    fn nt_stores_reduce_baseline_traffic() {
+        let mut h1 = small_hierarchy(1);
+        let mut h2 = small_hierarchy(1);
+        let m_wa = run_trace(&mut h1, &jacobi_sweep_trace(D, false));
+        let m_nt = run_trace(&mut h2, &jacobi_sweep_trace(D, true));
+        assert!(m_nt < m_wa, "NT {m_nt} !< WA {m_wa}");
+    }
+
+    #[test]
+    fn wavefront_cuts_memory_traffic_versus_t_sweeps() {
+        // The paper's core claim, verified in silico: t temporally blocked
+        // updates move a fraction of the traffic of t separate sweeps.
+        let t = 4;
+        let mut h_base = small_hierarchy(1);
+        let base = run_trace(&mut h_base, &jacobi_steps_trace(D, t, false)) as f64;
+        let mut h_wf = small_hierarchy(t);
+        let wf = run_trace(&mut h_wf, &wavefront_jacobi_trace(D, t, false)) as f64;
+        assert!(
+            wf < 0.55 * base,
+            "wavefront {wf:.0} B should be well under t-sweep baseline {base:.0} B"
+        );
+    }
+
+    #[test]
+    fn wavefront_intermediate_planes_hit_shared_cache() {
+        let mut h = small_hierarchy(4);
+        run_trace(&mut h, &wavefront_jacobi_trace(D, 4, false));
+        let olc = h.olc_stats();
+        assert!(olc.hit_rate() > 0.5, "OLC hit rate {}", olc.hit_rate());
+    }
+
+    #[test]
+    fn traces_are_nonempty_and_cover_interior() {
+        let t = jacobi_sweep_trace(D, false);
+        assert!(!t.is_empty());
+        let writes = t.iter().filter(|a| a.write).count() as u64;
+        // one dst line per (k,j): (nz-2)(ny-2) line walks of nx/8 lines
+        let lines = (D.nz as u64 - 2) * (D.ny as u64 - 2);
+        assert_eq!(writes, lines * (D.nx as u64 * 8).div_ceil(64));
+    }
+}

@@ -1,0 +1,244 @@
+//! The lexicographic Gauss-Seidel smoother (paper Sec. 3).
+//!
+//! In-place update for a Laplace problem:
+//!
+//! ```text
+//! u[k][j][i] = 1/6 ( u[k][j][i-1] + u[k][j][i+1]      // new , old
+//!                  + u[k][j-1][i] + u[k][j+1][i]      // new , old
+//!                  + u[k-1][j][i] + u[k+1][j][i] )    // new , old
+//! ```
+//!
+//! The recursion on the central line rules out SIMD and limits pipelining;
+//! the paper's optimized assembly kernel *interleaves two updates* to break
+//! register dependency chains. [`gs_line_update_interleaved`] transcribes
+//! that exact transformation (the `tmp1`/`tmp2` rotation of the listing) —
+//! it is bit-identical to the naive recursion but exposes two independent
+//! dependency chains to the out-of-order core, which is why it exists as a
+//! separate function: the ECM model assigns it a lower in-core cycle count
+//! ([`crate::simulator::ecm`]), reproducing the asm-vs-C gap of Fig. 4.
+
+use super::grid::Grid3;
+use super::jacobi::ONE_SIXTH;
+
+/// Naive GS line update: the straight C listing ("C" curves of Fig. 4).
+///
+/// `line` is updated in place; `ym_new` is line `j-1` *after* its update
+/// this sweep, `yp_old` line `j+1` before, `zm_new`/`zp_old` likewise for
+/// the z neighbors.
+#[inline]
+pub fn gs_line_update_naive(
+    line: &mut [f64],
+    ym_new: &[f64],
+    yp_old: &[f64],
+    zm_new: &[f64],
+    zp_old: &[f64],
+) {
+    let nx = line.len();
+    for i in 1..nx - 1 {
+        // Grouping matters: the recursion-free terms are summed first so
+        // that this variant is bit-identical to the interleaved kernel
+        // (same fp association), keeping the two comparable in tests.
+        line[i] = ONE_SIXTH
+            * (line[i - 1]
+                + (line[i + 1] + ym_new[i] + yp_old[i] + zm_new[i] + zp_old[i]));
+    }
+}
+
+/// Dependency-interleaved GS line update (the paper's optimized kernel).
+///
+/// Precomputes the recursion-free partial sums (`tmp` terms) one iteration
+/// ahead so two updates are in flight, "partially hiding the recursion".
+/// Numerically identical to [`gs_line_update_naive`]: the fp operation
+/// order per site is preserved (same adds, same final multiply).
+#[inline]
+pub fn gs_line_update_interleaved(
+    line: &mut [f64],
+    ym_new: &[f64],
+    yp_old: &[f64],
+    zm_new: &[f64],
+    zp_old: &[f64],
+) {
+    let nx = line.len();
+    if nx < 3 {
+        return;
+    }
+    let b = ONE_SIXTH;
+    // tmp_i = sum of the recursion-free terms of site i.
+    let mut tmp1 = line[2] + ym_new[1] + yp_old[1] + zm_new[1] + zp_old[1];
+    let mut i = 1;
+    while i + 1 < nx - 1 {
+        // One iteration ahead: gather site i+1's independent terms while
+        // site i's update closes its dependency chain — the `tmp1 = tmp2`
+        // rotation of the paper's listing.
+        let tmp2 = line[i + 2] + ym_new[i + 1] + yp_old[i + 1] + zm_new[i + 1] + zp_old[i + 1];
+        line[i] = b * (line[i - 1] + tmp1);
+        tmp1 = tmp2;
+        i += 1;
+    }
+    // Last interior site (no successor to prefetch).
+    line[i] = b * (line[i - 1] + tmp1);
+}
+
+/// Which line-update kernel a sweep uses (the C vs asm axis of Fig. 4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum GsKernel {
+    /// Straightforward recursion (the paper's "C" baseline).
+    Naive,
+    /// Two-way interleaved updates (the paper's optimized assembly).
+    #[default]
+    Interleaved,
+}
+
+/// Update one interior plane `k` in place (lexicographic order in y).
+pub fn gs_plane(u: &mut Grid3, k: usize, kernel: GsKernel) {
+    debug_assert!(k >= 1 && k + 1 < u.nz);
+    let ny = u.ny;
+    for j in 1..ny - 1 {
+        gs_plane_line(u, k, j, kernel);
+    }
+}
+
+/// Update one interior line `(k, j)` in place.
+///
+/// The dispatch granularity of the pipeline-parallel schedules (Fig. 5).
+#[inline]
+pub fn gs_plane_line(u: &mut Grid3, k: usize, j: usize, kernel: GsKernel) {
+    let (ny, nx) = (u.ny, u.nx);
+    // SAFETY: exclusive access via &mut; the five lines are disjoint.
+    unsafe { gs_plane_line_raw(u.data_mut().as_mut_ptr(), ny, nx, k, j, kernel) }
+}
+
+/// Raw-pointer variant of [`gs_plane_line`] for the threaded schedules,
+/// where several threads update disjoint lines of one shared grid.
+///
+/// # Safety
+/// `base` must point to an `nz × ny × nx` grid with `1 ≤ k < nz-1`,
+/// `1 ≤ j < ny-1`; the caller must guarantee that line `(k, j)` is not
+/// accessed concurrently and that the four neighbor lines are not
+/// concurrently *written* (the pipeline progress protocol provides this).
+#[inline]
+pub unsafe fn gs_plane_line_raw(
+    base: *mut f64,
+    ny: usize,
+    nx: usize,
+    k: usize,
+    j: usize,
+    kernel: GsKernel,
+) {
+    let at = |kk: usize, jj: usize| (kk * ny + jj) * nx;
+    let ym_new = std::slice::from_raw_parts(base.add(at(k, j - 1)), nx);
+    let yp_old = std::slice::from_raw_parts(base.add(at(k, j + 1)), nx);
+    let zm_new = std::slice::from_raw_parts(base.add(at(k - 1, j)), nx);
+    let zp_old = std::slice::from_raw_parts(base.add(at(k + 1, j)), nx);
+    let line = std::slice::from_raw_parts_mut(base.add(at(k, j)), nx);
+    match kernel {
+        GsKernel::Naive => gs_line_update_naive(line, ym_new, yp_old, zm_new, zp_old),
+        GsKernel::Interleaved => gs_line_update_interleaved(line, ym_new, yp_old, zm_new, zp_old),
+    }
+}
+
+/// One full in-place lexicographic GS sweep.
+pub fn gs_sweep(u: &mut Grid3, kernel: GsKernel) {
+    if u.nz < 3 || u.ny < 3 || u.nx < 3 {
+        return;
+    }
+    for k in 1..u.nz - 1 {
+        gs_plane(u, k, kernel);
+    }
+}
+
+/// `n` in-place GS sweeps.
+pub fn gs_sweeps(u: &mut Grid3, n: usize, kernel: GsKernel) {
+    for _ in 0..n {
+        gs_sweep(u, kernel);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stencil::residual::laplace_residual_norm;
+
+    #[test]
+    fn interleaved_is_bit_identical_to_naive() {
+        for seed in 0..5 {
+            let mut a = Grid3::random(7, 6, 9, seed);
+            let mut b = a.clone();
+            gs_sweep(&mut a, GsKernel::Naive);
+            gs_sweep(&mut b, GsKernel::Interleaved);
+            assert_eq!(a.max_abs_diff(&b), 0.0, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn interleaved_handles_short_lines() {
+        // nx = 3: single interior site; nx = 4: two sites (loop + epilogue).
+        for nx in [3, 4, 5] {
+            let mut a = Grid3::random(4, 4, nx, 99);
+            let mut b = a.clone();
+            gs_sweep(&mut a, GsKernel::Naive);
+            gs_sweep(&mut b, GsKernel::Interleaved);
+            assert_eq!(a.max_abs_diff(&b), 0.0, "nx {nx}");
+        }
+    }
+
+    #[test]
+    fn matches_scalar_reference() {
+        let mut u = Grid3::random(5, 5, 5, 7);
+        let reference = {
+            let mut v = u.clone();
+            for k in 1..4 {
+                for j in 1..4 {
+                    for i in 1..4 {
+                        let val = ONE_SIXTH
+                            * (v.get(k, j, i - 1)
+                                + (v.get(k, j, i + 1)
+                                    + v.get(k, j - 1, i)
+                                    + v.get(k, j + 1, i)
+                                    + v.get(k - 1, j, i)
+                                    + v.get(k + 1, j, i)));
+                        v.set(k, j, i, val);
+                    }
+                }
+            }
+            v
+        };
+        gs_sweep(&mut u, GsKernel::Interleaved);
+        assert_eq!(u.max_abs_diff(&reference), 0.0);
+    }
+
+    #[test]
+    fn harmonic_fixed_point() {
+        let mut u = Grid3::from_fn(6, 6, 6, |k, j, i| {
+            i as f64 - 2.0 * j as f64 + 0.5 * k as f64
+        });
+        let orig = u.clone();
+        gs_sweep(&mut u, GsKernel::Interleaved);
+        assert!(u.max_abs_diff(&orig) < 1e-13);
+    }
+
+    #[test]
+    fn sweeps_reduce_laplace_residual() {
+        let mut u = Grid3::random(10, 10, 10, 3);
+        let r0 = laplace_residual_norm(&u);
+        gs_sweeps(&mut u, 3, GsKernel::Interleaved);
+        let r3 = laplace_residual_norm(&u);
+        assert!(r3 < 0.5 * r0, "r0={r0} r3={r3}");
+    }
+
+    #[test]
+    fn boundary_untouched() {
+        let mut u = Grid3::random(5, 6, 7, 5);
+        let orig = u.clone();
+        gs_sweep(&mut u, GsKernel::Interleaved);
+        for k in 0..5 {
+            for j in 0..6 {
+                for i in 0..7 {
+                    if u.is_boundary(k, j, i) {
+                        assert_eq!(u.get(k, j, i), orig.get(k, j, i));
+                    }
+                }
+            }
+        }
+    }
+}

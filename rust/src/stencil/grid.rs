@@ -1,0 +1,236 @@
+//! Contiguous 3D grids with the paper's memory layout.
+//!
+//! Layout is row-major `(z, y, x)` with `x` contiguous — the paper's Fig. 2
+//! mapping: the domain decomposes into *lines* (y) and *planes* (z), the
+//! innermost loop streams along x so the 7-point stencil becomes five read
+//! streams + one write stream.
+
+use std::fmt;
+
+/// A dense, double-precision 3D grid in `(z, y, x)` order.
+#[derive(Clone, PartialEq)]
+pub struct Grid3 {
+    /// Number of planes (z extent).
+    pub nz: usize,
+    /// Number of lines per plane (y extent).
+    pub ny: usize,
+    /// Line length (x extent, contiguous).
+    pub nx: usize,
+    data: Vec<f64>,
+}
+
+impl fmt::Debug for Grid3 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Grid3({}x{}x{})", self.nz, self.ny, self.nx)
+    }
+}
+
+impl Grid3 {
+    /// Zero-initialized grid.
+    pub fn zeros(nz: usize, ny: usize, nx: usize) -> Self {
+        Self { nz, ny, nx, data: vec![0.0; nz * ny * nx] }
+    }
+
+    /// Grid initialized from a function of the `(k, j, i)` index.
+    pub fn from_fn(nz: usize, ny: usize, nx: usize, f: impl Fn(usize, usize, usize) -> f64) -> Self {
+        let mut g = Self::zeros(nz, ny, nx);
+        for k in 0..nz {
+            for j in 0..ny {
+                for i in 0..nx {
+                    let idx = g.idx(k, j, i);
+                    g.data[idx] = f(k, j, i);
+                }
+            }
+        }
+        g
+    }
+
+    /// Deterministic pseudo-random grid (xorshift; test/bench workloads).
+    pub fn random(nz: usize, ny: usize, nx: usize, seed: u64) -> Self {
+        let mut state = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).max(1);
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            // map to (-1, 1)
+            (state as f64 / u64::MAX as f64) * 2.0 - 1.0
+        };
+        let data = (0..nz * ny * nx).map(|_| next()).collect();
+        Self { nz, ny, nx, data }
+    }
+
+    /// Total number of lattice sites.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True when the grid has no sites.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Number of *interior* (updateable) sites.
+    #[inline]
+    pub fn interior_len(&self) -> usize {
+        self.nz.saturating_sub(2) * self.ny.saturating_sub(2) * self.nx.saturating_sub(2)
+    }
+
+    /// Linear index of `(k, j, i)`.
+    #[inline(always)]
+    pub fn idx(&self, k: usize, j: usize, i: usize) -> usize {
+        (k * self.ny + j) * self.nx + i
+    }
+
+    /// Value at `(k, j, i)`.
+    #[inline(always)]
+    pub fn get(&self, k: usize, j: usize, i: usize) -> f64 {
+        self.data[self.idx(k, j, i)]
+    }
+
+    /// Mutable value at `(k, j, i)`.
+    #[inline(always)]
+    pub fn set(&mut self, k: usize, j: usize, i: usize, v: f64) {
+        let idx = self.idx(k, j, i);
+        self.data[idx] = v;
+    }
+
+    /// Raw data slice.
+    #[inline]
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Mutable raw data slice.
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// One x-line `(k, j, ..)` as a slice.
+    #[inline]
+    pub fn line(&self, k: usize, j: usize) -> &[f64] {
+        let s = self.idx(k, j, 0);
+        &self.data[s..s + self.nx]
+    }
+
+    /// One x-line as a mutable slice.
+    #[inline]
+    pub fn line_mut(&mut self, k: usize, j: usize) -> &mut [f64] {
+        let s = self.idx(k, j, 0);
+        &mut self.data[s..s + self.nx]
+    }
+
+    /// One z-plane as a slice of `ny * nx` values.
+    #[inline]
+    pub fn plane(&self, k: usize) -> &[f64] {
+        let s = self.idx(k, 0, 0);
+        &self.data[s..s + self.ny * self.nx]
+    }
+
+    /// Maximum absolute difference against another grid of the same shape.
+    pub fn max_abs_diff(&self, other: &Self) -> f64 {
+        assert_eq!(self.shape(), other.shape(), "shape mismatch");
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Shape tuple `(nz, ny, nx)`.
+    #[inline]
+    pub fn shape(&self) -> (usize, usize, usize) {
+        (self.nz, self.ny, self.nx)
+    }
+
+    /// Euclidean norm of all values.
+    pub fn l2_norm(&self) -> f64 {
+        self.data.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+
+    /// Memory footprint in bytes (the paper's working-set accounting).
+    #[inline]
+    pub fn bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f64>()
+    }
+
+    /// True if `(k, j, i)` lies on the Dirichlet boundary.
+    #[inline]
+    pub fn is_boundary(&self, k: usize, j: usize, i: usize) -> bool {
+        k == 0 || k == self.nz - 1 || j == 0 || j == self.ny - 1 || i == 0 || i == self.nx - 1
+    }
+
+    /// Copy every value from `other` (shapes must match).
+    pub fn copy_from(&mut self, other: &Self) {
+        assert_eq!(self.shape(), other.shape(), "shape mismatch");
+        self.data.copy_from_slice(&other.data);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_is_row_major_zyx() {
+        let g = Grid3::from_fn(2, 3, 4, |k, j, i| (k * 100 + j * 10 + i) as f64);
+        assert_eq!(g.idx(0, 0, 1) - g.idx(0, 0, 0), 1, "x is contiguous");
+        assert_eq!(g.idx(0, 1, 0) - g.idx(0, 0, 0), 4, "y stride = nx");
+        assert_eq!(g.idx(1, 0, 0) - g.idx(0, 0, 0), 12, "z stride = ny*nx");
+        assert_eq!(g.get(1, 2, 3), 123.0);
+    }
+
+    #[test]
+    fn line_and_plane_views() {
+        let g = Grid3::from_fn(3, 3, 5, |k, j, i| (k * 100 + j * 10 + i) as f64);
+        assert_eq!(g.line(1, 2), &[120.0, 121.0, 122.0, 123.0, 124.0]);
+        assert_eq!(g.plane(2).len(), 15);
+        assert_eq!(g.plane(2)[0], 200.0);
+    }
+
+    #[test]
+    fn random_is_deterministic_and_bounded() {
+        let a = Grid3::random(4, 4, 4, 7);
+        let b = Grid3::random(4, 4, 4, 7);
+        let c = Grid3::random(4, 4, 4, 8);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert!(a.data().iter().all(|v| v.abs() <= 1.0));
+    }
+
+    #[test]
+    fn diff_and_norms() {
+        let a = Grid3::zeros(2, 2, 2);
+        let mut b = Grid3::zeros(2, 2, 2);
+        b.set(1, 1, 1, 3.0);
+        assert_eq!(a.max_abs_diff(&b), 3.0);
+        assert_eq!(b.l2_norm(), 3.0);
+    }
+
+    #[test]
+    fn boundary_predicate() {
+        let g = Grid3::zeros(4, 4, 4);
+        assert!(g.is_boundary(0, 2, 2));
+        assert!(g.is_boundary(3, 2, 2));
+        assert!(g.is_boundary(2, 0, 2));
+        assert!(g.is_boundary(2, 2, 3));
+        assert!(!g.is_boundary(1, 1, 1));
+        assert!(!g.is_boundary(2, 2, 2));
+    }
+
+    #[test]
+    fn interior_len_counts() {
+        let g = Grid3::zeros(4, 5, 6);
+        assert_eq!(g.interior_len(), 2 * 3 * 4);
+        let tiny = Grid3::zeros(2, 5, 5);
+        assert_eq!(tiny.interior_len(), 0);
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let g = Grid3::zeros(10, 10, 10);
+        assert_eq!(g.bytes(), 8000);
+    }
+}

@@ -1,0 +1,205 @@
+//! The Jacobi smoother: line-update kernel and sweeps (paper Sec. 3).
+//!
+//! The paper implements one optimized *line update kernel* and reuses it
+//! for every parallel variant, which "only modify the processing order of
+//! the outer loop nests". We follow the same discipline: every schedule in
+//! [`crate::coordinator`] funnels through [`jacobi_line_update`], so a
+//! correctness result for the serial sweep transfers to all of them.
+//!
+//! The update solves a Poisson problem `-Δu = f`:
+//!
+//! ```text
+//! dst[k][j][i] = 1/6 ( src[k][j][i-1] + src[k][j][i+1]
+//!                    + src[k][j-1][i] + src[k][j+1][i]
+//!                    + src[k-1][j][i] + src[k+1][j][i] + h²·f[k][j][i] )
+//! ```
+//!
+//! Dirichlet boundaries: face values are never written.
+
+use super::grid::Grid3;
+
+/// Central stencil weight.
+pub const ONE_SIXTH: f64 = 1.0 / 6.0;
+
+/// The paper's line update kernel: one x-line of a Jacobi update.
+///
+/// Maps the 7-point stencil onto five read streams (`center` ± x handled
+/// in-line, `ym`/`yp` the y-neighbor lines, `zm`/`zp` the z-neighbor
+/// lines) plus the `dst` write stream — exactly the Fig. 2 access pattern.
+/// Interior x only; `dst[0]` and `dst[nx-1]` are left untouched.
+#[inline]
+pub fn jacobi_line_update(
+    dst: &mut [f64],
+    center: &[f64],
+    ym: &[f64],
+    yp: &[f64],
+    zm: &[f64],
+    zp: &[f64],
+    rhs: &[f64],
+    h2: f64,
+) {
+    let nx = dst.len();
+    debug_assert!(
+        center.len() == nx && ym.len() == nx && yp.len() == nx && zm.len() == nx && zp.len() == nx
+    );
+    // The compiler vectorizes this loop (no loop-carried dependency) — the
+    // analog of the paper's SIMD-ized assembly kernel.
+    for i in 1..nx - 1 {
+        dst[i] = ONE_SIXTH
+            * (center[i - 1]
+                + center[i + 1]
+                + ym[i]
+                + yp[i]
+                + zm[i]
+                + zp[i]
+                + h2 * rhs[i]);
+    }
+}
+
+/// Update one interior plane `k` of `dst` from `src`.
+pub fn jacobi_plane(dst: &mut Grid3, src: &Grid3, f: &Grid3, h2: f64, k: usize) {
+    debug_assert!(k >= 1 && k + 1 < src.nz);
+    let ny = src.ny;
+    for j in 1..ny - 1 {
+        jacobi_plane_line(dst, src, f, h2, k, j);
+    }
+}
+
+/// Update one interior line `(k, j)` of `dst` from `src`.
+///
+/// The granularity every coordinator schedule dispatches at.
+#[inline]
+pub fn jacobi_plane_line(dst: &mut Grid3, src: &Grid3, f: &Grid3, h2: f64, k: usize, j: usize) {
+    let nx = src.nx;
+    let d = dst.idx(k, j, 0);
+    // Split borrows: dst line is disjoint from all src/f reads.
+    let (center, ym, yp, zm, zp, rhs) = (
+        src.line(k, j),
+        src.line(k, j - 1),
+        src.line(k, j + 1),
+        src.line(k - 1, j),
+        src.line(k + 1, j),
+        f.line(k, j),
+    );
+    let dst_line = &mut dst.data_mut()[d..d + nx];
+    jacobi_line_update(dst_line, center, ym, yp, zm, zp, rhs, h2);
+}
+
+/// One full out-of-place Jacobi sweep; boundary of `dst` copied from `src`.
+pub fn jacobi_sweep(dst: &mut Grid3, src: &Grid3, f: &Grid3, h2: f64) {
+    assert_eq!(dst.shape(), src.shape());
+    assert_eq!(f.shape(), src.shape());
+    dst.copy_from(src); // boundary (and a safe default for degenerate dims)
+    if src.nz < 3 || src.ny < 3 || src.nx < 3 {
+        return;
+    }
+    for k in 1..src.nz - 1 {
+        jacobi_plane(dst, src, f, h2, k);
+    }
+}
+
+/// `n` Jacobi steps with double buffering; result returned.
+pub fn jacobi_steps(u: &Grid3, f: &Grid3, h2: f64, n: usize) -> Grid3 {
+    let mut a = u.clone();
+    let mut b = u.clone();
+    for _ in 0..n {
+        jacobi_sweep(&mut b, &a, f, h2);
+        std::mem::swap(&mut a, &mut b);
+    }
+    a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn harmonic(nz: usize, ny: usize, nx: usize) -> Grid3 {
+        Grid3::from_fn(nz, ny, nx, |k, j, i| i as f64 + 2.0 * j as f64 - 3.0 * k as f64)
+    }
+
+    #[test]
+    fn harmonic_field_is_fixed_point() {
+        let u = harmonic(6, 6, 6);
+        let f = Grid3::zeros(6, 6, 6);
+        let mut dst = Grid3::zeros(6, 6, 6);
+        jacobi_sweep(&mut dst, &u, &f, 1.0);
+        assert!(u.max_abs_diff(&dst) < 1e-13);
+    }
+
+    #[test]
+    fn matches_direct_formula() {
+        let u = Grid3::random(5, 6, 7, 42);
+        let f = Grid3::random(5, 6, 7, 43);
+        let h2 = 0.7;
+        let mut dst = Grid3::zeros(5, 6, 7);
+        jacobi_sweep(&mut dst, &u, &f, h2);
+        for k in 1..4 {
+            for j in 1..5 {
+                for i in 1..6 {
+                    let want = ONE_SIXTH
+                        * (u.get(k, j, i - 1)
+                            + u.get(k, j, i + 1)
+                            + u.get(k, j - 1, i)
+                            + u.get(k, j + 1, i)
+                            + u.get(k - 1, j, i)
+                            + u.get(k + 1, j, i)
+                            + h2 * f.get(k, j, i));
+                    assert!((dst.get(k, j, i) - want).abs() < 1e-15);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn boundary_is_copied() {
+        let u = Grid3::random(4, 4, 4, 1);
+        let f = Grid3::random(4, 4, 4, 2);
+        let mut dst = Grid3::zeros(4, 4, 4);
+        jacobi_sweep(&mut dst, &u, &f, 1.0);
+        for k in 0..4 {
+            for j in 0..4 {
+                for i in 0..4 {
+                    if u.is_boundary(k, j, i) {
+                        assert_eq!(dst.get(k, j, i), u.get(k, j, i));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_grids_are_identity() {
+        let u = Grid3::random(2, 5, 5, 3);
+        let f = Grid3::zeros(2, 5, 5);
+        let mut dst = Grid3::zeros(2, 5, 5);
+        jacobi_sweep(&mut dst, &u, &f, 1.0);
+        assert_eq!(dst, u);
+    }
+
+    #[test]
+    fn steps_compose() {
+        let u = Grid3::random(5, 5, 5, 9);
+        let f = Grid3::random(5, 5, 5, 10);
+        let two = jacobi_steps(&u, &f, 1.0, 2);
+        let one = jacobi_steps(&u, &f, 1.0, 1);
+        let one_one = jacobi_steps(&one, &f, 1.0, 1);
+        assert_eq!(two.max_abs_diff(&one_one), 0.0);
+    }
+
+    #[test]
+    fn line_granularity_equals_plane_granularity() {
+        let u = Grid3::random(5, 6, 7, 11);
+        let f = Grid3::random(5, 6, 7, 12);
+        let mut by_plane = Grid3::zeros(5, 6, 7);
+        let mut by_line = Grid3::zeros(5, 6, 7);
+        by_plane.copy_from(&u);
+        by_line.copy_from(&u);
+        for k in 1..4 {
+            jacobi_plane(&mut by_plane, &u, &f, 1.0, k);
+            for j in 1..5 {
+                jacobi_plane_line(&mut by_line, &u, &f, 1.0, k, j);
+            }
+        }
+        assert_eq!(by_plane.max_abs_diff(&by_line), 0.0);
+    }
+}

@@ -1,0 +1,21 @@
+//! Numerical substrate: 3D grids, stencil kernels, residuals, STREAM.
+//!
+//! Everything in this module is *serial* building blocks — the paper's
+//! "line update kernel" (Sec. 3) and friends. Parallel schedules over these
+//! kernels live in [`crate::coordinator`]; performance models over them in
+//! [`crate::simulator`].
+
+pub mod gauss_seidel;
+pub mod grid;
+pub mod jacobi;
+pub mod residual;
+pub mod streambench;
+
+/// Bytes per lattice-site update (double precision).
+///
+/// The paper's Eq. (1) traffic accounting: a Jacobi update with
+/// non-temporal stores moves 8 B (load of `src`) + 8 B (store of `dst`);
+/// without NT stores the write-allocate adds another 8 B load.
+pub const BYTES_PER_LUP_NT: f64 = 16.0;
+/// Bytes per LUP when the store incurs a write-allocate (no NT stores).
+pub const BYTES_PER_LUP_NO_NT: f64 = 24.0;

@@ -1,0 +1,101 @@
+//! Residual diagnostics for the Poisson / Laplace problems.
+//!
+//! `r = h²·f + Δu` pointwise on the interior (zero on the Dirichlet
+//! boundary); the solvers drive `‖r‖₂ → 0`. Mirrors
+//! `python/compile/kernels/ref.py::residual` so the cross-layer validation
+//! can compare norms directly.
+
+use super::grid::Grid3;
+
+/// Pointwise Poisson residual into `out` (interior only, boundary zeroed).
+pub fn poisson_residual(out: &mut Grid3, u: &Grid3, f: &Grid3, h2: f64) {
+    assert_eq!(out.shape(), u.shape());
+    assert_eq!(f.shape(), u.shape());
+    out.data_mut().fill(0.0);
+    if u.nz < 3 || u.ny < 3 || u.nx < 3 {
+        return;
+    }
+    for k in 1..u.nz - 1 {
+        for j in 1..u.ny - 1 {
+            for i in 1..u.nx - 1 {
+                let lap = u.get(k, j, i - 1)
+                    + u.get(k, j, i + 1)
+                    + u.get(k, j - 1, i)
+                    + u.get(k, j + 1, i)
+                    + u.get(k - 1, j, i)
+                    + u.get(k + 1, j, i)
+                    - 6.0 * u.get(k, j, i);
+                out.set(k, j, i, lap + h2 * f.get(k, j, i));
+            }
+        }
+    }
+}
+
+/// `‖h²·f + Δu‖₂` without allocating a full residual grid.
+pub fn poisson_residual_norm(u: &Grid3, f: &Grid3, h2: f64) -> f64 {
+    if u.nz < 3 || u.ny < 3 || u.nx < 3 {
+        return 0.0;
+    }
+    let mut acc = 0.0;
+    for k in 1..u.nz - 1 {
+        for j in 1..u.ny - 1 {
+            for i in 1..u.nx - 1 {
+                let lap = u.get(k, j, i - 1)
+                    + u.get(k, j, i + 1)
+                    + u.get(k, j - 1, i)
+                    + u.get(k, j + 1, i)
+                    + u.get(k - 1, j, i)
+                    + u.get(k + 1, j, i)
+                    - 6.0 * u.get(k, j, i);
+                let r = lap + h2 * f.get(k, j, i);
+                acc += r * r;
+            }
+        }
+    }
+    acc.sqrt()
+}
+
+/// Laplace residual norm (`f = 0` convenience).
+pub fn laplace_residual_norm(u: &Grid3) -> f64 {
+    let zero = Grid3::zeros(u.nz, u.ny, u.nx);
+    poisson_residual_norm(u, &zero, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stencil::jacobi::jacobi_steps;
+
+    #[test]
+    fn linear_field_has_zero_residual() {
+        let u = Grid3::from_fn(6, 6, 6, |k, j, i| i as f64 + 2.0 * j as f64 + 3.0 * k as f64);
+        assert!(laplace_residual_norm(&u) < 1e-12);
+    }
+
+    #[test]
+    fn residual_norm_matches_grid_norm() {
+        let u = Grid3::random(6, 7, 8, 4);
+        let f = Grid3::random(6, 7, 8, 5);
+        let mut r = Grid3::zeros(6, 7, 8);
+        poisson_residual(&mut r, &u, &f, 0.5);
+        let direct = poisson_residual_norm(&u, &f, 0.5);
+        assert!((r.l2_norm() - direct).abs() < 1e-12 * direct.max(1.0));
+    }
+
+    #[test]
+    fn jacobi_reduces_residual() {
+        let u = Grid3::random(10, 10, 10, 6);
+        let f = Grid3::zeros(10, 10, 10);
+        let r0 = poisson_residual_norm(&u, &f, 1.0);
+        let u5 = jacobi_steps(&u, &f, 1.0, 5);
+        let r5 = poisson_residual_norm(&u5, &f, 1.0);
+        assert!(r5 < r0);
+    }
+
+    #[test]
+    fn degenerate_grid_residual_is_zero() {
+        let u = Grid3::random(2, 4, 4, 8);
+        let f = Grid3::zeros(2, 4, 4);
+        assert_eq!(poisson_residual_norm(&u, &f, 1.0), 0.0);
+    }
+}

@@ -1,0 +1,70 @@
+//! In-process STREAM triad microbenchmark (McCalpin [11], paper Tab. 1).
+//!
+//! The paper anchors its Eq. (1) performance model to measured STREAM
+//! triad bandwidth with and without non-temporal stores. This module runs
+//! the triad `a[i] = b[i] + s·c[i]` for real on the host — used by the
+//! `stream` CLI subcommand and the Tab. 1 bench to report the *actual*
+//! bandwidth of this box next to the modeled bandwidths of the paper's
+//! five machines ([`crate::simulator::stream`]).
+//!
+//! Plain stores only: portable rust has no non-temporal store intrinsic on
+//! stable; the NT/noNT distinction is carried by the machine *model*
+//! (write-allocate accounting), not by this microbenchmark.
+
+use std::time::Instant;
+
+/// Result of a STREAM triad run.
+#[derive(Clone, Copy, Debug)]
+pub struct StreamResult {
+    /// Best observed bandwidth over all repetitions, in GB/s.
+    pub best_gbs: f64,
+    /// Arithmetic mean bandwidth in GB/s.
+    pub mean_gbs: f64,
+    /// Working-set size in bytes (three arrays).
+    pub bytes: usize,
+}
+
+/// Run the STREAM triad `a = b + s*c` over `n` doubles, `reps` times.
+///
+/// Traffic accounting follows STREAM convention: 3 × 8 B per element
+/// (load b, load c, store a); the write-allocate for `a` is *not* counted,
+/// matching the "NT" row semantics of Tab. 1.
+pub fn stream_triad(n: usize, reps: usize) -> StreamResult {
+    assert!(n > 0 && reps > 0);
+    let mut a = vec![0.0f64; n];
+    let b: Vec<f64> = (0..n).map(|i| i as f64 * 0.5).collect();
+    let c: Vec<f64> = (0..n).map(|i| i as f64 * 0.25 + 1.0).collect();
+    let s = 3.0f64;
+
+    let bytes_per_rep = 3 * n * std::mem::size_of::<f64>();
+    let mut best = 0.0f64;
+    let mut sum = 0.0f64;
+    for r in 0..reps {
+        let scale = s + r as f64 * 1e-9; // defeat loop-invariant hoisting across reps
+        let t0 = Instant::now();
+        for i in 0..n {
+            a[i] = b[i] + scale * c[i];
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let gbs = bytes_per_rep as f64 / dt / 1e9;
+        best = best.max(gbs);
+        sum += gbs;
+    }
+    // Keep `a` observable so the triad loop cannot be eliminated.
+    std::hint::black_box(&a);
+    StreamResult { best_gbs: best, mean_gbs: sum / reps as f64, bytes: bytes_per_rep }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn triad_reports_positive_bandwidth() {
+        let r = stream_triad(1 << 16, 3);
+        assert!(r.best_gbs > 0.0);
+        assert!(r.mean_gbs > 0.0);
+        assert!(r.best_gbs >= r.mean_gbs * 0.999);
+        assert_eq!(r.bytes, 3 * (1 << 16) * 8);
+    }
+}

@@ -1,0 +1,104 @@
+//! Cache-simulator verification of the paper's central traffic claims.
+//!
+//! These tests drive exact schedule traces through the set-associative
+//! hierarchy simulator and check what the ECM model *assumes*: that the
+//! wavefront scheme keeps intermediate planes in the shared outer cache
+//! and thereby divides memory traffic by the blocking factor.
+
+use stencilwave::simulator::cache::Hierarchy;
+use stencilwave::simulator::trace::{
+    jacobi_steps_trace, jacobi_sweep_trace, run_trace, wavefront_jacobi_trace, Dims,
+};
+
+const D: Dims = Dims { nz: 34, ny: 32, nx: 32 };
+
+fn hierarchy(cores: usize) -> Hierarchy {
+    // one array ≈ 272 KB, three arrays stream; the t=4 rolling window
+    // (~150 KB incl. tmp + rhs planes) fits the 384 KB OLC
+    Hierarchy::uniform(cores, 8 << 10, 32 << 10, 384 << 10)
+}
+
+#[test]
+fn baseline_moves_every_plane_through_memory() {
+    let mut h = hierarchy(1);
+    let mem = run_trace(&mut h, &jacobi_sweep_trace(D, false)) as f64;
+    let per_lup = mem / D.interior() as f64;
+    // load src + store dst (+ write allocate) with 3-plane reuse in cache:
+    // must be within [16, 40] B/LUP
+    assert!((14.0..=40.0).contains(&per_lup), "baseline {per_lup} B/LUP");
+}
+
+#[test]
+fn t_sweeps_cost_t_times_one_sweep() {
+    let t = 4;
+    let mut h1 = hierarchy(1);
+    let one = run_trace(&mut h1, &jacobi_sweep_trace(D, false)) as f64;
+    let mut ht = hierarchy(1);
+    let many = run_trace(&mut ht, &jacobi_steps_trace(D, t, false)) as f64;
+    let ratio = many / one;
+    assert!(
+        (t as f64 * 0.8..=t as f64 * 1.2).contains(&ratio),
+        "t sweeps should cost ~t× one sweep, got {ratio}"
+    );
+}
+
+#[test]
+fn wavefront_divides_memory_traffic() {
+    for t in [2usize, 4] {
+        let mut hb = hierarchy(1);
+        let baseline = run_trace(&mut hb, &jacobi_steps_trace(D, t, false)) as f64;
+        let mut hw = hierarchy(t);
+        let wavefront = run_trace(&mut hw, &wavefront_jacobi_trace(D, t, false)) as f64;
+        let reduction = baseline / wavefront;
+        assert!(
+            reduction > t as f64 * 0.45,
+            "t={t}: traffic reduction only {reduction:.2}x (want ≳ {:.1}x)",
+            t as f64 * 0.45
+        );
+    }
+}
+
+#[test]
+fn wavefront_intermediates_live_in_shared_cache() {
+    let mut h = hierarchy(4);
+    run_trace(&mut h, &wavefront_jacobi_trace(D, 4, false));
+    let stats = h.olc_stats();
+    assert!(
+        stats.hit_rate() > 0.5,
+        "intermediate windows must hit the OLC: hit rate {:.2}",
+        stats.hit_rate()
+    );
+}
+
+#[test]
+fn too_small_cache_defeats_temporal_blocking() {
+    // With an OLC smaller than the rolling window, the wavefront's
+    // advantage collapses — the capacity constraint behind the paper's
+    // spatial blocking (Fig. 7) and our `choose_blocking`.
+    let t = 4;
+    let tiny = || Hierarchy::uniform(t, 2 << 10, 4 << 10, 16 << 10); // 16 KB OLC
+    let mut hw = tiny();
+    let wavefront = run_trace(&mut hw, &wavefront_jacobi_trace(D, t, false)) as f64;
+    let mut hb = tiny();
+    let baseline = run_trace(&mut hb, &jacobi_steps_trace(D, t, false)) as f64;
+    let reduction = baseline / wavefront;
+    assert!(
+        reduction < t as f64 * 0.45,
+        "a too-small OLC cannot sustain the full reduction: got {reduction:.2}x"
+    );
+}
+
+#[test]
+fn nt_stores_save_write_allocate_traffic() {
+    let mut h_wa = hierarchy(1);
+    let wa = run_trace(&mut h_wa, &jacobi_sweep_trace(D, false));
+    let mut h_nt = hierarchy(1);
+    let nt = run_trace(&mut h_nt, &jacobi_sweep_trace(D, true));
+    let saved = wa as f64 - nt as f64;
+    // one write-allocate line per store line: saving ≈ dst-array bytes
+    let dst_bytes = (D.nz * D.ny * D.nx * 8) as f64;
+    assert!(
+        saved > 0.3 * dst_bytes,
+        "NT stores must save ~the dst write-allocate: saved {saved:.0} of {dst_bytes:.0}"
+    );
+}

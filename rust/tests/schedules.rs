@@ -1,0 +1,164 @@
+//! Property-style integration tests: every parallel schedule must be
+//! bit-identical to the serial reference for randomized shapes and
+//! configurations (the in-tree analog of a proptest suite — seeded
+//! xorshift case generation, failures print the offending case).
+
+use stencilwave::coordinator::pipeline::{pipeline_gs_sweep, pipeline_gs_sweeps, PipelineConfig};
+use stencilwave::coordinator::spatial::{blocked_wavefront_jacobi, SpatialConfig};
+use stencilwave::coordinator::wavefront::{
+    serial_reference, wavefront_jacobi, SyncMode, WavefrontConfig,
+};
+use stencilwave::coordinator::wavefront_gs::{wavefront_gs, GsWavefrontConfig};
+use stencilwave::simulator::perfmodel::BarrierKind;
+use stencilwave::stencil::gauss_seidel::{gs_sweeps, GsKernel};
+use stencilwave::stencil::grid::Grid3;
+
+/// Deterministic pseudo-random case generator.
+struct Gen(u64);
+
+impl Gen {
+    fn next(&mut self) -> u64 {
+        self.0 ^= self.0 << 13;
+        self.0 ^= self.0 >> 7;
+        self.0 ^= self.0 << 17;
+        self.0
+    }
+    fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + (self.next() as usize) % (hi - lo + 1)
+    }
+    fn pick<T: Copy>(&mut self, opts: &[T]) -> T {
+        opts[(self.next() as usize) % opts.len()]
+    }
+}
+
+#[test]
+fn wavefront_jacobi_is_exact_for_random_cases() {
+    let mut g = Gen(0xBEEF);
+    for case in 0..24 {
+        let (nz, ny, nx) = (g.range(3, 18), g.range(3, 14), g.range(3, 14));
+        let t = g.pick(&[2usize, 4, 6]);
+        let sync = g.pick(&[SyncMode::Barrier, SyncMode::Flow]);
+        let barrier = g.pick(&[BarrierKind::Spin, BarrierKind::Tree]);
+        let h2 = g.range(0, 3) as f64 / 2.0;
+        let u0 = Grid3::random(nz, ny, nx, g.next());
+        let f = Grid3::random(nz, ny, nx, g.next());
+        let want = serial_reference(&u0, &f, h2, t);
+        let mut u = u0.clone();
+        wavefront_jacobi(&mut u, &f, h2, &WavefrontConfig { threads: t, barrier, sync }).unwrap();
+        assert_eq!(
+            u.max_abs_diff(&want),
+            0.0,
+            "case {case}: {nz}x{ny}x{nx} t={t} {sync:?} {barrier:?}"
+        );
+    }
+}
+
+#[test]
+fn blocked_wavefront_is_exact_for_random_cases() {
+    let mut g = Gen(0xCAFE);
+    for case in 0..24 {
+        let (nz, ny, nx) = (g.range(3, 14), g.range(3, 24), g.range(3, 12));
+        let t = g.pick(&[2usize, 4, 6]);
+        let blocks = g.range(1, 6);
+        let u0 = Grid3::random(nz, ny, nx, g.next());
+        let f = Grid3::random(nz, ny, nx, g.next());
+        let want = serial_reference(&u0, &f, 1.0, t);
+        let mut u = u0.clone();
+        blocked_wavefront_jacobi(&mut u, &f, 1.0, &SpatialConfig { t, blocks }).unwrap();
+        assert_eq!(
+            u.max_abs_diff(&want),
+            0.0,
+            "case {case}: {nz}x{ny}x{nx} t={t} B={blocks}"
+        );
+    }
+}
+
+#[test]
+fn pipeline_gs_is_exact_for_random_cases() {
+    let mut g = Gen(0xF00D);
+    for case in 0..20 {
+        let (nz, ny, nx) = (g.range(3, 14), g.range(3, 20), g.range(3, 12));
+        let threads = g.range(1, 6);
+        let kernel = g.pick(&[GsKernel::Naive, GsKernel::Interleaved]);
+        let u0 = Grid3::random(nz, ny, nx, g.next());
+        let mut want = u0.clone();
+        gs_sweeps(&mut want, 1, kernel);
+        let mut u = u0.clone();
+        pipeline_gs_sweep(&mut u, &PipelineConfig { threads, kernel }).unwrap();
+        assert_eq!(
+            u.max_abs_diff(&want),
+            0.0,
+            "case {case}: {nz}x{ny}x{nx} p={threads} {kernel:?}"
+        );
+    }
+}
+
+#[test]
+fn gs_wavefront_is_exact_for_random_cases() {
+    let mut g = Gen(0xABCD);
+    for case in 0..20 {
+        let (nz, ny, nx) = (g.range(3, 12), g.range(3, 14), g.range(3, 10));
+        let sweeps = g.range(1, 5);
+        let width = g.range(1, 3);
+        let u0 = Grid3::random(nz, ny, nx, g.next());
+        let mut want = u0.clone();
+        gs_sweeps(&mut want, sweeps, GsKernel::Interleaved);
+        let mut u = u0.clone();
+        wavefront_gs(
+            &mut u,
+            &GsWavefrontConfig { sweeps, threads_per_group: width, kernel: GsKernel::Interleaved },
+        )
+        .unwrap();
+        assert_eq!(
+            u.max_abs_diff(&want),
+            0.0,
+            "case {case}: {nz}x{ny}x{nx} S={sweeps} w={width}"
+        );
+    }
+}
+
+#[test]
+fn schemes_compose_interchangeably() {
+    // 8 updates via any mix of schedules must land on the same grid.
+    let u0 = Grid3::random(12, 12, 12, 99);
+    let f = Grid3::random(12, 12, 12, 98);
+    let want = serial_reference(&u0, &f, 1.0, 8);
+
+    // wavefront(4) then wavefront(4)
+    let mut a = u0.clone();
+    let cfg4 = WavefrontConfig { threads: 4, ..Default::default() };
+    wavefront_jacobi(&mut a, &f, 1.0, &cfg4).unwrap();
+    wavefront_jacobi(&mut a, &f, 1.0, &cfg4).unwrap();
+    assert_eq!(a.max_abs_diff(&want), 0.0);
+
+    // blocked(2 blocks, t=2) four times
+    let mut b = u0.clone();
+    for _ in 0..4 {
+        blocked_wavefront_jacobi(&mut b, &f, 1.0, &SpatialConfig { t: 2, blocks: 2 }).unwrap();
+    }
+    assert_eq!(b.max_abs_diff(&want), 0.0);
+
+    // wavefront(2) + blocked(t=6, 3 blocks)
+    let mut c = u0.clone();
+    wavefront_jacobi(&mut c, &f, 1.0, &WavefrontConfig { threads: 2, ..Default::default() })
+        .unwrap();
+    blocked_wavefront_jacobi(&mut c, &f, 1.0, &SpatialConfig { t: 6, blocks: 3 }).unwrap();
+    assert_eq!(c.max_abs_diff(&want), 0.0);
+}
+
+#[test]
+fn gs_pipeline_and_wavefront_compose() {
+    let u0 = Grid3::random(10, 16, 9, 5);
+    let mut want = u0.clone();
+    gs_sweeps(&mut want, 6, GsKernel::Interleaved);
+
+    let mut u = u0.clone();
+    pipeline_gs_sweeps(&mut u, &PipelineConfig { threads: 3, kernel: GsKernel::Interleaved }, 2)
+        .unwrap();
+    wavefront_gs(
+        &mut u,
+        &GsWavefrontConfig { sweeps: 4, threads_per_group: 2, kernel: GsKernel::Interleaved },
+    )
+    .unwrap();
+    assert_eq!(u.max_abs_diff(&want), 0.0);
+}
