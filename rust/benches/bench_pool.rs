@@ -1,0 +1,82 @@
+//! Persistent worker pool vs per-pass thread respawn.
+//!
+//! The old coordinators spawned a fresh `std::thread::scope` team for
+//! every wavefront pass; the pool keeps one team parked between passes.
+//! This bench measures both strategies end to end (same schedule, same
+//! grids, same pass count) so the respawn overhead is visible as an
+//! MLUP/s gap — largest for small grids, where a pass is short relative
+//! to thread creation. A second table shows the new multi-group blocked
+//! scheme scaling over groups on one pool.
+
+use stencilwave::benchkit;
+use stencilwave::coordinator::pool::WorkerPool;
+use stencilwave::coordinator::spatial_mg::{multigroup_blocked_jacobi_on, MultiGroupConfig};
+use stencilwave::coordinator::wavefront::{wavefront_jacobi_on, WavefrontConfig};
+use stencilwave::stencil::grid::Grid3;
+
+fn main() {
+    benchkit::header("persistent pool vs per-pass respawn — Jacobi wavefront");
+    let t = 4usize;
+    let passes = 8usize;
+    for n in [24usize, 48, 64] {
+        let f = Grid3::random(n, n, n, 1);
+        let u0 = Grid3::random(n, n, n, 2);
+        let cfg = WavefrontConfig { threads: t, ..Default::default() };
+        let updates = (u0.interior_len() * t * passes) as u64;
+
+        let s = benchkit::bench_mlups(
+            &format!("respawn team/pass {n}^3 t={t} x{passes}"),
+            updates,
+            1,
+            3,
+            || {
+                let mut u = u0.clone();
+                for _ in 0..passes {
+                    // a fresh pool per pass = the old spawn-per-pass cost
+                    let mut pool = WorkerPool::new(t);
+                    wavefront_jacobi_on(&mut pool, &mut u, &f, 1.0, &cfg).unwrap();
+                }
+                benchkit::black_box(u);
+            },
+        );
+        benchkit::report(&s);
+
+        let mut pool = WorkerPool::new(t);
+        let s = benchkit::bench_mlups(
+            &format!("persistent pool {n}^3 t={t} x{passes}"),
+            updates,
+            1,
+            3,
+            || {
+                let mut u = u0.clone();
+                for _ in 0..passes {
+                    wavefront_jacobi_on(&mut pool, &mut u, &f, 1.0, &cfg).unwrap();
+                }
+                benchkit::black_box(u);
+            },
+        );
+        benchkit::report(&s);
+    }
+
+    benchkit::header("multi-group spatial x temporal blocking (one pool)");
+    let mut pool = WorkerPool::new(4);
+    for groups in [1usize, 2, 4] {
+        let n = 64usize;
+        let f = Grid3::random(n, n, n, 3);
+        let u0 = Grid3::random(n, n, n, 4);
+        let cfg = MultiGroupConfig { t: 4, groups };
+        let updates = (u0.interior_len() * 4) as u64;
+        let s = benchkit::bench_mlups(
+            &format!("multigroup t=4 G={groups} {n}^3"),
+            updates,
+            1,
+            3,
+            || {
+                let mut u = u0.clone();
+                multigroup_blocked_jacobi_on(&mut pool, &mut u, &f, 1.0, &cfg).unwrap();
+                benchkit::black_box(u);
+            },
+        );
+        benchkit::report(&s);
+    }
+}

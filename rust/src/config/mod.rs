@@ -26,6 +26,9 @@ pub enum Scheme {
     GsBaseline,
     /// Wavefront temporally-blocked Gauss-Seidel (Fig. 5b).
     GsWavefront,
+    /// Multi-group spatial × temporal blocked Jacobi (Fig. 7 at scale):
+    /// `groups` thread groups each wavefront-sweep one y-block.
+    JacobiMultiGroup,
 }
 
 impl Scheme {
@@ -47,6 +50,7 @@ impl Scheme {
         Ok(match s.trim().replace('-', "_").as_str() {
             "jacobi_baseline" => Scheme::JacobiBaseline,
             "jacobi_wavefront" => Scheme::JacobiWavefront,
+            "jacobi_multigroup" => Scheme::JacobiMultiGroup,
             "gs_baseline" => Scheme::GsBaseline,
             "gs_wavefront" => Scheme::GsWavefront,
             other => anyhow::bail!("unknown scheme '{other}'"),
@@ -177,6 +181,7 @@ impl RunConfig {
         let scheme = match self.scheme {
             Scheme::JacobiBaseline => "jacobi_baseline",
             Scheme::JacobiWavefront => "jacobi_wavefront",
+            Scheme::JacobiMultiGroup => "jacobi_multigroup",
             Scheme::GsBaseline => "gs_baseline",
             Scheme::GsWavefront => "gs_wavefront",
         };
@@ -210,13 +215,22 @@ impl RunConfig {
         anyhow::ensure!(nz >= 3 && ny >= 3 && nx >= 3, "grid too small: {:?}", self.size);
         anyhow::ensure!(self.t >= 1, "blocking factor must be >= 1");
         anyhow::ensure!(self.groups >= 1, "need at least one thread group");
-        if matches!(self.scheme, Scheme::JacobiWavefront) {
+        if matches!(self.scheme, Scheme::JacobiWavefront | Scheme::JacobiMultiGroup) {
             anyhow::ensure!(self.t % 2 == 0, "wavefront Jacobi needs even t (in-place tmp scheme)");
             anyhow::ensure!(
                 self.iters % self.t == 0,
                 "iters ({}) must be a multiple of t ({})",
                 self.iters,
                 self.t
+            );
+        }
+        if matches!(self.scheme, Scheme::JacobiMultiGroup) && self.groups > 1 {
+            anyhow::ensure!(
+                ny - 2 >= 2 * self.groups,
+                "multi-group blocking needs >= 2 interior lines per group \
+                 (ny = {ny} gives {} for {} groups)",
+                ny - 2,
+                self.groups
             );
         }
         if let Some(name) = &self.machine {
@@ -289,6 +303,23 @@ mod tests {
             .to_string();
         assert!(err.contains("line 2"), "{err}");
         assert!(RunConfig::from_text("not a kv line\n").is_err());
+    }
+
+    #[test]
+    fn multigroup_scheme_roundtrip_and_validation() {
+        let mut cfg =
+            RunConfig::from_text("scheme = \"jacobi_multigroup\"\nsize = [16, 16, 16]\n").unwrap();
+        assert_eq!(cfg.scheme, Scheme::JacobiMultiGroup);
+        assert!(!cfg.scheme.is_gs());
+        cfg.groups = 4;
+        cfg.validate().unwrap(); // 14 interior lines >= 2 * 4
+        let back = RunConfig::from_text(&cfg.to_text()).unwrap();
+        assert_eq!(back.scheme, Scheme::JacobiMultiGroup);
+        cfg.groups = 8; // 14 < 16: blocks would be narrower than 2 lines
+        assert!(cfg.validate().is_err());
+        cfg.groups = 2;
+        cfg.t = 3; // odd temporal depth
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

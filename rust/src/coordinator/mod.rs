@@ -4,17 +4,28 @@
 //!   barrier for physical cores and a tree barrier for SMT, both built for
 //!   the fine-grained plane-level synchronization pthread barriers cannot
 //!   sustain.
+//! * [`schedule`] — the unified time-skew abstraction: every scheme below
+//!   is a [`schedule::Schedule`] (per-worker role, per-round plane/line
+//!   task, forward-dependency and back-pressure waits against one shared
+//!   [`schedule::Progress`] table).
+//! * [`pool`] — the persistent worker pool the schedules run on: one
+//!   thread team created once and reused across passes, iterations and
+//!   experiments, with on-demand team growth and an optional core-pinning
+//!   hook.
 //! * [`wavefront`] — temporal blocking for Jacobi: a thread group of `t`
-//!   threads runs `t` time-shifted z-sweeps with intermediate planes in a
+//!   workers runs `t` time-shifted z-sweeps with intermediate planes in a
 //!   small round-robin temporary buffer (Fig. 6).
 //! * [`pipeline`] — pipeline-parallel lexicographic Gauss-Seidel
-//!   (Fig. 5a): threads partition y; plane updates are shifted in time to
+//!   (Fig. 5a): workers partition y; plane updates are shifted in time to
 //!   retain the serial update order.
 //! * [`wavefront_gs`] — the composition (Fig. 5b): multiple pipelined GS
 //!   sweeps run through the grid simultaneously, shifted in z.
 //! * [`spatial`] — the improved spatial blocking of Sec. 4 (Fig. 7):
 //!   y-blocks with skewed per-level update regions and the t-plane
-//!   boundary arrays that make block sweeps exact.
+//!   boundary arrays that make block sweeps exact (serial reference).
+//! * [`spatial_mg`] — the multi-group version of Fig. 7: `G` groups
+//!   wavefront-sweep their y-blocks concurrently, handing the odd-level
+//!   boundary arrays to the next group under round-lag flow control.
 //!
 //! Every scheme is *numerically exact*: tests assert bit-identical grids
 //! against the serial reference sweeps, for all thread counts and
@@ -22,6 +33,9 @@
 
 pub mod barrier;
 pub mod pipeline;
+pub mod pool;
+pub mod schedule;
 pub mod spatial;
+pub mod spatial_mg;
 pub mod wavefront;
 pub mod wavefront_gs;

@@ -3,25 +3,31 @@
 //! A straightforward domain decomposition cannot parallelize GS — the
 //! update at `(k, j, i)` needs *new* values at `(k-1, j, i)`, `(k, j-1, i)`
 //! and `(k, j, i-1)`. Instead of switching to red-black ordering, the
-//! paper pipelines the *same* lexicographic algorithm: threads partition
-//! the y dimension into contiguous chunks, and thread `p` starts plane `k`
-//! only after thread `p-1` has finished plane `k` — so thread p's first
-//! line reads thread p-1's freshly updated last line, and thread p+1's
-//! chunk is still untouched (old values) when thread p reads across its
-//! upper edge. Plane updates of the threads are thereby "shifted in time"
+//! paper pipelines the *same* lexicographic algorithm: workers partition
+//! the y dimension into contiguous chunks, and worker `p` starts plane `k`
+//! only after worker `p-1` has finished plane `k` — so worker p's first
+//! line reads worker p-1's freshly updated last line, and worker p+1's
+//! chunk is still untouched (old values) when worker p reads across its
+//! upper edge. Plane updates of the workers are thereby "shifted in time"
 //! exactly as Fig. 5a shows, and the result is **bit-identical** to the
 //! serial sweep.
+//!
+//! The pass is a [`Schedule`] dispatched on the persistent
+//! [`WorkerPool`]; multi-sweep runs reuse one team and one schedule.
 
-use std::sync::atomic::{AtomicIsize, Ordering};
+use std::marker::PhantomData;
 
 use crate::stencil::gauss_seidel::{gs_plane_line_raw, gs_sweep, GsKernel};
 use crate::stencil::grid::Grid3;
 use crate::Result;
 
+use super::pool::{self, WorkerPool};
+use super::schedule::{Progress, Schedule};
+
 /// Configuration of a pipeline-parallel GS run.
 #[derive(Clone, Copy, Debug)]
 pub struct PipelineConfig {
-    /// Threads = y-chunks.
+    /// Workers = y-chunks.
     pub threads: usize,
     pub kernel: GsKernel,
 }
@@ -32,11 +38,29 @@ impl Default for PipelineConfig {
     }
 }
 
+impl PipelineConfig {
+    /// Validate the configuration (`threads >= 1` guards the chunking
+    /// divide — a zero thread count used to panic in [`chunk_lines`]).
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.threads >= 1,
+            "pipeline needs at least one thread, got {}",
+            self.threads
+        );
+        Ok(())
+    }
+}
+
 /// Split `1..ny-1` interior lines into `p` contiguous chunks.
 ///
 /// Returns `(start, end)` half-open ranges; empty chunks allowed when
-/// `p > ny - 2` (those threads simply keep pace in the pipeline).
+/// `p > ny - 2` (those workers simply keep pace in the pipeline), and an
+/// empty vector for `p == 0` (rejected earlier by
+/// [`PipelineConfig::validate`]).
 pub fn chunk_lines(ny: usize, p: usize) -> Vec<(usize, usize)> {
+    if p == 0 {
+        return Vec::new();
+    }
     let interior = ny.saturating_sub(2);
     let base = interior / p;
     let extra = interior % p;
@@ -50,77 +74,118 @@ pub fn chunk_lines(ny: usize, p: usize) -> Vec<(usize, usize)> {
     out
 }
 
-#[derive(Clone, Copy)]
-struct SharedPtr(*mut f64);
-unsafe impl Send for SharedPtr {}
-unsafe impl Sync for SharedPtr {}
+/// One pipelined GS sweep as a [`Schedule`]: worker `p` owns y-chunk `p`.
+pub struct PipelineGsSchedule<'g> {
+    base: *mut f64,
+    nz: usize,
+    ny: usize,
+    nx: usize,
+    chunks: Vec<(usize, usize)>,
+    kernel: GsKernel,
+    _borrow: PhantomData<&'g mut f64>,
+}
 
-impl SharedPtr {
-    /// Accessor (method, not field) so closures capture the whole wrapper
-    /// — RFC 2229 disjoint capture would otherwise capture the bare
-    /// pointer, which is not `Send`.
-    #[inline(always)]
-    fn get(self) -> *mut f64 {
-        self.0
+// SAFETY: chunks are disjoint line ranges and the progress protocol
+// freezes every cross-chunk read (see `worker`).
+unsafe impl Send for PipelineGsSchedule<'_> {}
+unsafe impl Sync for PipelineGsSchedule<'_> {}
+
+impl<'g> PipelineGsSchedule<'g> {
+    /// Build one sweep over `u`.
+    pub fn new(u: &'g mut Grid3, cfg: &PipelineConfig) -> Result<Self> {
+        cfg.validate()?;
+        let (nz, ny, nx) = u.shape();
+        anyhow::ensure!(nz >= 3 && ny >= 3 && nx >= 3, "grid too small for a pipelined sweep");
+        Ok(Self {
+            base: u.data_mut().as_mut_ptr(),
+            nz,
+            ny,
+            nx,
+            chunks: chunk_lines(ny, cfg.threads),
+            kernel: cfg.kernel,
+            _borrow: PhantomData,
+        })
     }
+}
+
+impl Schedule for PipelineGsSchedule<'_> {
+    fn workers(&self) -> usize {
+        self.chunks.len()
+    }
+
+    fn worker(&self, tid: usize, progress: &Progress) {
+        let (j0, j1) = self.chunks[tid];
+        for k in 1..self.nz - 1 {
+            if tid > 0 {
+                // worker p-1 must have completed this plane so our first
+                // line sees its new last line, and it stopped reading
+                // across our lower edge.
+                progress.wait_min(tid - 1, k as isize);
+            }
+            // SAFETY: chunks are disjoint line ranges; the progress
+            // protocol guarantees the only cross-chunk reads (j0-1 from
+            // below = new, j1 from above = old) are race-free: below has
+            // finished plane k, above has not started it.
+            unsafe {
+                for j in j0..j1 {
+                    gs_plane_line_raw(self.base, self.ny, self.nx, k, j, self.kernel);
+                }
+            }
+            progress.publish(tid, k as isize);
+        }
+    }
+}
+
+/// Run `passes` pipelined sweeps on `pool` with one schedule.
+fn pipeline_gs_passes(
+    pool: &mut WorkerPool,
+    u: &mut Grid3,
+    cfg: &PipelineConfig,
+    passes: usize,
+) -> Result<()> {
+    cfg.validate()?;
+    let (nz, ny, nx) = u.shape();
+    if nz < 3 || ny < 3 || nx < 3 || passes == 0 {
+        return Ok(());
+    }
+    if cfg.threads == 1 {
+        for _ in 0..passes {
+            gs_sweep(u, cfg.kernel);
+        }
+        return Ok(());
+    }
+    let schedule = PipelineGsSchedule::new(u, cfg)?;
+    for _ in 0..passes {
+        pool.run(&schedule)?;
+    }
+    Ok(())
 }
 
 /// One in-place lexicographic GS sweep, pipeline-parallel over y-chunks.
 ///
 /// Bit-identical to [`gs_sweep`] for every thread count.
 pub fn pipeline_gs_sweep(u: &mut Grid3, cfg: &PipelineConfig) -> Result<()> {
-    let p = cfg.threads;
-    anyhow::ensure!(p >= 1, "need at least one thread");
-    let (nz, ny, nx) = u.shape();
-    if nz < 3 || ny < 3 || nx < 3 {
-        return Ok(());
-    }
-    if p == 1 {
-        gs_sweep(u, cfg.kernel);
-        return Ok(());
-    }
-    let chunks = chunk_lines(ny, p);
-    let progress: Vec<AtomicIsize> = (0..p).map(|_| AtomicIsize::new(0)).collect();
-    let base = SharedPtr(u.data_mut().as_mut_ptr());
-    let kernel = cfg.kernel;
-
-    std::thread::scope(|scope| {
-        for (tid, &(j0, j1)) in chunks.iter().enumerate() {
-            let progress = &progress;
-            let ptr = base;
-            scope.spawn(move || {
-                for k in 1..nz - 1 {
-                    if tid > 0 {
-                        // thread p-1 must have completed this plane so our
-                        // first line sees its new last line, and it stopped
-                        // reading across our lower edge.
-                        super::barrier::spin_wait(|| {
-                            progress[tid - 1].load(Ordering::Acquire) >= k as isize
-                        });
-                    }
-                    // SAFETY: chunks are disjoint line ranges; the progress
-                    // protocol guarantees the only cross-chunk reads (j0-1
-                    // from below = new, j1 from above = old) are race-free:
-                    // below has finished plane k, above has not started it.
-                    unsafe {
-                        for j in j0..j1 {
-                            gs_plane_line_raw(ptr.get(), ny, nx, k, j, kernel);
-                        }
-                    }
-                    progress[tid].store(k as isize, Ordering::Release);
-                }
-            });
-        }
-    });
-    Ok(())
+    pool::with_global(|p| pipeline_gs_sweep_on(p, u, cfg))
 }
 
-/// `n` pipelined sweeps.
+/// [`pipeline_gs_sweep`] on a caller-owned pool.
+pub fn pipeline_gs_sweep_on(pool: &mut WorkerPool, u: &mut Grid3, cfg: &PipelineConfig) -> Result<()> {
+    pipeline_gs_passes(pool, u, cfg, 1)
+}
+
+/// `n` pipelined sweeps on one persistent team.
 pub fn pipeline_gs_sweeps(u: &mut Grid3, cfg: &PipelineConfig, n: usize) -> Result<()> {
-    for _ in 0..n {
-        pipeline_gs_sweep(u, cfg)?;
-    }
-    Ok(())
+    pool::with_global(|p| pipeline_gs_sweeps_on(p, u, cfg, n))
+}
+
+/// [`pipeline_gs_sweeps`] on a caller-owned pool.
+pub fn pipeline_gs_sweeps_on(
+    pool: &mut WorkerPool,
+    u: &mut Grid3,
+    cfg: &PipelineConfig,
+    n: usize,
+) -> Result<()> {
+    pipeline_gs_passes(pool, u, cfg, n)
 }
 
 #[cfg(test)]
@@ -161,6 +226,15 @@ mod tests {
                 assert_eq!(w[0].1, w[1].0, "contiguous");
             }
         }
+    }
+
+    #[test]
+    fn zero_threads_is_an_error_not_a_panic() {
+        assert!(chunk_lines(10, 0).is_empty());
+        let mut u = Grid3::random(6, 8, 7, 1);
+        let cfg = PipelineConfig { threads: 0, kernel: GsKernel::Interleaved };
+        assert!(cfg.validate().is_err());
+        assert!(pipeline_gs_sweep(&mut u, &cfg).is_err());
     }
 
     #[test]

@@ -1,0 +1,411 @@
+//! Persistent worker pool: one thread team, created once, reused across
+//! passes, iterations and experiments.
+//!
+//! The paper's temporal-blocking schemes live on cheap, repeated
+//! coordination of a *fixed* thread team (Sec. 4; also Wittmann et al.,
+//! arXiv:1006.3148). Spawning a fresh `std::thread::scope` team per pass
+//! — what every coordinator here used to do — pays thread creation,
+//! stack setup and scheduler migration on every pass, which dwarfs the
+//! plane-level synchronization the schemes optimize. [`WorkerPool`] keeps
+//! the team parked between passes instead: dispatching a
+//! [`Schedule`](super::schedule::Schedule) costs one condvar broadcast,
+//! and the team grows on demand when a schedule needs more workers
+//! (team-size reconfiguration without losing the existing threads).
+//!
+//! `benches/bench_pool.rs` measures respawn-per-pass vs persistent-pool
+//! MLUP/s; `tests/pool_reuse.rs` asserts bit-exactness when one pool
+//! instance is reused across schemes, passes and team sizes.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+use crate::Result;
+
+use super::schedule::{Progress, Schedule};
+
+/// Per-worker start hook, called once with the worker id when the thread
+/// starts — the place to pin the worker to a core (e.g. via
+/// `sched_setaffinity` on Linux) or tag it for profiling.
+pub type StartHook = Arc<dyn Fn(usize) + Send + Sync + 'static>;
+
+/// Type-erased dispatch record for one pass.
+#[derive(Clone, Copy)]
+struct Job {
+    /// The schedule under execution. The borrow is lifetime-erased; this
+    /// is sound because [`WorkerPool::run`] blocks until every worker has
+    /// acknowledged the epoch, so the pointer never outlives the borrow
+    /// it was created from.
+    schedule: *const (dyn Schedule + 'static),
+    /// Team size of this pass; pool workers with `id >= workers` just
+    /// acknowledge the epoch and go back to sleep.
+    workers: usize,
+    /// The pool-owned progress table (reset before dispatch).
+    progress: *const Progress,
+}
+
+// SAFETY: the pointers reference a `Schedule: Sync` and a `Progress`
+// (atomics) that outlive the pass; see the field docs above.
+unsafe impl Send for Job {}
+
+struct State {
+    /// Bumped once per dispatched pass (and on shutdown) to wake workers.
+    epoch: u64,
+    job: Option<Job>,
+    /// Workers that have not yet acknowledged the current epoch.
+    active: usize,
+    /// Captured panic messages of the current pass.
+    panics: Vec<String>,
+    shutdown: bool,
+}
+
+struct Control {
+    state: Mutex<State>,
+    /// Signaled when a new epoch (or shutdown) is published.
+    go: Condvar,
+    /// Signaled when `active` reaches zero.
+    done: Condvar,
+}
+
+/// Best-effort extraction of a panic payload's message (shared with the
+/// launcher's sweep fan-out).
+pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+fn worker_loop(control: Arc<Control>, id: usize, mut seen: u64, hook: Option<StartHook>) {
+    if let Some(h) = hook {
+        // a dead worker would deadlock every later dispatch, so a hook
+        // failure must not kill the thread
+        if catch_unwind(AssertUnwindSafe(|| h(id))).is_err() {
+            eprintln!("stencilwave-pool-{id}: start hook panicked; worker continues unpinned");
+        }
+    }
+    loop {
+        let job = {
+            let mut st = control.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    seen = st.epoch;
+                    break st.job.expect("epoch bumped without a job");
+                }
+                st = control.go.wait(st).unwrap();
+            }
+        };
+        if id < job.workers {
+            // SAFETY: `run` keeps the schedule and progress table alive
+            // until every worker acknowledges this epoch (below).
+            let schedule = unsafe { &*job.schedule };
+            let progress = unsafe { &*job.progress };
+            let result = catch_unwind(AssertUnwindSafe(|| schedule.worker(id, progress)));
+            if let Err(payload) = result {
+                // abort peers spinning on watermarks this worker will
+                // never publish (they drain via Progress::wait_min's
+                // poison panic, which lands right back here)
+                progress.poison();
+                let msg = panic_message(payload.as_ref());
+                let mut st = control.state.lock().unwrap();
+                st.panics.push(format!("worker {id}: {msg}"));
+                st.active -= 1;
+                if st.active == 0 {
+                    control.done.notify_all();
+                }
+                continue;
+            }
+        }
+        let mut st = control.state.lock().unwrap();
+        st.active -= 1;
+        if st.active == 0 {
+            control.done.notify_all();
+        }
+    }
+}
+
+/// A persistent team of worker threads executing [`Schedule`] passes.
+pub struct WorkerPool {
+    control: Arc<Control>,
+    handles: Vec<JoinHandle<()>>,
+    progress: Progress,
+    hook: Option<StartHook>,
+}
+
+impl WorkerPool {
+    /// A pool with `size` persistent workers. `size` may be 0: the pool
+    /// grows on demand to fit each dispatched schedule.
+    pub fn new(size: usize) -> Self {
+        let control = Arc::new(Control {
+            state: Mutex::new(State {
+                epoch: 0,
+                job: None,
+                active: 0,
+                panics: Vec::new(),
+                shutdown: false,
+            }),
+            go: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let mut pool =
+            Self { control, handles: Vec::new(), progress: Progress::new(0), hook: None };
+        pool.ensure_workers(size);
+        pool
+    }
+
+    /// Install a per-worker start hook (e.g. core pinning). Applies to
+    /// workers spawned afterwards, so install it before the first run.
+    pub fn set_start_hook(&mut self, hook: StartHook) {
+        self.hook = Some(hook);
+    }
+
+    /// Current team size.
+    pub fn size(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Grow the team to at least `n` workers (no-op when already larger).
+    pub fn ensure_workers(&mut self, n: usize) {
+        let epoch = self.control.state.lock().unwrap().epoch;
+        while self.handles.len() < n {
+            let id = self.handles.len();
+            let control = Arc::clone(&self.control);
+            let hook = self.hook.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("stencilwave-pool-{id}"))
+                .spawn(move || worker_loop(control, id, epoch, hook))
+                .expect("spawn pool worker");
+            self.handles.push(handle);
+        }
+    }
+
+    /// Execute one pass of `schedule` on the team, blocking until every
+    /// worker finishes. Grows the team if the schedule needs more workers
+    /// than the pool currently holds; workers beyond the schedule's team
+    /// size stay parked.
+    ///
+    /// Worker panics are captured and surfaced as an error and the pool
+    /// itself survives them: the pass is poisoned so peers blocked in
+    /// [`Progress::wait_min`] abort instead of spinning forever. (A
+    /// schedule that synchronizes through a raw barrier instead of the
+    /// progress table — the wavefront's `SyncMode::Barrier` — can still
+    /// stall if a worker dies *between* barrier rounds; the progress
+    /// protocol is the panic-safe path.)
+    pub fn run(&mut self, schedule: &dyn Schedule) -> Result<()> {
+        let n = schedule.workers();
+        anyhow::ensure!(n >= 1, "schedule needs at least one worker");
+        self.ensure_workers(n);
+        let slots = schedule.progress_slots();
+        if self.progress.len() < slots {
+            self.progress = Progress::new(slots);
+        }
+        self.progress.reset();
+
+        // Erase the borrow lifetime; sound because this function does not
+        // return until every worker has acknowledged the epoch.
+        let short: *const (dyn Schedule + '_) = schedule;
+        let erased: *const (dyn Schedule + 'static) = unsafe { std::mem::transmute(short) };
+        let job = Job { schedule: erased, workers: n, progress: &self.progress };
+
+        let mut st = self.control.state.lock().unwrap();
+        debug_assert!(st.job.is_none() && st.active == 0, "pool dispatched re-entrantly");
+        st.job = Some(job);
+        st.active = self.handles.len();
+        st.epoch = st.epoch.wrapping_add(1);
+        self.control.go.notify_all();
+        while st.active > 0 {
+            st = self.control.done.wait(st).unwrap();
+        }
+        st.job = None;
+        let panics = std::mem::take(&mut st.panics);
+        drop(st);
+        anyhow::ensure!(panics.is_empty(), "schedule worker(s) panicked: {}", panics.join("; "));
+        Ok(())
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.control.state.lock().unwrap_or_else(|e| e.into_inner());
+            st.shutdown = true;
+            self.control.go.notify_all();
+        }
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+static GLOBAL: OnceLock<Mutex<WorkerPool>> = OnceLock::new();
+
+/// Run `f` with exclusive access to the process-wide shared pool — the
+/// team every convenience entry point (`wavefront_jacobi`,
+/// `pipeline_gs_sweep`, …) dispatches on, so repeated passes amortize one
+/// set of threads across the whole process. Callers that want an isolated
+/// team (or several teams side by side) construct their own
+/// [`WorkerPool`] and use the `*_on` entry points instead.
+pub fn with_global<R>(f: impl FnOnce(&mut WorkerPool) -> R) -> R {
+    let m = GLOBAL.get_or_init(|| Mutex::new(WorkerPool::new(0)));
+    let mut guard = m.lock().unwrap_or_else(|e| e.into_inner());
+    f(&mut guard)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    struct CountSchedule {
+        hits: Vec<AtomicUsize>,
+    }
+
+    impl CountSchedule {
+        fn new(n: usize) -> Self {
+            Self { hits: (0..n).map(|_| AtomicUsize::new(0)).collect() }
+        }
+    }
+
+    impl Schedule for CountSchedule {
+        fn workers(&self) -> usize {
+            self.hits.len()
+        }
+        fn worker(&self, id: usize, _progress: &Progress) {
+            self.hits[id].fetch_add(1, Ordering::SeqCst);
+        }
+    }
+
+    /// Workers hand off through the progress table; the recorded order
+    /// must be 0..n every pass — which only holds if the pool resets the
+    /// table between passes.
+    struct ChainSchedule {
+        n: usize,
+        order: Mutex<Vec<usize>>,
+    }
+
+    impl Schedule for ChainSchedule {
+        fn workers(&self) -> usize {
+            self.n
+        }
+        fn worker(&self, id: usize, progress: &Progress) {
+            if id > 0 {
+                progress.wait_min(id - 1, 1);
+            }
+            self.order.lock().unwrap().push(id);
+            progress.publish(id, 1);
+        }
+    }
+
+    struct PanicSchedule;
+
+    impl Schedule for PanicSchedule {
+        fn workers(&self) -> usize {
+            2
+        }
+        fn worker(&self, id: usize, _progress: &Progress) {
+            if id == 1 {
+                panic!("boom from worker {id}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_workers_run_every_pass() {
+        let mut pool = WorkerPool::new(3);
+        let sched = CountSchedule::new(3);
+        for _ in 0..5 {
+            pool.run(&sched).unwrap();
+        }
+        for h in &sched.hits {
+            assert_eq!(h.load(Ordering::SeqCst), 5);
+        }
+    }
+
+    #[test]
+    fn pool_grows_on_demand_and_larger_teams_idle() {
+        let mut pool = WorkerPool::new(1);
+        pool.run(&CountSchedule::new(4)).unwrap();
+        assert_eq!(pool.size(), 4);
+        // smaller schedule on the grown pool: extra workers idle
+        let small = CountSchedule::new(2);
+        pool.run(&small).unwrap();
+        assert_eq!(small.hits[0].load(Ordering::SeqCst), 1);
+        assert_eq!(small.hits[1].load(Ordering::SeqCst), 1);
+        assert_eq!(pool.size(), 4);
+    }
+
+    #[test]
+    fn progress_is_reset_between_passes() {
+        let mut pool = WorkerPool::new(4);
+        let sched = ChainSchedule { n: 4, order: Mutex::new(Vec::new()) };
+        for pass in 0..10 {
+            pool.run(&sched).unwrap();
+            let mut order = sched.order.lock().unwrap();
+            assert_eq!(*order, vec![0, 1, 2, 3], "pass {pass}");
+            order.clear();
+        }
+    }
+
+    #[test]
+    fn worker_panic_is_captured_and_pool_survives() {
+        let mut pool = WorkerPool::new(2);
+        let err = pool.run(&PanicSchedule).unwrap_err().to_string();
+        assert!(err.contains("boom"), "{err}");
+        // the pool is still usable after the failed pass
+        let sched = CountSchedule::new(2);
+        pool.run(&sched).unwrap();
+        assert_eq!(sched.hits[0].load(Ordering::SeqCst), 1);
+    }
+
+    /// Worker 0 dies before publishing anything; workers 1 and 2 wait on
+    /// it. Without poisoning this deadlocks `run` forever.
+    struct PanicChainSchedule;
+
+    impl Schedule for PanicChainSchedule {
+        fn workers(&self) -> usize {
+            3
+        }
+        fn worker(&self, id: usize, progress: &Progress) {
+            if id == 0 {
+                panic!("chain head died");
+            }
+            progress.wait_min(id - 1, 1);
+            progress.publish(id, 1);
+        }
+    }
+
+    #[test]
+    fn panic_poisons_waiting_peers_instead_of_deadlocking() {
+        let mut pool = WorkerPool::new(3);
+        let err = pool.run(&PanicChainSchedule).unwrap_err().to_string();
+        assert!(err.contains("chain head died"), "{err}");
+        // poison is cleared by the next pass's reset
+        let sched = ChainSchedule { n: 3, order: Mutex::new(Vec::new()) };
+        pool.run(&sched).unwrap();
+        assert_eq!(*sched.order.lock().unwrap(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn empty_schedule_is_rejected() {
+        let mut pool = WorkerPool::new(1);
+        assert!(pool.run(&CountSchedule::new(0)).is_err());
+    }
+
+    #[test]
+    fn start_hook_sees_every_worker() {
+        let seen = Arc::new(AtomicUsize::new(0));
+        let mut pool = WorkerPool::new(0);
+        let s = Arc::clone(&seen);
+        pool.set_start_hook(Arc::new(move |_id| {
+            s.fetch_add(1, Ordering::SeqCst);
+        }));
+        pool.run(&CountSchedule::new(3)).unwrap();
+        assert_eq!(seen.load(Ordering::SeqCst), 3);
+    }
+}

@@ -1,0 +1,167 @@
+//! The unified time-skew schedule abstraction.
+//!
+//! Every coordinator in this crate — the wavefront Jacobi group (Fig. 6),
+//! the pipelined Gauss-Seidel sweep (Fig. 5a), the GS wavefront
+//! composition (Fig. 5b) and the multi-group blocked Jacobi (Fig. 7 at
+//! scale) — shares one execution shape: a fixed team of workers, each
+//! owning a *role* (a time-shifted sweep, a y-chunk, a y-block), advances
+//! through rounds of plane/line tasks while expressing forward
+//! dependencies ("my producer has passed plane `k`") and back-pressure
+//! ("my consumer is close enough that this buffer slot is still live")
+//! against a shared table of per-role watermarks.
+//!
+//! [`Schedule`] captures that shape once; [`Progress`] is the single
+//! shared watermark table every wait goes through (it replaces the three
+//! per-coordinator `Vec<AtomicIsize>` copies the crate used to carry);
+//! [`super::pool::WorkerPool`] executes schedules on a persistent worker
+//! team so repeated passes do not respawn threads.
+
+use std::sync::atomic::{AtomicBool, AtomicIsize, Ordering};
+
+use super::barrier::spin_wait;
+
+/// Shared progress table: one monotonically increasing watermark per
+/// worker role, reset by the pool before every pass.
+///
+/// Watermarks are plane (or round) numbers counted from 1, so
+/// [`Progress::NONE`]` = 0` means "nothing completed yet" and waits for
+/// non-positive thresholds (back-pressure during pipeline fill) succeed
+/// immediately.
+///
+/// A pass can be *poisoned* ([`Progress::poison`]) when a worker dies:
+/// every [`Progress::wait_min`] whose watermark can no longer arrive
+/// then panics instead of spinning forever, so the remaining workers
+/// unwind and the pool can surface the original failure.
+pub struct Progress {
+    slots: Vec<AtomicIsize>,
+    poisoned: AtomicBool,
+}
+
+impl Progress {
+    /// Initial watermark: no plane completed yet.
+    pub const NONE: isize = 0;
+
+    /// A table of `n` slots, all at [`Progress::NONE`].
+    pub fn new(n: usize) -> Self {
+        Self {
+            slots: (0..n).map(|_| AtomicIsize::new(Self::NONE)).collect(),
+            poisoned: AtomicBool::new(false),
+        }
+    }
+
+    /// Number of slots.
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// True when the table has no slots.
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Reset every watermark to [`Progress::NONE`] and clear the poison
+    /// flag (start of a pass).
+    pub fn reset(&self) {
+        for s in &self.slots {
+            s.store(Self::NONE, Ordering::Release);
+        }
+        self.poisoned.store(false, Ordering::Release);
+    }
+
+    /// Mark the pass as failed: wake every worker blocked on a watermark
+    /// that will never arrive (they panic out of [`Progress::wait_min`]).
+    pub fn poison(&self) {
+        self.poisoned.store(true, Ordering::Release);
+    }
+
+    /// True once [`Progress::poison`] was called this pass.
+    pub fn is_poisoned(&self) -> bool {
+        self.poisoned.load(Ordering::Acquire)
+    }
+
+    /// Publish that role `slot` has completed everything up to `value`.
+    #[inline]
+    pub fn publish(&self, slot: usize, value: isize) {
+        self.slots[slot].store(value, Ordering::Release);
+    }
+
+    /// Current watermark of role `slot`.
+    #[inline]
+    pub fn load(&self, slot: usize) -> isize {
+        self.slots[slot].load(Ordering::Acquire)
+    }
+
+    /// Forward-dependency / back-pressure wait: spin until role `slot`'s
+    /// watermark reaches `min`.
+    ///
+    /// # Panics
+    /// When the pass is poisoned (a peer worker died) and the awaited
+    /// watermark has not arrived — the abort path that lets the
+    /// remaining workers drain instead of spinning forever.
+    #[inline]
+    pub fn wait_min(&self, slot: usize, min: isize) {
+        spin_wait(|| {
+            self.slots[slot].load(Ordering::Acquire) >= min
+                || self.poisoned.load(Ordering::Acquire)
+        });
+        if self.slots[slot].load(Ordering::Acquire) < min {
+            panic!("pass aborted: a peer worker panicked");
+        }
+    }
+}
+
+/// One time-skewed parallel pass, executable on a worker pool.
+///
+/// Implementations hold raw views of the grids and buffers they traverse
+/// (they are `Sync`, shared by reference across the team) and encode the
+/// paper's flow-control protocol in [`Schedule::worker`]: per-round task
+/// selection, forward-dependency waits and back-pressure waits, all
+/// against the single [`Progress`] table the pool hands in.
+pub trait Schedule: Sync {
+    /// Workers the pass needs (the team size).
+    fn workers(&self) -> usize;
+
+    /// Progress slots the pass needs (defaults to one per worker).
+    fn progress_slots(&self) -> usize {
+        self.workers()
+    }
+
+    /// The body of worker `id` (`0 <= id < workers()`), executed
+    /// concurrently on every worker of the team. `progress` has at least
+    /// [`Schedule::progress_slots`] slots and is reset to
+    /// [`Progress::NONE`] before the pass starts.
+    fn worker(&self, id: usize, progress: &Progress);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn progress_reset_and_watermarks() {
+        let p = Progress::new(3);
+        assert_eq!(p.len(), 3);
+        assert!(!p.is_empty());
+        assert_eq!(p.load(1), Progress::NONE);
+        p.publish(1, 7);
+        assert_eq!(p.load(1), 7);
+        p.wait_min(1, 7); // already satisfied: returns immediately
+        p.wait_min(2, -3); // NONE >= -3: fill-phase back-pressure
+        p.reset();
+        assert_eq!(p.load(1), Progress::NONE);
+    }
+
+    #[test]
+    fn poison_aborts_unsatisfiable_waits() {
+        let p = Progress::new(2);
+        p.poison();
+        assert!(p.is_poisoned());
+        p.wait_min(0, 0); // satisfied waits still succeed when poisoned
+        let aborted = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            p.wait_min(0, 5); // watermark 5 can never arrive
+        }));
+        assert!(aborted.is_err());
+        p.reset();
+        assert!(!p.is_poisoned());
+    }
+}

@@ -1,0 +1,462 @@
+//! Multi-group spatial × temporal blocking for Jacobi — the parallel
+//! Fig. 7 scheme.
+//!
+//! [`super::spatial`] sweeps the y-blocks of the skewed decomposition one
+//! after another on a single thread. Here `G` *groups* each own one
+//! y-block and sweep it concurrently, time-shifted: group `g` executes
+//! wavefront round `r` only after group `g-1` has completed round `r-1`.
+//! The per-level update regions, the 4-slot temporary ring per odd level
+//! and the odd-level boundary arrays are exactly those of the serial
+//! blocked sweep — but the temporary ring and the boundary array are
+//! per-group, and group `g` reads the boundary planes directly out of
+//! group `g-1`'s array under the round-lag flow control (the hand-off
+//! Wittmann et al., arXiv:1006.3148, identify as the key to multi-group
+//! temporal blocking).
+//!
+//! ## Why a one-round lag suffices
+//!
+//! All cross-group traffic sits at the block interface. For the update of
+//! level `s`, plane `k` (round `r = k + 2(s-1)`):
+//!
+//! * *flow*: every level-`s-1` value group `g` reads from group `g-1` —
+//!   `src` lines for even `s-1`, boundary-array lines for odd `s-1` — was
+//!   produced at plane `<= k+1`, i.e. at round `<= r-1`;
+//! * *anti*: the deepest even level of group `g-1` that writes an
+//!   interface `src` line group `g` still wants at level `s-1` *is*
+//!   level `s-1` itself (deeper even levels end strictly left of it), so
+//!   nothing group `g` needs is ever overwritten; conversely group `g`'s
+//!   even-level `src` writes at lines group `g-1` reads happen one round
+//!   *after* group `g-1`'s last read of them — guaranteed because group
+//!   `g` trails by at least one round.
+//!
+//! The serial code's "forwarding pass" for width-1 blocks has no sound
+//! one-round-lag analog, so the scheme requires every block to hold at
+//! least two interior lines (`ny - 2 >= 2 * groups`); the constructor
+//! rejects narrower decompositions.
+//!
+//! Result: bit-identical to `t` serial Jacobi sweeps for every
+//! `(t, groups)` — asserted by the tests and by `launcher::run_experiment`
+//! on every launch.
+
+use std::marker::PhantomData;
+
+use crate::stencil::grid::Grid3;
+use crate::stencil::jacobi::ONE_SIXTH;
+use crate::Result;
+
+use super::pool::{self, WorkerPool};
+use super::schedule::{Progress, Schedule};
+
+/// Temporary-ring slots per odd level (as in the serial blocked sweep).
+const TMP_SLOTS: usize = 4;
+
+/// Configuration of a multi-group blocked (spatial × temporal) pass.
+#[derive(Clone, Copy, Debug)]
+pub struct MultiGroupConfig {
+    /// Temporal blocking factor `t` (even, >= 2).
+    pub t: usize,
+    /// Thread groups = y blocks (>= 1; each block needs >= 2 interior
+    /// lines when `groups > 1`).
+    pub groups: usize,
+}
+
+impl Default for MultiGroupConfig {
+    fn default() -> Self {
+        Self { t: 4, groups: 2 }
+    }
+}
+
+impl MultiGroupConfig {
+    /// Validate the grid-independent part of the configuration (single
+    /// source for every entry point); the per-group width requirement
+    /// needs the grid and lives in [`MultiGroupSchedule::new`].
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.t >= 2 && self.t % 2 == 0,
+            "multi-group blocking needs even t >= 2, got {}",
+            self.t
+        );
+        anyhow::ensure!(self.groups >= 1, "need at least one group");
+        Ok(())
+    }
+}
+
+/// One multi-group blocked pass (`t` fused updates) as a [`Schedule`]:
+/// worker `g` wavefront-sweeps y-block `g`.
+pub struct MultiGroupSchedule<'g> {
+    src: *mut f64,
+    f: *const f64,
+    /// `groups * (t/2) * TMP_SLOTS` z-x planes (per-group odd-level rings).
+    tmp: *mut f64,
+    /// `groups * (t/2) * nz * 2` x-lines (per-group boundary arrays).
+    bnd: *mut f64,
+    nz: usize,
+    ny: usize,
+    nx: usize,
+    t: usize,
+    groups: usize,
+    h2: f64,
+    /// Block boundaries over the interior lines `[1, ny-1)`.
+    starts: Vec<usize>,
+    last_round: isize,
+    _borrow: PhantomData<&'g mut f64>,
+}
+
+// SAFETY: groups write disjoint regions (own ring, own boundary array,
+// own skewed src lines); the round-lag protocol orders every cross-group
+// read/write pair (module docs).
+unsafe impl Send for MultiGroupSchedule<'_> {}
+unsafe impl Sync for MultiGroupSchedule<'_> {}
+
+impl<'g> MultiGroupSchedule<'g> {
+    /// Build a pass over `u`. `tmp` and `bnd` are caller-owned scratch
+    /// buffers, resized here; they must stay alive (and untouched) for
+    /// as long as the schedule runs.
+    pub fn new(
+        u: &'g mut Grid3,
+        f: &'g Grid3,
+        tmp: &'g mut Vec<f64>,
+        bnd: &'g mut Vec<f64>,
+        h2: f64,
+        cfg: &MultiGroupConfig,
+    ) -> Result<Self> {
+        cfg.validate()?;
+        let t = cfg.t;
+        let groups = cfg.groups;
+        anyhow::ensure!(u.shape() == f.shape(), "u/f shape mismatch");
+        let (nz, ny, nx) = u.shape();
+        anyhow::ensure!(nz >= 3 && ny >= 3 && nx >= 3, "grid too small for a blocked pass");
+        let interior = ny - 2;
+        anyhow::ensure!(
+            groups == 1 || interior >= 2 * groups,
+            "multi-group blocking needs >= 2 interior lines per group \
+             (ny = {ny} gives {interior} interior lines for {groups} groups)"
+        );
+        let plane = ny * nx;
+        let levels = t / 2;
+        tmp.clear();
+        tmp.resize(groups * levels * TMP_SLOTS * plane, 0.0);
+        bnd.clear();
+        bnd.resize(groups * levels * nz * 2 * nx, 0.0);
+        let starts: Vec<usize> = (0..=groups).map(|b| 1 + b * interior / groups).collect();
+        Ok(Self {
+            src: u.data_mut().as_mut_ptr(),
+            f: f.data().as_ptr(),
+            tmp: tmp.as_mut_ptr(),
+            bnd: bnd.as_mut_ptr(),
+            nz,
+            ny,
+            nx,
+            t,
+            groups,
+            h2,
+            starts,
+            last_round: (nz - 2) as isize + 2 * (t as isize - 1),
+            _borrow: PhantomData,
+        })
+    }
+}
+
+impl Schedule for MultiGroupSchedule<'_> {
+    fn workers(&self) -> usize {
+        self.groups
+    }
+
+    fn worker(&self, g: usize, progress: &Progress) {
+        let (nz, ny, nx, t) = (self.nz, self.ny, self.nx, self.t);
+        let plane = ny * nx;
+        let levels = t / 2;
+        let bnd_stride = nz * 2 * nx; // per odd level
+        let group_tmp = levels * TMP_SLOTS * plane;
+        let group_bnd = levels * bnd_stride;
+        let tmp = unsafe { self.tmp.add(g * group_tmp) };
+        let bnd_own = unsafe { self.bnd.add(g * group_bnd) };
+        let bnd_prev = if g > 0 {
+            unsafe { self.bnd.add((g - 1) * group_bnd) as *const f64 }
+        } else {
+            std::ptr::null()
+        };
+        let src = self.src;
+        let f_base = self.f;
+        let b_count = self.groups;
+        let block_start = self.starts[g];
+        let block_end = self.starts[g + 1];
+
+        // per-level y region of this block (clamped skew, as in the
+        // serial blocked sweep)
+        let region = |s: usize| -> (usize, usize) {
+            let shift = s - 1;
+            let lo = if g == 0 { 1 } else { block_start.saturating_sub(shift).max(1) };
+            let hi = if g + 1 == b_count { ny - 1 } else { block_end.saturating_sub(shift).max(1) };
+            (lo, hi)
+        };
+
+        // level-(s-1) value of line (k, y) as this group's level-s update
+        // sees it: src for boundaries and even levels, own ring for odd
+        // levels produced here, the previous group's boundary array for
+        // the two interface lines below the region.
+        let read_line = |s: usize, k: usize, y: usize| -> *const f64 {
+            if k == 0 || k == nz - 1 || y == 0 || y == ny - 1 {
+                return unsafe { src.add((k * ny + y) * nx) as *const f64 };
+            }
+            let prev = s - 1;
+            if prev % 2 == 0 {
+                // even levels (incl. 0 = original) live in src: the
+                // highest even level whose region covered this line is
+                // exactly `prev`.
+                return unsafe { src.add((k * ny + y) * nx) as *const f64 };
+            }
+            let lvl = (prev - 1) / 2;
+            let region_lo =
+                if g == 0 { 1 } else { block_start.saturating_sub(prev - 1).max(1) };
+            if y >= region_lo {
+                unsafe { tmp.add((lvl * TMP_SLOTS + k % TMP_SLOTS) * plane + y * nx) as *const f64 }
+            } else {
+                // lines start_g - prev - 1 and start_g - prev of the
+                // previous group's level-`prev` region, saved as boundary
+                // index 0 / 1
+                let iface_lo = block_start - prev - 1;
+                debug_assert!(y == iface_lo || y == iface_lo + 1, "y={y} iface_lo={iface_lo} s={s}");
+                let idx = y - iface_lo;
+                unsafe { bnd_prev.add(lvl * bnd_stride + (k * 2 + idx) * nx) }
+            }
+        };
+
+        // scratch line reused across every (round, level, y) iteration
+        let mut out = vec![0.0f64; nx];
+        for r in 1..=self.last_round {
+            if g > 0 {
+                // round-lag flow control: the left neighbor is at least
+                // one full round ahead (see module docs).
+                progress.wait_min(g - 1, r - 1);
+            }
+            for s in 1..=t {
+                let k = r - 2 * (s as isize - 1);
+                if k < 1 || k > (nz - 2) as isize {
+                    continue;
+                }
+                let k = k as usize;
+                let (y_lo, y_hi) = region(s);
+                let lvl = (s - 1) / 2; // odd-level index for writes of odd s
+                for y in y_lo..y_hi {
+                    // SAFETY: the round-lag protocol freezes every line the
+                    // reads touch and gives this group exclusive write
+                    // access to its skewed region (module docs).
+                    unsafe {
+                        let c = read_line(s, k, y);
+                        let ym = read_line(s, k, y - 1);
+                        let yp = read_line(s, k, y + 1);
+                        let zm = read_line(s, k - 1, y);
+                        let zp = read_line(s, k + 1, y);
+                        let rhs = f_base.add((k * ny + y) * nx);
+                        out[0] = *c;
+                        out[nx - 1] = *c.add(nx - 1);
+                        for i in 1..nx - 1 {
+                            out[i] = ONE_SIXTH
+                                * (*c.add(i - 1)
+                                    + *c.add(i + 1)
+                                    + *ym.add(i)
+                                    + *yp.add(i)
+                                    + *zm.add(i)
+                                    + *zp.add(i)
+                                    + self.h2 * *rhs.add(i));
+                        }
+                        if s % 2 == 1 {
+                            let dst = tmp.add((lvl * TMP_SLOTS + k % TMP_SLOTS) * plane + y * nx);
+                            std::ptr::copy_nonoverlapping(out.as_ptr(), dst, nx);
+                            if g + 1 < b_count {
+                                // interface lines end_g - s - 1 and
+                                // end_g - s: save them for the right
+                                // neighbor before the ring recycles them.
+                                let iface_lo = block_end as isize - s as isize - 1;
+                                let idx = y as isize - iface_lo;
+                                if idx == 0 || idx == 1 {
+                                    let o = bnd_own
+                                        .add(lvl * bnd_stride + (k * 2 + idx as usize) * nx);
+                                    std::ptr::copy_nonoverlapping(out.as_ptr(), o, nx);
+                                }
+                            }
+                        } else {
+                            let dst = src.add((k * ny + y) * nx);
+                            std::ptr::copy_nonoverlapping(out.as_ptr(), dst, nx);
+                        }
+                    }
+                }
+            }
+            progress.publish(g, r);
+        }
+    }
+}
+
+/// Run `passes` multi-group passes on `pool` with one schedule.
+fn multigroup_passes(
+    pool: &mut WorkerPool,
+    u: &mut Grid3,
+    f: &Grid3,
+    h2: f64,
+    cfg: &MultiGroupConfig,
+    passes: usize,
+) -> Result<()> {
+    cfg.validate()?;
+    anyhow::ensure!(u.shape() == f.shape(), "u/f shape mismatch");
+    let (nz, ny, nx) = u.shape();
+    if nz < 3 || ny < 3 || nx < 3 || passes == 0 {
+        return Ok(());
+    }
+    let mut tmp = Vec::new();
+    let mut bnd = Vec::new();
+    let schedule = MultiGroupSchedule::new(u, f, &mut tmp, &mut bnd, h2, cfg)?;
+    for _ in 0..passes {
+        pool.run(&schedule)?;
+    }
+    Ok(())
+}
+
+/// Perform exactly `cfg.t` Jacobi updates on `u` in place, `cfg.groups`
+/// blocks swept concurrently on the process-wide pool.
+pub fn multigroup_blocked_jacobi(
+    u: &mut Grid3,
+    f: &Grid3,
+    h2: f64,
+    cfg: &MultiGroupConfig,
+) -> Result<()> {
+    pool::with_global(|p| multigroup_blocked_jacobi_on(p, u, f, h2, cfg))
+}
+
+/// [`multigroup_blocked_jacobi`] on a caller-owned pool.
+pub fn multigroup_blocked_jacobi_on(
+    pool: &mut WorkerPool,
+    u: &mut Grid3,
+    f: &Grid3,
+    h2: f64,
+    cfg: &MultiGroupConfig,
+) -> Result<()> {
+    multigroup_passes(pool, u, f, h2, cfg, 1)
+}
+
+/// Run `iters` updates (a multiple of `cfg.t`) via repeated passes of one
+/// persistent team.
+pub fn multigroup_blocked_jacobi_iters(
+    u: &mut Grid3,
+    f: &Grid3,
+    h2: f64,
+    cfg: &MultiGroupConfig,
+    iters: usize,
+) -> Result<()> {
+    pool::with_global(|p| multigroup_blocked_jacobi_iters_on(p, u, f, h2, cfg, iters))
+}
+
+/// [`multigroup_blocked_jacobi_iters`] on a caller-owned pool.
+pub fn multigroup_blocked_jacobi_iters_on(
+    pool: &mut WorkerPool,
+    u: &mut Grid3,
+    f: &Grid3,
+    h2: f64,
+    cfg: &MultiGroupConfig,
+    iters: usize,
+) -> Result<()> {
+    cfg.validate()?;
+    anyhow::ensure!(
+        iters % cfg.t == 0,
+        "iters ({iters}) must be a multiple of the blocking factor ({})",
+        cfg.t
+    );
+    multigroup_passes(pool, u, f, h2, cfg, iters / cfg.t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::wavefront::serial_reference;
+
+    fn check(nz: usize, ny: usize, nx: usize, t: usize, groups: usize) {
+        let f = Grid3::random(nz, ny, nx, 17);
+        let mut u = Grid3::random(nz, ny, nx, 18);
+        let want = serial_reference(&u, &f, 1.1, t);
+        multigroup_blocked_jacobi(&mut u, &f, 1.1, &MultiGroupConfig { t, groups }).unwrap();
+        assert_eq!(u.max_abs_diff(&want), 0.0, "{nz}x{ny}x{nx} t={t} G={groups}");
+    }
+
+    #[test]
+    fn single_group_matches_serial() {
+        check(10, 9, 8, 2, 1);
+        check(10, 9, 8, 4, 1);
+        check(8, 7, 9, 6, 1);
+    }
+
+    #[test]
+    fn two_groups_match_serial() {
+        check(10, 12, 8, 2, 2);
+        check(10, 12, 8, 4, 2);
+        check(8, 16, 9, 6, 2);
+        check(8, 6, 9, 4, 2); // minimum width: two interior lines each
+    }
+
+    #[test]
+    fn many_groups_match_serial() {
+        check(8, 24, 8, 4, 4);
+        check(8, 20, 8, 4, 8);
+        check(6, 30, 7, 6, 5);
+        check(6, 18, 7, 2, 7);
+    }
+
+    #[test]
+    fn uneven_block_sizes() {
+        // interior lines not divisible by the group count
+        check(8, 13, 8, 4, 3);
+        check(8, 11, 8, 2, 4);
+        check(7, 17, 8, 6, 3);
+    }
+
+    #[test]
+    fn deep_temporal_blocking_with_narrow_blocks() {
+        // t exceeds the block width: skewed regions clamp at the domain
+        // edge and some levels go empty near y = 1
+        check(8, 10, 8, 8, 4);
+        check(10, 8, 8, 6, 3);
+    }
+
+    #[test]
+    fn iters_multiple_passes_reuse_one_team() {
+        let f = Grid3::random(10, 14, 8, 5);
+        let mut u = Grid3::random(10, 14, 8, 6);
+        let want = serial_reference(&u, &f, 1.0, 12);
+        let cfg = MultiGroupConfig { t: 4, groups: 3 };
+        let mut pool = WorkerPool::new(3);
+        multigroup_blocked_jacobi_iters_on(&mut pool, &mut u, &f, 1.0, &cfg, 12).unwrap();
+        assert_eq!(u.max_abs_diff(&want), 0.0);
+        // non-multiple is an error
+        let mut v = Grid3::random(10, 14, 8, 6);
+        assert!(multigroup_blocked_jacobi_iters(&mut v, &f, 1.0, &cfg, 6).is_err());
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let f = Grid3::zeros(8, 8, 8);
+        let mut u = Grid3::random(8, 8, 8, 1);
+        // odd t
+        assert!(
+            multigroup_blocked_jacobi(&mut u, &f, 1.0, &MultiGroupConfig { t: 3, groups: 2 })
+                .is_err()
+        );
+        // zero groups
+        assert!(
+            multigroup_blocked_jacobi(&mut u, &f, 1.0, &MultiGroupConfig { t: 2, groups: 0 })
+                .is_err()
+        );
+        // too many groups for the interior (8 - 2 = 6 lines < 2 * 4)
+        assert!(
+            multigroup_blocked_jacobi(&mut u, &f, 1.0, &MultiGroupConfig { t: 2, groups: 4 })
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn degenerate_grid_is_identity() {
+        let mut u = Grid3::random(2, 6, 6, 9);
+        let orig = u.clone();
+        let f = Grid3::zeros(2, 6, 6);
+        multigroup_blocked_jacobi(&mut u, &f, 1.0, &MultiGroupConfig::default()).unwrap();
+        assert_eq!(u, orig);
+    }
+}

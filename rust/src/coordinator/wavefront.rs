@@ -1,8 +1,8 @@
 //! Temporal wavefront blocking for Jacobi (paper Sec. 4, Fig. 6).
 //!
-//! A *thread group* of `t` threads performs `t` time-shifted sweeps over
-//! the grid. Thread `s` (0-based) executes update step `s+1`, trailing
-//! thread `s-1` by two planes so its three-plane read window only touches
+//! A *thread group* of `t` workers performs `t` time-shifted sweeps over
+//! the grid. Worker `s` (0-based) executes update step `s+1`, trailing
+//! worker `s-1` by two planes so its three-plane read window only touches
 //! completed planes. Odd-numbered updates are written to a small
 //! round-robin temporary buffer; even-numbered updates go back to the
 //! `src` array — so after the group passes, `src` holds the `t`-times
@@ -15,14 +15,19 @@
 //! `k mod 4` of region `u`, consumer step `2u+2` trails by exactly two
 //! planes and reads slots `k-1 … k+1` — four live slots.
 //!
+//! The pass is expressed as a [`Schedule`] and dispatched on the
+//! persistent [`WorkerPool`]: `wavefront_jacobi_iters` builds the
+//! schedule once and reuses one thread team (and one temporary ring)
+//! across all passes instead of respawning per pass.
+//!
 //! ## Safety argument (also enforced by the progress protocol)
 //!
-//! * thread `s` updates plane `k` only once `progress[s-1] ≥ k+1`
+//! * worker `s` updates plane `k` only once `progress[s-1] >= k+1`
 //!   (its entire read window holds step-`s` values);
-//! * thread `s` never runs more than `TMP_SLOTS - 1` planes ahead of
-//!   thread `s+1` (back-pressure), so no live temporary slot is reused;
-//! * `src` writes by thread `s` land strictly behind every plane thread
-//!   `s-2`'s window can still read (distance ≥ 4).
+//! * worker `s` never runs more than `TMP_SLOTS - 1` planes ahead of
+//!   worker `s+1` (back-pressure), so no live temporary slot is reused;
+//! * `src` writes by worker `s` land strictly behind every plane worker
+//!   `s-2`'s window can still read (distance >= 4).
 //!
 //! Boundary planes (`k = 0`, `k = nz-1`) are never updated at any step,
 //! so every step's "value" of a boundary plane is the original `src`
@@ -31,7 +36,7 @@
 //! Numerics are bit-identical to `t` serial [`jacobi_sweep`]s: same
 //! kernel, same fp order — tests assert exact equality.
 
-use std::sync::atomic::{AtomicIsize, Ordering};
+use std::marker::PhantomData;
 
 use crate::simulator::perfmodel::BarrierKind;
 use crate::stencil::grid::Grid3;
@@ -39,18 +44,20 @@ use crate::stencil::jacobi::{jacobi_line_update, jacobi_sweep};
 use crate::Result;
 
 use super::barrier::AnyBarrier;
+use super::pool::{self, WorkerPool};
+use super::schedule::{Progress, Schedule};
 
 /// Temporary-buffer slots per odd update level (see module docs).
 const TMP_SLOTS: usize = 4;
 
-/// How threads of a group synchronize plane hand-off.
+/// How workers of a group synchronize plane hand-off.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
 pub enum SyncMode {
     /// Global barrier after every plane round (the paper's scheme).
     #[default]
     Barrier,
     /// Point-to-point progress flags (producer/consumer flow control) —
-    /// the "highly efficient synchronization" refinement: threads only
+    /// the "highly efficient synchronization" refinement: workers only
     /// wait for the neighbors they actually depend on.
     Flow,
 }
@@ -58,7 +65,7 @@ pub enum SyncMode {
 /// Configuration of one wavefront thread group.
 #[derive(Clone, Copy, Debug)]
 pub struct WavefrontConfig {
-    /// Threads in the group = temporal blocking factor `t` (even, ≥ 2).
+    /// Workers in the group = temporal blocking factor `t` (even, >= 2).
     pub threads: usize,
     pub barrier: BarrierKind,
     pub sync: SyncMode,
@@ -70,151 +77,224 @@ impl Default for WavefrontConfig {
     }
 }
 
-/// Raw shared-grid pointer that the scoped threads index disjointly.
-#[derive(Clone, Copy)]
-struct SharedPtr(*mut f64);
-unsafe impl Send for SharedPtr {}
-unsafe impl Sync for SharedPtr {}
-
-impl SharedPtr {
-    /// Accessor (method, not field) so closures capture the whole wrapper
-    /// — RFC 2229 disjoint capture would otherwise capture the bare
-    /// pointer, which is not `Send`.
-    #[inline(always)]
-    fn get(self) -> *mut f64 {
-        self.0
+impl WavefrontConfig {
+    /// Validate the configuration (single source for every entry point).
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.threads >= 2 && self.threads % 2 == 0,
+            "wavefront needs an even thread count >= 2, got {}",
+            self.threads
+        );
+        Ok(())
     }
+}
+
+/// One wavefront pass (`t` fused updates) as a [`Schedule`].
+///
+/// Borrows the grids for `'g`; reusable across passes — the temporary
+/// ring is fully rewritten before it is re-read within each pass.
+pub struct WavefrontJacobiSchedule<'g> {
+    src: *mut f64,
+    tmp: *mut f64,
+    f: *const f64,
+    nz: usize,
+    ny: usize,
+    nx: usize,
+    t: usize,
+    h2: f64,
+    sync: SyncMode,
+    barrier: AnyBarrier,
+    last_round: isize,
+    _borrow: PhantomData<&'g mut f64>,
+}
+
+// SAFETY: workers index the shared grid and ring disjointly per the
+// progress protocol (module docs); all shared access is through raw
+// pointers whose aliasing discipline the schedule itself enforces.
+unsafe impl Send for WavefrontJacobiSchedule<'_> {}
+unsafe impl Sync for WavefrontJacobiSchedule<'_> {}
+
+impl<'g> WavefrontJacobiSchedule<'g> {
+    /// Build a pass over `u`. `tmp` is the caller-owned temporary ring;
+    /// it is resized here and must stay alive (and untouched) for as
+    /// long as the schedule runs.
+    pub fn new(
+        u: &'g mut Grid3,
+        f: &'g Grid3,
+        tmp: &'g mut Vec<f64>,
+        h2: f64,
+        cfg: &WavefrontConfig,
+    ) -> Result<Self> {
+        cfg.validate()?;
+        let t = cfg.threads;
+        anyhow::ensure!(u.shape() == f.shape(), "u/f shape mismatch");
+        let (nz, ny, nx) = u.shape();
+        anyhow::ensure!(nz >= 3 && ny >= 3 && nx >= 3, "grid too small for a wavefront pass");
+        let plane = ny * nx;
+        tmp.clear();
+        tmp.resize((t / 2) * TMP_SLOTS * plane, 0.0);
+        Ok(Self {
+            src: u.data_mut().as_mut_ptr(),
+            tmp: tmp.as_mut_ptr(),
+            f: f.data().as_ptr(),
+            nz,
+            ny,
+            nx,
+            t,
+            h2,
+            sync: cfg.sync,
+            barrier: AnyBarrier::new(cfg.barrier, t),
+            last_round: (nz - 2) as isize + 2 * (t as isize - 1),
+            _borrow: PhantomData,
+        })
+    }
+}
+
+impl Schedule for WavefrontJacobiSchedule<'_> {
+    fn workers(&self) -> usize {
+        self.t
+    }
+
+    fn worker(&self, s: usize, progress: &Progress) {
+        let (nz, ny, nx, t) = (self.nz, self.ny, self.nx, self.t);
+        let plane = ny * nx;
+        let src = self.src;
+        let tmpp = self.tmp;
+        let f_base = self.f;
+        // plane base pointer holding the step-`s` values of plane kk as
+        // seen by worker `s` (its read side).
+        let read_plane = |kk: usize| -> *const f64 {
+            if kk == 0 || kk == nz - 1 || s % 2 == 0 {
+                unsafe { src.add(kk * plane) as *const f64 }
+            } else {
+                let region = (s / 2) * TMP_SLOTS;
+                unsafe { tmpp.add((region + kk % TMP_SLOTS) * plane) as *const f64 }
+            }
+        };
+        let write_plane = |k: usize| -> *mut f64 {
+            if s % 2 == 0 {
+                let region = (s / 2) * TMP_SLOTS;
+                unsafe { tmpp.add((region + k % TMP_SLOTS) * plane) }
+            } else {
+                unsafe { src.add(k * plane) }
+            }
+        };
+
+        for r in 1..=self.last_round {
+            let k = r - 2 * s as isize;
+            if k >= 1 && k <= (nz - 2) as isize {
+                let k = k as usize;
+                if self.sync == SyncMode::Flow {
+                    // forward dependency: window complete at step s.
+                    // Plane nz-1 is boundary and never processed, so at
+                    // k = nz-2 the window is complete once the producer
+                    // finished its own last interior plane.
+                    if s > 0 {
+                        let need = (k as isize + 1).min((nz - 2) as isize);
+                        progress.wait_min(s - 1, need);
+                    }
+                    // back-pressure: do not overwrite a tmp slot the
+                    // consumer may still read
+                    if s + 1 < t {
+                        progress.wait_min(s + 1, k as isize - (TMP_SLOTS as isize - 1));
+                    }
+                }
+                // SAFETY: the schedule guarantees exclusive write access
+                // to plane k of the write side and that every read plane
+                // holds completed step values (see module docs); lines
+                // below are disjoint slices.
+                unsafe {
+                    let zm = read_plane(k - 1);
+                    let zc = read_plane(k);
+                    let zp = read_plane(k + 1);
+                    let out = write_plane(k);
+                    // boundary lines of the output plane must carry the
+                    // (step-invariant) boundary values so later steps
+                    // read correct y-edges from the tmp.
+                    if s % 2 == 0 {
+                        let src_line0 = src.add(k * plane) as *const f64;
+                        std::ptr::copy_nonoverlapping(src_line0, out, nx);
+                        std::ptr::copy_nonoverlapping(
+                            src_line0.add((ny - 1) * nx),
+                            out.add((ny - 1) * nx),
+                            nx,
+                        );
+                        // x-edge columns are copied per line below.
+                    }
+                    for j in 1..ny - 1 {
+                        let dst = std::slice::from_raw_parts_mut(out.add(j * nx), nx);
+                        let center = std::slice::from_raw_parts(zc.add(j * nx), nx);
+                        if s % 2 == 0 {
+                            // carry the Dirichlet x-edges into tmp
+                            dst[0] = center[0];
+                            dst[nx - 1] = center[nx - 1];
+                        }
+                        jacobi_line_update(
+                            dst,
+                            center,
+                            std::slice::from_raw_parts(zc.add((j - 1) * nx), nx),
+                            std::slice::from_raw_parts(zc.add((j + 1) * nx), nx),
+                            std::slice::from_raw_parts(zm.add(j * nx), nx),
+                            std::slice::from_raw_parts(zp.add(j * nx), nx),
+                            std::slice::from_raw_parts(f_base.add((k * ny + j) * nx), nx),
+                            self.h2,
+                        );
+                    }
+                }
+                progress.publish(s, k as isize);
+            }
+            if self.sync == SyncMode::Barrier {
+                self.barrier.wait(s);
+            }
+        }
+    }
+}
+
+/// Run `passes` wavefront passes on `pool`, one team, one temporary ring.
+fn wavefront_jacobi_passes(
+    pool: &mut WorkerPool,
+    u: &mut Grid3,
+    f: &Grid3,
+    h2: f64,
+    cfg: &WavefrontConfig,
+    passes: usize,
+) -> Result<()> {
+    cfg.validate()?;
+    anyhow::ensure!(u.shape() == f.shape(), "u/f shape mismatch");
+    let (nz, ny, nx) = u.shape();
+    if nz < 3 || ny < 3 || nx < 3 || passes == 0 {
+        return Ok(());
+    }
+    let mut tmp = Vec::new();
+    let schedule = WavefrontJacobiSchedule::new(u, f, &mut tmp, h2, cfg)?;
+    for _ in 0..passes {
+        pool.run(&schedule)?;
+    }
+    Ok(())
 }
 
 /// Perform exactly `cfg.threads` Jacobi updates on `u` in place.
 ///
 /// Functionally equal to `cfg.threads` calls of [`jacobi_sweep`] with
-/// ping-pong buffers, but executed by one wavefront thread group.
+/// ping-pong buffers, but executed by one wavefront thread group on the
+/// process-wide [`pool`].
 pub fn wavefront_jacobi(u: &mut Grid3, f: &Grid3, h2: f64, cfg: &WavefrontConfig) -> Result<()> {
-    let t = cfg.threads;
-    anyhow::ensure!(t >= 2 && t % 2 == 0, "wavefront needs an even thread count >= 2, got {t}");
-    anyhow::ensure!(u.shape() == f.shape(), "u/f shape mismatch");
-    let (nz, ny, nx) = u.shape();
-    if nz < 3 || ny < 3 || nx < 3 {
-        return Ok(());
-    }
-
-    let plane = ny * nx;
-    let mut tmp = vec![0.0f64; (t / 2) * TMP_SLOTS * plane];
-    let src_ptr = SharedPtr(u.data_mut().as_mut_ptr());
-    let tmp_ptr = SharedPtr(tmp.as_mut_ptr());
-    let f_ptr = f.data().as_ptr() as usize;
-
-    let barrier = AnyBarrier::new(cfg.barrier, t);
-    let progress: Vec<AtomicIsize> = (0..t).map(|_| AtomicIsize::new(0)).collect();
-    let last_round = (nz - 2) as isize + 2 * (t as isize - 1);
-
-    std::thread::scope(|scope| {
-        for s in 0..t {
-            let barrier = &barrier;
-            let progress = &progress;
-            let src = src_ptr;
-            let tmpp = tmp_ptr;
-            scope.spawn(move || {
-                let f_base = f_ptr as *const f64;
-                // plane base pointer holding the step-`s` values of plane kk
-                // as seen by thread `s` (its read side).
-                let read_plane = |kk: usize| -> *const f64 {
-                    if kk == 0 || kk == nz - 1 || s % 2 == 0 {
-                        unsafe { src.get().add(kk * plane) as *const f64 }
-                    } else {
-                        let region = (s / 2) * TMP_SLOTS;
-                        unsafe { tmpp.get().add((region + kk % TMP_SLOTS) * plane) as *const f64 }
-                    }
-                };
-                let write_plane = |k: usize| -> *mut f64 {
-                    if s % 2 == 0 {
-                        let region = (s / 2) * TMP_SLOTS;
-                        unsafe { tmpp.get().add((region + k % TMP_SLOTS) * plane) }
-                    } else {
-                        unsafe { src.get().add(k * plane) }
-                    }
-                };
-
-                for r in 1..=last_round {
-                    let k = r - 2 * s as isize;
-                    if k >= 1 && k <= (nz - 2) as isize {
-                        let k = k as usize;
-                        if cfg.sync == SyncMode::Flow {
-                            // forward dependency: window complete at step s.
-                            // Plane nz-1 is boundary and never processed, so
-                            // at k = nz-2 the window is complete once the
-                            // producer finished its own last interior plane.
-                            if s > 0 {
-                                let need = (k as isize + 1).min((nz - 2) as isize);
-                                super::barrier::spin_wait(|| {
-                                    progress[s - 1].load(Ordering::Acquire) >= need
-                                });
-                            }
-                            // back-pressure: do not overwrite a tmp slot the
-                            // consumer may still read
-                            if s + 1 < t {
-                                super::barrier::spin_wait(|| {
-                                    progress[s + 1].load(Ordering::Acquire)
-                                        >= k as isize - (TMP_SLOTS as isize - 1)
-                                });
-                            }
-                        }
-                        // SAFETY: the schedule guarantees exclusive write
-                        // access to plane k of the write side and that every
-                        // read plane holds completed step values (see module
-                        // docs); lines below are disjoint slices.
-                        unsafe {
-                            let zm = read_plane(k - 1);
-                            let zc = read_plane(k);
-                            let zp = read_plane(k + 1);
-                            let out = write_plane(k);
-                            // boundary lines of the output plane must carry
-                            // the (step-invariant) boundary values so later
-                            // steps read correct y-edges from the tmp.
-                            if s % 2 == 0 {
-                                let src_line0 = src.get().add(k * plane) as *const f64;
-                                std::ptr::copy_nonoverlapping(src_line0, out, nx);
-                                std::ptr::copy_nonoverlapping(
-                                    src_line0.add((ny - 1) * nx),
-                                    out.add((ny - 1) * nx),
-                                    nx,
-                                );
-                                // x-edge columns are copied per line below.
-                            }
-                            for j in 1..ny - 1 {
-                                let dst = std::slice::from_raw_parts_mut(out.add(j * nx), nx);
-                                let center = std::slice::from_raw_parts(zc.add(j * nx), nx);
-                                if s % 2 == 0 {
-                                    // carry the Dirichlet x-edges into tmp
-                                    dst[0] = center[0];
-                                    dst[nx - 1] = center[nx - 1];
-                                }
-                                jacobi_line_update(
-                                    dst,
-                                    center,
-                                    std::slice::from_raw_parts(zc.add((j - 1) * nx), nx),
-                                    std::slice::from_raw_parts(zc.add((j + 1) * nx), nx),
-                                    std::slice::from_raw_parts(zm.add(j * nx), nx),
-                                    std::slice::from_raw_parts(zp.add(j * nx), nx),
-                                    std::slice::from_raw_parts(f_base.add((k * ny + j) * nx), nx),
-                                    h2,
-                                );
-                            }
-                        }
-                        progress[s].store(k as isize, Ordering::Release);
-                    }
-                    if cfg.sync == SyncMode::Barrier {
-                        barrier.wait(s);
-                    }
-                }
-            });
-        }
-    });
-    Ok(())
+    pool::with_global(|p| wavefront_jacobi_on(p, u, f, h2, cfg))
 }
 
-/// Run `iters` updates (a multiple of `cfg.threads`) via repeated passes.
+/// [`wavefront_jacobi`] on a caller-owned pool.
+pub fn wavefront_jacobi_on(
+    pool: &mut WorkerPool,
+    u: &mut Grid3,
+    f: &Grid3,
+    h2: f64,
+    cfg: &WavefrontConfig,
+) -> Result<()> {
+    wavefront_jacobi_passes(pool, u, f, h2, cfg, 1)
+}
+
+/// Run `iters` updates (a multiple of `cfg.threads`) via repeated passes
+/// of one persistent team (no per-pass thread respawn).
 pub fn wavefront_jacobi_iters(
     u: &mut Grid3,
     f: &Grid3,
@@ -222,15 +302,25 @@ pub fn wavefront_jacobi_iters(
     cfg: &WavefrontConfig,
     iters: usize,
 ) -> Result<()> {
+    pool::with_global(|p| wavefront_jacobi_iters_on(p, u, f, h2, cfg, iters))
+}
+
+/// [`wavefront_jacobi_iters`] on a caller-owned pool.
+pub fn wavefront_jacobi_iters_on(
+    pool: &mut WorkerPool,
+    u: &mut Grid3,
+    f: &Grid3,
+    h2: f64,
+    cfg: &WavefrontConfig,
+    iters: usize,
+) -> Result<()> {
+    cfg.validate()?;
     anyhow::ensure!(
         iters % cfg.threads == 0,
         "iters ({iters}) must be a multiple of the blocking factor ({})",
         cfg.threads
     );
-    for _ in 0..iters / cfg.threads {
-        wavefront_jacobi(u, f, h2, cfg)?;
-    }
-    Ok(())
+    wavefront_jacobi_passes(pool, u, f, h2, cfg, iters / cfg.threads)
 }
 
 /// Reference: `n` serial Jacobi sweeps, returning the result.
@@ -283,7 +373,7 @@ mod tests {
 
     #[test]
     fn small_grids_where_wavefronts_overlap_fully() {
-        // nz-2 < 2t: every thread is inside the pipeline fill/drain region.
+        // nz-2 < 2t: every worker is inside the pipeline fill/drain region.
         check(5, 6, 6, 4, SyncMode::Barrier, BarrierKind::Spin);
         check(4, 5, 5, 6, SyncMode::Flow, BarrierKind::Spin);
         check(3, 4, 4, 2, SyncMode::Barrier, BarrierKind::Spin);
@@ -308,6 +398,17 @@ mod tests {
         // non-multiple is an error
         let mut v = Grid3::random(10, 8, 8, 6);
         assert!(wavefront_jacobi_iters(&mut v, &f, 1.0, &cfg, 6).is_err());
+    }
+
+    #[test]
+    fn many_passes_on_one_private_pool() {
+        let f = Grid3::random(11, 9, 8, 15);
+        let mut u = Grid3::random(11, 9, 8, 16);
+        let want = serial_reference(&u, &f, 0.5, 24);
+        let cfg = WavefrontConfig { threads: 4, sync: SyncMode::Flow, ..Default::default() };
+        let mut pool = WorkerPool::new(4);
+        wavefront_jacobi_iters_on(&mut pool, &mut u, &f, 0.5, &cfg, 24).unwrap();
+        assert_eq!(u.max_abs_diff(&want), 0.0);
     }
 
     #[test]

@@ -3,35 +3,39 @@
 //! The adaptation of the wavefront scheme to the in-place GS method: since
 //! all updates operate on one array, no temporary planes are needed at
 //! all. A pass runs `S` complete sweeps through the grid *simultaneously*:
-//! sweep `s` (a thread group, itself pipeline-parallel over y as in
+//! sweep `s` (a worker group, itself pipeline-parallel over y as in
 //! Fig. 5a) trails sweep `s-1` in z so that when it updates plane `k`,
 //! plane `k+1` already carries post-sweep-`s-1` values and plane `k-1`
 //! carries its own freshly written values — the exact lexicographic
 //! semantics, `S` times, in one traversal of memory.
 //!
-//! Dependencies enforced by the progress protocol:
-//! * pipeline (within sweep `s`): thread `p` starts plane `k` after thread
+//! Dependencies enforced by the shared progress table:
+//! * pipeline (within sweep `s`): worker `p` starts plane `k` after worker
 //!   `p-1` finishes plane `k`;
 //! * wavefront (between sweeps): sweep `s` starts plane `k` after *all*
-//!   threads of sweep `s-1` finish plane `k+1`.
+//!   workers of sweep `s-1` finish plane `k+1`.
 //!
-//! Bit-identical to `S` serial sweeps — asserted by tests for all shapes,
-//! group counts and pipeline widths.
+//! The pass is a [`Schedule`] on the persistent [`WorkerPool`]
+//! (`S × width` workers); `wavefront_gs_iters` reuses one team across all
+//! passes. Bit-identical to `S` serial sweeps — asserted by tests for all
+//! shapes, group counts and pipeline widths.
 
-use std::sync::atomic::{AtomicIsize, Ordering};
+use std::marker::PhantomData;
 
 use crate::stencil::gauss_seidel::{gs_plane_line_raw, gs_sweep, GsKernel};
 use crate::stencil::grid::Grid3;
 use crate::Result;
 
 use super::pipeline::chunk_lines;
+use super::pool::{self, WorkerPool};
+use super::schedule::{Progress, Schedule};
 
 /// Configuration of a GS wavefront pass.
 #[derive(Clone, Copy, Debug)]
 pub struct GsWavefrontConfig {
-    /// Simultaneous sweeps `S` = temporal blocking factor = thread groups.
+    /// Simultaneous sweeps `S` = temporal blocking factor = worker groups.
     pub sweeps: usize,
-    /// Threads per group (pipeline width over y). With SMT the paper runs
+    /// Workers per group (pipeline width over y). With SMT the paper runs
     /// two logical threads per core here.
     pub threads_per_group: usize,
     pub kernel: GsKernel,
@@ -43,94 +47,149 @@ impl Default for GsWavefrontConfig {
     }
 }
 
-#[derive(Clone, Copy)]
-struct SharedPtr(*mut f64);
-unsafe impl Send for SharedPtr {}
-unsafe impl Sync for SharedPtr {}
-
-impl SharedPtr {
-    /// Accessor (method, not field) so closures capture the whole wrapper
-    /// — RFC 2229 disjoint capture would otherwise capture the bare
-    /// pointer, which is not `Send`.
-    #[inline(always)]
-    fn get(self) -> *mut f64 {
-        self.0
+impl GsWavefrontConfig {
+    /// Validate the configuration (single source for every entry point).
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.sweeps >= 1, "need at least one sweep");
+        anyhow::ensure!(self.threads_per_group >= 1, "need at least one thread per group");
+        Ok(())
     }
+}
+
+/// One GS wavefront pass as a [`Schedule`].
+///
+/// Worker `id` is thread `id % width` of sweep `id / width`; progress
+/// slot `s * width + p` holds the last plane completed by thread `p` of
+/// sweep `s`.
+pub struct GsWavefrontSchedule<'g> {
+    base: *mut f64,
+    nz: usize,
+    ny: usize,
+    nx: usize,
+    sweeps: usize,
+    width: usize,
+    chunks: Vec<(usize, usize)>,
+    kernel: GsKernel,
+    _borrow: PhantomData<&'g mut f64>,
+}
+
+// SAFETY: plane/chunk exclusivity is enforced by the progress protocol
+// (module docs); neighbor lines are only read in states the protocol
+// freezes.
+unsafe impl Send for GsWavefrontSchedule<'_> {}
+unsafe impl Sync for GsWavefrontSchedule<'_> {}
+
+impl<'g> GsWavefrontSchedule<'g> {
+    /// Build one pass of `cfg.sweeps` simultaneous sweeps over `u`.
+    pub fn new(u: &'g mut Grid3, cfg: &GsWavefrontConfig) -> Result<Self> {
+        cfg.validate()?;
+        let (nz, ny, nx) = u.shape();
+        anyhow::ensure!(nz >= 3 && ny >= 3 && nx >= 3, "grid too small for a wavefront pass");
+        Ok(Self {
+            base: u.data_mut().as_mut_ptr(),
+            nz,
+            ny,
+            nx,
+            sweeps: cfg.sweeps,
+            width: cfg.threads_per_group,
+            chunks: chunk_lines(ny, cfg.threads_per_group),
+            kernel: cfg.kernel,
+            _borrow: PhantomData,
+        })
+    }
+}
+
+impl Schedule for GsWavefrontSchedule<'_> {
+    fn workers(&self) -> usize {
+        self.sweeps * self.width
+    }
+
+    fn worker(&self, id: usize, progress: &Progress) {
+        let width = self.width;
+        let s = id / width;
+        let p = id % width;
+        let (j0, j1) = self.chunks[p];
+        for k in 1..self.nz - 1 {
+            // wavefront dependency: previous sweep fully past plane k+1
+            // (so k+1 holds post-sweep-(s-1) values and nobody still
+            // reads our plane k).
+            if s > 0 {
+                let need = (k + 1).min(self.nz - 2) as isize;
+                for q in 0..width {
+                    progress.wait_min((s - 1) * width + q, need);
+                }
+            }
+            // pipeline dependency within the sweep.
+            if p > 0 {
+                progress.wait_min(s * width + p - 1, k as isize);
+            }
+            // SAFETY: plane/chunk exclusivity by the protocol above;
+            // neighbor lines are only read in states the protocol
+            // freezes (see module docs).
+            unsafe {
+                for j in j0..j1 {
+                    gs_plane_line_raw(self.base, self.ny, self.nx, k, j, self.kernel);
+                }
+            }
+            progress.publish(s * width + p, k as isize);
+        }
+    }
+}
+
+/// Run `passes` wavefront passes on `pool` with one schedule.
+fn wavefront_gs_passes(
+    pool: &mut WorkerPool,
+    u: &mut Grid3,
+    cfg: &GsWavefrontConfig,
+    passes: usize,
+) -> Result<()> {
+    cfg.validate()?;
+    let (nz, ny, nx) = u.shape();
+    if nz < 3 || ny < 3 || nx < 3 || passes == 0 {
+        return Ok(());
+    }
+    if cfg.sweeps == 1 && cfg.threads_per_group == 1 {
+        for _ in 0..passes {
+            gs_sweep(u, cfg.kernel);
+        }
+        return Ok(());
+    }
+    let schedule = GsWavefrontSchedule::new(u, cfg)?;
+    for _ in 0..passes {
+        pool.run(&schedule)?;
+    }
+    Ok(())
 }
 
 /// Run `cfg.sweeps` lexicographic GS sweeps in one wavefront pass.
 pub fn wavefront_gs(u: &mut Grid3, cfg: &GsWavefrontConfig) -> Result<()> {
-    let s_count = cfg.sweeps;
-    let width = cfg.threads_per_group;
-    anyhow::ensure!(s_count >= 1, "need at least one sweep");
-    anyhow::ensure!(width >= 1, "need at least one thread per group");
-    let (nz, ny, nx) = u.shape();
-    if nz < 3 || ny < 3 || nx < 3 {
-        return Ok(());
-    }
-    if s_count == 1 && width == 1 {
-        gs_sweep(u, cfg.kernel);
-        return Ok(());
-    }
-
-    let chunks = chunk_lines(ny, width);
-    // progress[s * width + p] = last plane completed by thread p of sweep s
-    let progress: Vec<AtomicIsize> =
-        (0..s_count * width).map(|_| AtomicIsize::new(0)).collect();
-    let base = SharedPtr(u.data_mut().as_mut_ptr());
-    let kernel = cfg.kernel;
-
-    std::thread::scope(|scope| {
-        for s in 0..s_count {
-            for (p, &(j0, j1)) in chunks.iter().enumerate() {
-                let progress = &progress;
-                let ptr = base;
-                scope.spawn(move || {
-                    for k in 1..nz - 1 {
-                        // wavefront dependency: previous sweep fully past
-                        // plane k+1 (so k+1 holds post-sweep-(s-1) values
-                        // and nobody still reads our plane k).
-                        if s > 0 {
-                            let need = (k + 1).min(nz - 2) as isize;
-                            for q in 0..width {
-                                super::barrier::spin_wait(|| {
-                                    progress[(s - 1) * width + q].load(Ordering::Acquire) >= need
-                                });
-                            }
-                        }
-                        // pipeline dependency within the sweep.
-                        if p > 0 {
-                            super::barrier::spin_wait(|| {
-                                progress[s * width + p - 1].load(Ordering::Acquire) >= k as isize
-                            });
-                        }
-                        // SAFETY: plane/chunk exclusivity by the protocol
-                        // above; neighbor lines are only read in states the
-                        // protocol freezes (see module docs).
-                        unsafe {
-                            for j in j0..j1 {
-                                gs_plane_line_raw(ptr.get(), ny, nx, k, j, kernel);
-                            }
-                        }
-                        progress[s * width + p].store(k as isize, Ordering::Release);
-                    }
-                });
-            }
-        }
-    });
-    Ok(())
+    pool::with_global(|p| wavefront_gs_on(p, u, cfg))
 }
 
-/// `iters` sweeps via passes of `cfg.sweeps` each (+ a remainder pass).
+/// [`wavefront_gs`] on a caller-owned pool.
+pub fn wavefront_gs_on(pool: &mut WorkerPool, u: &mut Grid3, cfg: &GsWavefrontConfig) -> Result<()> {
+    wavefront_gs_passes(pool, u, cfg, 1)
+}
+
+/// `iters` sweeps via passes of `cfg.sweeps` each (+ a remainder pass),
+/// all on one persistent team.
 pub fn wavefront_gs_iters(u: &mut Grid3, cfg: &GsWavefrontConfig, iters: usize) -> Result<()> {
-    let full = iters / cfg.sweeps;
-    for _ in 0..full {
-        wavefront_gs(u, cfg)?;
-    }
+    pool::with_global(|p| wavefront_gs_iters_on(p, u, cfg, iters))
+}
+
+/// [`wavefront_gs_iters`] on a caller-owned pool.
+pub fn wavefront_gs_iters_on(
+    pool: &mut WorkerPool,
+    u: &mut Grid3,
+    cfg: &GsWavefrontConfig,
+    iters: usize,
+) -> Result<()> {
+    cfg.validate()?;
+    wavefront_gs_passes(pool, u, cfg, iters / cfg.sweeps)?;
     let rest = iters % cfg.sweeps;
     if rest > 0 {
         let tail = GsWavefrontConfig { sweeps: rest, ..*cfg };
-        wavefront_gs(u, &tail)?;
+        wavefront_gs_passes(pool, u, &tail, 1)?;
     }
     Ok(())
 }
@@ -160,7 +219,7 @@ mod tests {
 
     #[test]
     fn pure_temporal_wavefront() {
-        // groups of one thread each — the Fig. 5b shifts in isolation
+        // groups of one worker each — the Fig. 5b shifts in isolation
         for s in [2, 3, 4, 6] {
             check(14, 9, 8, s, 1);
         }
@@ -177,7 +236,7 @@ mod tests {
 
     #[test]
     fn smt_like_oversubscription() {
-        // more logical threads than this box has cores: 8 × 2 = 16 threads
+        // more logical workers than this box has cores: 8 × 2 = 16
         check(9, 18, 8, 8, 2);
     }
 
@@ -195,6 +254,17 @@ mod tests {
         gs_sweeps(&mut want, 7, GsKernel::Interleaved);
         let cfg = GsWavefrontConfig { sweeps: 3, threads_per_group: 2, kernel: GsKernel::Interleaved };
         wavefront_gs_iters(&mut u, &cfg, 7).unwrap();
+        assert_eq!(u.max_abs_diff(&want), 0.0);
+    }
+
+    #[test]
+    fn iters_on_private_pool() {
+        let mut u = Grid3::random(10, 11, 8, 77);
+        let mut want = u.clone();
+        gs_sweeps(&mut want, 8, GsKernel::Interleaved);
+        let cfg = GsWavefrontConfig { sweeps: 4, threads_per_group: 2, kernel: GsKernel::Interleaved };
+        let mut pool = WorkerPool::new(8);
+        wavefront_gs_iters_on(&mut pool, &mut u, &cfg, 8).unwrap();
         assert_eq!(u.max_abs_diff(&want), 0.0);
     }
 }

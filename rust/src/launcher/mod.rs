@@ -14,9 +14,11 @@
 
 
 use crate::config::{RunConfig, Scheme};
-use crate::coordinator::pipeline::{pipeline_gs_sweeps, PipelineConfig};
-use crate::coordinator::wavefront::{wavefront_jacobi_iters, SyncMode, WavefrontConfig};
-use crate::coordinator::wavefront_gs::{wavefront_gs_iters, GsWavefrontConfig};
+use crate::coordinator::pipeline::{pipeline_gs_sweeps_on, PipelineConfig};
+use crate::coordinator::pool::{panic_message, WorkerPool};
+use crate::coordinator::spatial_mg::{multigroup_blocked_jacobi_iters_on, MultiGroupConfig};
+use crate::coordinator::wavefront::{wavefront_jacobi_iters_on, SyncMode, WavefrontConfig};
+use crate::coordinator::wavefront_gs::{wavefront_gs_iters_on, GsWavefrontConfig};
 use crate::metrics::{mlups, timed};
 use crate::simulator::ecm::{EcmModel, Prediction};
 use crate::simulator::memory::Dataset;
@@ -53,7 +55,11 @@ pub fn run_experiment(cfg: &RunConfig) -> Result<RunReport> {
     let u0 = Grid3::random(nz, ny, nx, 8);
     let h2 = 1.0;
 
-    // ---- functional leg on the host
+    // ---- functional leg on the host.
+    // Each experiment gets its own worker pool (created before the timer
+    // starts) so parallel sweeps really run side by side and the timed
+    // section never includes waiting for another experiment's team.
+    let mut pool = WorkerPool::new(0);
     let mut u = u0.clone();
     let (res, dt) = timed(|| -> Result<()> {
         match cfg.scheme {
@@ -67,11 +73,15 @@ pub fn run_experiment(cfg: &RunConfig) -> Result<RunReport> {
                     barrier: cfg.barrier,
                     sync: SyncMode::Barrier,
                 };
-                wavefront_jacobi_iters(&mut u, &f, h2, &wf, cfg.iters)
+                wavefront_jacobi_iters_on(&mut pool, &mut u, &f, h2, &wf, cfg.iters)
+            }
+            Scheme::JacobiMultiGroup => {
+                let mg = MultiGroupConfig { t: cfg.t, groups: cfg.groups };
+                multigroup_blocked_jacobi_iters_on(&mut pool, &mut u, &f, h2, &mg, cfg.iters)
             }
             Scheme::GsBaseline => {
                 let p = PipelineConfig { threads: cfg.t, kernel };
-                pipeline_gs_sweeps(&mut u, &p, cfg.iters)
+                pipeline_gs_sweeps_on(&mut pool, &mut u, &p, cfg.iters)
             }
             Scheme::GsWavefront => {
                 let w = GsWavefrontConfig {
@@ -79,7 +89,7 @@ pub fn run_experiment(cfg: &RunConfig) -> Result<RunReport> {
                     threads_per_group: cfg.groups,
                     kernel,
                 };
-                wavefront_gs_iters(&mut u, &w, cfg.iters)
+                wavefront_gs_iters_on(&mut pool, &mut u, &w, cfg.iters)
             }
         }
     });
@@ -99,7 +109,7 @@ pub fn run_experiment(cfg: &RunConfig) -> Result<RunReport> {
     let predicted = cfg.machine_spec().map(|m| {
         let kernel = cfg.scheme.kernel(cfg.optimized_kernel);
         match cfg.scheme {
-            Scheme::JacobiWavefront | Scheme::GsWavefront => {
+            Scheme::JacobiWavefront | Scheme::JacobiMultiGroup | Scheme::GsWavefront => {
                 let p = WavefrontParams {
                     t: cfg.t,
                     groups: cfg.groups,
@@ -157,7 +167,13 @@ pub fn sweep(configs: Vec<RunConfig>, max_parallel: usize) -> Vec<Result<RunRepo
                 handles.push(scope.spawn(move || run_experiment(cfg)));
             }
             for (slot, h) in results.iter_mut().zip(handles) {
-                *slot = Some(h.join().unwrap_or_else(|_| Err(anyhow::anyhow!("worker panicked"))));
+                *slot = Some(h.join().unwrap_or_else(|payload| {
+                    // surface the panic payload instead of swallowing it
+                    Err(anyhow::anyhow!(
+                        "sweep worker panicked: {}",
+                        panic_message(payload.as_ref())
+                    ))
+                }));
             }
         });
         out.extend(results.into_iter().map(|r| r.expect("filled")));
@@ -214,6 +230,7 @@ mod tests {
         for scheme in [
             Scheme::JacobiBaseline,
             Scheme::JacobiWavefront,
+            Scheme::JacobiMultiGroup,
             Scheme::GsBaseline,
             Scheme::GsWavefront,
         ] {
@@ -239,5 +256,16 @@ mod tests {
         for r in reports {
             assert_eq!(r.unwrap().verification_diff, 0.0);
         }
+    }
+
+    #[test]
+    fn sweep_surfaces_invalid_config_errors() {
+        // groups too large for the grid: run_experiment must fail with a
+        // real error (not a swallowed panic) while valid configs succeed.
+        let mut bad = cfg(Scheme::JacobiMultiGroup);
+        bad.groups = 50;
+        let reports = sweep(vec![bad, cfg(Scheme::JacobiBaseline)], 2);
+        assert!(reports[0].is_err());
+        assert_eq!(reports[1].as_ref().unwrap().verification_diff, 0.0);
     }
 }

@@ -16,6 +16,7 @@ use stencilwave::config::{RunConfig, Scheme};
 use stencilwave::figures;
 use stencilwave::launcher;
 use stencilwave::metrics;
+#[cfg(feature = "xla")]
 use stencilwave::runtime::{engine::validate, Manifest, Runtime};
 use stencilwave::simulator::machine::MachineSpec;
 use stencilwave::stencil::streambench::stream_triad;
@@ -31,13 +32,14 @@ COMMANDS:
   run        run one experiment
                --config <file> | --scheme <s> --n <N> --t <T> --groups <G>
                --iters <I> --machine <name> --csv
-               schemes: jacobi-baseline jacobi-wavefront gs-baseline gs-wavefront
+               schemes: jacobi-baseline jacobi-wavefront jacobi-multigroup
+                        gs-baseline gs-wavefront
   figures    regenerate paper tables/figures
                [id|all] --out-dir <dir>
                ids: tab1 fig3a fig3b fig4a fig4b fig8 fig9 fig10 barrier
   stream     host STREAM triad + modeled Tab. 1
                --n <elements> --reps <R>
-  validate   cross-layer validation vs AOT artifacts
+  validate   cross-layer validation vs AOT artifacts (needs --features xla)
                --artifact <name> --dir <artifacts-dir>
   machines   list the modeled testbed
 ";
@@ -123,6 +125,15 @@ fn cmd_stream(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "xla"))]
+fn cmd_validate(_args: &Args) -> Result<()> {
+    anyhow::bail!(
+        "the 'validate' subcommand needs the PJRT runtime: rebuild with \
+         `--features xla` (see rust/Cargo.toml for how to vendor xla-rs)"
+    )
+}
+
+#[cfg(feature = "xla")]
 fn cmd_validate(args: &Args) -> Result<()> {
     args.check_known(&["artifact", "dir"])?;
     let dir = args

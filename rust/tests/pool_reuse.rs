@@ -1,0 +1,90 @@
+//! One persistent pool reused across schemes, passes and team sizes must
+//! stay bit-exact against the serial references — the suite that catches
+//! stale progress-table or scratch-buffer state surviving a pass.
+
+use stencilwave::coordinator::pipeline::{pipeline_gs_sweeps_on, PipelineConfig};
+use stencilwave::coordinator::pool::WorkerPool;
+use stencilwave::coordinator::spatial_mg::{
+    multigroup_blocked_jacobi_iters_on, multigroup_blocked_jacobi_on, MultiGroupConfig,
+};
+use stencilwave::coordinator::wavefront::{
+    serial_reference, wavefront_jacobi_iters_on, wavefront_jacobi_on, SyncMode, WavefrontConfig,
+};
+use stencilwave::coordinator::wavefront_gs::{wavefront_gs_on, GsWavefrontConfig};
+use stencilwave::simulator::perfmodel::BarrierKind;
+use stencilwave::stencil::gauss_seidel::{gs_sweeps, GsKernel};
+use stencilwave::stencil::grid::Grid3;
+
+#[test]
+fn one_pool_survives_scheme_and_team_size_changes() {
+    let mut pool = WorkerPool::new(2);
+    let f = Grid3::random(12, 14, 10, 3);
+    for round in 0u64..3 {
+        // wavefront Jacobi with a reconfigured team every call
+        for (t, sync) in [(2usize, SyncMode::Flow), (6, SyncMode::Barrier), (4, SyncMode::Flow)] {
+            let mut u = Grid3::random(12, 14, 10, 40 + round * 10 + t as u64);
+            let want = serial_reference(&u, &f, 1.0, t);
+            let cfg = WavefrontConfig { threads: t, barrier: BarrierKind::Spin, sync };
+            wavefront_jacobi_on(&mut pool, &mut u, &f, 1.0, &cfg).unwrap();
+            assert_eq!(u.max_abs_diff(&want), 0.0, "jacobi t={t} round={round}");
+        }
+        // pipelined GS on the same pool
+        let mut u = Grid3::random(12, 14, 10, 70 + round);
+        let mut want = u.clone();
+        gs_sweeps(&mut want, 2, GsKernel::Interleaved);
+        let p = PipelineConfig { threads: 3, kernel: GsKernel::Interleaved };
+        pipeline_gs_sweeps_on(&mut pool, &mut u, &p, 2).unwrap();
+        assert_eq!(u.max_abs_diff(&want), 0.0, "pipeline round={round}");
+        // GS wavefront (different worker count again)
+        let mut u = Grid3::random(12, 14, 10, 80 + round);
+        let mut want = u.clone();
+        gs_sweeps(&mut want, 3, GsKernel::Interleaved);
+        let w = GsWavefrontConfig { sweeps: 3, threads_per_group: 2, kernel: GsKernel::Interleaved };
+        wavefront_gs_on(&mut pool, &mut u, &w).unwrap();
+        assert_eq!(u.max_abs_diff(&want), 0.0, "gs wavefront round={round}");
+        // multi-group blocked Jacobi
+        let mut u = Grid3::random(12, 14, 10, 90 + round);
+        let want = serial_reference(&u, &f, 1.0, 4);
+        let mg = MultiGroupConfig { t: 4, groups: 3 };
+        multigroup_blocked_jacobi_on(&mut pool, &mut u, &f, 1.0, &mg).unwrap();
+        assert_eq!(u.max_abs_diff(&want), 0.0, "multigroup round={round}");
+    }
+    // the pool grew to the largest team it ever hosted and kept it
+    assert!(pool.size() >= 6, "pool size {}", pool.size());
+}
+
+#[test]
+fn many_passes_amortize_one_team() {
+    // 40 updates = 10 wavefront passes through one pool: any watermark or
+    // temporary-ring state leaking between passes breaks exactness.
+    let f = Grid3::random(14, 10, 9, 11);
+    let mut u = Grid3::random(14, 10, 9, 12);
+    let want = serial_reference(&u, &f, 0.7, 40);
+    let cfg = WavefrontConfig { threads: 4, sync: SyncMode::Flow, ..Default::default() };
+    let mut pool = WorkerPool::new(4);
+    wavefront_jacobi_iters_on(&mut pool, &mut u, &f, 0.7, &cfg, 40).unwrap();
+    assert_eq!(u.max_abs_diff(&want), 0.0);
+
+    // and 12 more multi-group updates on the *same* pool
+    let mut v = Grid3::random(14, 10, 9, 13);
+    let want = serial_reference(&v, &f, 0.7, 12);
+    let mg = MultiGroupConfig { t: 2, groups: 4 };
+    multigroup_blocked_jacobi_iters_on(&mut pool, &mut v, &f, 0.7, &mg, 12).unwrap();
+    assert_eq!(v.max_abs_diff(&want), 0.0);
+}
+
+#[test]
+fn shrinking_then_growing_team_sizes_stay_exact() {
+    // zig-zag through team sizes so earlier (larger) progress tables and
+    // parked extra workers are re-used by later (smaller) schedules
+    let f = Grid3::random(10, 18, 8, 1);
+    let mut pool = WorkerPool::new(0);
+    for t in [8usize, 2, 6, 2, 4, 8, 2] {
+        let mut u = Grid3::random(10, 18, 8, 100 + t as u64);
+        let want = serial_reference(&u, &f, 1.0, t);
+        let cfg = WavefrontConfig { threads: t, sync: SyncMode::Flow, ..Default::default() };
+        wavefront_jacobi_on(&mut pool, &mut u, &f, 1.0, &cfg).unwrap();
+        assert_eq!(u.max_abs_diff(&want), 0.0, "t={t}");
+    }
+    assert_eq!(pool.size(), 8);
+}

@@ -1,8 +1,11 @@
 //! Cross-layer integration: PJRT-executed Pallas artifacts vs rust engine.
 //!
-//! Requires `make artifacts`; every test self-skips when the catalog is
-//! absent so `cargo test` stays green on a fresh checkout, while `make
-//! test` (which builds artifacts first) exercises the full path.
+//! Requires building with `--features xla` (the whole file is compiled
+//! out otherwise) and `make artifacts`; every test self-skips when the
+//! catalog is absent so `cargo test` stays green on a fresh checkout,
+//! while `make test` (which builds artifacts first) exercises the full
+//! path.
+#![cfg(feature = "xla")]
 
 use stencilwave::runtime::{engine, Manifest, Runtime};
 use stencilwave::stencil::gauss_seidel::{gs_sweeps, GsKernel};

@@ -5,6 +5,7 @@
 
 use stencilwave::coordinator::pipeline::{pipeline_gs_sweep, pipeline_gs_sweeps, PipelineConfig};
 use stencilwave::coordinator::spatial::{blocked_wavefront_jacobi, SpatialConfig};
+use stencilwave::coordinator::spatial_mg::{multigroup_blocked_jacobi, MultiGroupConfig};
 use stencilwave::coordinator::wavefront::{
     serial_reference, wavefront_jacobi, SyncMode, WavefrontConfig,
 };
@@ -70,6 +71,44 @@ fn blocked_wavefront_is_exact_for_random_cases() {
             0.0,
             "case {case}: {nz}x{ny}x{nx} t={t} B={blocks}"
         );
+    }
+}
+
+#[test]
+fn multigroup_blocked_is_exact_for_random_cases() {
+    let mut g = Gen(0x5EED);
+    for case in 0..20 {
+        let t = g.pick(&[2usize, 4, 6]);
+        let groups = g.range(1, 4);
+        // interior lines >= 2 per group (the scheme's width requirement)
+        let ny = 2 + 2 * groups + g.range(0, 12);
+        let (nz, nx) = (g.range(3, 14), g.range(3, 12));
+        let u0 = Grid3::random(nz, ny, nx, g.next());
+        let f = Grid3::random(nz, ny, nx, g.next());
+        let want = serial_reference(&u0, &f, 1.0, t);
+        let mut u = u0.clone();
+        multigroup_blocked_jacobi(&mut u, &f, 1.0, &MultiGroupConfig { t, groups }).unwrap();
+        assert_eq!(
+            u.max_abs_diff(&want),
+            0.0,
+            "case {case}: {nz}x{ny}x{nx} t={t} G={groups}"
+        );
+    }
+}
+
+#[test]
+fn multigroup_agrees_with_serial_blocked_sweep() {
+    // same decomposition, two engines: the concurrent multi-group pass
+    // and the serial Fig. 7 sweep must land on the identical grid.
+    for (t, blocks) in [(2usize, 2usize), (4, 3), (6, 2)] {
+        let u0 = Grid3::random(9, 15, 8, 21);
+        let f = Grid3::random(9, 15, 8, 22);
+        let mut serial = u0.clone();
+        blocked_wavefront_jacobi(&mut serial, &f, 0.9, &SpatialConfig { t, blocks }).unwrap();
+        let mut parallel = u0.clone();
+        multigroup_blocked_jacobi(&mut parallel, &f, 0.9, &MultiGroupConfig { t, groups: blocks })
+            .unwrap();
+        assert_eq!(parallel.max_abs_diff(&serial), 0.0, "t={t} B={blocks}");
     }
 }
 
