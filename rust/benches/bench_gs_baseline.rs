@@ -5,6 +5,8 @@
 //! the paper's Fig. 4(a) C-vs-asm gap — plus the pipeline-parallel
 //! threaded sweep, then regenerates the modeled five-machine figures.
 
+#![allow(deprecated)] // benches keep covering the shim matrix until removal
+
 use stencilwave::benchkit;
 use stencilwave::coordinator::pipeline::{pipeline_gs_sweep, PipelineConfig};
 use stencilwave::figures;

@@ -1,56 +1,69 @@
-//! Persistent worker pool vs per-pass thread respawn.
+//! Persistent worker pool vs per-pass thread respawn — now through the
+//! `Solver` session API.
 //!
 //! The old coordinators spawned a fresh `std::thread::scope` team for
-//! every wavefront pass; the pool keeps one team parked between passes.
-//! This bench measures both strategies end to end (same schedule, same
-//! grids, same pass count) so the respawn overhead is visible as an
-//! MLUP/s gap — largest for small grids, where a pass is short relative
-//! to thread creation. A second table shows the new multi-group blocked
-//! scheme scaling over groups on one pool.
+//! every wavefront pass; a `Solver` session keeps one team parked between
+//! passes. This bench measures both strategies end to end (same pass
+//! count, same updates): "rebuild session/pass" pays the *whole* session
+//! setup per pass — config validation, team spawn, rhs setup — while
+//! "one session" pays it once at `build()`. The gap is therefore the full
+//! amortization win of the session API, not thread creation alone.
+//!
+//! Scratch note (ROADMAP item, landed with the session API): the
+//! multi-group scheme's per-worker x-line buffers — previously a `Vec`
+//! allocated inside `spatial_mg::worker` on *every pass* — and the
+//! temporary plane rings now live in the pool-owned `Scratch` arena, so
+//! the repeated-pass loops below perform no scratch allocation after the
+//! first pass. The multi-group table doubles as the regression check:
+//! its per-pass times include zero allocator traffic on the hot path.
 
 use stencilwave::benchkit;
-use stencilwave::coordinator::pool::WorkerPool;
-use stencilwave::coordinator::spatial_mg::{multigroup_blocked_jacobi_on, MultiGroupConfig};
-use stencilwave::coordinator::wavefront::{wavefront_jacobi_on, WavefrontConfig};
+use stencilwave::config::{RunConfig, Scheme};
+use stencilwave::coordinator::solver::Solver;
 use stencilwave::stencil::grid::Grid3;
 
+fn cfg(scheme: Scheme, n: usize, t: usize, groups: usize) -> RunConfig {
+    RunConfig { scheme, size: (n, n, n), t, groups, iters: t, ..Default::default() }
+}
+
 fn main() {
-    benchkit::header("persistent pool vs per-pass respawn — Jacobi wavefront");
+    benchkit::header("one Solver session vs rebuild-per-pass — Jacobi wavefront");
     let t = 4usize;
     let passes = 8usize;
     for n in [24usize, 48, 64] {
         let f = Grid3::random(n, n, n, 1);
         let u0 = Grid3::random(n, n, n, 2);
-        let cfg = WavefrontConfig { threads: t, ..Default::default() };
+        let c = cfg(Scheme::JacobiWavefront, n, t, 1);
         let updates = (u0.interior_len() * t * passes) as u64;
 
         let s = benchkit::bench_mlups(
-            &format!("respawn team/pass {n}^3 t={t} x{passes}"),
+            &format!("rebuild session/pass {n}^3 t={t} x{passes}"),
             updates,
             1,
             3,
             || {
                 let mut u = u0.clone();
                 for _ in 0..passes {
-                    // a fresh pool per pass = the old spawn-per-pass cost
-                    let mut pool = WorkerPool::new(t);
-                    wavefront_jacobi_on(&mut pool, &mut u, &f, 1.0, &cfg).unwrap();
+                    // a fresh session per pass = the old spawn-per-pass cost
+                    let mut solver =
+                        Solver::builder(&c).rhs(f.clone(), 1.0).build().unwrap();
+                    solver.step(&mut u).unwrap();
                 }
                 benchkit::black_box(u);
             },
         );
         benchkit::report(&s);
 
-        let mut pool = WorkerPool::new(t);
+        let mut solver = Solver::builder(&c).rhs(f.clone(), 1.0).build().unwrap();
         let s = benchkit::bench_mlups(
-            &format!("persistent pool {n}^3 t={t} x{passes}"),
+            &format!("one session {n}^3 t={t} x{passes}"),
             updates,
             1,
             3,
             || {
                 let mut u = u0.clone();
                 for _ in 0..passes {
-                    wavefront_jacobi_on(&mut pool, &mut u, &f, 1.0, &cfg).unwrap();
+                    solver.step(&mut u).unwrap();
                 }
                 benchkit::black_box(u);
             },
@@ -58,13 +71,13 @@ fn main() {
         benchkit::report(&s);
     }
 
-    benchkit::header("multi-group spatial x temporal blocking (one pool)");
-    let mut pool = WorkerPool::new(4);
+    benchkit::header("multi-group spatial x temporal blocking (one session, pool-owned scratch)");
     for groups in [1usize, 2, 4] {
         let n = 64usize;
         let f = Grid3::random(n, n, n, 3);
         let u0 = Grid3::random(n, n, n, 4);
-        let cfg = MultiGroupConfig { t: 4, groups };
+        let c = cfg(Scheme::JacobiMultiGroup, n, 4, groups);
+        let mut solver = Solver::builder(&c).rhs(f.clone(), 1.0).build().unwrap();
         let updates = (u0.interior_len() * 4) as u64;
         let s = benchkit::bench_mlups(
             &format!("multigroup t=4 G={groups} {n}^3"),
@@ -73,7 +86,9 @@ fn main() {
             3,
             || {
                 let mut u = u0.clone();
-                multigroup_blocked_jacobi_on(&mut pool, &mut u, &f, 1.0, &cfg).unwrap();
+                // plane rings, boundary arrays and the per-worker x-line
+                // buffers are all reused from the session's scratch arena
+                solver.step(&mut u).unwrap();
                 benchkit::black_box(u);
             },
         );

@@ -4,6 +4,8 @@
 //! sweeps (the threaded baseline of Fig. 9's right axis). Model leg: the
 //! full five-machine Fig. 9 sweep.
 
+#![allow(deprecated)] // benches keep covering the shim matrix until removal
+
 use stencilwave::benchkit;
 use stencilwave::coordinator::pipeline::{pipeline_gs_sweeps, PipelineConfig};
 use stencilwave::coordinator::wavefront_gs::{wavefront_gs, GsWavefrontConfig};

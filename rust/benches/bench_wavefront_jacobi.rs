@@ -5,6 +5,8 @@
 //! blocked (spatial × temporal) variant. Model leg: the full Fig. 8 sweep
 //! over the five-machine testbed.
 
+#![allow(deprecated)] // benches keep covering the shim matrix until removal
+
 use stencilwave::benchkit;
 use stencilwave::coordinator::spatial::{blocked_wavefront_jacobi, SpatialConfig};
 use stencilwave::coordinator::wavefront::{wavefront_jacobi, WavefrontConfig};

@@ -7,6 +7,8 @@
 //! suite: EP/Westmere ≈ 2.5× their threaded baseline, EX up to 5×, and
 //! EP ≈ Westmere ≈ EX absolute performance (arithmetic plateau).
 
+#![allow(deprecated)] // benches keep covering the shim matrix until removal
+
 use stencilwave::benchkit;
 use stencilwave::coordinator::wavefront_gs::{wavefront_gs, GsWavefrontConfig};
 use stencilwave::figures;

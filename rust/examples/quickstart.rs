@@ -1,22 +1,24 @@
-//! Quickstart: the wavefront scheme in five minutes.
+//! Quickstart: the wavefront scheme in five minutes — through the
+//! unified `Solver` session API.
 //!
 //! 1. Build a Poisson problem on a 64³ grid.
 //! 2. Smooth it with the plain threaded Jacobi baseline.
-//! 3. Smooth it with wavefront temporal blocking (t = 4) — same numerics,
-//!    a fraction of the memory traffic.
+//! 3. Smooth it with wavefront temporal blocking (t = 4) via a `Solver`
+//!    session — same numerics, a fraction of the memory traffic, one
+//!    thread team spawned at `build()` and reused for every `run()`.
 //! 4. Do the same for Gauss-Seidel via the pipeline-parallel wavefront.
 //! 5. Ask the simulator what this configuration would do on the paper's
 //!    Nehalem EX.
 //!
 //! Run with: `cargo run --release --example quickstart`
 
-use stencilwave::coordinator::wavefront::{wavefront_jacobi_iters, WavefrontConfig};
-use stencilwave::coordinator::wavefront_gs::{wavefront_gs_iters, GsWavefrontConfig};
+use stencilwave::config::{RunConfig, Scheme};
+use stencilwave::coordinator::affinity::PinPolicy;
+use stencilwave::coordinator::solver::Solver;
 use stencilwave::metrics::{mlups, timed};
 use stencilwave::simulator::ecm::Kernel;
 use stencilwave::simulator::machine::MachineSpec;
 use stencilwave::simulator::perfmodel::{wavefront_prediction, WavefrontParams};
-use stencilwave::stencil::gauss_seidel::GsKernel;
 use stencilwave::stencil::grid::Grid3;
 use stencilwave::stencil::jacobi::jacobi_steps;
 use stencilwave::stencil::residual::poisson_residual_norm;
@@ -39,10 +41,19 @@ fn main() -> stencilwave::Result<()> {
     let (baseline, dt) = timed(|| jacobi_steps(&u0, &f, h2, ITERS));
     println!("jacobi baseline   : {:8.1} MLUP/s", mlups(updates, dt));
 
-    // 2 — wavefront temporal blocking, bit-identical result
+    // 2 — wavefront temporal blocking via a Solver session: the config
+    // is validated once, the team is spawned (and compactly pinned)
+    // once, and the result is bit-identical to the baseline.
+    let cfg = RunConfig {
+        scheme: Scheme::JacobiWavefront,
+        size: (N, N, N),
+        t: T,
+        iters: ITERS,
+        ..Default::default()
+    };
+    let mut solver = Solver::builder(&cfg).rhs(f.clone(), h2).pin(PinPolicy::Compact).build()?;
     let mut u = u0.clone();
-    let cfg = WavefrontConfig { threads: T, ..Default::default() };
-    let (res, dt) = timed(|| wavefront_jacobi_iters(&mut u, &f, h2, &cfg, ITERS));
+    let (res, dt) = timed(|| solver.run(&mut u, ITERS));
     res?;
     println!(
         "jacobi wavefront  : {:8.1} MLUP/s   max|diff| vs baseline = {:.1e}",
@@ -55,10 +66,19 @@ fn main() -> stencilwave::Result<()> {
         poisson_residual_norm(&u, &f, h2)
     );
 
-    // 3 — Gauss-Seidel wavefront (Laplace problem, in place)
+    // 3 — Gauss-Seidel wavefront (Laplace problem, in place); a second
+    // session reuses the first session's thread team via `.pool(...)`.
+    let gs_cfg = RunConfig {
+        scheme: Scheme::GsWavefront,
+        size: (N, N, N),
+        t: T,
+        groups: 2, // pipeline width per sweep
+        iters: ITERS,
+        ..Default::default()
+    };
+    let mut gs = Solver::builder(&gs_cfg).pool(solver.into_pool()).build()?;
     let mut g = u0.clone();
-    let gs_cfg = GsWavefrontConfig { sweeps: T, threads_per_group: 2, kernel: GsKernel::Interleaved };
-    let (res, dt) = timed(|| wavefront_gs_iters(&mut g, &gs_cfg, ITERS));
+    let (res, dt) = timed(|| gs.run(&mut g, ITERS));
     res?;
     println!("\ngs wavefront      : {:8.1} MLUP/s", mlups(updates, dt));
 

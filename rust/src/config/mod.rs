@@ -9,10 +9,12 @@
 
 pub mod json;
 
+use crate::coordinator::affinity::PinPolicy;
 use crate::simulator::ecm::Kernel;
 use crate::simulator::machine::MachineSpec;
 use crate::simulator::memory::StoreMode;
 use crate::simulator::perfmodel::BarrierKind;
+use crate::stencil::gauss_seidel::GsKernel;
 use crate::Result;
 
 /// Which algorithm family a run exercises.
@@ -76,6 +78,9 @@ pub struct RunConfig {
     pub barrier: BarrierKind,
     /// Machine model to predict on (`None` = host execution only).
     pub machine: Option<String>,
+    /// Core-pinning policy for the worker team (cache-group aware when
+    /// `machine` names a Tab. 1 model).
+    pub pin: PinPolicy,
 }
 
 impl Default for RunConfig {
@@ -91,6 +96,7 @@ impl Default for RunConfig {
             nt_stores: true,
             barrier: BarrierKind::Spin,
             machine: None,
+            pin: PinPolicy::None,
         }
     }
 }
@@ -104,6 +110,15 @@ fn parse_bool(v: &str) -> Result<bool> {
 }
 
 impl RunConfig {
+    /// The Gauss-Seidel line kernel the `optimized_kernel` flag selects.
+    pub fn gs_kernel(&self) -> GsKernel {
+        if self.optimized_kernel {
+            GsKernel::Interleaved
+        } else {
+            GsKernel::Naive
+        }
+    }
+
     pub fn store_mode(&self) -> StoreMode {
         if self.nt_stores && !self.scheme.is_gs() {
             StoreMode::NonTemporal
@@ -165,6 +180,10 @@ impl RunConfig {
                     }
                 }
                 "machine" => cfg.machine = Some(value.to_string()),
+                "pin" => {
+                    cfg.pin = PinPolicy::parse(value)
+                        .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?
+                }
                 other => anyhow::bail!("line {}: unknown key '{other}'", lineno + 1),
             }
         }
@@ -192,7 +211,8 @@ impl RunConfig {
         };
         let mut s = format!(
             "scheme = \"{scheme}\"\nsize = [{}, {}, {}]\nt = {}\ngroups = {}\niters = {}\n\
-             smt = {}\noptimized_kernel = {}\nnt_stores = {}\nbarrier = \"{barrier}\"\n",
+             smt = {}\noptimized_kernel = {}\nnt_stores = {}\nbarrier = \"{barrier}\"\n\
+             pin = \"{}\"\n",
             self.size.0,
             self.size.1,
             self.size.2,
@@ -202,6 +222,7 @@ impl RunConfig {
             self.smt,
             self.optimized_kernel,
             self.nt_stores,
+            self.pin.as_str(),
         );
         if let Some(m) = &self.machine {
             s += &format!("machine = \"{m}\"\n");
@@ -257,6 +278,7 @@ mod tests {
             nt_stores: false,
             barrier: BarrierKind::Tree,
             machine: Some("Westmere".into()),
+            pin: PinPolicy::Scatter,
         };
         let back = RunConfig::from_text(&cfg.to_text()).unwrap();
         assert_eq!(back.size, cfg.size);
@@ -266,7 +288,24 @@ mod tests {
         assert!(!back.optimized_kernel);
         assert_eq!(back.barrier, BarrierKind::Tree);
         assert_eq!(back.machine.as_deref(), Some("Westmere"));
+        assert_eq!(back.pin, PinPolicy::Scatter);
         back.validate().unwrap();
+    }
+
+    #[test]
+    fn pin_key_roundtrips_and_rejects_unknown_policies() {
+        for pin in [PinPolicy::None, PinPolicy::Compact, PinPolicy::Scatter] {
+            let cfg = RunConfig { pin, ..Default::default() };
+            let text = cfg.to_text();
+            assert!(text.contains(&format!("pin = \"{}\"", pin.as_str())), "{text}");
+            assert_eq!(RunConfig::from_text(&text).unwrap().pin, pin);
+        }
+        // unparsed configs default to no pinning
+        let cfg = RunConfig::from_text("scheme = \"gs_baseline\"\n").unwrap();
+        assert_eq!(cfg.pin, PinPolicy::None);
+        // bad policies carry the line number
+        let err = RunConfig::from_text("pin = \"diagonal\"\n").unwrap_err().to_string();
+        assert!(err.contains("line 1") && err.contains("diagonal"), "{err}");
     }
 
     #[test]

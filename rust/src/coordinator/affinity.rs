@@ -1,0 +1,357 @@
+//! Core-pinning policies for the worker pool (ROADMAP item).
+//!
+//! The paper's wavefront groups only hit their cache-sharing sweet spot
+//! when the group's threads actually land on cores that share the outer
+//! level cache (Sec. 4; Tab. 1's "cache group"). The OS scheduler does
+//! not know that, so [`PinPolicy`] encodes the two classic placements:
+//!
+//! * [`PinPolicy::Compact`] — fill one cache group before touching the
+//!   next (worker `i` → cpu `i`). The right policy for a single
+//!   wavefront group: all `t` workers share one OLC.
+//! * [`PinPolicy::Scatter`] — round-robin across cache groups (worker
+//!   `i` → group `i mod G`, slot `i / G`). The right policy for
+//!   bandwidth-bound baselines and multi-group schemes where each group
+//!   should own its own OLC.
+//!
+//! The cpu map is computed from a [`MachineSpec`]'s cache-group topology
+//! when the run names a Tab. 1 machine, and from the host's logical cpu
+//! count otherwise (one flat group). The backend is a raw
+//! `sched_setaffinity` syscall on Linux (x86_64 / aarch64) — the build
+//! stays dependency-free — and a documented no-op everywhere else:
+//! [`pin_current_thread`] returns `false` and workers simply run
+//! unpinned, so schedules stay correct on every platform.
+//!
+//! Wired through [`WorkerPool::set_start_hook`](super::pool::WorkerPool::set_start_hook)
+//! by [`pin_hook`]; the [`Solver`](super::solver::Solver) builder installs
+//! it before spawning the team.
+
+use std::sync::Arc;
+
+use crate::simulator::machine::MachineSpec;
+use crate::Result;
+
+use super::pool::StartHook;
+
+/// How pool workers are placed on cores.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum PinPolicy {
+    /// Leave placement to the OS scheduler (the default).
+    #[default]
+    None,
+    /// Fill cache groups in order: worker `i` runs on cpu `i`.
+    Compact,
+    /// Spread across cache groups: worker `i` runs in group `i mod G`.
+    ///
+    /// Needs cache-group information to differ from [`PinPolicy::Compact`]:
+    /// without a Tab. 1 machine model the host fallback is one flat group
+    /// and scatter degenerates to compact (see [`Topology::host`]).
+    Scatter,
+}
+
+impl PinPolicy {
+    /// Parse a `none` / `compact` / `scatter` policy name.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.trim() {
+            "none" => PinPolicy::None,
+            "compact" => PinPolicy::Compact,
+            "scatter" => PinPolicy::Scatter,
+            other => anyhow::bail!("unknown pin policy '{other}' (none/compact/scatter)"),
+        })
+    }
+
+    /// The config/CLI name of the policy.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            PinPolicy::None => "none",
+            PinPolicy::Compact => "compact",
+            PinPolicy::Scatter => "scatter",
+        }
+    }
+}
+
+/// The core/cache-group layout the cpu map is computed from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Topology {
+    /// Logical cpus to place workers on.
+    pub cpus: usize,
+    /// Cpus sharing one outer-level cache (`<= cpus`).
+    pub group_size: usize,
+}
+
+impl Topology {
+    /// Topology of a Tab. 1 machine: its physical cores, grouped by the
+    /// cache group the wavefront scheme targets (L3, or the shared L2 on
+    /// Core 2).
+    pub fn of_machine(m: &MachineSpec) -> Self {
+        Self { cpus: m.cores.max(1), group_size: m.cache_group_cores().max(1) }
+    }
+
+    /// Host fallback: every logical cpu in one flat group (compact and
+    /// scatter then coincide).
+    pub fn host() -> Self {
+        let cpus = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        Self { cpus, group_size: cpus }
+    }
+}
+
+/// The cpu worker `id` is placed on under `policy` (pure map, unit
+/// tested on every platform). Workers beyond `cpus` wrap around.
+pub fn cpu_for(policy: PinPolicy, id: usize, topo: Topology) -> usize {
+    let cpus = topo.cpus.max(1);
+    let id = id % cpus;
+    match policy {
+        PinPolicy::None => id,
+        PinPolicy::Compact => id,
+        PinPolicy::Scatter => {
+            // Round-robin across cache groups, slot by slot. The tail
+            // group may hold fewer than `group` cpus, so walk the scatter
+            // order row by row (`row` = groups that still have a cpu in
+            // slot `s`) instead of assuming every group is full — a
+            // closed-form `(id % groups) * group + id / groups` would
+            // collide workers onto one cpu for non-divisible layouts.
+            let group = topo.group_size.clamp(1, cpus);
+            let mut rem = id;
+            let mut s = 0;
+            loop {
+                let row = (cpus - s).div_ceil(group);
+                if rem < row {
+                    break rem * group + s;
+                }
+                rem -= row;
+                s += 1;
+            }
+        }
+    }
+}
+
+/// Pin the calling thread to `cpu`. Returns `true` on success; `false`
+/// when the platform has no affinity backend or the kernel refused the
+/// mask (sandboxes, cpusets) — callers must treat pinning as advisory.
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+pub fn pin_current_thread(cpu: usize) -> bool {
+    // cpu_set_t is 1024 bits on Linux.
+    let mut mask = [0u64; 16];
+    let cpu = cpu % (mask.len() * 64);
+    mask[cpu / 64] |= 1u64 << (cpu % 64);
+    sched_setaffinity_raw(&mask) == 0
+}
+
+/// No-op backend: platforms without `sched_setaffinity` run unpinned.
+#[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+pub fn pin_current_thread(_cpu: usize) -> bool {
+    false
+}
+
+/// Number of cpus the calling thread may run on (`None` when the
+/// platform has no affinity backend or the query failed — including
+/// hosts with more than 1024 possible cpus, where the kernel rejects
+/// this fixed-size mask with EINVAL; callers must treat `None` as
+/// "unknown", not "unpinned").
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+pub fn current_affinity_count() -> Option<usize> {
+    let mut mask = [0u64; 16];
+    let ret = sched_getaffinity_raw(&mut mask);
+    if ret <= 0 {
+        return None;
+    }
+    Some(mask.iter().map(|w| w.count_ones() as usize).sum())
+}
+
+/// No-op backend counterpart of [`current_affinity_count`].
+#[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+pub fn current_affinity_count() -> Option<usize> {
+    None
+}
+
+#[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+fn sched_setaffinity_raw(mask: &[u64; 16]) -> isize {
+    let ret: isize;
+    // SAFETY: sched_setaffinity(2) on the calling thread (pid 0) with a
+    // valid, sized mask; the syscall only reads the mask.
+    unsafe {
+        core::arch::asm!(
+            "syscall",
+            inlateout("rax") 203isize => ret, // __NR_sched_setaffinity
+            in("rdi") 0usize,
+            in("rsi") core::mem::size_of::<[u64; 16]>(),
+            in("rdx") mask.as_ptr(),
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack),
+        );
+    }
+    ret
+}
+
+#[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+fn sched_getaffinity_raw(mask: &mut [u64; 16]) -> isize {
+    let ret: isize;
+    // SAFETY: sched_getaffinity(2) on the calling thread; the kernel
+    // writes at most the passed size into the mask.
+    unsafe {
+        core::arch::asm!(
+            "syscall",
+            inlateout("rax") 204isize => ret, // __NR_sched_getaffinity
+            in("rdi") 0usize,
+            in("rsi") core::mem::size_of::<[u64; 16]>(),
+            in("rdx") mask.as_mut_ptr(),
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack),
+        );
+    }
+    ret
+}
+
+#[cfg(all(target_os = "linux", target_arch = "aarch64"))]
+fn sched_setaffinity_raw(mask: &[u64; 16]) -> isize {
+    let ret: isize;
+    // SAFETY: as the x86_64 variant; aarch64 passes the number in x8.
+    unsafe {
+        core::arch::asm!(
+            "svc #0",
+            in("x8") 122isize, // __NR_sched_setaffinity
+            inlateout("x0") 0isize => ret,
+            in("x1") core::mem::size_of::<[u64; 16]>(),
+            in("x2") mask.as_ptr(),
+            options(nostack),
+        );
+    }
+    ret
+}
+
+#[cfg(all(target_os = "linux", target_arch = "aarch64"))]
+fn sched_getaffinity_raw(mask: &mut [u64; 16]) -> isize {
+    let ret: isize;
+    // SAFETY: as the x86_64 variant; aarch64 passes the number in x8.
+    unsafe {
+        core::arch::asm!(
+            "svc #0",
+            in("x8") 123isize, // __NR_sched_getaffinity
+            inlateout("x0") 0isize => ret,
+            in("x1") core::mem::size_of::<[u64; 16]>(),
+            in("x2") mask.as_mut_ptr(),
+            options(nostack),
+        );
+    }
+    ret
+}
+
+/// Build the [`StartHook`] implementing `policy` on `topo` — `None` for
+/// [`PinPolicy::None`] so unpinned pools skip the hook entirely.
+///
+/// Pinning is advisory: a refused mask (container cpusets, non-Linux
+/// hosts) leaves the worker unpinned and the schedule untouched.
+pub fn pin_hook(policy: PinPolicy, topo: Topology) -> Option<StartHook> {
+    if policy == PinPolicy::None {
+        return None;
+    }
+    Some(Arc::new(move |id: usize| {
+        let host = Topology::host();
+        // A machine model wider than this host would fold distinct
+        // placements onto the same cpu under a modulo wrap (all of a
+        // scatter group's leaders landing on cpu 0); pin against the
+        // host's own topology instead.
+        let eff = if topo.cpus <= host.cpus { topo } else { host };
+        let _ = pin_current_thread(cpu_for(policy, id, eff));
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_names_roundtrip() {
+        for p in [PinPolicy::None, PinPolicy::Compact, PinPolicy::Scatter] {
+            assert_eq!(PinPolicy::parse(p.as_str()).unwrap(), p);
+        }
+        assert!(PinPolicy::parse("diagonal").is_err());
+    }
+
+    #[test]
+    fn compact_fills_groups_in_order() {
+        let topo = Topology { cpus: 8, group_size: 4 };
+        let cpus: Vec<usize> = (0..8).map(|i| cpu_for(PinPolicy::Compact, i, topo)).collect();
+        assert_eq!(cpus, vec![0, 1, 2, 3, 4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn scatter_round_robins_across_groups() {
+        // 8 cpus in two OLC groups of 4: workers alternate groups.
+        let topo = Topology { cpus: 8, group_size: 4 };
+        let cpus: Vec<usize> = (0..8).map(|i| cpu_for(PinPolicy::Scatter, i, topo)).collect();
+        assert_eq!(cpus, vec![0, 4, 1, 5, 2, 6, 3, 7]);
+    }
+
+    #[test]
+    fn scatter_covers_every_cpu_when_groups_are_uneven() {
+        // 6 cpus in OLC groups of 4: group 0 = {0,1,2,3}, tail = {4,5}.
+        // Every cpu must appear exactly once — no collisions, no idle cpu.
+        let topo = Topology { cpus: 6, group_size: 4 };
+        let cpus: Vec<usize> = (0..6).map(|i| cpu_for(PinPolicy::Scatter, i, topo)).collect();
+        assert_eq!(cpus, vec![0, 4, 1, 5, 2, 3]);
+        let mut sorted = cpus.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn scatter_on_one_flat_group_is_compact() {
+        let topo = Topology { cpus: 6, group_size: 6 };
+        for i in 0..6 {
+            assert_eq!(
+                cpu_for(PinPolicy::Scatter, i, topo),
+                cpu_for(PinPolicy::Compact, i, topo)
+            );
+        }
+    }
+
+    #[test]
+    fn workers_beyond_the_socket_wrap() {
+        let topo = Topology { cpus: 4, group_size: 2 };
+        for i in 0..32 {
+            assert!(cpu_for(PinPolicy::Scatter, i, topo) < 4);
+            assert!(cpu_for(PinPolicy::Compact, i, topo) < 4);
+        }
+    }
+
+    #[test]
+    fn machine_topology_uses_cache_groups() {
+        let m = MachineSpec::by_name("Nehalem EP").unwrap();
+        let topo = Topology::of_machine(&m);
+        assert_eq!(topo.cpus, m.cores);
+        assert_eq!(topo.group_size, m.cache_group_cores());
+    }
+
+    #[test]
+    fn pinning_is_advisory_and_never_panics() {
+        // On Linux this really pins (count == 1 when the kernel allowed
+        // it); elsewhere it must be a clean no-op returning false.
+        std::thread::spawn(|| {
+            let ok = pin_current_thread(0);
+            if cfg!(not(all(
+                target_os = "linux",
+                any(target_arch = "x86_64", target_arch = "aarch64")
+            ))) {
+                assert!(!ok, "no-op backend must report failure");
+            }
+            if ok {
+                // None = the count query itself failed (e.g. hosts with
+                // > 1024 possible cpus reject the fixed-size mask) —
+                // only a Some answer can contradict the pin
+                if let Some(n) = current_affinity_count() {
+                    assert_eq!(n, 1);
+                }
+            }
+        })
+        .join()
+        .unwrap();
+    }
+
+    #[test]
+    fn none_policy_has_no_hook() {
+        assert!(pin_hook(PinPolicy::None, Topology::host()).is_none());
+        assert!(pin_hook(PinPolicy::Compact, Topology::host()).is_some());
+    }
+}

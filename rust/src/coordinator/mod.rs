@@ -30,11 +30,49 @@
 //! Every scheme is *numerically exact*: tests assert bit-identical grids
 //! against the serial reference sweeps, for all thread counts and
 //! blocking factors. Temporal blocking changes traffic, never numerics.
+//!
+//! ## The session API
+//!
+//! Schemes are driven through a [`solver::Solver`] session: one builder
+//! validates the [`RunConfig`](crate::config::RunConfig), resolves the
+//! scheme's [`runner::SchemeRunner`] from the registry, spawns (and
+//! optionally pins, [`affinity::PinPolicy`]) the team once, and owns the
+//! pool plus its reusable scratch — so repeated `run()` calls spawn no
+//! threads and allocate no scratch:
+//!
+//! ```no_run
+//! use stencilwave::config::RunConfig;
+//! use stencilwave::coordinator::solver::Solver;
+//! use stencilwave::stencil::grid::Grid3;
+//!
+//! let cfg = RunConfig { size: (64, 64, 64), t: 4, iters: 8, ..Default::default() };
+//! let mut solver = Solver::builder(&cfg).build().unwrap();
+//! let mut u = Grid3::from_fn(64, 64, 64, |k, j, i| (k + j + i) as f64);
+//! solver.run(&mut u, 8).unwrap();
+//! ```
+//!
+//! ### Migration from the free-function matrix (deprecated shims)
+//!
+//! | old free function | session equivalent |
+//! |---|---|
+//! | `wavefront_jacobi(&mut u, &f, h2, &cfg)` | `Solver` for `Scheme::JacobiWavefront`, `solver.step(&mut u)` |
+//! | `wavefront_jacobi_iters(&mut u, &f, h2, &cfg, n)` | `solver.run(&mut u, n)` |
+//! | `multigroup_blocked_jacobi[_iters]` | `Scheme::JacobiMultiGroup` session |
+//! | `pipeline_gs_sweep[s]` | `Scheme::GsBaseline` session |
+//! | `wavefront_gs[_iters]` | `Scheme::GsWavefront` session |
+//! | any `*_on(pool, ...)` variant | `Solver::builder(..).pool(pool)` |
+//!
+//! The shims remain for one release; they now dispatch on a per-thread
+//! convenience pool ([`pool::with_local`]), so concurrent callers no
+//! longer serialize on a process-wide mutex.
 
+pub mod affinity;
 pub mod barrier;
 pub mod pipeline;
 pub mod pool;
+pub mod runner;
 pub mod schedule;
+pub mod solver;
 pub mod spatial;
 pub mod spatial_mg;
 pub mod wavefront;

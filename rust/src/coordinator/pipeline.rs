@@ -137,7 +137,7 @@ impl Schedule for PipelineGsSchedule<'_> {
 }
 
 /// Run `passes` pipelined sweeps on `pool` with one schedule.
-fn pipeline_gs_passes(
+pub(crate) fn pipeline_gs_passes(
     pool: &mut WorkerPool,
     u: &mut Grid3,
     cfg: &PipelineConfig,
@@ -164,21 +164,25 @@ fn pipeline_gs_passes(
 /// One in-place lexicographic GS sweep, pipeline-parallel over y-chunks.
 ///
 /// Bit-identical to [`gs_sweep`] for every thread count.
+#[deprecated(since = "0.2.0", note = "use a `coordinator::solver::Solver` session")]
 pub fn pipeline_gs_sweep(u: &mut Grid3, cfg: &PipelineConfig) -> Result<()> {
-    pool::with_global(|p| pipeline_gs_sweep_on(p, u, cfg))
+    pool::with_local(|p| pipeline_gs_passes(p, u, cfg, 1))
 }
 
 /// [`pipeline_gs_sweep`] on a caller-owned pool.
+#[deprecated(since = "0.2.0", note = "use a `coordinator::solver::Solver` session")]
 pub fn pipeline_gs_sweep_on(pool: &mut WorkerPool, u: &mut Grid3, cfg: &PipelineConfig) -> Result<()> {
     pipeline_gs_passes(pool, u, cfg, 1)
 }
 
 /// `n` pipelined sweeps on one persistent team.
+#[deprecated(since = "0.2.0", note = "use a `coordinator::solver::Solver` session")]
 pub fn pipeline_gs_sweeps(u: &mut Grid3, cfg: &PipelineConfig, n: usize) -> Result<()> {
-    pool::with_global(|p| pipeline_gs_sweeps_on(p, u, cfg, n))
+    pool::with_local(|p| pipeline_gs_passes(p, u, cfg, n))
 }
 
 /// [`pipeline_gs_sweeps`] on a caller-owned pool.
+#[deprecated(since = "0.2.0", note = "use a `coordinator::solver::Solver` session")]
 pub fn pipeline_gs_sweeps_on(
     pool: &mut WorkerPool,
     u: &mut Grid3,
@@ -190,6 +194,8 @@ pub fn pipeline_gs_sweeps_on(
 
 #[cfg(test)]
 mod tests {
+    #![allow(deprecated)] // the shim matrix stays covered until removal
+
     use super::*;
 
     fn check(nz: usize, ny: usize, nx: usize, threads: usize) {

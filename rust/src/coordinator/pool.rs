@@ -16,6 +16,7 @@
 //! MLUP/s; `tests/pool_reuse.rs` asserts bit-exactness when one pool
 //! instance is reused across schemes, passes and team sizes.
 
+use std::cell::RefCell;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
@@ -23,6 +24,26 @@ use std::thread::JoinHandle;
 use crate::Result;
 
 use super::schedule::{Progress, Schedule};
+
+/// Reusable scratch buffers owned by the pool, handed to schedule
+/// constructors instead of per-pass `Vec` allocations (ROADMAP item:
+/// the x-line scratch of `spatial_mg::worker` and the temporary plane
+/// rings used to reallocate on every entry-point call).
+///
+/// Buffers are taken out with [`WorkerPool::take_scratch`] while a
+/// schedule borrows them (the pool itself stays mutably usable for
+/// dispatch) and handed back with [`WorkerPool::restore_scratch`], so
+/// capacity survives across passes, schemes and
+/// [`Solver::run`](super::solver::Solver::run) calls.
+#[derive(Default)]
+pub struct Scratch {
+    /// Temporary z-x plane rings (wavefront / multi-group odd levels).
+    pub planes: Vec<f64>,
+    /// Odd-level boundary arrays (multi-group interface hand-off).
+    pub bnd: Vec<f64>,
+    /// Per-worker x-line buffers (`workers * nx`, disjoint slices).
+    pub lines: Vec<f64>,
+}
 
 /// Per-worker start hook, called once with the worker id when the thread
 /// starts — the place to pin the worker to a core (e.g. via
@@ -136,6 +157,7 @@ pub struct WorkerPool {
     handles: Vec<JoinHandle<()>>,
     progress: Progress,
     hook: Option<StartHook>,
+    scratch: Scratch,
 }
 
 impl WorkerPool {
@@ -153,16 +175,43 @@ impl WorkerPool {
             go: Condvar::new(),
             done: Condvar::new(),
         });
-        let mut pool =
-            Self { control, handles: Vec::new(), progress: Progress::new(0), hook: None };
+        let mut pool = Self {
+            control,
+            handles: Vec::new(),
+            progress: Progress::new(0),
+            hook: None,
+            scratch: Scratch::default(),
+        };
         pool.ensure_workers(size);
         pool
+    }
+
+    /// Take the pool's scratch arena out for the duration of a schedule
+    /// (hand it back with [`WorkerPool::restore_scratch`] so buffer
+    /// capacity is reused by later passes).
+    pub fn take_scratch(&mut self) -> Scratch {
+        std::mem::take(&mut self.scratch)
+    }
+
+    /// Return a scratch arena taken with [`WorkerPool::take_scratch`].
+    pub fn restore_scratch(&mut self, scratch: Scratch) {
+        self.scratch = scratch;
     }
 
     /// Install a per-worker start hook (e.g. core pinning). Applies to
     /// workers spawned afterwards, so install it before the first run.
     pub fn set_start_hook(&mut self, hook: StartHook) {
         self.hook = Some(hook);
+    }
+
+    /// Remove a previously installed start hook: workers spawned from now
+    /// on start unpinned/untagged. Needed when a pool moves between
+    /// sessions with different pin policies, so a session requesting no
+    /// pinning does not apply the previous session's hook to *new*
+    /// workers. (Workers already spawned keep their placement — hooks
+    /// run once, at thread start.)
+    pub fn clear_start_hook(&mut self) {
+        self.hook = None;
     }
 
     /// Current team size.
@@ -245,16 +294,44 @@ impl Drop for WorkerPool {
 
 static GLOBAL: OnceLock<Mutex<WorkerPool>> = OnceLock::new();
 
-/// Run `f` with exclusive access to the process-wide shared pool — the
-/// team every convenience entry point (`wavefront_jacobi`,
-/// `pipeline_gs_sweep`, …) dispatches on, so repeated passes amortize one
-/// set of threads across the whole process. Callers that want an isolated
-/// team (or several teams side by side) construct their own
-/// [`WorkerPool`] and use the `*_on` entry points instead.
+/// Run `f` with exclusive access to the process-wide shared pool.
+///
+/// Deprecated: one mutexed team serializes every caller — library users
+/// invoking the convenience entry points from several threads used to
+/// queue on this lock (ROADMAP item). The convenience entry points now
+/// dispatch on [`with_local`] (a per-thread team, no cross-thread
+/// serialization); sessions that should own their team explicitly use a
+/// [`Solver`](super::solver::Solver).
+#[deprecated(since = "0.2.0", note = "use `with_local` or a `Solver` session")]
 pub fn with_global<R>(f: impl FnOnce(&mut WorkerPool) -> R) -> R {
     let m = GLOBAL.get_or_init(|| Mutex::new(WorkerPool::new(0)));
     let mut guard = m.lock().unwrap_or_else(|e| e.into_inner());
     f(&mut guard)
+}
+
+thread_local! {
+    /// One convenience pool per calling thread (grown on demand, parked
+    /// between calls, joined when the thread exits).
+    static LOCAL: RefCell<WorkerPool> = RefCell::new(WorkerPool::new(0));
+}
+
+/// Run `f` with the calling thread's convenience pool — the team the
+/// convenience entry points (`wavefront_jacobi`, `pipeline_gs_sweep`, …)
+/// dispatch on. Each caller thread owns its own team, so concurrent
+/// callers run truly side by side instead of serializing on a process
+/// mutex; repeated calls from one thread still amortize one set of
+/// threads. The trade-off: an application fanning the convenience API
+/// out over many of its own threads parks one team (and one scratch
+/// arena) per calling thread — callers at that scale should hold an
+/// explicitly owned team via the `*_on` entry points or a
+/// [`Solver`](super::solver::Solver) session instead.
+///
+/// # Panics
+/// When re-entered from within `f` (the per-thread pool is exclusively
+/// borrowed while a pass runs) — schedules never call back into the
+/// convenience API, so this only affects hand-written nesting.
+pub fn with_local<R>(f: impl FnOnce(&mut WorkerPool) -> R) -> R {
+    LOCAL.with(|p| f(&mut p.borrow_mut()))
 }
 
 #[cfg(test)]
@@ -407,5 +484,22 @@ mod tests {
         }));
         pool.run(&CountSchedule::new(3)).unwrap();
         assert_eq!(seen.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn cleared_start_hook_does_not_reach_new_workers() {
+        let seen = Arc::new(AtomicUsize::new(0));
+        let mut pool = WorkerPool::new(0);
+        let s = Arc::clone(&seen);
+        pool.set_start_hook(Arc::new(move |_id| {
+            s.fetch_add(1, Ordering::SeqCst);
+        }));
+        pool.run(&CountSchedule::new(2)).unwrap();
+        assert_eq!(seen.load(Ordering::SeqCst), 2);
+        // a pool handed to a session with PinPolicy::None must not keep
+        // applying the previous session's hook to workers spawned later
+        pool.clear_start_hook();
+        pool.run(&CountSchedule::new(4)).unwrap();
+        assert_eq!(seen.load(Ordering::SeqCst), 2, "cleared hook leaked to new workers");
     }
 }

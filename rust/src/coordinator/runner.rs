@@ -1,0 +1,378 @@
+//! The scheme registry: one [`SchemeRunner`] per [`Scheme`], mapping a
+//! [`RunConfig`] to the scheme's schedule construction *and* its
+//! performance-model leg.
+//!
+//! Before this registry existed, `launcher::run_experiment` re-dispatched
+//! over `Scheme` in two hand-written `match` blocks (execution and
+//! prediction), every scheme exported a four-way free-function matrix,
+//! and adding a scheme touched five layers. Now the coordinator layer is
+//! the single place a scheme lives: implement [`SchemeRunner`], add the
+//! unit struct to the registry, and the [`Solver`](super::solver::Solver)
+//! session, the launcher and the CLI pick it up unchanged — the shape the
+//! follow-up schemes (shared-cache group blocking, arXiv:1006.3148;
+//! wavefront diamond tiling, arXiv:1410.3060) slot into.
+
+use crate::config::{RunConfig, Scheme};
+use crate::simulator::ecm::{EcmModel, Prediction};
+use crate::simulator::machine::MachineSpec;
+use crate::simulator::memory::Dataset;
+use crate::simulator::perfmodel::{wavefront_prediction, WavefrontParams};
+use crate::stencil::gauss_seidel::gs_sweeps;
+use crate::stencil::grid::Grid3;
+use crate::stencil::jacobi::jacobi_steps;
+use crate::Result;
+
+use super::pipeline::{pipeline_gs_passes, PipelineConfig};
+use super::pool::WorkerPool;
+use super::spatial_mg::{multigroup_passes, MultiGroupConfig};
+use super::wavefront::{check_iters_multiple, wavefront_jacobi_passes, SyncMode, WavefrontConfig};
+use super::wavefront_gs::{wavefront_gs_iters_passes, GsWavefrontConfig};
+
+/// Everything one scheme needs to participate in a [`Solver`] session
+/// and an experiment launch: team sizing, execution on a pool, the
+/// serial reference it must match bit-exactly, and the Tab. 1
+/// performance-model leg.
+///
+/// [`Solver`]: super::solver::Solver
+pub trait SchemeRunner: Sync {
+    /// The scheme this runner implements.
+    fn scheme(&self) -> Scheme;
+
+    /// Workers the scheme's schedule dispatches for `cfg` — the team the
+    /// [`Solver`](super::solver::Solver) builder pre-spawns so `run()`
+    /// never grows the pool.
+    fn team_size(&self, cfg: &RunConfig) -> usize;
+
+    /// Updates performed by the scheme's natural pass (the granularity
+    /// of [`Solver::step`](super::solver::Solver::step)): `t` fused
+    /// updates for the temporally blocked schemes, one sweep for the
+    /// baselines.
+    fn step_iters(&self, cfg: &RunConfig) -> usize;
+
+    /// Perform `iters` updates of `u` in place on `pool` (scratch comes
+    /// from the pool's reusable arena).
+    fn execute(
+        &self,
+        pool: &mut WorkerPool,
+        u: &mut Grid3,
+        f: &Grid3,
+        h2: f64,
+        cfg: &RunConfig,
+        iters: usize,
+    ) -> Result<()>;
+
+    /// The serial reference result the parallel execution must match
+    /// bit-exactly (verified on every launch).
+    fn reference(&self, u0: &Grid3, f: &Grid3, h2: f64, cfg: &RunConfig, iters: usize) -> Grid3;
+
+    /// Modeled MLUP/s of `cfg` on a Tab. 1 machine.
+    fn predict(&self, machine: &MachineSpec, cfg: &RunConfig) -> f64;
+}
+
+/// The wavefront-family prediction leg (temporally blocked schemes).
+fn predict_wavefront(machine: &MachineSpec, cfg: &RunConfig) -> f64 {
+    let params = WavefrontParams {
+        t: cfg.t,
+        groups: cfg.groups,
+        smt: cfg.smt,
+        kernel: cfg.scheme.kernel(cfg.optimized_kernel),
+        store: cfg.store_mode(),
+        barrier: cfg.barrier,
+    };
+    wavefront_prediction(machine, &params, cfg.size).mlups
+}
+
+/// The ECM prediction leg (memory-bound baselines).
+fn predict_ecm(machine: &MachineSpec, cfg: &RunConfig) -> f64 {
+    let e = EcmModel::new(machine.clone());
+    let pred: Prediction = e.socket(
+        cfg.scheme.kernel(cfg.optimized_kernel),
+        Dataset::Memory,
+        cfg.store_mode(),
+        machine.socket_threads(cfg.smt),
+        cfg.smt,
+    );
+    pred.mlups
+}
+
+/// Plain (serial) Jacobi baseline.
+struct JacobiBaselineRunner;
+
+impl SchemeRunner for JacobiBaselineRunner {
+    fn scheme(&self) -> Scheme {
+        Scheme::JacobiBaseline
+    }
+    fn team_size(&self, _cfg: &RunConfig) -> usize {
+        0 // runs inline on the dispatching thread
+    }
+    fn step_iters(&self, _cfg: &RunConfig) -> usize {
+        1
+    }
+    fn execute(
+        &self,
+        _pool: &mut WorkerPool,
+        u: &mut Grid3,
+        f: &Grid3,
+        h2: f64,
+        _cfg: &RunConfig,
+        iters: usize,
+    ) -> Result<()> {
+        *u = jacobi_steps(u, f, h2, iters);
+        Ok(())
+    }
+    fn reference(&self, u0: &Grid3, f: &Grid3, h2: f64, _cfg: &RunConfig, iters: usize) -> Grid3 {
+        jacobi_steps(u0, f, h2, iters)
+    }
+    fn predict(&self, machine: &MachineSpec, cfg: &RunConfig) -> f64 {
+        predict_ecm(machine, cfg)
+    }
+}
+
+/// Wavefront temporally-blocked Jacobi (Fig. 6).
+struct JacobiWavefrontRunner;
+
+impl JacobiWavefrontRunner {
+    fn wf_config(cfg: &RunConfig) -> WavefrontConfig {
+        WavefrontConfig { threads: cfg.t, barrier: cfg.barrier, sync: SyncMode::Barrier }
+    }
+}
+
+impl SchemeRunner for JacobiWavefrontRunner {
+    fn scheme(&self) -> Scheme {
+        Scheme::JacobiWavefront
+    }
+    fn team_size(&self, cfg: &RunConfig) -> usize {
+        cfg.t
+    }
+    fn step_iters(&self, cfg: &RunConfig) -> usize {
+        cfg.t
+    }
+    fn execute(
+        &self,
+        pool: &mut WorkerPool,
+        u: &mut Grid3,
+        f: &Grid3,
+        h2: f64,
+        cfg: &RunConfig,
+        iters: usize,
+    ) -> Result<()> {
+        let wf = Self::wf_config(cfg);
+        wf.validate()?;
+        check_iters_multiple(iters, wf.threads)?;
+        wavefront_jacobi_passes(pool, u, f, h2, &wf, iters / wf.threads)
+    }
+    fn reference(&self, u0: &Grid3, f: &Grid3, h2: f64, _cfg: &RunConfig, iters: usize) -> Grid3 {
+        jacobi_steps(u0, f, h2, iters)
+    }
+    fn predict(&self, machine: &MachineSpec, cfg: &RunConfig) -> f64 {
+        predict_wavefront(machine, cfg)
+    }
+}
+
+/// Multi-group spatial × temporal blocked Jacobi (Fig. 7 at scale).
+struct JacobiMultiGroupRunner;
+
+impl SchemeRunner for JacobiMultiGroupRunner {
+    fn scheme(&self) -> Scheme {
+        Scheme::JacobiMultiGroup
+    }
+    fn team_size(&self, cfg: &RunConfig) -> usize {
+        cfg.groups
+    }
+    fn step_iters(&self, cfg: &RunConfig) -> usize {
+        cfg.t
+    }
+    fn execute(
+        &self,
+        pool: &mut WorkerPool,
+        u: &mut Grid3,
+        f: &Grid3,
+        h2: f64,
+        cfg: &RunConfig,
+        iters: usize,
+    ) -> Result<()> {
+        let mg = MultiGroupConfig { t: cfg.t, groups: cfg.groups };
+        mg.validate()?;
+        check_iters_multiple(iters, mg.t)?;
+        multigroup_passes(pool, u, f, h2, &mg, iters / mg.t)
+    }
+    fn reference(&self, u0: &Grid3, f: &Grid3, h2: f64, _cfg: &RunConfig, iters: usize) -> Grid3 {
+        jacobi_steps(u0, f, h2, iters)
+    }
+    fn predict(&self, machine: &MachineSpec, cfg: &RunConfig) -> f64 {
+        predict_wavefront(machine, cfg)
+    }
+}
+
+/// Pipeline-parallel lexicographic Gauss-Seidel baseline (Fig. 5a).
+struct GsBaselineRunner;
+
+impl SchemeRunner for GsBaselineRunner {
+    fn scheme(&self) -> Scheme {
+        Scheme::GsBaseline
+    }
+    fn team_size(&self, cfg: &RunConfig) -> usize {
+        if cfg.t <= 1 {
+            0 // single-threaded pipeline short-circuits to the serial sweep
+        } else {
+            cfg.t
+        }
+    }
+    fn step_iters(&self, _cfg: &RunConfig) -> usize {
+        1
+    }
+    fn execute(
+        &self,
+        pool: &mut WorkerPool,
+        u: &mut Grid3,
+        _f: &Grid3,
+        _h2: f64,
+        cfg: &RunConfig,
+        iters: usize,
+    ) -> Result<()> {
+        let p = PipelineConfig { threads: cfg.t, kernel: cfg.gs_kernel() };
+        pipeline_gs_passes(pool, u, &p, iters)
+    }
+    fn reference(&self, u0: &Grid3, _f: &Grid3, _h2: f64, cfg: &RunConfig, iters: usize) -> Grid3 {
+        let mut r = u0.clone();
+        gs_sweeps(&mut r, iters, cfg.gs_kernel());
+        r
+    }
+    fn predict(&self, machine: &MachineSpec, cfg: &RunConfig) -> f64 {
+        predict_ecm(machine, cfg)
+    }
+}
+
+/// Wavefront temporally-blocked Gauss-Seidel (Fig. 5b).
+struct GsWavefrontRunner;
+
+impl SchemeRunner for GsWavefrontRunner {
+    fn scheme(&self) -> Scheme {
+        Scheme::GsWavefront
+    }
+    fn team_size(&self, cfg: &RunConfig) -> usize {
+        if cfg.t <= 1 && cfg.groups <= 1 {
+            0 // short-circuits to the serial sweep
+        } else {
+            cfg.t * cfg.groups
+        }
+    }
+    fn step_iters(&self, cfg: &RunConfig) -> usize {
+        cfg.t
+    }
+    fn execute(
+        &self,
+        pool: &mut WorkerPool,
+        u: &mut Grid3,
+        _f: &Grid3,
+        _h2: f64,
+        cfg: &RunConfig,
+        iters: usize,
+    ) -> Result<()> {
+        let w = GsWavefrontConfig {
+            sweeps: cfg.t,
+            threads_per_group: cfg.groups,
+            kernel: cfg.gs_kernel(),
+        };
+        wavefront_gs_iters_passes(pool, u, &w, iters)
+    }
+    fn reference(&self, u0: &Grid3, _f: &Grid3, _h2: f64, cfg: &RunConfig, iters: usize) -> Grid3 {
+        let mut r = u0.clone();
+        gs_sweeps(&mut r, iters, cfg.gs_kernel());
+        r
+    }
+    fn predict(&self, machine: &MachineSpec, cfg: &RunConfig) -> f64 {
+        predict_wavefront(machine, cfg)
+    }
+}
+
+/// Every registered scheme. Adding a scheme = implementing
+/// [`SchemeRunner`] + one entry here; the launcher and CLI are
+/// data-driven over this slice.
+static REGISTRY: &[&(dyn SchemeRunner)] = &[
+    &JacobiBaselineRunner,
+    &JacobiWavefrontRunner,
+    &JacobiMultiGroupRunner,
+    &GsBaselineRunner,
+    &GsWavefrontRunner,
+];
+
+/// All registered runners.
+pub fn runners() -> &'static [&'static dyn SchemeRunner] {
+    REGISTRY
+}
+
+/// The runner registered for `scheme`.
+pub fn runner_for(scheme: Scheme) -> Result<&'static dyn SchemeRunner> {
+    REGISTRY
+        .iter()
+        .copied()
+        .find(|r| r.scheme() == scheme)
+        .ok_or_else(|| anyhow::anyhow!("scheme {scheme:?} has no registered SchemeRunner"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::perfmodel::BarrierKind;
+
+    fn base_cfg(scheme: Scheme) -> RunConfig {
+        RunConfig {
+            scheme,
+            size: (12, 12, 12),
+            t: 4,
+            groups: 2,
+            iters: 4,
+            machine: Some("Nehalem EP".into()),
+            barrier: BarrierKind::Spin,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn every_scheme_is_registered() {
+        for scheme in [
+            Scheme::JacobiBaseline,
+            Scheme::JacobiWavefront,
+            Scheme::JacobiMultiGroup,
+            Scheme::GsBaseline,
+            Scheme::GsWavefront,
+        ] {
+            let r = runner_for(scheme).unwrap();
+            assert_eq!(r.scheme(), scheme);
+        }
+        assert_eq!(runners().len(), 5);
+    }
+
+    #[test]
+    fn execute_matches_reference_for_all_runners() {
+        let (nz, ny, nx) = (12, 12, 12);
+        let f = Grid3::random(nz, ny, nx, 7);
+        let u0 = Grid3::random(nz, ny, nx, 8);
+        for r in runners() {
+            let cfg = base_cfg(r.scheme());
+            let mut pool = WorkerPool::new(0);
+            let mut u = u0.clone();
+            r.execute(&mut pool, &mut u, &f, 1.0, &cfg, cfg.iters).unwrap();
+            let want = r.reference(&u0, &f, 1.0, &cfg, cfg.iters);
+            assert_eq!(u.max_abs_diff(&want), 0.0, "{:?}", r.scheme());
+            assert!(pool.size() <= r.team_size(&cfg), "{:?} team accounting", r.scheme());
+        }
+    }
+
+    #[test]
+    fn predictions_are_positive_on_the_testbed() {
+        let m = MachineSpec::by_name("Nehalem EP").unwrap();
+        for r in runners() {
+            let cfg = base_cfg(r.scheme());
+            assert!(r.predict(&m, &cfg) > 0.0, "{:?}", r.scheme());
+        }
+    }
+
+    #[test]
+    fn step_iters_match_the_temporal_blocking() {
+        let cfg = base_cfg(Scheme::JacobiWavefront);
+        assert_eq!(runner_for(Scheme::JacobiWavefront).unwrap().step_iters(&cfg), 4);
+        assert_eq!(runner_for(Scheme::JacobiBaseline).unwrap().step_iters(&cfg), 1);
+    }
+}

@@ -1,0 +1,299 @@
+//! The unified `Solver` session: one builder, one owned team, one
+//! resolved scheme runner — the API every scheme is driven through.
+//! (Validation happens once at build; per-`run` schedule construction is
+//! cheap and intentionally not cached, since it borrows the caller's
+//! grid.)
+//!
+//! A session replaces the old four-way free-function matrix
+//! (`x` / `x_on` / `x_iters` / `x_iters_on` per scheme): it validates the
+//! [`RunConfig`] once at [`SolverBuilder::build`], resolves the scheme's
+//! [`SchemeRunner`](super::runner::SchemeRunner) from the registry,
+//! pre-spawns exactly the team the schedule needs (optionally pinned to
+//! cores by a [`PinPolicy`]), and owns the pool plus its reusable scratch
+//! arena — so repeated [`Solver::run`] calls spawn no threads and
+//! allocate no scratch.
+//!
+//! ```no_run
+//! use stencilwave::config::RunConfig;
+//! use stencilwave::coordinator::affinity::PinPolicy;
+//! use stencilwave::coordinator::solver::Solver;
+//! use stencilwave::stencil::grid::Grid3;
+//!
+//! let cfg = RunConfig { size: (64, 64, 64), t: 4, ..Default::default() };
+//! let mut solver = Solver::builder(&cfg).pin(PinPolicy::Compact).build().unwrap();
+//! let mut u = Grid3::from_fn(64, 64, 64, |k, j, i| (k + j + i) as f64);
+//! solver.run(&mut u, 8).unwrap(); // 8 updates, one persistent team
+//! solver.step(&mut u).unwrap();   // one more natural pass (t updates)
+//! ```
+
+use crate::config::RunConfig;
+use crate::config::Scheme;
+use crate::stencil::grid::Grid3;
+use crate::Result;
+
+use super::affinity::{pin_hook, PinPolicy, Topology};
+use super::pool::WorkerPool;
+use super::runner::{runner_for, SchemeRunner};
+
+/// Builder for a [`Solver`] session. Obtained from [`Solver::builder`];
+/// consumed by [`SolverBuilder::build`].
+pub struct SolverBuilder {
+    cfg: RunConfig,
+    pool: Option<WorkerPool>,
+    pin: PinPolicy,
+    rhs: Option<(Grid3, f64)>,
+}
+
+impl SolverBuilder {
+    /// Provide a caller-owned pool instead of a fresh private team.
+    ///
+    /// The pin policy only applies to workers spawned *after* [`build`]
+    /// installs the hook: workers the pool already holds keep whatever
+    /// placement a previous session gave them (pinning is applied once,
+    /// at thread start). Pass an empty pool for a fully pinned — or,
+    /// with [`PinPolicy::None`], fully unpinned — team.
+    ///
+    /// [`build`]: SolverBuilder::build
+    pub fn pool(mut self, pool: WorkerPool) -> Self {
+        self.pool = Some(pool);
+        self
+    }
+
+    /// Core-pinning policy for the team (default: the config's `pin`
+    /// key, which itself defaults to [`PinPolicy::None`]).
+    pub fn pin(mut self, pin: PinPolicy) -> Self {
+        self.pin = pin;
+        self
+    }
+
+    /// Right-hand side `f` and mesh factor `h2` for the Jacobi schemes
+    /// (ignored by the Gauss-Seidel schemes). Defaults to `f = 0`,
+    /// `h2 = 1` — the homogeneous problem.
+    pub fn rhs(mut self, f: Grid3, h2: f64) -> Self {
+        self.rhs = Some((f, h2));
+        self
+    }
+
+    /// Validate the configuration (the same checks — and the same
+    /// errors — as [`RunConfig::validate`]), resolve the scheme's
+    /// runner, and spawn the full team, pinned per the policy. After
+    /// `build` returns, no [`Solver::run`] call spawns another thread.
+    pub fn build(self) -> Result<Solver> {
+        self.cfg.validate()?;
+        let runner = runner_for(self.cfg.scheme)?;
+        if let Some((f, _)) = &self.rhs {
+            anyhow::ensure!(
+                f.shape() == self.cfg.size,
+                "rhs shape {:?} does not match the configured size {:?}",
+                f.shape(),
+                self.cfg.size
+            );
+        }
+        let (nz, ny, nx) = self.cfg.size;
+        let is_gs = self.cfg.scheme.is_gs();
+        let (f, h2) = match self.rhs {
+            Some(rhs) => rhs,
+            // the Gauss-Seidel runners never read the rhs — keep the
+            // placeholder tiny instead of materializing a dead N^3 grid
+            None if is_gs => (Grid3::zeros(1, 1, 1), 1.0),
+            None => (Grid3::zeros(nz, ny, nx), 1.0),
+        };
+        let mut pool = self.pool.unwrap_or_else(|| WorkerPool::new(0));
+        let topo = self
+            .cfg
+            .machine_spec()
+            .map(|m| Topology::of_machine(&m))
+            .unwrap_or_else(Topology::host);
+        match pin_hook(self.pin, topo) {
+            Some(hook) => pool.set_start_hook(hook),
+            // a reused pool may carry the previous session's hook
+            None => pool.clear_start_hook(),
+        }
+        pool.ensure_workers(runner.team_size(&self.cfg));
+        Ok(Solver { cfg: self.cfg, runner, pool, f, h2 })
+    }
+}
+
+/// A reusable execution session: config validated once, scheme resolved
+/// from the registry, team spawned (and optionally pinned) once, scratch
+/// owned by the pool and reused across every [`Solver::run`] call.
+pub struct Solver {
+    cfg: RunConfig,
+    runner: &'static dyn SchemeRunner,
+    pool: WorkerPool,
+    f: Grid3,
+    h2: f64,
+}
+
+impl Solver {
+    /// Start building a session for `cfg` (the config is cloned; the
+    /// builder seeds its pin policy from `cfg.pin`).
+    pub fn builder(cfg: &RunConfig) -> SolverBuilder {
+        SolverBuilder { pin: cfg.pin, cfg: cfg.clone(), pool: None, rhs: None }
+    }
+
+    /// The scheme this session executes.
+    pub fn scheme(&self) -> Scheme {
+        self.cfg.scheme
+    }
+
+    /// Workers the session's pool holds. Pool workers are never retired,
+    /// so a `team_size` that stays constant across [`Solver::run`] calls
+    /// proves the session spawned no new threads after
+    /// [`SolverBuilder::build`] — the accounting the tests assert.
+    pub fn team_size(&self) -> usize {
+        self.pool.size()
+    }
+
+    /// Updates performed by one [`Solver::step`] — the scheme's natural
+    /// pass (`t` for the temporally blocked schemes, 1 for baselines).
+    pub fn step_iters(&self) -> usize {
+        self.runner.step_iters(&self.cfg)
+    }
+
+    /// Perform `iters` updates of `u` in place on the session's team.
+    ///
+    /// `u` must have the session's configured size; schemes with a fixed
+    /// pass granularity keep their divisibility requirement (`iters`
+    /// a multiple of `t` for wavefront Jacobi — the same error the old
+    /// `*_iters` entry points raised).
+    pub fn run(&mut self, u: &mut Grid3, iters: usize) -> Result<()> {
+        anyhow::ensure!(
+            u.shape() == self.cfg.size,
+            "grid shape {:?} does not match the session's configured size {:?}",
+            u.shape(),
+            self.cfg.size
+        );
+        self.runner.execute(&mut self.pool, u, &self.f, self.h2, &self.cfg, iters)
+    }
+
+    /// One natural pass of the scheme ([`Solver::step_iters`] updates).
+    pub fn step(&mut self, u: &mut Grid3) -> Result<()> {
+        let iters = self.runner.step_iters(&self.cfg);
+        self.run(u, iters)
+    }
+
+    /// The serial reference for `iters` updates from `u0` — what
+    /// [`Solver::run`] must match bit-exactly.
+    pub fn reference(&self, u0: &Grid3, iters: usize) -> Grid3 {
+        self.runner.reference(u0, &self.f, self.h2, &self.cfg, iters)
+    }
+
+    /// Modeled MLUP/s of this session's configuration on a Tab. 1
+    /// machine (the scheme runner's performance-model leg).
+    pub fn predict(&self, machine: &crate::simulator::machine::MachineSpec) -> f64 {
+        self.runner.predict(machine, &self.cfg)
+    }
+
+    /// Tear the session down, returning the pool (team and scratch
+    /// intact) for reuse by another session.
+    pub fn into_pool(self) -> WorkerPool {
+        self.pool
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::wavefront::serial_reference;
+
+    fn cfg(scheme: Scheme, size: (usize, usize, usize)) -> RunConfig {
+        RunConfig { scheme, size, t: 4, groups: 2, iters: 4, ..Default::default() }
+    }
+
+    #[test]
+    fn session_runs_and_matches_reference() {
+        let c = cfg(Scheme::JacobiWavefront, (12, 10, 9));
+        let f = Grid3::random(12, 10, 9, 5);
+        let mut solver = Solver::builder(&c).rhs(f.clone(), 0.8).build().unwrap();
+        let u0 = Grid3::random(12, 10, 9, 6);
+        let mut u = u0.clone();
+        solver.run(&mut u, 8).unwrap();
+        let want = serial_reference(&u0, &f, 0.8, 8);
+        assert_eq!(u.max_abs_diff(&want), 0.0);
+    }
+
+    #[test]
+    fn build_rejects_what_validate_rejects() {
+        let mut c = cfg(Scheme::JacobiWavefront, (12, 10, 9));
+        c.t = 3; // odd t
+        let have = Solver::builder(&c).build().map(|_| ()).unwrap_err().to_string();
+        let want = c.validate().unwrap_err().to_string();
+        assert_eq!(have, want);
+    }
+
+    #[test]
+    fn no_threads_spawned_after_build() {
+        let c = cfg(Scheme::GsWavefront, (10, 12, 9));
+        let mut solver = Solver::builder(&c).build().unwrap();
+        let team = solver.team_size();
+        assert_eq!(team, 4 * 2, "sweeps x width pre-spawned");
+        for _ in 0..3 {
+            let mut u = Grid3::random(10, 12, 9, 3);
+            solver.run(&mut u, 8).unwrap();
+            solver.step(&mut u).unwrap();
+        }
+        // workers are never retired, so an unchanged team size proves no
+        // run() call spawned a thread
+        assert_eq!(solver.team_size(), team);
+    }
+
+    #[test]
+    fn wrong_grid_shape_is_rejected() {
+        let c = cfg(Scheme::JacobiWavefront, (12, 10, 9));
+        let mut solver = Solver::builder(&c).build().unwrap();
+        let mut u = Grid3::random(8, 8, 8, 1);
+        assert!(solver.run(&mut u, 4).is_err());
+    }
+
+    #[test]
+    fn default_rhs_is_homogeneous() {
+        let c = cfg(Scheme::JacobiWavefront, (10, 9, 8));
+        let mut solver = Solver::builder(&c).build().unwrap();
+        let u0 = Grid3::random(10, 9, 8, 2);
+        let mut u = u0.clone();
+        solver.run(&mut u, 4).unwrap();
+        let want = serial_reference(&u0, &Grid3::zeros(10, 9, 8), 1.0, 4);
+        assert_eq!(u.max_abs_diff(&want), 0.0);
+    }
+
+    #[test]
+    fn mismatched_rhs_shape_is_rejected_at_build() {
+        let c = cfg(Scheme::JacobiWavefront, (10, 9, 8));
+        let bad = Grid3::zeros(8, 8, 8);
+        assert!(Solver::builder(&c).rhs(bad, 1.0).build().is_err());
+    }
+
+    #[test]
+    fn session_pool_carries_over_to_a_new_session() {
+        let c1 = cfg(Scheme::JacobiWavefront, (10, 9, 8));
+        let mut s1 = Solver::builder(&c1).build().unwrap();
+        let mut u = Grid3::random(10, 9, 8, 4);
+        s1.run(&mut u, 4).unwrap();
+        let pool = s1.into_pool();
+        let carried = pool.size();
+        // same team, different scheme: no new threads for a smaller team
+        let c2 = cfg(Scheme::JacobiMultiGroup, (10, 9, 8));
+        let mut s2 = Solver::builder(&c2).pool(pool).build().unwrap();
+        let u0 = Grid3::random(10, 9, 8, 5);
+        let mut v = u0.clone();
+        s2.run(&mut v, 4).unwrap();
+        let want = s2.reference(&u0, 4);
+        assert_eq!(v.max_abs_diff(&want), 0.0);
+        assert_eq!(s2.team_size(), carried);
+    }
+
+    #[test]
+    fn pinned_sessions_stay_bit_exact() {
+        for pin in [PinPolicy::Compact, PinPolicy::Scatter] {
+            let c = cfg(Scheme::JacobiWavefront, (10, 9, 8));
+            let mut solver = Solver::builder(&c).pin(pin).build().unwrap();
+            let f = Grid3::zeros(10, 9, 8);
+            let u0 = Grid3::random(10, 9, 8, 9);
+            let mut u = u0.clone();
+            solver.run(&mut u, 4).unwrap();
+            let want = serial_reference(&u0, &f, 1.0, 4);
+            assert_eq!(u.max_abs_diff(&want), 0.0, "{pin:?}");
+        }
+    }
+}

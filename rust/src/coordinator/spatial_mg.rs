@@ -90,6 +90,9 @@ pub struct MultiGroupSchedule<'g> {
     tmp: *mut f64,
     /// `groups * (t/2) * nz * 2` x-lines (per-group boundary arrays).
     bnd: *mut f64,
+    /// `groups * nx` per-worker x-line update buffers (disjoint slices;
+    /// pool-owned scratch instead of a per-pass `Vec` per worker).
+    lines: *mut f64,
     nz: usize,
     ny: usize,
     nx: usize,
@@ -109,14 +112,16 @@ unsafe impl Send for MultiGroupSchedule<'_> {}
 unsafe impl Sync for MultiGroupSchedule<'_> {}
 
 impl<'g> MultiGroupSchedule<'g> {
-    /// Build a pass over `u`. `tmp` and `bnd` are caller-owned scratch
-    /// buffers, resized here; they must stay alive (and untouched) for
-    /// as long as the schedule runs.
+    /// Build a pass over `u`. `tmp`, `bnd` and `lines` are caller-owned
+    /// scratch buffers (typically the pool's reusable
+    /// [`Scratch`](super::pool::Scratch)), resized here; they must stay
+    /// alive (and untouched) for as long as the schedule runs.
     pub fn new(
         u: &'g mut Grid3,
         f: &'g Grid3,
         tmp: &'g mut Vec<f64>,
         bnd: &'g mut Vec<f64>,
+        lines: &'g mut Vec<f64>,
         h2: f64,
         cfg: &MultiGroupConfig,
     ) -> Result<Self> {
@@ -138,12 +143,15 @@ impl<'g> MultiGroupSchedule<'g> {
         tmp.resize(groups * levels * TMP_SLOTS * plane, 0.0);
         bnd.clear();
         bnd.resize(groups * levels * nz * 2 * nx, 0.0);
+        lines.clear();
+        lines.resize(groups * nx, 0.0);
         let starts: Vec<usize> = (0..=groups).map(|b| 1 + b * interior / groups).collect();
         Ok(Self {
             src: u.data_mut().as_mut_ptr(),
             f: f.data().as_ptr(),
             tmp: tmp.as_mut_ptr(),
             bnd: bnd.as_mut_ptr(),
+            lines: lines.as_mut_ptr(),
             nz,
             ny,
             nx,
@@ -222,8 +230,12 @@ impl Schedule for MultiGroupSchedule<'_> {
             }
         };
 
-        // scratch line reused across every (round, level, y) iteration
-        let mut out = vec![0.0f64; nx];
+        // scratch line reused across every (round, level, y) iteration —
+        // worker g's disjoint slice of the pool-owned line scratch, so no
+        // allocation happens on the pass hot path.
+        // SAFETY: slice `[g*nx, (g+1)*nx)` is written by worker g only.
+        let out: &mut [f64] =
+            unsafe { std::slice::from_raw_parts_mut(self.lines.add(g * nx), nx) };
         for r in 1..=self.last_round {
             if g > 0 {
                 // round-lag flow control: the left neighbor is at least
@@ -288,8 +300,10 @@ impl Schedule for MultiGroupSchedule<'_> {
     }
 }
 
-/// Run `passes` multi-group passes on `pool` with one schedule.
-fn multigroup_passes(
+/// Run `passes` multi-group passes on `pool` with one schedule. All
+/// scratch (plane rings, boundary arrays, per-worker x-lines) comes from
+/// the pool's reusable [`Scratch`](super::pool::Scratch).
+pub(crate) fn multigroup_passes(
     pool: &mut WorkerPool,
     u: &mut Grid3,
     f: &Grid3,
@@ -303,27 +317,40 @@ fn multigroup_passes(
     if nz < 3 || ny < 3 || nx < 3 || passes == 0 {
         return Ok(());
     }
-    let mut tmp = Vec::new();
-    let mut bnd = Vec::new();
-    let schedule = MultiGroupSchedule::new(u, f, &mut tmp, &mut bnd, h2, cfg)?;
-    for _ in 0..passes {
-        pool.run(&schedule)?;
-    }
-    Ok(())
+    let mut scratch = pool.take_scratch();
+    let result = (|| -> Result<()> {
+        let schedule = MultiGroupSchedule::new(
+            u,
+            f,
+            &mut scratch.planes,
+            &mut scratch.bnd,
+            &mut scratch.lines,
+            h2,
+            cfg,
+        )?;
+        for _ in 0..passes {
+            pool.run(&schedule)?;
+        }
+        Ok(())
+    })();
+    pool.restore_scratch(scratch);
+    result
 }
 
 /// Perform exactly `cfg.t` Jacobi updates on `u` in place, `cfg.groups`
-/// blocks swept concurrently on the process-wide pool.
+/// blocks swept concurrently on the calling thread's convenience pool.
+#[deprecated(since = "0.2.0", note = "use a `coordinator::solver::Solver` session")]
 pub fn multigroup_blocked_jacobi(
     u: &mut Grid3,
     f: &Grid3,
     h2: f64,
     cfg: &MultiGroupConfig,
 ) -> Result<()> {
-    pool::with_global(|p| multigroup_blocked_jacobi_on(p, u, f, h2, cfg))
+    pool::with_local(|p| multigroup_passes(p, u, f, h2, cfg, 1))
 }
 
 /// [`multigroup_blocked_jacobi`] on a caller-owned pool.
+#[deprecated(since = "0.2.0", note = "use a `coordinator::solver::Solver` session")]
 pub fn multigroup_blocked_jacobi_on(
     pool: &mut WorkerPool,
     u: &mut Grid3,
@@ -336,6 +363,7 @@ pub fn multigroup_blocked_jacobi_on(
 
 /// Run `iters` updates (a multiple of `cfg.t`) via repeated passes of one
 /// persistent team.
+#[deprecated(since = "0.2.0", note = "use a `coordinator::solver::Solver` session")]
 pub fn multigroup_blocked_jacobi_iters(
     u: &mut Grid3,
     f: &Grid3,
@@ -343,10 +371,13 @@ pub fn multigroup_blocked_jacobi_iters(
     cfg: &MultiGroupConfig,
     iters: usize,
 ) -> Result<()> {
-    pool::with_global(|p| multigroup_blocked_jacobi_iters_on(p, u, f, h2, cfg, iters))
+    cfg.validate()?;
+    super::wavefront::check_iters_multiple(iters, cfg.t)?;
+    pool::with_local(|p| multigroup_passes(p, u, f, h2, cfg, iters / cfg.t))
 }
 
 /// [`multigroup_blocked_jacobi_iters`] on a caller-owned pool.
+#[deprecated(since = "0.2.0", note = "use a `coordinator::solver::Solver` session")]
 pub fn multigroup_blocked_jacobi_iters_on(
     pool: &mut WorkerPool,
     u: &mut Grid3,
@@ -356,16 +387,14 @@ pub fn multigroup_blocked_jacobi_iters_on(
     iters: usize,
 ) -> Result<()> {
     cfg.validate()?;
-    anyhow::ensure!(
-        iters % cfg.t == 0,
-        "iters ({iters}) must be a multiple of the blocking factor ({})",
-        cfg.t
-    );
+    super::wavefront::check_iters_multiple(iters, cfg.t)?;
     multigroup_passes(pool, u, f, h2, cfg, iters / cfg.t)
 }
 
 #[cfg(test)]
 mod tests {
+    #![allow(deprecated)] // the shim matrix stays covered until removal
+
     use super::*;
     use crate::coordinator::wavefront::serial_reference;
 

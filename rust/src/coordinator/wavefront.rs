@@ -250,8 +250,10 @@ impl Schedule for WavefrontJacobiSchedule<'_> {
     }
 }
 
-/// Run `passes` wavefront passes on `pool`, one team, one temporary ring.
-fn wavefront_jacobi_passes(
+/// Run `passes` wavefront passes on `pool`, one team, one temporary ring
+/// (the ring lives in the pool's reusable [`Scratch`](super::pool::Scratch),
+/// so repeated calls reuse one allocation).
+pub(crate) fn wavefront_jacobi_passes(
     pool: &mut WorkerPool,
     u: &mut Grid3,
     f: &Grid3,
@@ -265,11 +267,24 @@ fn wavefront_jacobi_passes(
     if nz < 3 || ny < 3 || nx < 3 || passes == 0 {
         return Ok(());
     }
-    let mut tmp = Vec::new();
-    let schedule = WavefrontJacobiSchedule::new(u, f, &mut tmp, h2, cfg)?;
-    for _ in 0..passes {
-        pool.run(&schedule)?;
-    }
+    let mut scratch = pool.take_scratch();
+    let result = (|| -> Result<()> {
+        let schedule = WavefrontJacobiSchedule::new(u, f, &mut scratch.planes, h2, cfg)?;
+        for _ in 0..passes {
+            pool.run(&schedule)?;
+        }
+        Ok(())
+    })();
+    pool.restore_scratch(scratch);
+    result
+}
+
+/// Check the iteration count divides into whole passes.
+pub(crate) fn check_iters_multiple(iters: usize, t: usize) -> Result<()> {
+    anyhow::ensure!(
+        iters % t == 0,
+        "iters ({iters}) must be a multiple of the blocking factor ({t})"
+    );
     Ok(())
 }
 
@@ -277,12 +292,14 @@ fn wavefront_jacobi_passes(
 ///
 /// Functionally equal to `cfg.threads` calls of [`jacobi_sweep`] with
 /// ping-pong buffers, but executed by one wavefront thread group on the
-/// process-wide [`pool`].
+/// calling thread's convenience pool.
+#[deprecated(since = "0.2.0", note = "use a `coordinator::solver::Solver` session")]
 pub fn wavefront_jacobi(u: &mut Grid3, f: &Grid3, h2: f64, cfg: &WavefrontConfig) -> Result<()> {
-    pool::with_global(|p| wavefront_jacobi_on(p, u, f, h2, cfg))
+    pool::with_local(|p| wavefront_jacobi_passes(p, u, f, h2, cfg, 1))
 }
 
 /// [`wavefront_jacobi`] on a caller-owned pool.
+#[deprecated(since = "0.2.0", note = "use a `coordinator::solver::Solver` session")]
 pub fn wavefront_jacobi_on(
     pool: &mut WorkerPool,
     u: &mut Grid3,
@@ -295,6 +312,7 @@ pub fn wavefront_jacobi_on(
 
 /// Run `iters` updates (a multiple of `cfg.threads`) via repeated passes
 /// of one persistent team (no per-pass thread respawn).
+#[deprecated(since = "0.2.0", note = "use a `coordinator::solver::Solver` session")]
 pub fn wavefront_jacobi_iters(
     u: &mut Grid3,
     f: &Grid3,
@@ -302,10 +320,13 @@ pub fn wavefront_jacobi_iters(
     cfg: &WavefrontConfig,
     iters: usize,
 ) -> Result<()> {
-    pool::with_global(|p| wavefront_jacobi_iters_on(p, u, f, h2, cfg, iters))
+    cfg.validate()?;
+    check_iters_multiple(iters, cfg.threads)?;
+    pool::with_local(|p| wavefront_jacobi_passes(p, u, f, h2, cfg, iters / cfg.threads))
 }
 
 /// [`wavefront_jacobi_iters`] on a caller-owned pool.
+#[deprecated(since = "0.2.0", note = "use a `coordinator::solver::Solver` session")]
 pub fn wavefront_jacobi_iters_on(
     pool: &mut WorkerPool,
     u: &mut Grid3,
@@ -315,11 +336,7 @@ pub fn wavefront_jacobi_iters_on(
     iters: usize,
 ) -> Result<()> {
     cfg.validate()?;
-    anyhow::ensure!(
-        iters % cfg.threads == 0,
-        "iters ({iters}) must be a multiple of the blocking factor ({})",
-        cfg.threads
-    );
+    check_iters_multiple(iters, cfg.threads)?;
     wavefront_jacobi_passes(pool, u, f, h2, cfg, iters / cfg.threads)
 }
 
@@ -336,6 +353,8 @@ pub fn serial_reference(u: &Grid3, f: &Grid3, h2: f64, n: usize) -> Grid3 {
 
 #[cfg(test)]
 mod tests {
+    #![allow(deprecated)] // the shim matrix stays covered until removal
+
     use super::*;
 
     fn check(nz: usize, ny: usize, nx: usize, t: usize, sync: SyncMode, barrier: BarrierKind) {

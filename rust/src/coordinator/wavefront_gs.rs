@@ -137,7 +137,7 @@ impl Schedule for GsWavefrontSchedule<'_> {
 }
 
 /// Run `passes` wavefront passes on `pool` with one schedule.
-fn wavefront_gs_passes(
+pub(crate) fn wavefront_gs_passes(
     pool: &mut WorkerPool,
     u: &mut Grid3,
     cfg: &GsWavefrontConfig,
@@ -161,24 +161,9 @@ fn wavefront_gs_passes(
     Ok(())
 }
 
-/// Run `cfg.sweeps` lexicographic GS sweeps in one wavefront pass.
-pub fn wavefront_gs(u: &mut Grid3, cfg: &GsWavefrontConfig) -> Result<()> {
-    pool::with_global(|p| wavefront_gs_on(p, u, cfg))
-}
-
-/// [`wavefront_gs`] on a caller-owned pool.
-pub fn wavefront_gs_on(pool: &mut WorkerPool, u: &mut Grid3, cfg: &GsWavefrontConfig) -> Result<()> {
-    wavefront_gs_passes(pool, u, cfg, 1)
-}
-
-/// `iters` sweeps via passes of `cfg.sweeps` each (+ a remainder pass),
-/// all on one persistent team.
-pub fn wavefront_gs_iters(u: &mut Grid3, cfg: &GsWavefrontConfig, iters: usize) -> Result<()> {
-    pool::with_global(|p| wavefront_gs_iters_on(p, u, cfg, iters))
-}
-
-/// [`wavefront_gs_iters`] on a caller-owned pool.
-pub fn wavefront_gs_iters_on(
+/// `iters` sweeps via passes of `cfg.sweeps` each (+ a remainder pass
+/// with fewer simultaneous sweeps), all on one team.
+pub(crate) fn wavefront_gs_iters_passes(
     pool: &mut WorkerPool,
     u: &mut Grid3,
     cfg: &GsWavefrontConfig,
@@ -194,8 +179,40 @@ pub fn wavefront_gs_iters_on(
     Ok(())
 }
 
+/// Run `cfg.sweeps` lexicographic GS sweeps in one wavefront pass.
+#[deprecated(since = "0.2.0", note = "use a `coordinator::solver::Solver` session")]
+pub fn wavefront_gs(u: &mut Grid3, cfg: &GsWavefrontConfig) -> Result<()> {
+    pool::with_local(|p| wavefront_gs_passes(p, u, cfg, 1))
+}
+
+/// [`wavefront_gs`] on a caller-owned pool.
+#[deprecated(since = "0.2.0", note = "use a `coordinator::solver::Solver` session")]
+pub fn wavefront_gs_on(pool: &mut WorkerPool, u: &mut Grid3, cfg: &GsWavefrontConfig) -> Result<()> {
+    wavefront_gs_passes(pool, u, cfg, 1)
+}
+
+/// `iters` sweeps via passes of `cfg.sweeps` each (+ a remainder pass),
+/// all on one persistent team.
+#[deprecated(since = "0.2.0", note = "use a `coordinator::solver::Solver` session")]
+pub fn wavefront_gs_iters(u: &mut Grid3, cfg: &GsWavefrontConfig, iters: usize) -> Result<()> {
+    pool::with_local(|p| wavefront_gs_iters_passes(p, u, cfg, iters))
+}
+
+/// [`wavefront_gs_iters`] on a caller-owned pool.
+#[deprecated(since = "0.2.0", note = "use a `coordinator::solver::Solver` session")]
+pub fn wavefront_gs_iters_on(
+    pool: &mut WorkerPool,
+    u: &mut Grid3,
+    cfg: &GsWavefrontConfig,
+    iters: usize,
+) -> Result<()> {
+    wavefront_gs_iters_passes(pool, u, cfg, iters)
+}
+
 #[cfg(test)]
 mod tests {
+    #![allow(deprecated)] // the shim matrix stays covered until removal
+
     use super::*;
     use crate::stencil::gauss_seidel::gs_sweeps;
 

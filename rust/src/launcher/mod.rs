@@ -14,18 +14,10 @@
 
 
 use crate::config::{RunConfig, Scheme};
-use crate::coordinator::pipeline::{pipeline_gs_sweeps_on, PipelineConfig};
-use crate::coordinator::pool::{panic_message, WorkerPool};
-use crate::coordinator::spatial_mg::{multigroup_blocked_jacobi_iters_on, MultiGroupConfig};
-use crate::coordinator::wavefront::{wavefront_jacobi_iters_on, SyncMode, WavefrontConfig};
-use crate::coordinator::wavefront_gs::{wavefront_gs_iters_on, GsWavefrontConfig};
+use crate::coordinator::pool::panic_message;
+use crate::coordinator::solver::Solver;
 use crate::metrics::{mlups, timed};
-use crate::simulator::ecm::{EcmModel, Prediction};
-use crate::simulator::memory::Dataset;
-use crate::simulator::perfmodel::{wavefront_prediction, WavefrontParams};
-use crate::stencil::gauss_seidel::{gs_sweeps, GsKernel};
 use crate::stencil::grid::Grid3;
-use crate::stencil::jacobi::jacobi_steps;
 use crate::Result;
 
 /// Outcome of one launched experiment.
@@ -47,92 +39,38 @@ pub struct RunReport {
 }
 
 /// Execute one configuration: real run + verification + prediction.
+///
+/// Fully data-driven over the [`SchemeRunner`] registry — no per-scheme
+/// dispatch lives here: the [`Solver`] session executes, the runner
+/// supplies the serial reference and the performance-model leg. Adding a
+/// scheme touches the coordinator layer only.
+///
+/// [`SchemeRunner`]: crate::coordinator::runner::SchemeRunner
 pub fn run_experiment(cfg: &RunConfig) -> Result<RunReport> {
+    // fail fast before materializing the grids (build() re-validates,
+    // which is cheap and keeps the builder's error parity intact)
     cfg.validate()?;
     let (nz, ny, nx) = cfg.size;
-    let kernel = if cfg.optimized_kernel { GsKernel::Interleaved } else { GsKernel::Naive };
     let f = Grid3::random(nz, ny, nx, 7);
     let u0 = Grid3::random(nz, ny, nx, 8);
     let h2 = 1.0;
 
     // ---- functional leg on the host.
-    // Each experiment gets its own worker pool (created before the timer
-    // starts) so parallel sweeps really run side by side and the timed
-    // section never includes waiting for another experiment's team.
-    let mut pool = WorkerPool::new(0);
+    // Each experiment gets its own session (validated and team-spawned at
+    // build, before the timer starts) so parallel sweeps really run side
+    // by side and the timed section never includes thread creation or
+    // waiting for another experiment's team.
+    let mut solver = Solver::builder(cfg).rhs(f, h2).build()?;
     let mut u = u0.clone();
-    let (res, dt) = timed(|| -> Result<()> {
-        match cfg.scheme {
-            Scheme::JacobiBaseline => {
-                u = jacobi_steps(&u0, &f, h2, cfg.iters);
-                Ok(())
-            }
-            Scheme::JacobiWavefront => {
-                let wf = WavefrontConfig {
-                    threads: cfg.t,
-                    barrier: cfg.barrier,
-                    sync: SyncMode::Barrier,
-                };
-                wavefront_jacobi_iters_on(&mut pool, &mut u, &f, h2, &wf, cfg.iters)
-            }
-            Scheme::JacobiMultiGroup => {
-                let mg = MultiGroupConfig { t: cfg.t, groups: cfg.groups };
-                multigroup_blocked_jacobi_iters_on(&mut pool, &mut u, &f, h2, &mg, cfg.iters)
-            }
-            Scheme::GsBaseline => {
-                let p = PipelineConfig { threads: cfg.t, kernel };
-                pipeline_gs_sweeps_on(&mut pool, &mut u, &p, cfg.iters)
-            }
-            Scheme::GsWavefront => {
-                let w = GsWavefrontConfig {
-                    sweeps: cfg.t,
-                    threads_per_group: cfg.groups,
-                    kernel,
-                };
-                wavefront_gs_iters_on(&mut pool, &mut u, &w, cfg.iters)
-            }
-        }
-    });
+    let (res, dt) = timed(|| solver.run(&mut u, cfg.iters));
     res?;
 
     // ---- verification against the serial reference
-    let reference = if cfg.scheme.is_gs() {
-        let mut r = u0.clone();
-        gs_sweeps(&mut r, cfg.iters, kernel);
-        r
-    } else {
-        jacobi_steps(&u0, &f, h2, cfg.iters)
-    };
+    let reference = solver.reference(&u0, cfg.iters);
     let diff = u.max_abs_diff(&reference);
 
-    // ---- prediction leg on the paper testbed
-    let predicted = cfg.machine_spec().map(|m| {
-        let kernel = cfg.scheme.kernel(cfg.optimized_kernel);
-        match cfg.scheme {
-            Scheme::JacobiWavefront | Scheme::JacobiMultiGroup | Scheme::GsWavefront => {
-                let p = WavefrontParams {
-                    t: cfg.t,
-                    groups: cfg.groups,
-                    smt: cfg.smt,
-                    kernel,
-                    store: cfg.store_mode(),
-                    barrier: cfg.barrier,
-                };
-                wavefront_prediction(&m, &p, cfg.size).mlups
-            }
-            Scheme::JacobiBaseline | Scheme::GsBaseline => {
-                let e = EcmModel::new(m.clone());
-                let pred: Prediction = e.socket(
-                    kernel,
-                    Dataset::Memory,
-                    cfg.store_mode(),
-                    m.socket_threads(cfg.smt),
-                    cfg.smt,
-                );
-                pred.mlups
-            }
-        }
-    });
+    // ---- prediction leg on the paper testbed (the runner's model leg)
+    let predicted = cfg.machine_spec().map(|m| solver.predict(&m));
 
     let updates = (u0.interior_len() * cfg.iters) as u64;
     Ok(RunReport {
@@ -222,6 +160,7 @@ mod tests {
             nt_stores: true,
             barrier: BarrierKind::Spin,
             machine: Some("Nehalem EP".into()),
+            pin: crate::coordinator::affinity::PinPolicy::None,
         }
     }
 

@@ -26,15 +26,30 @@
 //!
 //! ## Quick start
 //!
-//! ```no_run
-//! use stencilwave::stencil::grid::Grid3;
-//! use stencilwave::coordinator::wavefront::{WavefrontConfig, wavefront_jacobi};
+//! Execution goes through a [`coordinator::solver::Solver`] session: the
+//! builder validates the config once, resolves the scheme from the
+//! [`coordinator::runner`] registry, and spawns (optionally core-pinned)
+//! the worker team exactly once:
 //!
+//! ```no_run
+//! use stencilwave::config::{RunConfig, Scheme};
+//! use stencilwave::coordinator::solver::Solver;
+//! use stencilwave::stencil::grid::Grid3;
+//!
+//! let cfg = RunConfig {
+//!     scheme: Scheme::JacobiWavefront,
+//!     size: (64, 64, 64),
+//!     t: 4,
+//!     ..Default::default()
+//! };
+//! let mut solver = Solver::builder(&cfg).build().unwrap();
 //! let mut u = Grid3::from_fn(64, 64, 64, |k, j, i| (k + j + i) as f64);
-//! let f = Grid3::zeros(64, 64, 64);
-//! let cfg = WavefrontConfig { threads: 4, ..Default::default() };
-//! wavefront_jacobi(&mut u, &f, 1.0, &cfg).unwrap();
+//! solver.run(&mut u, 8).unwrap(); // 8 updates on one persistent team
 //! ```
+//!
+//! The pre-session free functions (`wavefront_jacobi`, …) remain as
+//! deprecated shims for one release (see the migration table in
+//! [`coordinator`]).
 
 pub mod benchkit;
 pub mod cli;

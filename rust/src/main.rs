@@ -13,6 +13,7 @@
 
 use stencilwave::cli::Args;
 use stencilwave::config::{RunConfig, Scheme};
+use stencilwave::coordinator::affinity::PinPolicy;
 use stencilwave::figures;
 use stencilwave::launcher;
 use stencilwave::metrics;
@@ -31,9 +32,11 @@ USAGE: stencilwave <COMMAND> [FLAGS]
 COMMANDS:
   run        run one experiment
                --config <file> | --scheme <s> --n <N> --t <T> --groups <G>
-               --iters <I> --machine <name> --csv
+               --iters <I> --machine <name> --pin <none|compact|scatter> --csv
                schemes: jacobi-baseline jacobi-wavefront jacobi-multigroup
                         gs-baseline gs-wavefront
+               --pin places workers on cores (cache-group aware when
+               --machine names a Tab. 1 model; Linux backend, no-op elsewhere)
   figures    regenerate paper tables/figures
                [id|all] --out-dir <dir>
                ids: tab1 fig3a fig3b fig4a fig4b fig8 fig9 fig10 barrier
@@ -46,9 +49,9 @@ COMMANDS:
 
 fn cmd_run(args: &Args) -> Result<()> {
     args.check_known(&[
-        "config", "scheme", "n", "t", "groups", "iters", "machine", "csv", "smt",
+        "config", "scheme", "n", "t", "groups", "iters", "machine", "csv", "smt", "pin",
     ])?;
-    let cfg = match args.get("config") {
+    let mut cfg = match args.get("config") {
         Some(path) => RunConfig::load(std::path::Path::new(path))?,
         None => {
             let n = args.get_usize("n", 64)?;
@@ -64,6 +67,10 @@ fn cmd_run(args: &Args) -> Result<()> {
             }
         }
     };
+    if let Some(pin) = args.get("pin") {
+        // the flag overrides the config file's `pin = "..."` key
+        cfg.pin = PinPolicy::parse(pin)?;
+    }
     let report = launcher::run_experiment(&cfg)?;
     if args.get_bool("csv") {
         print!("{}", launcher::to_csv(&[report]));

@@ -1,6 +1,7 @@
 //! One persistent pool reused across schemes, passes and team sizes must
 //! stay bit-exact against the serial references — the suite that catches
 //! stale progress-table or scratch-buffer state surviving a pass.
+#![allow(deprecated)] // exercises the shim matrix until its removal
 
 use stencilwave::coordinator::pipeline::{pipeline_gs_sweeps_on, PipelineConfig};
 use stencilwave::coordinator::pool::WorkerPool;

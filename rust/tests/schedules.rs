@@ -2,6 +2,7 @@
 //! bit-identical to the serial reference for randomized shapes and
 //! configurations (the in-tree analog of a proptest suite — seeded
 //! xorshift case generation, failures print the offending case).
+#![allow(deprecated)] // exercises the shim matrix until its removal
 
 use stencilwave::coordinator::pipeline::{pipeline_gs_sweep, pipeline_gs_sweeps, PipelineConfig};
 use stencilwave::coordinator::spatial::{blocked_wavefront_jacobi, SpatialConfig};

@@ -1,0 +1,183 @@
+//! Integration suite for the unified `Solver` session API:
+//!
+//! * builder rejects invalid configs with the *same* errors
+//!   `RunConfig::validate()` gives;
+//! * a session reused across `run()` calls — and a pool reused across
+//!   sessions and schemes — stays bit-exact vs the serial references;
+//! * a built session spawns no new threads across `run()` calls
+//!   (team-size accounting);
+//! * `PinPolicy` is advisory and a no-op off-Linux;
+//! * the convenience shims no longer serialize concurrent callers on a
+//!   process-wide mutex (per-thread pools).
+
+use stencilwave::config::{RunConfig, Scheme};
+use stencilwave::coordinator::affinity::{pin_current_thread, PinPolicy};
+use stencilwave::coordinator::solver::Solver;
+use stencilwave::coordinator::wavefront::serial_reference;
+use stencilwave::stencil::gauss_seidel::gs_sweeps;
+use stencilwave::stencil::grid::Grid3;
+
+const ALL_SCHEMES: [Scheme; 5] = [
+    Scheme::JacobiBaseline,
+    Scheme::JacobiWavefront,
+    Scheme::JacobiMultiGroup,
+    Scheme::GsBaseline,
+    Scheme::GsWavefront,
+];
+
+fn cfg(scheme: Scheme) -> RunConfig {
+    RunConfig { scheme, size: (12, 14, 10), t: 4, groups: 2, iters: 8, ..Default::default() }
+}
+
+#[test]
+fn builder_errors_match_validate_errors() {
+    // every invalid config class the old entry points rejected
+    let mut odd_t = cfg(Scheme::JacobiWavefront);
+    odd_t.t = 3;
+    let mut bad_iters = cfg(Scheme::JacobiWavefront);
+    bad_iters.iters = 6;
+    let mut tiny = cfg(Scheme::GsBaseline);
+    tiny.size = (2, 2, 2);
+    let mut narrow = cfg(Scheme::JacobiMultiGroup);
+    narrow.groups = 50;
+    let mut unknown_machine = cfg(Scheme::JacobiBaseline);
+    unknown_machine.machine = Some("pentium4".into());
+    for bad in [odd_t, bad_iters, tiny, narrow, unknown_machine] {
+        let want = bad.validate().unwrap_err().to_string();
+        let have = Solver::builder(&bad).build().map(|_| ()).unwrap_err().to_string();
+        assert_eq!(have, want, "builder must surface validate()'s error");
+    }
+}
+
+#[test]
+fn sessions_are_bit_exact_for_every_scheme() {
+    let (nz, ny, nx) = (12, 14, 10);
+    let f = Grid3::random(nz, ny, nx, 3);
+    for scheme in ALL_SCHEMES {
+        let c = cfg(scheme);
+        let mut solver = Solver::builder(&c).rhs(f.clone(), 1.0).build().unwrap();
+        let u0 = Grid3::random(nz, ny, nx, 17);
+        let mut u = u0.clone();
+        solver.run(&mut u, c.iters).unwrap();
+        let want = solver.reference(&u0, c.iters);
+        assert_eq!(u.max_abs_diff(&want), 0.0, "{scheme:?}");
+        // the runner's reference must itself match the plain serial sweeps
+        let independent = if scheme.is_gs() {
+            let mut r = u0.clone();
+            gs_sweeps(&mut r, c.iters, c.gs_kernel());
+            r
+        } else {
+            serial_reference(&u0, &f, 1.0, c.iters)
+        };
+        assert_eq!(want.max_abs_diff(&independent), 0.0, "{scheme:?} reference");
+    }
+}
+
+#[test]
+fn one_session_reused_across_runs_stays_exact_and_spawns_nothing() {
+    let c = cfg(Scheme::JacobiWavefront);
+    let f = Grid3::random(12, 14, 10, 4);
+    let mut solver = Solver::builder(&c).rhs(f.clone(), 0.9).build().unwrap();
+    let team = solver.team_size();
+    assert_eq!(team, c.t, "the full team exists right after build()");
+    for round in 0..4 {
+        let u0 = Grid3::random(12, 14, 10, 30 + round);
+        let mut u = u0.clone();
+        solver.run(&mut u, 8).unwrap();
+        let want = serial_reference(&u0, &f, 0.9, 8);
+        assert_eq!(u.max_abs_diff(&want), 0.0, "round {round}");
+    }
+    // pool workers are never retired, so an unchanged team size proves no
+    // run() call spawned a thread
+    assert_eq!(solver.team_size(), team, "no growth across run() calls");
+}
+
+#[test]
+fn one_pool_chained_through_sessions_of_every_scheme() {
+    let (nz, ny, nx) = (12, 14, 10);
+    let f = Grid3::random(nz, ny, nx, 5);
+    let mut pool = None;
+    for (i, scheme) in ALL_SCHEMES.into_iter().enumerate() {
+        let c = cfg(scheme);
+        let mut b = Solver::builder(&c).rhs(f.clone(), 1.0);
+        if let Some(p) = pool.take() {
+            b = b.pool(p);
+        }
+        let mut solver = b.build().unwrap();
+        let u0 = Grid3::random(nz, ny, nx, 50 + i as u64);
+        let mut u = u0.clone();
+        solver.run(&mut u, c.iters).unwrap();
+        let want = solver.reference(&u0, c.iters);
+        assert_eq!(u.max_abs_diff(&want), 0.0, "{scheme:?} on the chained pool");
+        pool = Some(solver.into_pool());
+    }
+    // the chained pool holds the largest team any scheme needed:
+    // GsWavefront's sweeps x width = 4 * 2
+    assert_eq!(pool.unwrap().size(), 8);
+}
+
+#[test]
+fn step_advances_by_the_natural_pass() {
+    let c = cfg(Scheme::JacobiMultiGroup);
+    let f = Grid3::random(12, 14, 10, 6);
+    let mut solver = Solver::builder(&c).rhs(f.clone(), 1.0).build().unwrap();
+    assert_eq!(solver.step_iters(), c.t);
+    let u0 = Grid3::random(12, 14, 10, 7);
+    let mut u = u0.clone();
+    solver.step(&mut u).unwrap();
+    let want = serial_reference(&u0, &f, 1.0, c.t);
+    assert_eq!(u.max_abs_diff(&want), 0.0);
+}
+
+#[test]
+fn pin_policy_is_a_noop_where_unsupported_and_advisory_elsewhere() {
+    // the backend must never fail a session: pinned builds run bit-exact
+    // whether or not the kernel honored the mask
+    for pin in [PinPolicy::None, PinPolicy::Compact, PinPolicy::Scatter] {
+        let mut c = cfg(Scheme::JacobiWavefront);
+        c.pin = pin;
+        c.machine = Some("Nehalem EP".into()); // cache-group-aware topology
+        let f = Grid3::random(12, 14, 10, 8);
+        let mut solver = Solver::builder(&c).rhs(f.clone(), 1.0).build().unwrap();
+        let u0 = Grid3::random(12, 14, 10, 9);
+        let mut u = u0.clone();
+        solver.run(&mut u, 8).unwrap();
+        let want = serial_reference(&u0, &f, 1.0, 8);
+        assert_eq!(u.max_abs_diff(&want), 0.0, "{pin:?}");
+    }
+    // off-Linux the raw backend reports failure instead of pretending
+    if cfg!(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))
+    {
+        assert!(!pin_current_thread(0));
+    }
+}
+
+/// The old convenience API serialized every caller on one global mutexed
+/// pool; with per-thread pools, concurrent callers must all complete and
+/// stay bit-exact (a deadlock or cross-talk here is the regression).
+#[test]
+fn concurrent_convenience_callers_do_not_serialize_or_cross_talk() {
+    #![allow(deprecated)] // the shims are the subject under test
+    use stencilwave::coordinator::wavefront::{wavefront_jacobi_iters, WavefrontConfig};
+
+    let threads = 4;
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for seed in 0..threads {
+            handles.push(scope.spawn(move || {
+                let f = Grid3::random(10, 9, 8, 100 + seed);
+                let u0 = Grid3::random(10, 9, 8, 200 + seed);
+                let want = serial_reference(&u0, &f, 1.0, 8);
+                let wf = WavefrontConfig { threads: 4, ..Default::default() };
+                for _ in 0..3 {
+                    let mut u = u0.clone();
+                    wavefront_jacobi_iters(&mut u, &f, 1.0, &wf, 8).unwrap();
+                    assert_eq!(u.max_abs_diff(&want), 0.0, "caller {seed}");
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+}
