@@ -5,13 +5,13 @@
 //! the paper's Fig. 4(a) C-vs-asm gap — plus the pipeline-parallel
 //! threaded sweep, then regenerates the modeled five-machine figures.
 
-#![allow(deprecated)] // benches keep covering the shim matrix until removal
-
 use stencilwave::benchkit;
-use stencilwave::coordinator::pipeline::{pipeline_gs_sweep, PipelineConfig};
+use stencilwave::coordinator::pipeline::{pipeline_gs_passes, PipelineConfig};
+use stencilwave::coordinator::pool::WorkerPool;
 use stencilwave::figures;
 use stencilwave::stencil::gauss_seidel::{gs_sweep, GsKernel};
 use stencilwave::stencil::grid::Grid3;
+use stencilwave::stencil::op::ConstLaplace7;
 
 fn main() {
     benchkit::header("Fig. 4(a) host leg — serial GS sweep (real)");
@@ -30,12 +30,13 @@ fn main() {
     }
 
     benchkit::header("Fig. 4(b) host leg — pipeline-parallel GS (real)");
+    let mut pool = WorkerPool::new(0);
     for threads in [1usize, 2, 4] {
         let mut u = Grid3::random(128, 96, 96, 4);
         let updates = u.interior_len() as u64;
         let cfg = PipelineConfig { threads, kernel: GsKernel::Interleaved };
         let s = benchkit::bench_mlups(&format!("gs pipeline threads={threads} 128x96x96"), updates, 1, 5, || {
-            pipeline_gs_sweep(&mut u, &cfg).unwrap();
+            pipeline_gs_passes(&mut pool, &ConstLaplace7, &mut u, &cfg, 1).unwrap();
         });
         benchkit::report(&s);
     }

@@ -4,16 +4,17 @@
 //! sweeps (the threaded baseline of Fig. 9's right axis). Model leg: the
 //! full five-machine Fig. 9 sweep.
 
-#![allow(deprecated)] // benches keep covering the shim matrix until removal
-
 use stencilwave::benchkit;
-use stencilwave::coordinator::pipeline::{pipeline_gs_sweeps, PipelineConfig};
-use stencilwave::coordinator::wavefront_gs::{wavefront_gs, GsWavefrontConfig};
+use stencilwave::coordinator::pipeline::{pipeline_gs_passes, PipelineConfig};
+use stencilwave::coordinator::pool::WorkerPool;
+use stencilwave::coordinator::wavefront_gs::{wavefront_gs_passes, GsWavefrontConfig};
 use stencilwave::figures;
 use stencilwave::stencil::gauss_seidel::GsKernel;
 use stencilwave::stencil::grid::Grid3;
+use stencilwave::stencil::op::ConstLaplace7;
 
 fn main() {
+    let mut pool = WorkerPool::new(0);
     benchkit::header("Fig. 9 host leg — GS wavefront vs pipelined baseline (real)");
     for n in [48usize, 64, 96] {
         for s_count in [2usize, 4] {
@@ -27,7 +28,7 @@ fn main() {
                 3,
                 || {
                     let mut u = u0.clone();
-                    pipeline_gs_sweeps(&mut u, &base, s_count).unwrap();
+                    pipeline_gs_passes(&mut pool, &ConstLaplace7, &mut u, &base, s_count).unwrap();
                     benchkit::black_box(u);
                 },
             );
@@ -44,7 +45,7 @@ fn main() {
                 3,
                 || {
                     let mut u = u0.clone();
-                    wavefront_gs(&mut u, &cfg).unwrap();
+                    wavefront_gs_passes(&mut pool, &ConstLaplace7, &mut u, &cfg, 1).unwrap();
                     benchkit::black_box(u);
                 },
             );

@@ -1,46 +1,102 @@
 //! Fig. 8 bench: Jacobi wavefront temporal blocking.
 //!
 //! Host leg: the real threaded wavefront engine vs the t-sweep baseline,
-//! per-update throughput at several sizes and blocking factors, plus the
-//! blocked (spatial × temporal) variant. Model leg: the full Fig. 8 sweep
-//! over the five-machine testbed.
-
-#![allow(deprecated)] // benches keep covering the shim matrix until removal
+//! per-update throughput at several sizes and blocking factors, the
+//! blocked (spatial × temporal) variant, and the generic-op column
+//! (varcoeff / radius-2 through the same schedule). Model leg: the full
+//! Fig. 8 sweep over the five-machine testbed.
+//!
+//! `STENCILWAVE_BENCH_SMOKE=1` shrinks the run to one small case with two
+//! timed iterations — the CI regression canary for the kernel layer.
 
 use stencilwave::benchkit;
+use stencilwave::coordinator::pool::WorkerPool;
 use stencilwave::coordinator::spatial::{blocked_wavefront_jacobi, SpatialConfig};
-use stencilwave::coordinator::wavefront::{wavefront_jacobi, WavefrontConfig};
+use stencilwave::coordinator::wavefront::{wavefront_jacobi_passes, WavefrontConfig};
 use stencilwave::figures;
 use stencilwave::stencil::grid::Grid3;
 use stencilwave::stencil::jacobi::jacobi_steps;
+use stencilwave::stencil::op::{ConstLaplace7, Laplace13, StencilOp, VarCoeff7};
+
+fn smoke() -> bool {
+    // usual env-flag convention: unset, empty and "0" all mean off
+    std::env::var("STENCILWAVE_BENCH_SMOKE").is_ok_and(|v| !v.is_empty() && v != "0")
+}
+
+fn bench_op<O: StencilOp>(
+    pool: &mut WorkerPool,
+    name: &str,
+    op: &O,
+    n: usize,
+    t: usize,
+    reps: usize,
+) {
+    let f = Grid3::random(n, n, n, 1);
+    let u0 = Grid3::random(n, n, n, 2);
+    // radius-aware: a radius-R op updates the (n-2R)^3 deep interior
+    let interior = n - 2 * op.radius();
+    let updates = (interior * interior * interior * t) as u64;
+    let cfg = WavefrontConfig { threads: t, ..Default::default() };
+    let s = benchkit::bench_mlups(name, updates, 1, reps, || {
+        let mut u = u0.clone();
+        wavefront_jacobi_passes(pool, op, &mut u, &f, 1.0, &cfg, 1).unwrap();
+        benchkit::black_box(u);
+    });
+    benchkit::report(&s);
+}
 
 fn main() {
+    let mut pool = WorkerPool::new(0);
+    let (sizes, ts, reps): (&[usize], &[usize], usize) =
+        if smoke() { (&[20], &[2], 2) } else { (&[48, 64, 96], &[2, 4], 3) };
+
     benchkit::header("Fig. 8 host leg — wavefront vs t separate sweeps (real)");
-    for n in [48usize, 64, 96] {
-        for t in [2usize, 4] {
+    for &n in sizes {
+        for &t in ts {
             let f = Grid3::random(n, n, n, 1);
             let u0 = Grid3::random(n, n, n, 2);
             let updates = (u0.interior_len() * t) as u64;
-            let s = benchkit::bench_mlups(&format!("baseline {t} sweeps {n}^3"), updates, 1, 3, || {
-                benchkit::black_box(jacobi_steps(&u0, &f, 1.0, t));
-            });
+            let s = benchkit::bench_mlups(
+                &format!("baseline {t} sweeps {n}^3"),
+                updates,
+                1,
+                reps,
+                || {
+                    benchkit::black_box(jacobi_steps(&u0, &f, 1.0, t));
+                },
+            );
             benchkit::report(&s);
-            let cfg = WavefrontConfig { threads: t, ..Default::default() };
-            let s = benchkit::bench_mlups(&format!("wavefront t={t} {n}^3"), updates, 1, 3, || {
-                let mut u = u0.clone();
-                wavefront_jacobi(&mut u, &f, 1.0, &cfg).unwrap();
-                benchkit::black_box(u);
-            });
-            benchkit::report(&s);
+            bench_op(&mut pool, &format!("wavefront t={t} {n}^3"), &ConstLaplace7, n, t, reps);
             let sp = SpatialConfig { t, blocks: 4 };
-            let s = benchkit::bench_mlups(&format!("blocked wavefront t={t} B=4 {n}^3"), updates, 1, 3, || {
-                let mut u = u0.clone();
-                blocked_wavefront_jacobi(&mut u, &f, 1.0, &sp).unwrap();
-                benchkit::black_box(u);
-            });
+            let s = benchkit::bench_mlups(
+                &format!("blocked wavefront t={t} B=4 {n}^3"),
+                updates,
+                1,
+                reps,
+                || {
+                    let mut u = u0.clone();
+                    blocked_wavefront_jacobi(&ConstLaplace7, &mut u, &f, 1.0, &sp).unwrap();
+                    benchkit::black_box(u);
+                },
+            );
             benchkit::report(&s);
         }
     }
 
-    println!("\n{}", figures::render("fig8").unwrap());
+    benchkit::header("generic-op column — same schedule, other operators");
+    let n = if smoke() { 20 } else { 64 };
+    bench_op(&mut pool, &format!("laplace7   t=2 {n}^3"), &ConstLaplace7, n, 2, reps);
+    bench_op(
+        &mut pool,
+        &format!("varcoeff   t=2 {n}^3"),
+        &VarCoeff7::default_for((n, n, n)),
+        n,
+        2,
+        reps,
+    );
+    bench_op(&mut pool, &format!("laplace13  t=2 {n}^3"), &Laplace13, n, 2, reps);
+
+    if !smoke() {
+        println!("\n{}", figures::render("fig8").unwrap());
+    }
 }

@@ -7,17 +7,18 @@
 //! suite: EP/Westmere ≈ 2.5× their threaded baseline, EX up to 5×, and
 //! EP ≈ Westmere ≈ EX absolute performance (arithmetic plateau).
 
-#![allow(deprecated)] // benches keep covering the shim matrix until removal
-
 use stencilwave::benchkit;
-use stencilwave::coordinator::wavefront_gs::{wavefront_gs, GsWavefrontConfig};
+use stencilwave::coordinator::pool::WorkerPool;
+use stencilwave::coordinator::wavefront_gs::{wavefront_gs_passes, GsWavefrontConfig};
 use stencilwave::figures;
 use stencilwave::simulator::ecm::{Kernel, KernelClass};
 use stencilwave::simulator::machine::Microarch;
 use stencilwave::stencil::gauss_seidel::GsKernel;
 use stencilwave::stencil::grid::Grid3;
+use stencilwave::stencil::op::ConstLaplace7;
 
 fn main() {
+    let mut pool = WorkerPool::new(0);
     benchkit::header("Fig. 10 host leg — GS wavefront width 1 vs 2 (SMT analog)");
     for n in [48usize, 64] {
         for width in [1usize, 2] {
@@ -35,7 +36,7 @@ fn main() {
                 3,
                 || {
                     let mut u = u0.clone();
-                    wavefront_gs(&mut u, &cfg).unwrap();
+                    wavefront_gs_passes(&mut pool, &ConstLaplace7, &mut u, &cfg, 1).unwrap();
                     benchkit::black_box(u);
                 },
             );

@@ -13,11 +13,13 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use stencilwave::coordinator::barrier::AnyBarrier;
-use stencilwave::coordinator::wavefront::{wavefront_jacobi, SyncMode, WavefrontConfig};
+use stencilwave::coordinator::pool::WorkerPool;
+use stencilwave::coordinator::wavefront::{wavefront_jacobi_passes, SyncMode, WavefrontConfig};
 use stencilwave::figures;
 use stencilwave::metrics::mlups;
 use stencilwave::simulator::perfmodel::BarrierKind;
 use stencilwave::stencil::grid::Grid3;
+use stencilwave::stencil::op::ConstLaplace7;
 
 /// Measure ns/barrier for `threads` participants over `rounds` rounds.
 fn measure(kind: BarrierKind, threads: usize, rounds: usize) -> f64 {
@@ -60,6 +62,7 @@ fn main() -> stencilwave::Result<()> {
         u.copy_from(&want);
         u
     };
+    let mut pool = WorkerPool::new(4);
     for (label, barrier, sync) in [
         ("spin barrier", BarrierKind::Spin, SyncMode::Barrier),
         ("tree barrier", BarrierKind::Tree, SyncMode::Barrier),
@@ -68,7 +71,7 @@ fn main() -> stencilwave::Result<()> {
         let mut u = Grid3::random(32, 32, 32, 6);
         let cfg = WavefrontConfig { threads: 4, barrier, sync };
         let t0 = Instant::now();
-        wavefront_jacobi(&mut u, &f, 1.0, &cfg)?;
+        wavefront_jacobi_passes(&mut pool, &ConstLaplace7, &mut u, &f, 1.0, &cfg, 1)?;
         let dt = t0.elapsed();
         let updates = (u.interior_len() * 4) as u64;
         anyhow::ensure!(u.max_abs_diff(&reference) == 0.0, "{label}: result differs");

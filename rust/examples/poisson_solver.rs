@@ -12,13 +12,15 @@
 //! the two solutions agree to fp round-off at every outer iteration.
 //! Results are recorded in EXPERIMENTS.md §End-to-end.
 //!
-//! Run with:
-//!   make artifacts && cargo run --release --example poisson_solver
+//! Run with (needs the vendored xla-rs runtime; see rust/Cargo.toml):
+//!   make artifacts && cargo run --release --features xla --example poisson_solver
 
-use stencilwave::coordinator::wavefront::{wavefront_jacobi_iters, WavefrontConfig};
+use stencilwave::coordinator::pool::WorkerPool;
+use stencilwave::coordinator::wavefront::{wavefront_jacobi_passes, WavefrontConfig};
 use stencilwave::metrics::{mlups, timed};
 use stencilwave::runtime::{engine, Manifest, Runtime};
 use stencilwave::stencil::grid::Grid3;
+use stencilwave::stencil::op::ConstLaplace7;
 use stencilwave::stencil::residual::poisson_residual_norm;
 
 const N: usize = 40;
@@ -39,14 +41,18 @@ fn main() -> stencilwave::Result<()> {
     println!("== poisson_solver: {N}^3, -Δu = f, wavefront t={T}, {INNER} updates/outer ==");
     println!("initial residual: {r0:.6e}   target: {:.6e}\n", r0 / TARGET_DROP);
 
-    // ---- leg A: rust wavefront engine
+    // ---- leg A: rust wavefront engine (one persistent team)
+    // each pass performs T updates, so the inner count must divide evenly
+    // (the deleted `wavefront_jacobi_iters` shim used to enforce this)
+    anyhow::ensure!(INNER % T == 0, "INNER ({INNER}) must be a multiple of T ({T})");
     let cfg = WavefrontConfig { threads: T, ..Default::default() };
+    let mut pool = WorkerPool::new(T);
     let mut u = u0.clone();
     let mut outer = 0;
     let mut total_updates = 0u64;
     let (_, dt_rust) = timed(|| -> stencilwave::Result<()> {
         while outer < MAX_OUTER {
-            wavefront_jacobi_iters(&mut u, &f, h2, &cfg, INNER)?;
+            wavefront_jacobi_passes(&mut pool, &ConstLaplace7, &mut u, &f, h2, &cfg, INNER / T)?;
             total_updates += (u.interior_len() * INNER) as u64;
             outer += 1;
             let r = poisson_residual_norm(&u, &f, h2);

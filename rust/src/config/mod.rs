@@ -15,6 +15,7 @@ use crate::simulator::machine::MachineSpec;
 use crate::simulator::memory::StoreMode;
 use crate::simulator::perfmodel::BarrierKind;
 use crate::stencil::gauss_seidel::GsKernel;
+use crate::stencil::op::OpKind;
 use crate::Result;
 
 /// Which algorithm family a run exercises.
@@ -34,6 +35,17 @@ pub enum Scheme {
 }
 
 impl Scheme {
+    /// Every registered scheme (mirrors [`OpKind::ALL`]) — the single
+    /// list the tests and sweeps iterate, so a new scheme cannot be
+    /// silently missing from coverage.
+    pub const ALL: [Scheme; 5] = [
+        Scheme::JacobiBaseline,
+        Scheme::JacobiWavefront,
+        Scheme::JacobiMultiGroup,
+        Scheme::GsBaseline,
+        Scheme::GsWavefront,
+    ];
+
     pub fn is_gs(self) -> bool {
         matches!(self, Scheme::GsBaseline | Scheme::GsWavefront)
     }
@@ -64,6 +76,8 @@ impl Scheme {
 #[derive(Clone, Debug)]
 pub struct RunConfig {
     pub scheme: Scheme,
+    /// Stencil operator the scheme applies (`op` config key / `--op`).
+    pub op: OpKind,
     /// Problem size (nz, ny, nx).
     pub size: (usize, usize, usize),
     /// Temporal blocking factor t (threads per group).
@@ -87,6 +101,7 @@ impl Default for RunConfig {
     fn default() -> Self {
         Self {
             scheme: Scheme::JacobiWavefront,
+            op: OpKind::ConstLaplace7,
             size: (64, 64, 64),
             t: 4,
             groups: 1,
@@ -154,6 +169,10 @@ impl RunConfig {
             let value = value.trim().trim_matches('"');
             match key {
                 "scheme" => cfg.scheme = Scheme::parse(value)?,
+                "op" => {
+                    cfg.op = OpKind::parse(value)
+                        .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?
+                }
                 "size" => {
                     let nums: Vec<usize> = value
                         .trim_start_matches('[')
@@ -210,9 +229,10 @@ impl RunConfig {
             BarrierKind::Pthread => "pthread",
         };
         let mut s = format!(
-            "scheme = \"{scheme}\"\nsize = [{}, {}, {}]\nt = {}\ngroups = {}\niters = {}\n\
-             smt = {}\noptimized_kernel = {}\nnt_stores = {}\nbarrier = \"{barrier}\"\n\
+            "scheme = \"{scheme}\"\nop = \"{}\"\nsize = [{}, {}, {}]\nt = {}\ngroups = {}\n\
+             iters = {}\nsmt = {}\noptimized_kernel = {}\nnt_stores = {}\nbarrier = \"{barrier}\"\n\
              pin = \"{}\"\n",
+            self.op.as_str(),
             self.size.0,
             self.size.1,
             self.size.2,
@@ -230,10 +250,17 @@ impl RunConfig {
         s
     }
 
-    /// Validate internal consistency.
+    /// Validate internal consistency (op-radius aware: minimum grid
+    /// extent and multi-group block width scale with the halo).
     pub fn validate(&self) -> Result<()> {
         let (nz, ny, nx) = self.size;
-        anyhow::ensure!(nz >= 3 && ny >= 3 && nx >= 3, "grid too small: {:?}", self.size);
+        let r = self.op.radius();
+        let min = 2 * r + 1;
+        anyhow::ensure!(
+            nz >= min && ny >= min && nx >= min,
+            "grid too small for a radius-{r} op: {:?} (need >= {min} per dim)",
+            self.size
+        );
         anyhow::ensure!(self.t >= 1, "blocking factor must be >= 1");
         anyhow::ensure!(self.groups >= 1, "need at least one thread group");
         if matches!(self.scheme, Scheme::JacobiWavefront | Scheme::JacobiMultiGroup) {
@@ -247,10 +274,11 @@ impl RunConfig {
         }
         if matches!(self.scheme, Scheme::JacobiMultiGroup) && self.groups > 1 {
             anyhow::ensure!(
-                ny - 2 >= 2 * self.groups,
-                "multi-group blocking needs >= 2 interior lines per group \
+                ny - 2 * r >= 2 * r * self.groups,
+                "multi-group blocking needs >= {} interior lines per group for a radius-{r} op \
                  (ny = {ny} gives {} for {} groups)",
-                ny - 2,
+                2 * r,
+                ny - 2 * r,
                 self.groups
             );
         }
@@ -269,6 +297,7 @@ mod tests {
     fn text_roundtrip() {
         let cfg = RunConfig {
             scheme: Scheme::GsWavefront,
+            op: OpKind::VarCoeff7,
             size: (40, 50, 60),
             t: 6,
             groups: 2,
@@ -283,6 +312,7 @@ mod tests {
         let back = RunConfig::from_text(&cfg.to_text()).unwrap();
         assert_eq!(back.size, cfg.size);
         assert_eq!(back.scheme, cfg.scheme);
+        assert_eq!(back.op, OpKind::VarCoeff7);
         assert_eq!(back.t, 6);
         assert!(back.smt);
         assert!(!back.optimized_kernel);
@@ -290,6 +320,36 @@ mod tests {
         assert_eq!(back.machine.as_deref(), Some("Westmere"));
         assert_eq!(back.pin, PinPolicy::Scatter);
         back.validate().unwrap();
+    }
+
+    #[test]
+    fn op_key_roundtrips_and_gates_validation() {
+        for op in OpKind::ALL {
+            let cfg = RunConfig { op, ..Default::default() };
+            let text = cfg.to_text();
+            assert!(text.contains(&format!("op = \"{}\"", op.as_str())), "{text}");
+            assert_eq!(RunConfig::from_text(&text).unwrap().op, op);
+        }
+        // unparsed configs default to the paper's operator
+        let cfg = RunConfig::from_text("scheme = \"gs_baseline\"\n").unwrap();
+        assert_eq!(cfg.op, OpKind::ConstLaplace7);
+        // bad op names carry the line number
+        let err = RunConfig::from_text("op = \"biharmonic\"\n").unwrap_err().to_string();
+        assert!(err.contains("line 1") && err.contains("biharmonic"), "{err}");
+        // a radius-2 op tightens the minimum grid and block width
+        let mut cfg = RunConfig {
+            op: OpKind::Laplace13,
+            size: (4, 4, 4),
+            ..Default::default()
+        };
+        assert!(cfg.validate().is_err(), "4^3 has no radius-2 interior");
+        cfg.size = (16, 16, 16);
+        cfg.validate().unwrap();
+        cfg.scheme = Scheme::JacobiMultiGroup;
+        cfg.groups = 4; // 12 interior lines < 4 * 4
+        assert!(cfg.validate().is_err());
+        cfg.groups = 3; // 12 interior lines == 4 * 3: minimum width
+        cfg.validate().unwrap();
     }
 
     #[test]

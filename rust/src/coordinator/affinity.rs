@@ -14,8 +14,10 @@
 //!   should own its own OLC.
 //!
 //! The cpu map is computed from a [`MachineSpec`]'s cache-group topology
-//! when the run names a Tab. 1 machine, and from the host's logical cpu
-//! count otherwise (one flat group). The backend is a raw
+//! when the run names a Tab. 1 machine, and from the *host's* real cache
+//! groups otherwise (parsed from
+//! `/sys/devices/system/cpu/cpu0/cache/index*/shared_cpu_list` on Linux;
+//! one flat group when sysfs is unreadable). The backend is a raw
 //! `sched_setaffinity` syscall on Linux (x86_64 / aarch64) — the build
 //! stays dependency-free — and a documented no-op everywhere else:
 //! [`pin_current_thread`] returns `false` and workers simply run
@@ -86,12 +88,118 @@ impl Topology {
         Self { cpus: m.cores.max(1), group_size: m.cache_group_cores().max(1) }
     }
 
-    /// Host fallback: every logical cpu in one flat group (compact and
-    /// scatter then coincide).
+    /// Topology of the machine this process runs on.
+    ///
+    /// On Linux the real cache groups are read from
+    /// `/sys/devices/system/cpu/cpu0/cache/index*/shared_cpu_list` (the
+    /// deepest unified cache wins — the host analog of Tab. 1's "cache
+    /// group"), so `compact`/`scatter` place workers against the
+    /// *host's* OLC sharing instead of a model's. Only groups that form
+    /// one contiguous cpu-id block are honored — the cpu map indexes
+    /// groups as `[g·size, (g+1)·size)`, so a sibling-split list like
+    /// `0-15,32-47` would silently straddle two real caches. When sysfs
+    /// is unreadable (non-Linux, sandboxes) or the layout is
+    /// non-contiguous, every logical cpu falls into one flat group
+    /// (compact and scatter then coincide); runs that name a Tab. 1
+    /// machine keep using [`Topology::of_machine`].
     pub fn host() -> Self {
         let cpus = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-        Self { cpus, group_size: cpus }
+        match sysfs_cache_group() {
+            Some(group) if group >= 1 => Self { cpus, group_size: group.min(cpus) },
+            _ => Self { cpus, group_size: cpus },
+        }
     }
+}
+
+/// `(count, lowest cpu, highest cpu)` of a sysfs cpu-list string like
+/// `"0-3,8-11"` (`None` on malformed input — callers fall back to the
+/// flat group).
+fn parse_cpu_list_span(s: &str) -> Option<(usize, usize, usize)> {
+    let s = s.trim();
+    if s.is_empty() {
+        return None;
+    }
+    let mut count = 0usize;
+    let mut min = usize::MAX;
+    let mut max = 0usize;
+    for part in s.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            return None;
+        }
+        let (lo, hi) = match part.split_once('-') {
+            Some((lo, hi)) => (lo.trim().parse().ok()?, hi.trim().parse().ok()?),
+            None => {
+                let v: usize = part.trim().parse().ok()?;
+                (v, v)
+            }
+        };
+        if hi < lo {
+            return None;
+        }
+        count += hi - lo + 1;
+        min = min.min(lo);
+        max = max.max(hi);
+    }
+    Some((count, min, max))
+}
+
+/// The group size of a cpu list *if* the cpu map's contiguous-block
+/// assumption holds for it (one unbroken id range). Sibling-split
+/// layouts like `"0-15,32-47"` return `None` — [`cpu_for`] would place
+/// teams across two real cache groups while claiming one, so those
+/// hosts fall back to the flat group (compact == scatter, harmless).
+///
+/// Known limitation: only *cpu0's* group is inspected (sysfs exposes one
+/// directory per cpu; enumerating all of them is future work), so the
+/// check also assumes every group has cpu0's size and sits at a
+/// `group_size`-aligned offset. Hosts with heterogeneous or offset
+/// groups (offline-cpu holes, asymmetric clusters) can still be
+/// mis-pinned; pinning remains advisory and never affects correctness.
+fn contiguous_group_size(s: &str) -> Option<usize> {
+    let (count, lo, hi) = parse_cpu_list_span(s)?;
+    (hi - lo + 1 == count).then_some(count)
+}
+
+/// Size of cpu0's deepest shared cache group per sysfs, `None` when the
+/// hierarchy is unreadable.
+fn sysfs_cache_group() -> Option<usize> {
+    let base = std::path::Path::new("/sys/devices/system/cpu/cpu0/cache");
+    let mut best: Option<(usize, usize)> = None; // (level, group size)
+    for entry in std::fs::read_dir(base).ok()? {
+        let Ok(entry) = entry else { continue };
+        let path = entry.path();
+        let is_index = path
+            .file_name()
+            .and_then(|n| n.to_str())
+            .map(|n| n.starts_with("index"))
+            .unwrap_or(false);
+        if !is_index {
+            continue;
+        }
+        // instruction caches are not sharing domains the schemes care about
+        if let Ok(ty) = std::fs::read_to_string(path.join("type")) {
+            if ty.trim() == "Instruction" {
+                continue;
+            }
+        }
+        let Some(level) = std::fs::read_to_string(path.join("level"))
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+        else {
+            continue;
+        };
+        let Some(group) = std::fs::read_to_string(path.join("shared_cpu_list"))
+            .ok()
+            .and_then(|s| contiguous_group_size(&s))
+        else {
+            continue;
+        };
+        if best.map(|(l, _)| level > l).unwrap_or(true) {
+            best = Some((level, group));
+        }
+    }
+    best.map(|(_, g)| g)
 }
 
 /// The cpu worker `id` is placed on under `policy` (pure map, unit
@@ -314,6 +422,48 @@ mod tests {
             assert!(cpu_for(PinPolicy::Scatter, i, topo) < 4);
             assert!(cpu_for(PinPolicy::Compact, i, topo) < 4);
         }
+    }
+
+    #[test]
+    fn cpu_list_parser_handles_sysfs_shapes() {
+        assert_eq!(parse_cpu_list_span("0-3"), Some((4, 0, 3)));
+        assert_eq!(parse_cpu_list_span("0-3,8-11"), Some((8, 0, 11)));
+        assert_eq!(parse_cpu_list_span("5"), Some((1, 5, 5)));
+        assert_eq!(parse_cpu_list_span("0,2,4,6"), Some((4, 0, 6)));
+        assert_eq!(parse_cpu_list_span("0-0"), Some((1, 0, 0)));
+        assert_eq!(parse_cpu_list_span(" 0-7 \n"), Some((8, 0, 7)));
+        assert_eq!(parse_cpu_list_span(""), None);
+        assert_eq!(parse_cpu_list_span("3-1"), None);
+        assert_eq!(parse_cpu_list_span("a-b"), None);
+        assert_eq!(parse_cpu_list_span("1,,2"), None);
+    }
+
+    #[test]
+    fn only_contiguous_cpu_lists_become_cache_groups() {
+        // the cpu map assumes groups are contiguous id blocks; any other
+        // layout (SMT sibling splits, offline holes) must fall back flat
+        assert_eq!(contiguous_group_size("0-7"), Some(8));
+        assert_eq!(contiguous_group_size("4-7"), Some(4));
+        assert_eq!(contiguous_group_size("0,1,2,3"), Some(4));
+        assert_eq!(contiguous_group_size("5"), Some(1));
+        assert_eq!(contiguous_group_size("0-15,32-47"), None);
+        assert_eq!(contiguous_group_size("0,32"), None);
+        assert_eq!(contiguous_group_size("0,2,4,6"), None);
+        assert_eq!(contiguous_group_size(""), None);
+    }
+
+    #[test]
+    fn host_topology_is_well_formed() {
+        // whatever the backend (sysfs or flat fallback), the invariants
+        // the cpu map relies on must hold
+        let t = Topology::host();
+        assert!(t.cpus >= 1);
+        assert!(t.group_size >= 1 && t.group_size <= t.cpus);
+        // the scatter map stays a permutation under the host topology
+        let cpus: Vec<usize> = (0..t.cpus).map(|i| cpu_for(PinPolicy::Scatter, i, t)).collect();
+        let mut sorted = cpus.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..t.cpus).collect::<Vec<_>>());
     }
 
     #[test]

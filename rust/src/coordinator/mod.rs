@@ -27,9 +27,14 @@
 //!   wavefront-sweep their y-blocks concurrently, handing the odd-level
 //!   boundary arrays to the next group under round-lag flow control.
 //!
-//! Every scheme is *numerically exact*: tests assert bit-identical grids
-//! against the serial reference sweeps, for all thread counts and
-//! blocking factors. Temporal blocking changes traffic, never numerics.
+//! Every scheme is generic over a [`StencilOp`](crate::stencil::op::StencilOp)
+//! — the kernel layer supplies the halo radius the schedules honor in
+//! wavefront lag (`R+1` planes), temporary-ring depth (`2R+2` slots),
+//! pipeline spacing and boundary-array width (`2R` lines) — and every
+//! scheme is *numerically exact*: tests assert bit-identical grids
+//! against the serial reference sweeps, for all thread counts, blocking
+//! factors, ops and radii. Temporal blocking changes traffic, never
+//! numerics.
 //!
 //! ## The session API
 //!
@@ -51,20 +56,13 @@
 //! solver.run(&mut u, 8).unwrap();
 //! ```
 //!
-//! ### Migration from the free-function matrix (deprecated shims)
-//!
-//! | old free function | session equivalent |
-//! |---|---|
-//! | `wavefront_jacobi(&mut u, &f, h2, &cfg)` | `Solver` for `Scheme::JacobiWavefront`, `solver.step(&mut u)` |
-//! | `wavefront_jacobi_iters(&mut u, &f, h2, &cfg, n)` | `solver.run(&mut u, n)` |
-//! | `multigroup_blocked_jacobi[_iters]` | `Scheme::JacobiMultiGroup` session |
-//! | `pipeline_gs_sweep[s]` | `Scheme::GsBaseline` session |
-//! | `wavefront_gs[_iters]` | `Scheme::GsWavefront` session |
-//! | any `*_on(pool, ...)` variant | `Solver::builder(..).pool(pool)` |
-//!
-//! The shims remain for one release; they now dispatch on a per-thread
-//! convenience pool ([`pool::with_local`]), so concurrent callers no
-//! longer serialize on a process-wide mutex.
+//! The 0.2.0 free-function shim matrix (`wavefront_jacobi`,
+//! `pipeline_gs_sweep`, …; 16 functions plus `pool::with_global`) was
+//! removed in 0.3.0 after its one-release deprecation window — see the
+//! migration table in the README. Pool-level entry points
+//! (`wavefront_jacobi_passes`, `pipeline_gs_passes`,
+//! `wavefront_gs_iters_passes`, `multigroup_passes`) remain public for
+//! callers that drive an explicit [`pool::WorkerPool`].
 
 pub mod affinity;
 pub mod barrier;

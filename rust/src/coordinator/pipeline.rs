@@ -1,27 +1,31 @@
-//! Pipeline-parallel lexicographic Gauss-Seidel (paper Sec. 3, Fig. 5a).
+//! Pipeline-parallel lexicographic Gauss-Seidel (paper Sec. 3, Fig. 5a),
+//! generic over the [`StencilOp`] kernel layer.
 //!
 //! A straightforward domain decomposition cannot parallelize GS — the
-//! update at `(k, j, i)` needs *new* values at `(k-1, j, i)`, `(k, j-1, i)`
-//! and `(k, j, i-1)`. Instead of switching to red-black ordering, the
-//! paper pipelines the *same* lexicographic algorithm: workers partition
-//! the y dimension into contiguous chunks, and worker `p` starts plane `k`
-//! only after worker `p-1` has finished plane `k` — so worker p's first
-//! line reads worker p-1's freshly updated last line, and worker p+1's
-//! chunk is still untouched (old values) when worker p reads across its
-//! upper edge. Plane updates of the workers are thereby "shifted in time"
-//! exactly as Fig. 5a shows, and the result is **bit-identical** to the
-//! serial sweep.
+//! update at a site needs *new* values at every minus-offset neighbor.
+//! Instead of switching to red-black ordering, the paper pipelines the
+//! *same* lexicographic algorithm: workers partition the y dimension into
+//! contiguous chunks, and worker `p` starts plane `k` only after worker
+//! `p-1` has finished plane `k` — so worker p's first lines read worker
+//! p-1's freshly updated last lines (up to `R` of them for halo radius
+//! `R`), and worker p+1's chunk is still untouched (old values) when
+//! worker p reads across its upper edge. Plane updates of the workers are
+//! thereby "shifted in time" exactly as Fig. 5a shows, and the result is
+//! **bit-identical** to the serial sweep — at any radius: the wait
+//! condition ("previous worker finished this plane") already freezes the
+//! full `R`-line halo on both chunk edges.
 //!
 //! The pass is a [`Schedule`] dispatched on the persistent
 //! [`WorkerPool`]; multi-sweep runs reuse one team and one schedule.
 
 use std::marker::PhantomData;
 
-use crate::stencil::gauss_seidel::{gs_plane_line_raw, gs_sweep, GsKernel};
+use crate::stencil::gauss_seidel::GsKernel;
 use crate::stencil::grid::Grid3;
+use crate::stencil::op::{op_gs_line_raw, op_gs_sweep, StencilOp};
 use crate::Result;
 
-use super::pool::{self, WorkerPool};
+use super::pool::WorkerPool;
 use super::schedule::{Progress, Schedule};
 
 /// Configuration of a pipeline-parallel GS run.
@@ -51,21 +55,21 @@ impl PipelineConfig {
     }
 }
 
-/// Split `1..ny-1` interior lines into `p` contiguous chunks.
+/// Split the interior lines `r..ny-r` into `p` contiguous chunks.
 ///
 /// Returns `(start, end)` half-open ranges; empty chunks allowed when
-/// `p > ny - 2` (those workers simply keep pace in the pipeline), and an
-/// empty vector for `p == 0` (rejected earlier by
-/// [`PipelineConfig::validate`]).
-pub fn chunk_lines(ny: usize, p: usize) -> Vec<(usize, usize)> {
+/// `p` exceeds the interior line count (those workers simply keep pace
+/// in the pipeline), and an empty vector for `p == 0` (rejected earlier
+/// by [`PipelineConfig::validate`]).
+pub fn chunk_lines_r(ny: usize, p: usize, r: usize) -> Vec<(usize, usize)> {
     if p == 0 {
         return Vec::new();
     }
-    let interior = ny.saturating_sub(2);
+    let interior = ny.saturating_sub(2 * r);
     let base = interior / p;
     let extra = interior % p;
     let mut out = Vec::with_capacity(p);
-    let mut start = 1;
+    let mut start = r;
     for i in 0..p {
         let len = base + usize::from(i < extra);
         out.push((start, start + len));
@@ -74,12 +78,20 @@ pub fn chunk_lines(ny: usize, p: usize) -> Vec<(usize, usize)> {
     out
 }
 
-/// One pipelined GS sweep as a [`Schedule`]: worker `p` owns y-chunk `p`.
-pub struct PipelineGsSchedule<'g> {
+/// [`chunk_lines_r`] for the paper's radius-1 stencils.
+pub fn chunk_lines(ny: usize, p: usize) -> Vec<(usize, usize)> {
+    chunk_lines_r(ny, p, 1)
+}
+
+/// One pipelined GS sweep of `op` as a [`Schedule`]: worker `p` owns
+/// y-chunk `p`.
+pub struct PipelineGsSchedule<'g, O: StencilOp> {
+    op: &'g O,
     base: *mut f64,
     nz: usize,
     ny: usize,
     nx: usize,
+    r: usize,
     chunks: Vec<(usize, usize)>,
     kernel: GsKernel,
     _borrow: PhantomData<&'g mut f64>,
@@ -87,48 +99,60 @@ pub struct PipelineGsSchedule<'g> {
 
 // SAFETY: chunks are disjoint line ranges and the progress protocol
 // freezes every cross-chunk read (see `worker`).
-unsafe impl Send for PipelineGsSchedule<'_> {}
-unsafe impl Sync for PipelineGsSchedule<'_> {}
+unsafe impl<O: StencilOp> Send for PipelineGsSchedule<'_, O> {}
+unsafe impl<O: StencilOp> Sync for PipelineGsSchedule<'_, O> {}
 
-impl<'g> PipelineGsSchedule<'g> {
+impl<'g, O: StencilOp> PipelineGsSchedule<'g, O> {
     /// Build one sweep over `u`.
-    pub fn new(u: &'g mut Grid3, cfg: &PipelineConfig) -> Result<Self> {
+    pub fn new(op: &'g O, u: &'g mut Grid3, cfg: &PipelineConfig) -> Result<Self> {
         cfg.validate()?;
+        let r = op.radius();
+        anyhow::ensure!(
+            r >= 1 && r <= crate::stencil::op::MAX_RADIUS,
+            "unsupported halo radius {r}"
+        );
+        op.validate_domain(u.shape())?;
         let (nz, ny, nx) = u.shape();
-        anyhow::ensure!(nz >= 3 && ny >= 3 && nx >= 3, "grid too small for a pipelined sweep");
+        anyhow::ensure!(
+            nz >= 2 * r + 1 && ny >= 2 * r + 1 && nx >= 2 * r + 1,
+            "grid too small for a radius-{r} pipelined sweep"
+        );
         Ok(Self {
+            op,
             base: u.data_mut().as_mut_ptr(),
             nz,
             ny,
             nx,
-            chunks: chunk_lines(ny, cfg.threads),
+            r,
+            chunks: chunk_lines_r(ny, cfg.threads, r),
             kernel: cfg.kernel,
             _borrow: PhantomData,
         })
     }
 }
 
-impl Schedule for PipelineGsSchedule<'_> {
+impl<O: StencilOp> Schedule for PipelineGsSchedule<'_, O> {
     fn workers(&self) -> usize {
         self.chunks.len()
     }
 
     fn worker(&self, tid: usize, progress: &Progress) {
         let (j0, j1) = self.chunks[tid];
-        for k in 1..self.nz - 1 {
+        let r = self.r;
+        for k in r..self.nz - r {
             if tid > 0 {
                 // worker p-1 must have completed this plane so our first
-                // line sees its new last line, and it stopped reading
+                // lines see its new last lines, and it stopped reading
                 // across our lower edge.
                 progress.wait_min(tid - 1, k as isize);
             }
             // SAFETY: chunks are disjoint line ranges; the progress
-            // protocol guarantees the only cross-chunk reads (j0-1 from
-            // below = new, j1 from above = old) are race-free: below has
-            // finished plane k, above has not started it.
+            // protocol guarantees the only cross-chunk reads (the R
+            // lines below = new, the R lines above = old) are race-free:
+            // below has finished plane k, above has not started it.
             unsafe {
                 for j in j0..j1 {
-                    gs_plane_line_raw(self.base, self.ny, self.nx, k, j, self.kernel);
+                    op_gs_line_raw(self.op, self.base, self.ny, self.nx, k, j, self.kernel);
                 }
             }
             progress.publish(tid, k as isize);
@@ -136,74 +160,54 @@ impl Schedule for PipelineGsSchedule<'_> {
     }
 }
 
-/// Run `passes` pipelined sweeps on `pool` with one schedule.
-pub(crate) fn pipeline_gs_passes(
+/// Run `passes` pipelined sweeps of `op` on `pool` with one schedule —
+/// the pool-level entry point the [`SchemeRunner`] registry, tests and
+/// benches drive.
+///
+/// [`SchemeRunner`]: super::runner::SchemeRunner
+pub fn pipeline_gs_passes<O: StencilOp>(
     pool: &mut WorkerPool,
+    op: &O,
     u: &mut Grid3,
     cfg: &PipelineConfig,
     passes: usize,
 ) -> Result<()> {
     cfg.validate()?;
+    let r = op.radius();
     let (nz, ny, nx) = u.shape();
-    if nz < 3 || ny < 3 || nx < 3 || passes == 0 {
+    if nz < 2 * r + 1 || ny < 2 * r + 1 || nx < 2 * r + 1 || passes == 0 {
         return Ok(());
     }
     if cfg.threads == 1 {
         for _ in 0..passes {
-            gs_sweep(u, cfg.kernel);
+            op_gs_sweep(op, u, cfg.kernel);
         }
         return Ok(());
     }
-    let schedule = PipelineGsSchedule::new(u, cfg)?;
+    let schedule = PipelineGsSchedule::new(op, u, cfg)?;
     for _ in 0..passes {
         pool.run(&schedule)?;
     }
     Ok(())
 }
 
-/// One in-place lexicographic GS sweep, pipeline-parallel over y-chunks.
-///
-/// Bit-identical to [`gs_sweep`] for every thread count.
-#[deprecated(since = "0.2.0", note = "use a `coordinator::solver::Solver` session")]
-pub fn pipeline_gs_sweep(u: &mut Grid3, cfg: &PipelineConfig) -> Result<()> {
-    pool::with_local(|p| pipeline_gs_passes(p, u, cfg, 1))
-}
-
-/// [`pipeline_gs_sweep`] on a caller-owned pool.
-#[deprecated(since = "0.2.0", note = "use a `coordinator::solver::Solver` session")]
-pub fn pipeline_gs_sweep_on(pool: &mut WorkerPool, u: &mut Grid3, cfg: &PipelineConfig) -> Result<()> {
-    pipeline_gs_passes(pool, u, cfg, 1)
-}
-
-/// `n` pipelined sweeps on one persistent team.
-#[deprecated(since = "0.2.0", note = "use a `coordinator::solver::Solver` session")]
-pub fn pipeline_gs_sweeps(u: &mut Grid3, cfg: &PipelineConfig, n: usize) -> Result<()> {
-    pool::with_local(|p| pipeline_gs_passes(p, u, cfg, n))
-}
-
-/// [`pipeline_gs_sweeps`] on a caller-owned pool.
-#[deprecated(since = "0.2.0", note = "use a `coordinator::solver::Solver` session")]
-pub fn pipeline_gs_sweeps_on(
-    pool: &mut WorkerPool,
-    u: &mut Grid3,
-    cfg: &PipelineConfig,
-    n: usize,
-) -> Result<()> {
-    pipeline_gs_passes(pool, u, cfg, n)
-}
-
 #[cfg(test)]
 mod tests {
-    #![allow(deprecated)] // the shim matrix stays covered until removal
-
     use super::*;
+    use crate::stencil::gauss_seidel::gs_sweep;
+    use crate::stencil::op::{op_gs_sweeps, ConstLaplace7, Laplace13};
+
+    fn run_pipeline<O: StencilOp>(op: &O, u: &mut Grid3, cfg: &PipelineConfig, n: usize) -> Result<()> {
+        let mut pool = WorkerPool::new(0);
+        pipeline_gs_passes(&mut pool, op, u, cfg, n)
+    }
 
     fn check(nz: usize, ny: usize, nx: usize, threads: usize) {
         let mut u = Grid3::random(nz, ny, nx, 31);
         let mut want = u.clone();
         gs_sweep(&mut want, GsKernel::Interleaved);
         let cfg = PipelineConfig { threads, kernel: GsKernel::Interleaved };
-        pipeline_gs_sweep(&mut u, &cfg).unwrap();
+        run_pipeline(&ConstLaplace7, &mut u, &cfg, 1).unwrap();
         assert_eq!(u.max_abs_diff(&want), 0.0, "{nz}x{ny}x{nx} p={threads}");
     }
 
@@ -222,6 +226,18 @@ mod tests {
     }
 
     #[test]
+    fn radius2_pipeline_matches_serial() {
+        for threads in [1usize, 2, 3, 5] {
+            let mut u = Grid3::random(8, 12, 9, 41);
+            let mut want = u.clone();
+            op_gs_sweeps(&Laplace13, &mut want, 1, GsKernel::Interleaved);
+            let cfg = PipelineConfig { threads, kernel: GsKernel::Interleaved };
+            run_pipeline(&Laplace13, &mut u, &cfg, 1).unwrap();
+            assert_eq!(u.max_abs_diff(&want), 0.0, "radius-2 p={threads}");
+        }
+    }
+
+    #[test]
     fn chunks_partition_interior() {
         for (ny, p) in [(10, 3), (20, 6), (5, 8), (3, 2)] {
             let ch = chunk_lines(ny, p);
@@ -232,6 +248,10 @@ mod tests {
                 assert_eq!(w[0].1, w[1].0, "contiguous");
             }
         }
+        // radius-2 chunks cover r..ny-r
+        let ch = chunk_lines_r(11, 3, 2);
+        assert_eq!(ch[0].0, 2);
+        assert_eq!(ch.last().unwrap().1, 9);
     }
 
     #[test]
@@ -240,7 +260,7 @@ mod tests {
         let mut u = Grid3::random(6, 8, 7, 1);
         let cfg = PipelineConfig { threads: 0, kernel: GsKernel::Interleaved };
         assert!(cfg.validate().is_err());
-        assert!(pipeline_gs_sweep(&mut u, &cfg).is_err());
+        assert!(run_pipeline(&ConstLaplace7, &mut u, &cfg, 1).is_err());
     }
 
     #[test]
@@ -250,7 +270,7 @@ mod tests {
         for _ in 0..3 {
             gs_sweep(&mut want, GsKernel::Interleaved);
         }
-        pipeline_gs_sweeps(&mut u, &PipelineConfig { threads: 3, ..Default::default() }, 3)
+        run_pipeline(&ConstLaplace7, &mut u, &PipelineConfig { threads: 3, ..Default::default() }, 3)
             .unwrap();
         assert_eq!(u.max_abs_diff(&want), 0.0);
     }
@@ -260,7 +280,7 @@ mod tests {
         let mut u = Grid3::random(6, 8, 7, 3);
         let mut want = u.clone();
         gs_sweep(&mut want, GsKernel::Naive);
-        pipeline_gs_sweep(&mut u, &PipelineConfig { threads: 3, kernel: GsKernel::Naive })
+        run_pipeline(&ConstLaplace7, &mut u, &PipelineConfig { threads: 3, kernel: GsKernel::Naive }, 1)
             .unwrap();
         assert_eq!(u.max_abs_diff(&want), 0.0);
     }

@@ -18,7 +18,7 @@
 
 use std::cell::RefCell;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 use crate::Result;
@@ -292,44 +292,25 @@ impl Drop for WorkerPool {
     }
 }
 
-static GLOBAL: OnceLock<Mutex<WorkerPool>> = OnceLock::new();
-
-/// Run `f` with exclusive access to the process-wide shared pool.
-///
-/// Deprecated: one mutexed team serializes every caller — library users
-/// invoking the convenience entry points from several threads used to
-/// queue on this lock (ROADMAP item). The convenience entry points now
-/// dispatch on [`with_local`] (a per-thread team, no cross-thread
-/// serialization); sessions that should own their team explicitly use a
-/// [`Solver`](super::solver::Solver).
-#[deprecated(since = "0.2.0", note = "use `with_local` or a `Solver` session")]
-pub fn with_global<R>(f: impl FnOnce(&mut WorkerPool) -> R) -> R {
-    let m = GLOBAL.get_or_init(|| Mutex::new(WorkerPool::new(0)));
-    let mut guard = m.lock().unwrap_or_else(|e| e.into_inner());
-    f(&mut guard)
-}
-
 thread_local! {
     /// One convenience pool per calling thread (grown on demand, parked
     /// between calls, joined when the thread exits).
     static LOCAL: RefCell<WorkerPool> = RefCell::new(WorkerPool::new(0));
 }
 
-/// Run `f` with the calling thread's convenience pool — the team the
-/// convenience entry points (`wavefront_jacobi`, `pipeline_gs_sweep`, …)
-/// dispatch on. Each caller thread owns its own team, so concurrent
-/// callers run truly side by side instead of serializing on a process
-/// mutex; repeated calls from one thread still amortize one set of
-/// threads. The trade-off: an application fanning the convenience API
-/// out over many of its own threads parks one team (and one scratch
-/// arena) per calling thread — callers at that scale should hold an
-/// explicitly owned team via the `*_on` entry points or a
-/// [`Solver`](super::solver::Solver) session instead.
+/// Run `f` with the calling thread's convenience pool. Each caller
+/// thread owns its own team, so concurrent callers run truly side by
+/// side instead of serializing on a process mutex; repeated calls from
+/// one thread still amortize one set of threads. Applications that fan
+/// out over many of their own threads should hold an explicitly owned
+/// team via a [`Solver`](super::solver::Solver) session instead.
+///
+/// (The 0.2.0 `with_global` shim — one process-wide mutexed team — was
+/// removed in 0.3.0 along with the free-function scheme matrix.)
 ///
 /// # Panics
 /// When re-entered from within `f` (the per-thread pool is exclusively
-/// borrowed while a pass runs) — schedules never call back into the
-/// convenience API, so this only affects hand-written nesting.
+/// borrowed while a pass runs).
 pub fn with_local<R>(f: impl FnOnce(&mut WorkerPool) -> R) -> R {
     LOCAL.with(|p| f(&mut p.borrow_mut()))
 }

@@ -29,6 +29,7 @@
 use crate::config::RunConfig;
 use crate::config::Scheme;
 use crate::stencil::grid::Grid3;
+use crate::stencil::op::{OpInstance, OpKind};
 use crate::Result;
 
 use super::affinity::{pin_hook, PinPolicy, Topology};
@@ -80,7 +81,7 @@ impl SolverBuilder {
     /// `build` returns, no [`Solver::run`] call spawns another thread.
     pub fn build(self) -> Result<Solver> {
         self.cfg.validate()?;
-        let runner = runner_for(self.cfg.scheme)?;
+        let runner = runner_for(self.cfg.scheme, self.cfg.op)?;
         if let Some((f, _)) = &self.rhs {
             anyhow::ensure!(
                 f.shape() == self.cfg.size,
@@ -110,7 +111,8 @@ impl SolverBuilder {
             None => pool.clear_start_hook(),
         }
         pool.ensure_workers(runner.team_size(&self.cfg));
-        Ok(Solver { cfg: self.cfg, runner, pool, f, h2 })
+        let op = self.cfg.op.instantiate(self.cfg.size);
+        Ok(Solver { cfg: self.cfg, runner, op, pool, f, h2 })
     }
 }
 
@@ -120,6 +122,8 @@ impl SolverBuilder {
 pub struct Solver {
     cfg: RunConfig,
     runner: &'static dyn SchemeRunner,
+    /// The session's op instance (coefficient grids live here).
+    op: OpInstance,
     pool: WorkerPool,
     f: Grid3,
     h2: f64,
@@ -135,6 +139,11 @@ impl Solver {
     /// The scheme this session executes.
     pub fn scheme(&self) -> Scheme {
         self.cfg.scheme
+    }
+
+    /// The stencil operator this session applies.
+    pub fn op_kind(&self) -> OpKind {
+        self.op.kind()
     }
 
     /// Workers the session's pool holds. Pool workers are never retired,
@@ -164,7 +173,7 @@ impl Solver {
             u.shape(),
             self.cfg.size
         );
-        self.runner.execute(&mut self.pool, u, &self.f, self.h2, &self.cfg, iters)
+        self.runner.execute(&mut self.pool, &self.op, u, &self.f, self.h2, &self.cfg, iters)
     }
 
     /// One natural pass of the scheme ([`Solver::step_iters`] updates).
@@ -176,7 +185,7 @@ impl Solver {
     /// The serial reference for `iters` updates from `u0` — what
     /// [`Solver::run`] must match bit-exactly.
     pub fn reference(&self, u0: &Grid3, iters: usize) -> Grid3 {
-        self.runner.reference(u0, &self.f, self.h2, &self.cfg, iters)
+        self.runner.reference(&self.op, u0, &self.f, self.h2, &self.cfg, iters)
     }
 
     /// Modeled MLUP/s of this session's configuration on a Tab. 1
@@ -281,6 +290,26 @@ mod tests {
         let want = s2.reference(&u0, 4);
         assert_eq!(v.max_abs_diff(&want), 0.0);
         assert_eq!(s2.team_size(), carried);
+    }
+
+    #[test]
+    fn sessions_run_every_op_through_every_scheme() {
+        // the tentpole acceptance: both new ops execute through every
+        // registered scheme and match their serial references bit-exactly
+        for op in OpKind::ALL {
+            for scheme in Scheme::ALL {
+                let mut c = cfg(scheme, (14, 14, 12));
+                c.op = op;
+                let f = Grid3::random(14, 14, 12, 3);
+                let mut solver = Solver::builder(&c).rhs(f, 0.9).build().unwrap();
+                assert_eq!(solver.op_kind(), op);
+                let u0 = Grid3::random(14, 14, 12, 4);
+                let mut u = u0.clone();
+                solver.run(&mut u, 4).unwrap();
+                let want = solver.reference(&u0, 4);
+                assert_eq!(u.max_abs_diff(&want), 0.0, "{scheme:?} x {op:?}");
+            }
+        }
     }
 
     #[test]

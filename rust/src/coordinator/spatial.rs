@@ -1,13 +1,15 @@
-//! Spatial blocking for the wavefront scheme (paper Sec. 4, Fig. 7).
+//! Spatial blocking for the wavefront scheme (paper Sec. 4, Fig. 7),
+//! generic over the [`StencilOp`] kernel layer.
 //!
 //! For large planes, the rolling window of a whole-domain wavefront
 //! overflows the shared cache, so the domain is decomposed into `B` blocks
 //! along y and each block is swept with the full temporal depth `t` before
 //! the next one starts. Because a site's step-`s` update needs step-`s-1`
-//! neighbors, the per-level update regions are *skewed*: level `s` of
-//! block `b` covers `[start_b - (s-1), end_b - (s-1))` (clamped to the
-//! domain at the first/last block, where the Dirichlet boundary makes the
-//! shift unnecessary).
+//! neighbors within halo radius `R`, the per-level update regions are
+//! *skewed*: level `s` of block `b` covers
+//! `[start_b - R(s-1), end_b - R(s-1))` (clamped to the domain at the
+//! first/last block, where the Dirichlet boundary makes the shift
+//! unnecessary).
 //!
 //! At a block interface the next block needs values the rolling temporary
 //! buffer has already recycled; the paper: "a boundary array must thus
@@ -15,18 +17,19 @@
 //! necessary for the boundary treatment." Concretely (and provably — see
 //! the tests): *even*-level values at the interface survive in `src`
 //! because every later even level's region ends strictly left of them,
-//! but *odd*-level values live in the 4-slot temporary ring and are gone
-//! — so for each odd level the last two lines of its region are saved,
-//! for every plane, into a boundary array the next block reads from.
+//! but *odd*-level values live in the `2R+2`-slot temporary ring and are
+//! gone — so for each odd level the last `2R` lines of its region are
+//! saved, for every plane, into a boundary array the next block reads
+//! from.
 //!
-//! Result: bit-identical to `t` serial Jacobi sweeps for every `(B, t)`.
+//! Result: bit-identical to `t` serial sweeps for every `(B, t)` and
+//! every registered op radius.
 
 use crate::stencil::grid::Grid3;
-use crate::stencil::jacobi::ONE_SIXTH;
+use crate::stencil::op::{copy_x_edges, StarWindow, StencilOp, MAX_RADIUS};
 use crate::Result;
 
-/// Temporary-ring slots per odd level (as in the threaded wavefront).
-const TMP_SLOTS: usize = 4;
+use super::wavefront::tmp_slots;
 
 /// Configuration of a blocked (spatially + temporally) sweep.
 #[derive(Clone, Copy, Debug)]
@@ -43,8 +46,10 @@ impl Default for SpatialConfig {
     }
 }
 
-/// Perform exactly `cfg.t` Jacobi updates on `u` in place, block by block.
-pub fn blocked_wavefront_jacobi(
+/// Perform exactly `cfg.t` updates of `op` on `u` in place, block by
+/// block.
+pub fn blocked_wavefront_jacobi<O: StencilOp>(
+    op: &O,
     u: &mut Grid3,
     f: &Grid3,
     h2: f64,
@@ -52,30 +57,33 @@ pub fn blocked_wavefront_jacobi(
 ) -> Result<()> {
     let t = cfg.t;
     let b_count = cfg.blocks;
+    let r = op.radius();
     anyhow::ensure!(t >= 2 && t % 2 == 0, "blocked wavefront needs even t >= 2, got {t}");
     anyhow::ensure!(b_count >= 1, "need at least one block");
+    anyhow::ensure!(r >= 1 && r <= MAX_RADIUS, "unsupported halo radius {r}");
     anyhow::ensure!(u.shape() == f.shape(), "u/f shape mismatch");
+    op.validate_domain(u.shape())?;
     let (nz, ny, nx) = u.shape();
-    if nz < 3 || ny < 3 || nx < 3 {
+    if nz < 2 * r + 1 || ny < 2 * r + 1 || nx < 2 * r + 1 {
         return Ok(());
     }
 
     let plane = ny * nx;
+    let slots = tmp_slots(r);
     let levels = t / 2; // odd levels 1, 3, …, t-1 → index u = (s-1)/2
-    let mut tmp = vec![0.0f64; levels * TMP_SLOTS * plane];
-    // boundary arrays: per odd level, per z plane, two x-lines; double
+    let mut tmp = vec![0.0f64; levels * slots * plane];
+    // boundary arrays: per odd level, per z plane, 2R x-lines; double
     // buffered across blocks (read side = previous block's writes).
-    let bnd_stride = nz * 2 * nx;
+    let bnd_stride = nz * 2 * r * nx;
     let mut bnd_read = vec![0.0f64; levels * bnd_stride];
     let mut bnd_write = vec![0.0f64; levels * bnd_stride];
 
-    // block boundaries over the interior lines [1, ny-1)
-    let interior = ny - 2;
-    let starts: Vec<usize> = (0..=b_count)
-        .map(|b| 1 + b * interior / b_count)
-        .collect();
+    // block boundaries over the interior lines [r, ny-r)
+    let interior = ny - 2 * r;
+    let starts: Vec<usize> = (0..=b_count).map(|b| r + b * interior / b_count).collect();
 
-    let last_round = (nz - 2) + 2 * (t - 1);
+    let lag = r + 1; // z distance between successive levels per round
+    let last_round = (nz - 2 * r) + lag * (t - 1);
     // scratch line reused across every (round, level, y) iteration —
     // allocating here instead of per plane was a 1.2–1.4× win on the
     // blocked-wavefront bench (EXPERIMENTS.md §Perf).
@@ -88,16 +96,16 @@ pub fn blocked_wavefront_jacobi(
         }
         // per-level y region of this block (clamped skew)
         let region = |s: usize| -> (usize, usize) {
-            let shift = s - 1;
-            let lo = if b == 0 { 1 } else { block_start.saturating_sub(shift).max(1) };
-            let hi = if b + 1 == b_count { ny - 1 } else { block_end.saturating_sub(shift).max(1) };
+            let shift = r * (s - 1);
+            let lo = if b == 0 { r } else { block_start.saturating_sub(shift).max(r) };
+            let hi = if b + 1 == b_count { ny - r } else { block_end.saturating_sub(shift).max(r) };
             (lo, hi)
         };
 
-        for r in 1..=last_round {
+        for round in 1..=last_round {
             for s in 1..=t {
-                let k = r as isize - 2 * (s as isize - 1);
-                if k < 1 || k > (nz - 2) as isize {
+                let k = (round + r - 1) as isize - (lag * (s - 1)) as isize;
+                if k < r as isize || k > (nz - 1 - r) as isize {
                     continue;
                 }
                 let k = k as usize;
@@ -105,41 +113,32 @@ pub fn blocked_wavefront_jacobi(
                 let lvl = (s - 1) / 2; // odd-level index for writes of odd s
                 for y in y_lo..y_hi {
                     {
-                        // gather the six level-(s-1) neighbor lines + rhs
-                        let c = read_line(u, &tmp, &bnd_read, b, s, k, y, &starts, nz, ny, nx);
-                        let ym = read_line(u, &tmp, &bnd_read, b, s, k, y - 1, &starts, nz, ny, nx);
-                        let yp = read_line(u, &tmp, &bnd_read, b, s, k, y + 1, &starts, nz, ny, nx);
-                        let zm = read_line(u, &tmp, &bnd_read, b, s, k - 1, y, &starts, nz, ny, nx);
-                        let zp = read_line(u, &tmp, &bnd_read, b, s, k + 1, y, &starts, nz, ny, nx);
-                        let rhs = f.line(k, y);
-                        out[0] = c[0];
-                        out[nx - 1] = c[nx - 1];
-                        for i in 1..nx - 1 {
-                            out[i] = ONE_SIXTH
-                                * (c[i - 1]
-                                    + c[i + 1]
-                                    + ym[i]
-                                    + yp[i]
-                                    + zm[i]
-                                    + zp[i]
-                                    + h2 * rhs[i]);
-                        }
+                        // gather the level-(s-1) window lines + rhs
+                        let ln = |kk: usize, yy: usize| {
+                            read_line(u, &tmp, &bnd_read, b, s, kk, yy, &starts, r, nz, ny, nx)
+                        };
+                        let c = ln(k, y);
+                        let win = StarWindow::from_fn(c, r, |dz, dy| {
+                            ln((k as isize + dz) as usize, (y as isize + dy) as usize)
+                        });
+                        copy_x_edges(&mut out, c, r);
+                        op.line_update(&mut out, &win, f.line(k, y), h2, k, y);
                     }
                     // write to the level-s home (tmp ring for odd, src for
                     // even), plus the boundary array when this line is one
-                    // of the last two of an odd level's region.
+                    // of the last 2R of an odd level's region.
                     if s % 2 == 1 {
-                        let slot = (lvl * TMP_SLOTS + k % TMP_SLOTS) * plane + y * nx;
+                        let slot = (lvl * slots + k % slots) * plane + y * nx;
                         tmp[slot..slot + nx].copy_from_slice(&out);
                         if b + 1 < b_count {
-                            // interface lines end_b - s - 1 and end_b - s:
-                            // save whichever of the two this line is (the
-                            // other may be a boundary line or produced by
+                            // interface lines [end_b - R·s - R, end_b - R·(s-1)):
+                            // save whichever of the 2R this line is (the
+                            // others may be boundary lines or produced by
                             // an earlier block — see the forwarding pass).
-                            let iface_lo = block_end as isize - s as isize - 1;
+                            let iface_lo = block_end as isize - (r * s + r) as isize;
                             let idx = y as isize - iface_lo;
-                            if idx == 0 || idx == 1 {
-                                let o = lvl * bnd_stride + (k * 2 + idx as usize) * nx;
+                            if (0..2 * r as isize).contains(&idx) {
+                                let o = lvl * bnd_stride + (k * 2 * r + idx as usize) * nx;
                                 bnd_write[o..o + nx].copy_from_slice(&out);
                             }
                         }
@@ -149,28 +148,28 @@ pub fn blocked_wavefront_jacobi(
                 }
             }
         }
-        // Forwarding pass: for narrow blocks (width 1) an interface line
-        // block b+1 needs was not produced by block b at all — it was
-        // produced earlier and still sits in `bnd_read` (one slot to the
-        // left). Carry it over so the boundary chain stays unbroken.
+        // Forwarding pass: for narrow blocks an interface line block b+1
+        // needs was not produced by block b at all — it was produced
+        // earlier and still sits in `bnd_read` (shifted by the block
+        // width). Carry it over so the boundary chain stays unbroken.
         if b + 1 < b_count {
             for o in (1..=t).step_by(2) {
                 let lvl = (o - 1) / 2;
                 let (region_lo, region_hi) = region(o);
-                for idx in 0..2usize {
-                    let y = block_end as isize - o as isize - 1 + idx as isize;
-                    if y < 1 {
+                for idx in 0..2 * r {
+                    let y = block_end as isize - (r * o + r) as isize + idx as isize;
+                    if y < r as isize {
                         continue; // boundary line: reads redirect to src
                     }
                     let y = y as usize;
                     if y >= region_lo && y < region_hi {
                         continue; // produced this block: already saved
                     }
-                    let ridx = y as isize - (block_start as isize - o as isize - 1);
-                    if ridx == 0 || ridx == 1 {
+                    let ridx = y as isize - (block_start as isize - (r * o + r) as isize);
+                    if (0..2 * r as isize).contains(&ridx) {
                         for k in 0..nz {
-                            let dst = lvl * bnd_stride + (k * 2 + idx) * nx;
-                            let src_off = lvl * bnd_stride + (k * 2 + ridx as usize) * nx;
+                            let dst = lvl * bnd_stride + (k * 2 * r + idx) * nx;
+                            let src_off = lvl * bnd_stride + (k * 2 * r + ridx as usize) * nx;
                             bnd_write[dst..dst + nx]
                                 .copy_from_slice(&bnd_read[src_off..src_off + nx]);
                         }
@@ -194,13 +193,14 @@ fn read_line<'a>(
     k: usize,
     y: usize,
     starts: &[usize],
+    r: usize,
     nz: usize,
     ny: usize,
     nx: usize,
 ) -> &'a [f64] {
     let plane = ny * nx;
     // z or y domain boundary: level-invariant original values in src
-    if k == 0 || k == nz - 1 || y == 0 || y == ny - 1 {
+    if k < r || k >= nz - r || y < r || y >= ny - r {
         return u.line(k, y);
     }
     let prev = s - 1;
@@ -213,18 +213,21 @@ fn read_line<'a>(
     // block's sweep, else the previous block's boundary array.
     let lvl = (prev - 1) / 2;
     let block_start = starts[b];
-    let region_lo = if b == 0 { 1 } else { block_start.saturating_sub(prev - 1).max(1) };
+    let region_lo = if b == 0 { r } else { block_start.saturating_sub(r * (prev - 1)).max(r) };
     if y >= region_lo {
-        let slot = (lvl * TMP_SLOTS + k % TMP_SLOTS) * plane + y * nx;
+        let slots = tmp_slots(r);
+        let slot = (lvl * slots + k % slots) * plane + y * nx;
         &tmp[slot..slot + nx]
     } else {
-        // lines start_b - prev - 1 and start_b - prev of the previous
-        // block's level-`prev` region, saved as boundary index 0 / 1
-        let iface_lo = block_start - prev - 1;
-        debug_assert!(y == iface_lo || y == iface_lo + 1, "y={y} iface_lo={iface_lo} s={s}");
-        let idx = y - iface_lo;
-        let stride = nz * 2 * nx;
-        let o = lvl * stride + (k * 2 + idx) * nx;
+        // the 2R lines [start_b - R·prev - R, start_b - R·(prev-1)) of
+        // the previous block's level-`prev` region, saved as boundary
+        // indices 0..2R (iface_lo can go negative when the skew runs past
+        // the domain edge; the negative slots are never populated or read)
+        let iface_lo = block_start as isize - (r * prev + r) as isize;
+        let idx = (y as isize - iface_lo) as usize;
+        debug_assert!(idx < 2 * r, "y={y} iface_lo={iface_lo} s={s} r={r}");
+        let stride = nz * 2 * r * nx;
+        let o = lvl * stride + (k * 2 * r + idx) * nx;
         &bnd[o..o + nx]
     }
 }
@@ -232,14 +235,25 @@ fn read_line<'a>(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::wavefront::serial_reference;
+    use crate::coordinator::wavefront::{serial_reference, serial_reference_op};
+    use crate::stencil::op::{ConstLaplace7, Laplace13, VarCoeff7};
 
     fn check(nz: usize, ny: usize, nx: usize, t: usize, blocks: usize) {
         let f = Grid3::random(nz, ny, nx, 17);
         let mut u = Grid3::random(nz, ny, nx, 18);
         let want = serial_reference(&u, &f, 1.1, t);
-        blocked_wavefront_jacobi(&mut u, &f, 1.1, &SpatialConfig { t, blocks }).unwrap();
+        blocked_wavefront_jacobi(&ConstLaplace7, &mut u, &f, 1.1, &SpatialConfig { t, blocks })
+            .unwrap();
         assert_eq!(u.max_abs_diff(&want), 0.0, "{nz}x{ny}x{nx} t={t} B={blocks}");
+    }
+
+    fn check_r2(nz: usize, ny: usize, nx: usize, t: usize, blocks: usize) {
+        let f = Grid3::random(nz, ny, nx, 19);
+        let mut u = Grid3::random(nz, ny, nx, 20);
+        let want = serial_reference_op(&Laplace13, &u, &f, 1.1, t);
+        blocked_wavefront_jacobi(&Laplace13, &mut u, &f, 1.1, &SpatialConfig { t, blocks })
+            .unwrap();
+        assert_eq!(u.max_abs_diff(&want), 0.0, "radius-2 {nz}x{ny}x{nx} t={t} B={blocks}");
     }
 
     #[test]
@@ -275,11 +289,38 @@ mod tests {
     }
 
     #[test]
+    fn radius2_blocked_matches_serial() {
+        check_r2(10, 11, 9, 2, 1);
+        check_r2(10, 13, 9, 2, 2);
+        check_r2(10, 16, 9, 4, 2);
+        check_r2(9, 20, 8, 4, 3);
+        check_r2(8, 24, 8, 6, 2);
+        // narrow blocks force the radius-2 forwarding pass
+        check_r2(8, 14, 8, 4, 4);
+        check_r2(7, 12, 8, 2, 6);
+    }
+
+    #[test]
+    fn varcoeff_blocked_matches_serial() {
+        let op = VarCoeff7::default_for((9, 14, 8));
+        let f = Grid3::random(9, 14, 8, 23);
+        let mut u = Grid3::random(9, 14, 8, 24);
+        let want = serial_reference_op(&op, &u, &f, 0.9, 4);
+        blocked_wavefront_jacobi(&op, &mut u, &f, 0.9, &SpatialConfig { t: 4, blocks: 3 }).unwrap();
+        assert_eq!(u.max_abs_diff(&want), 0.0);
+    }
+
+    #[test]
     fn odd_t_rejected() {
         let mut u = Grid3::random(8, 8, 8, 1);
         let f = Grid3::zeros(8, 8, 8);
-        assert!(
-            blocked_wavefront_jacobi(&mut u, &f, 1.0, &SpatialConfig { t: 3, blocks: 2 }).is_err()
-        );
+        assert!(blocked_wavefront_jacobi(
+            &ConstLaplace7,
+            &mut u,
+            &f,
+            1.0,
+            &SpatialConfig { t: 3, blocks: 2 }
+        )
+        .is_err());
     }
 }

@@ -1,26 +1,28 @@
-//! Multi-group spatial × temporal blocking for Jacobi — the parallel
-//! Fig. 7 scheme.
+//! Multi-group spatial × temporal blocking — the parallel Fig. 7 scheme,
+//! generic over the [`StencilOp`] kernel layer.
 //!
 //! [`super::spatial`] sweeps the y-blocks of the skewed decomposition one
 //! after another on a single thread. Here `G` *groups* each own one
 //! y-block and sweep it concurrently, time-shifted: group `g` executes
 //! wavefront round `r` only after group `g-1` has completed round `r-1`.
-//! The per-level update regions, the 4-slot temporary ring per odd level
-//! and the odd-level boundary arrays are exactly those of the serial
-//! blocked sweep — but the temporary ring and the boundary array are
-//! per-group, and group `g` reads the boundary planes directly out of
-//! group `g-1`'s array under the round-lag flow control (the hand-off
-//! Wittmann et al., arXiv:1006.3148, identify as the key to multi-group
-//! temporal blocking).
+//! The per-level update regions, the `2R+2`-slot temporary ring per odd
+//! level and the `2R`-line odd-level boundary arrays are exactly those of
+//! the serial blocked sweep — but the temporary ring and the boundary
+//! array are per-group, and group `g` reads the boundary planes directly
+//! out of group `g-1`'s array under the round-lag flow control (the
+//! hand-off Wittmann et al., arXiv:1006.3148, identify as the key to
+//! multi-group temporal blocking).
 //!
-//! ## Why a one-round lag suffices
+//! ## Why a one-round lag suffices (any radius)
 //!
 //! All cross-group traffic sits at the block interface. For the update of
-//! level `s`, plane `k` (round `r = k + 2(s-1)`):
+//! level `s`, plane `k` (round `r = k + (R+1)(s-1)` up to the constant
+//! plane offset):
 //!
 //! * *flow*: every level-`s-1` value group `g` reads from group `g-1` —
 //!   `src` lines for even `s-1`, boundary-array lines for odd `s-1` — was
-//!   produced at plane `<= k+1`, i.e. at round `<= r-1`;
+//!   produced at plane `<= k+R`, i.e. at round `<= r-1` (the `R`-plane
+//!   halo shift exactly cancels one level lag);
 //! * *anti*: the deepest even level of group `g-1` that writes an
 //!   interface `src` line group `g` still wants at level `s-1` *is*
 //!   level `s-1` itself (deeper even levels end strictly left of it), so
@@ -29,33 +31,31 @@
 //!   *after* group `g-1`'s last read of them — guaranteed because group
 //!   `g` trails by at least one round.
 //!
-//! The serial code's "forwarding pass" for width-1 blocks has no sound
+//! The serial code's "forwarding pass" for narrow blocks has no sound
 //! one-round-lag analog, so the scheme requires every block to hold at
-//! least two interior lines (`ny - 2 >= 2 * groups`); the constructor
+//! least `2R` interior lines (`ny - 2R >= 2R * groups`); the constructor
 //! rejects narrower decompositions.
 //!
-//! Result: bit-identical to `t` serial Jacobi sweeps for every
-//! `(t, groups)` — asserted by the tests and by `launcher::run_experiment`
-//! on every launch.
+//! Result: bit-identical to `t` serial sweeps for every `(t, groups)` and
+//! radius — asserted by the tests and by `launcher::run_experiment` on
+//! every launch.
 
 use std::marker::PhantomData;
 
 use crate::stencil::grid::Grid3;
-use crate::stencil::jacobi::ONE_SIXTH;
+use crate::stencil::op::{StarWindow, StencilOp, MAX_RADIUS};
 use crate::Result;
 
-use super::pool::{self, WorkerPool};
+use super::pool::WorkerPool;
 use super::schedule::{Progress, Schedule};
-
-/// Temporary-ring slots per odd level (as in the serial blocked sweep).
-const TMP_SLOTS: usize = 4;
+use super::wavefront::tmp_slots;
 
 /// Configuration of a multi-group blocked (spatial × temporal) pass.
 #[derive(Clone, Copy, Debug)]
 pub struct MultiGroupConfig {
     /// Temporal blocking factor `t` (even, >= 2).
     pub t: usize,
-    /// Thread groups = y blocks (>= 1; each block needs >= 2 interior
+    /// Thread groups = y blocks (>= 1; each block needs >= 2R interior
     /// lines when `groups > 1`).
     pub groups: usize,
 }
@@ -69,7 +69,8 @@ impl Default for MultiGroupConfig {
 impl MultiGroupConfig {
     /// Validate the grid-independent part of the configuration (single
     /// source for every entry point); the per-group width requirement
-    /// needs the grid and lives in [`MultiGroupSchedule::new`].
+    /// needs the grid and the op radius and lives in
+    /// [`MultiGroupSchedule::new`].
     pub fn validate(&self) -> Result<()> {
         anyhow::ensure!(
             self.t >= 2 && self.t % 2 == 0,
@@ -81,14 +82,15 @@ impl MultiGroupConfig {
     }
 }
 
-/// One multi-group blocked pass (`t` fused updates) as a [`Schedule`]:
-/// worker `g` wavefront-sweeps y-block `g`.
-pub struct MultiGroupSchedule<'g> {
+/// One multi-group blocked pass (`t` fused updates of `op`) as a
+/// [`Schedule`]: worker `g` wavefront-sweeps y-block `g`.
+pub struct MultiGroupSchedule<'g, O: StencilOp> {
+    op: &'g O,
     src: *mut f64,
     f: *const f64,
-    /// `groups * (t/2) * TMP_SLOTS` z-x planes (per-group odd-level rings).
+    /// `groups * (t/2) * (2R+2)` z-x planes (per-group odd-level rings).
     tmp: *mut f64,
-    /// `groups * (t/2) * nz * 2` x-lines (per-group boundary arrays).
+    /// `groups * (t/2) * nz * 2R` x-lines (per-group boundary arrays).
     bnd: *mut f64,
     /// `groups * nx` per-worker x-line update buffers (disjoint slices;
     /// pool-owned scratch instead of a per-pass `Vec` per worker).
@@ -97,9 +99,10 @@ pub struct MultiGroupSchedule<'g> {
     ny: usize,
     nx: usize,
     t: usize,
+    r: usize,
     groups: usize,
     h2: f64,
-    /// Block boundaries over the interior lines `[1, ny-1)`.
+    /// Block boundaries over the interior lines `[R, ny-R)`.
     starts: Vec<usize>,
     last_round: isize,
     _borrow: PhantomData<&'g mut f64>,
@@ -108,15 +111,17 @@ pub struct MultiGroupSchedule<'g> {
 // SAFETY: groups write disjoint regions (own ring, own boundary array,
 // own skewed src lines); the round-lag protocol orders every cross-group
 // read/write pair (module docs).
-unsafe impl Send for MultiGroupSchedule<'_> {}
-unsafe impl Sync for MultiGroupSchedule<'_> {}
+unsafe impl<O: StencilOp> Send for MultiGroupSchedule<'_, O> {}
+unsafe impl<O: StencilOp> Sync for MultiGroupSchedule<'_, O> {}
 
-impl<'g> MultiGroupSchedule<'g> {
+impl<'g, O: StencilOp> MultiGroupSchedule<'g, O> {
     /// Build a pass over `u`. `tmp`, `bnd` and `lines` are caller-owned
     /// scratch buffers (typically the pool's reusable
     /// [`Scratch`](super::pool::Scratch)), resized here; they must stay
     /// alive (and untouched) for as long as the schedule runs.
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
+        op: &'g O,
         u: &'g mut Grid3,
         f: &'g Grid3,
         tmp: &'g mut Vec<f64>,
@@ -128,25 +133,35 @@ impl<'g> MultiGroupSchedule<'g> {
         cfg.validate()?;
         let t = cfg.t;
         let groups = cfg.groups;
+        let r = op.radius();
+        anyhow::ensure!(r >= 1 && r <= MAX_RADIUS, "unsupported halo radius {r}");
         anyhow::ensure!(u.shape() == f.shape(), "u/f shape mismatch");
+        op.validate_domain(u.shape())?;
         let (nz, ny, nx) = u.shape();
-        anyhow::ensure!(nz >= 3 && ny >= 3 && nx >= 3, "grid too small for a blocked pass");
-        let interior = ny - 2;
         anyhow::ensure!(
-            groups == 1 || interior >= 2 * groups,
-            "multi-group blocking needs >= 2 interior lines per group \
-             (ny = {ny} gives {interior} interior lines for {groups} groups)"
+            nz >= 2 * r + 1 && ny >= 2 * r + 1 && nx >= 2 * r + 1,
+            "grid too small for a radius-{r} blocked pass"
+        );
+        let interior = ny - 2 * r;
+        anyhow::ensure!(
+            groups == 1 || interior >= 2 * r * groups,
+            "multi-group blocking needs >= {} interior lines per group for a radius-{r} op \
+             (ny = {ny} gives {interior} interior lines for {groups} groups)",
+            2 * r
         );
         let plane = ny * nx;
+        let slots = tmp_slots(r);
         let levels = t / 2;
         tmp.clear();
-        tmp.resize(groups * levels * TMP_SLOTS * plane, 0.0);
+        tmp.resize(groups * levels * slots * plane, 0.0);
         bnd.clear();
-        bnd.resize(groups * levels * nz * 2 * nx, 0.0);
+        bnd.resize(groups * levels * nz * 2 * r * nx, 0.0);
         lines.clear();
         lines.resize(groups * nx, 0.0);
-        let starts: Vec<usize> = (0..=groups).map(|b| 1 + b * interior / groups).collect();
+        let starts: Vec<usize> = (0..=groups).map(|b| r + b * interior / groups).collect();
+        let lag = (r + 1) as isize;
         Ok(Self {
+            op,
             src: u.data_mut().as_mut_ptr(),
             f: f.data().as_ptr(),
             tmp: tmp.as_mut_ptr(),
@@ -156,26 +171,29 @@ impl<'g> MultiGroupSchedule<'g> {
             ny,
             nx,
             t,
+            r,
             groups,
             h2,
             starts,
-            last_round: (nz - 2) as isize + 2 * (t as isize - 1),
+            last_round: (nz - 2 * r) as isize + lag * (t as isize - 1),
             _borrow: PhantomData,
         })
     }
 }
 
-impl Schedule for MultiGroupSchedule<'_> {
+impl<O: StencilOp> Schedule for MultiGroupSchedule<'_, O> {
     fn workers(&self) -> usize {
         self.groups
     }
 
     fn worker(&self, g: usize, progress: &Progress) {
-        let (nz, ny, nx, t) = (self.nz, self.ny, self.nx, self.t);
+        let (nz, ny, nx, t, r) = (self.nz, self.ny, self.nx, self.t, self.r);
         let plane = ny * nx;
+        let slots = tmp_slots(r);
+        let lag = (r + 1) as isize;
         let levels = t / 2;
-        let bnd_stride = nz * 2 * nx; // per odd level
-        let group_tmp = levels * TMP_SLOTS * plane;
+        let bnd_stride = nz * 2 * r * nx; // per odd level
+        let group_tmp = levels * slots * plane;
         let group_bnd = levels * bnd_stride;
         let tmp = unsafe { self.tmp.add(g * group_tmp) };
         let bnd_own = unsafe { self.bnd.add(g * group_bnd) };
@@ -193,18 +211,18 @@ impl Schedule for MultiGroupSchedule<'_> {
         // per-level y region of this block (clamped skew, as in the
         // serial blocked sweep)
         let region = |s: usize| -> (usize, usize) {
-            let shift = s - 1;
-            let lo = if g == 0 { 1 } else { block_start.saturating_sub(shift).max(1) };
-            let hi = if g + 1 == b_count { ny - 1 } else { block_end.saturating_sub(shift).max(1) };
+            let shift = r * (s - 1);
+            let lo = if g == 0 { r } else { block_start.saturating_sub(shift).max(r) };
+            let hi = if g + 1 == b_count { ny - r } else { block_end.saturating_sub(shift).max(r) };
             (lo, hi)
         };
 
         // level-(s-1) value of line (k, y) as this group's level-s update
         // sees it: src for boundaries and even levels, own ring for odd
         // levels produced here, the previous group's boundary array for
-        // the two interface lines below the region.
+        // the 2R interface lines below the region.
         let read_line = |s: usize, k: usize, y: usize| -> *const f64 {
-            if k == 0 || k == nz - 1 || y == 0 || y == ny - 1 {
+            if k < r || k >= nz - r || y < r || y >= ny - r {
                 return unsafe { src.add((k * ny + y) * nx) as *const f64 };
             }
             let prev = s - 1;
@@ -216,17 +234,17 @@ impl Schedule for MultiGroupSchedule<'_> {
             }
             let lvl = (prev - 1) / 2;
             let region_lo =
-                if g == 0 { 1 } else { block_start.saturating_sub(prev - 1).max(1) };
+                if g == 0 { r } else { block_start.saturating_sub(r * (prev - 1)).max(r) };
             if y >= region_lo {
-                unsafe { tmp.add((lvl * TMP_SLOTS + k % TMP_SLOTS) * plane + y * nx) as *const f64 }
+                unsafe { tmp.add((lvl * slots + k % slots) * plane + y * nx) as *const f64 }
             } else {
-                // lines start_g - prev - 1 and start_g - prev of the
-                // previous group's level-`prev` region, saved as boundary
-                // index 0 / 1
-                let iface_lo = block_start - prev - 1;
-                debug_assert!(y == iface_lo || y == iface_lo + 1, "y={y} iface_lo={iface_lo} s={s}");
-                let idx = y - iface_lo;
-                unsafe { bnd_prev.add(lvl * bnd_stride + (k * 2 + idx) * nx) }
+                // the 2R lines [start_g - R·prev - R, start_g - R·(prev-1))
+                // of the previous group's level-`prev` region, saved as
+                // boundary indices 0..2R
+                let iface_lo = block_start as isize - (r * prev + r) as isize;
+                let idx = (y as isize - iface_lo) as usize;
+                debug_assert!(idx < 2 * r, "y={y} iface_lo={iface_lo} s={s} r={r}");
+                unsafe { bnd_prev.add(lvl * bnd_stride + (k * 2 * r + idx) * nx) }
             }
         };
 
@@ -236,15 +254,15 @@ impl Schedule for MultiGroupSchedule<'_> {
         // SAFETY: slice `[g*nx, (g+1)*nx)` is written by worker g only.
         let out: &mut [f64] =
             unsafe { std::slice::from_raw_parts_mut(self.lines.add(g * nx), nx) };
-        for r in 1..=self.last_round {
+        for round in 1..=self.last_round {
             if g > 0 {
                 // round-lag flow control: the left neighbor is at least
                 // one full round ahead (see module docs).
-                progress.wait_min(g - 1, r - 1);
+                progress.wait_min(g - 1, round - 1);
             }
             for s in 1..=t {
-                let k = r - 2 * (s as isize - 1);
-                if k < 1 || k > (nz - 2) as isize {
+                let k = round + (r as isize - 1) - lag * (s as isize - 1);
+                if k < r as isize || k > (nz - 1 - r) as isize {
                     continue;
                 }
                 let k = k as usize;
@@ -255,36 +273,29 @@ impl Schedule for MultiGroupSchedule<'_> {
                     // reads touch and gives this group exclusive write
                     // access to its skewed region (module docs).
                     unsafe {
-                        let c = read_line(s, k, y);
-                        let ym = read_line(s, k, y - 1);
-                        let yp = read_line(s, k, y + 1);
-                        let zm = read_line(s, k - 1, y);
-                        let zp = read_line(s, k + 1, y);
-                        let rhs = f_base.add((k * ny + y) * nx);
-                        out[0] = *c;
-                        out[nx - 1] = *c.add(nx - 1);
-                        for i in 1..nx - 1 {
-                            out[i] = ONE_SIXTH
-                                * (*c.add(i - 1)
-                                    + *c.add(i + 1)
-                                    + *ym.add(i)
-                                    + *yp.add(i)
-                                    + *zm.add(i)
-                                    + *zp.add(i)
-                                    + self.h2 * *rhs.add(i));
-                        }
+                        let line = |p: *const f64| std::slice::from_raw_parts(p, nx);
+                        let c = line(read_line(s, k, y));
+                        let win = StarWindow::from_fn(c, r, |dz, dy| {
+                            let kk = (k as isize + dz) as usize;
+                            let yy = (y as isize + dy) as usize;
+                            line(read_line(s, kk, yy))
+                        });
+                        let rhs = std::slice::from_raw_parts(f_base.add((k * ny + y) * nx), nx);
+                        crate::stencil::op::copy_x_edges(out, c, r);
+                        self.op.line_update(out, &win, rhs, self.h2, k, y);
                         if s % 2 == 1 {
-                            let dst = tmp.add((lvl * TMP_SLOTS + k % TMP_SLOTS) * plane + y * nx);
+                            let dst = tmp.add((lvl * slots + k % slots) * plane + y * nx);
                             std::ptr::copy_nonoverlapping(out.as_ptr(), dst, nx);
                             if g + 1 < b_count {
-                                // interface lines end_g - s - 1 and
-                                // end_g - s: save them for the right
-                                // neighbor before the ring recycles them.
-                                let iface_lo = block_end as isize - s as isize - 1;
+                                // interface lines [end_g - R·s - R,
+                                // end_g - R·(s-1)): save them for the
+                                // right neighbor before the ring recycles
+                                // them.
+                                let iface_lo = block_end as isize - (r * s + r) as isize;
                                 let idx = y as isize - iface_lo;
-                                if idx == 0 || idx == 1 {
+                                if (0..2 * r as isize).contains(&idx) {
                                     let o = bnd_own
-                                        .add(lvl * bnd_stride + (k * 2 + idx as usize) * nx);
+                                        .add(lvl * bnd_stride + (k * 2 * r + idx as usize) * nx);
                                     std::ptr::copy_nonoverlapping(out.as_ptr(), o, nx);
                                 }
                             }
@@ -295,16 +306,21 @@ impl Schedule for MultiGroupSchedule<'_> {
                     }
                 }
             }
-            progress.publish(g, r);
+            progress.publish(g, round);
         }
     }
 }
 
-/// Run `passes` multi-group passes on `pool` with one schedule. All
-/// scratch (plane rings, boundary arrays, per-worker x-lines) comes from
-/// the pool's reusable [`Scratch`](super::pool::Scratch).
-pub(crate) fn multigroup_passes(
+/// Run `passes` multi-group passes of `op` on `pool` with one schedule —
+/// the pool-level entry point the [`SchemeRunner`] registry, tests and
+/// benches drive. All scratch (plane rings, boundary arrays, per-worker
+/// x-lines) comes from the pool's reusable
+/// [`Scratch`](super::pool::Scratch).
+///
+/// [`SchemeRunner`]: super::runner::SchemeRunner
+pub fn multigroup_passes<O: StencilOp>(
     pool: &mut WorkerPool,
+    op: &O,
     u: &mut Grid3,
     f: &Grid3,
     h2: f64,
@@ -313,13 +329,15 @@ pub(crate) fn multigroup_passes(
 ) -> Result<()> {
     cfg.validate()?;
     anyhow::ensure!(u.shape() == f.shape(), "u/f shape mismatch");
+    let r = op.radius();
     let (nz, ny, nx) = u.shape();
-    if nz < 3 || ny < 3 || nx < 3 || passes == 0 {
+    if nz < 2 * r + 1 || ny < 2 * r + 1 || nx < 2 * r + 1 || passes == 0 {
         return Ok(());
     }
     let mut scratch = pool.take_scratch();
     let result = (|| -> Result<()> {
         let schedule = MultiGroupSchedule::new(
+            op,
             u,
             f,
             &mut scratch.planes,
@@ -337,73 +355,38 @@ pub(crate) fn multigroup_passes(
     result
 }
 
-/// Perform exactly `cfg.t` Jacobi updates on `u` in place, `cfg.groups`
-/// blocks swept concurrently on the calling thread's convenience pool.
-#[deprecated(since = "0.2.0", note = "use a `coordinator::solver::Solver` session")]
-pub fn multigroup_blocked_jacobi(
-    u: &mut Grid3,
-    f: &Grid3,
-    h2: f64,
-    cfg: &MultiGroupConfig,
-) -> Result<()> {
-    pool::with_local(|p| multigroup_passes(p, u, f, h2, cfg, 1))
-}
-
-/// [`multigroup_blocked_jacobi`] on a caller-owned pool.
-#[deprecated(since = "0.2.0", note = "use a `coordinator::solver::Solver` session")]
-pub fn multigroup_blocked_jacobi_on(
-    pool: &mut WorkerPool,
-    u: &mut Grid3,
-    f: &Grid3,
-    h2: f64,
-    cfg: &MultiGroupConfig,
-) -> Result<()> {
-    multigroup_passes(pool, u, f, h2, cfg, 1)
-}
-
-/// Run `iters` updates (a multiple of `cfg.t`) via repeated passes of one
-/// persistent team.
-#[deprecated(since = "0.2.0", note = "use a `coordinator::solver::Solver` session")]
-pub fn multigroup_blocked_jacobi_iters(
-    u: &mut Grid3,
-    f: &Grid3,
-    h2: f64,
-    cfg: &MultiGroupConfig,
-    iters: usize,
-) -> Result<()> {
-    cfg.validate()?;
-    super::wavefront::check_iters_multiple(iters, cfg.t)?;
-    pool::with_local(|p| multigroup_passes(p, u, f, h2, cfg, iters / cfg.t))
-}
-
-/// [`multigroup_blocked_jacobi_iters`] on a caller-owned pool.
-#[deprecated(since = "0.2.0", note = "use a `coordinator::solver::Solver` session")]
-pub fn multigroup_blocked_jacobi_iters_on(
-    pool: &mut WorkerPool,
-    u: &mut Grid3,
-    f: &Grid3,
-    h2: f64,
-    cfg: &MultiGroupConfig,
-    iters: usize,
-) -> Result<()> {
-    cfg.validate()?;
-    super::wavefront::check_iters_multiple(iters, cfg.t)?;
-    multigroup_passes(pool, u, f, h2, cfg, iters / cfg.t)
-}
-
 #[cfg(test)]
 mod tests {
-    #![allow(deprecated)] // the shim matrix stays covered until removal
-
     use super::*;
-    use crate::coordinator::wavefront::serial_reference;
+    use crate::coordinator::wavefront::{check_iters_multiple, serial_reference, serial_reference_op};
+    use crate::stencil::op::{ConstLaplace7, Laplace13, VarCoeff7};
+
+    fn run_mg<O: StencilOp>(
+        op: &O,
+        u: &mut Grid3,
+        f: &Grid3,
+        h2: f64,
+        cfg: &MultiGroupConfig,
+        passes: usize,
+    ) -> Result<()> {
+        let mut pool = WorkerPool::new(0);
+        multigroup_passes(&mut pool, op, u, f, h2, cfg, passes)
+    }
 
     fn check(nz: usize, ny: usize, nx: usize, t: usize, groups: usize) {
         let f = Grid3::random(nz, ny, nx, 17);
         let mut u = Grid3::random(nz, ny, nx, 18);
         let want = serial_reference(&u, &f, 1.1, t);
-        multigroup_blocked_jacobi(&mut u, &f, 1.1, &MultiGroupConfig { t, groups }).unwrap();
+        run_mg(&ConstLaplace7, &mut u, &f, 1.1, &MultiGroupConfig { t, groups }, 1).unwrap();
         assert_eq!(u.max_abs_diff(&want), 0.0, "{nz}x{ny}x{nx} t={t} G={groups}");
+    }
+
+    fn check_r2(nz: usize, ny: usize, nx: usize, t: usize, groups: usize) {
+        let f = Grid3::random(nz, ny, nx, 27);
+        let mut u = Grid3::random(nz, ny, nx, 28);
+        let want = serial_reference_op(&Laplace13, &u, &f, 1.1, t);
+        run_mg(&Laplace13, &mut u, &f, 1.1, &MultiGroupConfig { t, groups }, 1).unwrap();
+        assert_eq!(u.max_abs_diff(&want), 0.0, "radius-2 {nz}x{ny}x{nx} t={t} G={groups}");
     }
 
     #[test]
@@ -446,17 +429,37 @@ mod tests {
     }
 
     #[test]
+    fn radius2_groups_match_serial() {
+        check_r2(10, 13, 9, 2, 2); // minimum width: 4 interior lines each + 1
+        check_r2(10, 12, 9, 2, 2);
+        check_r2(10, 16, 9, 4, 2);
+        check_r2(9, 20, 8, 4, 2);
+        check_r2(9, 25, 8, 2, 3);
+        check_r2(11, 28, 8, 6, 3);
+    }
+
+    #[test]
+    fn varcoeff_groups_match_serial() {
+        let op = VarCoeff7::default_for((9, 14, 8));
+        let f = Grid3::random(9, 14, 8, 33);
+        let mut u = Grid3::random(9, 14, 8, 34);
+        let want = serial_reference_op(&op, &u, &f, 0.9, 4);
+        run_mg(&op, &mut u, &f, 0.9, &MultiGroupConfig { t: 4, groups: 3 }, 1).unwrap();
+        assert_eq!(u.max_abs_diff(&want), 0.0);
+    }
+
+    #[test]
     fn iters_multiple_passes_reuse_one_team() {
         let f = Grid3::random(10, 14, 8, 5);
         let mut u = Grid3::random(10, 14, 8, 6);
         let want = serial_reference(&u, &f, 1.0, 12);
         let cfg = MultiGroupConfig { t: 4, groups: 3 };
+        check_iters_multiple(12, cfg.t).unwrap();
         let mut pool = WorkerPool::new(3);
-        multigroup_blocked_jacobi_iters_on(&mut pool, &mut u, &f, 1.0, &cfg, 12).unwrap();
+        multigroup_passes(&mut pool, &ConstLaplace7, &mut u, &f, 1.0, &cfg, 3).unwrap();
         assert_eq!(u.max_abs_diff(&want), 0.0);
-        // non-multiple is an error
-        let mut v = Grid3::random(10, 14, 8, 6);
-        assert!(multigroup_blocked_jacobi_iters(&mut v, &f, 1.0, &cfg, 6).is_err());
+        // non-multiple is an error at the iters layer
+        assert!(check_iters_multiple(6, cfg.t).is_err());
     }
 
     #[test]
@@ -464,20 +467,19 @@ mod tests {
         let f = Grid3::zeros(8, 8, 8);
         let mut u = Grid3::random(8, 8, 8, 1);
         // odd t
-        assert!(
-            multigroup_blocked_jacobi(&mut u, &f, 1.0, &MultiGroupConfig { t: 3, groups: 2 })
-                .is_err()
-        );
+        assert!(run_mg(&ConstLaplace7, &mut u, &f, 1.0, &MultiGroupConfig { t: 3, groups: 2 }, 1)
+            .is_err());
         // zero groups
-        assert!(
-            multigroup_blocked_jacobi(&mut u, &f, 1.0, &MultiGroupConfig { t: 2, groups: 0 })
-                .is_err()
-        );
+        assert!(run_mg(&ConstLaplace7, &mut u, &f, 1.0, &MultiGroupConfig { t: 2, groups: 0 }, 1)
+            .is_err());
         // too many groups for the interior (8 - 2 = 6 lines < 2 * 4)
-        assert!(
-            multigroup_blocked_jacobi(&mut u, &f, 1.0, &MultiGroupConfig { t: 2, groups: 4 })
-                .is_err()
-        );
+        assert!(run_mg(&ConstLaplace7, &mut u, &f, 1.0, &MultiGroupConfig { t: 2, groups: 4 }, 1)
+            .is_err());
+        // radius-2: 12 - 4 = 8 interior lines < 4 * 3 groups
+        let mut v = Grid3::random(8, 12, 8, 2);
+        let fv = Grid3::zeros(8, 12, 8);
+        assert!(run_mg(&Laplace13, &mut v, &fv, 1.0, &MultiGroupConfig { t: 2, groups: 3 }, 1)
+            .is_err());
     }
 
     #[test]
@@ -485,7 +487,7 @@ mod tests {
         let mut u = Grid3::random(2, 6, 6, 9);
         let orig = u.clone();
         let f = Grid3::zeros(2, 6, 6);
-        multigroup_blocked_jacobi(&mut u, &f, 1.0, &MultiGroupConfig::default()).unwrap();
+        run_mg(&ConstLaplace7, &mut u, &f, 1.0, &MultiGroupConfig::default(), 1).unwrap();
         assert_eq!(u, orig);
     }
 }

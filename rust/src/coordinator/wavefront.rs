@@ -1,54 +1,61 @@
-//! Temporal wavefront blocking for Jacobi (paper Sec. 4, Fig. 6).
+//! Temporal wavefront blocking for Jacobi-style ops (paper Sec. 4,
+//! Fig. 6), generic over the [`StencilOp`] kernel layer.
 //!
 //! A *thread group* of `t` workers performs `t` time-shifted sweeps over
 //! the grid. Worker `s` (0-based) executes update step `s+1`, trailing
-//! worker `s-1` by two planes so its three-plane read window only touches
-//! completed planes. Odd-numbered updates are written to a small
-//! round-robin temporary buffer; even-numbered updates go back to the
-//! `src` array — so after the group passes, `src` holds the `t`-times
-//! updated grid *in place*, without the second full grid of the
-//! out-of-place Jacobi (the paper's "the second grid ... is not required").
+//! worker `s-1` by `R+1` planes (for halo radius `R`) so its
+//! `2R+1`-plane read window only touches completed planes. Odd-numbered
+//! updates are written to a small round-robin temporary buffer;
+//! even-numbered updates go back to the `src` array — so after the group
+//! passes, `src` holds the `t`-times updated grid *in place*, without
+//! the second full grid of the out-of-place sweep (the paper's "the
+//! second grid ... is not required").
 //!
-//! The temporary buffer holds 4 z-x planes per odd update level
-//! (`2t` planes total for the paper's `t = 4` example, matching "for our
-//! example eight"): producer step `2u+1` writes plane `k` to slot
-//! `k mod 4` of region `u`, consumer step `2u+2` trails by exactly two
-//! planes and reads slots `k-1 … k+1` — four live slots.
+//! The temporary buffer holds `2R+2` z-x planes per odd update level
+//! (four for the paper's radius-1 stencil and `t = 4` example, matching
+//! "for our example eight" in total): producer step `2u+1` writes plane
+//! `k` to slot `k mod (2R+2)` of region `u`, consumer step `2u+2` trails
+//! by exactly `R+1` planes and reads slots `k-R … k+R` — `2R+2` live
+//! slots.
 //!
 //! The pass is expressed as a [`Schedule`] and dispatched on the
-//! persistent [`WorkerPool`]: `wavefront_jacobi_iters` builds the
-//! schedule once and reuses one thread team (and one temporary ring)
-//! across all passes instead of respawning per pass.
+//! persistent [`WorkerPool`]; repeated passes reuse one thread team and
+//! one temporary ring.
 //!
 //! ## Safety argument (also enforced by the progress protocol)
 //!
-//! * worker `s` updates plane `k` only once `progress[s-1] >= k+1`
+//! * worker `s` updates plane `k` only once `progress[s-1] >= k+R`
 //!   (its entire read window holds step-`s` values);
-//! * worker `s` never runs more than `TMP_SLOTS - 1` planes ahead of
-//!   worker `s+1` (back-pressure), so no live temporary slot is reused;
-//! * `src` writes by worker `s` land strictly behind every plane worker
-//!   `s-2`'s window can still read (distance >= 4).
+//! * worker `s` never runs more than `TMP_SLOTS - 1 - (R-1)` planes
+//!   ahead of worker `s+1` (back-pressure), so no live temporary slot is
+//!   reused;
+//! * `src` writes by worker `s` land strictly behind every plane an
+//!   upstream worker's window can still read (lag `R+1` per step).
 //!
-//! Boundary planes (`k = 0`, `k = nz-1`) are never updated at any step,
+//! Boundary planes (`k < R`, `k >= nz-R`) are never updated at any step,
 //! so every step's "value" of a boundary plane is the original `src`
 //! plane — window reads are redirected there instead of the temporary.
 //!
-//! Numerics are bit-identical to `t` serial [`jacobi_sweep`]s: same
+//! Numerics are bit-identical to `t` serial [`op_jacobi_sweep`]s: same
 //! kernel, same fp order — tests assert exact equality.
 
 use std::marker::PhantomData;
 
 use crate::simulator::perfmodel::BarrierKind;
 use crate::stencil::grid::Grid3;
-use crate::stencil::jacobi::{jacobi_line_update, jacobi_sweep};
+use crate::stencil::jacobi::jacobi_sweep;
+use crate::stencil::op::{op_jacobi_sweep, StarWindow, StencilOp, MAX_RADIUS};
 use crate::Result;
 
 use super::barrier::AnyBarrier;
-use super::pool::{self, WorkerPool};
+use super::pool::WorkerPool;
 use super::schedule::{Progress, Schedule};
 
-/// Temporary-buffer slots per odd update level (see module docs).
-const TMP_SLOTS: usize = 4;
+/// Temporary-ring slots per odd update level for halo radius `r`.
+#[inline]
+pub(crate) fn tmp_slots(r: usize) -> usize {
+    2 * r + 2
+}
 
 /// How workers of a group synchronize plane hand-off.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
@@ -89,11 +96,13 @@ impl WavefrontConfig {
     }
 }
 
-/// One wavefront pass (`t` fused updates) as a [`Schedule`].
+/// One wavefront pass (`t` fused updates of `op`) as a [`Schedule`].
 ///
-/// Borrows the grids for `'g`; reusable across passes — the temporary
-/// ring is fully rewritten before it is re-read within each pass.
-pub struct WavefrontJacobiSchedule<'g> {
+/// Borrows the op and grids for `'g`; reusable across passes — the
+/// temporary ring is fully rewritten before it is re-read within each
+/// pass.
+pub struct WavefrontJacobiSchedule<'g, O: StencilOp> {
+    op: &'g O,
     src: *mut f64,
     tmp: *mut f64,
     f: *const f64,
@@ -101,6 +110,8 @@ pub struct WavefrontJacobiSchedule<'g> {
     ny: usize,
     nx: usize,
     t: usize,
+    /// Halo radius of `op` (cached; also the wavefront lag minus one).
+    r: usize,
     h2: f64,
     sync: SyncMode,
     barrier: AnyBarrier,
@@ -111,14 +122,15 @@ pub struct WavefrontJacobiSchedule<'g> {
 // SAFETY: workers index the shared grid and ring disjointly per the
 // progress protocol (module docs); all shared access is through raw
 // pointers whose aliasing discipline the schedule itself enforces.
-unsafe impl Send for WavefrontJacobiSchedule<'_> {}
-unsafe impl Sync for WavefrontJacobiSchedule<'_> {}
+unsafe impl<O: StencilOp> Send for WavefrontJacobiSchedule<'_, O> {}
+unsafe impl<O: StencilOp> Sync for WavefrontJacobiSchedule<'_, O> {}
 
-impl<'g> WavefrontJacobiSchedule<'g> {
+impl<'g, O: StencilOp> WavefrontJacobiSchedule<'g, O> {
     /// Build a pass over `u`. `tmp` is the caller-owned temporary ring;
     /// it is resized here and must stay alive (and untouched) for as
     /// long as the schedule runs.
     pub fn new(
+        op: &'g O,
         u: &'g mut Grid3,
         f: &'g Grid3,
         tmp: &'g mut Vec<f64>,
@@ -127,13 +139,21 @@ impl<'g> WavefrontJacobiSchedule<'g> {
     ) -> Result<Self> {
         cfg.validate()?;
         let t = cfg.threads;
+        let r = op.radius();
+        anyhow::ensure!(r >= 1 && r <= MAX_RADIUS, "unsupported halo radius {r}");
         anyhow::ensure!(u.shape() == f.shape(), "u/f shape mismatch");
+        op.validate_domain(u.shape())?;
         let (nz, ny, nx) = u.shape();
-        anyhow::ensure!(nz >= 3 && ny >= 3 && nx >= 3, "grid too small for a wavefront pass");
+        anyhow::ensure!(
+            nz >= 2 * r + 1 && ny >= 2 * r + 1 && nx >= 2 * r + 1,
+            "grid too small for a radius-{r} wavefront pass"
+        );
         let plane = ny * nx;
         tmp.clear();
-        tmp.resize((t / 2) * TMP_SLOTS * plane, 0.0);
+        tmp.resize((t / 2) * tmp_slots(r) * plane, 0.0);
+        let lag = (r + 1) as isize;
         Ok(Self {
+            op,
             src: u.data_mut().as_mut_ptr(),
             tmp: tmp.as_mut_ptr(),
             f: f.data().as_ptr(),
@@ -141,62 +161,66 @@ impl<'g> WavefrontJacobiSchedule<'g> {
             ny,
             nx,
             t,
+            r,
             h2,
             sync: cfg.sync,
             barrier: AnyBarrier::new(cfg.barrier, t),
-            last_round: (nz - 2) as isize + 2 * (t as isize - 1),
+            last_round: (nz - 2 * r) as isize + lag * (t as isize - 1),
             _borrow: PhantomData,
         })
     }
 }
 
-impl Schedule for WavefrontJacobiSchedule<'_> {
+impl<O: StencilOp> Schedule for WavefrontJacobiSchedule<'_, O> {
     fn workers(&self) -> usize {
         self.t
     }
 
     fn worker(&self, s: usize, progress: &Progress) {
-        let (nz, ny, nx, t) = (self.nz, self.ny, self.nx, self.t);
+        let (nz, ny, nx, t, r) = (self.nz, self.ny, self.nx, self.t, self.r);
         let plane = ny * nx;
+        let slots = tmp_slots(r);
+        let lag = (r + 1) as isize;
+        let interior_hi = (nz - 1 - r) as isize;
         let src = self.src;
         let tmpp = self.tmp;
         let f_base = self.f;
         // plane base pointer holding the step-`s` values of plane kk as
         // seen by worker `s` (its read side).
         let read_plane = |kk: usize| -> *const f64 {
-            if kk == 0 || kk == nz - 1 || s % 2 == 0 {
+            if kk < r || kk >= nz - r || s % 2 == 0 {
                 unsafe { src.add(kk * plane) as *const f64 }
             } else {
-                let region = (s / 2) * TMP_SLOTS;
-                unsafe { tmpp.add((region + kk % TMP_SLOTS) * plane) as *const f64 }
+                let region = (s / 2) * slots;
+                unsafe { tmpp.add((region + kk % slots) * plane) as *const f64 }
             }
         };
         let write_plane = |k: usize| -> *mut f64 {
             if s % 2 == 0 {
-                let region = (s / 2) * TMP_SLOTS;
-                unsafe { tmpp.add((region + k % TMP_SLOTS) * plane) }
+                let region = (s / 2) * slots;
+                unsafe { tmpp.add((region + k % slots) * plane) }
             } else {
                 unsafe { src.add(k * plane) }
             }
         };
 
-        for r in 1..=self.last_round {
-            let k = r - 2 * s as isize;
-            if k >= 1 && k <= (nz - 2) as isize {
+        for round in 1..=self.last_round {
+            let k = round + (r as isize - 1) - lag * s as isize;
+            if k >= r as isize && k <= interior_hi {
                 let k = k as usize;
                 if self.sync == SyncMode::Flow {
                     // forward dependency: window complete at step s.
-                    // Plane nz-1 is boundary and never processed, so at
-                    // k = nz-2 the window is complete once the producer
-                    // finished its own last interior plane.
+                    // Planes beyond the interior are boundary and never
+                    // processed, so near the top the window is complete
+                    // once the producer finished its last interior plane.
                     if s > 0 {
-                        let need = (k as isize + 1).min((nz - 2) as isize);
+                        let need = (k as isize + r as isize).min(interior_hi);
                         progress.wait_min(s - 1, need);
                     }
                     // back-pressure: do not overwrite a tmp slot the
                     // consumer may still read
                     if s + 1 < t {
-                        progress.wait_min(s + 1, k as isize - (TMP_SLOTS as isize - 1));
+                        progress.wait_min(s + 1, k as isize - slots as isize + r as isize);
                     }
                 }
                 // SAFETY: the schedule guarantees exclusive write access
@@ -204,40 +228,55 @@ impl Schedule for WavefrontJacobiSchedule<'_> {
                 // holds completed step values (see module docs); lines
                 // below are disjoint slices.
                 unsafe {
-                    let zm = read_plane(k - 1);
-                    let zc = read_plane(k);
-                    let zp = read_plane(k + 1);
                     let out = write_plane(k);
                     // boundary lines of the output plane must carry the
                     // (step-invariant) boundary values so later steps
                     // read correct y-edges from the tmp.
                     if s % 2 == 0 {
-                        let src_line0 = src.add(k * plane) as *const f64;
-                        std::ptr::copy_nonoverlapping(src_line0, out, nx);
-                        std::ptr::copy_nonoverlapping(
-                            src_line0.add((ny - 1) * nx),
-                            out.add((ny - 1) * nx),
-                            nx,
-                        );
+                        let src_plane = src.add(k * plane) as *const f64;
+                        for j in 0..r {
+                            std::ptr::copy_nonoverlapping(src_plane.add(j * nx), out.add(j * nx), nx);
+                            std::ptr::copy_nonoverlapping(
+                                src_plane.add((ny - 1 - j) * nx),
+                                out.add((ny - 1 - j) * nx),
+                                nx,
+                            );
+                        }
                         // x-edge columns are copied per line below.
                     }
-                    for j in 1..ny - 1 {
+                    let zc = read_plane(k);
+                    // z-plane base pointers are loop-invariant in j —
+                    // hoisted out of the line loop as before the refactor
+                    let mut zm_p = [zc; MAX_RADIUS];
+                    let mut zp_p = [zc; MAX_RADIUS];
+                    for d in 0..r {
+                        zm_p[d] = read_plane(k - d - 1);
+                        zp_p[d] = read_plane(k + d + 1);
+                    }
+                    let line = |p: *const f64, jj: usize| std::slice::from_raw_parts(p.add(jj * nx), nx);
+                    for j in r..ny - r {
                         let dst = std::slice::from_raw_parts_mut(out.add(j * nx), nx);
-                        let center = std::slice::from_raw_parts(zc.add(j * nx), nx);
+                        let center = line(zc, j);
                         if s % 2 == 0 {
                             // carry the Dirichlet x-edges into tmp
-                            dst[0] = center[0];
-                            dst[nx - 1] = center[nx - 1];
+                            crate::stencil::op::copy_x_edges(dst, center, r);
                         }
-                        jacobi_line_update(
+                        let win = StarWindow::from_fn(center, r, |dz, dy| {
+                            if dz == 0 {
+                                line(zc, (j as isize + dy) as usize)
+                            } else if dz < 0 {
+                                line(zm_p[(-dz - 1) as usize], j)
+                            } else {
+                                line(zp_p[(dz - 1) as usize], j)
+                            }
+                        });
+                        self.op.line_update(
                             dst,
-                            center,
-                            std::slice::from_raw_parts(zc.add((j - 1) * nx), nx),
-                            std::slice::from_raw_parts(zc.add((j + 1) * nx), nx),
-                            std::slice::from_raw_parts(zm.add(j * nx), nx),
-                            std::slice::from_raw_parts(zp.add(j * nx), nx),
+                            &win,
                             std::slice::from_raw_parts(f_base.add((k * ny + j) * nx), nx),
                             self.h2,
+                            k,
+                            j,
                         );
                     }
                 }
@@ -250,11 +289,16 @@ impl Schedule for WavefrontJacobiSchedule<'_> {
     }
 }
 
-/// Run `passes` wavefront passes on `pool`, one team, one temporary ring
-/// (the ring lives in the pool's reusable [`Scratch`](super::pool::Scratch),
-/// so repeated calls reuse one allocation).
-pub(crate) fn wavefront_jacobi_passes(
+/// Run `passes` wavefront passes of `op` on `pool`, one team, one
+/// temporary ring (the ring lives in the pool's reusable
+/// [`Scratch`](super::pool::Scratch), so repeated calls reuse one
+/// allocation). The pool-level entry point the [`SchemeRunner`]
+/// registry, tests and benches drive.
+///
+/// [`SchemeRunner`]: super::runner::SchemeRunner
+pub fn wavefront_jacobi_passes<O: StencilOp>(
     pool: &mut WorkerPool,
+    op: &O,
     u: &mut Grid3,
     f: &Grid3,
     h2: f64,
@@ -263,13 +307,14 @@ pub(crate) fn wavefront_jacobi_passes(
 ) -> Result<()> {
     cfg.validate()?;
     anyhow::ensure!(u.shape() == f.shape(), "u/f shape mismatch");
+    let r = op.radius();
     let (nz, ny, nx) = u.shape();
-    if nz < 3 || ny < 3 || nx < 3 || passes == 0 {
+    if nz < 2 * r + 1 || ny < 2 * r + 1 || nx < 2 * r + 1 || passes == 0 {
         return Ok(());
     }
     let mut scratch = pool.take_scratch();
     let result = (|| -> Result<()> {
-        let schedule = WavefrontJacobiSchedule::new(u, f, &mut scratch.planes, h2, cfg)?;
+        let schedule = WavefrontJacobiSchedule::new(op, u, f, &mut scratch.planes, h2, cfg)?;
         for _ in 0..passes {
             pool.run(&schedule)?;
         }
@@ -288,59 +333,7 @@ pub(crate) fn check_iters_multiple(iters: usize, t: usize) -> Result<()> {
     Ok(())
 }
 
-/// Perform exactly `cfg.threads` Jacobi updates on `u` in place.
-///
-/// Functionally equal to `cfg.threads` calls of [`jacobi_sweep`] with
-/// ping-pong buffers, but executed by one wavefront thread group on the
-/// calling thread's convenience pool.
-#[deprecated(since = "0.2.0", note = "use a `coordinator::solver::Solver` session")]
-pub fn wavefront_jacobi(u: &mut Grid3, f: &Grid3, h2: f64, cfg: &WavefrontConfig) -> Result<()> {
-    pool::with_local(|p| wavefront_jacobi_passes(p, u, f, h2, cfg, 1))
-}
-
-/// [`wavefront_jacobi`] on a caller-owned pool.
-#[deprecated(since = "0.2.0", note = "use a `coordinator::solver::Solver` session")]
-pub fn wavefront_jacobi_on(
-    pool: &mut WorkerPool,
-    u: &mut Grid3,
-    f: &Grid3,
-    h2: f64,
-    cfg: &WavefrontConfig,
-) -> Result<()> {
-    wavefront_jacobi_passes(pool, u, f, h2, cfg, 1)
-}
-
-/// Run `iters` updates (a multiple of `cfg.threads`) via repeated passes
-/// of one persistent team (no per-pass thread respawn).
-#[deprecated(since = "0.2.0", note = "use a `coordinator::solver::Solver` session")]
-pub fn wavefront_jacobi_iters(
-    u: &mut Grid3,
-    f: &Grid3,
-    h2: f64,
-    cfg: &WavefrontConfig,
-    iters: usize,
-) -> Result<()> {
-    cfg.validate()?;
-    check_iters_multiple(iters, cfg.threads)?;
-    pool::with_local(|p| wavefront_jacobi_passes(p, u, f, h2, cfg, iters / cfg.threads))
-}
-
-/// [`wavefront_jacobi_iters`] on a caller-owned pool.
-#[deprecated(since = "0.2.0", note = "use a `coordinator::solver::Solver` session")]
-pub fn wavefront_jacobi_iters_on(
-    pool: &mut WorkerPool,
-    u: &mut Grid3,
-    f: &Grid3,
-    h2: f64,
-    cfg: &WavefrontConfig,
-    iters: usize,
-) -> Result<()> {
-    cfg.validate()?;
-    check_iters_multiple(iters, cfg.threads)?;
-    wavefront_jacobi_passes(pool, u, f, h2, cfg, iters / cfg.threads)
-}
-
-/// Reference: `n` serial Jacobi sweeps, returning the result.
+/// Reference: `n` serial Jacobi sweeps of the paper's 7-point op.
 pub fn serial_reference(u: &Grid3, f: &Grid3, h2: f64, n: usize) -> Grid3 {
     let mut a = u.clone();
     let mut b = u.clone();
@@ -351,23 +344,60 @@ pub fn serial_reference(u: &Grid3, f: &Grid3, h2: f64, n: usize) -> Grid3 {
     a
 }
 
+/// Reference: `n` serial sweeps of an arbitrary op.
+pub fn serial_reference_op<O: StencilOp + ?Sized>(
+    op: &O,
+    u: &Grid3,
+    f: &Grid3,
+    h2: f64,
+    n: usize,
+) -> Grid3 {
+    let mut a = u.clone();
+    let mut b = u.clone();
+    for _ in 0..n {
+        op_jacobi_sweep(op, &mut b, &a, f, h2);
+        std::mem::swap(&mut a, &mut b);
+    }
+    a
+}
+
 #[cfg(test)]
 mod tests {
-    #![allow(deprecated)] // the shim matrix stays covered until removal
-
     use super::*;
+    use crate::stencil::op::{ConstLaplace7, Laplace13};
+
+    fn run_wf<O: StencilOp>(
+        op: &O,
+        u: &mut Grid3,
+        f: &Grid3,
+        h2: f64,
+        cfg: &WavefrontConfig,
+        passes: usize,
+    ) -> Result<()> {
+        let mut pool = WorkerPool::new(0);
+        wavefront_jacobi_passes(&mut pool, op, u, f, h2, cfg, passes)
+    }
 
     fn check(nz: usize, ny: usize, nx: usize, t: usize, sync: SyncMode, barrier: BarrierKind) {
         let f = Grid3::random(nz, ny, nx, 77);
         let mut u = Grid3::random(nz, ny, nx, 42);
         let want = serial_reference(&u, &f, 0.8, t);
         let cfg = WavefrontConfig { threads: t, barrier, sync };
-        wavefront_jacobi(&mut u, &f, 0.8, &cfg).unwrap();
+        run_wf(&ConstLaplace7, &mut u, &f, 0.8, &cfg, 1).unwrap();
         assert_eq!(
             u.max_abs_diff(&want),
             0.0,
             "bit-exactness {nz}x{ny}x{nx} t={t} {sync:?} {barrier:?}"
         );
+    }
+
+    fn check_r2(nz: usize, ny: usize, nx: usize, t: usize, sync: SyncMode) {
+        let f = Grid3::random(nz, ny, nx, 7);
+        let mut u = Grid3::random(nz, ny, nx, 8);
+        let want = serial_reference_op(&Laplace13, &u, &f, 0.8, t);
+        let cfg = WavefrontConfig { threads: t, barrier: BarrierKind::Spin, sync };
+        run_wf(&Laplace13, &mut u, &f, 0.8, &cfg, 1).unwrap();
+        assert_eq!(u.max_abs_diff(&want), 0.0, "radius-2 {nz}x{ny}x{nx} t={t} {sync:?}");
     }
 
     #[test]
@@ -399,24 +429,23 @@ mod tests {
     }
 
     #[test]
+    fn radius2_op_matches_its_serial_reference() {
+        check_r2(14, 11, 10, 2, SyncMode::Barrier);
+        check_r2(14, 11, 10, 2, SyncMode::Flow);
+        check_r2(16, 9, 11, 4, SyncMode::Barrier);
+        check_r2(16, 9, 11, 4, SyncMode::Flow);
+        check_r2(12, 8, 9, 6, SyncMode::Flow);
+        // fill/drain-only grid for radius 2
+        check_r2(7, 6, 6, 4, SyncMode::Flow);
+        check_r2(5, 5, 5, 2, SyncMode::Barrier);
+    }
+
+    #[test]
     fn odd_thread_count_rejected() {
         let mut u = Grid3::random(8, 8, 8, 1);
         let f = Grid3::zeros(8, 8, 8);
         let cfg = WavefrontConfig { threads: 3, ..Default::default() };
-        assert!(wavefront_jacobi(&mut u, &f, 1.0, &cfg).is_err());
-    }
-
-    #[test]
-    fn iters_multiple_passes() {
-        let f = Grid3::random(10, 8, 8, 5);
-        let mut u = Grid3::random(10, 8, 8, 6);
-        let want = serial_reference(&u, &f, 1.0, 8);
-        let cfg = WavefrontConfig { threads: 4, ..Default::default() };
-        wavefront_jacobi_iters(&mut u, &f, 1.0, &cfg, 8).unwrap();
-        assert_eq!(u.max_abs_diff(&want), 0.0);
-        // non-multiple is an error
-        let mut v = Grid3::random(10, 8, 8, 6);
-        assert!(wavefront_jacobi_iters(&mut v, &f, 1.0, &cfg, 6).is_err());
+        assert!(run_wf(&ConstLaplace7, &mut u, &f, 1.0, &cfg, 1).is_err());
     }
 
     #[test]
@@ -426,7 +455,7 @@ mod tests {
         let want = serial_reference(&u, &f, 0.5, 24);
         let cfg = WavefrontConfig { threads: 4, sync: SyncMode::Flow, ..Default::default() };
         let mut pool = WorkerPool::new(4);
-        wavefront_jacobi_iters_on(&mut pool, &mut u, &f, 0.5, &cfg, 24).unwrap();
+        wavefront_jacobi_passes(&mut pool, &ConstLaplace7, &mut u, &f, 0.5, &cfg, 6).unwrap();
         assert_eq!(u.max_abs_diff(&want), 0.0);
     }
 
@@ -435,7 +464,13 @@ mod tests {
         let mut u = Grid3::random(2, 6, 6, 9);
         let orig = u.clone();
         let f = Grid3::zeros(2, 6, 6);
-        wavefront_jacobi(&mut u, &f, 1.0, &WavefrontConfig::default()).unwrap();
+        run_wf(&ConstLaplace7, &mut u, &f, 1.0, &WavefrontConfig::default(), 1).unwrap();
         assert_eq!(u, orig);
+    }
+
+    #[test]
+    fn iters_guard_still_rejects_non_multiples() {
+        assert!(check_iters_multiple(8, 4).is_ok());
+        assert!(check_iters_multiple(6, 4).is_err());
     }
 }

@@ -1,33 +1,36 @@
-//! Wavefront temporal blocking for Gauss-Seidel (paper Sec. 4, Fig. 5b).
+//! Wavefront temporal blocking for Gauss-Seidel (paper Sec. 4, Fig. 5b),
+//! generic over the [`StencilOp`] kernel layer.
 //!
 //! The adaptation of the wavefront scheme to the in-place GS method: since
 //! all updates operate on one array, no temporary planes are needed at
 //! all. A pass runs `S` complete sweeps through the grid *simultaneously*:
 //! sweep `s` (a worker group, itself pipeline-parallel over y as in
 //! Fig. 5a) trails sweep `s-1` in z so that when it updates plane `k`,
-//! plane `k+1` already carries post-sweep-`s-1` values and plane `k-1`
-//! carries its own freshly written values — the exact lexicographic
-//! semantics, `S` times, in one traversal of memory.
+//! planes `k+1 … k+R` already carry post-sweep-`s-1` values and planes
+//! `k-1 … k-R` carry its own freshly written values — the exact
+//! lexicographic semantics, `S` times, in one traversal of memory.
 //!
 //! Dependencies enforced by the shared progress table:
 //! * pipeline (within sweep `s`): worker `p` starts plane `k` after worker
 //!   `p-1` finishes plane `k`;
 //! * wavefront (between sweeps): sweep `s` starts plane `k` after *all*
-//!   workers of sweep `s-1` finish plane `k+1`.
+//!   workers of sweep `s-1` finish plane `k+R` (halo radius `R`), so
+//!   sweep `s-1` both finished the halo planes sweep `s` reads *and*
+//!   stopped reading the planes sweep `s` writes.
 //!
 //! The pass is a [`Schedule`] on the persistent [`WorkerPool`]
-//! (`S × width` workers); `wavefront_gs_iters` reuses one team across all
-//! passes. Bit-identical to `S` serial sweeps — asserted by tests for all
-//! shapes, group counts and pipeline widths.
+//! (`S × width` workers). Bit-identical to `S` serial sweeps — asserted
+//! by tests for all shapes, group counts, pipeline widths and radii.
 
 use std::marker::PhantomData;
 
-use crate::stencil::gauss_seidel::{gs_plane_line_raw, gs_sweep, GsKernel};
+use crate::stencil::gauss_seidel::GsKernel;
 use crate::stencil::grid::Grid3;
+use crate::stencil::op::{op_gs_line_raw, op_gs_sweep, StencilOp};
 use crate::Result;
 
-use super::pipeline::chunk_lines;
-use super::pool::{self, WorkerPool};
+use super::pipeline::chunk_lines_r;
+use super::pool::WorkerPool;
 use super::schedule::{Progress, Schedule};
 
 /// Configuration of a GS wavefront pass.
@@ -56,16 +59,18 @@ impl GsWavefrontConfig {
     }
 }
 
-/// One GS wavefront pass as a [`Schedule`].
+/// One GS wavefront pass of `op` as a [`Schedule`].
 ///
 /// Worker `id` is thread `id % width` of sweep `id / width`; progress
 /// slot `s * width + p` holds the last plane completed by thread `p` of
 /// sweep `s`.
-pub struct GsWavefrontSchedule<'g> {
+pub struct GsWavefrontSchedule<'g, O: StencilOp> {
+    op: &'g O,
     base: *mut f64,
     nz: usize,
     ny: usize,
     nx: usize,
+    r: usize,
     sweeps: usize,
     width: usize,
     chunks: Vec<(usize, usize)>,
@@ -76,45 +81,57 @@ pub struct GsWavefrontSchedule<'g> {
 // SAFETY: plane/chunk exclusivity is enforced by the progress protocol
 // (module docs); neighbor lines are only read in states the protocol
 // freezes.
-unsafe impl Send for GsWavefrontSchedule<'_> {}
-unsafe impl Sync for GsWavefrontSchedule<'_> {}
+unsafe impl<O: StencilOp> Send for GsWavefrontSchedule<'_, O> {}
+unsafe impl<O: StencilOp> Sync for GsWavefrontSchedule<'_, O> {}
 
-impl<'g> GsWavefrontSchedule<'g> {
+impl<'g, O: StencilOp> GsWavefrontSchedule<'g, O> {
     /// Build one pass of `cfg.sweeps` simultaneous sweeps over `u`.
-    pub fn new(u: &'g mut Grid3, cfg: &GsWavefrontConfig) -> Result<Self> {
+    pub fn new(op: &'g O, u: &'g mut Grid3, cfg: &GsWavefrontConfig) -> Result<Self> {
         cfg.validate()?;
+        let r = op.radius();
+        anyhow::ensure!(
+            r >= 1 && r <= crate::stencil::op::MAX_RADIUS,
+            "unsupported halo radius {r}"
+        );
+        op.validate_domain(u.shape())?;
         let (nz, ny, nx) = u.shape();
-        anyhow::ensure!(nz >= 3 && ny >= 3 && nx >= 3, "grid too small for a wavefront pass");
+        anyhow::ensure!(
+            nz >= 2 * r + 1 && ny >= 2 * r + 1 && nx >= 2 * r + 1,
+            "grid too small for a radius-{r} wavefront pass"
+        );
         Ok(Self {
+            op,
             base: u.data_mut().as_mut_ptr(),
             nz,
             ny,
             nx,
+            r,
             sweeps: cfg.sweeps,
             width: cfg.threads_per_group,
-            chunks: chunk_lines(ny, cfg.threads_per_group),
+            chunks: chunk_lines_r(ny, cfg.threads_per_group, r),
             kernel: cfg.kernel,
             _borrow: PhantomData,
         })
     }
 }
 
-impl Schedule for GsWavefrontSchedule<'_> {
+impl<O: StencilOp> Schedule for GsWavefrontSchedule<'_, O> {
     fn workers(&self) -> usize {
         self.sweeps * self.width
     }
 
     fn worker(&self, id: usize, progress: &Progress) {
         let width = self.width;
+        let r = self.r;
         let s = id / width;
         let p = id % width;
         let (j0, j1) = self.chunks[p];
-        for k in 1..self.nz - 1 {
-            // wavefront dependency: previous sweep fully past plane k+1
-            // (so k+1 holds post-sweep-(s-1) values and nobody still
+        for k in r..self.nz - r {
+            // wavefront dependency: previous sweep fully past plane k+R
+            // (so k+1..k+R hold post-sweep-(s-1) values and nobody still
             // reads our plane k).
             if s > 0 {
-                let need = (k + 1).min(self.nz - 2) as isize;
+                let need = (k + r).min(self.nz - 1 - r) as isize;
                 for q in 0..width {
                     progress.wait_min((s - 1) * width + q, need);
                 }
@@ -128,7 +145,7 @@ impl Schedule for GsWavefrontSchedule<'_> {
             // freezes (see module docs).
             unsafe {
                 for j in j0..j1 {
-                    gs_plane_line_raw(self.base, self.ny, self.nx, k, j, self.kernel);
+                    op_gs_line_raw(self.op, self.base, self.ny, self.nx, k, j, self.kernel);
                 }
             }
             progress.publish(s * width + p, k as isize);
@@ -136,96 +153,88 @@ impl Schedule for GsWavefrontSchedule<'_> {
     }
 }
 
-/// Run `passes` wavefront passes on `pool` with one schedule.
-pub(crate) fn wavefront_gs_passes(
+/// Run `passes` wavefront passes of `op` on `pool` with one schedule.
+pub fn wavefront_gs_passes<O: StencilOp>(
     pool: &mut WorkerPool,
+    op: &O,
     u: &mut Grid3,
     cfg: &GsWavefrontConfig,
     passes: usize,
 ) -> Result<()> {
     cfg.validate()?;
+    let r = op.radius();
     let (nz, ny, nx) = u.shape();
-    if nz < 3 || ny < 3 || nx < 3 || passes == 0 {
+    if nz < 2 * r + 1 || ny < 2 * r + 1 || nx < 2 * r + 1 || passes == 0 {
         return Ok(());
     }
     if cfg.sweeps == 1 && cfg.threads_per_group == 1 {
         for _ in 0..passes {
-            gs_sweep(u, cfg.kernel);
+            op_gs_sweep(op, u, cfg.kernel);
         }
         return Ok(());
     }
-    let schedule = GsWavefrontSchedule::new(u, cfg)?;
+    let schedule = GsWavefrontSchedule::new(op, u, cfg)?;
     for _ in 0..passes {
         pool.run(&schedule)?;
     }
     Ok(())
 }
 
-/// `iters` sweeps via passes of `cfg.sweeps` each (+ a remainder pass
-/// with fewer simultaneous sweeps), all on one team.
-pub(crate) fn wavefront_gs_iters_passes(
+/// `iters` sweeps of `op` via passes of `cfg.sweeps` each (+ a remainder
+/// pass with fewer simultaneous sweeps), all on one team — the
+/// pool-level entry point the [`SchemeRunner`] registry, tests and
+/// benches drive.
+///
+/// [`SchemeRunner`]: super::runner::SchemeRunner
+pub fn wavefront_gs_iters_passes<O: StencilOp>(
     pool: &mut WorkerPool,
+    op: &O,
     u: &mut Grid3,
     cfg: &GsWavefrontConfig,
     iters: usize,
 ) -> Result<()> {
     cfg.validate()?;
-    wavefront_gs_passes(pool, u, cfg, iters / cfg.sweeps)?;
+    wavefront_gs_passes(pool, op, u, cfg, iters / cfg.sweeps)?;
     let rest = iters % cfg.sweeps;
     if rest > 0 {
         let tail = GsWavefrontConfig { sweeps: rest, ..*cfg };
-        wavefront_gs_passes(pool, u, &tail, 1)?;
+        wavefront_gs_passes(pool, op, u, &tail, 1)?;
     }
     Ok(())
 }
 
-/// Run `cfg.sweeps` lexicographic GS sweeps in one wavefront pass.
-#[deprecated(since = "0.2.0", note = "use a `coordinator::solver::Solver` session")]
-pub fn wavefront_gs(u: &mut Grid3, cfg: &GsWavefrontConfig) -> Result<()> {
-    pool::with_local(|p| wavefront_gs_passes(p, u, cfg, 1))
-}
-
-/// [`wavefront_gs`] on a caller-owned pool.
-#[deprecated(since = "0.2.0", note = "use a `coordinator::solver::Solver` session")]
-pub fn wavefront_gs_on(pool: &mut WorkerPool, u: &mut Grid3, cfg: &GsWavefrontConfig) -> Result<()> {
-    wavefront_gs_passes(pool, u, cfg, 1)
-}
-
-/// `iters` sweeps via passes of `cfg.sweeps` each (+ a remainder pass),
-/// all on one persistent team.
-#[deprecated(since = "0.2.0", note = "use a `coordinator::solver::Solver` session")]
-pub fn wavefront_gs_iters(u: &mut Grid3, cfg: &GsWavefrontConfig, iters: usize) -> Result<()> {
-    pool::with_local(|p| wavefront_gs_iters_passes(p, u, cfg, iters))
-}
-
-/// [`wavefront_gs_iters`] on a caller-owned pool.
-#[deprecated(since = "0.2.0", note = "use a `coordinator::solver::Solver` session")]
-pub fn wavefront_gs_iters_on(
-    pool: &mut WorkerPool,
-    u: &mut Grid3,
-    cfg: &GsWavefrontConfig,
-    iters: usize,
-) -> Result<()> {
-    wavefront_gs_iters_passes(pool, u, cfg, iters)
-}
-
 #[cfg(test)]
 mod tests {
-    #![allow(deprecated)] // the shim matrix stays covered until removal
-
     use super::*;
     use crate::stencil::gauss_seidel::gs_sweeps;
+    use crate::stencil::op::{op_gs_sweeps, ConstLaplace7, Laplace13};
+
+    fn run_gs_wf<O: StencilOp>(op: &O, u: &mut Grid3, cfg: &GsWavefrontConfig) -> Result<()> {
+        let mut pool = WorkerPool::new(0);
+        wavefront_gs_passes(&mut pool, op, u, cfg, 1)
+    }
 
     fn check(nz: usize, ny: usize, nx: usize, sweeps: usize, width: usize) {
         let mut u = Grid3::random(nz, ny, nx, 123);
         let mut want = u.clone();
         gs_sweeps(&mut want, sweeps, GsKernel::Interleaved);
-        let cfg = GsWavefrontConfig { sweeps, threads_per_group: width, kernel: GsKernel::Interleaved };
-        wavefront_gs(&mut u, &cfg).unwrap();
+        let cfg =
+            GsWavefrontConfig { sweeps, threads_per_group: width, kernel: GsKernel::Interleaved };
+        run_gs_wf(&ConstLaplace7, &mut u, &cfg).unwrap();
+        assert_eq!(u.max_abs_diff(&want), 0.0, "{nz}x{ny}x{nx} S={sweeps} width={width}");
+    }
+
+    fn check_r2(nz: usize, ny: usize, nx: usize, sweeps: usize, width: usize) {
+        let mut u = Grid3::random(nz, ny, nx, 321);
+        let mut want = u.clone();
+        op_gs_sweeps(&Laplace13, &mut want, sweeps, GsKernel::Interleaved);
+        let cfg =
+            GsWavefrontConfig { sweeps, threads_per_group: width, kernel: GsKernel::Interleaved };
+        run_gs_wf(&Laplace13, &mut u, &cfg).unwrap();
         assert_eq!(
             u.max_abs_diff(&want),
             0.0,
-            "{nz}x{ny}x{nx} S={sweeps} width={width}"
+            "radius-2 {nz}x{ny}x{nx} S={sweeps} width={width}"
         );
     }
 
@@ -252,6 +261,17 @@ mod tests {
     }
 
     #[test]
+    fn radius2_wavefront_matches_serial() {
+        check_r2(12, 10, 9, 2, 1);
+        check_r2(12, 10, 9, 3, 1);
+        check_r2(10, 14, 9, 2, 2);
+        check_r2(11, 12, 9, 4, 2);
+        // pipeline longer than the z extent, radius 2
+        check_r2(6, 8, 7, 5, 1);
+        check_r2(5, 7, 7, 3, 2);
+    }
+
+    #[test]
     fn smt_like_oversubscription() {
         // more logical workers than this box has cores: 8 × 2 = 16
         check(9, 18, 8, 8, 2);
@@ -270,7 +290,8 @@ mod tests {
         let mut want = u.clone();
         gs_sweeps(&mut want, 7, GsKernel::Interleaved);
         let cfg = GsWavefrontConfig { sweeps: 3, threads_per_group: 2, kernel: GsKernel::Interleaved };
-        wavefront_gs_iters(&mut u, &cfg, 7).unwrap();
+        let mut pool = WorkerPool::new(0);
+        wavefront_gs_iters_passes(&mut pool, &ConstLaplace7, &mut u, &cfg, 7).unwrap();
         assert_eq!(u.max_abs_diff(&want), 0.0);
     }
 
@@ -281,7 +302,7 @@ mod tests {
         gs_sweeps(&mut want, 8, GsKernel::Interleaved);
         let cfg = GsWavefrontConfig { sweeps: 4, threads_per_group: 2, kernel: GsKernel::Interleaved };
         let mut pool = WorkerPool::new(8);
-        wavefront_gs_iters_on(&mut pool, &mut u, &cfg, 8).unwrap();
+        wavefront_gs_iters_passes(&mut pool, &ConstLaplace7, &mut u, &cfg, 8).unwrap();
         assert_eq!(u.max_abs_diff(&want), 0.0);
     }
 }

@@ -18,12 +18,14 @@ use crate::coordinator::pool::panic_message;
 use crate::coordinator::solver::Solver;
 use crate::metrics::{mlups, timed};
 use crate::stencil::grid::Grid3;
+use crate::stencil::op::OpKind;
 use crate::Result;
 
 /// Outcome of one launched experiment.
 #[derive(Clone, Debug)]
 pub struct RunReport {
     pub scheme: Scheme,
+    pub op: OpKind,
     pub size: (usize, usize, usize),
     pub iters: usize,
     pub t: usize,
@@ -72,9 +74,13 @@ pub fn run_experiment(cfg: &RunConfig) -> Result<RunReport> {
     // ---- prediction leg on the paper testbed (the runner's model leg)
     let predicted = cfg.machine_spec().map(|m| solver.predict(&m));
 
-    let updates = (u0.interior_len() * cfg.iters) as u64;
+    // radius-aware update count: a radius-R op only updates the
+    // (n-2R)^3 deep interior, so wider halos must not inflate MLUP/s
+    let r = cfg.op.radius();
+    let updates = ((nz - 2 * r) * (ny - 2 * r) * (nx - 2 * r) * cfg.iters) as u64;
     Ok(RunReport {
         scheme: cfg.scheme,
+        op: cfg.op,
         size: cfg.size,
         iters: cfg.iters,
         t: cfg.t,
@@ -122,12 +128,13 @@ pub fn sweep(configs: Vec<RunConfig>, max_parallel: usize) -> Vec<Result<RunRepo
 /// Render reports as a CSV block (one row per report).
 pub fn to_csv(reports: &[RunReport]) -> String {
     let mut s = String::from(
-        "scheme,nz,ny,nx,iters,t,groups,host_mlups,verify_diff,machine,predicted_mlups\n",
+        "scheme,op,nz,ny,nx,iters,t,groups,host_mlups,verify_diff,machine,predicted_mlups\n",
     );
     for r in reports {
         s += &format!(
-            "{:?},{},{},{},{},{},{},{:.2},{:.3e},{},{}\n",
+            "{:?},{},{},{},{},{},{},{},{:.2},{:.3e},{},{}\n",
             r.scheme,
+            r.op.as_str(),
             r.size.0,
             r.size.1,
             r.size.2,
@@ -160,23 +167,35 @@ mod tests {
             nt_stores: true,
             barrier: BarrierKind::Spin,
             machine: Some("Nehalem EP".into()),
-            pin: crate::coordinator::affinity::PinPolicy::None,
+            ..Default::default()
         }
     }
 
     #[test]
     fn all_schemes_run_verified() {
-        for scheme in [
-            Scheme::JacobiBaseline,
-            Scheme::JacobiWavefront,
-            Scheme::JacobiMultiGroup,
-            Scheme::GsBaseline,
-            Scheme::GsWavefront,
-        ] {
+        for scheme in Scheme::ALL {
             let report = run_experiment(&cfg(scheme)).unwrap();
             assert_eq!(report.verification_diff, 0.0, "{scheme:?} must be exact");
             assert!(report.host_mlups > 0.0);
             assert!(report.predicted_mlups.unwrap() > 0.0);
+        }
+    }
+
+    #[test]
+    fn every_op_runs_verified_with_finite_predictions() {
+        // the acceptance criterion: both new ops run through every
+        // scheme from the launcher and get finite, op-derived predictions
+        for op in OpKind::ALL {
+            for scheme in Scheme::ALL {
+                let mut c = cfg(scheme);
+                c.op = op;
+                c.size = (14, 14, 14); // radius-2 multigroup needs wider blocks
+                let report = run_experiment(&c).unwrap();
+                assert_eq!(report.verification_diff, 0.0, "{scheme:?} x {op:?} must be exact");
+                assert_eq!(report.op, op);
+                let p = report.predicted_mlups.unwrap();
+                assert!(p.is_finite() && p > 0.0, "{scheme:?} x {op:?}: {p}");
+            }
         }
     }
 

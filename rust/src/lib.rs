@@ -19,10 +19,16 @@
 //! exact access traces, and a STREAM triad model for the Eq. (1) roofline.
 //!
 //! [`stencil`] holds the numerical substrate (grids, line-update kernels,
-//! residuals); [`runtime`] loads the AOT-compiled JAX/Pallas artifacts via
-//! PJRT and is the cross-layer validation oracle; [`config`], [`launcher`]
-//! and [`figures`] form the experiment harness that regenerates every
-//! table and figure of the paper.
+//! residuals) and the generic [`stencil::op::StencilOp`] kernel layer:
+//! every schedule, the scheme registry and the performance model are
+//! parameterized over an operator (halo radius, coefficient structure,
+//! per-LUP traffic), with the paper's 7-point Laplacian
+//! ([`stencil::op::ConstLaplace7`]), a variable-coefficient Helmholtz-style
+//! op and a radius-2 13-point Laplacian shipped. [`runtime`] loads the
+//! AOT-compiled JAX/Pallas artifacts via PJRT and is the cross-layer
+//! validation oracle; [`config`], [`launcher`] and [`figures`] form the
+//! experiment harness that regenerates every table and figure of the
+//! paper.
 //!
 //! ## Quick start
 //!
@@ -47,9 +53,10 @@
 //! solver.run(&mut u, 8).unwrap(); // 8 updates on one persistent team
 //! ```
 //!
-//! The pre-session free functions (`wavefront_jacobi`, …) remain as
-//! deprecated shims for one release (see the migration table in
-//! [`coordinator`]).
+//! The pre-session free-function shims (`wavefront_jacobi`, …) were
+//! removed in 0.3.0 after their one-release deprecation window; the
+//! pool-level `*_passes` entry points remain for explicit-pool callers
+//! (see the migration table in the README).
 
 pub mod benchkit;
 pub mod cli;

@@ -20,6 +20,7 @@ use stencilwave::metrics;
 #[cfg(feature = "xla")]
 use stencilwave::runtime::{engine::validate, Manifest, Runtime};
 use stencilwave::simulator::machine::MachineSpec;
+use stencilwave::stencil::op::OpKind;
 use stencilwave::stencil::streambench::stream_triad;
 use stencilwave::Result;
 
@@ -32,9 +33,12 @@ USAGE: stencilwave <COMMAND> [FLAGS]
 COMMANDS:
   run        run one experiment
                --config <file> | --scheme <s> --n <N> --t <T> --groups <G>
-               --iters <I> --machine <name> --pin <none|compact|scatter> --csv
+               --iters <I> --op <o> --machine <name>
+               --pin <none|compact|scatter> --csv
                schemes: jacobi-baseline jacobi-wavefront jacobi-multigroup
                         gs-baseline gs-wavefront
+               ops:     laplace7 (paper 7-point) varcoeff (Helmholtz-style
+                        coefficient grid) laplace13 (4th-order, radius 2)
                --pin places workers on cores (cache-group aware when
                --machine names a Tab. 1 model; Linux backend, no-op elsewhere)
   figures    regenerate paper tables/figures
@@ -49,7 +53,7 @@ COMMANDS:
 
 fn cmd_run(args: &Args) -> Result<()> {
     args.check_known(&[
-        "config", "scheme", "n", "t", "groups", "iters", "machine", "csv", "smt", "pin",
+        "config", "scheme", "op", "n", "t", "groups", "iters", "machine", "csv", "smt", "pin",
     ])?;
     let mut cfg = match args.get("config") {
         Some(path) => RunConfig::load(std::path::Path::new(path))?,
@@ -67,6 +71,10 @@ fn cmd_run(args: &Args) -> Result<()> {
             }
         }
     };
+    if let Some(op) = args.get("op") {
+        // the flag overrides the config file's `op = "..."` key
+        cfg.op = OpKind::parse(op)?;
+    }
     if let Some(pin) = args.get("pin") {
         // the flag overrides the config file's `pin = "..."` key
         cfg.pin = PinPolicy::parse(pin)?;
@@ -76,8 +84,13 @@ fn cmd_run(args: &Args) -> Result<()> {
         print!("{}", launcher::to_csv(&[report]));
     } else {
         println!(
-            "{:?} {:?} iters={} t={} groups={}",
-            report.scheme, report.size, report.iters, report.t, report.groups
+            "{:?} op={} {:?} iters={} t={} groups={}",
+            report.scheme,
+            report.op.as_str(),
+            report.size,
+            report.iters,
+            report.t,
+            report.groups
         );
         println!(
             "  host: {:.1} MLUP/s in {:.3}s  (verification max|diff| = {:.1e})",

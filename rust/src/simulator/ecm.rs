@@ -29,7 +29,8 @@
 
 
 use super::machine::{MachineSpec, Microarch};
-use super::memory::{self, Dataset, StoreMode};
+use super::memory::{Dataset, StoreMode};
+use crate::stencil::op::{OpKind, TrafficSignature};
 
 /// Which stencil kernel the model prices.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -93,6 +94,58 @@ impl KernelClass {
     }
 }
 
+/// Everything the ECM machinery needs to price one operator: in-core
+/// cycles plus the per-LUP [`TrafficSignature`] the transfer volumes are
+/// derived from. The model no longer hard-codes Jacobi/GS byte counts —
+/// they fall out of [`TrafficSignature::hierarchy_bytes_per_lup`] and
+/// [`TrafficSignature::mem_bytes_per_lup`], so predictions stay
+/// meaningful for every registered [`OpKind`].
+#[derive(Clone, Copy, Debug)]
+pub struct KernelProfile {
+    /// In-core cost (calibrated, flop-scaled for non-baseline ops).
+    pub class: KernelClass,
+    /// Per-LUP stream/flop/radius shape.
+    pub sig: TrafficSignature,
+}
+
+impl KernelProfile {
+    /// Profile of one of the paper's four calibrated kernels — the
+    /// [`ConstLaplace7`](crate::stencil::op::ConstLaplace7) signatures,
+    /// reproducing the pre-`StencilOp` constants exactly.
+    pub fn of_kernel(kernel: Kernel, arch: Microarch) -> Self {
+        let sig = if kernel.is_gs() {
+            OpKind::ConstLaplace7.gs_signature()
+        } else {
+            OpKind::ConstLaplace7.signature()
+        };
+        Self { class: KernelClass::of(kernel, arch), sig }
+    }
+
+    /// Profile of an arbitrary op: the matching baseline calibration
+    /// (Jacobi- or GS-shaped, C or optimized) scaled by the op's flop
+    /// count, plus the op's own traffic signature. For
+    /// [`OpKind::ConstLaplace7`] this is exactly [`Self::of_kernel`].
+    pub fn of_op(kind: OpKind, gs: bool, optimized: bool, arch: Microarch) -> Self {
+        let base_kernel = match (gs, optimized) {
+            (false, true) => Kernel::JacobiOpt,
+            (false, false) => Kernel::JacobiC,
+            (true, true) => Kernel::GsOpt,
+            (true, false) => Kernel::GsC,
+        };
+        let base = KernelClass::of(base_kernel, arch);
+        let (sig, base_sig) = if gs {
+            (kind.gs_signature(), OpKind::ConstLaplace7.gs_signature())
+        } else {
+            (kind.signature(), OpKind::ConstLaplace7.signature())
+        };
+        let scale = sig.flops_per_lup as f64 / base_sig.flops_per_lup as f64;
+        Self {
+            class: KernelClass { lat_cpl: base.lat_cpl * scale, thr_cpl: base.thr_cpl * scale },
+            sig,
+        }
+    }
+}
+
 /// Per-architecture cacheline transfer capabilities (bytes per core cycle).
 #[derive(Clone, Copy, Debug)]
 pub struct TransferModel {
@@ -127,21 +180,6 @@ impl TransferModel {
                 Self { l1l2_bpc: 16.0, l2olc_bpc: 8.0, volume_factor: 2.0, mem_overlap: 0.2 }
             }
         }
-    }
-}
-
-/// Hierarchy traffic of one LUP (bytes that cross each boundary).
-///
-/// Five read streams + one write stream, three planes resident in the
-/// outer cache (Fig. 2): per LUP, 2 lines' worth of reads miss L1 and one
-/// store line returns — 24 B across L1↔L2 and L2↔OLC; the memory boundary
-/// moves [`memory::jacobi_mem_bytes_per_lup`] only for memory datasets.
-fn hierarchy_bytes_per_lup(kernel: Kernel) -> f64 {
-    // GS touches one array in place: slightly lower hierarchy traffic.
-    if kernel.is_gs() {
-        16.0
-    } else {
-        24.0
     }
 }
 
@@ -190,10 +228,9 @@ impl EcmModel {
     }
 
     /// Serial in-core + hierarchy cycles per LUP (no memory term).
-    fn core_and_cache_cpl(&self, kernel: Kernel, smt_threads: usize) -> f64 {
-        let class = KernelClass::of(kernel, self.machine.arch);
-        let t_core = class.effective_cpl(smt_threads);
-        let vol = hierarchy_bytes_per_lup(kernel) * self.transfer.volume_factor;
+    pub(crate) fn core_and_cache_cpl_profile(&self, profile: &KernelProfile, smt_threads: usize) -> f64 {
+        let t_core = profile.class.effective_cpl(smt_threads);
+        let vol = profile.sig.hierarchy_bytes_per_lup() * self.transfer.volume_factor;
         // Intel ECM: transfer phases do not overlap with core execution.
         let t_l1l2 = vol / self.transfer.l1l2_bpc;
         let t_l2olc =
@@ -201,18 +238,21 @@ impl EcmModel {
         t_core + t_l1l2 + t_l2olc
     }
 
-    /// Single-core performance in MLUP/s (Fig. 3a / 4a).
+    /// Single-core performance in MLUP/s (Fig. 3a / 4a) for one of the
+    /// paper's calibrated kernels.
     pub fn serial(&self, kernel: Kernel, dataset: Dataset, store: StoreMode) -> f64 {
-        let cpl = self.core_and_cache_cpl(kernel, 1);
+        self.serial_profile(&KernelProfile::of_kernel(kernel, self.machine.arch), dataset, store)
+    }
+
+    /// Single-core performance in MLUP/s for an arbitrary op profile.
+    pub fn serial_profile(&self, profile: &KernelProfile, dataset: Dataset, store: StoreMode) -> f64 {
+        let cpl = self.core_and_cache_cpl_profile(profile, 1);
         let compute = self.machine.clock_ghz * 1e3 / cpl; // MLUP/s
         match dataset {
             Dataset::Cache => compute,
             Dataset::Memory => {
-                let bytes = if kernel.is_gs() {
-                    memory::gs_mem_bytes_per_lup()
-                } else {
-                    memory::jacobi_mem_bytes_per_lup(store)
-                };
+                let nt = matches!(store, StoreMode::NonTemporal);
+                let bytes = profile.sig.mem_bytes_per_lup(nt);
                 let mem = self.machine.stream_1t_gbs * 1e3 / bytes; // MLUP/s
                 // ECM with partial overlap: the longer phase fully counts,
                 // `mem_overlap` of the shorter phase hides behind it.
@@ -221,7 +261,8 @@ impl EcmModel {
         }
     }
 
-    /// Threaded socket performance (Fig. 3b / 4b baselines).
+    /// Threaded socket performance (Fig. 3b / 4b baselines) for one of
+    /// the paper's calibrated kernels.
     ///
     /// `threads` = logical threads; `smt` ⇒ two per core share a pipeline.
     pub fn socket(
@@ -232,21 +273,36 @@ impl EcmModel {
         threads: usize,
         smt: bool,
     ) -> Prediction {
+        self.socket_profile(
+            &KernelProfile::of_kernel(kernel, self.machine.arch),
+            dataset,
+            store,
+            threads,
+            smt,
+        )
+    }
+
+    /// Threaded socket performance for an arbitrary op profile.
+    pub fn socket_profile(
+        &self,
+        profile: &KernelProfile,
+        dataset: Dataset,
+        store: StoreMode,
+        threads: usize,
+        smt: bool,
+    ) -> Prediction {
         let smt_per_core = if smt { self.machine.smt_per_core } else { 1 };
         let cores = threads.div_ceil(smt_per_core).min(self.machine.cores);
-        let cpl = self.core_and_cache_cpl(kernel, smt_per_core);
+        let cpl = self.core_and_cache_cpl_profile(profile, smt_per_core);
         let compute = cores as f64 * self.machine.clock_ghz * 1e3 / cpl;
-        let vol = hierarchy_bytes_per_lup(kernel) * self.transfer.volume_factor;
+        let vol = profile.sig.hierarchy_bytes_per_lup() * self.transfer.volume_factor;
         let olc = self.machine.olc_bandwidth_gbs(cores) * 1e3 / vol;
         let (compute, mem) = match dataset {
             Dataset::Cache => (compute, f64::INFINITY),
             Dataset::Memory => {
-                let bytes = if kernel.is_gs() {
-                    memory::gs_mem_bytes_per_lup()
-                } else {
-                    memory::jacobi_mem_bytes_per_lup(store)
-                };
-                let nt = matches!(store, StoreMode::NonTemporal) && !kernel.is_gs();
+                let nt_store = matches!(store, StoreMode::NonTemporal);
+                let bytes = profile.sig.mem_bytes_per_lup(nt_store);
+                let nt = nt_store && !profile.sig.in_place;
                 // Per-thread ECM: the memory phase does not overlap with
                 // execution (Intel rule), so each thread runs at the
                 // harmonic combination; threads then scale until the bus
@@ -353,6 +409,61 @@ mod tests {
             let g = e.serial(Kernel::GsOpt, Dataset::Cache, StoreMode::NonTemporal);
             assert!(g < j, "{}: GS {} !< Jacobi {}", m.name, g, j);
         }
+    }
+
+    #[test]
+    fn kernel_profiles_reproduce_the_kernel_path_exactly() {
+        // of_op(ConstLaplace7) must be the identity refactor: same
+        // prediction as the old Kernel-enum path, bit for bit.
+        for m in MachineSpec::testbed() {
+            let e = EcmModel::new(m.clone());
+            for (kernel, gs, opt) in [
+                (Kernel::JacobiOpt, false, true),
+                (Kernel::JacobiC, false, false),
+                (Kernel::GsOpt, true, true),
+                (Kernel::GsC, true, false),
+            ] {
+                let p = KernelProfile::of_op(OpKind::ConstLaplace7, gs, opt, m.arch);
+                for store in [StoreMode::NonTemporal, StoreMode::WriteAllocate] {
+                    for ds in [Dataset::Cache, Dataset::Memory] {
+                        assert_eq!(
+                            e.serial(kernel, ds, store),
+                            e.serial_profile(&p, ds, store),
+                            "{} {kernel:?} {ds:?} {store:?}",
+                            m.name
+                        );
+                        assert_eq!(
+                            e.socket(kernel, ds, store, m.cores, false).mlups,
+                            e.socket_profile(&p, ds, store, m.cores, false).mlups,
+                            "{} {kernel:?} socket",
+                            m.name
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn op_profiles_order_sensibly() {
+        let e = ep();
+        let arch = e.machine.arch;
+        let base = KernelProfile::of_op(OpKind::ConstLaplace7, false, true, arch);
+        let var = KernelProfile::of_op(OpKind::VarCoeff7, false, true, arch);
+        let l13 = KernelProfile::of_op(OpKind::Laplace13, false, true, arch);
+        // extra coefficient stream: more memory traffic, lower mem-bound perf
+        assert!(var.sig.mem_bytes_per_lup(true) > base.sig.mem_bytes_per_lup(true));
+        // more flops: higher in-core cost
+        assert!(l13.class.lat_cpl > base.class.lat_cpl);
+        for p in [&base, &var, &l13] {
+            let mlups =
+                e.socket_profile(p, Dataset::Memory, StoreMode::NonTemporal, 4, false).mlups;
+            assert!(mlups.is_finite() && mlups > 0.0);
+        }
+        // in-cache, the heavier ops cannot be faster than the baseline
+        let perf = |p| e.serial_profile(p, Dataset::Cache, StoreMode::NonTemporal);
+        assert!(perf(&var) < perf(&base));
+        assert!(perf(&l13) < perf(&base));
     }
 
     #[test]

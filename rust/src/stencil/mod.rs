@@ -8,6 +8,7 @@
 pub mod gauss_seidel;
 pub mod grid;
 pub mod jacobi;
+pub mod op;
 pub mod residual;
 pub mod streambench;
 

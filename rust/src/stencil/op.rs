@@ -1,0 +1,937 @@
+//! The generic stencil-operator layer: every schedule in
+//! [`crate::coordinator`] is generic over a [`StencilOp`].
+//!
+//! The paper implements one hard-coded 7-point constant-coefficient
+//! Laplace update and reuses it for every parallel variant. The follow-up
+//! schemes (wavefront diamond tiling, arXiv:1410.3060; intra-tile
+//! parallelization, arXiv:1510.04995) instead treat the operator as a
+//! *parameter* — halo radius, coefficient structure, per-LUP traffic —
+//! and derive schedule depth and performance-model inputs from it. This
+//! module is that parameterization:
+//!
+//! * [`StencilOp`] — the kernel contract: halo [`radius`](StencilOp::radius),
+//!   a Jacobi-style out-of-place [`line_update`](StencilOp::line_update),
+//!   a Gauss-Seidel-style in-place
+//!   [`gs_line_update`](StencilOp::gs_line_update), and a
+//!   [`TrafficSignature`] the ECM model prices instead of hard-coded
+//!   byte counts.
+//! * [`ConstLaplace7`] — the paper's operator; its updates dispatch to
+//!   the seed kernels in [`super::jacobi`] / [`super::gauss_seidel`], so
+//!   the generic path is **bit-identical** to the pre-refactor code
+//!   (asserted by `tests/op_parity.rs`).
+//! * [`VarCoeff7`] — a Helmholtz-style variable-coefficient 7-point
+//!   operator: `(-Δ + λ(x)) u = f` with a per-site coefficient grid,
+//!   adding one read stream to the traffic signature.
+//! * [`Laplace13`] — the 4th-order 13-point star Laplacian (radius 2),
+//!   which forces every schedule to honor halo depth > 1: wavefront lag
+//!   `R+1`, temporary rings of `2R+2` planes, GS wavefront spacing
+//!   `k+R`, and `2R`-line multi-group boundary arrays.
+//!
+//! Schedules are monomorphized over the op type (the registry in
+//! [`crate::coordinator::runner`] instantiates each scheme per op), so
+//! [`ConstLaplace7`] compiles to exactly the code the crate shipped
+//! before this layer existed.
+
+use super::gauss_seidel::{gs_line_update_interleaved, gs_line_update_naive, GsKernel};
+use super::grid::Grid3;
+use super::jacobi::jacobi_line_update;
+use crate::Result;
+
+/// Largest halo radius any registered op uses (window arrays are sized
+/// by this; `radius()` may be smaller, unused slots are never read).
+pub const MAX_RADIUS: usize = 2;
+
+/// Per-LUP data-traffic shape of one operator — the numbers the ECM
+/// model ([`crate::simulator::ecm`]) used to hard-code per kernel.
+///
+/// Streams count *arrays*, not neighbor accesses: with the `2R+1`-plane
+/// rolling window resident in cache (the in-cache layer condition), each
+/// grid an update touches is streamed exactly once per site, so a
+/// 7-point and a 13-point Laplacian on one array both have a single read
+/// stream — they differ in [`flops_per_lup`](Self::flops_per_lup) and in
+/// [`radius`](Self::radius) (which sets how many planes the layer
+/// condition must hold simultaneously). The right-hand side is not
+/// counted, matching the paper's Eq. (1) accounting.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TrafficSignature {
+    /// 8-byte read streams per LUP (source grid + any coefficient grids).
+    pub read_streams: usize,
+    /// 8-byte write streams per LUP (the destination grid).
+    pub write_streams: usize,
+    /// In-place update (GS-style): the store hits the line the load just
+    /// brought in — no extra write-allocate, and non-temporal stores do
+    /// not apply.
+    pub in_place: bool,
+    /// Floating-point operations per lattice-site update.
+    pub flops_per_lup: usize,
+    /// Halo radius of the operator.
+    pub radius: usize,
+}
+
+impl TrafficSignature {
+    /// Main-memory bytes per LUP (the Eq. (1) numerator). `nt_stores`
+    /// elides the write-allocate of out-of-place stores; in-place ops
+    /// ignore it (their store hits the loaded line).
+    pub fn mem_bytes_per_lup(&self, nt_stores: bool) -> f64 {
+        if self.in_place {
+            (self.read_streams + self.write_streams) as f64 * 8.0
+        } else {
+            let wa = if nt_stores { 0 } else { self.write_streams };
+            (self.read_streams + self.write_streams + wa) as f64 * 8.0
+        }
+    }
+
+    /// In-hierarchy (L1↔L2↔OLC) bytes per LUP: reads miss inward, the
+    /// store line moves out, and out-of-place stores add the in-cache
+    /// write-allocate the ECM model charges.
+    pub fn hierarchy_bytes_per_lup(&self) -> f64 {
+        if self.in_place {
+            (self.read_streams + self.write_streams) as f64 * 8.0
+        } else {
+            (self.read_streams + 2 * self.write_streams) as f64 * 8.0
+        }
+    }
+
+    /// Planes the rolling window must keep cache-resident per sweep for
+    /// the layer condition the signature assumes.
+    pub fn window_planes(&self) -> usize {
+        2 * self.radius + 1
+    }
+}
+
+/// Read-only star window for one out-of-place x-line update.
+///
+/// `ym[d]` / `yp[d]` is the line at y offset `-(d+1)` / `+(d+1)` in the
+/// same plane; `zm[d]` / `zp[d]` the center line of plane `k ∓ (d+1)`.
+/// Only the first `radius()` entries of each array are meaningful; the
+/// rest alias `center` and are never read by a well-formed op.
+pub struct StarWindow<'a> {
+    pub center: &'a [f64],
+    pub ym: [&'a [f64]; MAX_RADIUS],
+    pub yp: [&'a [f64]; MAX_RADIUS],
+    pub zm: [&'a [f64]; MAX_RADIUS],
+    pub zp: [&'a [f64]; MAX_RADIUS],
+}
+
+impl<'a> StarWindow<'a> {
+    /// Window assembled from a line lookup: `line(dz, dy)` returns the
+    /// x-line at z offset `dz`, y offset `dy` from the center (exactly
+    /// one of the two is non-zero, with `1 <= |offset| <= r`). The single
+    /// place the halo offsets are indexed — every schedule builds its
+    /// window through this constructor.
+    pub fn from_fn(
+        center: &'a [f64],
+        r: usize,
+        mut line: impl FnMut(isize, isize) -> &'a [f64],
+    ) -> Self {
+        assert!(r <= MAX_RADIUS, "op radius {r} exceeds MAX_RADIUS ({MAX_RADIUS})");
+        let mut w = Self {
+            center,
+            ym: [center; MAX_RADIUS],
+            yp: [center; MAX_RADIUS],
+            zm: [center; MAX_RADIUS],
+            zp: [center; MAX_RADIUS],
+        };
+        for d in 0..r {
+            let o = (d + 1) as isize;
+            w.ym[d] = line(0, -o);
+            w.yp[d] = line(0, o);
+            w.zm[d] = line(-o, 0);
+            w.zp[d] = line(o, 0);
+        }
+        w
+    }
+
+    /// Window over a grid's interior line `(k, j)` (all offsets must be
+    /// in range: `r <= k < nz-r`, `r <= j < ny-r`).
+    pub fn from_grid(src: &'a Grid3, r: usize, k: usize, j: usize) -> Self {
+        Self::from_fn(src.line(k, j), r, |dz, dy| {
+            src.line((k as isize + dz) as usize, (j as isize + dy) as usize)
+        })
+    }
+}
+
+/// Neighbor lines of one in-place lexicographic GS x-line update: the
+/// `m` (minus) offsets hold *new* (this-sweep) values, the `p` (plus)
+/// offsets *old* values — the lexicographic semantics at any radius.
+pub struct GsWindow<'a> {
+    pub ym_new: [&'a [f64]; MAX_RADIUS],
+    pub yp_old: [&'a [f64]; MAX_RADIUS],
+    pub zm_new: [&'a [f64]; MAX_RADIUS],
+    pub zp_old: [&'a [f64]; MAX_RADIUS],
+}
+
+/// A stencil operator: the kernel parameter every schedule, the runner
+/// registry and the performance model are generic over.
+///
+/// Implementations update **interior x only** (`i ∈ [R, nx-R)`); the
+/// Dirichlet edge columns are the schedule's responsibility. `k`/`j`
+/// locate the line for ops with per-site coefficients.
+pub trait StencilOp: Sync {
+    /// Halo radius `R` (1 for 7-point, 2 for the 13-point star).
+    fn radius(&self) -> usize;
+
+    /// Traffic signature of the Jacobi-style (out-of-place) update.
+    fn signature(&self) -> TrafficSignature;
+
+    /// Traffic signature of the GS-style (in-place) update.
+    fn gs_signature(&self) -> TrafficSignature;
+
+    /// Confirm the op can be applied to a `(nz, ny, nx)` domain. Ops
+    /// with per-site state (coefficient grids) reject mismatched shapes
+    /// here — the schedules call this before any line update, so a
+    /// wrong-size coefficient grid fails fast instead of panicking in a
+    /// worker or silently reading misaligned lines. Stateless ops accept
+    /// every shape.
+    fn validate_domain(&self, shape: (usize, usize, usize)) -> Result<()> {
+        let _ = shape;
+        Ok(())
+    }
+
+    /// Jacobi-style out-of-place update of one x-line.
+    fn line_update(
+        &self,
+        dst: &mut [f64],
+        win: &StarWindow<'_>,
+        rhs: &[f64],
+        h2: f64,
+        k: usize,
+        j: usize,
+    );
+
+    /// Gauss-Seidel-style in-place update of one x-line (lexicographic:
+    /// minus-offset window lines hold new values). Ops without a
+    /// dependency-interleaved variant may ignore `kernel`.
+    fn gs_line_update(
+        &self,
+        line: &mut [f64],
+        win: &GsWindow<'_>,
+        k: usize,
+        j: usize,
+        kernel: GsKernel,
+    );
+}
+
+/// Copy the `r` Dirichlet edge columns of `center` into `dst` (both
+/// ends) — the x-boundary treatment a schedule performs when it writes a
+/// line to a buffer later sweeps read edges from.
+#[inline]
+pub fn copy_x_edges(dst: &mut [f64], center: &[f64], r: usize) {
+    let nx = dst.len();
+    let r = r.min(nx);
+    dst[..r].copy_from_slice(&center[..r]);
+    dst[nx - r..].copy_from_slice(&center[nx - r..]);
+}
+
+// ---------------------------------------------------------------------------
+// the three shipped operators
+
+/// The paper's operator: constant-coefficient 7-point Laplace update.
+///
+/// Dispatches to the seed kernels ([`jacobi_line_update`],
+/// [`gs_line_update_naive`] / [`gs_line_update_interleaved`]), so the
+/// generic path is bit-identical to the pre-`StencilOp` code.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ConstLaplace7;
+
+impl StencilOp for ConstLaplace7 {
+    #[inline]
+    fn radius(&self) -> usize {
+        1
+    }
+    fn signature(&self) -> TrafficSignature {
+        OpKind::ConstLaplace7.signature()
+    }
+    fn gs_signature(&self) -> TrafficSignature {
+        OpKind::ConstLaplace7.gs_signature()
+    }
+    #[inline]
+    fn line_update(
+        &self,
+        dst: &mut [f64],
+        win: &StarWindow<'_>,
+        rhs: &[f64],
+        h2: f64,
+        _k: usize,
+        _j: usize,
+    ) {
+        jacobi_line_update(dst, win.center, win.ym[0], win.yp[0], win.zm[0], win.zp[0], rhs, h2);
+    }
+    #[inline]
+    fn gs_line_update(
+        &self,
+        line: &mut [f64],
+        win: &GsWindow<'_>,
+        _k: usize,
+        _j: usize,
+        kernel: GsKernel,
+    ) {
+        match kernel {
+            GsKernel::Naive => {
+                gs_line_update_naive(line, win.ym_new[0], win.yp_old[0], win.zm_new[0], win.zp_old[0])
+            }
+            GsKernel::Interleaved => gs_line_update_interleaved(
+                line,
+                win.ym_new[0],
+                win.yp_old[0],
+                win.zm_new[0],
+                win.zp_old[0],
+            ),
+        }
+    }
+}
+
+/// Helmholtz-style variable-coefficient 7-point operator:
+/// `(-Δ + λ(x)) u = f` discretized with a per-site coefficient grid `λ`,
+/// so the update divides by a *variable* diagonal `6 + h²λ` (Jacobi) /
+/// `6 + λ` (the homogeneous GS relaxation). The coefficient grid is one
+/// extra read stream — visible in the [`TrafficSignature`] and hence in
+/// every ECM prediction.
+#[derive(Clone, Debug)]
+pub struct VarCoeff7 {
+    coef: Grid3,
+}
+
+impl VarCoeff7 {
+    /// Operator with an explicit coefficient grid (`λ >= 0` keeps the
+    /// diagonal positive; not enforced — callers own their physics).
+    pub fn new(coef: Grid3) -> Self {
+        Self { coef }
+    }
+
+    /// Deterministic smooth positive default coefficient field for a
+    /// `(nz, ny, nx)` domain — what the config/CLI path instantiates.
+    pub fn default_for(size: (usize, usize, usize)) -> Self {
+        let (nz, ny, nx) = size;
+        Self::new(Grid3::from_fn(nz, ny, nx, |k, j, i| {
+            0.25 + 0.125 * (((k + 2 * j + 3 * i) % 8) as f64)
+        }))
+    }
+
+    /// The coefficient grid.
+    pub fn coefficients(&self) -> &Grid3 {
+        &self.coef
+    }
+}
+
+impl StencilOp for VarCoeff7 {
+    #[inline]
+    fn radius(&self) -> usize {
+        1
+    }
+    fn signature(&self) -> TrafficSignature {
+        OpKind::VarCoeff7.signature()
+    }
+    fn gs_signature(&self) -> TrafficSignature {
+        OpKind::VarCoeff7.gs_signature()
+    }
+    fn validate_domain(&self, shape: (usize, usize, usize)) -> Result<()> {
+        anyhow::ensure!(
+            self.coef.shape() == shape,
+            "coefficient grid shape {:?} does not match the domain {:?}",
+            self.coef.shape(),
+            shape
+        );
+        Ok(())
+    }
+    #[inline]
+    fn line_update(
+        &self,
+        dst: &mut [f64],
+        win: &StarWindow<'_>,
+        rhs: &[f64],
+        h2: f64,
+        k: usize,
+        j: usize,
+    ) {
+        let nx = dst.len();
+        let lam = self.coef.line(k, j);
+        let (c, ym, yp, zm, zp) = (win.center, win.ym[0], win.yp[0], win.zm[0], win.zp[0]);
+        for i in 1..nx - 1 {
+            dst[i] = (c[i - 1] + c[i + 1] + ym[i] + yp[i] + zm[i] + zp[i] + h2 * rhs[i])
+                / (6.0 + h2 * lam[i]);
+        }
+    }
+    #[inline]
+    fn gs_line_update(
+        &self,
+        line: &mut [f64],
+        win: &GsWindow<'_>,
+        k: usize,
+        j: usize,
+        _kernel: GsKernel,
+    ) {
+        // the variable diagonal breaks the constant-weight interleaving
+        // identity, so both kernel flavours run the straight recursion
+        let nx = line.len();
+        let lam = self.coef.line(k, j);
+        for i in 1..nx - 1 {
+            line[i] = (line[i - 1]
+                + (line[i + 1] + win.ym_new[0][i] + win.yp_old[0][i] + win.zm_new[0][i] + win.zp_old[0][i]))
+                / (6.0 + lam[i]);
+        }
+    }
+}
+
+/// The 4th-order 13-point star Laplacian (radius 2):
+///
+/// ```text
+/// -Δu ≈ (1/12h²) Σ_axis (-u_{-2} + 16 u_{-1} - 30 u_0 + 16 u_{+1} - u_{+2})
+/// ```
+///
+/// Jacobi form: `u = (16·S₁ - S₂ + 12 h² f) / 90` with `S₁`/`S₂` the
+/// distance-1/-2 neighbor sums. The GS form applies the same formula in
+/// place (new values behind, old ahead). Its purpose here is structural:
+/// a radius-2 halo exercises wavefront lag `R+1`, `2R+2`-slot temporary
+/// rings and `2R`-line boundary arrays in every schedule. (As a
+/// *smoother* the 4th-order stencil is not a contraction for
+/// high-frequency modes; correctness is asserted as bit-parity with the
+/// serial reference sweep, not as residual reduction.)
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Laplace13;
+
+/// `1/90`, the inverse diagonal of the 4th-order operator.
+const INV_90: f64 = 1.0 / 90.0;
+
+impl Laplace13 {
+    #[inline]
+    fn site(s1: f64, s2: f64, rhs12h2: f64) -> f64 {
+        (16.0 * s1 - s2 + rhs12h2) * INV_90
+    }
+}
+
+impl StencilOp for Laplace13 {
+    #[inline]
+    fn radius(&self) -> usize {
+        2
+    }
+    fn signature(&self) -> TrafficSignature {
+        OpKind::Laplace13.signature()
+    }
+    fn gs_signature(&self) -> TrafficSignature {
+        OpKind::Laplace13.gs_signature()
+    }
+    #[inline]
+    fn line_update(
+        &self,
+        dst: &mut [f64],
+        win: &StarWindow<'_>,
+        rhs: &[f64],
+        h2: f64,
+        _k: usize,
+        _j: usize,
+    ) {
+        let nx = dst.len();
+        if nx < 5 {
+            return;
+        }
+        let c = win.center;
+        let (ym1, yp1, zm1, zp1) = (win.ym[0], win.yp[0], win.zm[0], win.zp[0]);
+        let (ym2, yp2, zm2, zp2) = (win.ym[1], win.yp[1], win.zm[1], win.zp[1]);
+        let f12 = 12.0 * h2;
+        for i in 2..nx - 2 {
+            let s1 = c[i - 1] + c[i + 1] + ym1[i] + yp1[i] + zm1[i] + zp1[i];
+            let s2 = c[i - 2] + c[i + 2] + ym2[i] + yp2[i] + zm2[i] + zp2[i];
+            dst[i] = Self::site(s1, s2, f12 * rhs[i]);
+        }
+    }
+    #[inline]
+    fn gs_line_update(
+        &self,
+        line: &mut [f64],
+        win: &GsWindow<'_>,
+        _k: usize,
+        _j: usize,
+        _kernel: GsKernel,
+    ) {
+        let nx = line.len();
+        if nx < 5 {
+            return;
+        }
+        for i in 2..nx - 2 {
+            let s1 = line[i - 1]
+                + line[i + 1]
+                + win.ym_new[0][i]
+                + win.yp_old[0][i]
+                + win.zm_new[0][i]
+                + win.zp_old[0][i];
+            let s2 = line[i - 2]
+                + line[i + 2]
+                + win.ym_new[1][i]
+                + win.yp_old[1][i]
+                + win.zm_new[1][i]
+                + win.zp_old[1][i];
+            line[i] = Self::site(s1, s2, 0.0);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// op identity: config-level kind, runtime instance, static family
+
+/// Config/CLI-level operator identity (`--op`, `op = "..."`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum OpKind {
+    /// The paper's constant-coefficient 7-point Laplacian.
+    #[default]
+    ConstLaplace7,
+    /// Variable-coefficient (Helmholtz-style) 7-point operator.
+    VarCoeff7,
+    /// 4th-order 13-point radius-2 Laplacian.
+    Laplace13,
+}
+
+impl OpKind {
+    /// Every registered op kind.
+    pub const ALL: [OpKind; 3] = [OpKind::ConstLaplace7, OpKind::VarCoeff7, OpKind::Laplace13];
+
+    /// Parse a `laplace7` / `varcoeff` / `laplace13` op name.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.trim().replace('-', "_").as_str() {
+            "laplace7" | "const7" | "const_laplace7" => OpKind::ConstLaplace7,
+            "varcoeff" | "varcoeff7" | "helmholtz" => OpKind::VarCoeff7,
+            "laplace13" | "radius2" => OpKind::Laplace13,
+            other => anyhow::bail!("unknown op '{other}' (laplace7/varcoeff/laplace13)"),
+        })
+    }
+
+    /// The config/CLI name of the op.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            OpKind::ConstLaplace7 => "laplace7",
+            OpKind::VarCoeff7 => "varcoeff",
+            OpKind::Laplace13 => "laplace13",
+        }
+    }
+
+    /// Halo radius of the op (available without an instance — the
+    /// config validator and the performance model need it).
+    pub fn radius(self) -> usize {
+        match self {
+            OpKind::ConstLaplace7 | OpKind::VarCoeff7 => 1,
+            OpKind::Laplace13 => 2,
+        }
+    }
+
+    /// Out-of-place (Jacobi-style) traffic signature.
+    pub fn signature(self) -> TrafficSignature {
+        match self {
+            // src read + dst write; 6 adds + central mul + rhs mul
+            OpKind::ConstLaplace7 => TrafficSignature {
+                read_streams: 1,
+                write_streams: 1,
+                in_place: false,
+                flops_per_lup: 8,
+                radius: 1,
+            },
+            // + the coefficient grid read stream and the variable divide
+            OpKind::VarCoeff7 => TrafficSignature {
+                read_streams: 2,
+                write_streams: 1,
+                in_place: false,
+                flops_per_lup: 10,
+                radius: 1,
+            },
+            // one array pair again, but 11 adds + 3 muls across two shells
+            OpKind::Laplace13 => TrafficSignature {
+                read_streams: 1,
+                write_streams: 1,
+                in_place: false,
+                flops_per_lup: 16,
+                radius: 2,
+            },
+        }
+    }
+
+    /// In-place (GS-style) traffic signature.
+    pub fn gs_signature(self) -> TrafficSignature {
+        let s = self.signature();
+        TrafficSignature {
+            in_place: true,
+            // GS drops the rhs multiply (the homogeneous relaxation)
+            flops_per_lup: s.flops_per_lup - 1,
+            ..s
+        }
+    }
+
+    /// Instantiate the op for a domain (ops with coefficient grids
+    /// materialize their deterministic default field).
+    pub fn instantiate(self, size: (usize, usize, usize)) -> OpInstance {
+        match self {
+            OpKind::ConstLaplace7 => OpInstance::Const7(ConstLaplace7),
+            OpKind::VarCoeff7 => OpInstance::VarCoeff(VarCoeff7::default_for(size)),
+            OpKind::Laplace13 => OpInstance::L13(Laplace13),
+        }
+    }
+}
+
+/// A constructed operator (owned by a
+/// [`Solver`](crate::coordinator::solver::Solver) session). Schedules
+/// never see this enum — the registry extracts the typed op via
+/// [`OpFamily::extract`] so the hot path is monomorphized.
+#[derive(Clone, Debug)]
+pub enum OpInstance {
+    Const7(ConstLaplace7),
+    VarCoeff(VarCoeff7),
+    L13(Laplace13),
+}
+
+impl OpInstance {
+    /// The kind this instance was built from.
+    pub fn kind(&self) -> OpKind {
+        match self {
+            OpInstance::Const7(_) => OpKind::ConstLaplace7,
+            OpInstance::VarCoeff(_) => OpKind::VarCoeff7,
+            OpInstance::L13(_) => OpKind::Laplace13,
+        }
+    }
+
+    /// Dynamic view for serial (non-hot-path) consumers.
+    pub fn as_dyn(&self) -> &dyn StencilOp {
+        match self {
+            OpInstance::Const7(op) => op,
+            OpInstance::VarCoeff(op) => op,
+            OpInstance::L13(op) => op,
+        }
+    }
+}
+
+/// Statically identified op type: what the scheme × op registry is
+/// keyed on. `extract` recovers the typed op from a session's
+/// [`OpInstance`]; the registry guarantees kinds match.
+pub trait OpFamily: StencilOp + Sized + 'static {
+    /// The kind this type implements.
+    const KIND: OpKind;
+
+    /// The typed op inside `inst`.
+    ///
+    /// # Panics
+    /// When `inst` holds a different op — impossible through the
+    /// registry, which resolves runners by `(Scheme, OpKind)`.
+    fn extract(inst: &OpInstance) -> &Self;
+}
+
+impl OpFamily for ConstLaplace7 {
+    const KIND: OpKind = OpKind::ConstLaplace7;
+    fn extract(inst: &OpInstance) -> &Self {
+        match inst {
+            OpInstance::Const7(op) => op,
+            other => panic!("op mismatch: runner wants laplace7, session holds {:?}", other.kind()),
+        }
+    }
+}
+
+impl OpFamily for VarCoeff7 {
+    const KIND: OpKind = OpKind::VarCoeff7;
+    fn extract(inst: &OpInstance) -> &Self {
+        match inst {
+            OpInstance::VarCoeff(op) => op,
+            other => panic!("op mismatch: runner wants varcoeff, session holds {:?}", other.kind()),
+        }
+    }
+}
+
+impl OpFamily for Laplace13 {
+    const KIND: OpKind = OpKind::Laplace13;
+    fn extract(inst: &OpInstance) -> &Self {
+        match inst {
+            OpInstance::L13(op) => op,
+            other => panic!("op mismatch: runner wants laplace13, session holds {:?}", other.kind()),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// generic serial sweeps (the references every schedule is verified against)
+
+/// One out-of-place sweep of `op`; boundary of `dst` copied from `src`.
+///
+/// The generic analog of [`super::jacobi::jacobi_sweep`] — bit-identical
+/// to it for [`ConstLaplace7`].
+pub fn op_jacobi_sweep<O: StencilOp + ?Sized>(
+    op: &O,
+    dst: &mut Grid3,
+    src: &Grid3,
+    f: &Grid3,
+    h2: f64,
+) {
+    assert_eq!(dst.shape(), src.shape());
+    assert_eq!(f.shape(), src.shape());
+    op.validate_domain(src.shape()).expect("op rejects this domain");
+    let r = op.radius();
+    assert!(r <= MAX_RADIUS, "op radius {r} exceeds MAX_RADIUS ({MAX_RADIUS})");
+    dst.copy_from(src); // boundary shell (and identity for degenerate dims)
+    let (nz, ny, nx) = src.shape();
+    if nz < 2 * r + 1 || ny < 2 * r + 1 || nx < 2 * r + 1 {
+        return;
+    }
+    for k in r..nz - r {
+        for j in r..ny - r {
+            let win = StarWindow::from_grid(src, r, k, j);
+            let d = dst.idx(k, j, 0);
+            let dst_line = &mut dst.data_mut()[d..d + nx];
+            op.line_update(dst_line, &win, f.line(k, j), h2, k, j);
+        }
+    }
+}
+
+/// `n` out-of-place sweeps with double buffering; result returned.
+pub fn op_jacobi_steps<O: StencilOp + ?Sized>(
+    op: &O,
+    u: &Grid3,
+    f: &Grid3,
+    h2: f64,
+    n: usize,
+) -> Grid3 {
+    let mut a = u.clone();
+    let mut b = u.clone();
+    for _ in 0..n {
+        op_jacobi_sweep(op, &mut b, &a, f, h2);
+        std::mem::swap(&mut a, &mut b);
+    }
+    a
+}
+
+/// In-place lexicographic GS update of line `(k, j)` through raw grid
+/// storage — the dispatch granularity of the pipelined schedules at any
+/// radius (the generic analog of
+/// [`super::gauss_seidel::gs_plane_line_raw`]).
+///
+/// # Safety
+/// `base` must point to an `nz × ny × nx` grid with `r <= k < nz-r`,
+/// `r <= j < ny-r` for `r = op.radius()`; the caller must guarantee that
+/// line `(k, j)` is not accessed concurrently and that the `4r` neighbor
+/// lines are not concurrently written (the pipeline progress protocols
+/// provide this).
+pub unsafe fn op_gs_line_raw<O: StencilOp + ?Sized>(
+    op: &O,
+    base: *mut f64,
+    ny: usize,
+    nx: usize,
+    k: usize,
+    j: usize,
+    kernel: GsKernel,
+) {
+    let r = op.radius();
+    assert!(r <= MAX_RADIUS, "op radius {r} exceeds MAX_RADIUS ({MAX_RADIUS})");
+    let at = |kk: usize, jj: usize| (kk * ny + jj) * nx;
+    let line_at = |kk: usize, jj: usize| std::slice::from_raw_parts(base.add(at(kk, jj)), nx);
+    // never read past index r-1; must not alias the mutable center line
+    let dummy = line_at(k, j - 1);
+    let mut win = GsWindow {
+        ym_new: [dummy; MAX_RADIUS],
+        yp_old: [dummy; MAX_RADIUS],
+        zm_new: [dummy; MAX_RADIUS],
+        zp_old: [dummy; MAX_RADIUS],
+    };
+    for d in 0..r {
+        win.ym_new[d] = line_at(k, j - d - 1);
+        win.yp_old[d] = line_at(k, j + d + 1);
+        win.zm_new[d] = line_at(k - d - 1, j);
+        win.zp_old[d] = line_at(k + d + 1, j);
+    }
+    let line = std::slice::from_raw_parts_mut(base.add(at(k, j)), nx);
+    op.gs_line_update(line, &win, k, j, kernel);
+}
+
+/// One full in-place lexicographic GS sweep of `op` — the generic analog
+/// of [`super::gauss_seidel::gs_sweep`], bit-identical to it for
+/// [`ConstLaplace7`].
+pub fn op_gs_sweep<O: StencilOp + ?Sized>(op: &O, u: &mut Grid3, kernel: GsKernel) {
+    op.validate_domain(u.shape()).expect("op rejects this domain");
+    let r = op.radius();
+    assert!(r <= MAX_RADIUS, "op radius {r} exceeds MAX_RADIUS ({MAX_RADIUS})");
+    let (nz, ny, nx) = u.shape();
+    if nz < 2 * r + 1 || ny < 2 * r + 1 || nx < 2 * r + 1 {
+        return;
+    }
+    let base = u.data_mut().as_mut_ptr();
+    for k in r..nz - r {
+        for j in r..ny - r {
+            // SAFETY: exclusive access via &mut; lines are disjoint.
+            unsafe { op_gs_line_raw(op, base, ny, nx, k, j, kernel) }
+        }
+    }
+}
+
+/// `n` in-place GS sweeps of `op`.
+pub fn op_gs_sweeps<O: StencilOp + ?Sized>(op: &O, u: &mut Grid3, n: usize, kernel: GsKernel) {
+    for _ in 0..n {
+        op_gs_sweep(op, u, kernel);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stencil::gauss_seidel::gs_sweep;
+    use crate::stencil::jacobi::jacobi_sweep;
+
+    #[test]
+    fn const7_jacobi_sweep_is_bit_identical_to_seed() {
+        for seed in 0..4 {
+            let u = Grid3::random(7, 6, 8, seed);
+            let f = Grid3::random(7, 6, 8, seed + 100);
+            let mut want = Grid3::zeros(7, 6, 8);
+            jacobi_sweep(&mut want, &u, &f, 0.7);
+            let mut have = Grid3::zeros(7, 6, 8);
+            op_jacobi_sweep(&ConstLaplace7, &mut have, &u, &f, 0.7);
+            assert_eq!(have.max_abs_diff(&want), 0.0, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn const7_gs_sweep_is_bit_identical_to_seed() {
+        for kernel in [GsKernel::Naive, GsKernel::Interleaved] {
+            let mut want = Grid3::random(6, 7, 9, 5);
+            let mut have = want.clone();
+            gs_sweep(&mut want, kernel);
+            op_gs_sweep(&ConstLaplace7, &mut have, kernel);
+            assert_eq!(have.max_abs_diff(&want), 0.0, "{kernel:?}");
+        }
+    }
+
+    #[test]
+    fn laplace13_matches_direct_formula() {
+        let u = Grid3::random(7, 7, 7, 3);
+        let f = Grid3::random(7, 7, 7, 4);
+        let h2 = 0.6;
+        let mut dst = Grid3::zeros(7, 7, 7);
+        op_jacobi_sweep(&Laplace13, &mut dst, &u, &f, h2);
+        for k in 2..5 {
+            for j in 2..5 {
+                for i in 2..5 {
+                    let s1 = u.get(k, j, i - 1)
+                        + u.get(k, j, i + 1)
+                        + u.get(k, j - 1, i)
+                        + u.get(k, j + 1, i)
+                        + u.get(k - 1, j, i)
+                        + u.get(k + 1, j, i);
+                    let s2 = u.get(k, j, i - 2)
+                        + u.get(k, j, i + 2)
+                        + u.get(k, j - 2, i)
+                        + u.get(k, j + 2, i)
+                        + u.get(k - 2, j, i)
+                        + u.get(k + 2, j, i);
+                    let want = (16.0 * s1 - s2 + 12.0 * h2 * f.get(k, j, i)) / 90.0;
+                    assert!((dst.get(k, j, i) - want).abs() < 1e-15);
+                }
+            }
+        }
+        // the two-deep boundary shell is copied, never updated
+        for (k, j, i) in [(0, 3, 3), (1, 3, 3), (3, 1, 3), (3, 3, 5), (6, 3, 3)] {
+            assert_eq!(dst.get(k, j, i), u.get(k, j, i), "({k},{j},{i})");
+        }
+    }
+
+    #[test]
+    fn varcoeff_reduces_to_helmholtz_formula() {
+        let op = VarCoeff7::default_for((6, 6, 6));
+        let u = Grid3::random(6, 6, 6, 8);
+        let f = Grid3::random(6, 6, 6, 9);
+        let h2 = 1.3;
+        let mut dst = Grid3::zeros(6, 6, 6);
+        op_jacobi_sweep(&op, &mut dst, &u, &f, h2);
+        for k in 1..5 {
+            for j in 1..5 {
+                for i in 1..5 {
+                    let num = u.get(k, j, i - 1)
+                        + u.get(k, j, i + 1)
+                        + u.get(k, j - 1, i)
+                        + u.get(k, j + 1, i)
+                        + u.get(k - 1, j, i)
+                        + u.get(k + 1, j, i)
+                        + h2 * f.get(k, j, i);
+                    let want = num / (6.0 + h2 * op.coefficients().get(k, j, i));
+                    assert!((dst.get(k, j, i) - want).abs() < 1e-15);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn signatures_reproduce_the_paper_constants() {
+        let s = OpKind::ConstLaplace7.signature();
+        assert_eq!(s.mem_bytes_per_lup(true), 16.0);
+        assert_eq!(s.mem_bytes_per_lup(false), 24.0);
+        assert_eq!(s.hierarchy_bytes_per_lup(), 24.0);
+        let g = OpKind::ConstLaplace7.gs_signature();
+        assert_eq!(g.mem_bytes_per_lup(true), 16.0);
+        assert_eq!(g.mem_bytes_per_lup(false), 16.0);
+        assert_eq!(g.hierarchy_bytes_per_lup(), 16.0);
+        // varcoeff adds exactly one 8 B read stream everywhere
+        let v = OpKind::VarCoeff7.signature();
+        assert_eq!(v.mem_bytes_per_lup(true), 24.0);
+        assert_eq!(v.hierarchy_bytes_per_lup(), 32.0);
+        // radius widens the layer condition, not the stream count
+        let l = OpKind::Laplace13.signature();
+        assert_eq!(l.mem_bytes_per_lup(true), 16.0);
+        assert_eq!(l.window_planes(), 5);
+        assert_eq!(s.window_planes(), 3);
+    }
+
+    #[test]
+    fn signatures_agree_with_the_eq1_helpers() {
+        // the paper's Eq. (1) byte counts live twice — in
+        // `simulator::memory` (the seed encoding) and derived from the
+        // ConstLaplace7 TrafficSignature; tie them so they cannot drift
+        use crate::simulator::memory::{self, StoreMode};
+        let s = OpKind::ConstLaplace7.signature();
+        let g = OpKind::ConstLaplace7.gs_signature();
+        assert_eq!(
+            s.mem_bytes_per_lup(true),
+            memory::jacobi_mem_bytes_per_lup(StoreMode::NonTemporal)
+        );
+        assert_eq!(
+            s.mem_bytes_per_lup(false),
+            memory::jacobi_mem_bytes_per_lup(StoreMode::WriteAllocate)
+        );
+        assert_eq!(g.mem_bytes_per_lup(true), memory::gs_mem_bytes_per_lup());
+        assert_eq!(s.hierarchy_bytes_per_lup(), memory::wavefront_olc_bytes_per_lup(false, false));
+        assert_eq!(g.hierarchy_bytes_per_lup(), memory::wavefront_olc_bytes_per_lup(true, false));
+        assert_eq!(
+            2.0 * s.hierarchy_bytes_per_lup(),
+            memory::wavefront_olc_bytes_per_lup(false, true)
+        );
+        // the wavefront amortization matches the seed helper too
+        assert_eq!(
+            s.mem_bytes_per_lup(true) / 4.0 * 1.5,
+            memory::wavefront_mem_bytes_per_lup(4, StoreMode::NonTemporal, 0.5)
+        );
+    }
+
+    #[test]
+    fn varcoeff_rejects_mismatched_domains() {
+        let op = VarCoeff7::default_for((6, 6, 6));
+        assert!(op.validate_domain((6, 6, 6)).is_ok());
+        assert!(op.validate_domain((6, 7, 6)).is_err());
+        // stateless ops accept any shape
+        assert!(ConstLaplace7.validate_domain((3, 99, 4)).is_ok());
+        assert!(Laplace13.validate_domain((5, 5, 5)).is_ok());
+    }
+
+    #[test]
+    fn kinds_roundtrip_and_instantiate() {
+        for kind in OpKind::ALL {
+            assert_eq!(OpKind::parse(kind.as_str()).unwrap(), kind);
+            let inst = kind.instantiate((8, 8, 8));
+            assert_eq!(inst.kind(), kind);
+            assert_eq!(inst.as_dyn().radius(), kind.radius());
+        }
+        assert!(OpKind::parse("biharmonic").is_err());
+        assert_eq!(OpKind::parse("radius2").unwrap(), OpKind::Laplace13);
+    }
+
+    #[test]
+    fn degenerate_grids_are_identity_per_radius() {
+        // 4^3 has interior for r=1 but none for r=2
+        let u = Grid3::random(4, 4, 4, 2);
+        let f = Grid3::zeros(4, 4, 4);
+        let mut dst = Grid3::zeros(4, 4, 4);
+        op_jacobi_sweep(&Laplace13, &mut dst, &u, &f, 1.0);
+        assert_eq!(dst, u);
+        let mut v = u.clone();
+        op_gs_sweep(&Laplace13, &mut v, GsKernel::Interleaved);
+        assert_eq!(v, u);
+    }
+}

@@ -1,0 +1,172 @@
+//! Kernel-parity suite for the generic `StencilOp` layer (the tentpole's
+//! acceptance tests):
+//!
+//! * the generic [`ConstLaplace7`] path is **bit-identical** to the seed
+//!   `jacobi_sweep`/`gs_sweep` kernels across all five schemes and a
+//!   spread of grid shapes (property-style, seeded random cases);
+//! * the radius-2 [`Laplace13`] op matches an independent direct-formula
+//!   serial reference sweep, and runs exact through every scheme;
+//! * the variable-coefficient [`VarCoeff7`] op runs exact through every
+//!   scheme.
+
+use stencilwave::config::{RunConfig, Scheme};
+use stencilwave::coordinator::solver::Solver;
+use stencilwave::stencil::gauss_seidel::gs_sweeps;
+use stencilwave::stencil::grid::Grid3;
+use stencilwave::stencil::jacobi::jacobi_steps;
+use stencilwave::stencil::op::{op_jacobi_sweep, Laplace13, OpKind};
+
+/// Deterministic pseudo-random case generator (xorshift).
+struct Gen(u64);
+
+impl Gen {
+    fn next(&mut self) -> u64 {
+        self.0 ^= self.0 << 13;
+        self.0 ^= self.0 >> 7;
+        self.0 ^= self.0 << 17;
+        self.0
+    }
+    fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + (self.next() as usize) % (hi - lo + 1)
+    }
+}
+
+fn cfg(scheme: Scheme, op: OpKind, size: (usize, usize, usize)) -> RunConfig {
+    RunConfig { scheme, op, size, t: 4, groups: 2, iters: 8, ..Default::default() }
+}
+
+/// The seed (pre-`StencilOp`) result of `iters` updates for a scheme.
+fn seed_result(scheme: Scheme, u0: &Grid3, f: &Grid3, h2: f64, c: &RunConfig) -> Grid3 {
+    if scheme.is_gs() {
+        let mut r = u0.clone();
+        gs_sweeps(&mut r, c.iters, c.gs_kernel());
+        r
+    } else {
+        jacobi_steps(u0, f, h2, c.iters)
+    }
+}
+
+#[test]
+fn const7_generic_path_is_bit_identical_to_seed_kernels_across_schemes() {
+    let mut g = Gen(0x0b5e55ed);
+    for case in 0..6 {
+        // shapes wide enough for every scheme's width requirements
+        let size = (g.range(10, 16), g.range(12, 18), g.range(9, 14));
+        let (nz, ny, nx) = size;
+        let f = Grid3::random(nz, ny, nx, g.next());
+        let u0 = Grid3::random(nz, ny, nx, g.next());
+        let h2 = 0.5 + g.range(0, 2) as f64 / 2.0;
+        for scheme in Scheme::ALL {
+            let c = cfg(scheme, OpKind::ConstLaplace7, size);
+            let mut solver = Solver::builder(&c).rhs(f.clone(), h2).build().unwrap();
+            let mut u = u0.clone();
+            solver.run(&mut u, c.iters).unwrap();
+            let want = seed_result(scheme, &u0, &f, h2, &c);
+            assert_eq!(
+                u.max_abs_diff(&want),
+                0.0,
+                "case {case} {scheme:?} {nz}x{ny}x{nx}: generic ConstLaplace7 \
+                 must be bit-identical to the seed kernels"
+            );
+        }
+    }
+}
+
+#[test]
+fn radius2_serial_sweep_matches_direct_formula_reference() {
+    // an independent reference loop (no shared code with the op)
+    let (nz, ny, nx) = (9, 8, 10);
+    let u = Grid3::random(nz, ny, nx, 77);
+    let f = Grid3::random(nz, ny, nx, 78);
+    let h2 = 0.8;
+    let mut have = Grid3::zeros(nz, ny, nx);
+    op_jacobi_sweep(&Laplace13, &mut have, &u, &f, h2);
+    let mut want = u.clone();
+    for k in 2..nz - 2 {
+        for j in 2..ny - 2 {
+            for i in 2..nx - 2 {
+                let s1 = u.get(k, j, i - 1)
+                    + u.get(k, j, i + 1)
+                    + u.get(k, j - 1, i)
+                    + u.get(k, j + 1, i)
+                    + u.get(k - 1, j, i)
+                    + u.get(k + 1, j, i);
+                let s2 = u.get(k, j, i - 2)
+                    + u.get(k, j, i + 2)
+                    + u.get(k, j - 2, i)
+                    + u.get(k, j + 2, i)
+                    + u.get(k - 2, j, i)
+                    + u.get(k + 2, j, i);
+                want.set(k, j, i, (16.0 * s1 - s2 + 12.0 * h2 * f.get(k, j, i)) * (1.0 / 90.0));
+            }
+        }
+    }
+    assert_eq!(have.max_abs_diff(&want), 0.0);
+}
+
+#[test]
+fn radius2_runs_exact_through_every_scheme() {
+    let mut g = Gen(0x13);
+    for case in 0..4 {
+        let size = (g.range(11, 15), g.range(14, 20), g.range(10, 13));
+        let (nz, ny, nx) = size;
+        let f = Grid3::random(nz, ny, nx, g.next());
+        let u0 = Grid3::random(nz, ny, nx, g.next());
+        for scheme in Scheme::ALL {
+            let c = cfg(scheme, OpKind::Laplace13, size);
+            let mut solver = Solver::builder(&c).rhs(f.clone(), 0.9).build().unwrap();
+            let mut u = u0.clone();
+            solver.run(&mut u, c.iters).unwrap();
+            // the session's reference is the generic serial sweep of the
+            // same op instance — exactness across the parallel schedules
+            // is the property under test
+            let want = solver.reference(&u0, c.iters);
+            assert_eq!(u.max_abs_diff(&want), 0.0, "case {case} {scheme:?} {nz}x{ny}x{nx}");
+        }
+    }
+}
+
+#[test]
+fn varcoeff_runs_exact_through_every_scheme() {
+    let mut g = Gen(0x7a);
+    for case in 0..4 {
+        let size = (g.range(9, 13), g.range(12, 16), g.range(8, 12));
+        let (nz, ny, nx) = size;
+        let f = Grid3::random(nz, ny, nx, g.next());
+        let u0 = Grid3::random(nz, ny, nx, g.next());
+        for scheme in Scheme::ALL {
+            let c = cfg(scheme, OpKind::VarCoeff7, size);
+            let mut solver = Solver::builder(&c).rhs(f.clone(), 1.1).build().unwrap();
+            let mut u = u0.clone();
+            solver.run(&mut u, c.iters).unwrap();
+            let want = solver.reference(&u0, c.iters);
+            assert_eq!(u.max_abs_diff(&want), 0.0, "case {case} {scheme:?} {nz}x{ny}x{nx}");
+        }
+    }
+}
+
+#[test]
+fn op_mix_on_one_session_pool_stays_exact() {
+    // chain sessions of different ops through one pool: scratch sized
+    // for the radius-2 op must not leak into the radius-1 runs
+    let size = (12, 16, 11);
+    let f = Grid3::random(size.0, size.1, size.2, 5);
+    let mut pool = None;
+    for (i, op) in [OpKind::Laplace13, OpKind::ConstLaplace7, OpKind::VarCoeff7, OpKind::Laplace13]
+        .into_iter()
+        .enumerate()
+    {
+        let c = cfg(Scheme::JacobiWavefront, op, size);
+        let mut b = Solver::builder(&c).rhs(f.clone(), 1.0);
+        if let Some(p) = pool.take() {
+            b = b.pool(p);
+        }
+        let mut solver = b.build().unwrap();
+        let u0 = Grid3::random(size.0, size.1, size.2, 40 + i as u64);
+        let mut u = u0.clone();
+        solver.run(&mut u, c.iters).unwrap();
+        let want = solver.reference(&u0, c.iters);
+        assert_eq!(u.max_abs_diff(&want), 0.0, "step {i} {op:?}");
+        pool = Some(solver.into_pool());
+    }
+}

@@ -1,20 +1,18 @@
 //! One persistent pool reused across schemes, passes and team sizes must
 //! stay bit-exact against the serial references — the suite that catches
 //! stale progress-table or scratch-buffer state surviving a pass.
-#![allow(deprecated)] // exercises the shim matrix until its removal
 
-use stencilwave::coordinator::pipeline::{pipeline_gs_sweeps_on, PipelineConfig};
+use stencilwave::coordinator::pipeline::{pipeline_gs_passes, PipelineConfig};
 use stencilwave::coordinator::pool::WorkerPool;
-use stencilwave::coordinator::spatial_mg::{
-    multigroup_blocked_jacobi_iters_on, multigroup_blocked_jacobi_on, MultiGroupConfig,
-};
+use stencilwave::coordinator::spatial_mg::{multigroup_passes, MultiGroupConfig};
 use stencilwave::coordinator::wavefront::{
-    serial_reference, wavefront_jacobi_iters_on, wavefront_jacobi_on, SyncMode, WavefrontConfig,
+    serial_reference, serial_reference_op, wavefront_jacobi_passes, SyncMode, WavefrontConfig,
 };
-use stencilwave::coordinator::wavefront_gs::{wavefront_gs_on, GsWavefrontConfig};
+use stencilwave::coordinator::wavefront_gs::{wavefront_gs_passes, GsWavefrontConfig};
 use stencilwave::simulator::perfmodel::BarrierKind;
 use stencilwave::stencil::gauss_seidel::{gs_sweeps, GsKernel};
 use stencilwave::stencil::grid::Grid3;
+use stencilwave::stencil::op::{ConstLaplace7, Laplace13};
 
 #[test]
 fn one_pool_survives_scheme_and_team_size_changes() {
@@ -26,7 +24,7 @@ fn one_pool_survives_scheme_and_team_size_changes() {
             let mut u = Grid3::random(12, 14, 10, 40 + round * 10 + t as u64);
             let want = serial_reference(&u, &f, 1.0, t);
             let cfg = WavefrontConfig { threads: t, barrier: BarrierKind::Spin, sync };
-            wavefront_jacobi_on(&mut pool, &mut u, &f, 1.0, &cfg).unwrap();
+            wavefront_jacobi_passes(&mut pool, &ConstLaplace7, &mut u, &f, 1.0, &cfg, 1).unwrap();
             assert_eq!(u.max_abs_diff(&want), 0.0, "jacobi t={t} round={round}");
         }
         // pipelined GS on the same pool
@@ -34,20 +32,20 @@ fn one_pool_survives_scheme_and_team_size_changes() {
         let mut want = u.clone();
         gs_sweeps(&mut want, 2, GsKernel::Interleaved);
         let p = PipelineConfig { threads: 3, kernel: GsKernel::Interleaved };
-        pipeline_gs_sweeps_on(&mut pool, &mut u, &p, 2).unwrap();
+        pipeline_gs_passes(&mut pool, &ConstLaplace7, &mut u, &p, 2).unwrap();
         assert_eq!(u.max_abs_diff(&want), 0.0, "pipeline round={round}");
         // GS wavefront (different worker count again)
         let mut u = Grid3::random(12, 14, 10, 80 + round);
         let mut want = u.clone();
         gs_sweeps(&mut want, 3, GsKernel::Interleaved);
         let w = GsWavefrontConfig { sweeps: 3, threads_per_group: 2, kernel: GsKernel::Interleaved };
-        wavefront_gs_on(&mut pool, &mut u, &w).unwrap();
+        wavefront_gs_passes(&mut pool, &ConstLaplace7, &mut u, &w, 1).unwrap();
         assert_eq!(u.max_abs_diff(&want), 0.0, "gs wavefront round={round}");
         // multi-group blocked Jacobi
         let mut u = Grid3::random(12, 14, 10, 90 + round);
         let want = serial_reference(&u, &f, 1.0, 4);
         let mg = MultiGroupConfig { t: 4, groups: 3 };
-        multigroup_blocked_jacobi_on(&mut pool, &mut u, &f, 1.0, &mg).unwrap();
+        multigroup_passes(&mut pool, &ConstLaplace7, &mut u, &f, 1.0, &mg, 1).unwrap();
         assert_eq!(u.max_abs_diff(&want), 0.0, "multigroup round={round}");
     }
     // the pool grew to the largest team it ever hosted and kept it
@@ -63,15 +61,43 @@ fn many_passes_amortize_one_team() {
     let want = serial_reference(&u, &f, 0.7, 40);
     let cfg = WavefrontConfig { threads: 4, sync: SyncMode::Flow, ..Default::default() };
     let mut pool = WorkerPool::new(4);
-    wavefront_jacobi_iters_on(&mut pool, &mut u, &f, 0.7, &cfg, 40).unwrap();
+    wavefront_jacobi_passes(&mut pool, &ConstLaplace7, &mut u, &f, 0.7, &cfg, 10).unwrap();
     assert_eq!(u.max_abs_diff(&want), 0.0);
 
     // and 12 more multi-group updates on the *same* pool
     let mut v = Grid3::random(14, 10, 9, 13);
     let want = serial_reference(&v, &f, 0.7, 12);
     let mg = MultiGroupConfig { t: 2, groups: 4 };
-    multigroup_blocked_jacobi_iters_on(&mut pool, &mut v, &f, 0.7, &mg, 12).unwrap();
+    multigroup_passes(&mut pool, &ConstLaplace7, &mut v, &f, 0.7, &mg, 6).unwrap();
     assert_eq!(v.max_abs_diff(&want), 0.0);
+}
+
+#[test]
+fn scratch_sized_for_radius2_is_safe_for_radius1_and_back() {
+    // ops of different radius alternate on one pool: the scratch arena's
+    // plane ring and boundary arrays are resized per schedule, so stale
+    // capacity (or stale contents) from the wider op must never leak
+    let f = Grid3::random(12, 14, 10, 21);
+    let mut pool = WorkerPool::new(0);
+    for round in 0u64..3 {
+        let mut u = Grid3::random(12, 14, 10, 60 + round);
+        let want = serial_reference_op(&Laplace13, &u, &f, 0.8, 2);
+        let cfg = WavefrontConfig { threads: 2, sync: SyncMode::Flow, ..Default::default() };
+        wavefront_jacobi_passes(&mut pool, &Laplace13, &mut u, &f, 0.8, &cfg, 1).unwrap();
+        assert_eq!(u.max_abs_diff(&want), 0.0, "radius-2 round={round}");
+
+        let mut v = Grid3::random(12, 14, 10, 70 + round);
+        let want = serial_reference(&v, &f, 0.8, 4);
+        let mg = MultiGroupConfig { t: 4, groups: 2 };
+        multigroup_passes(&mut pool, &ConstLaplace7, &mut v, &f, 0.8, &mg, 1).unwrap();
+        assert_eq!(v.max_abs_diff(&want), 0.0, "radius-1 round={round}");
+
+        let mut w = Grid3::random(12, 14, 10, 80 + round);
+        let want = serial_reference_op(&Laplace13, &w, &f, 0.8, 2);
+        let mg2 = MultiGroupConfig { t: 2, groups: 2 };
+        multigroup_passes(&mut pool, &Laplace13, &mut w, &f, 0.8, &mg2, 1).unwrap();
+        assert_eq!(w.max_abs_diff(&want), 0.0, "radius-2 multigroup round={round}");
+    }
 }
 
 #[test]
@@ -84,7 +110,7 @@ fn shrinking_then_growing_team_sizes_stay_exact() {
         let mut u = Grid3::random(10, 18, 8, 100 + t as u64);
         let want = serial_reference(&u, &f, 1.0, t);
         let cfg = WavefrontConfig { threads: t, sync: SyncMode::Flow, ..Default::default() };
-        wavefront_jacobi_on(&mut pool, &mut u, &f, 1.0, &cfg).unwrap();
+        wavefront_jacobi_passes(&mut pool, &ConstLaplace7, &mut u, &f, 1.0, &cfg, 1).unwrap();
         assert_eq!(u.max_abs_diff(&want), 0.0, "t={t}");
     }
     assert_eq!(pool.size(), 8);

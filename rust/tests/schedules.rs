@@ -2,18 +2,24 @@
 //! bit-identical to the serial reference for randomized shapes and
 //! configurations (the in-tree analog of a proptest suite — seeded
 //! xorshift case generation, failures print the offending case).
-#![allow(deprecated)] // exercises the shim matrix until its removal
+//!
+//! Schedules are driven through their public pool-level entry points
+//! (`*_passes`) on private [`WorkerPool`]s, generic over the
+//! [`StencilOp`] layer — the radius-1 paper op here; radius-2 and
+//! variable-coefficient coverage lives in `tests/op_parity.rs`.
 
-use stencilwave::coordinator::pipeline::{pipeline_gs_sweep, pipeline_gs_sweeps, PipelineConfig};
+use stencilwave::coordinator::pipeline::{pipeline_gs_passes, PipelineConfig};
+use stencilwave::coordinator::pool::WorkerPool;
 use stencilwave::coordinator::spatial::{blocked_wavefront_jacobi, SpatialConfig};
-use stencilwave::coordinator::spatial_mg::{multigroup_blocked_jacobi, MultiGroupConfig};
+use stencilwave::coordinator::spatial_mg::{multigroup_passes, MultiGroupConfig};
 use stencilwave::coordinator::wavefront::{
-    serial_reference, wavefront_jacobi, SyncMode, WavefrontConfig,
+    serial_reference, wavefront_jacobi_passes, SyncMode, WavefrontConfig,
 };
-use stencilwave::coordinator::wavefront_gs::{wavefront_gs, GsWavefrontConfig};
+use stencilwave::coordinator::wavefront_gs::{wavefront_gs_passes, GsWavefrontConfig};
 use stencilwave::simulator::perfmodel::BarrierKind;
 use stencilwave::stencil::gauss_seidel::{gs_sweeps, GsKernel};
 use stencilwave::stencil::grid::Grid3;
+use stencilwave::stencil::op::ConstLaplace7;
 
 /// Deterministic pseudo-random case generator.
 struct Gen(u64);
@@ -36,6 +42,7 @@ impl Gen {
 #[test]
 fn wavefront_jacobi_is_exact_for_random_cases() {
     let mut g = Gen(0xBEEF);
+    let mut pool = WorkerPool::new(0);
     for case in 0..24 {
         let (nz, ny, nx) = (g.range(3, 18), g.range(3, 14), g.range(3, 14));
         let t = g.pick(&[2usize, 4, 6]);
@@ -46,7 +53,8 @@ fn wavefront_jacobi_is_exact_for_random_cases() {
         let f = Grid3::random(nz, ny, nx, g.next());
         let want = serial_reference(&u0, &f, h2, t);
         let mut u = u0.clone();
-        wavefront_jacobi(&mut u, &f, h2, &WavefrontConfig { threads: t, barrier, sync }).unwrap();
+        let cfg = WavefrontConfig { threads: t, barrier, sync };
+        wavefront_jacobi_passes(&mut pool, &ConstLaplace7, &mut u, &f, h2, &cfg, 1).unwrap();
         assert_eq!(
             u.max_abs_diff(&want),
             0.0,
@@ -66,7 +74,8 @@ fn blocked_wavefront_is_exact_for_random_cases() {
         let f = Grid3::random(nz, ny, nx, g.next());
         let want = serial_reference(&u0, &f, 1.0, t);
         let mut u = u0.clone();
-        blocked_wavefront_jacobi(&mut u, &f, 1.0, &SpatialConfig { t, blocks }).unwrap();
+        blocked_wavefront_jacobi(&ConstLaplace7, &mut u, &f, 1.0, &SpatialConfig { t, blocks })
+            .unwrap();
         assert_eq!(
             u.max_abs_diff(&want),
             0.0,
@@ -78,6 +87,7 @@ fn blocked_wavefront_is_exact_for_random_cases() {
 #[test]
 fn multigroup_blocked_is_exact_for_random_cases() {
     let mut g = Gen(0x5EED);
+    let mut pool = WorkerPool::new(0);
     for case in 0..20 {
         let t = g.pick(&[2usize, 4, 6]);
         let groups = g.range(1, 4);
@@ -88,7 +98,8 @@ fn multigroup_blocked_is_exact_for_random_cases() {
         let f = Grid3::random(nz, ny, nx, g.next());
         let want = serial_reference(&u0, &f, 1.0, t);
         let mut u = u0.clone();
-        multigroup_blocked_jacobi(&mut u, &f, 1.0, &MultiGroupConfig { t, groups }).unwrap();
+        multigroup_passes(&mut pool, &ConstLaplace7, &mut u, &f, 1.0, &MultiGroupConfig { t, groups }, 1)
+            .unwrap();
         assert_eq!(
             u.max_abs_diff(&want),
             0.0,
@@ -101,14 +112,24 @@ fn multigroup_blocked_is_exact_for_random_cases() {
 fn multigroup_agrees_with_serial_blocked_sweep() {
     // same decomposition, two engines: the concurrent multi-group pass
     // and the serial Fig. 7 sweep must land on the identical grid.
+    let mut pool = WorkerPool::new(0);
     for (t, blocks) in [(2usize, 2usize), (4, 3), (6, 2)] {
         let u0 = Grid3::random(9, 15, 8, 21);
         let f = Grid3::random(9, 15, 8, 22);
         let mut serial = u0.clone();
-        blocked_wavefront_jacobi(&mut serial, &f, 0.9, &SpatialConfig { t, blocks }).unwrap();
-        let mut parallel = u0.clone();
-        multigroup_blocked_jacobi(&mut parallel, &f, 0.9, &MultiGroupConfig { t, groups: blocks })
+        blocked_wavefront_jacobi(&ConstLaplace7, &mut serial, &f, 0.9, &SpatialConfig { t, blocks })
             .unwrap();
+        let mut parallel = u0.clone();
+        multigroup_passes(
+            &mut pool,
+            &ConstLaplace7,
+            &mut parallel,
+            &f,
+            0.9,
+            &MultiGroupConfig { t, groups: blocks },
+            1,
+        )
+        .unwrap();
         assert_eq!(parallel.max_abs_diff(&serial), 0.0, "t={t} B={blocks}");
     }
 }
@@ -116,6 +137,7 @@ fn multigroup_agrees_with_serial_blocked_sweep() {
 #[test]
 fn pipeline_gs_is_exact_for_random_cases() {
     let mut g = Gen(0xF00D);
+    let mut pool = WorkerPool::new(0);
     for case in 0..20 {
         let (nz, ny, nx) = (g.range(3, 14), g.range(3, 20), g.range(3, 12));
         let threads = g.range(1, 6);
@@ -124,7 +146,8 @@ fn pipeline_gs_is_exact_for_random_cases() {
         let mut want = u0.clone();
         gs_sweeps(&mut want, 1, kernel);
         let mut u = u0.clone();
-        pipeline_gs_sweep(&mut u, &PipelineConfig { threads, kernel }).unwrap();
+        pipeline_gs_passes(&mut pool, &ConstLaplace7, &mut u, &PipelineConfig { threads, kernel }, 1)
+            .unwrap();
         assert_eq!(
             u.max_abs_diff(&want),
             0.0,
@@ -136,6 +159,7 @@ fn pipeline_gs_is_exact_for_random_cases() {
 #[test]
 fn gs_wavefront_is_exact_for_random_cases() {
     let mut g = Gen(0xABCD);
+    let mut pool = WorkerPool::new(0);
     for case in 0..20 {
         let (nz, ny, nx) = (g.range(3, 12), g.range(3, 14), g.range(3, 10));
         let sweeps = g.range(1, 5);
@@ -144,9 +168,12 @@ fn gs_wavefront_is_exact_for_random_cases() {
         let mut want = u0.clone();
         gs_sweeps(&mut want, sweeps, GsKernel::Interleaved);
         let mut u = u0.clone();
-        wavefront_gs(
+        wavefront_gs_passes(
+            &mut pool,
+            &ConstLaplace7,
             &mut u,
             &GsWavefrontConfig { sweeps, threads_per_group: width, kernel: GsKernel::Interleaved },
+            1,
         )
         .unwrap();
         assert_eq!(
@@ -163,26 +190,28 @@ fn schemes_compose_interchangeably() {
     let u0 = Grid3::random(12, 12, 12, 99);
     let f = Grid3::random(12, 12, 12, 98);
     let want = serial_reference(&u0, &f, 1.0, 8);
+    let mut pool = WorkerPool::new(0);
 
-    // wavefront(4) then wavefront(4)
+    // wavefront(4) twice
     let mut a = u0.clone();
     let cfg4 = WavefrontConfig { threads: 4, ..Default::default() };
-    wavefront_jacobi(&mut a, &f, 1.0, &cfg4).unwrap();
-    wavefront_jacobi(&mut a, &f, 1.0, &cfg4).unwrap();
+    wavefront_jacobi_passes(&mut pool, &ConstLaplace7, &mut a, &f, 1.0, &cfg4, 2).unwrap();
     assert_eq!(a.max_abs_diff(&want), 0.0);
 
     // blocked(2 blocks, t=2) four times
     let mut b = u0.clone();
     for _ in 0..4 {
-        blocked_wavefront_jacobi(&mut b, &f, 1.0, &SpatialConfig { t: 2, blocks: 2 }).unwrap();
+        blocked_wavefront_jacobi(&ConstLaplace7, &mut b, &f, 1.0, &SpatialConfig { t: 2, blocks: 2 })
+            .unwrap();
     }
     assert_eq!(b.max_abs_diff(&want), 0.0);
 
     // wavefront(2) + blocked(t=6, 3 blocks)
     let mut c = u0.clone();
-    wavefront_jacobi(&mut c, &f, 1.0, &WavefrontConfig { threads: 2, ..Default::default() })
+    let cfg2 = WavefrontConfig { threads: 2, ..Default::default() };
+    wavefront_jacobi_passes(&mut pool, &ConstLaplace7, &mut c, &f, 1.0, &cfg2, 1).unwrap();
+    blocked_wavefront_jacobi(&ConstLaplace7, &mut c, &f, 1.0, &SpatialConfig { t: 6, blocks: 3 })
         .unwrap();
-    blocked_wavefront_jacobi(&mut c, &f, 1.0, &SpatialConfig { t: 6, blocks: 3 }).unwrap();
     assert_eq!(c.max_abs_diff(&want), 0.0);
 }
 
@@ -191,13 +220,23 @@ fn gs_pipeline_and_wavefront_compose() {
     let u0 = Grid3::random(10, 16, 9, 5);
     let mut want = u0.clone();
     gs_sweeps(&mut want, 6, GsKernel::Interleaved);
+    let mut pool = WorkerPool::new(0);
 
     let mut u = u0.clone();
-    pipeline_gs_sweeps(&mut u, &PipelineConfig { threads: 3, kernel: GsKernel::Interleaved }, 2)
-        .unwrap();
-    wavefront_gs(
+    pipeline_gs_passes(
+        &mut pool,
+        &ConstLaplace7,
+        &mut u,
+        &PipelineConfig { threads: 3, kernel: GsKernel::Interleaved },
+        2,
+    )
+    .unwrap();
+    wavefront_gs_passes(
+        &mut pool,
+        &ConstLaplace7,
         &mut u,
         &GsWavefrontConfig { sweeps: 4, threads_per_group: 2, kernel: GsKernel::Interleaved },
+        1,
     )
     .unwrap();
     assert_eq!(u.max_abs_diff(&want), 0.0);

@@ -7,8 +7,8 @@
 //! * a built session spawns no new threads across `run()` calls
 //!   (team-size accounting);
 //! * `PinPolicy` is advisory and a no-op off-Linux;
-//! * the convenience shims no longer serialize concurrent callers on a
-//!   process-wide mutex (per-thread pools).
+//! * concurrent sessions on caller threads run side by side without
+//!   cross-talk (each session owns its team — no process-wide mutex).
 
 use stencilwave::config::{RunConfig, Scheme};
 use stencilwave::coordinator::affinity::{pin_current_thread, PinPolicy};
@@ -16,14 +16,6 @@ use stencilwave::coordinator::solver::Solver;
 use stencilwave::coordinator::wavefront::serial_reference;
 use stencilwave::stencil::gauss_seidel::gs_sweeps;
 use stencilwave::stencil::grid::Grid3;
-
-const ALL_SCHEMES: [Scheme; 5] = [
-    Scheme::JacobiBaseline,
-    Scheme::JacobiWavefront,
-    Scheme::JacobiMultiGroup,
-    Scheme::GsBaseline,
-    Scheme::GsWavefront,
-];
 
 fn cfg(scheme: Scheme) -> RunConfig {
     RunConfig { scheme, size: (12, 14, 10), t: 4, groups: 2, iters: 8, ..Default::default() }
@@ -53,7 +45,7 @@ fn builder_errors_match_validate_errors() {
 fn sessions_are_bit_exact_for_every_scheme() {
     let (nz, ny, nx) = (12, 14, 10);
     let f = Grid3::random(nz, ny, nx, 3);
-    for scheme in ALL_SCHEMES {
+    for scheme in Scheme::ALL {
         let c = cfg(scheme);
         let mut solver = Solver::builder(&c).rhs(f.clone(), 1.0).build().unwrap();
         let u0 = Grid3::random(nz, ny, nx, 17);
@@ -97,7 +89,7 @@ fn one_pool_chained_through_sessions_of_every_scheme() {
     let (nz, ny, nx) = (12, 14, 10);
     let f = Grid3::random(nz, ny, nx, 5);
     let mut pool = None;
-    for (i, scheme) in ALL_SCHEMES.into_iter().enumerate() {
+    for (i, scheme) in Scheme::ALL.into_iter().enumerate() {
         let c = cfg(scheme);
         let mut b = Solver::builder(&c).rhs(f.clone(), 1.0);
         if let Some(p) = pool.take() {
@@ -152,14 +144,12 @@ fn pin_policy_is_a_noop_where_unsupported_and_advisory_elsewhere() {
     }
 }
 
-/// The old convenience API serialized every caller on one global mutexed
-/// pool; with per-thread pools, concurrent callers must all complete and
-/// stay bit-exact (a deadlock or cross-talk here is the regression).
+/// The pre-0.2.0 convenience API serialized every caller on one global
+/// mutexed pool; sessions own their team, so concurrent callers must all
+/// complete and stay bit-exact (a deadlock or cross-talk here is the
+/// regression).
 #[test]
-fn concurrent_convenience_callers_do_not_serialize_or_cross_talk() {
-    #![allow(deprecated)] // the shims are the subject under test
-    use stencilwave::coordinator::wavefront::{wavefront_jacobi_iters, WavefrontConfig};
-
+fn concurrent_sessions_do_not_serialize_or_cross_talk() {
     let threads = 4;
     std::thread::scope(|scope| {
         let mut handles = Vec::new();
@@ -168,10 +158,17 @@ fn concurrent_convenience_callers_do_not_serialize_or_cross_talk() {
                 let f = Grid3::random(10, 9, 8, 100 + seed);
                 let u0 = Grid3::random(10, 9, 8, 200 + seed);
                 let want = serial_reference(&u0, &f, 1.0, 8);
-                let wf = WavefrontConfig { threads: 4, ..Default::default() };
+                let c = RunConfig {
+                    scheme: Scheme::JacobiWavefront,
+                    size: (10, 9, 8),
+                    t: 4,
+                    iters: 8,
+                    ..Default::default()
+                };
+                let mut solver = Solver::builder(&c).rhs(f.clone(), 1.0).build().unwrap();
                 for _ in 0..3 {
                     let mut u = u0.clone();
-                    wavefront_jacobi_iters(&mut u, &f, 1.0, &wf, 8).unwrap();
+                    solver.run(&mut u, 8).unwrap();
                     assert_eq!(u.max_abs_diff(&want), 0.0, "caller {seed}");
                 }
             }));
