@@ -1,10 +1,16 @@
 //! Fig. 9 bench: Gauss-Seidel wavefront temporal blocking.
 //!
 //! Host leg: S simultaneous pipelined sweeps vs S sequential pipelined
-//! sweeps (the threaded baseline of Fig. 9's right axis). Model leg: the
-//! full five-machine Fig. 9 sweep.
+//! sweeps (the threaded baseline of Fig. 9's right axis), plus the
+//! multi-group member (the Fig. 5b pipeline nested in y-blocks, one per
+//! cache group). Model leg: the full five-machine Fig. 9 sweep.
+//!
+//! `STENCILWAVE_BENCH_SMOKE=1` shrinks the run to one small case with two
+//! timed iterations — the CI regression canary for the GS schemes,
+//! `gs_multigroup` included.
 
 use stencilwave::benchkit;
+use stencilwave::coordinator::gs_multigroup::{gs_multigroup_passes, GsMultiGroupConfig};
 use stencilwave::coordinator::pipeline::{pipeline_gs_passes, PipelineConfig};
 use stencilwave::coordinator::pool::WorkerPool;
 use stencilwave::coordinator::wavefront_gs::{wavefront_gs_passes, GsWavefrontConfig};
@@ -15,9 +21,12 @@ use stencilwave::stencil::op::ConstLaplace7;
 
 fn main() {
     let mut pool = WorkerPool::new(0);
+    let (sizes, sweep_counts, reps): (&[usize], &[usize], usize) =
+        if benchkit::smoke() { (&[20], &[2], 2) } else { (&[48, 64, 96], &[2, 4], 3) };
+
     benchkit::header("Fig. 9 host leg — GS wavefront vs pipelined baseline (real)");
-    for n in [48usize, 64, 96] {
-        for s_count in [2usize, 4] {
+    for &n in sizes {
+        for &s_count in sweep_counts {
             let u0 = Grid3::random(n, n, n, 9);
             let updates = (u0.interior_len() * s_count) as u64;
             let base = PipelineConfig { threads: 2, kernel: GsKernel::Interleaved };
@@ -25,7 +34,7 @@ fn main() {
                 &format!("baseline {s_count} pipelined sweeps {n}^3"),
                 updates,
                 1,
-                3,
+                reps,
                 || {
                     let mut u = u0.clone();
                     pipeline_gs_passes(&mut pool, &ConstLaplace7, &mut u, &base, s_count).unwrap();
@@ -42,10 +51,27 @@ fn main() {
                 &format!("wavefront S={s_count}x2 {n}^3"),
                 updates,
                 1,
-                3,
+                reps,
                 || {
                     let mut u = u0.clone();
                     wavefront_gs_passes(&mut pool, &ConstLaplace7, &mut u, &cfg, 1).unwrap();
+                    benchkit::black_box(u);
+                },
+            );
+            benchkit::report(&s);
+            let mg = GsMultiGroupConfig {
+                t: s_count,
+                groups: 2,
+                kernel: GsKernel::Interleaved,
+            };
+            let s = benchkit::bench_mlups(
+                &format!("multigroup t={s_count} G=2 {n}^3"),
+                updates,
+                1,
+                reps,
+                || {
+                    let mut u = u0.clone();
+                    gs_multigroup_passes(&mut pool, &ConstLaplace7, &mut u, &mg, 1).unwrap();
                     benchkit::black_box(u);
                 },
             );

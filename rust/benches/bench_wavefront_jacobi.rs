@@ -18,10 +18,7 @@ use stencilwave::stencil::grid::Grid3;
 use stencilwave::stencil::jacobi::jacobi_steps;
 use stencilwave::stencil::op::{ConstLaplace7, Laplace13, StencilOp, VarCoeff7};
 
-fn smoke() -> bool {
-    // usual env-flag convention: unset, empty and "0" all mean off
-    std::env::var("STENCILWAVE_BENCH_SMOKE").is_ok_and(|v| !v.is_empty() && v != "0")
-}
+use stencilwave::benchkit::smoke;
 
 fn bench_op<O: StencilOp>(
     pool: &mut WorkerPool,

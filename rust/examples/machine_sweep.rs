@@ -81,12 +81,7 @@ fn main() -> stencilwave::Result<()> {
     // ---- functional sweep on the host: every schedule must be exact
     println!("\n== functional verification sweep (host execution) ==");
     let mut configs = Vec::new();
-    for scheme in [
-        Scheme::JacobiBaseline,
-        Scheme::JacobiWavefront,
-        Scheme::GsBaseline,
-        Scheme::GsWavefront,
-    ] {
+    for scheme in Scheme::ALL {
         for t in [2usize, 4] {
             configs.push(RunConfig {
                 scheme,

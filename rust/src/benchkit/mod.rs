@@ -10,6 +10,14 @@ use std::time::{Duration, Instant};
 /// Re-export of the optimizer barrier.
 pub use std::hint::black_box;
 
+/// True when `STENCILWAVE_BENCH_SMOKE` asks for the CI smoke variant of
+/// a bench (one small case, two timed reps). Usual env-flag convention:
+/// unset, empty and `"0"` all mean off. One home for the check so every
+/// bench binary interprets the flag identically.
+pub fn smoke() -> bool {
+    std::env::var("STENCILWAVE_BENCH_SMOKE").is_ok_and(|v| !v.is_empty() && v != "0")
+}
+
 /// Timing summary of one benchmark case.
 #[derive(Clone, Debug)]
 pub struct Sample {

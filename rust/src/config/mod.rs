@@ -32,22 +32,41 @@ pub enum Scheme {
     /// Multi-group spatial × temporal blocked Jacobi (Fig. 7 at scale):
     /// `groups` thread groups each wavefront-sweep one y-block.
     JacobiMultiGroup,
+    /// Multi-group spatial × temporal blocked Gauss-Seidel: `groups`
+    /// thread groups each run a pipelined GS wavefront (Fig. 5b) over
+    /// one y-block of the Fig. 7 decomposition, handing `R`-line
+    /// interface boundary arrays to the left neighbor under round-lag
+    /// flow control.
+    GsMultiGroup,
 }
 
 impl Scheme {
     /// Every registered scheme (mirrors [`OpKind::ALL`]) — the single
     /// list the tests and sweeps iterate, so a new scheme cannot be
     /// silently missing from coverage.
-    pub const ALL: [Scheme; 5] = [
+    pub const ALL: [Scheme; 6] = [
         Scheme::JacobiBaseline,
         Scheme::JacobiWavefront,
         Scheme::JacobiMultiGroup,
         Scheme::GsBaseline,
         Scheme::GsWavefront,
+        Scheme::GsMultiGroup,
     ];
 
     pub fn is_gs(self) -> bool {
-        matches!(self, Scheme::GsBaseline | Scheme::GsWavefront)
+        matches!(self, Scheme::GsBaseline | Scheme::GsWavefront | Scheme::GsMultiGroup)
+    }
+
+    /// The config/CLI name of the scheme (the `scheme = "..."` key).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Scheme::JacobiBaseline => "jacobi_baseline",
+            Scheme::JacobiWavefront => "jacobi_wavefront",
+            Scheme::JacobiMultiGroup => "jacobi_multigroup",
+            Scheme::GsBaseline => "gs_baseline",
+            Scheme::GsWavefront => "gs_wavefront",
+            Scheme::GsMultiGroup => "gs_multigroup",
+        }
     }
 
     pub fn kernel(self, optimized: bool) -> Kernel {
@@ -67,10 +86,96 @@ impl Scheme {
             "jacobi_multigroup" => Scheme::JacobiMultiGroup,
             "gs_baseline" => Scheme::GsBaseline,
             "gs_wavefront" => Scheme::GsWavefront,
+            "gs_multigroup" => Scheme::GsMultiGroup,
             other => anyhow::bail!("unknown scheme '{other}'"),
         })
     }
 }
+
+/// Typed validation error for the multi-group schemes' per-block width
+/// requirement — the one decomposition constraint a grid can violate.
+///
+/// The out-of-place Jacobi decomposition needs `2R` interior lines per
+/// block (the serial forwarding pass for narrower blocks has no sound
+/// one-round-lag analog); the in-place GS decomposition only needs the
+/// `R`-line halo per block (the restriction is *lifted* to `R`: all
+/// levels live in one array, so no forwarded lines exist). Callers that
+/// want to branch on this failure downcast the [`anyhow::Error`]:
+///
+/// ```
+/// use stencilwave::config::{BlockWidthError, RunConfig, Scheme};
+/// let cfg = RunConfig {
+///     scheme: Scheme::JacobiMultiGroup, size: (16, 8, 16), groups: 4,
+///     ..Default::default()
+/// };
+/// let err = cfg.validate().unwrap_err();
+/// assert!(err.downcast_ref::<BlockWidthError>().is_some());
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BlockWidthError {
+    /// Scheme that rejected the decomposition.
+    pub scheme: Scheme,
+    /// Halo radius of the configured op.
+    pub radius: usize,
+    /// y extent of the grid.
+    pub ny: usize,
+    /// Requested group (= y-block) count.
+    pub groups: usize,
+    /// Interior lines the grid offers (`ny - 2R`).
+    pub interior: usize,
+    /// Interior lines every block must hold for this scheme.
+    pub required: usize,
+}
+
+impl BlockWidthError {
+    /// Interior lines per block `scheme` requires for halo radius
+    /// `radius` (0 for schemes without a block decomposition).
+    pub fn required_lines(scheme: Scheme, radius: usize) -> usize {
+        match scheme {
+            Scheme::JacobiMultiGroup => 2 * radius,
+            Scheme::GsMultiGroup => radius,
+            _ => 0,
+        }
+    }
+
+    /// Check the width requirement of `scheme` on a grid of y extent
+    /// `ny` split into `groups` blocks — the single source every entry
+    /// point (config validation and the schedule constructors) uses, so
+    /// the error is identical wherever it surfaces.
+    pub fn check(scheme: Scheme, radius: usize, ny: usize, groups: usize) -> Result<()> {
+        let required = Self::required_lines(scheme, radius);
+        let interior = ny.saturating_sub(2 * radius);
+        if required == 0 || groups <= 1 || interior >= required * groups {
+            return Ok(());
+        }
+        Err(anyhow::Error::new(BlockWidthError {
+            scheme,
+            radius,
+            ny,
+            groups,
+            interior,
+            required,
+        }))
+    }
+}
+
+impl std::fmt::Display for BlockWidthError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} needs >= {} interior lines per block for a radius-{} op \
+             (ny = {} gives {} interior lines for {} groups)",
+            self.scheme.as_str(),
+            self.required,
+            self.radius,
+            self.ny,
+            self.interior,
+            self.groups
+        )
+    }
+}
+
+impl std::error::Error for BlockWidthError {}
 
 /// One experiment description.
 #[derive(Clone, Debug)]
@@ -216,13 +321,7 @@ impl RunConfig {
 
     /// Serialize back to the config format.
     pub fn to_text(&self) -> String {
-        let scheme = match self.scheme {
-            Scheme::JacobiBaseline => "jacobi_baseline",
-            Scheme::JacobiWavefront => "jacobi_wavefront",
-            Scheme::JacobiMultiGroup => "jacobi_multigroup",
-            Scheme::GsBaseline => "gs_baseline",
-            Scheme::GsWavefront => "gs_wavefront",
-        };
+        let scheme = self.scheme.as_str();
         let barrier = match self.barrier {
             BarrierKind::Spin => "spin",
             BarrierKind::Tree => "tree",
@@ -272,16 +371,7 @@ impl RunConfig {
                 self.t
             );
         }
-        if matches!(self.scheme, Scheme::JacobiMultiGroup) && self.groups > 1 {
-            anyhow::ensure!(
-                ny - 2 * r >= 2 * r * self.groups,
-                "multi-group blocking needs >= {} interior lines per group for a radius-{r} op \
-                 (ny = {ny} gives {} for {} groups)",
-                2 * r,
-                ny - 2 * r,
-                self.groups
-            );
-        }
+        BlockWidthError::check(self.scheme, r, ny, self.groups)?;
         if let Some(name) = &self.machine {
             anyhow::ensure!(MachineSpec::by_name(name).is_some(), "unknown machine '{name}'");
         }
@@ -422,10 +512,75 @@ mod tests {
     }
 
     #[test]
+    fn gs_multigroup_scheme_roundtrip_and_validation() {
+        let mut cfg =
+            RunConfig::from_text("scheme = \"gs_multigroup\"\nsize = [16, 16, 16]\n").unwrap();
+        assert_eq!(cfg.scheme, Scheme::GsMultiGroup);
+        assert!(cfg.scheme.is_gs());
+        cfg.groups = 14; // in-place GS: one interior line per block suffices
+        cfg.validate().unwrap();
+        let back = RunConfig::from_text(&cfg.to_text()).unwrap();
+        assert_eq!(back.scheme, Scheme::GsMultiGroup);
+        assert_eq!(back.groups, 14);
+        cfg.groups = 15; // 14 interior lines < 15 blocks
+        assert!(cfg.validate().is_err());
+        // GS has no even-t or iters-divisibility requirement (the
+        // remainder pass handles partial temporal depth)
+        cfg.groups = 2;
+        cfg.t = 3;
+        cfg.iters = 7;
+        cfg.validate().unwrap();
+        // hyphenated CLI spelling parses too
+        assert_eq!(Scheme::parse("gs-multigroup").unwrap(), Scheme::GsMultiGroup);
+    }
+
+    #[test]
+    fn every_scheme_roundtrips_through_text() {
+        // a future variant cannot ship without a parse + print mapping
+        for scheme in Scheme::ALL {
+            let cfg = RunConfig { scheme, ..Default::default() };
+            let text = cfg.to_text();
+            assert!(text.contains(&format!("scheme = \"{}\"", scheme.as_str())), "{text}");
+            assert_eq!(RunConfig::from_text(&text).unwrap().scheme, scheme);
+            assert_eq!(Scheme::parse(scheme.as_str()).unwrap(), scheme);
+        }
+    }
+
+    #[test]
+    fn block_width_errors_are_typed_and_scheme_specific() {
+        // radius-2 op, 12 interior lines: the Jacobi decomposition needs
+        // 4 lines per block, the in-place GS one only 2
+        let mut cfg = RunConfig {
+            op: OpKind::Laplace13,
+            size: (16, 16, 16),
+            groups: 4,
+            ..Default::default()
+        };
+        cfg.scheme = Scheme::JacobiMultiGroup;
+        let err = cfg.validate().unwrap_err();
+        let typed = err.downcast_ref::<BlockWidthError>().expect("typed error");
+        assert_eq!(typed.required, 4);
+        assert_eq!(typed.interior, 12);
+        assert_eq!(typed.scheme, Scheme::JacobiMultiGroup);
+        cfg.scheme = Scheme::GsMultiGroup;
+        cfg.validate().unwrap(); // 12 >= 2 * 4: the lifted restriction
+        cfg.groups = 7; // 12 < 2 * 7
+        let err = cfg.validate().unwrap_err();
+        let typed = err.downcast_ref::<BlockWidthError>().expect("typed error");
+        assert_eq!(typed.required, 2);
+        assert_eq!(typed.scheme, Scheme::GsMultiGroup);
+        // non-decomposing schemes never produce the error
+        cfg.scheme = Scheme::GsWavefront;
+        cfg.validate().unwrap();
+    }
+
+    #[test]
     fn scheme_kernel_mapping() {
         assert_eq!(Scheme::JacobiBaseline.kernel(true), Kernel::JacobiOpt);
         assert_eq!(Scheme::GsWavefront.kernel(false), Kernel::GsC);
+        assert_eq!(Scheme::GsMultiGroup.kernel(true), Kernel::GsOpt);
         assert!(Scheme::GsBaseline.is_gs());
+        assert!(Scheme::GsMultiGroup.is_gs());
         assert!(!Scheme::JacobiWavefront.is_gs());
         assert!(Scheme::parse("jacobi-wavefront").is_ok());
         assert!(Scheme::parse("nope").is_err());

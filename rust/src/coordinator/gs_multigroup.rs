@@ -1,0 +1,461 @@
+//! Multi-group spatial × temporal blocking for Gauss-Seidel — the
+//! Fig. 5b wavefront pipeline nested inside the y-block multi-group
+//! decomposition of [`super::spatial_mg`], generic over the
+//! [`StencilOp`] kernel layer.
+//!
+//! [`super::wavefront_gs`] runs `S` complete GS sweeps simultaneously
+//! over the *whole* grid, shifted in z. Here `G` *groups* each own one
+//! y-block of the Fig. 7 decomposition and run that pipeline over their
+//! block concurrently: worker `g` executes rounds of `t` time-shifted
+//! in-place sweep levels, level `s` updating plane
+//! `k = round + (R-1) - (R+1)·(s-1)` of its block — the `k + R` sweep
+//! spacing of the GS wavefront, expressed as the same round/lag
+//! arithmetic the Jacobi multi-group scheme uses (groups of pipelined
+//! sweeps per block: Wittmann et al., arXiv:0912.4506, carry the
+//! block-of-groups decomposition over to ordered smoothers;
+//! arXiv:1006.3148 motivates the per-cache-group y-block layout).
+//!
+//! ## Cross-group protocol (lexicographic order across block seams)
+//!
+//! Updating line `(k, y)` at level `s` reads, across the lower seam,
+//! lines `y - d` at level `s` (*new* values) and, across the upper seam,
+//! lines `y + d` at level `s - 1` (*old* values). Both are satisfied by
+//! one watermark pair per round:
+//!
+//! * **left-wait** — worker `g` starts round `r` after `g-1` *finished*
+//!   round `r`: the interface lines below the block then hold exactly
+//!   level-`s` values when level `s` of round `r` reads them (level
+//!   `s+1` of `g-1` only reaches plane `k` at round `r + R+1`, which the
+//!   right-wait below blocks until `g` has published round `r`);
+//! * **right-wait** — worker `g` starts round `r` after `g+1` finished
+//!   round `r - (R+1)`: the boundary-array slots round `r` reads (see
+//!   below) were written then. This is the round-lag hand-off; with lag
+//!   `R+1 >= 2` the steady-state pipeline keeps every group busy
+//!   (`g`'s round `r` and `g+1`'s round `r-1` overlap).
+//!
+//! Because GS updates in place, the level-`(s-1)` values of `g+1`'s
+//! first `R` lines would be overwritten by its level-`s` pass before `g`
+//! can read them across the seam. Each group therefore saves its first
+//! `R` lines into a per-level **boundary array** (`(t-1)` levels ×
+//! `nz` planes × `R` x-lines) right after updating them; the left
+//! neighbor reads the saved copies. Level 0 (the original values) needs
+//! no save — the left-wait ordering alone freezes it — and the deepest
+//! level `t` is read by nobody.
+//!
+//! ## The width restriction is *lifted* to `R` lines per block
+//!
+//! The out-of-place Jacobi decomposition needs `2R` interior lines per
+//! block (its serial forwarding pass has no sound one-round-lag analog).
+//! In-place GS has no forwarded lines: every level lives in the single
+//! array, and the boundary array only carries the `R`-line halo a seam
+//! read can reach — so any decomposition with `>= R` interior lines per
+//! block (`ny - 2R >= R·G`) is exact, radius-1 blocks may be a single
+//! line wide, and narrower decompositions fail with the typed
+//! [`BlockWidthError`] (shared with [`RunConfig::validate`], so the
+//! config layer and this constructor raise the identical error).
+//!
+//! Result: bit-identical to `t` serial lexicographic sweeps for every
+//! `(t, groups)` and radius — asserted by the tests, the shared parity
+//! harness (`tests/common`) and `launcher::run_experiment` on every
+//! launch.
+//!
+//! [`RunConfig::validate`]: crate::config::RunConfig::validate
+
+use std::marker::PhantomData;
+
+use crate::config::{BlockWidthError, Scheme};
+use crate::stencil::gauss_seidel::GsKernel;
+use crate::stencil::grid::Grid3;
+use crate::stencil::op::{op_gs_sweep, GsWindow, StencilOp, MAX_RADIUS};
+use crate::Result;
+
+use super::pool::WorkerPool;
+use super::schedule::{Progress, Schedule};
+
+/// Configuration of a multi-group blocked GS pass.
+#[derive(Clone, Copy, Debug)]
+pub struct GsMultiGroupConfig {
+    /// Temporal blocking factor `t` = simultaneous in-place sweeps per
+    /// block (>= 1; in-place GS has no even-`t` restriction).
+    pub t: usize,
+    /// Thread groups = y blocks (>= 1; each block needs >= R interior
+    /// lines when `groups > 1`).
+    pub groups: usize,
+    pub kernel: GsKernel,
+}
+
+impl Default for GsMultiGroupConfig {
+    fn default() -> Self {
+        Self { t: 4, groups: 2, kernel: GsKernel::Interleaved }
+    }
+}
+
+impl GsMultiGroupConfig {
+    /// Validate the grid-independent part of the configuration (single
+    /// source for every entry point); the per-group width requirement
+    /// needs the grid and the op radius and lives in
+    /// [`GsMultiGroupSchedule::new`].
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.t >= 1, "need at least one sweep level");
+        anyhow::ensure!(self.groups >= 1, "need at least one group");
+        Ok(())
+    }
+}
+
+/// One multi-group blocked GS pass (`t` fused in-place sweeps of `op`)
+/// as a [`Schedule`]: worker `g` runs the GS wavefront over y-block `g`.
+pub struct GsMultiGroupSchedule<'g, O: StencilOp> {
+    op: &'g O,
+    base: *mut f64,
+    /// `(groups-1) * (t-1) * nz * R` x-lines: one boundary-array slab
+    /// per *seam* (slab `g-1` belongs to group `g`, which has a left
+    /// neighbor), holding each non-final level's first `R` block lines
+    /// for that neighbor's old-value seam reads. Group 0 saves nothing
+    /// and owns no slab.
+    bnd: *mut f64,
+    nz: usize,
+    ny: usize,
+    nx: usize,
+    t: usize,
+    r: usize,
+    groups: usize,
+    kernel: GsKernel,
+    /// Block boundaries over the interior lines `[R, ny-R)`.
+    starts: Vec<usize>,
+    last_round: isize,
+    _borrow: PhantomData<&'g mut f64>,
+}
+
+// SAFETY: groups write disjoint regions (own block lines, own boundary
+// array); the left-wait/right-wait watermark pair orders every
+// cross-group read/write pair (module docs).
+unsafe impl<O: StencilOp> Send for GsMultiGroupSchedule<'_, O> {}
+unsafe impl<O: StencilOp> Sync for GsMultiGroupSchedule<'_, O> {}
+
+impl<'g, O: StencilOp> GsMultiGroupSchedule<'g, O> {
+    /// Build a pass over `u`. `bnd` is a caller-owned scratch buffer
+    /// (typically the pool's reusable [`Scratch`](super::pool::Scratch)),
+    /// resized here; it must stay alive (and untouched) for as long as
+    /// the schedule runs.
+    pub fn new(
+        op: &'g O,
+        u: &'g mut Grid3,
+        bnd: &'g mut Vec<f64>,
+        cfg: &GsMultiGroupConfig,
+    ) -> Result<Self> {
+        cfg.validate()?;
+        let t = cfg.t;
+        let groups = cfg.groups;
+        let r = op.radius();
+        anyhow::ensure!(r >= 1 && r <= MAX_RADIUS, "unsupported halo radius {r}");
+        op.validate_domain(u.shape())?;
+        let (nz, ny, nx) = u.shape();
+        anyhow::ensure!(
+            nz >= 2 * r + 1 && ny >= 2 * r + 1 && nx >= 2 * r + 1,
+            "grid too small for a radius-{r} blocked pass"
+        );
+        BlockWidthError::check(Scheme::GsMultiGroup, r, ny, groups)?;
+        let interior = ny - 2 * r;
+        bnd.clear();
+        bnd.resize(groups.saturating_sub(1) * t.saturating_sub(1) * nz * r * nx, 0.0);
+        let starts: Vec<usize> = (0..=groups).map(|b| r + b * interior / groups).collect();
+        let lag = (r + 1) as isize;
+        Ok(Self {
+            op,
+            base: u.data_mut().as_mut_ptr(),
+            bnd: bnd.as_mut_ptr(),
+            nz,
+            ny,
+            nx,
+            t,
+            r,
+            groups,
+            kernel: cfg.kernel,
+            starts,
+            last_round: (nz - 2 * r) as isize + lag * (t as isize - 1),
+            _borrow: PhantomData,
+        })
+    }
+}
+
+impl<O: StencilOp> Schedule for GsMultiGroupSchedule<'_, O> {
+    fn workers(&self) -> usize {
+        self.groups
+    }
+
+    fn worker(&self, g: usize, progress: &Progress) {
+        let (nz, ny, nx, t, r) = (self.nz, self.ny, self.nx, self.t, self.r);
+        let lag = (r + 1) as isize;
+        let lvl_stride = nz * r * nx; // per saved level
+        let slab = t.saturating_sub(1) * lvl_stride;
+        // seam slab g-1 is written by group g; group g reads its right
+        // neighbor's slab (g+1)-1 = g
+        let bnd_own = if g > 0 {
+            unsafe { self.bnd.add((g - 1) * slab) }
+        } else {
+            std::ptr::null_mut()
+        };
+        let bnd_next = if g + 1 < self.groups {
+            unsafe { self.bnd.add(g * slab) as *const f64 }
+        } else {
+            std::ptr::null()
+        };
+        let base = self.base;
+        let block_start = self.starts[g];
+        let block_end = self.starts[g + 1];
+        let at = |kk: usize, yy: usize| (kk * ny + yy) * nx;
+
+        for round in 1..=self.last_round {
+            if g > 0 {
+                // lexicographic flow: the left neighbor's level-s seam
+                // lines for this round are live once it finished the
+                // same round (module docs).
+                progress.wait_min(g - 1, round);
+            }
+            if g + 1 < self.groups {
+                // round-lag hand-off: the boundary-array slots this
+                // round reads were written by the right neighbor at
+                // round - lag; the same wait keeps the right neighbor
+                // from overwriting seam lines the left-wait freezes.
+                progress.wait_min(g + 1, round - lag);
+            }
+            for s in 1..=t {
+                let k = round + (r as isize - 1) - lag * (s as isize - 1);
+                if k < r as isize || k > (nz - 1 - r) as isize {
+                    continue;
+                }
+                let k = k as usize;
+                for y in block_start..block_end {
+                    // SAFETY: the watermark protocol above freezes every
+                    // line the window reads and gives this group
+                    // exclusive write access to its block (module docs);
+                    // the five-line window never aliases the mutable
+                    // center line.
+                    unsafe {
+                        let line_at = |kk: usize, yy: usize| {
+                            std::slice::from_raw_parts(base.add(at(kk, yy)) as *const f64, nx)
+                        };
+                        // never read past index r-1; must not alias the
+                        // mutable center line
+                        let dummy = line_at(k, y - 1);
+                        let mut win = GsWindow {
+                            ym_new: [dummy; MAX_RADIUS],
+                            yp_old: [dummy; MAX_RADIUS],
+                            zm_new: [dummy; MAX_RADIUS],
+                            zp_old: [dummy; MAX_RADIUS],
+                        };
+                        for d in 0..r {
+                            win.ym_new[d] = line_at(k, y - d - 1);
+                            win.zm_new[d] = line_at(k - d - 1, y);
+                            win.zp_old[d] = line_at(k + d + 1, y);
+                            let yy = y + d + 1;
+                            win.yp_old[d] = if s >= 2 && !bnd_next.is_null() && yy >= block_end {
+                                // the right neighbor's level-(s-1) value
+                                // of its line yy, saved before its
+                                // level-s pass overwrote it
+                                std::slice::from_raw_parts(
+                                    bnd_next.add(
+                                        (s - 2) * lvl_stride + (k * r + (yy - block_end)) * nx,
+                                    ),
+                                    nx,
+                                )
+                            } else {
+                                line_at(k, yy)
+                            };
+                        }
+                        let line = std::slice::from_raw_parts_mut(base.add(at(k, y)), nx);
+                        self.op.gs_line_update(line, &win, k, y, self.kernel);
+                        if g > 0 && s < t && y < block_start + r {
+                            // save the freshly written level-s value of
+                            // this seam line for the left neighbor's
+                            // level-(s+1) old-value reads
+                            let dst = bnd_own
+                                .add((s - 1) * lvl_stride + (k * r + (y - block_start)) * nx);
+                            std::ptr::copy_nonoverlapping(line.as_ptr(), dst, nx);
+                        }
+                    }
+                }
+            }
+            progress.publish(g, round);
+        }
+    }
+}
+
+/// Run `passes` multi-group GS passes (`t` sweeps each) of `op` on
+/// `pool` with one schedule — boundary arrays come from the pool's
+/// reusable [`Scratch`](super::pool::Scratch).
+pub fn gs_multigroup_passes<O: StencilOp>(
+    pool: &mut WorkerPool,
+    op: &O,
+    u: &mut Grid3,
+    cfg: &GsMultiGroupConfig,
+    passes: usize,
+) -> Result<()> {
+    cfg.validate()?;
+    let r = op.radius();
+    let (nz, ny, nx) = u.shape();
+    if nz < 2 * r + 1 || ny < 2 * r + 1 || nx < 2 * r + 1 || passes == 0 {
+        return Ok(());
+    }
+    if cfg.groups == 1 && cfg.t == 1 {
+        for _ in 0..passes {
+            op_gs_sweep(op, u, cfg.kernel);
+        }
+        return Ok(());
+    }
+    let mut scratch = pool.take_scratch();
+    let result = (|| -> Result<()> {
+        let schedule = GsMultiGroupSchedule::new(op, u, &mut scratch.bnd, cfg)?;
+        for _ in 0..passes {
+            pool.run(&schedule)?;
+        }
+        Ok(())
+    })();
+    pool.restore_scratch(scratch);
+    result
+}
+
+/// `iters` sweeps of `op` via passes of `cfg.t` each (+ a remainder pass
+/// with a shallower temporal depth), all on one team — the pool-level
+/// entry point the [`SchemeRunner`] registry, tests and benches drive.
+///
+/// [`SchemeRunner`]: super::runner::SchemeRunner
+pub fn gs_multigroup_iters_passes<O: StencilOp>(
+    pool: &mut WorkerPool,
+    op: &O,
+    u: &mut Grid3,
+    cfg: &GsMultiGroupConfig,
+    iters: usize,
+) -> Result<()> {
+    cfg.validate()?;
+    gs_multigroup_passes(pool, op, u, cfg, iters / cfg.t)?;
+    let rest = iters % cfg.t;
+    if rest > 0 {
+        let tail = GsMultiGroupConfig { t: rest, ..*cfg };
+        gs_multigroup_passes(pool, op, u, &tail, 1)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stencil::gauss_seidel::gs_sweeps;
+    use crate::stencil::op::{op_gs_sweeps, ConstLaplace7, Laplace13, VarCoeff7};
+
+    fn run_mg<O: StencilOp>(op: &O, u: &mut Grid3, cfg: &GsMultiGroupConfig) -> Result<()> {
+        let mut pool = WorkerPool::new(0);
+        gs_multigroup_passes(&mut pool, op, u, cfg, 1)
+    }
+
+    fn check(nz: usize, ny: usize, nx: usize, t: usize, groups: usize, kernel: GsKernel) {
+        let mut u = Grid3::random(nz, ny, nx, 123);
+        let mut want = u.clone();
+        gs_sweeps(&mut want, t, kernel);
+        run_mg(&ConstLaplace7, &mut u, &GsMultiGroupConfig { t, groups, kernel }).unwrap();
+        assert_eq!(u.max_abs_diff(&want), 0.0, "{nz}x{ny}x{nx} t={t} G={groups} {kernel:?}");
+    }
+
+    fn check_r2(nz: usize, ny: usize, nx: usize, t: usize, groups: usize) {
+        let mut u = Grid3::random(nz, ny, nx, 321);
+        let mut want = u.clone();
+        op_gs_sweeps(&Laplace13, &mut want, t, GsKernel::Interleaved);
+        let cfg = GsMultiGroupConfig { t, groups, kernel: GsKernel::Interleaved };
+        run_mg(&Laplace13, &mut u, &cfg).unwrap();
+        assert_eq!(u.max_abs_diff(&want), 0.0, "radius-2 {nz}x{ny}x{nx} t={t} G={groups}");
+    }
+
+    #[test]
+    fn single_group_matches_serial() {
+        check(8, 8, 8, 1, 1, GsKernel::Interleaved);
+        check(10, 9, 8, 4, 1, GsKernel::Interleaved);
+        check(8, 7, 9, 3, 1, GsKernel::Naive);
+    }
+
+    #[test]
+    fn two_groups_match_serial() {
+        check(10, 12, 8, 2, 2, GsKernel::Interleaved);
+        check(10, 12, 8, 4, 2, GsKernel::Interleaved);
+        check(8, 16, 9, 6, 2, GsKernel::Naive);
+        check(8, 4, 9, 4, 2, GsKernel::Interleaved); // one interior line each
+    }
+
+    #[test]
+    fn many_groups_and_uneven_blocks_match_serial() {
+        check(8, 24, 8, 4, 4, GsKernel::Interleaved);
+        check(8, 13, 8, 4, 3, GsKernel::Interleaved); // 11 lines over 3 blocks
+        check(6, 11, 7, 3, 5, GsKernel::Naive); // 9 lines over 5 blocks
+        check(6, 6, 7, 2, 4, GsKernel::Interleaved); // width-1 blocks
+        check(7, 9, 8, 5, 7, GsKernel::Interleaved); // all blocks width 1
+    }
+
+    #[test]
+    fn deep_temporal_blocking_and_short_z() {
+        check(10, 10, 8, 8, 4, GsKernel::Interleaved);
+        check(4, 10, 8, 6, 3, GsKernel::Interleaved); // pipeline > z extent
+        check(3, 8, 6, 5, 2, GsKernel::Naive);
+    }
+
+    #[test]
+    fn radius2_groups_match_serial() {
+        check_r2(10, 9, 9, 2, 2); // minimum width: 2 interior lines each + 1
+        check_r2(10, 12, 9, 2, 2);
+        check_r2(10, 16, 9, 4, 2);
+        check_r2(9, 11, 8, 3, 3); // 7 interior lines over 3 blocks, uneven
+        check_r2(11, 14, 8, 5, 4);
+        check_r2(5, 10, 7, 4, 3); // short z, exactly 2 lines per block
+    }
+
+    #[test]
+    fn varcoeff_groups_match_serial() {
+        let op = VarCoeff7::default_for((9, 14, 8));
+        let mut u = Grid3::random(9, 14, 8, 33);
+        let mut want = u.clone();
+        op_gs_sweeps(&op, &mut want, 4, GsKernel::Interleaved);
+        let cfg = GsMultiGroupConfig { t: 4, groups: 3, kernel: GsKernel::Interleaved };
+        run_mg(&op, &mut u, &cfg).unwrap();
+        assert_eq!(u.max_abs_diff(&want), 0.0);
+    }
+
+    #[test]
+    fn iters_with_remainder_reuse_one_team() {
+        let mut u = Grid3::random(10, 14, 8, 5);
+        let mut want = u.clone();
+        gs_sweeps(&mut want, 11, GsKernel::Interleaved);
+        let cfg = GsMultiGroupConfig { t: 4, groups: 3, kernel: GsKernel::Interleaved };
+        let mut pool = WorkerPool::new(3);
+        gs_multigroup_iters_passes(&mut pool, &ConstLaplace7, &mut u, &cfg, 11).unwrap();
+        assert_eq!(u.max_abs_diff(&want), 0.0);
+        assert_eq!(pool.size(), 3, "no extra workers for the remainder pass");
+    }
+
+    #[test]
+    fn invalid_configs_rejected_with_typed_width_error() {
+        let mut u = Grid3::random(8, 8, 8, 1);
+        // zero sweeps / zero groups
+        let cfg = GsMultiGroupConfig { t: 0, groups: 2, kernel: GsKernel::Interleaved };
+        assert!(run_mg(&ConstLaplace7, &mut u, &cfg).is_err());
+        let cfg = GsMultiGroupConfig { t: 2, groups: 0, kernel: GsKernel::Interleaved };
+        assert!(run_mg(&ConstLaplace7, &mut u, &cfg).is_err());
+        // more blocks than interior lines (8 - 2 = 6 < 7)
+        let cfg = GsMultiGroupConfig { t: 2, groups: 7, kernel: GsKernel::Interleaved };
+        let err = run_mg(&ConstLaplace7, &mut u, &cfg).unwrap_err();
+        let typed = err.downcast_ref::<BlockWidthError>().expect("typed width error");
+        assert_eq!((typed.scheme, typed.required), (Scheme::GsMultiGroup, 1));
+        // radius-2: 12 - 4 = 8 interior lines < 2 * 5 groups
+        let mut v = Grid3::random(8, 12, 8, 2);
+        let cfg = GsMultiGroupConfig { t: 2, groups: 5, kernel: GsKernel::Interleaved };
+        let err = run_mg(&Laplace13, &mut v, &cfg).unwrap_err();
+        assert!(err.downcast_ref::<BlockWidthError>().is_some());
+        // ...while 4 radius-2 blocks of 2 lines are exact (lifted bound)
+        check_r2(8, 12, 8, 2, 4);
+    }
+
+    #[test]
+    fn degenerate_grid_is_identity() {
+        let mut u = Grid3::random(2, 6, 6, 9);
+        let orig = u.clone();
+        run_mg(&ConstLaplace7, &mut u, &GsMultiGroupConfig::default()).unwrap();
+        assert_eq!(u, orig);
+    }
+}

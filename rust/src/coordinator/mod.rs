@@ -26,6 +26,10 @@
 //! * [`spatial_mg`] — the multi-group version of Fig. 7: `G` groups
 //!   wavefront-sweep their y-blocks concurrently, handing the odd-level
 //!   boundary arrays to the next group under round-lag flow control.
+//! * [`gs_multigroup`] — the Gauss-Seidel member of that family: each
+//!   group runs the Fig. 5b pipeline over its y-block in place, saving
+//!   `R`-line per-level boundary arrays for the left neighbor's
+//!   old-value seam reads (width restriction lifted from `2R` to `R`).
 //!
 //! Every scheme is generic over a [`StencilOp`](crate::stencil::op::StencilOp)
 //! — the kernel layer supplies the halo radius the schedules honor in
@@ -61,11 +65,13 @@
 //! removed in 0.3.0 after its one-release deprecation window — see the
 //! migration table in the README. Pool-level entry points
 //! (`wavefront_jacobi_passes`, `pipeline_gs_passes`,
-//! `wavefront_gs_iters_passes`, `multigroup_passes`) remain public for
-//! callers that drive an explicit [`pool::WorkerPool`].
+//! `wavefront_gs_iters_passes`, `multigroup_passes`,
+//! `gs_multigroup_iters_passes`) remain public for callers that drive an
+//! explicit [`pool::WorkerPool`].
 
 pub mod affinity;
 pub mod barrier;
+pub mod gs_multigroup;
 pub mod pipeline;
 pub mod pool;
 pub mod runner;

@@ -39,7 +39,8 @@ use super::schedule::{Progress, Schedule};
 pub struct Scratch {
     /// Temporary z-x plane rings (wavefront / multi-group odd levels).
     pub planes: Vec<f64>,
-    /// Odd-level boundary arrays (multi-group interface hand-off).
+    /// Per-level boundary arrays (multi-group interface hand-off: odd
+    /// levels for the Jacobi scheme, every non-final level for GS).
     pub bnd: Vec<f64>,
     /// Per-worker x-line buffers (`workers * nx`, disjoint slices).
     pub lines: Vec<f64>,

@@ -8,7 +8,7 @@
 //! single place a scheme lives — implement [`SchemeRunner`] (usually via
 //! one generic struct over [`OpFamily`]) and add the instantiations to
 //! the registry — and the stencil layer is the single place an operator
-//! lives: a new [`OpKind`] plus one registry line per scheme (five
+//! lives: a new [`OpKind`] plus one registry line per scheme (six
 //! today) light it up in the
 //! [`Solver`](super::solver::Solver) session, the launcher and the CLI.
 //! Each (scheme, op) entry is a distinct monomorphization, so the
@@ -37,6 +37,7 @@ use crate::stencil::op::{
 };
 use crate::Result;
 
+use super::gs_multigroup::{gs_multigroup_iters_passes, GsMultiGroupConfig};
 use super::pipeline::{pipeline_gs_passes, PipelineConfig};
 use super::pool::WorkerPool;
 use super::spatial_mg::{multigroup_passes, MultiGroupConfig};
@@ -388,6 +389,62 @@ impl<O: OpFamily> SchemeRunner for GsWavefrontRunner<O> {
     }
 }
 
+/// Multi-group spatial × temporal blocked Gauss-Seidel (the Fig. 5b
+/// pipeline nested in the Fig. 7 y-block decomposition).
+struct GsMultiGroupRunner<O>(PhantomData<O>);
+
+impl<O: OpFamily> SchemeRunner for GsMultiGroupRunner<O> {
+    fn scheme(&self) -> Scheme {
+        Scheme::GsMultiGroup
+    }
+    fn op_kind(&self) -> OpKind {
+        O::KIND
+    }
+    fn team_size(&self, cfg: &RunConfig) -> usize {
+        if cfg.t <= 1 && cfg.groups <= 1 {
+            0 // short-circuits to the serial sweep
+        } else {
+            cfg.groups
+        }
+    }
+    fn step_iters(&self, cfg: &RunConfig) -> usize {
+        cfg.t
+    }
+    fn execute(
+        &self,
+        pool: &mut WorkerPool,
+        op: &OpInstance,
+        u: &mut Grid3,
+        _f: &Grid3,
+        _h2: f64,
+        cfg: &RunConfig,
+        iters: usize,
+    ) -> Result<()> {
+        let mg = GsMultiGroupConfig { t: cfg.t, groups: cfg.groups, kernel: cfg.gs_kernel() };
+        gs_multigroup_iters_passes(pool, O::extract(op), u, &mg, iters)
+    }
+    fn reference(
+        &self,
+        op: &OpInstance,
+        u0: &Grid3,
+        _f: &Grid3,
+        _h2: f64,
+        cfg: &RunConfig,
+        iters: usize,
+    ) -> Grid3 {
+        let mut r = u0.clone();
+        op_gs_sweeps(O::extract(op), &mut r, iters, cfg.gs_kernel());
+        r
+    }
+    fn predict(&self, machine: &MachineSpec, cfg: &RunConfig) -> f64 {
+        // the multi-group model with the op's in-place GS signature:
+        // half the write traffic of the Jacobi decomposition and
+        // (t-1) x R-line boundary arrays per interface
+        multigroup_prediction(machine, &wavefront_params(cfg), &profile_for(machine, cfg), cfg.size)
+            .mlups
+    }
+}
+
 /// Every registered (scheme, op) pair. Adding an op = one `OpFamily`
 /// impl + one column entry per scheme; adding a scheme = one generic
 /// `SchemeRunner` + one `op_column!` row. The launcher and CLI are
@@ -405,10 +462,11 @@ op_column!(JacobiWavefrontRunner, JW_C7, JW_VC, JW_L13);
 op_column!(JacobiMultiGroupRunner, JM_C7, JM_VC, JM_L13);
 op_column!(GsBaselineRunner, GB_C7, GB_VC, GB_L13);
 op_column!(GsWavefrontRunner, GW_C7, GW_VC, GW_L13);
+op_column!(GsMultiGroupRunner, GM_C7, GM_VC, GM_L13);
 
 static REGISTRY: &[&dyn SchemeRunner] = &[
     &JB_C7, &JB_VC, &JB_L13, &JW_C7, &JW_VC, &JW_L13, &JM_C7, &JM_VC, &JM_L13, &GB_C7, &GB_VC,
-    &GB_L13, &GW_C7, &GW_VC, &GW_L13,
+    &GB_L13, &GW_C7, &GW_VC, &GW_L13, &GM_C7, &GM_VC, &GM_L13,
 ];
 
 /// All registered runners (one per scheme × op pair).
@@ -454,6 +512,24 @@ mod tests {
             }
         }
         assert_eq!(runners().count(), Scheme::ALL.len() * OpKind::ALL.len());
+        // 6 schemes x 3 ops, derived from the two ALL lists, never from a
+        // hand-maintained count
+        assert_eq!(runners().count(), 18);
+    }
+
+    #[test]
+    fn every_registered_runner_predicts_on_every_testbed_machine() {
+        // registry-coverage half of the config/CLI round-trip satellite:
+        // all 18 entries resolve and their model leg works everywhere
+        for m in MachineSpec::testbed() {
+            for scheme in Scheme::ALL {
+                for op in OpKind::ALL {
+                    let cfg = base_cfg(scheme, op);
+                    let p = runner_for(scheme, op).unwrap().predict(&m, &cfg);
+                    assert!(p.is_finite() && p > 0.0, "{} {scheme:?} x {op:?}: {p}", m.name);
+                }
+            }
+        }
     }
 
     #[test]
@@ -503,6 +579,15 @@ mod tests {
         let mg = runner_for(Scheme::JacobiMultiGroup, OpKind::ConstLaplace7).unwrap();
         let wf = runner_for(Scheme::JacobiWavefront, OpKind::ConstLaplace7).unwrap();
         assert_ne!(mg.predict(&m, &cfg), wf.predict(&m, &cfg));
+        // the GS member gets the same specialization (in-place boundary
+        // traffic), not the plain GS wavefront model
+        let gs_cfg = base_cfg(Scheme::GsMultiGroup, OpKind::ConstLaplace7);
+        let gs_mg = runner_for(Scheme::GsMultiGroup, OpKind::ConstLaplace7).unwrap();
+        let gs_wf = runner_for(Scheme::GsWavefront, OpKind::ConstLaplace7).unwrap();
+        assert_ne!(gs_mg.predict(&m, &gs_cfg), gs_wf.predict(&m, &gs_cfg));
+        // and the in-place signature prices less traffic per LUP than
+        // the out-of-place Jacobi decomposition at the same parameters
+        assert_ne!(gs_mg.predict(&m, &gs_cfg), mg.predict(&m, &cfg));
     }
 
     #[test]

@@ -42,6 +42,7 @@
 
 use std::marker::PhantomData;
 
+use crate::config::{BlockWidthError, Scheme};
 use crate::stencil::grid::Grid3;
 use crate::stencil::op::{StarWindow, StencilOp, MAX_RADIUS};
 use crate::Result;
@@ -142,13 +143,8 @@ impl<'g, O: StencilOp> MultiGroupSchedule<'g, O> {
             nz >= 2 * r + 1 && ny >= 2 * r + 1 && nx >= 2 * r + 1,
             "grid too small for a radius-{r} blocked pass"
         );
+        BlockWidthError::check(Scheme::JacobiMultiGroup, r, ny, groups)?;
         let interior = ny - 2 * r;
-        anyhow::ensure!(
-            groups == 1 || interior >= 2 * r * groups,
-            "multi-group blocking needs >= {} interior lines per group for a radius-{r} op \
-             (ny = {ny} gives {interior} interior lines for {groups} groups)",
-            2 * r
-        );
         let plane = ny * nx;
         let slots = tmp_slots(r);
         let levels = t / 2;
@@ -472,9 +468,12 @@ mod tests {
         // zero groups
         assert!(run_mg(&ConstLaplace7, &mut u, &f, 1.0, &MultiGroupConfig { t: 2, groups: 0 }, 1)
             .is_err());
-        // too many groups for the interior (8 - 2 = 6 lines < 2 * 4)
-        assert!(run_mg(&ConstLaplace7, &mut u, &f, 1.0, &MultiGroupConfig { t: 2, groups: 4 }, 1)
-            .is_err());
+        // too many groups for the interior (8 - 2 = 6 lines < 2 * 4):
+        // the typed BlockWidthError, same as RunConfig::validate raises
+        let err = run_mg(&ConstLaplace7, &mut u, &f, 1.0, &MultiGroupConfig { t: 2, groups: 4 }, 1)
+            .unwrap_err();
+        let typed = err.downcast_ref::<BlockWidthError>().expect("typed width error");
+        assert_eq!((typed.required, typed.groups), (2, 4));
         // radius-2: 12 - 4 = 8 interior lines < 4 * 3 groups
         let mut v = Grid3::random(8, 12, 8, 2);
         let fv = Grid3::zeros(8, 12, 8);

@@ -208,6 +208,21 @@ mod tests {
     }
 
     #[test]
+    fn csv_names_every_scheme() {
+        // the launcher-CSV half of the round-trip satellite: every
+        // registered scheme (gs_multigroup included) appears by name in
+        // its verified report row
+        let reports: Vec<RunReport> =
+            Scheme::ALL.iter().map(|&s| run_experiment(&cfg(s)).unwrap()).collect();
+        let csv = to_csv(&reports);
+        assert_eq!(csv.lines().count(), 1 + Scheme::ALL.len());
+        for scheme in Scheme::ALL {
+            assert!(csv.contains(&format!("{scheme:?},")), "{scheme:?} missing from:\n{csv}");
+        }
+        assert!(csv.contains("GsMultiGroup,"));
+    }
+
+    #[test]
     fn sweep_runs_all_configs() {
         let reports = sweep(vec![cfg(Scheme::JacobiBaseline), cfg(Scheme::GsBaseline)], 2);
         assert_eq!(reports.len(), 2);

@@ -36,7 +36,7 @@ COMMANDS:
                --iters <I> --op <o> --machine <name>
                --pin <none|compact|scatter> --csv
                schemes: jacobi-baseline jacobi-wavefront jacobi-multigroup
-                        gs-baseline gs-wavefront
+                        gs-baseline gs-wavefront gs-multigroup
                ops:     laplace7 (paper 7-point) varcoeff (Helmholtz-style
                         coefficient grid) laplace13 (4th-order, radius 2)
                --pin places workers on cores (cache-group aware when

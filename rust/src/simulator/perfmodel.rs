@@ -218,18 +218,25 @@ pub fn wavefront_prediction_for(
     Prediction::min3(compute, olc, mem, sync_eff)
 }
 
-/// Predicted performance of the multi-group spatial × temporal scheme
-/// (`Scheme::JacobiMultiGroup`) — the ROADMAP item: instead of reusing
-/// the plain wavefront model, account the per-block boundary-array
-/// traffic and the round-lag hand-off.
+/// Predicted performance of the multi-group spatial × temporal schemes
+/// (`Scheme::JacobiMultiGroup` / `Scheme::GsMultiGroup`) — instead of
+/// reusing the plain wavefront model, account the per-block
+/// boundary-array traffic and the round-lag hand-off.
 ///
 /// The decomposition is the scheme's own (`G` fixed y-blocks, one per
 /// group), not the OLC-derived blocking: each group's rolling window
 /// only needs its own block resident. On top of the wavefront memory
-/// leg, the `G-1` interfaces move `t/2` odd levels × `2R` x-lines × `nz`
-/// planes through memory twice per pass (written by one group, read by
-/// the next — they do not share an OLC under scatter pinning), and the
-/// per-round neighbor hand-off replaces the intra-group barrier.
+/// leg, the `G-1` interfaces move their boundary arrays through memory
+/// twice per pass (written by one group, read by the next — they do not
+/// share an OLC under scatter pinning), and the per-round neighbor
+/// hand-off replaces the intra-group barrier. The boundary volume is
+/// signature-dependent: the out-of-place Jacobi decomposition saves
+/// `t/2` odd levels × `2R` x-lines per plane, the in-place GS one
+/// (`in_place` signatures) saves `t-1` levels × `R` lines — and its
+/// in-place updates already halve the main-stream write traffic via
+/// [`TrafficSignature::mem_bytes_per_lup`].
+///
+/// [`TrafficSignature::mem_bytes_per_lup`]: crate::stencil::op::TrafficSignature::mem_bytes_per_lup
 pub fn multigroup_prediction(
     m: &MachineSpec,
     p: &WavefrontParams,
@@ -249,12 +256,16 @@ pub fn multigroup_prediction(
     let (compute, olc, cpl) = blocked_rooflines(m, profile, smt_per_core, physical_cores);
 
     // --- memory roofline: wavefront amortization + boundary arrays.
-    // Per pass the boundary arrays move (G-1) · (t/2 levels) · 2R lines
-    // · nz · nx sites · 8 B, written once and read once; useful updates
-    // are (nz·ny·nx)·t.
+    // Per pass the boundary arrays move (G-1) · levels · lines · nz · nx
+    // sites · 8 B, written once and read once; useful updates are
+    // (nz·ny·nx)·t.
     let g = p.groups as f64;
-    let bnd_per_lup =
-        2.0 * 8.0 * (g - 1.0) * (p.t as f64 / 2.0) * (2 * radius) as f64 / (ny as f64 * p.t as f64);
+    let (bnd_levels, bnd_lines) = if profile.sig.in_place {
+        (p.t.saturating_sub(1) as f64, radius as f64)
+    } else {
+        (p.t as f64 / 2.0, (2 * radius) as f64)
+    };
+    let bnd_per_lup = 2.0 * 8.0 * (g - 1.0) * bnd_levels * bnd_lines / (ny as f64 * p.t as f64);
     let nt = matches!(p.store, StoreMode::NonTemporal) && !profile.sig.in_place;
     let mem_bytes = profile.sig.mem_bytes_per_lup(nt) / p.t as f64 + bnd_per_lup;
     let mem = m.memory_bandwidth_gbs(p.groups, nt) * 1e3 / mem_bytes;
@@ -375,6 +386,57 @@ mod tests {
             SIZE,
         );
         assert!(p8.mem_mlups < p4.mem_mlups);
+    }
+
+    #[test]
+    fn gs_multigroup_boundary_traffic_uses_the_inplace_signature() {
+        use crate::stencil::op::OpKind;
+        let m = MachineSpec::nehalem_ep();
+        let gs = KernelProfile::of_op(OpKind::ConstLaplace7, true, true, m.arch);
+        assert!(gs.sig.in_place);
+        let base = WavefrontParams {
+            t: 4,
+            groups: 4,
+            smt: false,
+            kernel: Kernel::GsOpt,
+            store: StoreMode::WriteAllocate,
+            barrier: BarrierKind::Spin,
+        };
+        // groups = 1 degenerates to the plain wavefront model
+        let single = WavefrontParams { groups: 1, ..base };
+        assert_eq!(
+            multigroup_prediction(&m, &single, &gs, SIZE).mlups,
+            wavefront_prediction_for(&m, &single, &gs, SIZE).mlups
+        );
+        // more interfaces -> more R-line boundary traffic
+        let p4 = multigroup_prediction(&m, &base, &gs, SIZE);
+        let p8 = multigroup_prediction(&m, &WavefrontParams { groups: 8, ..base }, &gs, SIZE);
+        assert!(p4.mlups.is_finite() && p4.mlups > 0.0);
+        assert!(p8.mem_mlups < p4.mem_mlups);
+        // t = 1 saves no levels at all: the boundary term vanishes and
+        // the memory leg matches the boundary-free accounting exactly
+        let t1 = WavefrontParams { t: 1, ..base };
+        let no_bnd = m.memory_bandwidth_gbs(t1.groups, false) * 1e3
+            / gs.sig.mem_bytes_per_lup(false);
+        assert_eq!(multigroup_prediction(&m, &t1, &gs, SIZE).mem_mlups, no_bnd);
+        // the in-place hand-off ((t-1) x R lines at t = 4) moves fewer
+        // boundary bytes than the Jacobi one (t/2 x 2R), and GS gets the
+        // no-NT STREAM figure — so the GS memory roofline must sit
+        // strictly above the Jacobi decomposition's at the same
+        // parameters (a swapped signature branch flips this)
+        let jac = KernelProfile::of_op(OpKind::ConstLaplace7, false, true, m.arch);
+        let jac_p4 = multigroup_prediction(
+            &m,
+            &WavefrontParams { store: StoreMode::NonTemporal, kernel: Kernel::JacobiOpt, ..base },
+            &jac,
+            SIZE,
+        );
+        assert!(
+            p4.mem_mlups > jac_p4.mem_mlups,
+            "GS {} !> Jacobi {}",
+            p4.mem_mlups,
+            jac_p4.mem_mlups
+        );
     }
 
     #[test]

@@ -1,0 +1,120 @@
+//! Shared cross-scheme parity harness: the serial-reference /
+//! bit-parity scaffolding formerly duplicated across `op_parity.rs`,
+//! `schedules.rs` and `pool_reuse.rs`.
+//!
+//! The harness drives every case through a [`Solver`] session and
+//! asserts the parallel result is bit-identical to the registry's serial
+//! reference (and, for the paper's `ConstLaplace7` op, to the seed
+//! kernels). [`assert_scheme_op_matrix`] walks `Scheme::ALL` ×
+//! `OpKind::ALL`, so a future scheme or op variant cannot ship without
+//! parity coverage. `STENCILWAVE_THREADS` (a count or a comma-separated
+//! list) pins the parallel widths the matrix runs at — CI sweeps 1, 2
+//! and 4.
+#![allow(dead_code)] // each integration-test crate uses a subset
+
+use stencilwave::config::{RunConfig, Scheme};
+use stencilwave::coordinator::solver::Solver;
+use stencilwave::stencil::gauss_seidel::{gs_sweeps, GsKernel};
+use stencilwave::stencil::grid::Grid3;
+use stencilwave::stencil::jacobi::jacobi_steps;
+use stencilwave::stencil::op::OpKind;
+
+/// Deterministic pseudo-random case generator (xorshift).
+pub struct Gen(pub u64);
+
+impl Gen {
+    pub fn next(&mut self) -> u64 {
+        self.0 ^= self.0 << 13;
+        self.0 ^= self.0 >> 7;
+        self.0 ^= self.0 << 17;
+        self.0
+    }
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + (self.next() as usize) % (hi - lo + 1)
+    }
+    pub fn pick<T: Copy>(&mut self, opts: &[T]) -> T {
+        opts[(self.next() as usize) % opts.len()]
+    }
+}
+
+/// Parallel widths the parity matrix runs at: `STENCILWAVE_THREADS`
+/// (e.g. `4` or `1,2,4`) or the 1/2/4 default.
+pub fn thread_counts() -> Vec<usize> {
+    match std::env::var("STENCILWAVE_THREADS") {
+        Ok(v) if !v.trim().is_empty() => v
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse::<usize>()
+                    .unwrap_or_else(|e| panic!("STENCILWAVE_THREADS '{v}': {e}"))
+                    .max(1)
+            })
+            .collect(),
+        _ => vec![1, 2, 4],
+    }
+}
+
+/// A valid `RunConfig` exercising `scheme` × `op` at parallel width
+/// `threads`: scheme-specific `t`/`groups`/`iters` (odd iteration counts
+/// where the scheme supports a remainder pass) and a radius-aware y
+/// extent wide enough for the strictest block-width requirement, plus
+/// one line so uneven splits appear.
+pub fn parity_config(scheme: Scheme, op: OpKind, threads: usize) -> RunConfig {
+    let threads = threads.max(1);
+    let even = |n: usize| (n.max(2) + 1) & !1;
+    let (t, groups, iters) = match scheme {
+        Scheme::JacobiBaseline | Scheme::GsBaseline => (threads, 1, 3),
+        Scheme::JacobiWavefront => (even(threads), 1, 2 * even(threads)),
+        Scheme::JacobiMultiGroup => (4, threads, 8),
+        Scheme::GsWavefront => (threads, 2, 2 * threads + 1),
+        Scheme::GsMultiGroup => (3, threads, 7),
+    };
+    let r = op.radius();
+    let ny = (2 * r + 2 * r * groups + 3).max(2 * r + 5);
+    RunConfig { scheme, op, size: (11, ny, 9), t, groups, iters, ..Default::default() }
+}
+
+/// Run `cfg` through a `Solver` session and assert the result is
+/// bit-identical to the registry's serial reference — and, for the
+/// paper's `ConstLaplace7` op, to the seed `jacobi_steps`/`gs_sweeps`
+/// kernels.
+pub fn assert_bit_parity(cfg: &RunConfig, seed: u64) {
+    let (nz, ny, nx) = cfg.size;
+    let f = Grid3::random(nz, ny, nx, seed);
+    let u0 = Grid3::random(nz, ny, nx, seed ^ 0xA5A5);
+    let h2 = 0.9;
+    let mut solver = Solver::builder(cfg).rhs(f.clone(), h2).build().unwrap();
+    let mut u = u0.clone();
+    solver.run(&mut u, cfg.iters).unwrap();
+    let want = solver.reference(&u0, cfg.iters);
+    let ctx = format!(
+        "{:?} x {:?} {nz}x{ny}x{nx} t={} groups={} iters={}",
+        cfg.scheme, cfg.op, cfg.t, cfg.groups, cfg.iters
+    );
+    assert_eq!(u.max_abs_diff(&want), 0.0, "{ctx}: parallel vs serial reference");
+    if cfg.op == OpKind::ConstLaplace7 {
+        let seed_want = seed_reference(cfg.scheme.is_gs(), &u0, &f, h2, cfg.iters);
+        assert_eq!(u.max_abs_diff(&seed_want), 0.0, "{ctx}: parity with the seed kernels");
+    }
+}
+
+/// The full `Scheme::ALL` × `OpKind::ALL` matrix at one parallel width.
+pub fn assert_scheme_op_matrix(threads: usize, seed: u64) {
+    for scheme in Scheme::ALL {
+        for op in OpKind::ALL {
+            assert_bit_parity(&parity_config(scheme, op, threads), seed);
+        }
+    }
+}
+
+/// Seed-kernel serial reference for `iters` `ConstLaplace7` updates —
+/// `gs_sweeps` for the in-place family, `jacobi_steps` otherwise.
+pub fn seed_reference(gs: bool, u0: &Grid3, f: &Grid3, h2: f64, iters: usize) -> Grid3 {
+    if gs {
+        let mut w = u0.clone();
+        gs_sweeps(&mut w, iters, GsKernel::Interleaved);
+        w
+    } else {
+        jacobi_steps(u0, f, h2, iters)
+    }
+}

@@ -1,73 +1,52 @@
-//! Kernel-parity suite for the generic `StencilOp` layer (the tentpole's
-//! acceptance tests):
+//! Kernel-parity suite for the generic `StencilOp` layer, driven by the
+//! shared cross-scheme harness (`tests/common`):
 //!
-//! * the generic [`ConstLaplace7`] path is **bit-identical** to the seed
-//!   `jacobi_sweep`/`gs_sweep` kernels across all five schemes and a
-//!   spread of grid shapes (property-style, seeded random cases);
+//! * the full `Scheme::ALL` × `OpKind::ALL` matrix is **bit-identical**
+//!   to its serial references (and, for [`ConstLaplace7`], to the seed
+//!   `jacobi_steps`/`gs_sweeps` kernels) at every `STENCILWAVE_THREADS`
+//!   width — a scheme or op variant cannot ship without this coverage;
 //! * the radius-2 [`Laplace13`] op matches an independent direct-formula
-//!   serial reference sweep, and runs exact through every scheme;
-//! * the variable-coefficient [`VarCoeff7`] op runs exact through every
-//!   scheme.
+//!   serial reference sweep;
+//! * the Gauss-Seidel family (`GsBaseline`, `GsWavefront`,
+//!   `GsMultiGroup`) shares one update ordering: all three land on the
+//!   identical grid for radius 1 and 2 across thread counts, group
+//!   counts and awkward extents;
+//! * the multi-group block-width restriction is typed and
+//!   scheme-specific: width-`R` blocks run exact through `GsMultiGroup`
+//!   (lifted) and raise `BlockWidthError` for `JacobiMultiGroup`.
 
-use stencilwave::config::{RunConfig, Scheme};
+mod common;
+
+use stencilwave::config::{BlockWidthError, RunConfig, Scheme};
 use stencilwave::coordinator::solver::Solver;
-use stencilwave::stencil::gauss_seidel::gs_sweeps;
 use stencilwave::stencil::grid::Grid3;
-use stencilwave::stencil::jacobi::jacobi_steps;
 use stencilwave::stencil::op::{op_jacobi_sweep, Laplace13, OpKind};
 
-/// Deterministic pseudo-random case generator (xorshift).
-struct Gen(u64);
+use common::Gen;
 
-impl Gen {
-    fn next(&mut self) -> u64 {
-        self.0 ^= self.0 << 13;
-        self.0 ^= self.0 >> 7;
-        self.0 ^= self.0 << 17;
-        self.0
-    }
-    fn range(&mut self, lo: usize, hi: usize) -> usize {
-        lo + (self.next() as usize) % (hi - lo + 1)
-    }
-}
-
-fn cfg(scheme: Scheme, op: OpKind, size: (usize, usize, usize)) -> RunConfig {
-    RunConfig { scheme, op, size, t: 4, groups: 2, iters: 8, ..Default::default() }
-}
-
-/// The seed (pre-`StencilOp`) result of `iters` updates for a scheme.
-fn seed_result(scheme: Scheme, u0: &Grid3, f: &Grid3, h2: f64, c: &RunConfig) -> Grid3 {
-    if scheme.is_gs() {
-        let mut r = u0.clone();
-        gs_sweeps(&mut r, c.iters, c.gs_kernel());
-        r
-    } else {
-        jacobi_steps(u0, f, h2, c.iters)
+#[test]
+fn scheme_op_matrix_is_bit_exact_at_every_thread_count() {
+    for (i, threads) in common::thread_counts().into_iter().enumerate() {
+        common::assert_scheme_op_matrix(threads, 0x0b5e55ed + i as u64);
     }
 }
 
 #[test]
-fn const7_generic_path_is_bit_identical_to_seed_kernels_across_schemes() {
-    let mut g = Gen(0x0b5e55ed);
-    for case in 0..6 {
-        // shapes wide enough for every scheme's width requirements
-        let size = (g.range(10, 16), g.range(12, 18), g.range(9, 14));
-        let (nz, ny, nx) = size;
-        let f = Grid3::random(nz, ny, nx, g.next());
-        let u0 = Grid3::random(nz, ny, nx, g.next());
-        let h2 = 0.5 + g.range(0, 2) as f64 / 2.0;
+fn randomized_shapes_stay_bit_exact_across_the_matrix() {
+    // property-style: grow every dimension of the harness's minimal
+    // config by a random amount so odd extents, non-divisible block
+    // splits and shallow/deep z pipelines all appear
+    let mut g = Gen(0xD1CE);
+    for case in 0..3 {
         for scheme in Scheme::ALL {
-            let c = cfg(scheme, OpKind::ConstLaplace7, size);
-            let mut solver = Solver::builder(&c).rhs(f.clone(), h2).build().unwrap();
-            let mut u = u0.clone();
-            solver.run(&mut u, c.iters).unwrap();
-            let want = seed_result(scheme, &u0, &f, h2, &c);
-            assert_eq!(
-                u.max_abs_diff(&want),
-                0.0,
-                "case {case} {scheme:?} {nz}x{ny}x{nx}: generic ConstLaplace7 \
-                 must be bit-identical to the seed kernels"
-            );
+            for op in OpKind::ALL {
+                let threads = g.pick(&common::thread_counts());
+                let mut cfg = common::parity_config(scheme, op, threads);
+                cfg.size.0 += g.range(0, 5);
+                cfg.size.1 += g.range(0, 5);
+                cfg.size.2 += g.range(0, 4);
+                common::assert_bit_parity(&cfg, (0x7a + case as u64) ^ g.next());
+            }
         }
     }
 }
@@ -104,45 +83,76 @@ fn radius2_serial_sweep_matches_direct_formula_reference() {
     assert_eq!(have.max_abs_diff(&want), 0.0);
 }
 
+/// Run `iters` GS updates of `u0` through a scheme's session.
+fn gs_result(
+    scheme: Scheme,
+    op: OpKind,
+    size: (usize, usize, usize),
+    t: usize,
+    groups: usize,
+    iters: usize,
+    u0: &Grid3,
+) -> Grid3 {
+    let cfg = RunConfig { scheme, op, size, t, groups, iters, ..Default::default() };
+    let mut solver = Solver::builder(&cfg).build().unwrap();
+    let mut u = u0.clone();
+    solver.run(&mut u, iters).unwrap();
+    u
+}
+
 #[test]
-fn radius2_runs_exact_through_every_scheme() {
-    let mut g = Gen(0x13);
-    for case in 0..4 {
-        let size = (g.range(11, 15), g.range(14, 20), g.range(10, 13));
-        let (nz, ny, nx) = size;
-        let f = Grid3::random(nz, ny, nx, g.next());
-        let u0 = Grid3::random(nz, ny, nx, g.next());
-        for scheme in Scheme::ALL {
-            let c = cfg(scheme, OpKind::Laplace13, size);
-            let mut solver = Solver::builder(&c).rhs(f.clone(), 0.9).build().unwrap();
-            let mut u = u0.clone();
-            solver.run(&mut u, c.iters).unwrap();
-            // the session's reference is the generic serial sweep of the
-            // same op instance — exactness across the parallel schedules
-            // is the property under test
-            let want = solver.reference(&u0, c.iters);
-            assert_eq!(u.max_abs_diff(&want), 0.0, "case {case} {scheme:?} {nz}x{ny}x{nx}");
+fn gs_schemes_share_one_update_ordering() {
+    // GsWavefront and GsMultiGroup must land on the bit-identical grid
+    // GsBaseline produces, for radius 1 and 2, across thread counts,
+    // group counts and awkward extents (ny not divisible by groups,
+    // minimum-size blocks, the single-group degenerate case)
+    let mut g = Gen(0x6A55);
+    for op in [OpKind::ConstLaplace7, OpKind::Laplace13] {
+        let r = op.radius();
+        for threads in common::thread_counts() {
+            for groups in [1usize, 2, threads.max(2)] {
+                let ny = 2 * r + r * groups + g.range(0, 3); // down to minimum-size blocks
+                let size = (2 * r + 1 + g.range(0, 7), ny, 2 * r + 3 + g.range(0, 4));
+                let iters = 2 * threads + 1; // exercises the remainder pass
+                let u0 = Grid3::random(size.0, size.1, size.2, g.next());
+                let width = groups.min(2);
+                let base = gs_result(Scheme::GsBaseline, op, size, threads, 1, iters, &u0);
+                let wf = gs_result(Scheme::GsWavefront, op, size, threads, width, iters, &u0);
+                let mg = gs_result(Scheme::GsMultiGroup, op, size, threads, groups, iters, &u0);
+                let ctx = format!("{op:?} {size:?} threads={threads} groups={groups}");
+                assert_eq!(wf.max_abs_diff(&base), 0.0, "{ctx}: GsWavefront vs GsBaseline");
+                assert_eq!(mg.max_abs_diff(&base), 0.0, "{ctx}: GsMultiGroup vs GsBaseline");
+            }
         }
     }
 }
 
 #[test]
-fn varcoeff_runs_exact_through_every_scheme() {
-    let mut g = Gen(0x7a);
-    for case in 0..4 {
-        let size = (g.range(9, 13), g.range(12, 16), g.range(8, 12));
-        let (nz, ny, nx) = size;
-        let f = Grid3::random(nz, ny, nx, g.next());
-        let u0 = Grid3::random(nz, ny, nx, g.next());
-        for scheme in Scheme::ALL {
-            let c = cfg(scheme, OpKind::VarCoeff7, size);
-            let mut solver = Solver::builder(&c).rhs(f.clone(), 1.1).build().unwrap();
-            let mut u = u0.clone();
-            solver.run(&mut u, c.iters).unwrap();
-            let want = solver.reference(&u0, c.iters);
-            assert_eq!(u.max_abs_diff(&want), 0.0, "case {case} {scheme:?} {nz}x{ny}x{nx}");
-        }
-    }
+fn block_width_restriction_is_typed_and_scheme_specific() {
+    // radius 1, ny = 6: four interior lines in four width-1 blocks. The
+    // in-place GS scheme runs them correctly (the 2R restriction lifts
+    // to R); the Jacobi scheme rejects the same decomposition with the
+    // typed validate-time error.
+    let size = (8, 6, 8);
+    let mut gs = common::parity_config(Scheme::GsMultiGroup, OpKind::ConstLaplace7, 4);
+    gs.size = size;
+    gs.groups = 4;
+    gs.validate().unwrap();
+    common::assert_bit_parity(&gs, 0xB10C);
+    let mut jc = common::parity_config(Scheme::JacobiMultiGroup, OpKind::ConstLaplace7, 4);
+    jc.size = size;
+    jc.groups = 4;
+    let err = jc.validate().unwrap_err();
+    let typed = err.downcast_ref::<BlockWidthError>().expect("typed width error");
+    assert_eq!((typed.scheme, typed.required, typed.interior), (Scheme::JacobiMultiGroup, 2, 4));
+    // the builder surfaces the identical typed error (no later panic)
+    let built = Solver::builder(&jc).build().map(|_| ()).unwrap_err();
+    assert!(built.downcast_ref::<BlockWidthError>().is_some());
+    // beyond the lifted bound even GS rejects: 5 blocks, 4 interior lines
+    gs.groups = 5;
+    let err = gs.validate().unwrap_err();
+    let typed = err.downcast_ref::<BlockWidthError>().expect("typed width error");
+    assert_eq!((typed.scheme, typed.required), (Scheme::GsMultiGroup, 1));
 }
 
 #[test]
@@ -152,11 +162,17 @@ fn op_mix_on_one_session_pool_stays_exact() {
     let size = (12, 16, 11);
     let f = Grid3::random(size.0, size.1, size.2, 5);
     let mut pool = None;
-    for (i, op) in [OpKind::Laplace13, OpKind::ConstLaplace7, OpKind::VarCoeff7, OpKind::Laplace13]
-        .into_iter()
-        .enumerate()
+    for (i, (scheme, op)) in [
+        (Scheme::JacobiWavefront, OpKind::Laplace13),
+        (Scheme::GsMultiGroup, OpKind::ConstLaplace7),
+        (Scheme::JacobiWavefront, OpKind::VarCoeff7),
+        (Scheme::GsMultiGroup, OpKind::Laplace13),
+        (Scheme::JacobiWavefront, OpKind::ConstLaplace7),
+    ]
+    .into_iter()
+    .enumerate()
     {
-        let c = cfg(Scheme::JacobiWavefront, op, size);
+        let c = RunConfig { scheme, op, size, t: 4, groups: 2, iters: 8, ..Default::default() };
         let mut b = Solver::builder(&c).rhs(f.clone(), 1.0);
         if let Some(p) = pool.take() {
             b = b.pool(p);
@@ -166,7 +182,7 @@ fn op_mix_on_one_session_pool_stays_exact() {
         let mut u = u0.clone();
         solver.run(&mut u, c.iters).unwrap();
         let want = solver.reference(&u0, c.iters);
-        assert_eq!(u.max_abs_diff(&want), 0.0, "step {i} {op:?}");
+        assert_eq!(u.max_abs_diff(&want), 0.0, "step {i} {scheme:?} x {op:?}");
         pool = Some(solver.into_pool());
     }
 }

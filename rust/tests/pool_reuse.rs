@@ -1,18 +1,25 @@
 //! One persistent pool reused across schemes, passes and team sizes must
 //! stay bit-exact against the serial references — the suite that catches
-//! stale progress-table or scratch-buffer state surviving a pass.
+//! stale progress-table or scratch-buffer state surviving a pass. The
+//! serial-reference scaffolding comes from the shared harness
+//! (`tests/common`).
 
+mod common;
+
+use stencilwave::coordinator::gs_multigroup::{gs_multigroup_passes, GsMultiGroupConfig};
 use stencilwave::coordinator::pipeline::{pipeline_gs_passes, PipelineConfig};
 use stencilwave::coordinator::pool::WorkerPool;
 use stencilwave::coordinator::spatial_mg::{multigroup_passes, MultiGroupConfig};
 use stencilwave::coordinator::wavefront::{
-    serial_reference, serial_reference_op, wavefront_jacobi_passes, SyncMode, WavefrontConfig,
+    serial_reference_op, wavefront_jacobi_passes, SyncMode, WavefrontConfig,
 };
 use stencilwave::coordinator::wavefront_gs::{wavefront_gs_passes, GsWavefrontConfig};
 use stencilwave::simulator::perfmodel::BarrierKind;
-use stencilwave::stencil::gauss_seidel::{gs_sweeps, GsKernel};
+use stencilwave::stencil::gauss_seidel::GsKernel;
 use stencilwave::stencil::grid::Grid3;
 use stencilwave::stencil::op::{ConstLaplace7, Laplace13};
+
+use common::seed_reference;
 
 #[test]
 fn one_pool_survives_scheme_and_team_size_changes() {
@@ -22,31 +29,36 @@ fn one_pool_survives_scheme_and_team_size_changes() {
         // wavefront Jacobi with a reconfigured team every call
         for (t, sync) in [(2usize, SyncMode::Flow), (6, SyncMode::Barrier), (4, SyncMode::Flow)] {
             let mut u = Grid3::random(12, 14, 10, 40 + round * 10 + t as u64);
-            let want = serial_reference(&u, &f, 1.0, t);
+            let want = seed_reference(false, &u, &f, 1.0, t);
             let cfg = WavefrontConfig { threads: t, barrier: BarrierKind::Spin, sync };
             wavefront_jacobi_passes(&mut pool, &ConstLaplace7, &mut u, &f, 1.0, &cfg, 1).unwrap();
             assert_eq!(u.max_abs_diff(&want), 0.0, "jacobi t={t} round={round}");
         }
         // pipelined GS on the same pool
         let mut u = Grid3::random(12, 14, 10, 70 + round);
-        let mut want = u.clone();
-        gs_sweeps(&mut want, 2, GsKernel::Interleaved);
+        let want = seed_reference(true, &u, &f, 1.0, 2);
         let p = PipelineConfig { threads: 3, kernel: GsKernel::Interleaved };
         pipeline_gs_passes(&mut pool, &ConstLaplace7, &mut u, &p, 2).unwrap();
         assert_eq!(u.max_abs_diff(&want), 0.0, "pipeline round={round}");
         // GS wavefront (different worker count again)
         let mut u = Grid3::random(12, 14, 10, 80 + round);
-        let mut want = u.clone();
-        gs_sweeps(&mut want, 3, GsKernel::Interleaved);
+        let want = seed_reference(true, &u, &f, 1.0, 3);
         let w = GsWavefrontConfig { sweeps: 3, threads_per_group: 2, kernel: GsKernel::Interleaved };
         wavefront_gs_passes(&mut pool, &ConstLaplace7, &mut u, &w, 1).unwrap();
         assert_eq!(u.max_abs_diff(&want), 0.0, "gs wavefront round={round}");
         // multi-group blocked Jacobi
         let mut u = Grid3::random(12, 14, 10, 90 + round);
-        let want = serial_reference(&u, &f, 1.0, 4);
+        let want = seed_reference(false, &u, &f, 1.0, 4);
         let mg = MultiGroupConfig { t: 4, groups: 3 };
         multigroup_passes(&mut pool, &ConstLaplace7, &mut u, &f, 1.0, &mg, 1).unwrap();
         assert_eq!(u.max_abs_diff(&want), 0.0, "multigroup round={round}");
+        // multi-group blocked GS (same pool, same scratch arena: its
+        // boundary array reuses the buffer the Jacobi scheme just sized)
+        let mut u = Grid3::random(12, 14, 10, 95 + round);
+        let want = seed_reference(true, &u, &f, 1.0, 4);
+        let gmg = GsMultiGroupConfig { t: 4, groups: 4, kernel: GsKernel::Interleaved };
+        gs_multigroup_passes(&mut pool, &ConstLaplace7, &mut u, &gmg, 1).unwrap();
+        assert_eq!(u.max_abs_diff(&want), 0.0, "gs multigroup round={round}");
     }
     // the pool grew to the largest team it ever hosted and kept it
     assert!(pool.size() >= 6, "pool size {}", pool.size());
@@ -58,7 +70,7 @@ fn many_passes_amortize_one_team() {
     // temporary-ring state leaking between passes breaks exactness.
     let f = Grid3::random(14, 10, 9, 11);
     let mut u = Grid3::random(14, 10, 9, 12);
-    let want = serial_reference(&u, &f, 0.7, 40);
+    let want = seed_reference(false, &u, &f, 0.7, 40);
     let cfg = WavefrontConfig { threads: 4, sync: SyncMode::Flow, ..Default::default() };
     let mut pool = WorkerPool::new(4);
     wavefront_jacobi_passes(&mut pool, &ConstLaplace7, &mut u, &f, 0.7, &cfg, 10).unwrap();
@@ -66,10 +78,17 @@ fn many_passes_amortize_one_team() {
 
     // and 12 more multi-group updates on the *same* pool
     let mut v = Grid3::random(14, 10, 9, 13);
-    let want = serial_reference(&v, &f, 0.7, 12);
+    let want = seed_reference(false, &v, &f, 0.7, 12);
     let mg = MultiGroupConfig { t: 2, groups: 4 };
     multigroup_passes(&mut pool, &ConstLaplace7, &mut v, &f, 0.7, &mg, 6).unwrap();
     assert_eq!(v.max_abs_diff(&want), 0.0);
+
+    // and 12 in-place GS multi-group updates, again on the same team
+    let mut w = Grid3::random(14, 10, 9, 14);
+    let want = seed_reference(true, &w, &f, 0.7, 12);
+    let gmg = GsMultiGroupConfig { t: 3, groups: 4, kernel: GsKernel::Interleaved };
+    gs_multigroup_passes(&mut pool, &ConstLaplace7, &mut w, &gmg, 4).unwrap();
+    assert_eq!(w.max_abs_diff(&want), 0.0);
 }
 
 #[test]
@@ -87,7 +106,7 @@ fn scratch_sized_for_radius2_is_safe_for_radius1_and_back() {
         assert_eq!(u.max_abs_diff(&want), 0.0, "radius-2 round={round}");
 
         let mut v = Grid3::random(12, 14, 10, 70 + round);
-        let want = serial_reference(&v, &f, 0.8, 4);
+        let want = seed_reference(false, &v, &f, 0.8, 4);
         let mg = MultiGroupConfig { t: 4, groups: 2 };
         multigroup_passes(&mut pool, &ConstLaplace7, &mut v, &f, 0.8, &mg, 1).unwrap();
         assert_eq!(v.max_abs_diff(&want), 0.0, "radius-1 round={round}");
@@ -97,6 +116,15 @@ fn scratch_sized_for_radius2_is_safe_for_radius1_and_back() {
         let mg2 = MultiGroupConfig { t: 2, groups: 2 };
         multigroup_passes(&mut pool, &Laplace13, &mut w, &f, 0.8, &mg2, 1).unwrap();
         assert_eq!(w.max_abs_diff(&want), 0.0, "radius-2 multigroup round={round}");
+
+        // the GS multi-group boundary array reuses the same scratch.bnd
+        // the Jacobi scheme just resized for radius 2
+        let mut x = Grid3::random(12, 14, 10, 85 + round);
+        let mut want = x.clone();
+        stencilwave::stencil::op::op_gs_sweeps(&Laplace13, &mut want, 2, GsKernel::Interleaved);
+        let gmg = GsMultiGroupConfig { t: 2, groups: 3, kernel: GsKernel::Interleaved };
+        gs_multigroup_passes(&mut pool, &Laplace13, &mut x, &gmg, 1).unwrap();
+        assert_eq!(x.max_abs_diff(&want), 0.0, "radius-2 gs multigroup round={round}");
     }
 }
 
@@ -108,7 +136,7 @@ fn shrinking_then_growing_team_sizes_stay_exact() {
     let mut pool = WorkerPool::new(0);
     for t in [8usize, 2, 6, 2, 4, 8, 2] {
         let mut u = Grid3::random(10, 18, 8, 100 + t as u64);
-        let want = serial_reference(&u, &f, 1.0, t);
+        let want = seed_reference(false, &u, &f, 1.0, t);
         let cfg = WavefrontConfig { threads: t, sync: SyncMode::Flow, ..Default::default() };
         wavefront_jacobi_passes(&mut pool, &ConstLaplace7, &mut u, &f, 1.0, &cfg, 1).unwrap();
         assert_eq!(u.max_abs_diff(&want), 0.0, "t={t}");

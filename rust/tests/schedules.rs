@@ -6,8 +6,12 @@
 //! Schedules are driven through their public pool-level entry points
 //! (`*_passes`) on private [`WorkerPool`]s, generic over the
 //! [`StencilOp`] layer — the radius-1 paper op here; radius-2 and
-//! variable-coefficient coverage lives in `tests/op_parity.rs`.
+//! variable-coefficient coverage lives in `tests/op_parity.rs`. Case
+//! generation comes from the shared harness (`tests/common`).
 
+mod common;
+
+use stencilwave::coordinator::gs_multigroup::{gs_multigroup_passes, GsMultiGroupConfig};
 use stencilwave::coordinator::pipeline::{pipeline_gs_passes, PipelineConfig};
 use stencilwave::coordinator::pool::WorkerPool;
 use stencilwave::coordinator::spatial::{blocked_wavefront_jacobi, SpatialConfig};
@@ -21,23 +25,7 @@ use stencilwave::stencil::gauss_seidel::{gs_sweeps, GsKernel};
 use stencilwave::stencil::grid::Grid3;
 use stencilwave::stencil::op::ConstLaplace7;
 
-/// Deterministic pseudo-random case generator.
-struct Gen(u64);
-
-impl Gen {
-    fn next(&mut self) -> u64 {
-        self.0 ^= self.0 << 13;
-        self.0 ^= self.0 >> 7;
-        self.0 ^= self.0 << 17;
-        self.0
-    }
-    fn range(&mut self, lo: usize, hi: usize) -> usize {
-        lo + (self.next() as usize) % (hi - lo + 1)
-    }
-    fn pick<T: Copy>(&mut self, opts: &[T]) -> T {
-        opts[(self.next() as usize) % opts.len()]
-    }
-}
+use common::Gen;
 
 #[test]
 fn wavefront_jacobi_is_exact_for_random_cases() {
@@ -185,6 +173,31 @@ fn gs_wavefront_is_exact_for_random_cases() {
 }
 
 #[test]
+fn gs_multigroup_is_exact_for_random_cases() {
+    let mut g = Gen(0x6B17);
+    let mut pool = WorkerPool::new(0);
+    for case in 0..20 {
+        let t = g.range(1, 5);
+        let groups = g.range(1, 4);
+        // >= 1 interior line per group (the lifted width requirement)
+        let ny = 2 + groups + g.range(0, 10);
+        let (nz, nx) = (g.range(3, 12), g.range(3, 10));
+        let kernel = g.pick(&[GsKernel::Naive, GsKernel::Interleaved]);
+        let u0 = Grid3::random(nz, ny, nx, g.next());
+        let mut want = u0.clone();
+        gs_sweeps(&mut want, t, kernel);
+        let mut u = u0.clone();
+        let cfg = GsMultiGroupConfig { t, groups, kernel };
+        gs_multigroup_passes(&mut pool, &ConstLaplace7, &mut u, &cfg, 1).unwrap();
+        assert_eq!(
+            u.max_abs_diff(&want),
+            0.0,
+            "case {case}: {nz}x{ny}x{nx} t={t} G={groups} {kernel:?}"
+        );
+    }
+}
+
+#[test]
 fn schemes_compose_interchangeably() {
     // 8 updates via any mix of schedules must land on the same grid.
     let u0 = Grid3::random(12, 12, 12, 99);
@@ -216,10 +229,12 @@ fn schemes_compose_interchangeably() {
 }
 
 #[test]
-fn gs_pipeline_and_wavefront_compose() {
+fn gs_pipeline_wavefront_and_multigroup_compose() {
+    // 9 GS sweeps via any mix of the three GS engines on one pool must
+    // land on the identical grid
     let u0 = Grid3::random(10, 16, 9, 5);
     let mut want = u0.clone();
-    gs_sweeps(&mut want, 6, GsKernel::Interleaved);
+    gs_sweeps(&mut want, 9, GsKernel::Interleaved);
     let mut pool = WorkerPool::new(0);
 
     let mut u = u0.clone();
@@ -236,6 +251,14 @@ fn gs_pipeline_and_wavefront_compose() {
         &ConstLaplace7,
         &mut u,
         &GsWavefrontConfig { sweeps: 4, threads_per_group: 2, kernel: GsKernel::Interleaved },
+        1,
+    )
+    .unwrap();
+    gs_multigroup_passes(
+        &mut pool,
+        &ConstLaplace7,
+        &mut u,
+        &GsMultiGroupConfig { t: 3, groups: 3, kernel: GsKernel::Interleaved },
         1,
     )
     .unwrap();
