@@ -1,0 +1,77 @@
+//! Scheme × nt_stores × smt performance matrix with machine-readable
+//! output.
+//!
+//! Runs the three headline schedules — wavefront Jacobi, wavefront GS
+//! and multi-group GS — through full [`Solver`] sessions at every
+//! `{nt_stores on/off} × {smt on/off}` combination, and writes the
+//! results to `BENCH_perf_matrix.json` (`{scheme, op, threads, smt,
+//! nt_stores, mlups}` records) so CI keeps a greppable perf history
+//! after the log scrolls off.
+//!
+//! `nt_stores` changes the *executed* kernels here (streaming stores on
+//! the writes no schedule re-reads), not just the model's traffic
+//! accounting — so the on/off delta in this matrix is a real hardware
+//! effect wherever AVX is available. GS schemes update in place and
+//! always write-allocate; their nt rows measure that the flag is a
+//! no-op there.
+//!
+//! `STENCILWAVE_BENCH_SMOKE=1` shrinks the grid and rep count — the CI
+//! configuration.
+
+use stencilwave::benchkit::{self, BenchRecord};
+use stencilwave::config::{RunConfig, Scheme};
+use stencilwave::coordinator::solver::Solver;
+use stencilwave::stencil::grid::Grid3;
+
+fn main() {
+    let smoke = benchkit::smoke();
+    let (n, iters, reps) = if smoke { (32usize, 4usize, 2usize) } else { (96, 8, 3) };
+    let schemes = [Scheme::JacobiWavefront, Scheme::GsWavefront, Scheme::GsMultiGroup];
+
+    let mut records: Vec<BenchRecord> = Vec::new();
+    benchkit::header("scheme × nt_stores × smt matrix (Solver sessions)");
+    for scheme in schemes {
+        for nt_stores in [true, false] {
+            for smt in [false, true] {
+                let cfg = RunConfig {
+                    scheme,
+                    size: (n, n, n),
+                    t: 4,
+                    groups: 2,
+                    iters,
+                    smt,
+                    nt_stores,
+                    ..Default::default()
+                };
+                let mut solver = Solver::builder(&cfg).build().unwrap();
+                let threads = solver.team_size();
+                let u0 = Grid3::random(n, n, n, 7);
+                let updates = (u0.interior_len() * iters) as u64;
+                let s = benchkit::bench_mlups(
+                    &format!("{} nt={} smt={} {n}^3", scheme.as_str(), nt_stores, smt),
+                    updates,
+                    1,
+                    reps,
+                    || {
+                        let mut u = u0.clone();
+                        solver.run(&mut u, iters).unwrap();
+                        benchkit::black_box(u);
+                    },
+                );
+                benchkit::report(&s);
+                records.push(BenchRecord {
+                    scheme: scheme.as_str().to_string(),
+                    op: cfg.op.as_str().to_string(),
+                    threads,
+                    smt,
+                    nt_stores,
+                    mlups: s.mlups.unwrap(),
+                });
+            }
+        }
+    }
+
+    let path = std::path::Path::new("BENCH_perf_matrix.json");
+    benchkit::write_records(path, &records).unwrap();
+    println!("\nwrote {} ({} records)", path.display(), records.len());
+}

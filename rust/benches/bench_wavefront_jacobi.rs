@@ -64,7 +64,7 @@ fn main() {
             );
             benchkit::report(&s);
             bench_op(&mut pool, &format!("wavefront t={t} {n}^3"), &ConstLaplace7, n, t, reps);
-            let sp = SpatialConfig { t, blocks: 4 };
+            let sp = SpatialConfig { t, blocks: 4, ..Default::default() };
             let s = benchkit::bench_mlups(
                 &format!("blocked wavefront t={t} B=4 {n}^3"),
                 updates,

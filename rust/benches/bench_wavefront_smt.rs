@@ -6,9 +6,20 @@
 //! — including the paper's three observations, asserted in the test
 //! suite: EP/Westmere ≈ 2.5× their threaded baseline, EX up to 5×, and
 //! EP ≈ Westmere ≈ EX absolute performance (arithmetic plateau).
+//!
+//! The multi-group leg runs `gs_multigroup` through a [`Solver`] session
+//! with `smt = true`, which auto-promotes the placement to the
+//! `smtpair` sibling-pair map — the full Sec. 6 co-scheduling path
+//! (advisory on hosts without SMT; bit-exactness is asserted either
+//! way by the test suite).
+//!
+//! `STENCILWAVE_BENCH_SMOKE=1` runs one small case per leg with two
+//! timed reps — the CI configuration.
 
 use stencilwave::benchkit;
+use stencilwave::config::{RunConfig, Scheme};
 use stencilwave::coordinator::pool::WorkerPool;
+use stencilwave::coordinator::solver::Solver;
 use stencilwave::coordinator::wavefront_gs::{wavefront_gs_passes, GsWavefrontConfig};
 use stencilwave::figures;
 use stencilwave::simulator::ecm::{Kernel, KernelClass};
@@ -18,9 +29,12 @@ use stencilwave::stencil::grid::Grid3;
 use stencilwave::stencil::op::ConstLaplace7;
 
 fn main() {
+    let smoke = benchkit::smoke();
+    let (sizes, reps): (&[usize], usize) = if smoke { (&[32], 2) } else { (&[48, 64], 3) };
+
     let mut pool = WorkerPool::new(0);
     benchkit::header("Fig. 10 host leg — GS wavefront width 1 vs 2 (SMT analog)");
-    for n in [48usize, 64] {
+    for &n in sizes {
         for width in [1usize, 2] {
             let u0 = Grid3::random(n, n, n, 11);
             let updates = (u0.interior_len() * 4) as u64;
@@ -33,10 +47,41 @@ fn main() {
                 &format!("gs wavefront S=4 width={width} {n}^3"),
                 updates,
                 1,
-                3,
+                reps,
                 || {
                     let mut u = u0.clone();
                     wavefront_gs_passes(&mut pool, &ConstLaplace7, &mut u, &cfg, 1).unwrap();
+                    benchkit::black_box(u);
+                },
+            );
+            benchkit::report(&s);
+        }
+    }
+
+    benchkit::header("gs_multigroup × SMT-pair co-scheduling (Solver session)");
+    for &n in sizes {
+        for smt in [false, true] {
+            let iters = 4;
+            let cfg = RunConfig {
+                scheme: Scheme::GsMultiGroup,
+                size: (n, n, n),
+                t: 4,
+                groups: 2,
+                iters,
+                smt, // smt + pin "none" promotes the placement to smtpair
+                ..Default::default()
+            };
+            let mut solver = Solver::builder(&cfg).build().unwrap();
+            let u0 = Grid3::random(n, n, n, 13);
+            let updates = (u0.interior_len() * iters) as u64;
+            let s = benchkit::bench_mlups(
+                &format!("gs_multigroup G=2 t=4 smt={smt} {n}^3"),
+                updates,
+                1,
+                reps,
+                || {
+                    let mut u = u0.clone();
+                    solver.run(&mut u, iters).unwrap();
                     benchkit::black_box(u);
                 },
             );
@@ -53,5 +98,7 @@ fn main() {
         println!("{:<14} {:>10.2} {:>10.2} {:>7.2}x", format!("{k:?}"), one, two, one / two);
     }
 
-    println!("\n{}", figures::render("fig10").unwrap());
+    if !smoke {
+        println!("\n{}", figures::render("fig10").unwrap());
+    }
 }

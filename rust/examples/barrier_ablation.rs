@@ -69,7 +69,7 @@ fn main() -> stencilwave::Result<()> {
         ("flow (p2p flags)", BarrierKind::Spin, SyncMode::Flow),
     ] {
         let mut u = Grid3::random(32, 32, 32, 6);
-        let cfg = WavefrontConfig { threads: 4, barrier, sync };
+        let cfg = WavefrontConfig { threads: 4, barrier, sync, ..Default::default() };
         let t0 = Instant::now();
         wavefront_jacobi_passes(&mut pool, &ConstLaplace7, &mut u, &f, 1.0, &cfg, 1)?;
         let dt = t0.elapsed();

@@ -96,6 +96,64 @@ pub fn run_case<T>(name: &str, updates: u64, f: impl FnMut() -> T) -> Sample {
     s
 }
 
+/// One machine-readable benchmark result — the record the CI bench
+/// smoke emits as `BENCH_*.json` so perf history survives the log
+/// scroll-off.
+#[derive(Clone, Debug)]
+pub struct BenchRecord {
+    /// Scheme config name (`jacobi_wavefront`, ...).
+    pub scheme: String,
+    /// Operator config name (`laplace7`, ...).
+    pub op: String,
+    /// Worker threads the schedule dispatched.
+    pub threads: usize,
+    /// Whether the run asked for SMT co-scheduling.
+    pub smt: bool,
+    /// Whether non-temporal stores were enabled.
+    pub nt_stores: bool,
+    /// Best-rep throughput in MLUP/s.
+    pub mlups: f64,
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Serialize records as a JSON array (hand-rolled: offline build, no
+/// serde; round-trips through [`crate::config::json::parse`]).
+pub fn records_to_json(records: &[BenchRecord]) -> String {
+    let mut out = String::from("[\n");
+    for (i, r) in records.iter().enumerate() {
+        out.push_str(&format!(
+            "  {{\"scheme\": \"{}\", \"op\": \"{}\", \"threads\": {}, \
+             \"smt\": {}, \"nt_stores\": {}, \"mlups\": {:.3}}}{}\n",
+            json_escape(&r.scheme),
+            json_escape(&r.op),
+            r.threads,
+            r.smt,
+            r.nt_stores,
+            r.mlups,
+            if i + 1 < records.len() { "," } else { "" },
+        ));
+    }
+    out.push_str("]\n");
+    out
+}
+
+/// Write `records` to `path` (conventionally `BENCH_<bench>.json`).
+pub fn write_records(path: &std::path::Path, records: &[BenchRecord]) -> std::io::Result<()> {
+    std::fs::write(path, records_to_json(records))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -118,5 +176,40 @@ mod tests {
         let s = bench_mlups("m", 1_000_000, 0, 3, || std::thread::sleep(Duration::from_millis(2)));
         let m = s.mlups.unwrap();
         assert!(m > 0.0 && m < 1000.0, "{m}");
+    }
+
+    #[test]
+    fn bench_records_roundtrip_through_the_json_parser() {
+        let records = vec![
+            BenchRecord {
+                scheme: "jacobi_wavefront".into(),
+                op: "laplace7".into(),
+                threads: 4,
+                smt: false,
+                nt_stores: true,
+                mlups: 123.456,
+            },
+            BenchRecord {
+                scheme: "gs_multigroup".into(),
+                op: "a\"b\\c".into(), // escaping never corrupts the doc
+                threads: 8,
+                smt: true,
+                nt_stores: false,
+                mlups: 0.5,
+            },
+        ];
+        let text = records_to_json(&records);
+        let v = crate::config::json::parse(&text).unwrap();
+        let arr = v.as_array().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("scheme").unwrap().as_str(), Some("jacobi_wavefront"));
+        assert_eq!(arr[0].get("threads").unwrap().as_u64(), Some(4));
+        assert_eq!(arr[0].get("nt_stores").unwrap().as_bool(), Some(true));
+        assert!((arr[0].get("mlups").unwrap().as_f64().unwrap() - 123.456).abs() < 1e-9);
+        assert_eq!(arr[1].get("op").unwrap().as_str(), Some("a\"b\\c"));
+        assert_eq!(arr[1].get("smt").unwrap().as_bool(), Some(true));
+        // empty record lists are still a valid (empty) JSON array
+        let empty = crate::config::json::parse(&records_to_json(&[])).unwrap();
+        assert!(empty.as_array().unwrap().is_empty());
     }
 }

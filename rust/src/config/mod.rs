@@ -191,14 +191,24 @@ pub struct RunConfig {
     pub groups: usize,
     /// Updates to perform in total (multiple of t for wavefront Jacobi).
     pub iters: usize,
+    /// Use SMT hardware threads: widens the modeled thread count *and*,
+    /// with `pin = "none"`, promotes the placement to
+    /// [`PinPolicy::SmtPair`] so co-scheduled workers really share a
+    /// core (Sec. 6).
     pub smt: bool,
     pub optimized_kernel: bool,
+    /// Stream the stores no schedule re-reads within a pass
+    /// (`movntpd`-style, skipping the write-allocate). Selects both the
+    /// ECM model's Eq. (1) traffic accounting *and* the executed kernel
+    /// code path — see [`RunConfig::store_mode`]. GS schemes update in
+    /// place and always write-allocate.
     pub nt_stores: bool,
     pub barrier: BarrierKind,
     /// Machine model to predict on (`None` = host execution only).
     pub machine: Option<String>,
-    /// Core-pinning policy for the worker team (cache-group aware when
-    /// `machine` names a Tab. 1 model).
+    /// Core-pinning policy for the worker team (cache-group and SMT
+    /// aware; cache groups come from the Tab. 1 model when `machine`
+    /// names one, else from the host's sysfs).
     pub pin: PinPolicy,
 }
 
@@ -239,6 +249,11 @@ impl RunConfig {
         }
     }
 
+    /// The store mode `nt_stores` selects for this scheme — consumed by
+    /// both the performance model and the executed kernels (the same
+    /// key describes predicted and real traffic). Gauss-Seidel updates
+    /// in place (its writes are re-read as left neighbors), so NT
+    /// stores never apply there.
     pub fn store_mode(&self) -> StoreMode {
         if self.nt_stores && !self.scheme.is_gs() {
             StoreMode::NonTemporal
@@ -444,7 +459,7 @@ mod tests {
 
     #[test]
     fn pin_key_roundtrips_and_rejects_unknown_policies() {
-        for pin in [PinPolicy::None, PinPolicy::Compact, PinPolicy::Scatter] {
+        for pin in [PinPolicy::None, PinPolicy::Compact, PinPolicy::Scatter, PinPolicy::SmtPair] {
             let cfg = RunConfig { pin, ..Default::default() };
             let text = cfg.to_text();
             assert!(text.contains(&format!("pin = \"{}\"", pin.as_str())), "{text}");

@@ -3,21 +3,28 @@
 //! The paper's wavefront groups only hit their cache-sharing sweet spot
 //! when the group's threads actually land on cores that share the outer
 //! level cache (Sec. 4; Tab. 1's "cache group"). The OS scheduler does
-//! not know that, so [`PinPolicy`] encodes the two classic placements:
+//! not know that, so [`PinPolicy`] encodes the classic placements:
 //!
 //! * [`PinPolicy::Compact`] — fill one cache group before touching the
-//!   next (worker `i` → cpu `i`). The right policy for a single
-//!   wavefront group: all `t` workers share one OLC.
+//!   next (worker `i` → physical core `i`; SMT siblings only after every
+//!   core holds one worker). The right policy for a single wavefront
+//!   group: all `t` workers share one OLC.
 //! * [`PinPolicy::Scatter`] — round-robin across cache groups (worker
-//!   `i` → group `i mod G`, slot `i / G`). The right policy for
-//!   bandwidth-bound baselines and multi-group schemes where each group
-//!   should own its own OLC.
+//!   `i` → group `i mod G`, slot `i / G`; again physical cores first).
+//!   The right policy for bandwidth-bound baselines and multi-group
+//!   schemes where each group should own its own OLC.
+//! * [`PinPolicy::SmtPair`] — co-schedule SMT sibling pairs: workers
+//!   `s·c` … `s·c+s-1` land on the `s` hardware threads of physical
+//!   core `c`. The placement for the paper's SMT wavefront experiment
+//!   (Sec. 6): two pipeline threads share one core's private caches.
 //!
 //! The cpu map is computed from a [`MachineSpec`]'s cache-group topology
 //! when the run names a Tab. 1 machine, and from the *host's* real cache
 //! groups otherwise (parsed from
-//! `/sys/devices/system/cpu/cpu0/cache/index*/shared_cpu_list` on Linux;
-//! one flat group when sysfs is unreadable). The backend is a raw
+//! `/sys/devices/system/cpu/cpu0/cache/index*/shared_cpu_list`, with the
+//! SMT sibling layout from
+//! `/sys/devices/system/cpu/cpu0/topology/thread_siblings_list`, on
+//! Linux; one flat group when sysfs is unreadable). The backend is a raw
 //! `sched_setaffinity` syscall on Linux (x86_64 / aarch64) — the build
 //! stays dependency-free — and a documented no-op everywhere else:
 //! [`pin_current_thread`] returns `false` and workers simply run
@@ -48,16 +55,26 @@ pub enum PinPolicy {
     /// without a Tab. 1 machine model the host fallback is one flat group
     /// and scatter degenerates to compact (see [`Topology::host`]).
     Scatter,
+    /// Co-schedule SMT sibling pairs: workers `s·c` … `s·c+s-1` run on
+    /// the `s` hardware threads of physical core `c`, so consecutive
+    /// worker ids share one core's pipeline and private caches.
+    ///
+    /// With the GS wavefront's `sweep·width + position` worker
+    /// numbering, a width-2 pipeline pair becomes one core's two
+    /// hyperthreads — the paper's Sec. 6 SMT co-scheduling. Degenerates
+    /// to [`PinPolicy::Compact`] on hosts without SMT.
+    SmtPair,
 }
 
 impl PinPolicy {
-    /// Parse a `none` / `compact` / `scatter` policy name.
+    /// Parse a `none` / `compact` / `scatter` / `smtpair` policy name.
     pub fn parse(s: &str) -> Result<Self> {
         Ok(match s.trim() {
             "none" => PinPolicy::None,
             "compact" => PinPolicy::Compact,
             "scatter" => PinPolicy::Scatter,
-            other => anyhow::bail!("unknown pin policy '{other}' (none/compact/scatter)"),
+            "smtpair" => PinPolicy::SmtPair,
+            other => anyhow::bail!("unknown pin policy '{other}' (none/compact/scatter/smtpair)"),
         })
     }
 
@@ -67,25 +84,62 @@ impl PinPolicy {
             PinPolicy::None => "none",
             PinPolicy::Compact => "compact",
             PinPolicy::Scatter => "scatter",
+            PinPolicy::SmtPair => "smtpair",
         }
     }
 }
 
-/// The core/cache-group layout the cpu map is computed from.
+/// The core/cache-group/SMT layout the cpu map is computed from.
+///
+/// All placement happens in units of *physical cores*; the SMT fields
+/// only decide which cpu ids a core's hardware threads answer to, so
+/// the cache-group arithmetic never straddles sibling enumeration
+/// styles.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Topology {
-    /// Logical cpus to place workers on.
-    pub cpus: usize,
-    /// Cpus sharing one outer-level cache (`<= cpus`).
+    /// Physical cores to place workers on.
+    pub cores: usize,
+    /// Physical cores sharing one outer-level cache (`<= cores`).
     pub group_size: usize,
+    /// Hardware threads per physical core (1 = no SMT).
+    pub smt_per_core: usize,
+    /// Cpu-id distance between SMT siblings of one core: `<= 1` for
+    /// adjacent enumeration (core `c` → cpus `c·s … c·s+s-1`), else the
+    /// split-style stride (core `c` → cpus `c`, `c+stride`, …) Linux
+    /// typically uses.
+    pub smt_stride: usize,
 }
 
 impl Topology {
+    /// Logical cpus this layout exposes (`cores × smt_per_core`).
+    pub fn logical_cpus(&self) -> usize {
+        self.cores.max(1) * self.smt_per_core.max(1)
+    }
+
+    /// The cpu id of hardware thread `th` of physical core `core`.
+    pub fn cpu_of(&self, core: usize, th: usize) -> usize {
+        let s = self.smt_per_core.max(1);
+        if s == 1 {
+            core
+        } else if self.smt_stride <= 1 {
+            core * s + th
+        } else {
+            core + th * self.smt_stride
+        }
+    }
+
     /// Topology of a Tab. 1 machine: its physical cores, grouped by the
     /// cache group the wavefront scheme targets (L3, or the shared L2 on
-    /// Core 2).
+    /// Core 2). Sibling cpus are assumed split-style (`c` and
+    /// `c + cores`), the enumeration Linux uses on that generation of
+    /// Intel machines.
     pub fn of_machine(m: &MachineSpec) -> Self {
-        Self { cpus: m.cores.max(1), group_size: m.cache_group_cores().max(1) }
+        Self {
+            cores: m.cores.max(1),
+            group_size: m.cache_group_cores().max(1),
+            smt_per_core: m.smt_per_core.max(1),
+            smt_stride: m.smt_sibling_stride(),
+        }
     }
 
     /// Topology of the machine this process runs on.
@@ -93,35 +147,40 @@ impl Topology {
     /// On Linux the real cache groups are read from
     /// `/sys/devices/system/cpu/cpu0/cache/index*/shared_cpu_list` (the
     /// deepest unified cache wins — the host analog of Tab. 1's "cache
-    /// group"), so `compact`/`scatter` place workers against the
-    /// *host's* OLC sharing instead of a model's. Only groups that form
-    /// one contiguous cpu-id block are honored — the cpu map indexes
-    /// groups as `[g·size, (g+1)·size)`, so a sibling-split list like
-    /// `0-15,32-47` would silently straddle two real caches. When sysfs
-    /// is unreadable (non-Linux, sandboxes) or the layout is
-    /// non-contiguous, every logical cpu falls into one flat group
-    /// (compact and scatter then coincide); runs that name a Tab. 1
-    /// machine keep using [`Topology::of_machine`].
+    /// group") and the SMT sibling layout from
+    /// `/sys/devices/system/cpu/cpu0/topology/thread_siblings_list`, so
+    /// `compact`/`scatter`/`smtpair` place workers against the *host's*
+    /// OLC sharing instead of a model's. A shared-cpu list is honored
+    /// when it resolves to whole physical cores under the sibling
+    /// layout — one contiguous block for adjacent enumeration, or `s`
+    /// stride-translated copies of one block for split enumeration like
+    /// `0-15,32-47` (see [`group_physical_cores`]). When sysfs is
+    /// unreadable (non-Linux, sandboxes) or the layout does not resolve,
+    /// every core falls into one flat group (compact and scatter then
+    /// coincide); runs that name a Tab. 1 machine keep using
+    /// [`Topology::of_machine`].
     pub fn host() -> Self {
         let cpus = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-        match sysfs_cache_group() {
-            Some(group) if group >= 1 => Self { cpus, group_size: group.min(cpus) },
-            _ => Self { cpus, group_size: cpus },
-        }
+        let (smt, stride) = sysfs_smt_siblings().unwrap_or((1, 1));
+        let smt = smt.clamp(1, cpus);
+        let cores = (cpus / smt).max(1);
+        let group = sysfs_cache_group(smt, stride)
+            .map(|g| g.clamp(1, cores))
+            .unwrap_or(cores);
+        Self { cores, group_size: group, smt_per_core: smt, smt_stride: stride }
     }
 }
 
-/// `(count, lowest cpu, highest cpu)` of a sysfs cpu-list string like
-/// `"0-3,8-11"` (`None` on malformed input — callers fall back to the
-/// flat group).
-fn parse_cpu_list_span(s: &str) -> Option<(usize, usize, usize)> {
+/// The maximal runs `(lo, hi)` of a sysfs cpu-list string like
+/// `"0-3,8-11"`, in ascending order with adjacent ids coalesced so
+/// `"0,1,2,3"` and `"0-3"` parse identically (`None` on malformed,
+/// unsorted or overlapping input — callers fall back to the flat group).
+fn parse_cpu_runs(s: &str) -> Option<Vec<(usize, usize)>> {
     let s = s.trim();
     if s.is_empty() {
         return None;
     }
-    let mut count = 0usize;
-    let mut min = usize::MAX;
-    let mut max = 0usize;
+    let mut runs: Vec<(usize, usize)> = Vec::new();
     for part in s.split(',') {
         let part = part.trim();
         if part.is_empty() {
@@ -137,33 +196,83 @@ fn parse_cpu_list_span(s: &str) -> Option<(usize, usize, usize)> {
         if hi < lo {
             return None;
         }
-        count += hi - lo + 1;
-        min = min.min(lo);
-        max = max.max(hi);
+        match runs.last_mut() {
+            Some((_, prev_hi)) if lo == *prev_hi + 1 => *prev_hi = hi,
+            Some((_, prev_hi)) if lo <= *prev_hi => return None,
+            _ => runs.push((lo, hi)),
+        }
     }
-    Some((count, min, max))
+    Some(runs)
 }
 
-/// The group size of a cpu list *if* the cpu map's contiguous-block
-/// assumption holds for it (one unbroken id range). Sibling-split
-/// layouts like `"0-15,32-47"` return `None` — [`cpu_for`] would place
-/// teams across two real cache groups while claiming one, so those
-/// hosts fall back to the flat group (compact == scatter, harmless).
+/// The *physical cores* a shared-cpu list covers under the host's SMT
+/// sibling layout, or `None` when the list does not resolve to whole
+/// cores (the caller then falls back to the flat group — compact ==
+/// scatter, harmless).
 ///
-/// Known limitation: only *cpu0's* group is inspected (sysfs exposes one
-/// directory per cpu; enumerating all of them is future work), so the
-/// check also assumes every group has cpu0's size and sits at a
-/// `group_size`-aligned offset. Hosts with heterogeneous or offset
-/// groups (offline-cpu holes, asymmetric clusters) can still be
-/// mis-pinned; pinning remains advisory and never affects correctness.
-fn contiguous_group_size(s: &str) -> Option<usize> {
-    let (count, lo, hi) = parse_cpu_list_span(s)?;
-    (hi - lo + 1 == count).then_some(count)
+/// Two layouts resolve:
+///
+/// * adjacent siblings (`stride <= 1`, or no SMT): one contiguous run of
+///   `pc·smt` cpu ids → `pc` cores;
+/// * split siblings (`stride > 1`): `smt` stride-translated copies of
+///   one `pc`-wide block — `"0-15,32-47"` with `smt = 2`, `stride = 32`
+///   → 16 cores. The copies merge into a single run exactly when the
+///   block spans the whole stride.
+///
+/// Known limitation: only *cpu0's* group and siblings are inspected
+/// (sysfs exposes one directory per cpu; enumerating all of them is
+/// future work), so every group is assumed to have cpu0's shape. Hosts
+/// with heterogeneous or offset groups (offline-cpu holes, asymmetric
+/// clusters) can still be mis-pinned; pinning remains advisory and
+/// never affects correctness.
+fn group_physical_cores(s: &str, smt: usize, stride: usize) -> Option<usize> {
+    let runs = parse_cpu_runs(s)?;
+    let smt = smt.max(1);
+    if smt == 1 || stride <= 1 {
+        let [(lo, hi)] = runs[..] else { return None };
+        let len = hi - lo + 1;
+        return (len % smt == 0).then(|| len / smt);
+    }
+    if let [(lo, hi)] = runs[..] {
+        // the `smt` sibling copies merged into one run: only possible
+        // when the physical block is exactly `stride` wide
+        let len = hi - lo + 1;
+        return (len == smt * stride).then_some(stride);
+    }
+    if runs.len() != smt {
+        return None;
+    }
+    let (lo0, hi0) = runs[0];
+    let pc = hi0 - lo0 + 1;
+    for (t, &(lo, hi)) in runs.iter().enumerate() {
+        if lo != lo0 + t * stride || hi - lo + 1 != pc {
+            return None;
+        }
+    }
+    Some(pc)
 }
 
-/// Size of cpu0's deepest shared cache group per sysfs, `None` when the
-/// hierarchy is unreadable.
-fn sysfs_cache_group() -> Option<usize> {
+/// `(threads per core, sibling cpu-id stride)` of cpu0 per sysfs,
+/// `None` when the topology directory is unreadable (non-Linux,
+/// sandboxes). A single-thread core reports `(1, 1)`.
+fn sysfs_smt_siblings() -> Option<(usize, usize)> {
+    let s = std::fs::read_to_string("/sys/devices/system/cpu/cpu0/topology/thread_siblings_list")
+        .ok()?;
+    let runs = parse_cpu_runs(&s)?;
+    let count: usize = runs.iter().map(|&(lo, hi)| hi - lo + 1).sum();
+    if count <= 1 {
+        return Some((1, 1));
+    }
+    // second-lowest sibling id − lowest = the enumeration stride
+    let (lo0, hi0) = runs[0];
+    let second = if hi0 > lo0 { lo0 + 1 } else { runs[1].0 };
+    Some((count, second - lo0))
+}
+
+/// Physical cores in cpu0's deepest shared cache group per sysfs,
+/// `None` when the hierarchy is unreadable or does not resolve to whole
+/// cores under the `(smt, stride)` sibling layout.
+fn sysfs_cache_group(smt: usize, stride: usize) -> Option<usize> {
     let base = std::path::Path::new("/sys/devices/system/cpu/cpu0/cache");
     let mut best: Option<(usize, usize)> = None; // (level, group size)
     for entry in std::fs::read_dir(base).ok()? {
@@ -191,7 +300,7 @@ fn sysfs_cache_group() -> Option<usize> {
         };
         let Some(group) = std::fs::read_to_string(path.join("shared_cpu_list"))
             .ok()
-            .and_then(|s| contiguous_group_size(&s))
+            .and_then(|s| group_physical_cores(&s, smt, stride))
         else {
             continue;
         };
@@ -202,33 +311,43 @@ fn sysfs_cache_group() -> Option<usize> {
     best.map(|(_, g)| g)
 }
 
+/// The physical core the `rank`-th worker of a scatter placement lands
+/// on. Round-robin across cache groups, slot by slot. The tail group
+/// may hold fewer than `group` cores, so walk the scatter order row by
+/// row (`row` = groups that still have a core in slot `s`) instead of
+/// assuming every group is full — a closed-form
+/// `(rank % groups) * group + rank / groups` would collide workers onto
+/// one core for non-divisible layouts.
+fn scatter_core(rank: usize, cores: usize, group: usize) -> usize {
+    let mut rem = rank;
+    let mut s = 0;
+    loop {
+        let row = (cores - s).div_ceil(group);
+        if rem < row {
+            break rem * group + s;
+        }
+        rem -= row;
+        s += 1;
+    }
+}
+
 /// The cpu worker `id` is placed on under `policy` (pure map, unit
-/// tested on every platform). Workers beyond `cpus` wrap around.
+/// tested on every platform). Workers beyond the logical cpu count wrap
+/// around. Compact and scatter fill every *physical core* before
+/// touching a second hardware thread; smtpair packs sibling threads
+/// first.
 pub fn cpu_for(policy: PinPolicy, id: usize, topo: Topology) -> usize {
-    let cpus = topo.cpus.max(1);
-    let id = id % cpus;
+    let cores = topo.cores.max(1);
+    let smt = topo.smt_per_core.max(1);
+    let id = id % (cores * smt);
     match policy {
         PinPolicy::None => id,
-        PinPolicy::Compact => id,
+        PinPolicy::Compact => topo.cpu_of(id % cores, id / cores),
         PinPolicy::Scatter => {
-            // Round-robin across cache groups, slot by slot. The tail
-            // group may hold fewer than `group` cpus, so walk the scatter
-            // order row by row (`row` = groups that still have a cpu in
-            // slot `s`) instead of assuming every group is full — a
-            // closed-form `(id % groups) * group + id / groups` would
-            // collide workers onto one cpu for non-divisible layouts.
-            let group = topo.group_size.clamp(1, cpus);
-            let mut rem = id;
-            let mut s = 0;
-            loop {
-                let row = (cpus - s).div_ceil(group);
-                if rem < row {
-                    break rem * group + s;
-                }
-                rem -= row;
-                s += 1;
-            }
+            let group = topo.group_size.clamp(1, cores);
+            topo.cpu_of(scatter_core(id % cores, cores, group), id / cores)
         }
+        PinPolicy::SmtPair => topo.cpu_of(id / smt, id % smt),
     }
 }
 
@@ -360,7 +479,7 @@ pub fn pin_hook(policy: PinPolicy, topo: Topology) -> Option<StartHook> {
         // placements onto the same cpu under a modulo wrap (all of a
         // scatter group's leaders landing on cpu 0); pin against the
         // host's own topology instead.
-        let eff = if topo.cpus <= host.cpus { topo } else { host };
+        let eff = if topo.logical_cpus() <= host.logical_cpus() { topo } else { host };
         let _ = pin_current_thread(cpu_for(policy, id, eff));
     }))
 }
@@ -369,9 +488,14 @@ pub fn pin_hook(policy: PinPolicy, topo: Topology) -> Option<StartHook> {
 mod tests {
     use super::*;
 
+    /// SMT-free layout shorthand for the placement tests.
+    fn flat(cores: usize, group_size: usize) -> Topology {
+        Topology { cores, group_size, smt_per_core: 1, smt_stride: 1 }
+    }
+
     #[test]
     fn policy_names_roundtrip() {
-        for p in [PinPolicy::None, PinPolicy::Compact, PinPolicy::Scatter] {
+        for p in [PinPolicy::None, PinPolicy::Compact, PinPolicy::Scatter, PinPolicy::SmtPair] {
             assert_eq!(PinPolicy::parse(p.as_str()).unwrap(), p);
         }
         assert!(PinPolicy::parse("diagonal").is_err());
@@ -379,24 +503,24 @@ mod tests {
 
     #[test]
     fn compact_fills_groups_in_order() {
-        let topo = Topology { cpus: 8, group_size: 4 };
+        let topo = flat(8, 4);
         let cpus: Vec<usize> = (0..8).map(|i| cpu_for(PinPolicy::Compact, i, topo)).collect();
         assert_eq!(cpus, vec![0, 1, 2, 3, 4, 5, 6, 7]);
     }
 
     #[test]
     fn scatter_round_robins_across_groups() {
-        // 8 cpus in two OLC groups of 4: workers alternate groups.
-        let topo = Topology { cpus: 8, group_size: 4 };
+        // 8 cores in two OLC groups of 4: workers alternate groups.
+        let topo = flat(8, 4);
         let cpus: Vec<usize> = (0..8).map(|i| cpu_for(PinPolicy::Scatter, i, topo)).collect();
         assert_eq!(cpus, vec![0, 4, 1, 5, 2, 6, 3, 7]);
     }
 
     #[test]
     fn scatter_covers_every_cpu_when_groups_are_uneven() {
-        // 6 cpus in OLC groups of 4: group 0 = {0,1,2,3}, tail = {4,5}.
-        // Every cpu must appear exactly once — no collisions, no idle cpu.
-        let topo = Topology { cpus: 6, group_size: 4 };
+        // 6 cores in OLC groups of 4: group 0 = {0,1,2,3}, tail = {4,5}.
+        // Every core must appear exactly once — no collisions, no idle.
+        let topo = flat(6, 4);
         let cpus: Vec<usize> = (0..6).map(|i| cpu_for(PinPolicy::Scatter, i, topo)).collect();
         assert_eq!(cpus, vec![0, 4, 1, 5, 2, 3]);
         let mut sorted = cpus.clone();
@@ -406,7 +530,7 @@ mod tests {
 
     #[test]
     fn scatter_on_one_flat_group_is_compact() {
-        let topo = Topology { cpus: 6, group_size: 6 };
+        let topo = flat(6, 6);
         for i in 0..6 {
             assert_eq!(
                 cpu_for(PinPolicy::Scatter, i, topo),
@@ -417,39 +541,99 @@ mod tests {
 
     #[test]
     fn workers_beyond_the_socket_wrap() {
-        let topo = Topology { cpus: 4, group_size: 2 };
+        let topo = flat(4, 2);
         for i in 0..32 {
             assert!(cpu_for(PinPolicy::Scatter, i, topo) < 4);
             assert!(cpu_for(PinPolicy::Compact, i, topo) < 4);
+        }
+        // SMT widens the wrap to the logical cpu count
+        let smt = Topology { cores: 4, group_size: 2, smt_per_core: 2, smt_stride: 4 };
+        for i in 0..32 {
+            assert!(cpu_for(PinPolicy::SmtPair, i, smt) < 8);
+            assert!(cpu_for(PinPolicy::Compact, i, smt) < 8);
+        }
+    }
+
+    #[test]
+    fn compact_and_scatter_fill_physical_cores_before_siblings() {
+        // 4 cores × 2 threads, split-style siblings (cpu c and c+4):
+        // the first 4 workers must own distinct physical cores under
+        // either policy; only workers 4..8 move onto second threads.
+        let topo = Topology { cores: 4, group_size: 2, smt_per_core: 2, smt_stride: 4 };
+        let compact: Vec<usize> = (0..8).map(|i| cpu_for(PinPolicy::Compact, i, topo)).collect();
+        assert_eq!(compact, vec![0, 1, 2, 3, 4, 5, 6, 7]);
+        let scatter: Vec<usize> = (0..8).map(|i| cpu_for(PinPolicy::Scatter, i, topo)).collect();
+        assert_eq!(scatter, vec![0, 2, 1, 3, 4, 6, 5, 7]);
+        // adjacent sibling enumeration (cpu 2c, 2c+1) spreads the same
+        // physical placement over the other cpu numbering
+        let adj = Topology { smt_stride: 1, ..topo };
+        let compact: Vec<usize> = (0..8).map(|i| cpu_for(PinPolicy::Compact, i, adj)).collect();
+        assert_eq!(compact, vec![0, 2, 4, 6, 1, 3, 5, 7]);
+    }
+
+    #[test]
+    fn smtpair_packs_sibling_threads() {
+        // split-style: workers 2c and 2c+1 land on cpus c and c+4 —
+        // one physical core's two hyperthreads
+        let topo = Topology { cores: 4, group_size: 4, smt_per_core: 2, smt_stride: 4 };
+        let cpus: Vec<usize> = (0..8).map(|i| cpu_for(PinPolicy::SmtPair, i, topo)).collect();
+        assert_eq!(cpus, vec![0, 4, 1, 5, 2, 6, 3, 7]);
+        // adjacent-style: the pair becomes cpus 2c and 2c+1
+        let adj = Topology { smt_stride: 1, ..topo };
+        let cpus: Vec<usize> = (0..8).map(|i| cpu_for(PinPolicy::SmtPair, i, adj)).collect();
+        assert_eq!(cpus, vec![0, 1, 2, 3, 4, 5, 6, 7]);
+        // without SMT the policy degenerates to compact
+        let none = flat(4, 4);
+        for i in 0..4 {
+            assert_eq!(
+                cpu_for(PinPolicy::SmtPair, i, none),
+                cpu_for(PinPolicy::Compact, i, none)
+            );
         }
     }
 
     #[test]
     fn cpu_list_parser_handles_sysfs_shapes() {
-        assert_eq!(parse_cpu_list_span("0-3"), Some((4, 0, 3)));
-        assert_eq!(parse_cpu_list_span("0-3,8-11"), Some((8, 0, 11)));
-        assert_eq!(parse_cpu_list_span("5"), Some((1, 5, 5)));
-        assert_eq!(parse_cpu_list_span("0,2,4,6"), Some((4, 0, 6)));
-        assert_eq!(parse_cpu_list_span("0-0"), Some((1, 0, 0)));
-        assert_eq!(parse_cpu_list_span(" 0-7 \n"), Some((8, 0, 7)));
-        assert_eq!(parse_cpu_list_span(""), None);
-        assert_eq!(parse_cpu_list_span("3-1"), None);
-        assert_eq!(parse_cpu_list_span("a-b"), None);
-        assert_eq!(parse_cpu_list_span("1,,2"), None);
+        assert_eq!(parse_cpu_runs("0-3"), Some(vec![(0, 3)]));
+        assert_eq!(parse_cpu_runs("0-3,8-11"), Some(vec![(0, 3), (8, 11)]));
+        assert_eq!(parse_cpu_runs("5"), Some(vec![(5, 5)]));
+        assert_eq!(parse_cpu_runs("0,2,4,6"), Some(vec![(0, 0), (2, 2), (4, 4), (6, 6)]));
+        // adjacent ids coalesce into one run regardless of spelling
+        assert_eq!(parse_cpu_runs("0,1,2,3"), Some(vec![(0, 3)]));
+        assert_eq!(parse_cpu_runs("0-1,2-3"), Some(vec![(0, 3)]));
+        assert_eq!(parse_cpu_runs("0-0"), Some(vec![(0, 0)]));
+        assert_eq!(parse_cpu_runs(" 0-7 \n"), Some(vec![(0, 7)]));
+        assert_eq!(parse_cpu_runs(""), None);
+        assert_eq!(parse_cpu_runs("3-1"), None);
+        assert_eq!(parse_cpu_runs("a-b"), None);
+        assert_eq!(parse_cpu_runs("1,,2"), None);
+        assert_eq!(parse_cpu_runs("4,2"), None); // unsorted
+        assert_eq!(parse_cpu_runs("0-3,2-5"), None); // overlap
     }
 
     #[test]
-    fn only_contiguous_cpu_lists_become_cache_groups() {
-        // the cpu map assumes groups are contiguous id blocks; any other
-        // layout (SMT sibling splits, offline holes) must fall back flat
-        assert_eq!(contiguous_group_size("0-7"), Some(8));
-        assert_eq!(contiguous_group_size("4-7"), Some(4));
-        assert_eq!(contiguous_group_size("0,1,2,3"), Some(4));
-        assert_eq!(contiguous_group_size("5"), Some(1));
-        assert_eq!(contiguous_group_size("0-15,32-47"), None);
-        assert_eq!(contiguous_group_size("0,32"), None);
-        assert_eq!(contiguous_group_size("0,2,4,6"), None);
-        assert_eq!(contiguous_group_size(""), None);
+    fn shared_cpu_lists_resolve_to_physical_cores() {
+        // no SMT: one contiguous block, count = cores
+        assert_eq!(group_physical_cores("0-7", 1, 1), Some(8));
+        assert_eq!(group_physical_cores("4-7", 1, 1), Some(4));
+        assert_eq!(group_physical_cores("5", 1, 1), Some(1));
+        // adjacent siblings: 8 cpus = 4 cores × 2 threads
+        assert_eq!(group_physical_cores("0-7", 2, 1), Some(4));
+        assert_eq!(group_physical_cores("0-7", 4, 1), Some(2));
+        // the satellite case: split siblings — 0-15 plus their 32-offset
+        // twins is 16 physical cores, not a rejected layout
+        assert_eq!(group_physical_cores("0-15,32-47", 2, 32), Some(16));
+        assert_eq!(group_physical_cores("8-11,40-43", 2, 32), Some(4));
+        assert_eq!(group_physical_cores("0,32", 2, 32), Some(1));
+        // sibling copies merged into one run: block spans the stride
+        assert_eq!(group_physical_cores("0-63", 2, 32), Some(32));
+        // shapes that do not resolve fall back flat
+        assert_eq!(group_physical_cores("0-6", 2, 1), None); // odd count
+        assert_eq!(group_physical_cores("0-15,31-46", 2, 32), None); // bad offset
+        assert_eq!(group_physical_cores("0-15,32-40", 2, 32), None); // width mismatch
+        assert_eq!(group_physical_cores("0-15,32-47,64-79", 2, 32), None); // run count
+        assert_eq!(group_physical_cores("0,2,4,6", 1, 1), None);
+        assert_eq!(group_physical_cores("", 2, 32), None);
     }
 
     #[test]
@@ -457,21 +641,29 @@ mod tests {
         // whatever the backend (sysfs or flat fallback), the invariants
         // the cpu map relies on must hold
         let t = Topology::host();
-        assert!(t.cpus >= 1);
-        assert!(t.group_size >= 1 && t.group_size <= t.cpus);
-        // the scatter map stays a permutation under the host topology
-        let cpus: Vec<usize> = (0..t.cpus).map(|i| cpu_for(PinPolicy::Scatter, i, t)).collect();
-        let mut sorted = cpus.clone();
-        sorted.sort_unstable();
-        assert_eq!(sorted, (0..t.cpus).collect::<Vec<_>>());
+        assert!(t.cores >= 1);
+        assert!(t.group_size >= 1 && t.group_size <= t.cores);
+        assert!(t.smt_per_core >= 1);
+        assert_eq!(t.logical_cpus(), t.cores * t.smt_per_core);
+        // every placement stays a permutation of the logical cpus under
+        // the host topology
+        for p in [PinPolicy::Compact, PinPolicy::Scatter, PinPolicy::SmtPair] {
+            let mut cpus: Vec<usize> =
+                (0..t.logical_cpus()).map(|i| cpu_for(p, i, t)).collect();
+            cpus.sort_unstable();
+            cpus.dedup();
+            assert_eq!(cpus.len(), t.logical_cpus(), "{p:?} collides workers");
+        }
     }
 
     #[test]
     fn machine_topology_uses_cache_groups() {
         let m = MachineSpec::by_name("Nehalem EP").unwrap();
         let topo = Topology::of_machine(&m);
-        assert_eq!(topo.cpus, m.cores);
+        assert_eq!(topo.cores, m.cores);
         assert_eq!(topo.group_size, m.cache_group_cores());
+        assert_eq!(topo.smt_per_core, m.smt_per_core);
+        assert_eq!(topo.logical_cpus(), m.socket_threads(true));
     }
 
     #[test]

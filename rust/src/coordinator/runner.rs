@@ -32,8 +32,8 @@ use crate::simulator::perfmodel::{
 };
 use crate::stencil::grid::Grid3;
 use crate::stencil::op::{
-    op_gs_sweeps, op_jacobi_steps, ConstLaplace7, Laplace13, OpFamily, OpInstance, OpKind,
-    VarCoeff7,
+    op_gs_sweeps, op_jacobi_steps, op_jacobi_steps_stored, ConstLaplace7, Laplace13, OpFamily,
+    OpInstance, OpKind, VarCoeff7,
 };
 use crate::Result;
 
@@ -159,10 +159,12 @@ impl<O: OpFamily> SchemeRunner for JacobiBaselineRunner<O> {
         u: &mut Grid3,
         f: &Grid3,
         h2: f64,
-        _cfg: &RunConfig,
+        cfg: &RunConfig,
         iters: usize,
     ) -> Result<()> {
-        *u = op_jacobi_steps(O::extract(op), u, f, h2, iters);
+        // every sweep's writes go to the other buffer and are not re-read
+        // within the sweep, so the baseline honors nt_stores everywhere
+        *u = op_jacobi_steps_stored(O::extract(op), u, f, h2, iters, cfg.store_mode());
         Ok(())
     }
     fn reference(
@@ -185,7 +187,12 @@ impl<O: OpFamily> SchemeRunner for JacobiBaselineRunner<O> {
 struct JacobiWavefrontRunner<O>(PhantomData<O>);
 
 fn wf_config(cfg: &RunConfig) -> WavefrontConfig {
-    WavefrontConfig { threads: cfg.t, barrier: cfg.barrier, sync: SyncMode::Barrier }
+    WavefrontConfig {
+        threads: cfg.t,
+        barrier: cfg.barrier,
+        sync: SyncMode::Barrier,
+        store: cfg.store_mode(),
+    }
 }
 
 impl<O: OpFamily> SchemeRunner for JacobiWavefrontRunner<O> {
@@ -259,7 +266,7 @@ impl<O: OpFamily> SchemeRunner for JacobiMultiGroupRunner<O> {
         cfg: &RunConfig,
         iters: usize,
     ) -> Result<()> {
-        let mg = MultiGroupConfig { t: cfg.t, groups: cfg.groups };
+        let mg = MultiGroupConfig { t: cfg.t, groups: cfg.groups, store: cfg.store_mode() };
         mg.validate()?;
         check_iters_multiple(iters, mg.t)?;
         multigroup_passes(pool, O::extract(op), u, f, h2, &mg, iters / mg.t)

@@ -105,7 +105,17 @@ impl SolverBuilder {
             .machine_spec()
             .map(|m| Topology::of_machine(&m))
             .unwrap_or_else(Topology::host);
-        match pin_hook(self.pin, topo) {
+        // An SMT run with no explicit placement gets the sibling-pair
+        // map: co-scheduled workers (adjacent ids — e.g. one GS
+        // pipeline pair) share a core's two hardware threads, which is
+        // the whole point of asking for SMT (Sec. 6). An explicit
+        // policy always wins.
+        let pin = if self.pin == PinPolicy::None && self.cfg.smt {
+            PinPolicy::SmtPair
+        } else {
+            self.pin
+        };
+        match pin_hook(pin, topo) {
             Some(hook) => pool.set_start_hook(hook),
             // a reused pool may carry the previous session's hook
             None => pool.clear_start_hook(),
@@ -314,7 +324,7 @@ mod tests {
 
     #[test]
     fn pinned_sessions_stay_bit_exact() {
-        for pin in [PinPolicy::Compact, PinPolicy::Scatter] {
+        for pin in [PinPolicy::Compact, PinPolicy::Scatter, PinPolicy::SmtPair] {
             let c = cfg(Scheme::JacobiWavefront, (10, 9, 8));
             let mut solver = Solver::builder(&c).pin(pin).build().unwrap();
             let f = Grid3::zeros(10, 9, 8);
@@ -324,5 +334,19 @@ mod tests {
             let want = serial_reference(&u0, &f, 1.0, 4);
             assert_eq!(u.max_abs_diff(&want), 0.0, "{pin:?}");
         }
+    }
+
+    #[test]
+    fn smt_runs_get_the_sibling_pair_placement_and_stay_bit_exact() {
+        // the auto-promotion: smt + no explicit pin policy co-schedules
+        // sibling pairs (placement is advisory, results stay bit-exact)
+        let mut c = cfg(Scheme::GsWavefront, (10, 12, 9));
+        c.smt = true;
+        let mut solver = Solver::builder(&c).build().unwrap();
+        let u0 = Grid3::random(10, 12, 9, 11);
+        let mut u = u0.clone();
+        solver.run(&mut u, 8).unwrap();
+        let want = solver.reference(&u0, 8);
+        assert_eq!(u.max_abs_diff(&want), 0.0);
     }
 }

@@ -25,8 +25,10 @@
 //! Result: bit-identical to `t` serial sweeps for every `(B, t)` and
 //! every registered op radius.
 
+use crate::simulator::memory::StoreMode;
 use crate::stencil::grid::Grid3;
 use crate::stencil::op::{copy_x_edges, StarWindow, StencilOp, MAX_RADIUS};
+use crate::stencil::simd;
 use crate::Result;
 
 use super::wavefront::tmp_slots;
@@ -38,11 +40,15 @@ pub struct SpatialConfig {
     pub t: usize,
     /// Number of y blocks `B` (Fig. 7 uses 8).
     pub blocks: usize,
+    /// Store flavour of the final-level (`s == t`) result copy into `u`
+    /// — the only write stream of the pass never re-read by a later
+    /// level or a neighbor block.
+    pub store: StoreMode,
 }
 
 impl Default for SpatialConfig {
     fn default() -> Self {
-        Self { t: 4, blocks: 2 }
+        Self { t: 4, blocks: 2, store: StoreMode::NonTemporal }
     }
 }
 
@@ -122,7 +128,9 @@ pub fn blocked_wavefront_jacobi<O: StencilOp>(
                             ln((k as isize + dz) as usize, (y as isize + dy) as usize)
                         });
                         copy_x_edges(&mut out, c, r);
-                        op.line_update(&mut out, &win, f.line(k, y), h2, k, y);
+                        // `out` is a reused scratch line, always read right
+                        // back by the copy below — plain stores only
+                        op.line_update(&mut out, &win, f.line(k, y), h2, k, y, StoreMode::WriteAllocate);
                     }
                     // write to the level-s home (tmp ring for odd, src for
                     // even), plus the boundary array when this line is one
@@ -142,7 +150,13 @@ pub fn blocked_wavefront_jacobi<O: StencilOp>(
                                 bnd_write[o..o + nx].copy_from_slice(&out);
                             }
                         }
+                    } else if s == t {
+                        // final level: the pass never re-reads these lines,
+                        // so the store stream may bypass the cache
+                        simd::stream_copy(u.line_mut(k, y), &out, cfg.store);
                     } else {
+                        // intermediate even levels stay cached: later
+                        // levels and the next block read them from src
                         u.line_mut(k, y).copy_from_slice(&out);
                     }
                 }
@@ -242,7 +256,7 @@ mod tests {
         let f = Grid3::random(nz, ny, nx, 17);
         let mut u = Grid3::random(nz, ny, nx, 18);
         let want = serial_reference(&u, &f, 1.1, t);
-        blocked_wavefront_jacobi(&ConstLaplace7, &mut u, &f, 1.1, &SpatialConfig { t, blocks })
+        blocked_wavefront_jacobi(&ConstLaplace7, &mut u, &f, 1.1, &SpatialConfig { t, blocks, ..Default::default() })
             .unwrap();
         assert_eq!(u.max_abs_diff(&want), 0.0, "{nz}x{ny}x{nx} t={t} B={blocks}");
     }
@@ -251,7 +265,7 @@ mod tests {
         let f = Grid3::random(nz, ny, nx, 19);
         let mut u = Grid3::random(nz, ny, nx, 20);
         let want = serial_reference_op(&Laplace13, &u, &f, 1.1, t);
-        blocked_wavefront_jacobi(&Laplace13, &mut u, &f, 1.1, &SpatialConfig { t, blocks })
+        blocked_wavefront_jacobi(&Laplace13, &mut u, &f, 1.1, &SpatialConfig { t, blocks, ..Default::default() })
             .unwrap();
         assert_eq!(u.max_abs_diff(&want), 0.0, "radius-2 {nz}x{ny}x{nx} t={t} B={blocks}");
     }
@@ -306,7 +320,7 @@ mod tests {
         let f = Grid3::random(9, 14, 8, 23);
         let mut u = Grid3::random(9, 14, 8, 24);
         let want = serial_reference_op(&op, &u, &f, 0.9, 4);
-        blocked_wavefront_jacobi(&op, &mut u, &f, 0.9, &SpatialConfig { t: 4, blocks: 3 }).unwrap();
+        blocked_wavefront_jacobi(&op, &mut u, &f, 0.9, &SpatialConfig { t: 4, blocks: 3, ..Default::default() }).unwrap();
         assert_eq!(u.max_abs_diff(&want), 0.0);
     }
 
@@ -319,7 +333,7 @@ mod tests {
             &mut u,
             &f,
             1.0,
-            &SpatialConfig { t: 3, blocks: 2 }
+            &SpatialConfig { t: 3, blocks: 2, ..Default::default() }
         )
         .is_err());
     }

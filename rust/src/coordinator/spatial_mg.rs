@@ -43,8 +43,10 @@
 use std::marker::PhantomData;
 
 use crate::config::{BlockWidthError, Scheme};
+use crate::simulator::memory::StoreMode;
 use crate::stencil::grid::Grid3;
 use crate::stencil::op::{StarWindow, StencilOp, MAX_RADIUS};
+use crate::stencil::simd;
 use crate::Result;
 
 use super::pool::WorkerPool;
@@ -59,11 +61,15 @@ pub struct MultiGroupConfig {
     /// Thread groups = y blocks (>= 1; each block needs >= 2R interior
     /// lines when `groups > 1`).
     pub groups: usize,
+    /// Store mode for the *final-level* (`s == t`) writes back into `u`.
+    /// Earlier even levels are re-read by deeper levels and by the right
+    /// neighbor group, so they always use write-allocate stores.
+    pub store: StoreMode,
 }
 
 impl Default for MultiGroupConfig {
     fn default() -> Self {
-        Self { t: 4, groups: 2 }
+        Self { t: 4, groups: 2, store: StoreMode::NonTemporal }
     }
 }
 
@@ -103,6 +109,7 @@ pub struct MultiGroupSchedule<'g, O: StencilOp> {
     r: usize,
     groups: usize,
     h2: f64,
+    store: StoreMode,
     /// Block boundaries over the interior lines `[R, ny-R)`.
     starts: Vec<usize>,
     last_round: isize,
@@ -170,6 +177,7 @@ impl<'g, O: StencilOp> MultiGroupSchedule<'g, O> {
             r,
             groups,
             h2,
+            store: cfg.store,
             starts,
             last_round: (nz - 2 * r) as isize + lag * (t as isize - 1),
             _borrow: PhantomData,
@@ -278,7 +286,10 @@ impl<O: StencilOp> Schedule for MultiGroupSchedule<'_, O> {
                         });
                         let rhs = std::slice::from_raw_parts(f_base.add((k * ny + y) * nx), nx);
                         crate::stencil::op::copy_x_edges(out, c, r);
-                        self.op.line_update(out, &win, rhs, self.h2, k, y);
+                        // `out` is reused scratch every iteration — always
+                        // write-allocate; streaming happens on the final
+                        // copy back into `u` below.
+                        self.op.line_update(out, &win, rhs, self.h2, k, y, StoreMode::WriteAllocate);
                         if s % 2 == 1 {
                             let dst = tmp.add((lvl * slots + k % slots) * plane + y * nx);
                             std::ptr::copy_nonoverlapping(out.as_ptr(), dst, nx);
@@ -295,7 +306,16 @@ impl<O: StencilOp> Schedule for MultiGroupSchedule<'_, O> {
                                     std::ptr::copy_nonoverlapping(out.as_ptr(), o, nx);
                                 }
                             }
+                        } else if s == t {
+                            // final level: nothing re-reads these lines
+                            // within the pass, so honor the configured
+                            // store mode (streaming skips write-allocate).
+                            let dst = std::slice::from_raw_parts_mut(src.add((k * ny + y) * nx), nx);
+                            simd::stream_copy(dst, out, self.store);
                         } else {
+                            // intermediate even levels are re-read by
+                            // deeper levels and the right neighbor group:
+                            // keep them cache-resident.
                             let dst = src.add((k * ny + y) * nx);
                             std::ptr::copy_nonoverlapping(out.as_ptr(), dst, nx);
                         }
@@ -373,7 +393,7 @@ mod tests {
         let f = Grid3::random(nz, ny, nx, 17);
         let mut u = Grid3::random(nz, ny, nx, 18);
         let want = serial_reference(&u, &f, 1.1, t);
-        run_mg(&ConstLaplace7, &mut u, &f, 1.1, &MultiGroupConfig { t, groups }, 1).unwrap();
+        run_mg(&ConstLaplace7, &mut u, &f, 1.1, &MultiGroupConfig { t, groups , ..Default::default() }, 1).unwrap();
         assert_eq!(u.max_abs_diff(&want), 0.0, "{nz}x{ny}x{nx} t={t} G={groups}");
     }
 
@@ -381,7 +401,7 @@ mod tests {
         let f = Grid3::random(nz, ny, nx, 27);
         let mut u = Grid3::random(nz, ny, nx, 28);
         let want = serial_reference_op(&Laplace13, &u, &f, 1.1, t);
-        run_mg(&Laplace13, &mut u, &f, 1.1, &MultiGroupConfig { t, groups }, 1).unwrap();
+        run_mg(&Laplace13, &mut u, &f, 1.1, &MultiGroupConfig { t, groups , ..Default::default() }, 1).unwrap();
         assert_eq!(u.max_abs_diff(&want), 0.0, "radius-2 {nz}x{ny}x{nx} t={t} G={groups}");
     }
 
@@ -440,7 +460,7 @@ mod tests {
         let f = Grid3::random(9, 14, 8, 33);
         let mut u = Grid3::random(9, 14, 8, 34);
         let want = serial_reference_op(&op, &u, &f, 0.9, 4);
-        run_mg(&op, &mut u, &f, 0.9, &MultiGroupConfig { t: 4, groups: 3 }, 1).unwrap();
+        run_mg(&op, &mut u, &f, 0.9, &MultiGroupConfig { t: 4, groups: 3 , ..Default::default() }, 1).unwrap();
         assert_eq!(u.max_abs_diff(&want), 0.0);
     }
 
@@ -449,7 +469,7 @@ mod tests {
         let f = Grid3::random(10, 14, 8, 5);
         let mut u = Grid3::random(10, 14, 8, 6);
         let want = serial_reference(&u, &f, 1.0, 12);
-        let cfg = MultiGroupConfig { t: 4, groups: 3 };
+        let cfg = MultiGroupConfig { t: 4, groups: 3 , ..Default::default() };
         check_iters_multiple(12, cfg.t).unwrap();
         let mut pool = WorkerPool::new(3);
         multigroup_passes(&mut pool, &ConstLaplace7, &mut u, &f, 1.0, &cfg, 3).unwrap();
@@ -463,21 +483,21 @@ mod tests {
         let f = Grid3::zeros(8, 8, 8);
         let mut u = Grid3::random(8, 8, 8, 1);
         // odd t
-        assert!(run_mg(&ConstLaplace7, &mut u, &f, 1.0, &MultiGroupConfig { t: 3, groups: 2 }, 1)
+        assert!(run_mg(&ConstLaplace7, &mut u, &f, 1.0, &MultiGroupConfig { t: 3, groups: 2 , ..Default::default() }, 1)
             .is_err());
         // zero groups
-        assert!(run_mg(&ConstLaplace7, &mut u, &f, 1.0, &MultiGroupConfig { t: 2, groups: 0 }, 1)
+        assert!(run_mg(&ConstLaplace7, &mut u, &f, 1.0, &MultiGroupConfig { t: 2, groups: 0 , ..Default::default() }, 1)
             .is_err());
         // too many groups for the interior (8 - 2 = 6 lines < 2 * 4):
         // the typed BlockWidthError, same as RunConfig::validate raises
-        let err = run_mg(&ConstLaplace7, &mut u, &f, 1.0, &MultiGroupConfig { t: 2, groups: 4 }, 1)
+        let err = run_mg(&ConstLaplace7, &mut u, &f, 1.0, &MultiGroupConfig { t: 2, groups: 4 , ..Default::default() }, 1)
             .unwrap_err();
         let typed = err.downcast_ref::<BlockWidthError>().expect("typed width error");
         assert_eq!((typed.required, typed.groups), (2, 4));
         // radius-2: 12 - 4 = 8 interior lines < 4 * 3 groups
         let mut v = Grid3::random(8, 12, 8, 2);
         let fv = Grid3::zeros(8, 12, 8);
-        assert!(run_mg(&Laplace13, &mut v, &fv, 1.0, &MultiGroupConfig { t: 2, groups: 3 }, 1)
+        assert!(run_mg(&Laplace13, &mut v, &fv, 1.0, &MultiGroupConfig { t: 2, groups: 3 , ..Default::default() }, 1)
             .is_err());
     }
 

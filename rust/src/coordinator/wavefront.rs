@@ -41,6 +41,7 @@
 
 use std::marker::PhantomData;
 
+use crate::simulator::memory::StoreMode;
 use crate::simulator::perfmodel::BarrierKind;
 use crate::stencil::grid::Grid3;
 use crate::stencil::jacobi::jacobi_sweep;
@@ -76,11 +77,21 @@ pub struct WavefrontConfig {
     pub threads: usize,
     pub barrier: BarrierKind,
     pub sync: SyncMode,
+    /// Store flavour of the *final* update level (the only write stream
+    /// of the pass that is never re-read): non-temporal streams it past
+    /// the cache, write-allocate keeps it resident. Intermediate levels
+    /// always use plain stores — their output is the next level's input.
+    pub store: StoreMode,
 }
 
 impl Default for WavefrontConfig {
     fn default() -> Self {
-        Self { threads: 4, barrier: BarrierKind::Spin, sync: SyncMode::Barrier }
+        Self {
+            threads: 4,
+            barrier: BarrierKind::Spin,
+            sync: SyncMode::Barrier,
+            store: StoreMode::NonTemporal,
+        }
     }
 }
 
@@ -114,6 +125,7 @@ pub struct WavefrontJacobiSchedule<'g, O: StencilOp> {
     r: usize,
     h2: f64,
     sync: SyncMode,
+    store: StoreMode,
     barrier: AnyBarrier,
     last_round: isize,
     _borrow: PhantomData<&'g mut f64>,
@@ -164,6 +176,7 @@ impl<'g, O: StencilOp> WavefrontJacobiSchedule<'g, O> {
             r,
             h2,
             sync: cfg.sync,
+            store: cfg.store,
             barrier: AnyBarrier::new(cfg.barrier, t),
             last_round: (nz - 2 * r) as isize + lag * (t as isize - 1),
             _borrow: PhantomData,
@@ -185,6 +198,10 @@ impl<O: StencilOp> Schedule for WavefrontJacobiSchedule<'_, O> {
         let src = self.src;
         let tmpp = self.tmp;
         let f_base = self.f;
+        // Only the last update level's writes leave the pass un-re-read;
+        // every other level's output is a downstream worker's input, so
+        // streaming it would evict the very planes the group keeps hot.
+        let store = if s == t - 1 { self.store } else { StoreMode::WriteAllocate };
         // plane base pointer holding the step-`s` values of plane kk as
         // seen by worker `s` (its read side).
         let read_plane = |kk: usize| -> *const f64 {
@@ -277,6 +294,7 @@ impl<O: StencilOp> Schedule for WavefrontJacobiSchedule<'_, O> {
                             self.h2,
                             k,
                             j,
+                            store,
                         );
                     }
                 }
@@ -382,7 +400,10 @@ mod tests {
         let f = Grid3::random(nz, ny, nx, 77);
         let mut u = Grid3::random(nz, ny, nx, 42);
         let want = serial_reference(&u, &f, 0.8, t);
-        let cfg = WavefrontConfig { threads: t, barrier, sync };
+        // default store = NonTemporal: every bit-exactness check below
+        // also validates the streamed final level against the serial
+        // (write-allocate) reference
+        let cfg = WavefrontConfig { threads: t, barrier, sync, ..Default::default() };
         run_wf(&ConstLaplace7, &mut u, &f, 0.8, &cfg, 1).unwrap();
         assert_eq!(
             u.max_abs_diff(&want),
@@ -395,7 +416,7 @@ mod tests {
         let f = Grid3::random(nz, ny, nx, 7);
         let mut u = Grid3::random(nz, ny, nx, 8);
         let want = serial_reference_op(&Laplace13, &u, &f, 0.8, t);
-        let cfg = WavefrontConfig { threads: t, barrier: BarrierKind::Spin, sync };
+        let cfg = WavefrontConfig { threads: t, barrier: BarrierKind::Spin, sync, ..Default::default() };
         run_wf(&Laplace13, &mut u, &f, 0.8, &cfg, 1).unwrap();
         assert_eq!(u.max_abs_diff(&want), 0.0, "radius-2 {nz}x{ny}x{nx} t={t} {sync:?}");
     }

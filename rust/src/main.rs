@@ -34,13 +34,17 @@ COMMANDS:
   run        run one experiment
                --config <file> | --scheme <s> --n <N> --t <T> --groups <G>
                --iters <I> --op <o> --machine <name>
-               --pin <none|compact|scatter> --csv
+               --pin <none|compact|scatter|smtpair> --smt --csv
                schemes: jacobi-baseline jacobi-wavefront jacobi-multigroup
                         gs-baseline gs-wavefront gs-multigroup
                ops:     laplace7 (paper 7-point) varcoeff (Helmholtz-style
                         coefficient grid) laplace13 (4th-order, radius 2)
-               --pin places workers on cores (cache-group aware when
-               --machine names a Tab. 1 model; Linux backend, no-op elsewhere)
+               --pin places workers on cores (cache-group and SMT aware;
+               from the Tab. 1 model when --machine names one, else from
+               sysfs; Linux backend, no-op elsewhere)
+               --smt co-schedules sibling hardware threads: with --pin none
+               it implies the smtpair placement (adjacent workers share one
+               core) and widens the modeled thread count
   figures    regenerate paper tables/figures
                [id|all] --out-dir <dir>
                ids: tab1 fig3a fig3b fig4a fig4b fig8 fig9 fig10 barrier

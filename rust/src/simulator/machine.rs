@@ -105,6 +105,15 @@ impl MachineSpec {
         self.cores * if use_smt { self.smt_per_core } else { 1 }
     }
 
+    /// Cpu-id distance between SMT siblings of one core under the
+    /// split-style enumeration Linux uses on these machines: physical
+    /// cores get ids `0..cores` and core `c`'s sibling threads answer
+    /// to `c + t·stride`. With one thread per core the stride is moot
+    /// (returned as `cores` for uniformity; no second sibling exists).
+    pub fn smt_sibling_stride(&self) -> usize {
+        self.cores.max(1)
+    }
+
     /// Aggregate OLC bandwidth in GB/s when `n` cores stream from it.
     ///
     /// Linear up to the scaling fraction: each additional core adds

@@ -10,6 +10,7 @@ pub mod grid;
 pub mod jacobi;
 pub mod op;
 pub mod residual;
+pub mod simd;
 pub mod streambench;
 
 /// Bytes per lattice-site update (double precision).

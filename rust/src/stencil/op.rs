@@ -32,9 +32,10 @@
 //! [`ConstLaplace7`] compiles to exactly the code the crate shipped
 //! before this layer existed.
 
-use super::gauss_seidel::{gs_line_update_interleaved, gs_line_update_naive, GsKernel};
+use super::gauss_seidel::GsKernel;
 use super::grid::Grid3;
-use super::jacobi::jacobi_line_update;
+use super::simd;
+use crate::simulator::memory::StoreMode;
 use crate::Result;
 
 /// Largest halo radius any registered op uses (window arrays are sized
@@ -188,7 +189,11 @@ pub trait StencilOp: Sync {
         Ok(())
     }
 
-    /// Jacobi-style out-of-place update of one x-line.
+    /// Jacobi-style out-of-place update of one x-line. `store` selects
+    /// the store-instruction flavour: [`StoreMode::NonTemporal`] streams
+    /// the write (bit-identical values, no write-allocate) and is only
+    /// worth requesting for lines that are not re-read within the pass.
+    #[allow(clippy::too_many_arguments)]
     fn line_update(
         &self,
         dst: &mut [f64],
@@ -197,6 +202,7 @@ pub trait StencilOp: Sync {
         h2: f64,
         k: usize,
         j: usize,
+        store: StoreMode,
     );
 
     /// Gauss-Seidel-style in-place update of one x-line (lexicographic:
@@ -228,9 +234,10 @@ pub fn copy_x_edges(dst: &mut [f64], center: &[f64], r: usize) {
 
 /// The paper's operator: constant-coefficient 7-point Laplace update.
 ///
-/// Dispatches to the seed kernels ([`jacobi_line_update`],
-/// [`gs_line_update_naive`] / [`gs_line_update_interleaved`]), so the
-/// generic path is bit-identical to the pre-`StencilOp` code.
+/// Dispatches through [`simd`], whose scalar path is the seed kernels
+/// (`jacobi_line_update`, `gs_line_update_naive` /
+/// `gs_line_update_interleaved`) and whose AVX path is bit-identical to
+/// them, so the generic path still produces the pre-`StencilOp` bits.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ConstLaplace7;
 
@@ -254,8 +261,9 @@ impl StencilOp for ConstLaplace7 {
         h2: f64,
         _k: usize,
         _j: usize,
+        store: StoreMode,
     ) {
-        jacobi_line_update(dst, win.center, win.ym[0], win.yp[0], win.zm[0], win.zp[0], rhs, h2);
+        simd::jacobi7(dst, win, rhs, h2, store);
     }
     #[inline]
     fn gs_line_update(
@@ -266,18 +274,7 @@ impl StencilOp for ConstLaplace7 {
         _j: usize,
         kernel: GsKernel,
     ) {
-        match kernel {
-            GsKernel::Naive => {
-                gs_line_update_naive(line, win.ym_new[0], win.yp_old[0], win.zm_new[0], win.zp_old[0])
-            }
-            GsKernel::Interleaved => gs_line_update_interleaved(
-                line,
-                win.ym_new[0],
-                win.yp_old[0],
-                win.zm_new[0],
-                win.zp_old[0],
-            ),
-        }
+        simd::gs7(line, win, kernel);
     }
 }
 
@@ -343,14 +340,9 @@ impl StencilOp for VarCoeff7 {
         h2: f64,
         k: usize,
         j: usize,
+        store: StoreMode,
     ) {
-        let nx = dst.len();
-        let lam = self.coef.line(k, j);
-        let (c, ym, yp, zm, zp) = (win.center, win.ym[0], win.yp[0], win.zm[0], win.zp[0]);
-        for i in 1..nx - 1 {
-            dst[i] = (c[i - 1] + c[i + 1] + ym[i] + yp[i] + zm[i] + zp[i] + h2 * rhs[i])
-                / (6.0 + h2 * lam[i]);
-        }
+        simd::varcoeff7(dst, win, rhs, self.coef.line(k, j), h2, store);
     }
     #[inline]
     fn gs_line_update(
@@ -363,13 +355,7 @@ impl StencilOp for VarCoeff7 {
     ) {
         // the variable diagonal breaks the constant-weight interleaving
         // identity, so both kernel flavours run the straight recursion
-        let nx = line.len();
-        let lam = self.coef.line(k, j);
-        for i in 1..nx - 1 {
-            line[i] = (line[i - 1]
-                + (line[i + 1] + win.ym_new[0][i] + win.yp_old[0][i] + win.zm_new[0][i] + win.zp_old[0][i]))
-                / (6.0 + lam[i]);
-        }
+        simd::gs_var7(line, win, self.coef.line(k, j));
     }
 }
 
@@ -389,16 +375,6 @@ impl StencilOp for VarCoeff7 {
 /// serial reference sweep, not as residual reduction.)
 #[derive(Clone, Copy, Debug, Default)]
 pub struct Laplace13;
-
-/// `1/90`, the inverse diagonal of the 4th-order operator.
-const INV_90: f64 = 1.0 / 90.0;
-
-impl Laplace13 {
-    #[inline]
-    fn site(s1: f64, s2: f64, rhs12h2: f64) -> f64 {
-        (16.0 * s1 - s2 + rhs12h2) * INV_90
-    }
-}
 
 impl StencilOp for Laplace13 {
     #[inline]
@@ -420,20 +396,9 @@ impl StencilOp for Laplace13 {
         h2: f64,
         _k: usize,
         _j: usize,
+        store: StoreMode,
     ) {
-        let nx = dst.len();
-        if nx < 5 {
-            return;
-        }
-        let c = win.center;
-        let (ym1, yp1, zm1, zp1) = (win.ym[0], win.yp[0], win.zm[0], win.zp[0]);
-        let (ym2, yp2, zm2, zp2) = (win.ym[1], win.yp[1], win.zm[1], win.zp[1]);
-        let f12 = 12.0 * h2;
-        for i in 2..nx - 2 {
-            let s1 = c[i - 1] + c[i + 1] + ym1[i] + yp1[i] + zm1[i] + zp1[i];
-            let s2 = c[i - 2] + c[i + 2] + ym2[i] + yp2[i] + zm2[i] + zp2[i];
-            dst[i] = Self::site(s1, s2, f12 * rhs[i]);
-        }
+        simd::laplace13(dst, win, rhs, h2, store);
     }
     #[inline]
     fn gs_line_update(
@@ -444,25 +409,13 @@ impl StencilOp for Laplace13 {
         _j: usize,
         _kernel: GsKernel,
     ) {
-        let nx = line.len();
-        if nx < 5 {
-            return;
-        }
-        for i in 2..nx - 2 {
-            let s1 = line[i - 1]
-                + line[i + 1]
-                + win.ym_new[0][i]
-                + win.yp_old[0][i]
-                + win.zm_new[0][i]
-                + win.zp_old[0][i];
-            let s2 = line[i - 2]
-                + line[i + 2]
-                + win.ym_new[1][i]
-                + win.yp_old[1][i]
-                + win.zm_new[1][i]
-                + win.zp_old[1][i];
-            line[i] = Self::site(s1, s2, 0.0);
-        }
+        // The GS form groups each shell's recursion-free terms first
+        // (t1/t2, then `line[i-1] + t1` / `line[i-2] + t2`) so the
+        // chunked vector leg can gather the independent sums per lane and
+        // close the recursion scalar — all GS schemes share the op's
+        // ordering, so the regrouping is observable only against a
+        // hypothetical external bit-reference, which does not exist.
+        simd::gs13(line, win);
     }
 }
 
@@ -647,13 +600,29 @@ impl OpFamily for Laplace13 {
 /// One out-of-place sweep of `op`; boundary of `dst` copied from `src`.
 ///
 /// The generic analog of [`super::jacobi::jacobi_sweep`] — bit-identical
-/// to it for [`ConstLaplace7`].
+/// to it for [`ConstLaplace7`]. Plain (write-allocate) stores; the
+/// serial-reference flavour.
 pub fn op_jacobi_sweep<O: StencilOp + ?Sized>(
     op: &O,
     dst: &mut Grid3,
     src: &Grid3,
     f: &Grid3,
     h2: f64,
+) {
+    op_jacobi_sweep_stored(op, dst, src, f, h2, StoreMode::WriteAllocate)
+}
+
+/// [`op_jacobi_sweep`] with an explicit store flavour: the baseline
+/// scheme streams its write stream when `nt_stores` is on — every `dst`
+/// line is written once and not re-read within the sweep (the paper's
+/// Sec. 3 write-allocate elision). Values are bit-identical either way.
+pub fn op_jacobi_sweep_stored<O: StencilOp + ?Sized>(
+    op: &O,
+    dst: &mut Grid3,
+    src: &Grid3,
+    f: &Grid3,
+    h2: f64,
+    store: StoreMode,
 ) {
     assert_eq!(dst.shape(), src.shape());
     assert_eq!(f.shape(), src.shape());
@@ -670,7 +639,7 @@ pub fn op_jacobi_sweep<O: StencilOp + ?Sized>(
             let win = StarWindow::from_grid(src, r, k, j);
             let d = dst.idx(k, j, 0);
             let dst_line = &mut dst.data_mut()[d..d + nx];
-            op.line_update(dst_line, &win, f.line(k, j), h2, k, j);
+            op.line_update(dst_line, &win, f.line(k, j), h2, k, j, store);
         }
     }
 }
@@ -683,10 +652,23 @@ pub fn op_jacobi_steps<O: StencilOp + ?Sized>(
     h2: f64,
     n: usize,
 ) -> Grid3 {
+    op_jacobi_steps_stored(op, u, f, h2, n, StoreMode::WriteAllocate)
+}
+
+/// [`op_jacobi_steps`] with an explicit store flavour (see
+/// [`op_jacobi_sweep_stored`]).
+pub fn op_jacobi_steps_stored<O: StencilOp + ?Sized>(
+    op: &O,
+    u: &Grid3,
+    f: &Grid3,
+    h2: f64,
+    n: usize,
+    store: StoreMode,
+) -> Grid3 {
     let mut a = u.clone();
     let mut b = u.clone();
     for _ in 0..n {
-        op_jacobi_sweep(op, &mut b, &a, f, h2);
+        op_jacobi_sweep_stored(op, &mut b, &a, f, h2, store);
         std::mem::swap(&mut a, &mut b);
     }
     a

@@ -1,0 +1,834 @@
+//! Runtime-dispatched SIMD line kernels with real non-temporal stores.
+//!
+//! The paper's optimized kernels are SIMD-ized assembly with streaming
+//! (non-temporal) stores on the Jacobi write stream; until this module
+//! existed, the crate's kernels were scalar and `StoreMode::NonTemporal`
+//! lived only inside the ECM model. Here every [`StencilOp`] line update
+//! has an AVX leg (`std::arch` x86_64 intrinsics, stable) selected at
+//! runtime, and the NT flavour issues actual `_mm256_stream_pd` stores —
+//! scalar head to 32-byte alignment, streamed 4-lane body, scalar tail,
+//! one `_mm_sfence` per line — so the `nt_stores` config key finally
+//! changes the executed code, not just the prediction.
+//!
+//! **Bit-exactness contract.** The scalar kernels are the reference; the
+//! vector legs perform the identical fp operations in the identical
+//! per-site association (element-wise adds/muls in the same order,
+//! `_mm256_div_pd` is correctly rounded like scalar divide), so SIMD
+//! on/off and NT on/off are all bit-identical — asserted across the full
+//! scheme × op matrix by `tests/simd_parity.rs`. The Gauss-Seidel forms
+//! carry an x recursion; their vector legs gather the four recursion-free
+//! partial sums per 4-lane chunk (all loads precede any store of the
+//! chunk) and close the recursion scalar per lane in ascending order,
+//! which reproduces the naive recursion bit for bit.
+//!
+//! Dispatch: [`Isa::detect`] probes once (cached), honours the
+//! `STENCILWAVE_FORCE_SCALAR` env (CI's forced-scalar leg) and can be
+//! overridden by tests via [`Isa::force`]. On non-x86_64 targets the
+//! scalar path is the only path.
+
+use super::gauss_seidel::{gs_line_update_interleaved, gs_line_update_naive, GsKernel};
+use super::jacobi::{jacobi_line_update, ONE_SIXTH};
+use super::op::{GsWindow, StarWindow};
+use crate::simulator::memory::StoreMode;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// `1/90`, the inverse diagonal of the 4th-order 13-point operator.
+pub(crate) const INV_90: f64 = 1.0 / 90.0;
+
+/// One radius-2 site: `(16·S₁ − S₂ + 12h²f) / 90`. Shared by the scalar
+/// and vector legs (and `op.rs`) so the association cannot drift.
+#[inline(always)]
+pub(crate) fn l13_site(s1: f64, s2: f64, rhs12h2: f64) -> f64 {
+    (16.0 * s1 - s2 + rhs12h2) * INV_90
+}
+
+/// Instruction set a line kernel runs with.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Isa {
+    /// Portable scalar kernels — the bit-exactness reference and the
+    /// only path off x86_64.
+    Scalar,
+    /// 4-lane AVX (`__m256d`) kernels with optional streaming stores.
+    Avx,
+}
+
+/// Cached dispatch decision: 0 = undecided, 1 = scalar, 2 = AVX.
+static ISA_CACHE: AtomicU8 = AtomicU8::new(0);
+
+/// True when the CPU supports the AVX leg.
+fn hw_avx() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::is_x86_feature_detected!("avx")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+impl Isa {
+    /// The ISA every non-`_with` kernel entry point dispatches to.
+    /// Probed once (hardware + `STENCILWAVE_FORCE_SCALAR`) and cached.
+    pub fn detect() -> Isa {
+        match ISA_CACHE.load(Ordering::Relaxed) {
+            1 => Isa::Scalar,
+            2 => Isa::Avx,
+            _ => {
+                let isa = Self::probe();
+                ISA_CACHE.store(if isa == Isa::Avx { 2 } else { 1 }, Ordering::Relaxed);
+                isa
+            }
+        }
+    }
+
+    fn probe() -> Isa {
+        let forced_scalar = matches!(
+            std::env::var("STENCILWAVE_FORCE_SCALAR"),
+            Ok(v) if !v.trim().is_empty() && v.trim() != "0"
+        );
+        if !forced_scalar && hw_avx() {
+            Isa::Avx
+        } else {
+            Isa::Scalar
+        }
+    }
+
+    /// Test hook: pin the dispatch decision (`None` re-probes lazily).
+    /// A forced `Avx` is clamped to `Scalar` on hardware without AVX, so
+    /// forcing can never make a dispatcher execute unsupported code.
+    /// Process-global — tests driving it belong in their own process
+    /// (see `tests/simd_parity.rs`), though because every ISA produces
+    /// bit-identical results a mid-run flip is benign.
+    pub fn force(isa: Option<Isa>) {
+        let v = match isa {
+            None => 0,
+            Some(Isa::Scalar) => 1,
+            Some(Isa::Avx) => {
+                if hw_avx() {
+                    2
+                } else {
+                    1
+                }
+            }
+        };
+        ISA_CACHE.store(v, Ordering::Relaxed);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// dispatching entry points (one per StencilOp line-update flavour)
+
+/// 7-point constant-coefficient Jacobi line update (interior x only),
+/// with the store stream issued per `store`.
+#[inline]
+pub fn jacobi7(dst: &mut [f64], win: &StarWindow<'_>, rhs: &[f64], h2: f64, store: StoreMode) {
+    jacobi7_with(Isa::detect(), dst, win, rhs, h2, store)
+}
+
+/// [`jacobi7`] at an explicit ISA (the parity-test entry point).
+pub fn jacobi7_with(
+    isa: Isa,
+    dst: &mut [f64],
+    win: &StarWindow<'_>,
+    rhs: &[f64],
+    h2: f64,
+    store: StoreMode,
+) {
+    #[cfg(target_arch = "x86_64")]
+    if isa == Isa::Avx {
+        // SAFETY: `Isa::Avx` is only ever produced when AVX was detected
+        // (Isa::force clamps an unsupported request to Scalar).
+        unsafe { avx::jacobi7(dst, win, rhs, h2, store) };
+        return;
+    }
+    let _ = (isa, store); // scalar stores are plain; NT is value-identical
+    jacobi_line_update(dst, win.center, win.ym[0], win.yp[0], win.zm[0], win.zp[0], rhs, h2);
+}
+
+/// Variable-coefficient (Helmholtz-style) 7-point Jacobi line update:
+/// divides by the variable diagonal `6 + h²λ`.
+#[inline]
+pub fn varcoeff7(
+    dst: &mut [f64],
+    win: &StarWindow<'_>,
+    rhs: &[f64],
+    lam: &[f64],
+    h2: f64,
+    store: StoreMode,
+) {
+    varcoeff7_with(Isa::detect(), dst, win, rhs, lam, h2, store)
+}
+
+/// [`varcoeff7`] at an explicit ISA.
+#[allow(clippy::too_many_arguments)]
+pub fn varcoeff7_with(
+    isa: Isa,
+    dst: &mut [f64],
+    win: &StarWindow<'_>,
+    rhs: &[f64],
+    lam: &[f64],
+    h2: f64,
+    store: StoreMode,
+) {
+    #[cfg(target_arch = "x86_64")]
+    if isa == Isa::Avx {
+        // SAFETY: Avx implies the feature was detected (see jacobi7_with).
+        unsafe { avx::varcoeff7(dst, win, rhs, lam, h2, store) };
+        return;
+    }
+    let _ = (isa, store);
+    let nx = dst.len();
+    if nx < 3 {
+        return;
+    }
+    let (c, ym, yp, zm, zp) = (win.center, win.ym[0], win.yp[0], win.zm[0], win.zp[0]);
+    for i in 1..nx - 1 {
+        dst[i] = (c[i - 1] + c[i + 1] + ym[i] + yp[i] + zm[i] + zp[i] + h2 * rhs[i])
+            / (6.0 + h2 * lam[i]);
+    }
+}
+
+/// 4th-order 13-point (radius-2) Jacobi line update.
+#[inline]
+pub fn laplace13(dst: &mut [f64], win: &StarWindow<'_>, rhs: &[f64], h2: f64, store: StoreMode) {
+    laplace13_with(Isa::detect(), dst, win, rhs, h2, store)
+}
+
+/// [`laplace13`] at an explicit ISA.
+pub fn laplace13_with(
+    isa: Isa,
+    dst: &mut [f64],
+    win: &StarWindow<'_>,
+    rhs: &[f64],
+    h2: f64,
+    store: StoreMode,
+) {
+    #[cfg(target_arch = "x86_64")]
+    if isa == Isa::Avx {
+        // SAFETY: Avx implies the feature was detected (see jacobi7_with).
+        unsafe { avx::laplace13(dst, win, rhs, h2, store) };
+        return;
+    }
+    let _ = (isa, store);
+    let nx = dst.len();
+    if nx < 5 {
+        return;
+    }
+    let c = win.center;
+    let (ym1, yp1, zm1, zp1) = (win.ym[0], win.yp[0], win.zm[0], win.zp[0]);
+    let (ym2, yp2, zm2, zp2) = (win.ym[1], win.yp[1], win.zm[1], win.zp[1]);
+    let f12 = 12.0 * h2;
+    for i in 2..nx - 2 {
+        let s1 = c[i - 1] + c[i + 1] + ym1[i] + yp1[i] + zm1[i] + zp1[i];
+        let s2 = c[i - 2] + c[i + 2] + ym2[i] + yp2[i] + zm2[i] + zp2[i];
+        dst[i] = l13_site(s1, s2, f12 * rhs[i]);
+    }
+}
+
+/// 7-point constant-coefficient Gauss-Seidel line update (in place; no
+/// store mode — the store hits the line the load just brought in).
+#[inline]
+pub fn gs7(line: &mut [f64], win: &GsWindow<'_>, kernel: GsKernel) {
+    gs7_with(Isa::detect(), line, win, kernel)
+}
+
+/// [`gs7`] at an explicit ISA.
+pub fn gs7_with(isa: Isa, line: &mut [f64], win: &GsWindow<'_>, kernel: GsKernel) {
+    #[cfg(target_arch = "x86_64")]
+    if isa == Isa::Avx {
+        // One AVX routine serves both kernel flavours: Naive and
+        // Interleaved are bit-identical by construction, and the chunked
+        // gather below subsumes the interleaving (4 partial sums in
+        // flight instead of 2).
+        // SAFETY: Avx implies the feature was detected (see jacobi7_with).
+        unsafe { avx::gs7(line, win) };
+        return;
+    }
+    let _ = isa;
+    match kernel {
+        GsKernel::Naive => {
+            gs_line_update_naive(line, win.ym_new[0], win.yp_old[0], win.zm_new[0], win.zp_old[0])
+        }
+        GsKernel::Interleaved => gs_line_update_interleaved(
+            line,
+            win.ym_new[0],
+            win.yp_old[0],
+            win.zm_new[0],
+            win.zp_old[0],
+        ),
+    }
+}
+
+/// Variable-coefficient 7-point Gauss-Seidel line update.
+#[inline]
+pub fn gs_var7(line: &mut [f64], win: &GsWindow<'_>, lam: &[f64]) {
+    gs_var7_with(Isa::detect(), line, win, lam)
+}
+
+/// [`gs_var7`] at an explicit ISA.
+pub fn gs_var7_with(isa: Isa, line: &mut [f64], win: &GsWindow<'_>, lam: &[f64]) {
+    #[cfg(target_arch = "x86_64")]
+    if isa == Isa::Avx {
+        // SAFETY: Avx implies the feature was detected (see jacobi7_with).
+        unsafe { avx::gs_var7(line, win, lam) };
+        return;
+    }
+    let _ = isa;
+    let nx = line.len();
+    if nx < 3 {
+        return;
+    }
+    for i in 1..nx - 1 {
+        let nb = line[i + 1]
+            + win.ym_new[0][i]
+            + win.yp_old[0][i]
+            + win.zm_new[0][i]
+            + win.zp_old[0][i];
+        line[i] = (line[i - 1] + nb) / (6.0 + lam[i]);
+    }
+}
+
+/// Radius-2 13-point Gauss-Seidel line update.
+#[inline]
+pub fn gs13(line: &mut [f64], win: &GsWindow<'_>) {
+    gs13_with(Isa::detect(), line, win)
+}
+
+/// [`gs13`] at an explicit ISA.
+pub fn gs13_with(isa: Isa, line: &mut [f64], win: &GsWindow<'_>) {
+    #[cfg(target_arch = "x86_64")]
+    if isa == Isa::Avx {
+        // SAFETY: Avx implies the feature was detected (see jacobi7_with).
+        unsafe { avx::gs13(line, win) };
+        return;
+    }
+    let _ = isa;
+    let nx = line.len();
+    if nx < 5 {
+        return;
+    }
+    for i in 2..nx - 2 {
+        // Recursion-free terms first (t1/t2), recursion terms joined per
+        // shell — the grouping the chunked vector leg reproduces exactly.
+        let t1 = line[i + 1]
+            + win.ym_new[0][i]
+            + win.yp_old[0][i]
+            + win.zm_new[0][i]
+            + win.zp_old[0][i];
+        let t2 = line[i + 2]
+            + win.ym_new[1][i]
+            + win.yp_old[1][i]
+            + win.zm_new[1][i]
+            + win.zp_old[1][i];
+        line[i] = l13_site(line[i - 1] + t1, line[i - 2] + t2, 0.0);
+    }
+}
+
+/// Copy `src` into `dst` (equal lengths), streaming the stores when
+/// `store` is non-temporal — the write stream of a schedule's final-level
+/// result copy, which is never re-read within the pass.
+pub fn stream_copy(dst: &mut [f64], src: &[f64], store: StoreMode) {
+    debug_assert_eq!(dst.len(), src.len());
+    #[cfg(target_arch = "x86_64")]
+    if store == StoreMode::NonTemporal && Isa::detect() == Isa::Avx {
+        // SAFETY: Avx implies the feature was detected (see jacobi7_with).
+        unsafe { avx::stream_copy(dst, src) };
+        return;
+    }
+    let _ = store;
+    dst.copy_from_slice(src);
+}
+
+// ---------------------------------------------------------------------------
+// AVX legs (x86_64 only)
+
+#[cfg(target_arch = "x86_64")]
+mod avx {
+    use super::*;
+    use std::arch::x86_64::*;
+
+    /// Interior-store loop shared by the out-of-place kernels: 4-lane
+    /// body with plain or streaming stores, scalar head/tail. The NT arm
+    /// runs a scalar head up to 32-byte alignment of `dst` (stream
+    /// stores require it), then `_mm256_stream_pd`, then one `_mm_sfence`
+    /// so the weakly-ordered stores are globally visible before the
+    /// schedule publishes progress.
+    macro_rules! store_loop {
+        ($dst:ident, $lo:expr, $hi:expr, $store:expr, $i:ident, $vec:expr, $site:expr) => {{
+            let lo: usize = $lo;
+            let hi: usize = $hi;
+            let mut $i = lo;
+            match $store {
+                StoreMode::WriteAllocate => {
+                    while $i + 4 <= hi {
+                        let v = $vec;
+                        _mm256_storeu_pd($dst.as_mut_ptr().add($i), v);
+                        $i += 4;
+                    }
+                    while $i < hi {
+                        $dst[$i] = $site;
+                        $i += 1;
+                    }
+                }
+                StoreMode::NonTemporal => {
+                    while $i < hi && ($dst.as_ptr().add($i) as usize) & 31 != 0 {
+                        $dst[$i] = $site;
+                        $i += 1;
+                    }
+                    let body_end = if $i < hi { $i + (hi - $i) / 4 * 4 } else { $i };
+                    let streamed = $i < body_end;
+                    while $i < body_end {
+                        let v = $vec;
+                        _mm256_stream_pd($dst.as_mut_ptr().add($i), v);
+                        $i += 4;
+                    }
+                    while $i < hi {
+                        $dst[$i] = $site;
+                        $i += 1;
+                    }
+                    if streamed {
+                        _mm_sfence();
+                    }
+                }
+            }
+        }};
+    }
+
+    #[target_feature(enable = "avx")]
+    pub unsafe fn jacobi7(
+        dst: &mut [f64],
+        win: &StarWindow<'_>,
+        rhs: &[f64],
+        h2: f64,
+        store: StoreMode,
+    ) {
+        let nx = dst.len();
+        if nx < 3 {
+            return;
+        }
+        let (c, ym, yp, zm, zp) = (win.center, win.ym[0], win.yp[0], win.zm[0], win.zp[0]);
+        let sixth = _mm256_set1_pd(ONE_SIXTH);
+        let h2v = _mm256_set1_pd(h2);
+        store_loop!(
+            dst,
+            1,
+            nx - 1,
+            store,
+            i,
+            {
+                // same association as jacobi_line_update, 4 sites at a time
+                let s = _mm256_add_pd(
+                    _mm256_loadu_pd(c.as_ptr().add(i - 1)),
+                    _mm256_loadu_pd(c.as_ptr().add(i + 1)),
+                );
+                let s = _mm256_add_pd(s, _mm256_loadu_pd(ym.as_ptr().add(i)));
+                let s = _mm256_add_pd(s, _mm256_loadu_pd(yp.as_ptr().add(i)));
+                let s = _mm256_add_pd(s, _mm256_loadu_pd(zm.as_ptr().add(i)));
+                let s = _mm256_add_pd(s, _mm256_loadu_pd(zp.as_ptr().add(i)));
+                let s = _mm256_add_pd(s, _mm256_mul_pd(h2v, _mm256_loadu_pd(rhs.as_ptr().add(i))));
+                _mm256_mul_pd(sixth, s)
+            },
+            ONE_SIXTH * (c[i - 1] + c[i + 1] + ym[i] + yp[i] + zm[i] + zp[i] + h2 * rhs[i])
+        );
+    }
+
+    #[target_feature(enable = "avx")]
+    pub unsafe fn varcoeff7(
+        dst: &mut [f64],
+        win: &StarWindow<'_>,
+        rhs: &[f64],
+        lam: &[f64],
+        h2: f64,
+        store: StoreMode,
+    ) {
+        let nx = dst.len();
+        if nx < 3 {
+            return;
+        }
+        let (c, ym, yp, zm, zp) = (win.center, win.ym[0], win.yp[0], win.zm[0], win.zp[0]);
+        let h2v = _mm256_set1_pd(h2);
+        let six = _mm256_set1_pd(6.0);
+        store_loop!(
+            dst,
+            1,
+            nx - 1,
+            store,
+            i,
+            {
+                let s = _mm256_add_pd(
+                    _mm256_loadu_pd(c.as_ptr().add(i - 1)),
+                    _mm256_loadu_pd(c.as_ptr().add(i + 1)),
+                );
+                let s = _mm256_add_pd(s, _mm256_loadu_pd(ym.as_ptr().add(i)));
+                let s = _mm256_add_pd(s, _mm256_loadu_pd(yp.as_ptr().add(i)));
+                let s = _mm256_add_pd(s, _mm256_loadu_pd(zm.as_ptr().add(i)));
+                let s = _mm256_add_pd(s, _mm256_loadu_pd(zp.as_ptr().add(i)));
+                let s = _mm256_add_pd(s, _mm256_mul_pd(h2v, _mm256_loadu_pd(rhs.as_ptr().add(i))));
+                let den =
+                    _mm256_add_pd(six, _mm256_mul_pd(h2v, _mm256_loadu_pd(lam.as_ptr().add(i))));
+                // _mm256_div_pd is correctly rounded: bit-equal to scalar /
+                _mm256_div_pd(s, den)
+            },
+            (c[i - 1] + c[i + 1] + ym[i] + yp[i] + zm[i] + zp[i] + h2 * rhs[i])
+                / (6.0 + h2 * lam[i])
+        );
+    }
+
+    #[target_feature(enable = "avx")]
+    pub unsafe fn laplace13(
+        dst: &mut [f64],
+        win: &StarWindow<'_>,
+        rhs: &[f64],
+        h2: f64,
+        store: StoreMode,
+    ) {
+        let nx = dst.len();
+        if nx < 5 {
+            return;
+        }
+        let c = win.center;
+        let (ym1, yp1, zm1, zp1) = (win.ym[0], win.yp[0], win.zm[0], win.zp[0]);
+        let (ym2, yp2, zm2, zp2) = (win.ym[1], win.yp[1], win.zm[1], win.zp[1]);
+        let f12 = 12.0 * h2;
+        let f12v = _mm256_set1_pd(f12);
+        let sixteen = _mm256_set1_pd(16.0);
+        let inv90 = _mm256_set1_pd(INV_90);
+        store_loop!(
+            dst,
+            2,
+            nx - 2,
+            store,
+            i,
+            {
+                let s1 = _mm256_add_pd(
+                    _mm256_loadu_pd(c.as_ptr().add(i - 1)),
+                    _mm256_loadu_pd(c.as_ptr().add(i + 1)),
+                );
+                let s1 = _mm256_add_pd(s1, _mm256_loadu_pd(ym1.as_ptr().add(i)));
+                let s1 = _mm256_add_pd(s1, _mm256_loadu_pd(yp1.as_ptr().add(i)));
+                let s1 = _mm256_add_pd(s1, _mm256_loadu_pd(zm1.as_ptr().add(i)));
+                let s1 = _mm256_add_pd(s1, _mm256_loadu_pd(zp1.as_ptr().add(i)));
+                let s2 = _mm256_add_pd(
+                    _mm256_loadu_pd(c.as_ptr().add(i - 2)),
+                    _mm256_loadu_pd(c.as_ptr().add(i + 2)),
+                );
+                let s2 = _mm256_add_pd(s2, _mm256_loadu_pd(ym2.as_ptr().add(i)));
+                let s2 = _mm256_add_pd(s2, _mm256_loadu_pd(yp2.as_ptr().add(i)));
+                let s2 = _mm256_add_pd(s2, _mm256_loadu_pd(zm2.as_ptr().add(i)));
+                let s2 = _mm256_add_pd(s2, _mm256_loadu_pd(zp2.as_ptr().add(i)));
+                let v = _mm256_add_pd(
+                    _mm256_sub_pd(_mm256_mul_pd(sixteen, s1), s2),
+                    _mm256_mul_pd(f12v, _mm256_loadu_pd(rhs.as_ptr().add(i))),
+                );
+                _mm256_mul_pd(v, inv90)
+            },
+            l13_site(
+                c[i - 1] + c[i + 1] + ym1[i] + yp1[i] + zm1[i] + zp1[i],
+                c[i - 2] + c[i + 2] + ym2[i] + yp2[i] + zm2[i] + zp2[i],
+                f12 * rhs[i],
+            )
+        );
+    }
+
+    #[target_feature(enable = "avx")]
+    pub unsafe fn gs7(line: &mut [f64], win: &GsWindow<'_>) {
+        let nx = line.len();
+        if nx < 3 {
+            return;
+        }
+        let (ym, yp, zm, zp) =
+            (win.ym_new[0], win.yp_old[0], win.zm_new[0], win.zp_old[0]);
+        let hi = nx - 1;
+        let mut i = 1usize;
+        while i + 4 <= hi {
+            // Recursion-free partial sums of 4 sites, gathered before any
+            // store of the chunk touches line[i..i+4] (line[i+1..i+5] are
+            // loaded here as *old* values — exactly what the ascending
+            // scalar recursion would read).
+            let s = _mm256_add_pd(
+                _mm256_loadu_pd(line.as_ptr().add(i + 1)),
+                _mm256_loadu_pd(ym.as_ptr().add(i)),
+            );
+            let s = _mm256_add_pd(s, _mm256_loadu_pd(yp.as_ptr().add(i)));
+            let s = _mm256_add_pd(s, _mm256_loadu_pd(zm.as_ptr().add(i)));
+            let s = _mm256_add_pd(s, _mm256_loadu_pd(zp.as_ptr().add(i)));
+            let mut tmp = [0.0f64; 4];
+            _mm256_storeu_pd(tmp.as_mut_ptr(), s);
+            for (l, t) in tmp.iter().enumerate() {
+                line[i + l] = ONE_SIXTH * (line[i + l - 1] + t);
+            }
+            i += 4;
+        }
+        while i < hi {
+            line[i] = ONE_SIXTH * (line[i - 1] + (line[i + 1] + ym[i] + yp[i] + zm[i] + zp[i]));
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx")]
+    pub unsafe fn gs_var7(line: &mut [f64], win: &GsWindow<'_>, lam: &[f64]) {
+        let nx = line.len();
+        if nx < 3 {
+            return;
+        }
+        let (ym, yp, zm, zp) =
+            (win.ym_new[0], win.yp_old[0], win.zm_new[0], win.zp_old[0]);
+        let six = _mm256_set1_pd(6.0);
+        let hi = nx - 1;
+        let mut i = 1usize;
+        while i + 4 <= hi {
+            let s = _mm256_add_pd(
+                _mm256_loadu_pd(line.as_ptr().add(i + 1)),
+                _mm256_loadu_pd(ym.as_ptr().add(i)),
+            );
+            let s = _mm256_add_pd(s, _mm256_loadu_pd(yp.as_ptr().add(i)));
+            let s = _mm256_add_pd(s, _mm256_loadu_pd(zm.as_ptr().add(i)));
+            let s = _mm256_add_pd(s, _mm256_loadu_pd(zp.as_ptr().add(i)));
+            let den = _mm256_add_pd(six, _mm256_loadu_pd(lam.as_ptr().add(i)));
+            let mut tmp = [0.0f64; 4];
+            let mut dv = [0.0f64; 4];
+            _mm256_storeu_pd(tmp.as_mut_ptr(), s);
+            _mm256_storeu_pd(dv.as_mut_ptr(), den);
+            for l in 0..4 {
+                line[i + l] = (line[i + l - 1] + tmp[l]) / dv[l];
+            }
+            i += 4;
+        }
+        while i < hi {
+            line[i] = (line[i - 1] + (line[i + 1] + ym[i] + yp[i] + zm[i] + zp[i]))
+                / (6.0 + lam[i]);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx")]
+    pub unsafe fn gs13(line: &mut [f64], win: &GsWindow<'_>) {
+        let nx = line.len();
+        if nx < 5 {
+            return;
+        }
+        let (ym1, yp1, zm1, zp1) =
+            (win.ym_new[0], win.yp_old[0], win.zm_new[0], win.zp_old[0]);
+        let (ym2, yp2, zm2, zp2) =
+            (win.ym_new[1], win.yp_old[1], win.zm_new[1], win.zp_old[1]);
+        let hi = nx - 2;
+        let mut i = 2usize;
+        while i + 4 <= hi {
+            // line[i+1..i+5] and line[i+2..i+6] loaded before the chunk
+            // writes line[i..i+4]: both shells read *old* values, which is
+            // what the ascending recursion reads (i+1, i+2 are always
+            // ahead of the write index).
+            let t1 = _mm256_add_pd(
+                _mm256_loadu_pd(line.as_ptr().add(i + 1)),
+                _mm256_loadu_pd(ym1.as_ptr().add(i)),
+            );
+            let t1 = _mm256_add_pd(t1, _mm256_loadu_pd(yp1.as_ptr().add(i)));
+            let t1 = _mm256_add_pd(t1, _mm256_loadu_pd(zm1.as_ptr().add(i)));
+            let t1 = _mm256_add_pd(t1, _mm256_loadu_pd(zp1.as_ptr().add(i)));
+            let t2 = _mm256_add_pd(
+                _mm256_loadu_pd(line.as_ptr().add(i + 2)),
+                _mm256_loadu_pd(ym2.as_ptr().add(i)),
+            );
+            let t2 = _mm256_add_pd(t2, _mm256_loadu_pd(yp2.as_ptr().add(i)));
+            let t2 = _mm256_add_pd(t2, _mm256_loadu_pd(zm2.as_ptr().add(i)));
+            let t2 = _mm256_add_pd(t2, _mm256_loadu_pd(zp2.as_ptr().add(i)));
+            let mut a1 = [0.0f64; 4];
+            let mut a2 = [0.0f64; 4];
+            _mm256_storeu_pd(a1.as_mut_ptr(), t1);
+            _mm256_storeu_pd(a2.as_mut_ptr(), t2);
+            for l in 0..4 {
+                // recursion closes scalar per lane, ascending: lanes read
+                // line[i+l-1] / line[i+l-2], already updated below them
+                line[i + l] = l13_site(line[i + l - 1] + a1[l], line[i + l - 2] + a2[l], 0.0);
+            }
+            i += 4;
+        }
+        while i < hi {
+            let t1 = line[i + 1] + ym1[i] + yp1[i] + zm1[i] + zp1[i];
+            let t2 = line[i + 2] + ym2[i] + yp2[i] + zm2[i] + zp2[i];
+            line[i] = l13_site(line[i - 1] + t1, line[i - 2] + t2, 0.0);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx")]
+    pub unsafe fn stream_copy(dst: &mut [f64], src: &[f64]) {
+        let n = dst.len().min(src.len());
+        let mut i = 0usize;
+        while i < n && (dst.as_ptr().add(i) as usize) & 31 != 0 {
+            dst[i] = src[i];
+            i += 1;
+        }
+        let body_end = i + (n - i) / 4 * 4;
+        let streamed = i < body_end;
+        while i < body_end {
+            _mm256_stream_pd(dst.as_mut_ptr().add(i), _mm256_loadu_pd(src.as_ptr().add(i)));
+            i += 4;
+        }
+        while i < n {
+            dst[i] = src[i];
+            i += 1;
+        }
+        if streamed {
+            _mm_sfence();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic line data (xorshift) of length `n`.
+    fn data(n: usize, seed: u64) -> Vec<f64> {
+        let mut s = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).max(1);
+        (0..n)
+            .map(|_| {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                (s as f64 / u64::MAX as f64) * 2.0 - 1.0
+            })
+            .collect()
+    }
+
+    struct Lines {
+        c: Vec<f64>,
+        n1: [Vec<f64>; 4],
+        n2: [Vec<f64>; 4],
+        rhs: Vec<f64>,
+        lam: Vec<f64>,
+    }
+
+    fn lines(nx: usize, seed: u64) -> Lines {
+        Lines {
+            c: data(nx, seed),
+            n1: [data(nx, seed + 1), data(nx, seed + 2), data(nx, seed + 3), data(nx, seed + 4)],
+            n2: [data(nx, seed + 5), data(nx, seed + 6), data(nx, seed + 7), data(nx, seed + 8)],
+            rhs: data(nx, seed + 9),
+            lam: data(nx, seed + 10).iter().map(|v| v.abs() + 0.1).collect(),
+        }
+    }
+
+    fn star(l: &Lines) -> StarWindow<'_> {
+        StarWindow {
+            center: &l.c,
+            ym: [&l.n1[0], &l.n2[0]],
+            yp: [&l.n1[1], &l.n2[1]],
+            zm: [&l.n1[2], &l.n2[2]],
+            zp: [&l.n1[3], &l.n2[3]],
+        }
+    }
+
+    fn gs_win(l: &Lines) -> GsWindow<'_> {
+        GsWindow {
+            ym_new: [&l.n1[0], &l.n2[0]],
+            yp_old: [&l.n1[1], &l.n2[1]],
+            zm_new: [&l.n1[2], &l.n2[2]],
+            zp_old: [&l.n1[3], &l.n2[3]],
+        }
+    }
+
+    /// All lane-remainder shapes: below one lane, exactly one lane,
+    /// lane + remainder, many lanes, and the radius-2 minima.
+    const WIDTHS: [usize; 12] = [1, 2, 3, 4, 5, 6, 7, 8, 9, 13, 16, 33];
+
+    #[test]
+    fn jacobi_kernels_match_scalar_bit_for_bit_at_every_width() {
+        for &nx in &WIDTHS {
+            for store in [StoreMode::WriteAllocate, StoreMode::NonTemporal] {
+                let l = lines(nx, 42 + nx as u64);
+                let win = star(&l);
+                let mut a = data(nx, 7);
+                let mut b = a.clone();
+                jacobi7_with(Isa::Scalar, &mut a, &win, &l.rhs, 0.7, StoreMode::WriteAllocate);
+                jacobi7_with(Isa::Avx, &mut b, &win, &l.rhs, 0.7, store);
+                assert_eq!(a, b, "jacobi7 nx={nx} {store:?}");
+                let mut a = data(nx, 8);
+                let mut b = a.clone();
+                varcoeff7_with(
+                    Isa::Scalar,
+                    &mut a,
+                    &win,
+                    &l.rhs,
+                    &l.lam,
+                    1.3,
+                    StoreMode::WriteAllocate,
+                );
+                varcoeff7_with(Isa::Avx, &mut b, &win, &l.rhs, &l.lam, 1.3, store);
+                assert_eq!(a, b, "varcoeff7 nx={nx} {store:?}");
+                let mut a = data(nx, 9);
+                let mut b = a.clone();
+                laplace13_with(Isa::Scalar, &mut a, &win, &l.rhs, 0.6, StoreMode::WriteAllocate);
+                laplace13_with(Isa::Avx, &mut b, &win, &l.rhs, 0.6, store);
+                assert_eq!(a, b, "laplace13 nx={nx} {store:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn gs_kernels_match_scalar_bit_for_bit_at_every_width() {
+        for &nx in &WIDTHS {
+            let l = lines(nx, 99 + nx as u64);
+            let win = gs_win(&l);
+            for kernel in [GsKernel::Naive, GsKernel::Interleaved] {
+                let mut a = data(nx, 3);
+                let mut b = a.clone();
+                gs7_with(Isa::Scalar, &mut a, &win, kernel);
+                gs7_with(Isa::Avx, &mut b, &win, kernel);
+                assert_eq!(a, b, "gs7 nx={nx} {kernel:?}");
+            }
+            let mut a = data(nx, 4);
+            let mut b = a.clone();
+            gs_var7_with(Isa::Scalar, &mut a, &win, &l.lam);
+            gs_var7_with(Isa::Avx, &mut b, &win, &l.lam);
+            assert_eq!(a, b, "gs_var7 nx={nx}");
+            let mut a = data(nx, 5);
+            let mut b = a.clone();
+            gs13_with(Isa::Scalar, &mut a, &win);
+            gs13_with(Isa::Avx, &mut b, &win);
+            assert_eq!(a, b, "gs13 nx={nx}");
+        }
+    }
+
+    #[test]
+    fn stream_copy_is_exact_for_both_store_modes() {
+        for &n in &WIDTHS {
+            let src = data(n, 21);
+            for store in [StoreMode::WriteAllocate, StoreMode::NonTemporal] {
+                let mut dst = vec![0.0; n];
+                stream_copy(&mut dst, &src, store);
+                assert_eq!(dst, src, "n={n} {store:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn misaligned_destinations_stay_exact_under_nt_stores() {
+        // slice a big buffer at every offset so the NT head/tail logic
+        // sees all four 32-byte phases of the destination pointer
+        let nx = 21;
+        let l = lines(nx, 1234);
+        let win = star(&l);
+        let mut buf_a = data(nx + 4, 6);
+        let mut buf_b = buf_a.clone();
+        for off in 0..4 {
+            let a = &mut buf_a[off..off + nx];
+            let b = &mut buf_b[off..off + nx];
+            jacobi7_with(Isa::Scalar, a, &win, &l.rhs, 0.7, StoreMode::WriteAllocate);
+            jacobi7_with(Isa::Avx, b, &win, &l.rhs, 0.7, StoreMode::NonTemporal);
+            assert_eq!(a, b, "offset {off}");
+        }
+    }
+
+    #[test]
+    fn detect_returns_a_supported_isa() {
+        let isa = Isa::detect();
+        if isa == Isa::Avx {
+            assert!(hw_avx());
+        }
+        // cached probe is stable
+        assert_eq!(Isa::detect(), isa);
+    }
+}

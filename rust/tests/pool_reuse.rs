@@ -30,7 +30,7 @@ fn one_pool_survives_scheme_and_team_size_changes() {
         for (t, sync) in [(2usize, SyncMode::Flow), (6, SyncMode::Barrier), (4, SyncMode::Flow)] {
             let mut u = Grid3::random(12, 14, 10, 40 + round * 10 + t as u64);
             let want = seed_reference(false, &u, &f, 1.0, t);
-            let cfg = WavefrontConfig { threads: t, barrier: BarrierKind::Spin, sync };
+            let cfg = WavefrontConfig { threads: t, barrier: BarrierKind::Spin, sync, ..Default::default() };
             wavefront_jacobi_passes(&mut pool, &ConstLaplace7, &mut u, &f, 1.0, &cfg, 1).unwrap();
             assert_eq!(u.max_abs_diff(&want), 0.0, "jacobi t={t} round={round}");
         }
@@ -49,14 +49,14 @@ fn one_pool_survives_scheme_and_team_size_changes() {
         // multi-group blocked Jacobi
         let mut u = Grid3::random(12, 14, 10, 90 + round);
         let want = seed_reference(false, &u, &f, 1.0, 4);
-        let mg = MultiGroupConfig { t: 4, groups: 3 };
+        let mg = MultiGroupConfig { t: 4, groups: 3, ..Default::default() };
         multigroup_passes(&mut pool, &ConstLaplace7, &mut u, &f, 1.0, &mg, 1).unwrap();
         assert_eq!(u.max_abs_diff(&want), 0.0, "multigroup round={round}");
         // multi-group blocked GS (same pool, same scratch arena: its
         // boundary array reuses the buffer the Jacobi scheme just sized)
         let mut u = Grid3::random(12, 14, 10, 95 + round);
         let want = seed_reference(true, &u, &f, 1.0, 4);
-        let gmg = GsMultiGroupConfig { t: 4, groups: 4, kernel: GsKernel::Interleaved };
+        let gmg = GsMultiGroupConfig { t: 4, groups: 4, kernel: GsKernel::Interleaved, ..Default::default() };
         gs_multigroup_passes(&mut pool, &ConstLaplace7, &mut u, &gmg, 1).unwrap();
         assert_eq!(u.max_abs_diff(&want), 0.0, "gs multigroup round={round}");
     }
@@ -79,14 +79,14 @@ fn many_passes_amortize_one_team() {
     // and 12 more multi-group updates on the *same* pool
     let mut v = Grid3::random(14, 10, 9, 13);
     let want = seed_reference(false, &v, &f, 0.7, 12);
-    let mg = MultiGroupConfig { t: 2, groups: 4 };
+    let mg = MultiGroupConfig { t: 2, groups: 4, ..Default::default() };
     multigroup_passes(&mut pool, &ConstLaplace7, &mut v, &f, 0.7, &mg, 6).unwrap();
     assert_eq!(v.max_abs_diff(&want), 0.0);
 
     // and 12 in-place GS multi-group updates, again on the same team
     let mut w = Grid3::random(14, 10, 9, 14);
     let want = seed_reference(true, &w, &f, 0.7, 12);
-    let gmg = GsMultiGroupConfig { t: 3, groups: 4, kernel: GsKernel::Interleaved };
+    let gmg = GsMultiGroupConfig { t: 3, groups: 4, kernel: GsKernel::Interleaved, ..Default::default() };
     gs_multigroup_passes(&mut pool, &ConstLaplace7, &mut w, &gmg, 4).unwrap();
     assert_eq!(w.max_abs_diff(&want), 0.0);
 }
@@ -107,13 +107,13 @@ fn scratch_sized_for_radius2_is_safe_for_radius1_and_back() {
 
         let mut v = Grid3::random(12, 14, 10, 70 + round);
         let want = seed_reference(false, &v, &f, 0.8, 4);
-        let mg = MultiGroupConfig { t: 4, groups: 2 };
+        let mg = MultiGroupConfig { t: 4, groups: 2, ..Default::default() };
         multigroup_passes(&mut pool, &ConstLaplace7, &mut v, &f, 0.8, &mg, 1).unwrap();
         assert_eq!(v.max_abs_diff(&want), 0.0, "radius-1 round={round}");
 
         let mut w = Grid3::random(12, 14, 10, 80 + round);
         let want = serial_reference_op(&Laplace13, &w, &f, 0.8, 2);
-        let mg2 = MultiGroupConfig { t: 2, groups: 2 };
+        let mg2 = MultiGroupConfig { t: 2, groups: 2, ..Default::default() };
         multigroup_passes(&mut pool, &Laplace13, &mut w, &f, 0.8, &mg2, 1).unwrap();
         assert_eq!(w.max_abs_diff(&want), 0.0, "radius-2 multigroup round={round}");
 
@@ -122,7 +122,7 @@ fn scratch_sized_for_radius2_is_safe_for_radius1_and_back() {
         let mut x = Grid3::random(12, 14, 10, 85 + round);
         let mut want = x.clone();
         stencilwave::stencil::op::op_gs_sweeps(&Laplace13, &mut want, 2, GsKernel::Interleaved);
-        let gmg = GsMultiGroupConfig { t: 2, groups: 3, kernel: GsKernel::Interleaved };
+        let gmg = GsMultiGroupConfig { t: 2, groups: 3, kernel: GsKernel::Interleaved, ..Default::default() };
         gs_multigroup_passes(&mut pool, &Laplace13, &mut x, &gmg, 1).unwrap();
         assert_eq!(x.max_abs_diff(&want), 0.0, "radius-2 gs multigroup round={round}");
     }

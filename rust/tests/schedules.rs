@@ -41,7 +41,7 @@ fn wavefront_jacobi_is_exact_for_random_cases() {
         let f = Grid3::random(nz, ny, nx, g.next());
         let want = serial_reference(&u0, &f, h2, t);
         let mut u = u0.clone();
-        let cfg = WavefrontConfig { threads: t, barrier, sync };
+        let cfg = WavefrontConfig { threads: t, barrier, sync, ..Default::default() };
         wavefront_jacobi_passes(&mut pool, &ConstLaplace7, &mut u, &f, h2, &cfg, 1).unwrap();
         assert_eq!(
             u.max_abs_diff(&want),
@@ -62,7 +62,7 @@ fn blocked_wavefront_is_exact_for_random_cases() {
         let f = Grid3::random(nz, ny, nx, g.next());
         let want = serial_reference(&u0, &f, 1.0, t);
         let mut u = u0.clone();
-        blocked_wavefront_jacobi(&ConstLaplace7, &mut u, &f, 1.0, &SpatialConfig { t, blocks })
+        blocked_wavefront_jacobi(&ConstLaplace7, &mut u, &f, 1.0, &SpatialConfig { t, blocks, ..Default::default() })
             .unwrap();
         assert_eq!(
             u.max_abs_diff(&want),
@@ -86,7 +86,7 @@ fn multigroup_blocked_is_exact_for_random_cases() {
         let f = Grid3::random(nz, ny, nx, g.next());
         let want = serial_reference(&u0, &f, 1.0, t);
         let mut u = u0.clone();
-        multigroup_passes(&mut pool, &ConstLaplace7, &mut u, &f, 1.0, &MultiGroupConfig { t, groups }, 1)
+        multigroup_passes(&mut pool, &ConstLaplace7, &mut u, &f, 1.0, &MultiGroupConfig { t, groups, ..Default::default() }, 1)
             .unwrap();
         assert_eq!(
             u.max_abs_diff(&want),
@@ -105,7 +105,7 @@ fn multigroup_agrees_with_serial_blocked_sweep() {
         let u0 = Grid3::random(9, 15, 8, 21);
         let f = Grid3::random(9, 15, 8, 22);
         let mut serial = u0.clone();
-        blocked_wavefront_jacobi(&ConstLaplace7, &mut serial, &f, 0.9, &SpatialConfig { t, blocks })
+        blocked_wavefront_jacobi(&ConstLaplace7, &mut serial, &f, 0.9, &SpatialConfig { t, blocks, ..Default::default() })
             .unwrap();
         let mut parallel = u0.clone();
         multigroup_passes(
@@ -114,7 +114,7 @@ fn multigroup_agrees_with_serial_blocked_sweep() {
             &mut parallel,
             &f,
             0.9,
-            &MultiGroupConfig { t, groups: blocks },
+            &MultiGroupConfig { t, groups: blocks, ..Default::default() },
             1,
         )
         .unwrap();
@@ -187,7 +187,7 @@ fn gs_multigroup_is_exact_for_random_cases() {
         let mut want = u0.clone();
         gs_sweeps(&mut want, t, kernel);
         let mut u = u0.clone();
-        let cfg = GsMultiGroupConfig { t, groups, kernel };
+        let cfg = GsMultiGroupConfig { t, groups, kernel, ..Default::default() };
         gs_multigroup_passes(&mut pool, &ConstLaplace7, &mut u, &cfg, 1).unwrap();
         assert_eq!(
             u.max_abs_diff(&want),
@@ -214,7 +214,7 @@ fn schemes_compose_interchangeably() {
     // blocked(2 blocks, t=2) four times
     let mut b = u0.clone();
     for _ in 0..4 {
-        blocked_wavefront_jacobi(&ConstLaplace7, &mut b, &f, 1.0, &SpatialConfig { t: 2, blocks: 2 })
+        blocked_wavefront_jacobi(&ConstLaplace7, &mut b, &f, 1.0, &SpatialConfig { t: 2, blocks: 2, ..Default::default() })
             .unwrap();
     }
     assert_eq!(b.max_abs_diff(&want), 0.0);
@@ -223,7 +223,7 @@ fn schemes_compose_interchangeably() {
     let mut c = u0.clone();
     let cfg2 = WavefrontConfig { threads: 2, ..Default::default() };
     wavefront_jacobi_passes(&mut pool, &ConstLaplace7, &mut c, &f, 1.0, &cfg2, 1).unwrap();
-    blocked_wavefront_jacobi(&ConstLaplace7, &mut c, &f, 1.0, &SpatialConfig { t: 6, blocks: 3 })
+    blocked_wavefront_jacobi(&ConstLaplace7, &mut c, &f, 1.0, &SpatialConfig { t: 6, blocks: 3, ..Default::default() })
         .unwrap();
     assert_eq!(c.max_abs_diff(&want), 0.0);
 }
@@ -258,7 +258,7 @@ fn gs_pipeline_wavefront_and_multigroup_compose() {
         &mut pool,
         &ConstLaplace7,
         &mut u,
-        &GsMultiGroupConfig { t: 3, groups: 3, kernel: GsKernel::Interleaved },
+        &GsMultiGroupConfig { t: 3, groups: 3, kernel: GsKernel::Interleaved, ..Default::default() },
         1,
     )
     .unwrap();

@@ -1,0 +1,82 @@
+//! SIMD-vs-scalar bit-parity, driven through forced ISA dispatch.
+//!
+//! `Isa::force` pins the *process-global* dispatch decision, so every
+//! forced-ISA comparison lives in this one integration crate — and in
+//! ONE `#[test]` fn, because `cargo test` runs a crate's tests on
+//! in-process threads that would otherwise interleave their forces.
+//! (`src/stencil/simd.rs` unit tests stay race-free by only using the
+//! explicit `_with(isa, ...)` entry points.)
+//!
+//! Coverage: the shared `tests/common` scheme × op matrix re-run under
+//! each forced ISA, a direct scalar-vs-AVX grid comparison for every
+//! `Scheme::ALL` × `OpKind::ALL` × `nt_stores` cell, and an
+//! nt-on-vs-off comparison on the Jacobi family (the schemes whose
+//! executed store instructions the flag actually switches).
+
+mod common;
+
+use stencilwave::config::Scheme;
+use stencilwave::coordinator::solver::Solver;
+use stencilwave::stencil::grid::Grid3;
+use stencilwave::stencil::op::OpKind;
+use stencilwave::stencil::simd::Isa;
+
+/// Run `cfg` through a fresh `Solver` session under the *currently
+/// forced* ISA and return the result grid.
+fn run(cfg: &stencilwave::config::RunConfig, seed: u64) -> Grid3 {
+    let (nz, ny, nx) = cfg.size;
+    let f = Grid3::random(nz, ny, nx, seed);
+    let mut u = Grid3::random(nz, ny, nx, seed ^ 0xA5A5);
+    let mut solver = Solver::builder(cfg).rhs(f, 0.9).build().unwrap();
+    solver.run(&mut u, cfg.iters).unwrap();
+    u
+}
+
+#[test]
+fn forced_isa_and_store_mode_runs_are_bit_identical() {
+    let seed = 0x51D0;
+    let threads = *common::thread_counts().last().unwrap();
+
+    // leg 1: the shared parity harness (parallel vs serial reference,
+    // seed-kernel parity for laplace7) stays green under each forced
+    // ISA. A forced Avx clamps to Scalar on hardware without AVX, so
+    // this is safe — and still meaningful — on any runner.
+    for isa in [Isa::Scalar, Isa::Avx] {
+        Isa::force(Some(isa));
+        common::assert_scheme_op_matrix(threads, seed);
+    }
+
+    // leg 2: scalar and (clamped) AVX sessions land on bit-identical
+    // grids for every scheme × op × nt_stores cell — the lane kernels
+    // keep the scalar association, remainder lanes included.
+    for scheme in Scheme::ALL {
+        for op in OpKind::ALL {
+            for nt_stores in [false, true] {
+                let mut cfg = common::parity_config(scheme, op, threads);
+                cfg.nt_stores = nt_stores;
+                Isa::force(Some(Isa::Scalar));
+                let scalar = run(&cfg, seed);
+                Isa::force(Some(Isa::Avx));
+                let vector = run(&cfg, seed);
+                let ctx = format!("{scheme:?} x {op:?} nt_stores={nt_stores}");
+                assert_eq!(vector.max_abs_diff(&scalar), 0.0, "{ctx}: AVX vs scalar");
+            }
+        }
+    }
+
+    // leg 3: streaming stores change the executed store instructions
+    // and the modeled traffic, never the values — nt on/off agree
+    // bit-exactly on the schemes where the flag is live.
+    Isa::force(Some(Isa::Avx));
+    for scheme in [Scheme::JacobiBaseline, Scheme::JacobiWavefront, Scheme::JacobiMultiGroup] {
+        let mut on = common::parity_config(scheme, OpKind::ConstLaplace7, threads);
+        on.nt_stores = true;
+        let mut off = on.clone();
+        off.nt_stores = false;
+        let diff = run(&on, seed).max_abs_diff(&run(&off, seed));
+        assert_eq!(diff, 0.0, "{scheme:?}: nt_stores on vs off");
+    }
+
+    // restore lazy probing for anything that runs after this test
+    Isa::force(None);
+}
