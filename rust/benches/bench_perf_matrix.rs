@@ -15,11 +15,19 @@
 //! always write-allocate; their nt rows measure that the flag is a
 //! no-op there.
 //!
+//! A second axis sweeps the distributed rank layer: the same sessions
+//! sharded over `--ranks`-style z shards, with the halo-exchange
+//! overlap counters (overlapped vs stalled receives, message/byte
+//! totals) printed per case and the records written to
+//! `BENCH_halo_exchange.json` — the machine-readable evidence that
+//! interior compute proceeds while exchanges are in flight.
+//!
 //! `STENCILWAVE_BENCH_SMOKE=1` shrinks the grid and rep count — the CI
 //! configuration.
 
 use stencilwave::benchkit::{self, BenchRecord};
 use stencilwave::config::{RunConfig, Scheme};
+use stencilwave::coordinator::rank::RankSet;
 use stencilwave::coordinator::solver::Solver;
 use stencilwave::stencil::grid::Grid3;
 
@@ -65,6 +73,7 @@ fn main() {
                     threads,
                     smt,
                     nt_stores,
+                    ranks: 1,
                     mlups: s.mlups.unwrap(),
                 });
             }
@@ -74,4 +83,62 @@ fn main() {
     let path = std::path::Path::new("BENCH_perf_matrix.json");
     benchkit::write_records(path, &records).unwrap();
     println!("\nwrote {} ({} records)", path.display(), records.len());
+
+    // ---- rank axis: the same sessions sharded across z, halo traffic
+    // counted. `overlapped` receives found their message already
+    // delivered mid-compute; `stalled` had to block — together they are
+    // the instrumented proof that interior progress and the exchange
+    // really overlap (overlapped > 0 means at least one halo landed
+    // while the receiver was still computing).
+    let mut halo_records: Vec<BenchRecord> = Vec::new();
+    benchkit::header("scheme × ranks halo-exchange axis (RankSet sessions)");
+    let rank_counts: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4] };
+    for scheme in [Scheme::JacobiWavefront, Scheme::GsMultiGroup] {
+        for &ranks in rank_counts {
+            let cfg = RunConfig {
+                scheme,
+                size: (n, n, n),
+                t: 4,
+                groups: 2,
+                iters,
+                ranks,
+                ..Default::default()
+            };
+            let mut set = RankSet::builder(&cfg).build().unwrap();
+            let u0 = Grid3::random(n, n, n, 7);
+            let updates = (u0.interior_len() * iters) as u64;
+            let s = benchkit::bench_mlups(
+                &format!("{} ranks={ranks} {n}^3", scheme.as_str()),
+                updates,
+                1,
+                reps,
+                || {
+                    let mut u = u0.clone();
+                    set.run(&mut u, iters).unwrap();
+                    benchkit::black_box(u);
+                },
+            );
+            benchkit::report(&s);
+            let h = set.halo_stats();
+            println!(
+                "    halo: {} msgs, {} KiB, {} overlapped / {} stalled recvs",
+                h.messages,
+                h.payload_bytes / 1024,
+                h.overlapped_recvs,
+                h.stalled_recvs
+            );
+            halo_records.push(BenchRecord {
+                scheme: scheme.as_str().to_string(),
+                op: cfg.op.as_str().to_string(),
+                threads: cfg.t,
+                smt: false,
+                nt_stores: cfg.nt_stores,
+                ranks,
+                mlups: s.mlups.unwrap(),
+            });
+        }
+    }
+    let halo_path = std::path::Path::new("BENCH_halo_exchange.json");
+    benchkit::write_records(halo_path, &halo_records).unwrap();
+    println!("\nwrote {} ({} records)", halo_path.display(), halo_records.len());
 }

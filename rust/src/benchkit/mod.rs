@@ -111,6 +111,8 @@ pub struct BenchRecord {
     pub smt: bool,
     /// Whether non-temporal stores were enabled.
     pub nt_stores: bool,
+    /// z-axis rank shards the case ran across (1 = plain solver).
+    pub ranks: usize,
     /// Best-rep throughput in MLUP/s.
     pub mlups: f64,
 }
@@ -135,12 +137,13 @@ pub fn records_to_json(records: &[BenchRecord]) -> String {
     for (i, r) in records.iter().enumerate() {
         out.push_str(&format!(
             "  {{\"scheme\": \"{}\", \"op\": \"{}\", \"threads\": {}, \
-             \"smt\": {}, \"nt_stores\": {}, \"mlups\": {:.3}}}{}\n",
+             \"smt\": {}, \"nt_stores\": {}, \"ranks\": {}, \"mlups\": {:.3}}}{}\n",
             json_escape(&r.scheme),
             json_escape(&r.op),
             r.threads,
             r.smt,
             r.nt_stores,
+            r.ranks,
             r.mlups,
             if i + 1 < records.len() { "," } else { "" },
         ));
@@ -187,6 +190,7 @@ mod tests {
                 threads: 4,
                 smt: false,
                 nt_stores: true,
+                ranks: 1,
                 mlups: 123.456,
             },
             BenchRecord {
@@ -195,6 +199,7 @@ mod tests {
                 threads: 8,
                 smt: true,
                 nt_stores: false,
+                ranks: 2,
                 mlups: 0.5,
             },
         ];
@@ -206,8 +211,10 @@ mod tests {
         assert_eq!(arr[0].get("threads").unwrap().as_u64(), Some(4));
         assert_eq!(arr[0].get("nt_stores").unwrap().as_bool(), Some(true));
         assert!((arr[0].get("mlups").unwrap().as_f64().unwrap() - 123.456).abs() < 1e-9);
+        assert_eq!(arr[0].get("ranks").unwrap().as_u64(), Some(1));
         assert_eq!(arr[1].get("op").unwrap().as_str(), Some("a\"b\\c"));
         assert_eq!(arr[1].get("smt").unwrap().as_bool(), Some(true));
+        assert_eq!(arr[1].get("ranks").unwrap().as_u64(), Some(2));
         // empty record lists are still a valid (empty) JSON array
         let empty = crate::config::json::parse(&records_to_json(&[])).unwrap();
         assert!(empty.as_array().unwrap().is_empty());

@@ -177,6 +177,69 @@ impl std::fmt::Display for BlockWidthError {
 
 impl std::error::Error for BlockWidthError {}
 
+/// Typed validation error for the rank decomposition's per-rank depth
+/// requirement (the z-axis analog of [`BlockWidthError`]).
+///
+/// Every rank must own at least one full halo depth of z planes,
+/// otherwise a neighbor's ghost region would reach *through* the rank
+/// into the next subdomain and the exchange protocol could not close
+/// over nearest neighbors. The depth follows the halo-depth rule (see
+/// [`RunConfig::halo_depth`]): `t·R` per side for the temporally
+/// blocked Jacobi family, `R` for per-sweep exchanges.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RankWidthError {
+    /// Scheme that rejected the decomposition.
+    pub scheme: Scheme,
+    /// Halo radius of the configured op.
+    pub radius: usize,
+    /// z extent of the grid.
+    pub nz: usize,
+    /// Requested rank count.
+    pub ranks: usize,
+    /// Interior planes the grid offers (`nz - 2R`).
+    pub interior: usize,
+    /// Interior planes every rank must own (= the exchange halo depth).
+    pub required: usize,
+}
+
+impl RankWidthError {
+    /// Check that an `nz`-plane grid split into `ranks` z shards gives
+    /// every rank at least `depth` owned planes — the single source
+    /// used by [`RunConfig::validate`] and `RankSet::new`.
+    pub fn check(scheme: Scheme, radius: usize, depth: usize, nz: usize, ranks: usize) -> Result<()> {
+        let interior = nz.saturating_sub(2 * radius);
+        if ranks <= 1 || interior >= depth * ranks {
+            return Ok(());
+        }
+        Err(anyhow::Error::new(RankWidthError {
+            scheme,
+            radius,
+            nz,
+            ranks,
+            interior,
+            required: depth,
+        }))
+    }
+}
+
+impl std::fmt::Display for RankWidthError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} needs >= {} interior z planes per rank for a radius-{} op \
+             (nz = {} gives {} interior planes for {} ranks)",
+            self.scheme.as_str(),
+            self.required,
+            self.radius,
+            self.nz,
+            self.interior,
+            self.ranks
+        )
+    }
+}
+
+impl std::error::Error for RankWidthError {}
+
 /// One experiment description.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
@@ -210,6 +273,11 @@ pub struct RunConfig {
     /// aware; cache groups come from the Tab. 1 model when `machine`
     /// names one, else from the host's sysfs).
     pub pin: PinPolicy,
+    /// Number of z-axis rank shards (`ranks` key / `--ranks`). 1 runs
+    /// the plain single-rank `Solver`; larger counts run a
+    /// `coordinator::rank::RankSet` of per-rank solvers coupled by
+    /// halo exchange over a `comm::Transport`.
+    pub ranks: usize,
 }
 
 impl Default for RunConfig {
@@ -227,6 +295,7 @@ impl Default for RunConfig {
             barrier: BarrierKind::Spin,
             machine: None,
             pin: PinPolicy::None,
+            ranks: 1,
         }
     }
 }
@@ -264,6 +333,34 @@ impl RunConfig {
 
     pub fn machine_spec(&self) -> Option<MachineSpec> {
         self.machine.as_deref().and_then(MachineSpec::by_name)
+    }
+
+    /// Sweeps one rank advances between two halo exchanges (one
+    /// *temporal block*): `t` for the temporally blocked Jacobi family
+    /// (the wavefront must run whole `t`-deep blocks), 1 for the
+    /// per-sweep schemes. The in-place GS family always exchanges per
+    /// sweep: its lexicographic new-value recursion would propagate a
+    /// stale deep-halo edge through the entire subdomain, so deep
+    /// halos are unsound there (see the README halo-depth rule).
+    pub fn rank_step(&self) -> usize {
+        match self.scheme {
+            Scheme::JacobiWavefront | Scheme::JacobiMultiGroup => self.t,
+            _ => 1,
+        }
+    }
+
+    /// Ghost planes per rank interface side — the halo-depth rule:
+    /// `rank_step · R` for the out-of-place Jacobi family (a `t`-sweep
+    /// temporal block consumes `t·R` planes of redundantly recomputed
+    /// trapezoid overlap, i.e. `2R` per interface per sweep counting
+    /// both directions), plain `R` for the per-sweep in-place GS
+    /// exchange.
+    pub fn halo_depth(&self) -> usize {
+        if self.scheme.is_gs() {
+            self.op.radius()
+        } else {
+            self.rank_step() * self.op.radius()
+        }
     }
 
     /// Parse the `key = value` config format:
@@ -318,6 +415,7 @@ impl RunConfig {
                         other => anyhow::bail!("line {}: unknown barrier '{other}'", lineno + 1),
                     }
                 }
+                "ranks" => cfg.ranks = value.parse()?,
                 "machine" => cfg.machine = Some(value.to_string()),
                 "pin" => {
                     cfg.pin = PinPolicy::parse(value)
@@ -345,7 +443,7 @@ impl RunConfig {
         let mut s = format!(
             "scheme = \"{scheme}\"\nop = \"{}\"\nsize = [{}, {}, {}]\nt = {}\ngroups = {}\n\
              iters = {}\nsmt = {}\noptimized_kernel = {}\nnt_stores = {}\nbarrier = \"{barrier}\"\n\
-             pin = \"{}\"\n",
+             pin = \"{}\"\nranks = {}\n",
             self.op.as_str(),
             self.size.0,
             self.size.1,
@@ -357,6 +455,7 @@ impl RunConfig {
             self.optimized_kernel,
             self.nt_stores,
             self.pin.as_str(),
+            self.ranks,
         );
         if let Some(m) = &self.machine {
             s += &format!("machine = \"{m}\"\n");
@@ -387,6 +486,8 @@ impl RunConfig {
             );
         }
         BlockWidthError::check(self.scheme, r, ny, self.groups)?;
+        anyhow::ensure!(self.ranks >= 1, "need at least one rank");
+        RankWidthError::check(self.scheme, r, self.halo_depth(), nz, self.ranks)?;
         if let Some(name) = &self.machine {
             anyhow::ensure!(MachineSpec::by_name(name).is_some(), "unknown machine '{name}'");
         }
@@ -413,6 +514,7 @@ mod tests {
             barrier: BarrierKind::Tree,
             machine: Some("Westmere".into()),
             pin: PinPolicy::Scatter,
+            ranks: 2,
         };
         let back = RunConfig::from_text(&cfg.to_text()).unwrap();
         assert_eq!(back.size, cfg.size);
@@ -424,6 +526,7 @@ mod tests {
         assert_eq!(back.barrier, BarrierKind::Tree);
         assert_eq!(back.machine.as_deref(), Some("Westmere"));
         assert_eq!(back.pin, PinPolicy::Scatter);
+        assert_eq!(back.ranks, 2);
         back.validate().unwrap();
     }
 
@@ -586,6 +689,65 @@ mod tests {
         assert_eq!(typed.scheme, Scheme::GsMultiGroup);
         // non-decomposing schemes never produce the error
         cfg.scheme = Scheme::GsWavefront;
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn ranks_key_roundtrips_and_validates_depth() {
+        let cfg = RunConfig { ranks: 3, size: (64, 16, 16), ..Default::default() };
+        let text = cfg.to_text();
+        assert!(text.contains("ranks = 3"), "{text}");
+        let back = RunConfig::from_text(&text).unwrap();
+        assert_eq!(back.ranks, 3);
+        back.validate().unwrap();
+        // unparsed configs default to a single rank
+        let cfg = RunConfig::from_text("scheme = \"gs_baseline\"\n").unwrap();
+        assert_eq!(cfg.ranks, 1);
+        // zero ranks is rejected outright
+        let cfg = RunConfig { ranks: 0, ..Default::default() };
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn halo_depth_rule_per_scheme() {
+        // Jacobi wavefront/multigroup: t·R deep (a whole temporal block
+        // per exchange); baselines and the in-place GS family: R deep.
+        let mut cfg = RunConfig { t: 4, ..Default::default() };
+        cfg.scheme = Scheme::JacobiWavefront;
+        assert_eq!((cfg.rank_step(), cfg.halo_depth()), (4, 4));
+        cfg.scheme = Scheme::JacobiMultiGroup;
+        assert_eq!(cfg.halo_depth(), 4);
+        cfg.scheme = Scheme::JacobiBaseline;
+        assert_eq!((cfg.rank_step(), cfg.halo_depth()), (1, 1));
+        cfg.scheme = Scheme::GsMultiGroup;
+        assert_eq!((cfg.rank_step(), cfg.halo_depth()), (1, 1));
+        cfg.op = OpKind::Laplace13;
+        assert_eq!(cfg.halo_depth(), 2);
+        cfg.scheme = Scheme::JacobiWavefront;
+        assert_eq!(cfg.halo_depth(), 8);
+    }
+
+    #[test]
+    fn rank_width_errors_are_typed() {
+        // radius-1 wavefront Jacobi at t = 4 needs 4 owned planes per
+        // rank; nz = 16 has 14 interior planes — 3 ranks don't fit
+        let mut cfg = RunConfig { size: (16, 16, 16), ranks: 3, ..Default::default() };
+        let err = cfg.validate().unwrap_err();
+        let typed = err.downcast_ref::<RankWidthError>().expect("typed error");
+        assert_eq!(typed.required, 4);
+        assert_eq!(typed.interior, 14);
+        assert_eq!(typed.ranks, 3);
+        cfg.ranks = 2; // 14 >= 4 * 2
+        cfg.validate().unwrap();
+        // the per-sweep GS exchange only needs R planes per rank
+        cfg.scheme = Scheme::GsWavefront;
+        cfg.ranks = 14;
+        cfg.validate().unwrap();
+        cfg.ranks = 15;
+        let err = cfg.validate().unwrap_err();
+        assert!(err.downcast_ref::<RankWidthError>().is_some());
+        // single-rank runs never produce the error
+        cfg.ranks = 1;
         cfg.validate().unwrap();
     }
 

@@ -74,6 +74,7 @@ pub mod barrier;
 pub mod gs_multigroup;
 pub mod pipeline;
 pub mod pool;
+pub mod rank;
 pub mod runner;
 pub mod schedule;
 pub mod solver;

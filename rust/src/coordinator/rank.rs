@@ -1,0 +1,676 @@
+//! The distributed rank layer: multicore temporal blocks *inside* ranks,
+//! overlapped halo exchange *between* them.
+//!
+//! The cluster-scale follow-ups to the source paper (arXiv:0912.4506,
+//! arXiv:1006.3148) wrap the multicore wavefront schemes in a domain
+//! decomposition: each process advances a whole temporal block over its
+//! subdomain, then trades deep halos with its neighbors, so the network
+//! sees one exchange per `t` sweeps instead of one per sweep. This
+//! module reproduces that layer without MPI: a [`RankSet`] shards the
+//! z axis across N *ranks* — threads over shared memory by default,
+//! loopback sockets behind the same [`Transport`] trait to prove
+//! nothing assumes shared memory — each rank owning a full
+//! [`Solver`] session that runs any registered [`Scheme`] on its slab.
+//!
+//! ## The halo-depth rule
+//!
+//! * **Jacobi family** (out of place): ghost depth `rank_step · R` per
+//!   interior interface. A rank receives that many planes, advances a
+//!   whole temporal block of `rank_step` sweeps treating its slab edges
+//!   as frozen, and the stale contamination creeping in from the frozen
+//!   shell at `R` planes per sweep stays strictly inside the ghosts —
+//!   the owned planes are bit-exact by the `depth ≥ step · R` bound
+//!   (ghost planes are recomputed redundantly and overwritten by the
+//!   next exchange).
+//! * **Gauss-Seidel family** (in place, lexicographic): deep halos are
+//!   *unsound* — the new-value recursion would propagate a stale
+//!   lower-edge plane through the entire subdomain in one sweep. These
+//!   schemes exchange `R` planes per sweep in a pipeline: rank `i`
+//!   starts sweep `s` once its left neighbor's sweep-`s` top planes
+//!   arrive (new values), reading its right neighbor's sweep-`s−1`
+//!   bottom planes (old values) — exactly the serial update order, at
+//!   rank granularity. This is [`gs_multigroup`](super::gs_multigroup)'s
+//!   two-sided watermark protocol lifted from y-blocks to z shards.
+//!
+//! Both protocols overlap communication with compute: sends are posted
+//! asynchronously right after the producing sweep, so they are in
+//! flight while the sender (and, pipeline-skewed, the receiver) works
+//! on interior planes; only the boundary read at the top of the next
+//! block actually gates. The [`HaloExchange`] engine counts how often
+//! that gate was already open (`overlapped_recvs`) versus an exposed
+//! wait (`stalled_recvs`) — the observable the overlap test asserts.
+//!
+//! Faults surface, they never deadlock: each rank body runs under
+//! `catch_unwind`, a dying rank drops its transport endpoint, and every
+//! neighbor blocked on it gets a typed [`CommError::Disconnected`]
+//! through the fabric instead of waiting forever.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::anyhow;
+
+use crate::comm::{
+    CommError, HaloExchange, HaloStats, Peer, SharedHaloStats, SharedMemTransport,
+    SocketTransport, Transport,
+};
+use crate::config::RunConfig;
+use crate::simulator::ecm::{KernelProfile, Prediction};
+use crate::simulator::machine::MachineSpec;
+use crate::simulator::perfmodel::{rank_prediction, WavefrontParams};
+use crate::stencil::grid::Grid3;
+use crate::Result;
+
+use super::solver::Solver;
+
+/// One rank's slice of the z axis.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Shard {
+    /// First *owned* global plane.
+    pub z0: usize,
+    /// Owned plane count.
+    pub planes: usize,
+    /// Ghost planes below `z0` (the true `R`-deep Dirichlet shell on
+    /// rank 0, `depth` exchanged planes on interior interfaces).
+    pub d_lo: usize,
+    /// Ghost planes above `z0 + planes`.
+    pub d_hi: usize,
+}
+
+impl Shard {
+    /// First global plane of the local slab (owned minus low ghosts).
+    pub fn slab_z0(&self) -> usize {
+        self.z0 - self.d_lo
+    }
+
+    /// z extent of the local slab.
+    pub fn local_nz(&self) -> usize {
+        self.d_lo + self.planes + self.d_hi
+    }
+}
+
+/// The z-axis decomposition: interior planes dealt contiguously across
+/// ranks (remainder planes to the lowest ranks), every rank's slab
+/// extended by its ghost shells.
+#[derive(Clone, Debug)]
+pub struct RankLayout {
+    /// Operator halo radius `R`.
+    pub radius: usize,
+    /// Ghost depth per interior interface side (the halo-depth rule).
+    pub depth: usize,
+    /// Per-rank shards, ascending in z.
+    pub shards: Vec<Shard>,
+}
+
+impl RankLayout {
+    /// The layout a configuration implies (validated by
+    /// [`RankWidthError`](crate::config::RankWidthError) in
+    /// `RunConfig::validate`).
+    pub fn of(cfg: &RunConfig) -> Self {
+        Self::partition(cfg.size.0, cfg.op.radius(), cfg.halo_depth(), cfg.ranks)
+    }
+
+    /// Partition `nz - 2·radius` interior planes across `ranks` shards
+    /// with `depth` ghost planes per interior interface side.
+    pub fn partition(nz: usize, radius: usize, depth: usize, ranks: usize) -> Self {
+        assert!(ranks >= 1, "need at least one rank");
+        let interior = nz - 2 * radius;
+        let base = interior / ranks;
+        let rem = interior % ranks;
+        let mut z0 = radius;
+        let shards = (0..ranks)
+            .map(|i| {
+                let planes = base + usize::from(i < rem);
+                let shard = Shard {
+                    z0,
+                    planes,
+                    d_lo: if i == 0 { radius } else { depth },
+                    d_hi: if i + 1 == ranks { radius } else { depth },
+                };
+                z0 += planes;
+                shard
+            })
+            .collect();
+        Self { radius, depth, shards }
+    }
+
+    /// Number of ranks.
+    pub fn ranks(&self) -> usize {
+        self.shards.len()
+    }
+}
+
+/// Which fabric wires the ranks together.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum FabricKind {
+    /// mpsc channels between rank threads (the default).
+    #[default]
+    SharedMem,
+    /// Loopback TCP with framed messages — same protocol, no shared
+    /// memory between the endpoints' payloads.
+    SocketLocal,
+}
+
+/// Builder for a [`RankSet`], mirroring [`Solver::builder`].
+pub struct RankSetBuilder {
+    cfg: RunConfig,
+    rhs: Option<(Grid3, f64)>,
+    fabric: FabricKind,
+}
+
+impl RankSetBuilder {
+    /// Right-hand side `f` and mesh factor `h2` for the Jacobi schemes
+    /// (each rank receives the matching slab slice).
+    pub fn rhs(mut self, f: Grid3, h2: f64) -> Self {
+        self.rhs = Some((f, h2));
+        self
+    }
+
+    /// Select the communication fabric (default shared-memory channels).
+    pub fn fabric(mut self, fabric: FabricKind) -> Self {
+        self.fabric = fabric;
+        self
+    }
+
+    /// Validate the configuration, lay out the shards, and build one
+    /// solver session per rank — each with a slab-offset op instance
+    /// (coefficients evaluated in *global* coordinates) and its slice
+    /// of the rhs. The fabric itself is wired lazily on first run.
+    pub fn build(self) -> Result<RankSet> {
+        self.cfg.validate()?;
+        if let Some((f, _)) = &self.rhs {
+            anyhow::ensure!(
+                f.shape() == self.cfg.size,
+                "rhs shape {:?} does not match the configured size {:?}",
+                f.shape(),
+                self.cfg.size
+            );
+        }
+        let (nz, ny, nx) = self.cfg.size;
+        let layout = RankLayout::of(&self.cfg);
+        let (f, h2) = self.rhs.unwrap_or_else(|| (Grid3::zeros(nz, ny, nx), 1.0));
+        let gs = self.cfg.scheme.is_gs();
+        let mut solvers = Vec::with_capacity(layout.ranks());
+        let mut locals = Vec::with_capacity(layout.ranks());
+        for shard in &layout.shards {
+            let local_size = (shard.local_nz(), ny, nx);
+            let mut inner = self.cfg.clone();
+            inner.size = local_size;
+            inner.ranks = 1;
+            let mut b = Solver::builder(&inner)
+                .op(self.cfg.op.instantiate_at(local_size, shard.slab_z0()));
+            if !gs {
+                let mut f_slab = Grid3::zeros(local_size.0, local_size.1, local_size.2);
+                let s = f.idx(shard.slab_z0(), 0, 0);
+                f_slab.data_mut().copy_from_slice(&f.data()[s..s + local_size.0 * ny * nx]);
+                b = b.rhs(f_slab, h2);
+            }
+            solvers.push(b.build()?);
+            locals.push(Grid3::zeros(local_size.0, ny, nx));
+        }
+        let ranks = layout.ranks();
+        Ok(RankSet {
+            cfg: self.cfg,
+            layout,
+            solvers,
+            locals,
+            fabric: (0..ranks).map(|_| None).collect(),
+            fabric_kind: self.fabric,
+            stats: SharedHaloStats::new(),
+            delays: vec![Duration::ZERO; ranks],
+            faults: vec![None; ranks],
+            f,
+            h2,
+        })
+    }
+}
+
+/// A set of rank sessions coupled by halo exchange: the distributed
+/// counterpart of one [`Solver`]. `run` scatters the global grid into
+/// per-rank slabs, drives every rank concurrently under its exchange
+/// protocol, and gathers the owned planes back — bit-exact with the
+/// single-rank solve for every scheme × op.
+pub struct RankSet {
+    cfg: RunConfig,
+    layout: RankLayout,
+    solvers: Vec<Solver>,
+    locals: Vec<Grid3>,
+    fabric: Vec<Option<HaloExchange>>,
+    fabric_kind: FabricKind,
+    stats: Arc<SharedHaloStats>,
+    delays: Vec<Duration>,
+    faults: Vec<Option<usize>>,
+    f: Grid3,
+    h2: f64,
+}
+
+impl RankSet {
+    /// Start building a rank set for `cfg` (`cfg.ranks` shards).
+    pub fn builder(cfg: &RunConfig) -> RankSetBuilder {
+        RankSetBuilder { cfg: cfg.clone(), rhs: None, fabric: FabricKind::default() }
+    }
+
+    /// Number of ranks.
+    pub fn ranks(&self) -> usize {
+        self.layout.ranks()
+    }
+
+    /// The z decomposition.
+    pub fn layout(&self) -> &RankLayout {
+        &self.layout
+    }
+
+    /// Halo-traffic counters of the most recent [`RankSet::run`].
+    pub fn halo_stats(&self) -> HaloStats {
+        self.stats.snapshot()
+    }
+
+    /// Artificially slow `rank`'s compute by `delay` per temporal block
+    /// — a skew hook for demonstrating that neighbor messages land
+    /// while a rank computes (its receives then count as overlapped).
+    pub fn set_compute_delay(&mut self, rank: usize, delay: Duration) {
+        self.delays[rank] = delay;
+    }
+
+    /// Inject a fault: `rank` panics at the start of temporal block
+    /// `block` (1-based). Its neighbors must surface
+    /// [`CommError::Disconnected`], not deadlock. The fabric is rebuilt
+    /// on the next run; clear with [`RankSet::clear_fault`].
+    pub fn set_fault(&mut self, rank: usize, block: usize) {
+        self.faults[rank] = Some(block);
+    }
+
+    /// Remove an injected fault.
+    pub fn clear_fault(&mut self, rank: usize) {
+        self.faults[rank] = None;
+    }
+
+    /// Perform `iters` updates of `u` in place across all ranks.
+    ///
+    /// On error (rank panic, peer disconnect, protocol violation) `u`
+    /// is left untouched — owned planes are only gathered back after
+    /// every rank finished cleanly.
+    pub fn run(&mut self, u: &mut Grid3, iters: usize) -> Result<()> {
+        anyhow::ensure!(
+            u.shape() == self.cfg.size,
+            "grid shape {:?} does not match the configured size {:?}",
+            u.shape(),
+            self.cfg.size
+        );
+        if iters == 0 {
+            return Ok(());
+        }
+        if self.ranks() == 1 {
+            return self.solvers[0].run(u, iters);
+        }
+        let gs = self.cfg.scheme.is_gs();
+        let step = self.cfg.rank_step();
+        let (passes, per_pass) = if gs {
+            (iters, 1)
+        } else {
+            anyhow::ensure!(
+                iters % step == 0,
+                "iters = {iters} must be a multiple of the temporal block depth t = {step}"
+            );
+            (iters / step, step)
+        };
+        self.ensure_fabric()?;
+        self.stats.reset();
+        for (shard, local) in self.layout.shards.iter().zip(&mut self.locals) {
+            let s = u.idx(shard.slab_z0(), 0, 0);
+            local.data_mut().copy_from_slice(&u.data()[s..s + local.len()]);
+        }
+        let delays = &self.delays;
+        let faults = &self.faults;
+        let shards = &self.layout.shards;
+        let results: Vec<(Result<()>, Option<HaloExchange>)> = std::thread::scope(|scope| {
+            let handles: Vec<_> = self
+                .solvers
+                .iter_mut()
+                .zip(self.locals.iter_mut())
+                .zip(self.fabric.iter_mut())
+                .enumerate()
+                .map(|(rank, ((solver, local), slot))| {
+                    let engine = slot.take().expect("fabric wired by ensure_fabric");
+                    let task = RankTask {
+                        solver,
+                        local,
+                        shard: shards[rank],
+                        gs,
+                        passes,
+                        per_pass,
+                        delay: delays[rank],
+                        fault: faults[rank],
+                    };
+                    scope.spawn(move || {
+                        // the engine moves *into* the unwind scope so a
+                        // panicking rank drops its endpoint — that is
+                        // what turns neighbors' blocked receives into
+                        // typed Disconnected errors instead of deadlock
+                        match catch_unwind(AssertUnwindSafe(move || {
+                            let mut engine = engine;
+                            let r = drive_rank(task, &mut engine);
+                            (r, engine)
+                        })) {
+                            Ok((r, engine)) => (r, Some(engine)),
+                            Err(payload) => {
+                                (Err(anyhow!("rank {rank} panicked: {}", panic_text(&payload))), None)
+                            }
+                        }
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("rank wrapper is panic-free")).collect()
+        });
+        let mut comm_err = None;
+        let mut other_err = None;
+        for (rank, (res, engine)) in results.into_iter().enumerate() {
+            match res {
+                Ok(()) => self.fabric[rank] = engine,
+                Err(e) => {
+                    if comm_err.is_none() && e.downcast_ref::<CommError>().is_some() {
+                        comm_err = Some(e);
+                    } else if other_err.is_none() {
+                        other_err = Some(e);
+                    }
+                }
+            }
+        }
+        if let Some(e) = comm_err.or(other_err) {
+            // some endpoint died: the surviving half-open channels are
+            // useless, force a full rebuild on the next run
+            self.fabric.iter_mut().for_each(|slot| *slot = None);
+            return Err(e);
+        }
+        for (shard, local) in self.layout.shards.iter().zip(&self.locals) {
+            let src = local.idx(shard.d_lo, 0, 0);
+            let dst = u.idx(shard.z0, 0, 0);
+            let n = shard.planes * u.ny * u.nx;
+            u.data_mut()[dst..dst + n].copy_from_slice(&local.data()[src..src + n]);
+        }
+        Ok(())
+    }
+
+    /// The serial reference [`RankSet::run`] must match bit-exactly
+    /// (the single-rank scheme reference on the full domain).
+    pub fn reference(&self, u0: &Grid3, iters: usize) -> Grid3 {
+        let mut cfg = self.cfg.clone();
+        cfg.ranks = 1;
+        let mut b = Solver::builder(&cfg);
+        if !cfg.scheme.is_gs() {
+            b = b.rhs(self.f.clone(), self.h2);
+        }
+        b.build().expect("cfg already validated").reference(u0, iters)
+    }
+
+    /// Modeled MLUP/s on a Tab. 1 machine: the multigroup model plus
+    /// the halo-traffic leg (`(ranks × groups × t)` accounting).
+    pub fn predict(&self, machine: &MachineSpec) -> Prediction {
+        let p = WavefrontParams {
+            t: self.cfg.t,
+            groups: self.cfg.groups,
+            smt: self.cfg.smt,
+            kernel: self.cfg.scheme.kernel(self.cfg.optimized_kernel),
+            store: self.cfg.store_mode(),
+            barrier: self.cfg.barrier,
+        };
+        let profile = KernelProfile::of_op(
+            self.cfg.op,
+            self.cfg.scheme.is_gs(),
+            self.cfg.optimized_kernel,
+            machine.arch,
+        );
+        rank_prediction(
+            machine,
+            &p,
+            &profile,
+            self.cfg.size,
+            self.cfg.ranks,
+            self.cfg.halo_depth(),
+            self.cfg.rank_step(),
+        )
+    }
+
+    fn ensure_fabric(&mut self) -> Result<()> {
+        if self.fabric.iter().all(Option::is_some) {
+            return Ok(());
+        }
+        let n = self.ranks();
+        let endpoints: Vec<Box<dyn Transport>> = match self.fabric_kind {
+            FabricKind::SharedMem => SharedMemTransport::fabric(n)
+                .into_iter()
+                .map(|tp| Box::new(tp) as Box<dyn Transport>)
+                .collect(),
+            FabricKind::SocketLocal => SocketTransport::fabric_local(n)
+                .map_err(|e| anyhow!(CommError::Fabric(format!("socket fabric: {e}"))))?
+                .into_iter()
+                .map(|tp| Box::new(tp) as Box<dyn Transport>)
+                .collect(),
+        };
+        self.fabric = endpoints
+            .into_iter()
+            .map(|tp| Some(HaloExchange::new(tp, Arc::clone(&self.stats))))
+            .collect();
+        Ok(())
+    }
+}
+
+/// Everything one rank thread needs for a run.
+struct RankTask<'a> {
+    solver: &'a mut Solver,
+    local: &'a mut Grid3,
+    shard: Shard,
+    gs: bool,
+    passes: usize,
+    per_pass: usize,
+    delay: Duration,
+    fault: Option<usize>,
+}
+
+fn panic_text(payload: &(dyn std::any::Any + Send)) -> String {
+    payload
+        .downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| payload.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "opaque panic payload".into())
+}
+
+/// Copy `n` whole planes starting at `z0` out of the slab.
+fn read_planes(g: &Grid3, z0: usize, n: usize) -> Vec<f64> {
+    let s = g.idx(z0, 0, 0);
+    g.data()[s..s + n * g.ny * g.nx].to_vec()
+}
+
+/// Overwrite `n` whole planes starting at `z0` with a halo payload.
+fn write_planes(g: &mut Grid3, z0: usize, n: usize, planes: &[f64]) -> Result<()> {
+    let want = n * g.ny * g.nx;
+    anyhow::ensure!(
+        planes.len() == want,
+        CommError::Fabric(format!("halo payload holds {} values, expected {want}", planes.len()))
+    );
+    let s = g.idx(z0, 0, 0);
+    g.data_mut()[s..s + want].copy_from_slice(planes);
+    Ok(())
+}
+
+/// One rank's protocol loop. Errors are `anyhow` with a downcastable
+/// [`CommError`] root wherever the fabric is the cause.
+fn drive_rank(task: RankTask<'_>, engine: &mut HaloExchange) -> Result<()> {
+    let RankTask { solver, local, shard, gs, passes, per_pass, delay, fault } = task;
+    let nzl = local.nz;
+    for pass in 1..=passes {
+        if fault == Some(pass) {
+            std::panic::panic_any(format!(
+                "injected fault: rank {} dies at block {pass}",
+                engine.rank()
+            ));
+        }
+        if gs {
+            // pipelined per-sweep exchange: left neighbor's *new* top
+            // planes gate this sweep; right neighbor's previous-sweep
+            // bottom planes refresh the old-value side
+            if engine.has(Peer::Left) {
+                let planes = engine.recv(Peer::Left).map_err(anyhow::Error::new)?;
+                write_planes(local, 0, shard.d_lo, &planes)?;
+            }
+            if engine.has(Peer::Right) && pass >= 2 {
+                let planes = engine.recv(Peer::Right).map_err(anyhow::Error::new)?;
+                write_planes(local, nzl - shard.d_hi, shard.d_hi, &planes)?;
+            }
+        } else if pass >= 2 {
+            // deep-halo exchange: refresh both ghost shells with the
+            // neighbors' post-block owned planes before the next block
+            if engine.has(Peer::Left) {
+                let planes = engine.recv(Peer::Left).map_err(anyhow::Error::new)?;
+                write_planes(local, 0, shard.d_lo, &planes)?;
+            }
+            if engine.has(Peer::Right) {
+                let planes = engine.recv(Peer::Right).map_err(anyhow::Error::new)?;
+                write_planes(local, nzl - shard.d_hi, shard.d_hi, &planes)?;
+            }
+        }
+        if !delay.is_zero() {
+            std::thread::sleep(delay);
+        }
+        solver.run(local, per_pass)?;
+        if gs {
+            // always feed the right neighbor's next sweep; feed the
+            // left neighbor's old-value side unless this was the last
+            if engine.has(Peer::Right) {
+                let top = read_planes(local, nzl - 2 * shard.d_hi, shard.d_hi);
+                engine.send(Peer::Right, top).map_err(anyhow::Error::new)?;
+            }
+            if engine.has(Peer::Left) && pass < passes {
+                let bottom = read_planes(local, shard.d_lo, shard.d_lo);
+                engine.send(Peer::Left, bottom).map_err(anyhow::Error::new)?;
+            }
+        } else if pass < passes {
+            // post both halves right after the block: the payloads are
+            // in flight while this rank (and its skewed neighbors)
+            // keep computing
+            if engine.has(Peer::Left) {
+                let bottom = read_planes(local, shard.d_lo, shard.d_lo);
+                engine.send(Peer::Left, bottom).map_err(anyhow::Error::new)?;
+            }
+            if engine.has(Peer::Right) {
+                let top = read_planes(local, nzl - 2 * shard.d_hi, shard.d_hi);
+                engine.send(Peer::Right, top).map_err(anyhow::Error::new)?;
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Scheme;
+
+    #[test]
+    fn partition_covers_the_interior_contiguously() {
+        for (nz, radius, depth, ranks) in
+            [(20, 1, 4, 3), (33, 2, 2, 4), (11, 1, 1, 1), (26, 1, 8, 2)]
+        {
+            let l = RankLayout::partition(nz, radius, depth, ranks);
+            assert_eq!(l.ranks(), ranks);
+            assert_eq!(l.shards[0].z0, radius, "first shard starts at the interior");
+            let mut z = radius;
+            for (i, s) in l.shards.iter().enumerate() {
+                assert_eq!(s.z0, z, "shard {i} contiguous");
+                z += s.planes;
+                assert_eq!(s.d_lo, if i == 0 { radius } else { depth });
+                assert_eq!(s.d_hi, if i + 1 == ranks { radius } else { depth });
+                assert_eq!(s.local_nz(), s.d_lo + s.planes + s.d_hi);
+                assert_eq!(s.slab_z0() + s.d_lo, s.z0);
+            }
+            assert_eq!(z, nz - radius, "shards cover every interior plane");
+        }
+    }
+
+    #[test]
+    fn remainder_planes_go_to_the_lowest_ranks() {
+        let l = RankLayout::partition(2 + 11, 1, 1, 3); // 11 interior planes
+        let counts: Vec<usize> = l.shards.iter().map(|s| s.planes).collect();
+        assert_eq!(counts, vec![4, 4, 3]);
+    }
+
+    #[test]
+    fn two_rank_jacobi_wavefront_matches_single_rank() {
+        let cfg = RunConfig {
+            scheme: Scheme::JacobiWavefront,
+            size: (20, 9, 8),
+            t: 2,
+            iters: 6,
+            ranks: 2,
+            ..Default::default()
+        };
+        let f = Grid3::random(20, 9, 8, 31);
+        let mut set = RankSet::builder(&cfg).rhs(f, 0.7).build().unwrap();
+        let u0 = Grid3::random(20, 9, 8, 32);
+        let mut u = u0.clone();
+        set.run(&mut u, 6).unwrap();
+        let want = set.reference(&u0, 6);
+        assert_eq!(u.max_abs_diff(&want), 0.0, "bit-exact across ranks");
+        let stats = set.halo_stats();
+        assert!(stats.messages > 0 && stats.payload_bytes > 0, "halos actually moved");
+    }
+
+    #[test]
+    fn three_rank_gs_multigroup_matches_single_rank() {
+        let cfg = RunConfig {
+            scheme: Scheme::GsMultiGroup,
+            size: (16, 14, 9),
+            t: 3,
+            groups: 2,
+            iters: 5,
+            ranks: 3,
+            ..Default::default()
+        };
+        let mut set = RankSet::builder(&cfg).build().unwrap();
+        let u0 = Grid3::random(16, 14, 9, 33);
+        let mut u = u0.clone();
+        set.run(&mut u, 5).unwrap();
+        let want = set.reference(&u0, 5);
+        assert_eq!(u.max_abs_diff(&want), 0.0);
+        // GS pipeline: each of the 2 interfaces moves R planes per sweep
+        assert_eq!(set.halo_stats().messages, 2 * (5 + 4));
+    }
+
+    #[test]
+    fn single_rank_short_circuits_to_the_plain_solver() {
+        let cfg = RunConfig { size: (12, 10, 9), t: 2, iters: 4, ranks: 1, ..Default::default() };
+        let mut set = RankSet::builder(&cfg).build().unwrap();
+        let u0 = Grid3::random(12, 10, 9, 34);
+        let mut u = u0.clone();
+        set.run(&mut u, 4).unwrap();
+        assert_eq!(u.max_abs_diff(&set.reference(&u0, 4)), 0.0);
+        assert_eq!(set.halo_stats().messages, 0, "no fabric traffic for one rank");
+    }
+
+    #[test]
+    fn grid_is_untouched_when_a_rank_dies() {
+        let cfg = RunConfig {
+            scheme: Scheme::JacobiBaseline,
+            size: (14, 8, 8),
+            t: 1,
+            iters: 4,
+            ranks: 2,
+            ..Default::default()
+        };
+        let mut set = RankSet::builder(&cfg).build().unwrap();
+        set.set_fault(1, 2);
+        let u0 = Grid3::random(14, 8, 8, 35);
+        let mut u = u0.clone();
+        let err = set.run(&mut u, 4).unwrap_err();
+        assert!(
+            err.downcast_ref::<CommError>().is_some(),
+            "neighbor failure is a typed CommError, got: {err:#}"
+        );
+        assert_eq!(u.max_abs_diff(&u0), 0.0, "failed runs must not partially gather");
+        // the fabric rebuilds and the set is usable again
+        set.clear_fault(1);
+        set.run(&mut u, 4).unwrap();
+        assert_eq!(u.max_abs_diff(&set.reference(&u0, 4)), 0.0);
+    }
+}

@@ -32,8 +32,8 @@ use crate::simulator::perfmodel::{
 };
 use crate::stencil::grid::Grid3;
 use crate::stencil::op::{
-    op_gs_sweeps, op_jacobi_steps, op_jacobi_steps_stored, ConstLaplace7, Laplace13, OpFamily,
-    OpInstance, OpKind, VarCoeff7,
+    op_gs_sweeps, op_jacobi_steps, op_jacobi_steps_stored, ConstLaplace7, FusedResidual7,
+    Laplace13, OpFamily, OpInstance, OpKind, VarCoeff7,
 };
 use crate::Result;
 
@@ -457,23 +457,25 @@ impl<O: OpFamily> SchemeRunner for GsMultiGroupRunner<O> {
 /// `SchemeRunner` + one `op_column!` row. The launcher and CLI are
 /// data-driven over this slice.
 macro_rules! op_column {
-    ($runner:ident, $c7:ident, $vc:ident, $l13:ident) => {
+    ($runner:ident, $c7:ident, $vc:ident, $l13:ident, $f7:ident) => {
         static $c7: $runner<ConstLaplace7> = $runner(PhantomData);
         static $vc: $runner<VarCoeff7> = $runner(PhantomData);
         static $l13: $runner<Laplace13> = $runner(PhantomData);
+        static $f7: $runner<FusedResidual7> = $runner(PhantomData);
     };
 }
 
-op_column!(JacobiBaselineRunner, JB_C7, JB_VC, JB_L13);
-op_column!(JacobiWavefrontRunner, JW_C7, JW_VC, JW_L13);
-op_column!(JacobiMultiGroupRunner, JM_C7, JM_VC, JM_L13);
-op_column!(GsBaselineRunner, GB_C7, GB_VC, GB_L13);
-op_column!(GsWavefrontRunner, GW_C7, GW_VC, GW_L13);
-op_column!(GsMultiGroupRunner, GM_C7, GM_VC, GM_L13);
+op_column!(JacobiBaselineRunner, JB_C7, JB_VC, JB_L13, JB_F7);
+op_column!(JacobiWavefrontRunner, JW_C7, JW_VC, JW_L13, JW_F7);
+op_column!(JacobiMultiGroupRunner, JM_C7, JM_VC, JM_L13, JM_F7);
+op_column!(GsBaselineRunner, GB_C7, GB_VC, GB_L13, GB_F7);
+op_column!(GsWavefrontRunner, GW_C7, GW_VC, GW_L13, GW_F7);
+op_column!(GsMultiGroupRunner, GM_C7, GM_VC, GM_L13, GM_F7);
 
 static REGISTRY: &[&dyn SchemeRunner] = &[
-    &JB_C7, &JB_VC, &JB_L13, &JW_C7, &JW_VC, &JW_L13, &JM_C7, &JM_VC, &JM_L13, &GB_C7, &GB_VC,
-    &GB_L13, &GW_C7, &GW_VC, &GW_L13, &GM_C7, &GM_VC, &GM_L13,
+    &JB_C7, &JB_VC, &JB_L13, &JB_F7, &JW_C7, &JW_VC, &JW_L13, &JW_F7, &JM_C7, &JM_VC, &JM_L13,
+    &JM_F7, &GB_C7, &GB_VC, &GB_L13, &GB_F7, &GW_C7, &GW_VC, &GW_L13, &GW_F7, &GM_C7, &GM_VC,
+    &GM_L13, &GM_F7,
 ];
 
 /// All registered runners (one per scheme × op pair).
@@ -519,15 +521,15 @@ mod tests {
             }
         }
         assert_eq!(runners().count(), Scheme::ALL.len() * OpKind::ALL.len());
-        // 6 schemes x 3 ops, derived from the two ALL lists, never from a
+        // 6 schemes x 4 ops, derived from the two ALL lists, never from a
         // hand-maintained count
-        assert_eq!(runners().count(), 18);
+        assert_eq!(runners().count(), 24);
     }
 
     #[test]
     fn every_registered_runner_predicts_on_every_testbed_machine() {
         // registry-coverage half of the config/CLI round-trip satellite:
-        // all 18 entries resolve and their model leg works everywhere
+        // all 24 entries resolve and their model leg works everywhere
         for m in MachineSpec::testbed() {
             for scheme in Scheme::ALL {
                 for op in OpKind::ALL {

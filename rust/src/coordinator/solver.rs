@@ -43,6 +43,7 @@ pub struct SolverBuilder {
     pool: Option<WorkerPool>,
     pin: PinPolicy,
     rhs: Option<(Grid3, f64)>,
+    op: Option<OpInstance>,
 }
 
 impl SolverBuilder {
@@ -72,6 +73,18 @@ impl SolverBuilder {
     /// `h2 = 1` — the homogeneous problem.
     pub fn rhs(mut self, f: Grid3, h2: f64) -> Self {
         self.rhs = Some((f, h2));
+        self
+    }
+
+    /// Provide a pre-built op instance instead of the default
+    /// full-domain instantiation. The rank decomposition uses this to
+    /// hand each per-rank solver a *slab* instance
+    /// ([`OpKind::instantiate_at`](crate::stencil::op::OpKind::instantiate_at))
+    /// whose per-site state is evaluated in global coordinates —
+    /// `build` still checks the instance's kind against the config and
+    /// validates it on the configured domain.
+    pub fn op(mut self, op: OpInstance) -> Self {
+        self.op = Some(op);
         self
     }
 
@@ -121,7 +134,19 @@ impl SolverBuilder {
             None => pool.clear_start_hook(),
         }
         pool.ensure_workers(runner.team_size(&self.cfg));
-        let op = self.cfg.op.instantiate(self.cfg.size);
+        let op = match self.op {
+            Some(op) => {
+                anyhow::ensure!(
+                    op.kind() == self.cfg.op,
+                    "injected op instance is {:?} but the config asks for {:?}",
+                    op.kind(),
+                    self.cfg.op
+                );
+                op.as_dyn().validate_domain(self.cfg.size)?;
+                op
+            }
+            None => self.cfg.op.instantiate(self.cfg.size),
+        };
         Ok(Solver { cfg: self.cfg, runner, op, pool, f, h2 })
     }
 }
@@ -143,7 +168,7 @@ impl Solver {
     /// Start building a session for `cfg` (the config is cloned; the
     /// builder seeds its pin policy from `cfg.pin`).
     pub fn builder(cfg: &RunConfig) -> SolverBuilder {
-        SolverBuilder { pin: cfg.pin, cfg: cfg.clone(), pool: None, rhs: None }
+        SolverBuilder { pin: cfg.pin, cfg: cfg.clone(), pool: None, rhs: None, op: None }
     }
 
     /// The scheme this session executes.
@@ -320,6 +345,27 @@ mod tests {
                 assert_eq!(u.max_abs_diff(&want), 0.0, "{scheme:?} x {op:?}");
             }
         }
+    }
+
+    #[test]
+    fn injected_op_instances_are_checked_and_used() {
+        // kind mismatch fails at build
+        let mut c = cfg(Scheme::JacobiWavefront, (10, 9, 8));
+        c.op = OpKind::VarCoeff7;
+        let wrong = OpKind::ConstLaplace7.instantiate((10, 9, 8));
+        assert!(Solver::builder(&c).op(wrong).build().is_err());
+        // a wrong-shape coefficient grid fails at build, not in a worker
+        let bad = OpKind::VarCoeff7.instantiate((8, 8, 8));
+        assert!(Solver::builder(&c).op(bad).build().is_err());
+        // a matching instance is used verbatim: an offset slab instance
+        // produces different (offset-field) values than the default
+        let u0 = Grid3::random(10, 9, 8, 21);
+        let mut plain = u0.clone();
+        Solver::builder(&c).build().unwrap().run(&mut plain, 4).unwrap();
+        let slab = OpKind::VarCoeff7.instantiate_at((10, 9, 8), 1);
+        let mut shifted = u0.clone();
+        Solver::builder(&c).op(slab).build().unwrap().run(&mut shifted, 4).unwrap();
+        assert!(shifted.max_abs_diff(&plain) > 0.0, "offset coefficients must differ");
     }
 
     #[test]

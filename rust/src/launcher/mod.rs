@@ -15,6 +15,7 @@
 
 use crate::config::{RunConfig, Scheme};
 use crate::coordinator::pool::panic_message;
+use crate::coordinator::rank::RankSet;
 use crate::coordinator::solver::Solver;
 use crate::metrics::{mlups, timed};
 use crate::stencil::grid::Grid3;
@@ -30,6 +31,8 @@ pub struct RunReport {
     pub iters: usize,
     pub t: usize,
     pub groups: usize,
+    /// z-axis rank shards the experiment ran across (1 = plain solver).
+    pub ranks: usize,
     /// Measured on this host (functional leg).
     pub host_mlups: f64,
     pub host_seconds: f64,
@@ -61,18 +64,25 @@ pub fn run_experiment(cfg: &RunConfig) -> Result<RunReport> {
     // Each experiment gets its own session (validated and team-spawned at
     // build, before the timer starts) so parallel sweeps really run side
     // by side and the timed section never includes thread creation or
-    // waiting for another experiment's team.
-    let mut solver = Solver::builder(cfg).rhs(f, h2).build()?;
-    let mut u = u0.clone();
-    let (res, dt) = timed(|| solver.run(&mut u, cfg.iters));
-    res?;
-
-    // ---- verification against the serial reference
-    let reference = solver.reference(&u0, cfg.iters);
-    let diff = u.max_abs_diff(&reference);
-
-    // ---- prediction leg on the paper testbed (the runner's model leg)
-    let predicted = cfg.machine_spec().map(|m| solver.predict(&m));
+    // waiting for another experiment's team. `ranks > 1` swaps the
+    // single solver for a RankSet of halo-exchange-coupled sessions;
+    // verification and the model leg switch with it (the rank model
+    // adds the halo-traffic term to the multigroup prediction).
+    let (dt, diff, predicted) = if cfg.ranks > 1 {
+        let mut set = RankSet::builder(cfg).rhs(f, h2).build()?;
+        let mut u = u0.clone();
+        let (res, dt) = timed(|| set.run(&mut u, cfg.iters));
+        res?;
+        let diff = u.max_abs_diff(&set.reference(&u0, cfg.iters));
+        (dt, diff, cfg.machine_spec().map(|m| set.predict(&m).mlups))
+    } else {
+        let mut solver = Solver::builder(cfg).rhs(f, h2).build()?;
+        let mut u = u0.clone();
+        let (res, dt) = timed(|| solver.run(&mut u, cfg.iters));
+        res?;
+        let diff = u.max_abs_diff(&solver.reference(&u0, cfg.iters));
+        (dt, diff, cfg.machine_spec().map(|m| solver.predict(&m)))
+    };
 
     // radius-aware update count: a radius-R op only updates the
     // (n-2R)^3 deep interior, so wider halos must not inflate MLUP/s
@@ -85,6 +95,7 @@ pub fn run_experiment(cfg: &RunConfig) -> Result<RunReport> {
         iters: cfg.iters,
         t: cfg.t,
         groups: cfg.groups,
+        ranks: cfg.ranks,
         host_mlups: mlups(updates, dt),
         host_seconds: dt.as_secs_f64(),
         verification_diff: diff,
@@ -128,11 +139,11 @@ pub fn sweep(configs: Vec<RunConfig>, max_parallel: usize) -> Vec<Result<RunRepo
 /// Render reports as a CSV block (one row per report).
 pub fn to_csv(reports: &[RunReport]) -> String {
     let mut s = String::from(
-        "scheme,op,nz,ny,nx,iters,t,groups,host_mlups,verify_diff,machine,predicted_mlups\n",
+        "scheme,op,nz,ny,nx,iters,t,groups,ranks,host_mlups,verify_diff,machine,predicted_mlups\n",
     );
     for r in reports {
         s += &format!(
-            "{:?},{},{},{},{},{},{},{},{:.2},{:.3e},{},{}\n",
+            "{:?},{},{},{},{},{},{},{},{},{:.2},{:.3e},{},{}\n",
             r.scheme,
             r.op.as_str(),
             r.size.0,
@@ -141,6 +152,7 @@ pub fn to_csv(reports: &[RunReport]) -> String {
             r.iters,
             r.t,
             r.groups,
+            r.ranks,
             r.host_mlups,
             r.verification_diff,
             r.machine.as_deref().unwrap_or("-"),
@@ -196,6 +208,27 @@ mod tests {
                 let p = report.predicted_mlups.unwrap();
                 assert!(p.is_finite() && p > 0.0, "{scheme:?} x {op:?}: {p}");
             }
+        }
+    }
+
+    #[test]
+    fn multi_rank_experiments_run_verified_with_rank_predictions() {
+        // the launcher leg of the rank subsystem: ranks > 1 routes
+        // through the RankSet, stays bit-exact, reports its rank count
+        // in the CSV, and gets the halo-aware prediction
+        for scheme in [Scheme::JacobiWavefront, Scheme::GsMultiGroup] {
+            let mut c = cfg(scheme);
+            c.size = (24, 12, 12);
+            c.ranks = 2;
+            c.iters = 8; // two temporal blocks -> at least one real exchange
+            let report = run_experiment(&c).unwrap();
+            assert_eq!(report.verification_diff, 0.0, "{scheme:?} must be exact across ranks");
+            assert_eq!(report.ranks, 2);
+            let p = report.predicted_mlups.unwrap();
+            assert!(p.is_finite() && p > 0.0);
+            let csv = to_csv(&[report]);
+            assert!(csv.starts_with("scheme,op,nz,ny,nx,iters,t,groups,ranks,"));
+            assert!(csv.lines().nth(1).unwrap().contains(",2,"), "rank column present:\n{csv}");
         }
     }
 

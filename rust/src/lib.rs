@@ -60,6 +60,7 @@
 
 pub mod benchkit;
 pub mod cli;
+pub mod comm;
 pub mod config;
 pub mod coordinator;
 pub mod figures;

@@ -33,18 +33,22 @@ USAGE: stencilwave <COMMAND> [FLAGS]
 COMMANDS:
   run        run one experiment
                --config <file> | --scheme <s> --n <N> --t <T> --groups <G>
-               --iters <I> --op <o> --machine <name>
+               --iters <I> --op <o> --ranks <R> --machine <name>
                --pin <none|compact|scatter|smtpair> --smt --csv
                schemes: jacobi-baseline jacobi-wavefront jacobi-multigroup
                         gs-baseline gs-wavefront gs-multigroup
                ops:     laplace7 (paper 7-point) varcoeff (Helmholtz-style
                         coefficient grid) laplace13 (4th-order, radius 2)
+                        fused7 (residual folded into the update sweep)
                --pin places workers on cores (cache-group and SMT aware;
                from the Tab. 1 model when --machine names one, else from
                sysfs; Linux backend, no-op elsewhere)
                --smt co-schedules sibling hardware threads: with --pin none
                it implies the smtpair placement (adjacent workers share one
                core) and widens the modeled thread count
+               --ranks shards the z axis across R halo-exchange-coupled
+               rank sessions (deep 2R-per-sweep halos for the Jacobi
+               family, per-sweep R halos for Gauss-Seidel)
   figures    regenerate paper tables/figures
                [id|all] --out-dir <dir>
                ids: tab1 fig3a fig3b fig4a fig4b fig8 fig9 fig10 barrier
@@ -57,7 +61,8 @@ COMMANDS:
 
 fn cmd_run(args: &Args) -> Result<()> {
     args.check_known(&[
-        "config", "scheme", "op", "n", "t", "groups", "iters", "machine", "csv", "smt", "pin",
+        "config", "scheme", "op", "n", "t", "groups", "iters", "ranks", "machine", "csv", "smt",
+        "pin",
     ])?;
     let mut cfg = match args.get("config") {
         Some(path) => RunConfig::load(std::path::Path::new(path))?,
@@ -82,6 +87,10 @@ fn cmd_run(args: &Args) -> Result<()> {
     if let Some(pin) = args.get("pin") {
         // the flag overrides the config file's `pin = "..."` key
         cfg.pin = PinPolicy::parse(pin)?;
+    }
+    if args.get("ranks").is_some() {
+        // the flag overrides the config file's `ranks = N` key
+        cfg.ranks = args.get_usize("ranks", 1)?;
     }
     let report = launcher::run_experiment(&cfg)?;
     if args.get_bool("csv") {

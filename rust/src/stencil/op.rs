@@ -299,9 +299,17 @@ impl VarCoeff7 {
     /// Deterministic smooth positive default coefficient field for a
     /// `(nz, ny, nx)` domain — what the config/CLI path instantiates.
     pub fn default_for(size: (usize, usize, usize)) -> Self {
+        Self::default_for_offset(size, 0)
+    }
+
+    /// Default field for a z slab starting at global plane `z_offset`:
+    /// the per-site formula is evaluated in global coordinates, so slab
+    /// coefficients match the corresponding planes of the full-domain
+    /// field exactly (the rank decomposition depends on this).
+    pub fn default_for_offset(size: (usize, usize, usize), z_offset: usize) -> Self {
         let (nz, ny, nx) = size;
         Self::new(Grid3::from_fn(nz, ny, nx, |k, j, i| {
-            0.25 + 0.125 * (((k + 2 * j + 3 * i) % 8) as f64)
+            0.25 + 0.125 * ((((k + z_offset) + 2 * j + 3 * i) % 8) as f64)
         }))
     }
 
@@ -419,6 +427,91 @@ impl StencilOp for Laplace13 {
     }
 }
 
+/// Fused residual + correction form of the 7-point Laplace update
+/// (ROADMAP carry-over): instead of solving the stencil equation for
+/// the center directly, the kernel computes the pointwise residual
+/// `res = h²f + (Σ neighbors − 6c)` and applies the diagonal-scaled
+/// correction `c + res/6` in the same pass — the building block of
+/// residual-based smoothers, fused so the residual never round-trips
+/// through memory as its own grid (zero extra streams in the
+/// [`TrafficSignature`], three extra flops).
+///
+/// Algebraically this equals the plain Jacobi update; in floating
+/// point the different association produces different bits, so the op
+/// is its own parity family (the serial references in this module run
+/// the same fused code). Both update flavours are plain scalar loops —
+/// the `store` flavour is accepted for interface uniformity but the
+/// values are bit-identical either way and the write path is the
+/// compiler's.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FusedResidual7;
+
+impl StencilOp for FusedResidual7 {
+    #[inline]
+    fn radius(&self) -> usize {
+        1
+    }
+    fn signature(&self) -> TrafficSignature {
+        OpKind::FusedResidual7.signature()
+    }
+    fn gs_signature(&self) -> TrafficSignature {
+        OpKind::FusedResidual7.gs_signature()
+    }
+    #[inline]
+    fn line_update(
+        &self,
+        dst: &mut [f64],
+        win: &StarWindow<'_>,
+        rhs: &[f64],
+        h2: f64,
+        _k: usize,
+        _j: usize,
+        _store: StoreMode,
+    ) {
+        let nx = dst.len();
+        if nx < 2 {
+            return;
+        }
+        for i in 1..nx - 1 {
+            let c = win.center[i];
+            let sum = win.center[i - 1]
+                + win.center[i + 1]
+                + win.ym[0][i]
+                + win.yp[0][i]
+                + win.zm[0][i]
+                + win.zp[0][i];
+            let res = h2 * rhs[i] + (sum - 6.0 * c);
+            dst[i] = c + res / 6.0;
+        }
+    }
+    #[inline]
+    fn gs_line_update(
+        &self,
+        line: &mut [f64],
+        win: &GsWindow<'_>,
+        _k: usize,
+        _j: usize,
+        _kernel: GsKernel,
+    ) {
+        let nx = line.len();
+        if nx < 2 {
+            return;
+        }
+        // homogeneous relaxation: residual of the already-updated
+        // (lexicographic) neighborhood, corrected in place
+        for i in 1..nx - 1 {
+            let c = line[i];
+            let sum = line[i - 1]
+                + line[i + 1]
+                + win.ym_new[0][i]
+                + win.yp_old[0][i]
+                + win.zm_new[0][i]
+                + win.zp_old[0][i];
+            line[i] = c + (sum - 6.0 * c) / 6.0;
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // op identity: config-level kind, runtime instance, static family
 
@@ -432,19 +525,23 @@ pub enum OpKind {
     VarCoeff7,
     /// 4th-order 13-point radius-2 Laplacian.
     Laplace13,
+    /// Fused residual + correction 7-point update.
+    FusedResidual7,
 }
 
 impl OpKind {
     /// Every registered op kind.
-    pub const ALL: [OpKind; 3] = [OpKind::ConstLaplace7, OpKind::VarCoeff7, OpKind::Laplace13];
+    pub const ALL: [OpKind; 4] =
+        [OpKind::ConstLaplace7, OpKind::VarCoeff7, OpKind::Laplace13, OpKind::FusedResidual7];
 
-    /// Parse a `laplace7` / `varcoeff` / `laplace13` op name.
+    /// Parse a `laplace7` / `varcoeff` / `laplace13` / `fused7` op name.
     pub fn parse(s: &str) -> Result<Self> {
         Ok(match s.trim().replace('-', "_").as_str() {
             "laplace7" | "const7" | "const_laplace7" => OpKind::ConstLaplace7,
             "varcoeff" | "varcoeff7" | "helmholtz" => OpKind::VarCoeff7,
             "laplace13" | "radius2" => OpKind::Laplace13,
-            other => anyhow::bail!("unknown op '{other}' (laplace7/varcoeff/laplace13)"),
+            "fused7" | "fused" | "residual7" | "fused_residual" => OpKind::FusedResidual7,
+            other => anyhow::bail!("unknown op '{other}' (laplace7/varcoeff/laplace13/fused7)"),
         })
     }
 
@@ -454,6 +551,7 @@ impl OpKind {
             OpKind::ConstLaplace7 => "laplace7",
             OpKind::VarCoeff7 => "varcoeff",
             OpKind::Laplace13 => "laplace13",
+            OpKind::FusedResidual7 => "fused7",
         }
     }
 
@@ -461,7 +559,7 @@ impl OpKind {
     /// config validator and the performance model need it).
     pub fn radius(self) -> usize {
         match self {
-            OpKind::ConstLaplace7 | OpKind::VarCoeff7 => 1,
+            OpKind::ConstLaplace7 | OpKind::VarCoeff7 | OpKind::FusedResidual7 => 1,
             OpKind::Laplace13 => 2,
         }
     }
@@ -493,6 +591,15 @@ impl OpKind {
                 flops_per_lup: 16,
                 radius: 2,
             },
+            // same streams as laplace7; the explicit residual costs the
+            // 6c multiply, the residual add and the scaled correction
+            OpKind::FusedResidual7 => TrafficSignature {
+                read_streams: 1,
+                write_streams: 1,
+                in_place: false,
+                flops_per_lup: 11,
+                radius: 1,
+            },
         }
     }
 
@@ -510,10 +617,22 @@ impl OpKind {
     /// Instantiate the op for a domain (ops with coefficient grids
     /// materialize their deterministic default field).
     pub fn instantiate(self, size: (usize, usize, usize)) -> OpInstance {
+        self.instantiate_at(size, 0)
+    }
+
+    /// Instantiate the op for a z-axis *slab* of a larger domain whose
+    /// first plane sits at global plane index `z_offset` — what the
+    /// rank decomposition builds its per-rank solvers from. Stateful
+    /// ops evaluate their per-site default fields in **global**
+    /// coordinates, so a slab instance is bit-identical to the matching
+    /// planes of the full-domain instance (stateless ops ignore the
+    /// offset).
+    pub fn instantiate_at(self, size: (usize, usize, usize), z_offset: usize) -> OpInstance {
         match self {
             OpKind::ConstLaplace7 => OpInstance::Const7(ConstLaplace7),
-            OpKind::VarCoeff7 => OpInstance::VarCoeff(VarCoeff7::default_for(size)),
+            OpKind::VarCoeff7 => OpInstance::VarCoeff(VarCoeff7::default_for_offset(size, z_offset)),
             OpKind::Laplace13 => OpInstance::L13(Laplace13),
+            OpKind::FusedResidual7 => OpInstance::Fused7(FusedResidual7),
         }
     }
 }
@@ -527,6 +646,7 @@ pub enum OpInstance {
     Const7(ConstLaplace7),
     VarCoeff(VarCoeff7),
     L13(Laplace13),
+    Fused7(FusedResidual7),
 }
 
 impl OpInstance {
@@ -536,6 +656,7 @@ impl OpInstance {
             OpInstance::Const7(_) => OpKind::ConstLaplace7,
             OpInstance::VarCoeff(_) => OpKind::VarCoeff7,
             OpInstance::L13(_) => OpKind::Laplace13,
+            OpInstance::Fused7(_) => OpKind::FusedResidual7,
         }
     }
 
@@ -545,6 +666,7 @@ impl OpInstance {
             OpInstance::Const7(op) => op,
             OpInstance::VarCoeff(op) => op,
             OpInstance::L13(op) => op,
+            OpInstance::Fused7(op) => op,
         }
     }
 }
@@ -590,6 +712,16 @@ impl OpFamily for Laplace13 {
         match inst {
             OpInstance::L13(op) => op,
             other => panic!("op mismatch: runner wants laplace13, session holds {:?}", other.kind()),
+        }
+    }
+}
+
+impl OpFamily for FusedResidual7 {
+    const KIND: OpKind = OpKind::FusedResidual7;
+    fn extract(inst: &OpInstance) -> &Self {
+        match inst {
+            OpInstance::Fused7(op) => op,
+            other => panic!("op mismatch: runner wants fused7, session holds {:?}", other.kind()),
         }
     }
 }
@@ -902,6 +1034,82 @@ mod tests {
         }
         assert!(OpKind::parse("biharmonic").is_err());
         assert_eq!(OpKind::parse("radius2").unwrap(), OpKind::Laplace13);
+    }
+
+    #[test]
+    fn fused_residual_matches_its_formula_and_fixed_points() {
+        let u = Grid3::random(6, 6, 6, 11);
+        let f = Grid3::random(6, 6, 6, 12);
+        let h2 = 0.9;
+        let mut dst = Grid3::zeros(6, 6, 6);
+        op_jacobi_sweep(&FusedResidual7, &mut dst, &u, &f, h2);
+        for k in 1..5 {
+            for j in 1..5 {
+                for i in 1..5 {
+                    let c = u.get(k, j, i);
+                    let sum = u.get(k, j, i - 1)
+                        + u.get(k, j, i + 1)
+                        + u.get(k, j - 1, i)
+                        + u.get(k, j + 1, i)
+                        + u.get(k - 1, j, i)
+                        + u.get(k + 1, j, i);
+                    let want = c + (h2 * f.get(k, j, i) + (sum - 6.0 * c)) / 6.0;
+                    assert_eq!(dst.get(k, j, i), want, "fused form is the exact bit recipe");
+                    // algebraically the plain Jacobi value (different bits)
+                    let plain = (sum + h2 * f.get(k, j, i)) / 6.0;
+                    assert!((dst.get(k, j, i) - plain).abs() < 1e-12);
+                }
+            }
+        }
+        // zero residual means zero correction: a constant grid with
+        // f = 0 is a bit-exact fixed point of both update flavours
+        let c0 = Grid3::from_fn(5, 5, 5, |_, _, _| 1.5);
+        let zf = Grid3::zeros(5, 5, 5);
+        let mut out = Grid3::zeros(5, 5, 5);
+        op_jacobi_sweep(&FusedResidual7, &mut out, &c0, &zf, 1.0);
+        assert_eq!(out, c0);
+        let mut v = c0.clone();
+        op_gs_sweep(&FusedResidual7, &mut v, GsKernel::Interleaved);
+        assert_eq!(v, c0);
+    }
+
+    #[test]
+    fn fused_residual_signature_and_names() {
+        let s = OpKind::FusedResidual7.signature();
+        assert_eq!((s.read_streams, s.write_streams, s.radius), (1, 1, 1));
+        assert_eq!(s.flops_per_lup, 11);
+        assert_eq!(s.mem_bytes_per_lup(true), 16.0); // same streams as laplace7
+        assert!(OpKind::FusedResidual7.gs_signature().in_place);
+        assert_eq!(OpKind::parse("fused7").unwrap(), OpKind::FusedResidual7);
+        assert_eq!(OpKind::parse("fused-residual").unwrap(), OpKind::FusedResidual7);
+        assert_eq!(OpKind::FusedResidual7.as_str(), "fused7");
+    }
+
+    #[test]
+    fn slab_instantiation_matches_global_coefficients() {
+        // a varcoeff slab starting at global plane 3 must hold exactly
+        // the full-domain field's planes 3..8 — the property the rank
+        // decomposition's per-rank solvers rely on
+        let full = OpKind::VarCoeff7.instantiate((10, 6, 7));
+        let slab = OpKind::VarCoeff7.instantiate_at((5, 6, 7), 3);
+        let (full, slab) = match (&full, &slab) {
+            (OpInstance::VarCoeff(a), OpInstance::VarCoeff(b)) => (a, b),
+            _ => unreachable!(),
+        };
+        for k in 0..5 {
+            for j in 0..6 {
+                for i in 0..7 {
+                    assert_eq!(
+                        slab.coefficients().get(k, j, i),
+                        full.coefficients().get(k + 3, j, i)
+                    );
+                }
+            }
+        }
+        // stateless ops ignore the offset
+        for kind in [OpKind::ConstLaplace7, OpKind::Laplace13, OpKind::FusedResidual7] {
+            assert_eq!(kind.instantiate_at((5, 5, 5), 7).kind(), kind);
+        }
     }
 
     #[test]

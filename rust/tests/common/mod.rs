@@ -9,10 +9,13 @@
 //! `OpKind::ALL`, so a future scheme or op variant cannot ship without
 //! parity coverage. `STENCILWAVE_THREADS` (a count or a comma-separated
 //! list) pins the parallel widths the matrix runs at — CI sweeps 1, 2
-//! and 4.
+//! and 4. [`assert_rank_matrix`] is the distributed counterpart: the
+//! same matrix through a [`RankSet`] of halo-exchange-coupled rank
+//! sessions, rank counts pinned by `STENCILWAVE_RANKS`.
 #![allow(dead_code)] // each integration-test crate uses a subset
 
 use stencilwave::config::{RunConfig, Scheme};
+use stencilwave::coordinator::rank::RankSet;
 use stencilwave::coordinator::solver::Solver;
 use stencilwave::stencil::gauss_seidel::{gs_sweeps, GsKernel};
 use stencilwave::stencil::grid::Grid3;
@@ -103,6 +106,75 @@ pub fn assert_scheme_op_matrix(threads: usize, seed: u64) {
     for scheme in Scheme::ALL {
         for op in OpKind::ALL {
             assert_bit_parity(&parity_config(scheme, op, threads), seed);
+        }
+    }
+}
+
+/// Rank counts the distributed parity matrix runs at:
+/// `STENCILWAVE_RANKS` (e.g. `2` or `1,2,3`) or the 1/2/3 default.
+pub fn rank_counts() -> Vec<usize> {
+    match std::env::var("STENCILWAVE_RANKS") {
+        Ok(v) if !v.trim().is_empty() => v
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse::<usize>()
+                    .unwrap_or_else(|e| panic!("STENCILWAVE_RANKS '{v}': {e}"))
+                    .max(1)
+            })
+            .collect(),
+        _ => vec![1, 2, 3],
+    }
+}
+
+/// A valid `RunConfig` exercising `scheme` × `op` across `ranks` z
+/// shards: modest in-rank parallelism, odd iteration counts where the
+/// scheme allows a remainder pass, and a z extent of
+/// `2R + ranks · depth + ranks + 1` — every rank clears the halo-depth
+/// floor *and* one plane of remainder makes the shard split uneven.
+pub fn rank_parity_config(scheme: Scheme, op: OpKind, ranks: usize) -> RunConfig {
+    let (t, groups, iters) = match scheme {
+        Scheme::JacobiBaseline | Scheme::GsBaseline => (2, 1, 3),
+        Scheme::JacobiWavefront => (2, 1, 6),
+        Scheme::JacobiMultiGroup => (4, 2, 8),
+        Scheme::GsWavefront => (2, 2, 5),
+        Scheme::GsMultiGroup => (3, 2, 5),
+    };
+    let r = op.radius();
+    let ny = (2 * r + 2 * r * groups + 3).max(2 * r + 5);
+    let mut cfg =
+        RunConfig { scheme, op, size: (0, ny, 9), t, groups, iters, ranks, ..Default::default() };
+    cfg.size.0 = 2 * r + ranks * cfg.halo_depth() + ranks + 1;
+    cfg
+}
+
+/// Run `cfg` through a `RankSet` and assert the multi-rank result is
+/// bit-identical to the registry's serial reference on the full domain
+/// — the distributed counterpart of [`assert_bit_parity`].
+pub fn assert_rank_parity(cfg: &RunConfig, seed: u64) {
+    let (nz, ny, nx) = cfg.size;
+    let f = Grid3::random(nz, ny, nx, seed);
+    let u0 = Grid3::random(nz, ny, nx, seed ^ 0x5A5A);
+    let mut set = RankSet::builder(cfg).rhs(f, 0.9).build().unwrap();
+    let mut u = u0.clone();
+    set.run(&mut u, cfg.iters).unwrap();
+    let want = set.reference(&u0, cfg.iters);
+    let ctx = format!(
+        "{:?} x {:?} {nz}x{ny}x{nx} t={} groups={} iters={} ranks={}",
+        cfg.scheme, cfg.op, cfg.t, cfg.groups, cfg.iters, cfg.ranks
+    );
+    assert_eq!(u.max_abs_diff(&want), 0.0, "{ctx}: multi-rank vs serial reference");
+    if cfg.ranks > 1 {
+        let stats = set.halo_stats();
+        assert!(stats.messages > 0, "{ctx}: halos must actually move between ranks");
+    }
+}
+
+/// The full `Scheme::ALL` × `OpKind::ALL` matrix at one rank count.
+pub fn assert_rank_matrix(ranks: usize, seed: u64) {
+    for scheme in Scheme::ALL {
+        for op in OpKind::ALL {
+            assert_rank_parity(&rank_parity_config(scheme, op, ranks), seed);
         }
     }
 }
