@@ -1,0 +1,146 @@
+//! Multi-tenant solver service vs one-session-per-job execution.
+//!
+//! The same mixed job list (small batch-eligible grids plus mid-size
+//! wavefront runs) goes through three strategies:
+//!
+//! * **sequential** — a private `Solver` session built, run and torn
+//!   down per job: the no-service baseline every tenant pays alone.
+//! * **service** — one `SolverService`: a persistent pool, per-window
+//!   segments with their own scratch arenas, ECM-cost placement, and
+//!   identical small jobs batched through one schedule.
+//! * **service-unbatched** — the same service with `max_batch = 1`,
+//!   isolating how much of the win is batching vs pool amortization.
+//!
+//! Results are written to `BENCH_service.json` (reusing the
+//! `BenchRecord` shape: `scheme` carries the strategy, `threads` the
+//! worker count) so CI keeps a greppable throughput history.
+//!
+//! `STENCILWAVE_BENCH_SMOKE=1` shrinks the job list and rep count — the
+//! CI configuration.
+
+use stencilwave::benchkit::{self, BenchRecord};
+use stencilwave::config::{RunConfig, Scheme};
+use stencilwave::coordinator::service::{JobSpec, JobTicket, ServiceConfig, SolverService};
+use stencilwave::coordinator::solver::Solver;
+use stencilwave::stencil::grid::Grid3;
+
+/// The tenant mix: `small_each` identical batch-eligible jobs per small
+/// scheme plus a few mid-size wavefront runs.
+fn job_list(smoke: bool) -> Vec<RunConfig> {
+    let (small_each, mid_n, iters) = if smoke { (4usize, 32usize, 4usize) } else { (8, 64, 8) };
+    let mut jobs = Vec::new();
+    for scheme in [Scheme::JacobiWavefront, Scheme::GsMultiGroup] {
+        for _ in 0..small_each {
+            jobs.push(RunConfig {
+                scheme,
+                size: (16, 18, 16),
+                t: 4,
+                groups: 2,
+                iters: 4,
+                ..Default::default()
+            });
+        }
+    }
+    for scheme in [Scheme::JacobiWavefront, Scheme::GsWavefront] {
+        jobs.push(RunConfig {
+            scheme,
+            size: (mid_n, mid_n, mid_n),
+            t: 4,
+            groups: 2,
+            iters,
+            ..Default::default()
+        });
+    }
+    jobs
+}
+
+fn total_updates(jobs: &[RunConfig]) -> u64 {
+    jobs.iter()
+        .map(|c| {
+            let r = c.op.radius();
+            let (nz, ny, nx) = c.size;
+            ((nz - 2 * r) * (ny - 2 * r) * (nx - 2 * r) * c.iters) as u64
+        })
+        .sum()
+}
+
+fn main() {
+    let smoke = benchkit::smoke();
+    let reps = if smoke { 2usize } else { 3 };
+    let jobs = job_list(smoke);
+    let updates = total_updates(&jobs);
+    let shape = ServiceConfig { groups: 2, group_width: 4, ..Default::default() };
+    let workers = shape.groups * shape.group_width;
+    let mut records: Vec<BenchRecord> = Vec::new();
+    let mut record = |strategy: &str, mlups: f64| {
+        records.push(BenchRecord {
+            scheme: strategy.to_string(),
+            op: "mixed".to_string(),
+            threads: workers,
+            smt: false,
+            nt_stores: false,
+            ranks: 1,
+            mlups,
+        });
+    };
+
+    benchkit::header(&format!(
+        "multi-tenant service vs per-job sessions — {} jobs, {} groups x {} workers",
+        jobs.len(),
+        shape.groups,
+        shape.group_width
+    ));
+
+    // the no-service baseline: every job pays its own session setup,
+    // with the same seeded inputs run_service_jobs derives
+    let s = benchkit::bench_mlups("sequential per-job sessions", updates, 1, reps, || {
+        for (i, cfg) in jobs.iter().enumerate() {
+            let (nz, ny, nx) = cfg.size;
+            let f = Grid3::random(nz, ny, nx, 7 + i as u64);
+            let mut u = Grid3::random(nz, ny, nx, 1008 + i as u64);
+            let mut solver = Solver::builder(cfg).rhs(f, 1.0).build().unwrap();
+            solver.run(&mut u, cfg.iters).unwrap();
+            benchkit::black_box(u);
+        }
+    });
+    benchkit::report(&s);
+    record("sequential", s.mlups.unwrap());
+
+    for (strategy, max_batch) in [("service", shape.max_batch), ("service-unbatched", 1)] {
+        let svc_cfg = ServiceConfig { max_batch, ..shape.clone() };
+        // the service outlives the reps — a long-running front end is
+        // exactly what it is — so the measured loop is pure tenancy:
+        // submit-all, then redeem every ticket
+        let svc = SolverService::new(svc_cfg).unwrap();
+        let s = benchkit::bench_mlups(strategy, updates, 1, reps, || {
+            let tickets: Vec<JobTicket> = jobs
+                .iter()
+                .enumerate()
+                .map(|(i, cfg)| {
+                    let (nz, ny, nx) = cfg.size;
+                    let f = Grid3::random(nz, ny, nx, 7 + i as u64);
+                    let u0 = Grid3::random(nz, ny, nx, 1008 + i as u64);
+                    svc.submit(JobSpec::new(cfg.clone(), u0).rhs(f, 1.0)).unwrap()
+                })
+                .collect();
+            for t in tickets {
+                benchkit::black_box(t.wait().unwrap().u);
+            }
+        });
+        benchkit::report(&s);
+        let stats = svc.stats();
+        println!(
+            "    {} jobs/rep, {} batched into {} windows, peak {} groups busy",
+            jobs.len(),
+            stats.batched_jobs,
+            stats.batches,
+            stats.peak_groups_busy
+        );
+        record(strategy, s.mlups.unwrap());
+        drop(svc);
+    }
+
+    let path = std::path::Path::new("BENCH_service.json");
+    benchkit::write_records(path, &records).unwrap();
+    println!("\nwrote {} ({} records)", path.display(), records.len());
+}

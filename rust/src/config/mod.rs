@@ -432,6 +432,52 @@ impl RunConfig {
         Self::from_text(&std::fs::read_to_string(path)?)
     }
 
+    /// Parse a *job file*: multiple [`RunConfig`] blocks in the same
+    /// `key = value` format, separated by `---` lines — the input format
+    /// of the multi-tenant solver service (`stencilwave service`). Blank
+    /// blocks (leading/trailing separators, `---` runs) are skipped;
+    /// parse errors carry the 1-based block number.
+    ///
+    /// ```text
+    /// scheme = "jacobi_wavefront"
+    /// size = [64, 64, 64]
+    /// ---
+    /// scheme = "gs_multigroup"
+    /// groups = 2
+    /// ```
+    pub fn from_job_text(text: &str) -> Result<Vec<Self>> {
+        let mut jobs = Vec::new();
+        let mut block = String::new();
+        let mut blockno = 0usize;
+        let mut flush = |block: &mut String, blockno: &mut usize| -> Result<()> {
+            if block.lines().all(|l| l.split('#').next().unwrap_or("").trim().is_empty()) {
+                block.clear();
+                return Ok(());
+            }
+            *blockno += 1;
+            let cfg = Self::from_text(block)
+                .map_err(|e| anyhow::anyhow!("job {}: {e}", *blockno))?;
+            block.clear();
+            jobs.push(cfg);
+            Ok(())
+        };
+        for line in text.lines() {
+            if line.trim() == "---" {
+                flush(&mut block, &mut blockno)?;
+            } else {
+                block.push_str(line);
+                block.push('\n');
+            }
+        }
+        flush(&mut block, &mut blockno)?;
+        Ok(jobs)
+    }
+
+    /// [`RunConfig::from_job_text`] from a file on disk.
+    pub fn load_job_file(path: &std::path::Path) -> Result<Vec<Self>> {
+        Self::from_job_text(&std::fs::read_to_string(path)?)
+    }
+
     /// Serialize back to the config format.
     pub fn to_text(&self) -> String {
         let scheme = self.scheme.as_str();
@@ -749,6 +795,36 @@ mod tests {
         // single-rank runs never produce the error
         cfg.ranks = 1;
         cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn job_files_parse_block_per_job() {
+        let text = "\
+scheme = \"jacobi_wavefront\"  # tenant A
+size = [16, 16, 16]
+---
+scheme = \"gs_multigroup\"
+size = [16, 16, 16]
+groups = 2
+---
+# a block of only comments is skipped
+---
+scheme = \"gs_baseline\"
+";
+        let jobs = RunConfig::from_job_text(text).unwrap();
+        assert_eq!(jobs.len(), 3);
+        assert_eq!(jobs[0].scheme, Scheme::JacobiWavefront);
+        assert_eq!(jobs[1].scheme, Scheme::GsMultiGroup);
+        assert_eq!(jobs[1].groups, 2);
+        assert_eq!(jobs[2].scheme, Scheme::GsBaseline);
+        // an empty file (or all separators) holds no jobs
+        assert!(RunConfig::from_job_text("").unwrap().is_empty());
+        assert!(RunConfig::from_job_text("---\n---\n").unwrap().is_empty());
+        // errors carry the block number, not just the line
+        let err = RunConfig::from_job_text("scheme = \"gs_baseline\"\n---\nbogus = 1\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("job 2"), "{err}");
     }
 
     #[test]

@@ -69,7 +69,7 @@ use crate::stencil::grid::Grid3;
 use crate::stencil::op::{op_gs_sweep, GsWindow, StencilOp, MAX_RADIUS};
 use crate::Result;
 
-use super::pool::WorkerPool;
+use super::pool::Dispatch;
 use super::schedule::{Progress, Schedule};
 
 /// Configuration of a multi-group blocked GS pass.
@@ -282,10 +282,11 @@ impl<O: StencilOp> Schedule for GsMultiGroupSchedule<'_, O> {
 }
 
 /// Run `passes` multi-group GS passes (`t` sweeps each) of `op` on
-/// `pool` with one schedule — boundary arrays come from the pool's
-/// reusable [`Scratch`](super::pool::Scratch).
+/// `pool` with one schedule — boundary arrays come from the
+/// dispatcher's reusable [`Scratch`](super::pool::Scratch) arena,
+/// returned by the RAII guard even when a sweep panics.
 pub fn gs_multigroup_passes<O: StencilOp>(
-    pool: &mut WorkerPool,
+    pool: &mut dyn Dispatch,
     op: &O,
     u: &mut Grid3,
     cfg: &GsMultiGroupConfig,
@@ -303,16 +304,12 @@ pub fn gs_multigroup_passes<O: StencilOp>(
         }
         return Ok(());
     }
-    let mut scratch = pool.take_scratch();
-    let result = (|| -> Result<()> {
-        let schedule = GsMultiGroupSchedule::new(op, u, &mut scratch.bnd, cfg)?;
-        for _ in 0..passes {
-            pool.run(&schedule)?;
-        }
-        Ok(())
-    })();
-    pool.restore_scratch(scratch);
-    result
+    let mut scratch = pool.scratch();
+    let schedule = GsMultiGroupSchedule::new(op, u, &mut scratch.bnd, cfg)?;
+    for _ in 0..passes {
+        pool.run(&schedule)?;
+    }
+    Ok(())
 }
 
 /// `iters` sweeps of `op` via passes of `cfg.t` each (+ a remainder pass
@@ -321,7 +318,7 @@ pub fn gs_multigroup_passes<O: StencilOp>(
 ///
 /// [`SchemeRunner`]: super::runner::SchemeRunner
 pub fn gs_multigroup_iters_passes<O: StencilOp>(
-    pool: &mut WorkerPool,
+    pool: &mut dyn Dispatch,
     op: &O,
     u: &mut Grid3,
     cfg: &GsMultiGroupConfig,
@@ -340,6 +337,7 @@ pub fn gs_multigroup_iters_passes<O: StencilOp>(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::pool::WorkerPool;
     use crate::stencil::gauss_seidel::gs_sweeps;
     use crate::stencil::op::{op_gs_sweeps, ConstLaplace7, Laplace13, VarCoeff7};
 

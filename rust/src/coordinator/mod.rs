@@ -67,7 +67,16 @@
 //! (`wavefront_jacobi_passes`, `pipeline_gs_passes`,
 //! `wavefront_gs_iters_passes`, `multigroup_passes`,
 //! `gs_multigroup_iters_passes`) remain public for callers that drive an
-//! explicit [`pool::WorkerPool`].
+//! explicit [`pool::WorkerPool`] — or, since the multi-tenant service,
+//! any [`pool::Dispatch`] implementor such as a [`pool::PoolSegment`].
+//!
+//! ## The multi-tenant service
+//!
+//! [`service::SolverService`] runs many concurrent jobs on *one* pool:
+//! each job is admitted by an ECM-cost placement model onto a window of
+//! cache groups (a [`pool::PoolSegment`] with its own progress table and
+//! scratch arena), and small-grid jobs with identical configurations
+//! batch through one session (many RHS, one schedule).
 
 pub mod affinity;
 pub mod barrier;
@@ -77,6 +86,7 @@ pub mod pool;
 pub mod rank;
 pub mod runner;
 pub mod schedule;
+pub mod service;
 pub mod solver;
 pub mod spatial;
 pub mod spatial_mg;

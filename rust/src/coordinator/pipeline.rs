@@ -16,7 +16,9 @@
 //! full `R`-line halo on both chunk edges.
 //!
 //! The pass is a [`Schedule`] dispatched on the persistent
-//! [`WorkerPool`]; multi-sweep runs reuse one team and one schedule.
+//! [`WorkerPool`](super::pool::WorkerPool) (or one tenant's
+//! [`PoolSegment`](super::pool::PoolSegment) window of it); multi-sweep
+//! runs reuse one team and one schedule.
 
 use std::marker::PhantomData;
 
@@ -25,7 +27,7 @@ use crate::stencil::grid::Grid3;
 use crate::stencil::op::{op_gs_line_raw, op_gs_sweep, StencilOp};
 use crate::Result;
 
-use super::pool::WorkerPool;
+use super::pool::Dispatch;
 use super::schedule::{Progress, Schedule};
 
 /// Configuration of a pipeline-parallel GS run.
@@ -166,7 +168,7 @@ impl<O: StencilOp> Schedule for PipelineGsSchedule<'_, O> {
 ///
 /// [`SchemeRunner`]: super::runner::SchemeRunner
 pub fn pipeline_gs_passes<O: StencilOp>(
-    pool: &mut WorkerPool,
+    pool: &mut dyn Dispatch,
     op: &O,
     u: &mut Grid3,
     cfg: &PipelineConfig,
@@ -194,6 +196,7 @@ pub fn pipeline_gs_passes<O: StencilOp>(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::pool::WorkerPool;
     use crate::stencil::gauss_seidel::gs_sweep;
     use crate::stencil::op::{op_gs_sweeps, ConstLaplace7, Laplace13};
 

@@ -1,5 +1,6 @@
 //! Persistent worker pool: one thread team, created once, reused across
-//! passes, iterations and experiments.
+//! passes, iterations, experiments — and, since the multi-tenant
+//! service, across *concurrent* solver sessions.
 //!
 //! The paper's temporal-blocking schemes live on cheap, repeated
 //! coordination of a *fixed* thread team (Sec. 4; also Wittmann et al.,
@@ -12,11 +13,23 @@
 //! and the team grows on demand when a schedule needs more workers
 //! (team-size reconfiguration without losing the existing threads).
 //!
+//! Dispatch is *segmented*: a pass occupies a contiguous window of pool
+//! workers, and windows that do not overlap execute truly concurrently.
+//! [`PoolSegment`] is a handle to one such window — its own
+//! [`Progress`] table and its own [`Scratch`] arena, so two-plus
+//! [`Solver`](super::solver::Solver) sessions can share one pool without
+//! contending on anything but the workers themselves. That is the
+//! substrate the multi-tenant [`SolverService`](super::service) packs
+//! cache-group jobs onto. Workers claim pending passes in submission
+//! order, which keeps overlapping windows deadlock-free even for
+//! schedules with two-sided watermark waits.
+//!
 //! `benches/bench_pool.rs` measures respawn-per-pass vs persistent-pool
 //! MLUP/s; `tests/pool_reuse.rs` asserts bit-exactness when one pool
 //! instance is reused across schemes, passes and team sizes.
 
 use std::cell::RefCell;
+use std::ops::{Deref, DerefMut};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -25,16 +38,17 @@ use crate::Result;
 
 use super::schedule::{Progress, Schedule};
 
-/// Reusable scratch buffers owned by the pool, handed to schedule
-/// constructors instead of per-pass `Vec` allocations (ROADMAP item:
-/// the x-line scratch of `spatial_mg::worker` and the temporary plane
-/// rings used to reallocate on every entry-point call).
+/// Reusable scratch buffers handed to schedule constructors instead of
+/// per-pass `Vec` allocations (the x-line scratch of
+/// `spatial_mg::worker` and the temporary plane rings used to
+/// reallocate on every entry-point call).
 ///
-/// Buffers are taken out with [`WorkerPool::take_scratch`] while a
-/// schedule borrows them (the pool itself stays mutably usable for
-/// dispatch) and handed back with [`WorkerPool::restore_scratch`], so
-/// capacity survives across passes, schemes and
-/// [`Solver::run`](super::solver::Solver::run) calls.
+/// An arena is borrowed through a [`ScratchGuard`] (see
+/// [`Dispatch::scratch`]); the guard returns the buffers on drop — on
+/// the success path *and* during a panic unwind — so capacity survives
+/// across passes, schemes, [`Solver::run`](super::solver::Solver::run)
+/// calls and failed jobs alike. Each [`PoolSegment`] owns its own slot,
+/// so concurrent sessions on one pool never fight over one arena.
 #[derive(Default)]
 pub struct Scratch {
     /// Temporary z-x plane rings (wavefront / multi-group odd levels).
@@ -46,47 +60,111 @@ pub struct Scratch {
     pub lines: Vec<f64>,
 }
 
+/// Where a checked-out [`Scratch`] arena goes back to when its
+/// [`ScratchGuard`] drops.
+type ScratchSlot = Arc<Mutex<Option<Scratch>>>;
+
+/// RAII checkout of a [`Scratch`] arena. Dereferences to the arena;
+/// hands the buffers back to their slot on drop, so a panicking sweep
+/// cannot leak the arena and starve the next session on a shared pool
+/// (the old `take_scratch`/`restore_scratch` pair did exactly that when
+/// a schedule constructor or `run` unwound between the two calls).
+pub struct ScratchGuard {
+    data: Scratch,
+    slot: ScratchSlot,
+}
+
+impl ScratchGuard {
+    fn checkout(slot: &ScratchSlot) -> Self {
+        // a poisoned mutex only means a peer panicked while holding it;
+        // the arena itself is plain buffers, so keep going
+        let data =
+            slot.lock().unwrap_or_else(|e| e.into_inner()).take().unwrap_or_default();
+        Self { data, slot: Arc::clone(slot) }
+    }
+}
+
+impl Deref for ScratchGuard {
+    type Target = Scratch;
+    fn deref(&self) -> &Scratch {
+        &self.data
+    }
+}
+
+impl DerefMut for ScratchGuard {
+    fn deref_mut(&mut self) -> &mut Scratch {
+        &mut self.data
+    }
+}
+
+impl Drop for ScratchGuard {
+    fn drop(&mut self) {
+        let mut slot = self.slot.lock().unwrap_or_else(|e| e.into_inner());
+        *slot = Some(std::mem::take(&mut self.data));
+    }
+}
+
 /// Per-worker start hook, called once with the worker id when the thread
 /// starts — the place to pin the worker to a core (e.g. via
 /// `sched_setaffinity` on Linux) or tag it for profiling.
 pub type StartHook = Arc<dyn Fn(usize) + Send + Sync + 'static>;
 
-/// Type-erased dispatch record for one pass.
-#[derive(Clone, Copy)]
-struct Job {
-    /// The schedule under execution. The borrow is lifetime-erased; this
-    /// is sound because [`WorkerPool::run`] blocks until every worker has
-    /// acknowledged the epoch, so the pointer never outlives the borrow
-    /// it was created from.
-    schedule: *const (dyn Schedule + 'static),
-    /// Team size of this pass; pool workers with `id >= workers` just
-    /// acknowledge the epoch and go back to sleep.
+/// Type-erased dispatch record for one in-flight pass on a worker
+/// window.
+struct SegJob {
+    /// Monotonic submission id. Workers claim pending slots in token
+    /// order, which serializes overlapping windows FIFO and keeps the
+    /// claim graph acyclic (no deadlock between two-sided watermark
+    /// protocols on shared workers).
+    token: u64,
+    /// First pool worker id of the job's window.
+    start: usize,
+    /// Window width = the schedule's team size; pool worker
+    /// `start + local` executes schedule slot `local`.
     workers: usize,
-    /// The pool-owned progress table (reset before dispatch).
+    /// The schedule under execution. The borrow is lifetime-erased;
+    /// this is sound because the dispatching call blocks until the job
+    /// leaves the list (every slot finished, or — on shutdown — every
+    /// claimed slot finished and the rest provably never claimed), so
+    /// the pointer never outlives the borrow it was created from.
+    schedule: *const (dyn Schedule + 'static),
+    /// The dispatcher-owned progress table (reset before dispatch;
+    /// alive for exactly as long as `schedule`).
     progress: *const Progress,
+    /// Which local slots a worker has claimed.
+    claimed: Vec<bool>,
+    /// Claimed-but-not-finished slots (shutdown drain accounting).
+    in_flight: usize,
+    /// Slots not yet finished, claimed or not.
+    remaining: usize,
+    /// Captured panic messages of this pass.
+    panics: Vec<String>,
 }
 
 // SAFETY: the pointers reference a `Schedule: Sync` and a `Progress`
 // (atomics) that outlive the pass; see the field docs above.
-unsafe impl Send for Job {}
+unsafe impl Send for SegJob {}
 
 struct State {
-    /// Bumped once per dispatched pass (and on shutdown) to wake workers.
-    epoch: u64,
-    job: Option<Job>,
-    /// Workers that have not yet acknowledged the current epoch.
-    active: usize,
-    /// Captured panic messages of the current pass.
-    panics: Vec<String>,
+    /// Every in-flight pass, newest last (completion uses swap_remove,
+    /// so list position is not ordered — `token` is).
+    jobs: Vec<SegJob>,
+    next_token: u64,
     shutdown: bool,
 }
 
 struct Control {
     state: Mutex<State>,
-    /// Signaled when a new epoch (or shutdown) is published.
+    /// Signaled when a job is published (or on shutdown).
     go: Condvar,
-    /// Signaled when `active` reaches zero.
+    /// Signaled when a job's last slot finishes (or on shutdown).
     done: Condvar,
+}
+
+impl Control {
+    fn lock(&self) -> std::sync::MutexGuard<'_, State> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
 }
 
 /// Best-effort extraction of a panic payload's message (shared with the
@@ -101,7 +179,7 @@ pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
     }
 }
 
-fn worker_loop(control: Arc<Control>, id: usize, mut seen: u64, hook: Option<StartHook>) {
+fn worker_loop(control: Arc<Control>, id: usize, hook: Option<StartHook>) {
     if let Some(h) = hook {
         // a dead worker would deadlock every later dispatch, so a hook
         // failure must not kill the thread
@@ -109,47 +187,128 @@ fn worker_loop(control: Arc<Control>, id: usize, mut seen: u64, hook: Option<Sta
             eprintln!("stencilwave-pool-{id}: start hook panicked; worker continues unpinned");
         }
     }
+    let mut st = control.lock();
     loop {
-        let job = {
-            let mut st = control.state.lock().unwrap();
-            loop {
-                if st.shutdown {
-                    return;
+        if st.shutdown {
+            return;
+        }
+        // claim this worker's slot of the oldest pending job that wants
+        // it (token order — see `SegJob::token`)
+        let mut pick: Option<(u64, usize)> = None;
+        for job in st.jobs.iter() {
+            if id >= job.start && id < job.start + job.workers && !job.claimed[id - job.start] {
+                match pick {
+                    Some((token, _)) if token <= job.token => {}
+                    _ => pick = Some((job.token, id - job.start)),
                 }
-                if st.epoch != seen {
-                    seen = st.epoch;
-                    break st.job.expect("epoch bumped without a job");
-                }
-                st = control.go.wait(st).unwrap();
-            }
-        };
-        if id < job.workers {
-            // SAFETY: `run` keeps the schedule and progress table alive
-            // until every worker acknowledges this epoch (below).
-            let schedule = unsafe { &*job.schedule };
-            let progress = unsafe { &*job.progress };
-            let result = catch_unwind(AssertUnwindSafe(|| schedule.worker(id, progress)));
-            if let Err(payload) = result {
-                // abort peers spinning on watermarks this worker will
-                // never publish (they drain via Progress::wait_min's
-                // poison panic, which lands right back here)
-                progress.poison();
-                let msg = panic_message(payload.as_ref());
-                let mut st = control.state.lock().unwrap();
-                st.panics.push(format!("worker {id}: {msg}"));
-                st.active -= 1;
-                if st.active == 0 {
-                    control.done.notify_all();
-                }
-                continue;
             }
         }
-        let mut st = control.state.lock().unwrap();
-        st.active -= 1;
-        if st.active == 0 {
+        let Some((token, local)) = pick else {
+            st = control.go.wait(st).unwrap_or_else(|e| e.into_inner());
+            continue;
+        };
+        let (schedule, progress) = {
+            let job = st.jobs.iter_mut().find(|j| j.token == token).expect("picked job listed");
+            job.claimed[local] = true;
+            job.in_flight += 1;
+            (job.schedule, job.progress)
+        };
+        drop(st);
+        // SAFETY: the dispatcher keeps both alive until this job leaves
+        // the list, which cannot happen before `in_flight` drops back
+        // (below).
+        let schedule = unsafe { &*schedule };
+        let progress = unsafe { &*progress };
+        let result = catch_unwind(AssertUnwindSafe(|| schedule.worker(local, progress)));
+        if result.is_err() {
+            // abort peers spinning on watermarks this worker will never
+            // publish (they drain via Progress::wait_min's poison
+            // panic, which lands right back here)
+            progress.poison();
+        }
+        st = control.lock();
+        let job = st.jobs.iter_mut().find(|j| j.token == token).expect("job vanished mid-pass");
+        if let Err(payload) = result {
+            job.panics.push(format!("worker {local}: {}", panic_message(payload.as_ref())));
+        }
+        job.in_flight -= 1;
+        job.remaining -= 1;
+        if job.remaining == 0 || st.shutdown {
             control.done.notify_all();
         }
     }
+}
+
+/// Publish one pass of `schedule` on workers `start..start + workers()`
+/// and block until every slot has finished. The caller owns `progress`
+/// (already sized and reset) and must keep both borrows alive for the
+/// duration of this call — which it does, by being a call.
+fn dispatch(control: &Control, schedule: &dyn Schedule, start: usize, progress: &Progress) -> Result<()> {
+    let n = schedule.workers();
+    anyhow::ensure!(n >= 1, "schedule needs at least one worker");
+
+    // Erase the borrow lifetime; sound because this function does not
+    // return while the job is listed (see SegJob::schedule).
+    let short: *const (dyn Schedule + '_) = schedule;
+    let erased: *const (dyn Schedule + 'static) = unsafe { std::mem::transmute(short) };
+
+    let mut st = control.lock();
+    anyhow::ensure!(!st.shutdown, "worker pool is shut down");
+    let token = st.next_token;
+    st.next_token += 1;
+    st.jobs.push(SegJob {
+        token,
+        start,
+        workers: n,
+        schedule: erased,
+        progress,
+        claimed: vec![false; n],
+        in_flight: 0,
+        remaining: n,
+        panics: Vec::new(),
+    });
+    control.go.notify_all();
+    loop {
+        let idx = st.jobs.iter().position(|j| j.token == token).expect("own job listed");
+        if st.jobs[idx].remaining == 0 {
+            let job = st.jobs.swap_remove(idx);
+            drop(st);
+            anyhow::ensure!(
+                job.panics.is_empty(),
+                "schedule worker(s) panicked: {}",
+                job.panics.join("; ")
+            );
+            return Ok(());
+        }
+        if st.shutdown && st.jobs[idx].in_flight == 0 {
+            // the pool dropped under us: no worker holds the schedule
+            // borrow and (workers check shutdown before claiming) none
+            // ever will, so the borrow may end here
+            st.jobs.swap_remove(idx);
+            drop(st);
+            anyhow::bail!("worker pool shut down mid-pass");
+        }
+        st = control.done.wait(st).unwrap_or_else(|e| e.into_inner());
+    }
+}
+
+/// Anything that can execute [`Schedule`] passes and lend a [`Scratch`]
+/// arena: a whole [`WorkerPool`] or one [`PoolSegment`] window of it.
+/// The schedule entry points and [`SchemeRunner::execute`] take
+/// `&mut dyn Dispatch`, so a solver session bound to a segment shares
+/// its pool with concurrent tenants transparently.
+///
+/// [`SchemeRunner::execute`]: super::runner::SchemeRunner::execute
+pub trait Dispatch {
+    /// Execute one pass of `schedule`, blocking until every worker
+    /// finishes. Worker panics are captured and surfaced as an error;
+    /// the dispatcher survives them (the pass is poisoned so peers
+    /// blocked in [`Progress::wait_min`] abort instead of spinning).
+    fn run(&mut self, schedule: &dyn Schedule) -> Result<()>;
+
+    /// Check the reusable scratch arena out for the duration of a
+    /// schedule; the guard hands it back on drop, panic or not.
+    fn scratch(&mut self) -> ScratchGuard;
 }
 
 /// A persistent team of worker threads executing [`Schedule`] passes.
@@ -158,7 +317,7 @@ pub struct WorkerPool {
     handles: Vec<JoinHandle<()>>,
     progress: Progress,
     hook: Option<StartHook>,
-    scratch: Scratch,
+    scratch: ScratchSlot,
 }
 
 impl WorkerPool {
@@ -166,13 +325,7 @@ impl WorkerPool {
     /// grows on demand to fit each dispatched schedule.
     pub fn new(size: usize) -> Self {
         let control = Arc::new(Control {
-            state: Mutex::new(State {
-                epoch: 0,
-                job: None,
-                active: 0,
-                panics: Vec::new(),
-                shutdown: false,
-            }),
+            state: Mutex::new(State { jobs: Vec::new(), next_token: 0, shutdown: false }),
             go: Condvar::new(),
             done: Condvar::new(),
         });
@@ -181,22 +334,15 @@ impl WorkerPool {
             handles: Vec::new(),
             progress: Progress::new(0),
             hook: None,
-            scratch: Scratch::default(),
+            scratch: Arc::new(Mutex::new(Some(Scratch::default()))),
         };
         pool.ensure_workers(size);
         pool
     }
 
-    /// Take the pool's scratch arena out for the duration of a schedule
-    /// (hand it back with [`WorkerPool::restore_scratch`] so buffer
-    /// capacity is reused by later passes).
-    pub fn take_scratch(&mut self) -> Scratch {
-        std::mem::take(&mut self.scratch)
-    }
-
-    /// Return a scratch arena taken with [`WorkerPool::take_scratch`].
-    pub fn restore_scratch(&mut self, scratch: Scratch) {
-        self.scratch = scratch;
+    /// Check the pool-level scratch arena out (see [`Dispatch::scratch`]).
+    pub fn scratch(&mut self) -> ScratchGuard {
+        ScratchGuard::checkout(&self.scratch)
     }
 
     /// Install a per-worker start hook (e.g. core pinning). Applies to
@@ -222,23 +368,40 @@ impl WorkerPool {
 
     /// Grow the team to at least `n` workers (no-op when already larger).
     pub fn ensure_workers(&mut self, n: usize) {
-        let epoch = self.control.state.lock().unwrap().epoch;
         while self.handles.len() < n {
             let id = self.handles.len();
             let control = Arc::clone(&self.control);
             let hook = self.hook.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("stencilwave-pool-{id}"))
-                .spawn(move || worker_loop(control, id, epoch, hook))
+                .spawn(move || worker_loop(control, id, hook))
                 .expect("spawn pool worker");
             self.handles.push(handle);
+        }
+    }
+
+    /// Carve out the worker window `start..start + len` as a
+    /// [`PoolSegment`] — its own progress table and scratch arena, so a
+    /// session bound to it runs concurrently with sessions on disjoint
+    /// windows of the same pool. Grows the team so the window exists.
+    /// Windows are allowed to overlap (overlapping passes serialize on
+    /// the shared workers, in submission order); the multi-tenant
+    /// service keeps them disjoint for real concurrency.
+    pub fn segment(&mut self, start: usize, len: usize) -> PoolSegment {
+        self.ensure_workers(start + len);
+        PoolSegment {
+            control: Arc::clone(&self.control),
+            start,
+            len,
+            progress: Progress::new(0),
+            scratch: Arc::new(Mutex::new(Some(Scratch::default()))),
         }
     }
 
     /// Execute one pass of `schedule` on the team, blocking until every
     /// worker finishes. Grows the team if the schedule needs more workers
     /// than the pool currently holds; workers beyond the schedule's team
-    /// size stay parked.
+    /// size stay parked (or serve other tenants' segments).
     ///
     /// Worker panics are captured and surfaced as an error and the pool
     /// itself survives them: the pass is poisoned so peers blocked in
@@ -248,48 +411,107 @@ impl WorkerPool {
     /// stall if a worker dies *between* barrier rounds; the progress
     /// protocol is the panic-safe path.)
     pub fn run(&mut self, schedule: &dyn Schedule) -> Result<()> {
-        let n = schedule.workers();
-        anyhow::ensure!(n >= 1, "schedule needs at least one worker");
-        self.ensure_workers(n);
+        self.ensure_workers(schedule.workers());
         let slots = schedule.progress_slots();
         if self.progress.len() < slots {
             self.progress = Progress::new(slots);
         }
         self.progress.reset();
+        dispatch(&self.control, schedule, 0, &self.progress)
+    }
+}
 
-        // Erase the borrow lifetime; sound because this function does not
-        // return until every worker has acknowledged the epoch.
-        let short: *const (dyn Schedule + '_) = schedule;
-        let erased: *const (dyn Schedule + 'static) = unsafe { std::mem::transmute(short) };
-        let job = Job { schedule: erased, workers: n, progress: &self.progress };
-
-        let mut st = self.control.state.lock().unwrap();
-        debug_assert!(st.job.is_none() && st.active == 0, "pool dispatched re-entrantly");
-        st.job = Some(job);
-        st.active = self.handles.len();
-        st.epoch = st.epoch.wrapping_add(1);
-        self.control.go.notify_all();
-        while st.active > 0 {
-            st = self.control.done.wait(st).unwrap();
-        }
-        st.job = None;
-        let panics = std::mem::take(&mut st.panics);
-        drop(st);
-        anyhow::ensure!(panics.is_empty(), "schedule worker(s) panicked: {}", panics.join("; "));
-        Ok(())
+impl Dispatch for WorkerPool {
+    fn run(&mut self, schedule: &dyn Schedule) -> Result<()> {
+        WorkerPool::run(self, schedule)
+    }
+    fn scratch(&mut self) -> ScratchGuard {
+        WorkerPool::scratch(self)
     }
 }
 
 impl Drop for WorkerPool {
     fn drop(&mut self) {
         {
-            let mut st = self.control.state.lock().unwrap_or_else(|e| e.into_inner());
+            let mut st = self.control.lock();
             st.shutdown = true;
+            for job in &st.jobs {
+                // a tenant blocked in `dispatch` on another thread must
+                // drain: poison so its in-flight workers abort instead
+                // of spinning on watermarks of never-claimed slots.
+                // SAFETY: a listed job's dispatcher is still inside
+                // `dispatch`, so the progress borrow is alive.
+                unsafe { &*job.progress }.poison();
+            }
             self.control.go.notify_all();
+            self.control.done.notify_all();
         }
         for handle in self.handles.drain(..) {
             let _ = handle.join();
         }
+    }
+}
+
+/// A handle to the worker window `start..start + len` of a shared
+/// [`WorkerPool`], with its own [`Progress`] table and its own
+/// [`Scratch`] arena — the per-segment state that lets two-plus solver
+/// sessions run concurrently on one pool with zero steady-state
+/// allocation. Created by [`WorkerPool::segment`]; sendable to the
+/// tenant's thread. A segment does not keep the pool alive: passes
+/// dispatched after the pool dropped fail with a "shut down" error.
+pub struct PoolSegment {
+    control: Arc<Control>,
+    start: usize,
+    len: usize,
+    progress: Progress,
+    scratch: ScratchSlot,
+}
+
+impl PoolSegment {
+    /// Worker capacity of the window (schedules needing more are
+    /// rejected — a segment never grows; growing is the pool owner's
+    /// placement decision).
+    pub fn capacity(&self) -> usize {
+        self.len
+    }
+
+    /// The pool worker ids of the window, as `(start, len)`.
+    pub fn worker_range(&self) -> (usize, usize) {
+        (self.start, self.len)
+    }
+
+    /// Execute one pass of `schedule` on the window, blocking until
+    /// every worker finishes (see [`Dispatch::run`]). Schedule slot
+    /// `local` executes on pool worker `start + local`.
+    pub fn run(&mut self, schedule: &dyn Schedule) -> Result<()> {
+        let n = schedule.workers();
+        anyhow::ensure!(
+            n <= self.len,
+            "schedule needs {n} workers but the segment holds {} (pool workers {}..{})",
+            self.len,
+            self.start,
+            self.start + self.len
+        );
+        let slots = schedule.progress_slots();
+        if self.progress.len() < slots {
+            self.progress = Progress::new(slots);
+        }
+        self.progress.reset();
+        dispatch(&self.control, schedule, self.start, &self.progress)
+    }
+
+    /// Check the segment's scratch arena out (see [`Dispatch::scratch`]).
+    pub fn scratch(&mut self) -> ScratchGuard {
+        ScratchGuard::checkout(&self.scratch)
+    }
+}
+
+impl Dispatch for PoolSegment {
+    fn run(&mut self, schedule: &dyn Schedule) -> Result<()> {
+        PoolSegment::run(self, schedule)
+    }
+    fn scratch(&mut self) -> ScratchGuard {
+        PoolSegment::scratch(self)
     }
 }
 
@@ -320,6 +542,7 @@ pub fn with_local<R>(f: impl FnOnce(&mut WorkerPool) -> R) -> R {
 mod tests {
     use super::*;
     use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::{Duration, Instant};
 
     struct CountSchedule {
         hits: Vec<AtomicUsize>,
@@ -341,8 +564,8 @@ mod tests {
     }
 
     /// Workers hand off through the progress table; the recorded order
-    /// must be 0..n every pass — which only holds if the pool resets the
-    /// table between passes.
+    /// must be 0..n every pass — which only holds if the dispatcher
+    /// resets the table between passes.
     struct ChainSchedule {
         n: usize,
         order: Mutex<Vec<usize>>,
@@ -483,5 +706,135 @@ mod tests {
         pool.clear_start_hook();
         pool.run(&CountSchedule::new(4)).unwrap();
         assert_eq!(seen.load(Ordering::SeqCst), 2, "cleared hook leaked to new workers");
+    }
+
+    /// Every worker checks in at a shared gate and spins until all
+    /// `expect` workers (across *both* segments) have arrived — only
+    /// possible if the two windows execute truly concurrently.
+    struct RendezvousSchedule {
+        n: usize,
+        gate: Arc<AtomicUsize>,
+        expect: usize,
+    }
+
+    impl Schedule for RendezvousSchedule {
+        fn workers(&self) -> usize {
+            self.n
+        }
+        fn worker(&self, _id: usize, _progress: &Progress) {
+            self.gate.fetch_add(1, Ordering::SeqCst);
+            let deadline = Instant::now() + Duration::from_secs(10);
+            while self.gate.load(Ordering::SeqCst) < self.expect {
+                if Instant::now() > deadline {
+                    panic!("segments serialized: rendezvous never filled");
+                }
+                std::hint::spin_loop();
+            }
+        }
+    }
+
+    #[test]
+    fn disjoint_segments_run_truly_concurrently() {
+        let mut pool = WorkerPool::new(4);
+        let mut a = pool.segment(0, 2);
+        let mut b = pool.segment(2, 2);
+        let gate = Arc::new(AtomicUsize::new(0));
+        let (ga, gb) = (Arc::clone(&gate), Arc::clone(&gate));
+        let ta = std::thread::spawn(move || {
+            a.run(&RendezvousSchedule { n: 2, gate: ga, expect: 4 }).map(|()| a)
+        });
+        let tb = std::thread::spawn(move || {
+            b.run(&RendezvousSchedule { n: 2, gate: gb, expect: 4 }).map(|()| b)
+        });
+        let mut a = ta.join().unwrap().unwrap();
+        let mut b = tb.join().unwrap().unwrap();
+        // both windows stay reusable, with ordered hand-off local to each
+        for seg in [&mut a, &mut b] {
+            let sched = ChainSchedule { n: 2, order: Mutex::new(Vec::new()) };
+            seg.run(&sched).unwrap();
+            assert_eq!(*sched.order.lock().unwrap(), vec![0, 1]);
+        }
+    }
+
+    #[test]
+    fn segment_rejects_schedules_beyond_its_capacity() {
+        let mut pool = WorkerPool::new(0);
+        let mut seg = pool.segment(1, 2);
+        assert_eq!(pool.size(), 3, "segment creation spawns its window");
+        let err = seg.run(&CountSchedule::new(3)).unwrap_err().to_string();
+        assert!(err.contains("segment holds 2"), "{err}");
+        // at-capacity schedules run, on pool workers 1 and 2
+        seg.run(&CountSchedule::new(2)).unwrap();
+    }
+
+    #[test]
+    fn segment_panics_do_not_poison_sibling_segments() {
+        let mut pool = WorkerPool::new(4);
+        let mut a = pool.segment(0, 2);
+        let mut b = pool.segment(2, 2);
+        let err = a.run(&PanicSchedule).unwrap_err().to_string();
+        assert!(err.contains("boom"), "{err}");
+        // b has its own progress table: the poison stays in a
+        let sched = ChainSchedule { n: 2, order: Mutex::new(Vec::new()) };
+        b.run(&sched).unwrap();
+        assert_eq!(*sched.order.lock().unwrap(), vec![0, 1]);
+        // and a itself recovers on its next pass
+        let sched = ChainSchedule { n: 2, order: Mutex::new(Vec::new()) };
+        a.run(&sched).unwrap();
+        assert_eq!(*sched.order.lock().unwrap(), vec![0, 1]);
+    }
+
+    #[test]
+    fn scratch_guard_restores_capacity_after_a_panic() {
+        let mut pool = WorkerPool::new(1);
+        {
+            let mut s = pool.scratch();
+            s.planes.resize(1000, 0.0);
+        }
+        let unwound = catch_unwind(AssertUnwindSafe(|| {
+            let mut s = pool.scratch();
+            s.planes.resize(2000, 0.0);
+            panic!("sweep died mid-pass");
+        }));
+        assert!(unwound.is_err());
+        // the old take/restore pair leaked the arena here; the guard
+        // hands it back during the unwind
+        let s = pool.scratch();
+        assert_eq!(s.planes.len(), 2000, "arena lost on panic");
+    }
+
+    #[test]
+    fn segment_scratch_arenas_are_independent_and_persistent() {
+        let mut pool = WorkerPool::new(2);
+        let mut a = pool.segment(0, 1);
+        let mut b = pool.segment(1, 1);
+        a.scratch().planes.resize(64, 1.0);
+        b.scratch().planes.resize(8, 2.0);
+        assert_eq!(a.scratch().planes.len(), 64);
+        assert_eq!(b.scratch().planes.len(), 8);
+        // two checkouts from one slot may coexist (the second falls back
+        // to a fresh arena rather than blocking or aliasing)
+        let first = a.scratch();
+        let second = a.scratch();
+        assert_eq!(first.planes.len(), 64);
+        assert_eq!(second.planes.len(), 0);
+    }
+
+    #[test]
+    fn dispatch_through_the_trait_object_matches_direct_calls() {
+        let mut pool = WorkerPool::new(2);
+        {
+            let d: &mut dyn Dispatch = &mut pool;
+            let sched = ChainSchedule { n: 2, order: Mutex::new(Vec::new()) };
+            d.run(&sched).unwrap();
+            assert_eq!(*sched.order.lock().unwrap(), vec![0, 1]);
+            d.scratch().bnd.resize(5, 0.0);
+        }
+        let mut seg = pool.segment(0, 2);
+        let d: &mut dyn Dispatch = &mut seg;
+        let sched = ChainSchedule { n: 2, order: Mutex::new(Vec::new()) };
+        d.run(&sched).unwrap();
+        assert_eq!(*sched.order.lock().unwrap(), vec![0, 1]);
+        assert_eq!(pool.scratch().bnd.len(), 5);
     }
 }

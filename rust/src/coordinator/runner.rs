@@ -39,7 +39,7 @@ use crate::Result;
 
 use super::gs_multigroup::{gs_multigroup_iters_passes, GsMultiGroupConfig};
 use super::pipeline::{pipeline_gs_passes, PipelineConfig};
-use super::pool::WorkerPool;
+use super::pool::Dispatch;
 use super::spatial_mg::{multigroup_passes, MultiGroupConfig};
 use super::wavefront::{check_iters_multiple, wavefront_jacobi_passes, SyncMode, WavefrontConfig};
 use super::wavefront_gs::{wavefront_gs_iters_passes, GsWavefrontConfig};
@@ -74,7 +74,7 @@ pub trait SchemeRunner: Sync {
     #[allow(clippy::too_many_arguments)]
     fn execute(
         &self,
-        pool: &mut WorkerPool,
+        pool: &mut dyn Dispatch,
         op: &OpInstance,
         u: &mut Grid3,
         f: &Grid3,
@@ -154,7 +154,7 @@ impl<O: OpFamily> SchemeRunner for JacobiBaselineRunner<O> {
     }
     fn execute(
         &self,
-        _pool: &mut WorkerPool,
+        _pool: &mut dyn Dispatch,
         op: &OpInstance,
         u: &mut Grid3,
         f: &Grid3,
@@ -210,7 +210,7 @@ impl<O: OpFamily> SchemeRunner for JacobiWavefrontRunner<O> {
     }
     fn execute(
         &self,
-        pool: &mut WorkerPool,
+        pool: &mut dyn Dispatch,
         op: &OpInstance,
         u: &mut Grid3,
         f: &Grid3,
@@ -258,7 +258,7 @@ impl<O: OpFamily> SchemeRunner for JacobiMultiGroupRunner<O> {
     }
     fn execute(
         &self,
-        pool: &mut WorkerPool,
+        pool: &mut dyn Dispatch,
         op: &OpInstance,
         u: &mut Grid3,
         f: &Grid3,
@@ -312,7 +312,7 @@ impl<O: OpFamily> SchemeRunner for GsBaselineRunner<O> {
     }
     fn execute(
         &self,
-        pool: &mut WorkerPool,
+        pool: &mut dyn Dispatch,
         op: &OpInstance,
         u: &mut Grid3,
         _f: &Grid3,
@@ -363,7 +363,7 @@ impl<O: OpFamily> SchemeRunner for GsWavefrontRunner<O> {
     }
     fn execute(
         &self,
-        pool: &mut WorkerPool,
+        pool: &mut dyn Dispatch,
         op: &OpInstance,
         u: &mut Grid3,
         _f: &Grid3,
@@ -419,7 +419,7 @@ impl<O: OpFamily> SchemeRunner for GsMultiGroupRunner<O> {
     }
     fn execute(
         &self,
-        pool: &mut WorkerPool,
+        pool: &mut dyn Dispatch,
         op: &OpInstance,
         u: &mut Grid3,
         _f: &Grid3,
@@ -495,6 +495,7 @@ pub fn runner_for(scheme: Scheme, op: OpKind) -> Result<&'static dyn SchemeRunne
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::pool::WorkerPool;
     use crate::simulator::perfmodel::BarrierKind;
 
     fn base_cfg(scheme: Scheme, op: OpKind) -> RunConfig {

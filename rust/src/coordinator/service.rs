@@ -1,0 +1,900 @@
+//! The multi-tenant `SolverService`: one persistent pool, many
+//! concurrent jobs.
+//!
+//! A single experiment owns its [`Solver`] session; a *service* amortizes
+//! one worker team across tenants. Jobs (mixed
+//! [`Scheme`](crate::config::Scheme) × [`OpKind`](crate::stencil::op::OpKind)
+//! × sizes) are:
+//!
+//! 1. **Admitted** by an ECM-cost placement model: a job's team is
+//!    rounded up to whole *cache groups* (windows of `group_width` pool
+//!    workers — the machine-topology unit of Sec. 5, where a shared
+//!    outer-level cache makes intra-group synchronization cheap), its
+//!    cost is estimated in modeled seconds from the scheme runner's
+//!    performance-model leg, and the window with the lowest peak load is
+//!    charged (ties go to the lowest group, so placement is
+//!    deterministic — see [`ServiceConfig::admit_plan`]).
+//! 2. **Executed** on a pre-created [`PoolSegment`] for that window: each
+//!    window has its own progress table and scratch arena, so tenants on
+//!    disjoint windows run truly concurrently on the one pool and the
+//!    steady state allocates nothing.
+//! 3. **Batched** when small: queued jobs with an identical configuration
+//!    (modulo `machine`/`pin`, which affect placement and prediction but
+//!    not numerics) and at most [`ServiceConfig::batch_cells`] grid cells
+//!    ride one claimed window through a single session — one schedule,
+//!    many right-hand sides, via [`Solver::run_with`].
+//!
+//! Every job's result is bit-identical to a private per-job [`Solver`]
+//! run of the same configuration — tenancy changes scheduling, never
+//! numerics (locked down by `tests/service_stress.rs` and
+//! `tests/service_property.rs`).
+//!
+//! ```no_run
+//! use stencilwave::config::RunConfig;
+//! use stencilwave::coordinator::service::{JobSpec, ServiceConfig, SolverService};
+//! use stencilwave::stencil::grid::Grid3;
+//!
+//! let mut svc = SolverService::new(ServiceConfig::for_host()).unwrap();
+//! let cfg = RunConfig { size: (64, 64, 64), t: 4, iters: 8, ..Default::default() };
+//! let u0 = Grid3::from_fn(64, 64, 64, |k, j, i| (k + j + i) as f64);
+//! let out = svc.run_job(JobSpec::new(cfg, u0)).unwrap();
+//! println!("ran on groups {}..{}", out.placement.group_start,
+//!          out.placement.group_start + out.placement.group_count);
+//! svc.shutdown();
+//! ```
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+
+use crate::config::RunConfig;
+use crate::simulator::machine::MachineSpec;
+use crate::stencil::grid::Grid3;
+use crate::Result;
+
+use super::affinity::{pin_hook, PinPolicy, Topology};
+use super::pool::{PoolSegment, WorkerPool};
+use super::runner::runner_for;
+use super::solver::Solver;
+
+/// Static shape of a [`SolverService`]: how many cache groups the pool
+/// is carved into and how jobs are admitted onto them.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// Cache groups the pool is carved into (also the executor thread
+    /// count: each claimed window is driven by one executor).
+    pub groups: usize,
+    /// Pool workers per cache group — the placement granularity. Jobs
+    /// are rounded up to whole groups so no two tenants share a group's
+    /// outer-level cache.
+    pub group_width: usize,
+    /// Tab. 1 machine model the admission cost is predicted on (`None`
+    /// = a worker-count proxy; a job's own `machine` key wins).
+    pub machine: Option<String>,
+    /// Most jobs one claimed window executes as a single batch
+    /// (1 disables batching).
+    pub max_batch: usize,
+    /// Largest grid (in cells) eligible for batching — small grids gain
+    /// the most from amortizing one schedule over many right-hand sides.
+    pub batch_cells: usize,
+    /// Core-pinning policy for the pool's workers (applied once, at
+    /// spawn; per-job `pin` keys are ignored — placement is the
+    /// service's decision).
+    pub pin: PinPolicy,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self {
+            groups: 2,
+            group_width: 4,
+            machine: None,
+            max_batch: 8,
+            batch_cells: 32 * 32 * 32,
+            pin: PinPolicy::None,
+        }
+    }
+}
+
+impl ServiceConfig {
+    /// A service shaped like the host: one cache group per sysfs
+    /// outer-level cache domain, `group_width` = cores per domain.
+    pub fn for_host() -> Self {
+        let topo = Topology::host();
+        let group_width = topo.group_size.max(1);
+        let groups = (topo.cores / group_width).max(1);
+        Self { groups, group_width, ..Self::default() }
+    }
+
+    /// Validate the service shape.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.groups >= 1, "service needs at least one cache group");
+        anyhow::ensure!(self.group_width >= 1, "cache groups need at least one worker");
+        anyhow::ensure!(self.max_batch >= 1, "max_batch must be >= 1 (1 disables batching)");
+        if let Some(name) = &self.machine {
+            anyhow::ensure!(MachineSpec::by_name(name).is_some(), "unknown machine '{name}'");
+        }
+        Ok(())
+    }
+
+    /// The pure admission/placement model: the [`Placement`] sequence a
+    /// fresh, idle service would charge for `jobs` submitted in order
+    /// with no completions in between. Deterministic — same jobs, same
+    /// plan — and exactly the helper [`SolverService::submit`] runs, so
+    /// the property suite can pin the service's placement behavior
+    /// without spawning a single thread.
+    pub fn admit_plan(&self, jobs: &[RunConfig]) -> Result<Vec<Placement>> {
+        self.validate()?;
+        let mut loads = vec![0.0f64; self.groups];
+        let mut out = Vec::with_capacity(jobs.len());
+        for job in jobs {
+            let (placement, cost) = admit(self, job, &loads)?;
+            let w = placement.group_start..placement.group_start + placement.group_count;
+            for l in &mut loads[w] {
+                *l += cost;
+            }
+            out.push(placement);
+        }
+        Ok(out)
+    }
+}
+
+/// Where a job was charged: a contiguous window of cache groups and the
+/// pool-worker window it maps to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Placement {
+    /// First cache group of the window.
+    pub group_start: usize,
+    /// Cache groups in the window (`ceil(team / group_width)`).
+    pub group_count: usize,
+    /// First pool worker id of the window.
+    pub worker_start: usize,
+    /// Pool workers the window holds (`group_count * group_width`).
+    pub workers: usize,
+}
+
+/// Typed admission failure: the job's team needs more cache groups than
+/// the service holds. Callers branch on it by downcasting the
+/// [`anyhow::Error`], like [`BlockWidthError`](crate::config::BlockWidthError).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AdmissionError {
+    /// Workers the job's scheme dispatches.
+    pub team: usize,
+    /// Cache groups that team occupies after rounding up.
+    pub needed_groups: usize,
+    /// Cache groups the service holds.
+    pub groups: usize,
+}
+
+impl std::fmt::Display for AdmissionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "job needs {} workers = {} cache groups but the service holds {}",
+            self.team, self.needed_groups, self.groups
+        )
+    }
+}
+
+impl std::error::Error for AdmissionError {}
+
+/// One tenant job: a validated [`RunConfig`] plus the tenant's grids.
+pub struct JobSpec {
+    /// The run to execute (`ranks` must be 1 — the service is a
+    /// single-node tenancy layer; rank decomposition lives above it).
+    pub cfg: RunConfig,
+    /// Initial grid, consumed and returned updated in [`JobOutput::u`].
+    pub u0: Grid3,
+    /// Right-hand side for the Jacobi family (`None` = homogeneous).
+    pub f: Option<Grid3>,
+    /// Mesh factor paired with `f`.
+    pub h2: f64,
+}
+
+impl JobSpec {
+    /// A job with the homogeneous right-hand side (`f = 0`, `h2 = 1`).
+    pub fn new(cfg: RunConfig, u0: Grid3) -> Self {
+        Self { cfg, u0, f: None, h2: 1.0 }
+    }
+
+    /// Attach a right-hand side (builder-style).
+    pub fn rhs(mut self, f: Grid3, h2: f64) -> Self {
+        self.f = Some(f);
+        self.h2 = h2;
+        self
+    }
+}
+
+/// A finished job: the updated grid plus where and how it actually ran.
+pub struct JobOutput {
+    /// The tenant's grid after `cfg.iters` updates.
+    pub u: Grid3,
+    /// The window the job *executed* on (a batched job runs on the batch
+    /// leader's window, which may differ from the window its ticket was
+    /// charged at).
+    pub placement: Placement,
+    /// Jobs that shared the claimed window with this one (1 = unbatched).
+    pub batch_size: usize,
+}
+
+/// Handle to a submitted job; redeem with [`JobTicket::wait`].
+pub struct JobTicket {
+    id: u64,
+    placement: Placement,
+    rx: mpsc::Receiver<Result<JobOutput>>,
+}
+
+impl JobTicket {
+    /// Submission-order id of the job.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// The window the admission model charged for this job.
+    pub fn placement(&self) -> Placement {
+        self.placement
+    }
+
+    /// Block until the job finishes and return its output.
+    pub fn wait(self) -> Result<JobOutput> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("solver service dropped job {} without a result", self.id))?
+    }
+}
+
+/// Service counters (a consistent snapshot via [`SolverService::stats`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServiceStats {
+    /// Jobs accepted by admission.
+    pub submitted: u64,
+    /// Jobs that finished successfully.
+    pub completed: u64,
+    /// Jobs that finished with an error.
+    pub failed: u64,
+    /// Claimed windows that executed more than one job.
+    pub batches: u64,
+    /// Jobs that rode a shared window (counted per job).
+    pub batched_jobs: u64,
+    /// Most cache groups ever busy at once (`<= groups`).
+    pub peak_groups_busy: usize,
+    /// Claims that found a window group already busy or its segment
+    /// checked out — 0 unless the oversubscription invariant broke (the
+    /// property suite asserts it stays 0).
+    pub claim_conflicts: u64,
+}
+
+/// One queued job.
+struct Pending {
+    id: u64,
+    spec: JobSpec,
+    /// The window admission charged (loads are refunded here).
+    placement: Placement,
+    cost: f64,
+    /// Numerics-relevant config key batch mates must share.
+    key: String,
+    batchable: bool,
+    tx: mpsc::Sender<Result<JobOutput>>,
+}
+
+/// Mutable service state, guarded by [`Shared::inner`].
+struct Inner {
+    queue: Vec<Pending>,
+    /// Outstanding modeled seconds charged per cache group.
+    loads: Vec<f64>,
+    busy: Vec<bool>,
+    groups_busy: usize,
+    /// The pre-created window segments, keyed by
+    /// `(group_start, group_count)`; absent while checked out.
+    segments: HashMap<(usize, usize), PoolSegment>,
+    shutdown: bool,
+    paused: bool,
+    stats: ServiceStats,
+    next_id: u64,
+}
+
+struct Shared {
+    cfg: ServiceConfig,
+    /// The one pool all tenants share. Executors only touch it on the
+    /// (unreachable-by-construction) segment-recovery path, so there is
+    /// no steady-state contention; never locked while holding `inner`.
+    pool: Mutex<WorkerPool>,
+    inner: Mutex<Inner>,
+    cv: Condvar,
+}
+
+fn lock(m: &Mutex<Inner>) -> MutexGuard<'_, Inner> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// The numerics-relevant identity of a config: everything except the
+/// keys that only steer placement and prediction.
+fn batch_key(cfg: &RunConfig) -> String {
+    let mut c = cfg.clone();
+    c.machine = None;
+    c.pin = PinPolicy::None;
+    c.to_text()
+}
+
+/// Validate `job` and compute its window and modeled cost against the
+/// current per-group `loads` — the single admission helper
+/// [`SolverService::submit`] and [`ServiceConfig::admit_plan`] share.
+fn admit(svc: &ServiceConfig, job: &RunConfig, loads: &[f64]) -> Result<(Placement, f64)> {
+    job.validate()?;
+    anyhow::ensure!(
+        job.ranks == 1,
+        "the service runs single-rank jobs (got ranks = {}); rank decomposition layers above it",
+        job.ranks
+    );
+    let runner = runner_for(job.scheme, job.op)?;
+    let team = runner.team_size(job);
+    let needed_groups = team.max(1).div_ceil(svc.group_width);
+    if needed_groups > svc.groups {
+        return Err(anyhow::Error::new(AdmissionError {
+            team,
+            needed_groups,
+            groups: svc.groups,
+        }));
+    }
+    // ECM cost in modeled seconds: interior updates over the modeled
+    // MLUP/s rate. Without a machine model the proxy rate scales with
+    // the team so wide and narrow jobs still order sensibly.
+    let r = job.op.radius();
+    let (nz, ny, nx) = job.size;
+    let updates = nz.saturating_sub(2 * r)
+        * ny.saturating_sub(2 * r)
+        * nx.saturating_sub(2 * r)
+        * job.iters.max(1);
+    let spec = job
+        .machine_spec()
+        .or_else(|| svc.machine.as_deref().and_then(MachineSpec::by_name));
+    let mlups = match spec {
+        Some(m) => runner.predict(&m, job),
+        None => 100.0 * team.max(1) as f64,
+    };
+    let cost = (updates as f64 / 1e6) / mlups.max(1e-9);
+    // min-max-load contiguous window; ties go to the lowest start (the
+    // strict `<` below), making placement deterministic
+    let mut best = 0usize;
+    let mut best_peak = f64::INFINITY;
+    for (g0, window) in loads.windows(needed_groups).enumerate() {
+        let peak = window.iter().fold(0.0f64, |a, &b| a.max(b));
+        if peak < best_peak {
+            best_peak = peak;
+            best = g0;
+        }
+    }
+    Ok((
+        Placement {
+            group_start: best,
+            group_count: needed_groups,
+            worker_start: best * svc.group_width,
+            workers: needed_groups * svc.group_width,
+        },
+        cost,
+    ))
+}
+
+/// The long-running multi-tenant solver front end: one persistent
+/// [`WorkerPool`], per-window [`PoolSegment`]s, `groups` executor
+/// threads claiming queued jobs onto free windows.
+pub struct SolverService {
+    shared: Arc<Shared>,
+    executors: Vec<JoinHandle<()>>,
+}
+
+impl SolverService {
+    /// Spawn the pool (pinned per `cfg.pin`), pre-create every
+    /// contiguous window's segment, and start the executor threads.
+    pub fn new(cfg: ServiceConfig) -> Result<Self> {
+        cfg.validate()?;
+        let mut pool = WorkerPool::new(0);
+        let topo = cfg
+            .machine
+            .as_deref()
+            .and_then(MachineSpec::by_name)
+            .map(|m| Topology::of_machine(&m))
+            .unwrap_or_else(Topology::host);
+        match pin_hook(cfg.pin, topo) {
+            Some(hook) => pool.set_start_hook(hook),
+            None => pool.clear_start_hook(),
+        }
+        pool.ensure_workers(cfg.groups * cfg.group_width);
+        // every contiguous (start, width) window gets its own segment up
+        // front — progress table and scratch arena included — so the
+        // steady state checks segments out and in without allocating
+        let mut segments = HashMap::new();
+        for g0 in 0..cfg.groups {
+            for w in 1..=cfg.groups - g0 {
+                segments.insert((g0, w), pool.segment(g0 * cfg.group_width, w * cfg.group_width));
+            }
+        }
+        let groups = cfg.groups;
+        let shared = Arc::new(Shared {
+            inner: Mutex::new(Inner {
+                queue: Vec::new(),
+                loads: vec![0.0; groups],
+                busy: vec![false; groups],
+                groups_busy: 0,
+                segments,
+                shutdown: false,
+                paused: false,
+                stats: ServiceStats::default(),
+                next_id: 0,
+            }),
+            cv: Condvar::new(),
+            pool: Mutex::new(pool),
+            cfg,
+        });
+        let executors = (0..groups)
+            .map(|i| {
+                let s = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("stencilwave-svc-{i}"))
+                    .spawn(move || executor_loop(&s))
+                    .expect("spawn service executor")
+            })
+            .collect();
+        Ok(Self { shared, executors })
+    }
+
+    /// Cache groups the service holds.
+    pub fn group_count(&self) -> usize {
+        self.shared.cfg.groups
+    }
+
+    /// Pool workers per cache group.
+    pub fn group_width(&self) -> usize {
+        self.shared.cfg.group_width
+    }
+
+    /// Admit a job: validate it, charge the cheapest window, queue it.
+    /// Fails with a downcastable [`AdmissionError`] when the job's team
+    /// exceeds the whole machine.
+    pub fn submit(&self, spec: JobSpec) -> Result<JobTicket> {
+        anyhow::ensure!(
+            spec.u0.shape() == spec.cfg.size,
+            "u0 shape {:?} does not match the job's configured size {:?}",
+            spec.u0.shape(),
+            spec.cfg.size
+        );
+        if let Some(f) = &spec.f {
+            anyhow::ensure!(
+                f.shape() == spec.cfg.size,
+                "rhs shape {:?} does not match the job's configured size {:?}",
+                f.shape(),
+                spec.cfg.size
+            );
+        }
+        let (tx, rx) = mpsc::channel();
+        let mut inner = lock(&self.shared.inner);
+        anyhow::ensure!(!inner.shutdown, "solver service is shut down");
+        let (placement, cost) = admit(&self.shared.cfg, &spec.cfg, &inner.loads)?;
+        let w = placement.group_start..placement.group_start + placement.group_count;
+        for l in &mut inner.loads[w] {
+            *l += cost;
+        }
+        let id = inner.next_id;
+        inner.next_id += 1;
+        inner.stats.submitted += 1;
+        let (nz, ny, nx) = spec.cfg.size;
+        let batchable = self.shared.cfg.max_batch > 1 && nz * ny * nx <= self.shared.cfg.batch_cells;
+        inner.queue.push(Pending {
+            id,
+            key: batch_key(&spec.cfg),
+            batchable,
+            spec,
+            placement,
+            cost,
+            tx,
+        });
+        drop(inner);
+        self.shared.cv.notify_all();
+        Ok(JobTicket { id, placement, rx })
+    }
+
+    /// Submit one job and block for its result.
+    pub fn run_job(&self, spec: JobSpec) -> Result<JobOutput> {
+        self.submit(spec)?.wait()
+    }
+
+    /// Stop claiming queued jobs (in-flight windows finish; submissions
+    /// still queue). The deterministic-batching tests use this to stage
+    /// a whole batch before any executor can claim its leader.
+    pub fn pause(&self) {
+        lock(&self.shared.inner).paused = true;
+        self.shared.cv.notify_all();
+    }
+
+    /// Resume claiming after [`SolverService::pause`].
+    pub fn resume(&self) {
+        lock(&self.shared.inner).paused = false;
+        self.shared.cv.notify_all();
+    }
+
+    /// A snapshot of the service counters.
+    pub fn stats(&self) -> ServiceStats {
+        lock(&self.shared.inner).stats
+    }
+
+    /// Outstanding modeled load per cache group (charged at submit,
+    /// refunded at completion — all zeros when idle).
+    pub fn loads(&self) -> Vec<f64> {
+        lock(&self.shared.inner).loads.clone()
+    }
+
+    /// Drain gracefully: every already-queued job still runs (shutdown
+    /// overrides [`SolverService::pause`]), new submissions are
+    /// rejected, and the executor threads are joined. Idempotent; also
+    /// invoked by `Drop`.
+    pub fn shutdown(&mut self) {
+        lock(&self.shared.inner).shutdown = true;
+        self.shared.cv.notify_all();
+        for h in self.executors.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for SolverService {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn window_free(busy: &[bool], p: &Placement) -> bool {
+    busy[p.group_start..p.group_start + p.group_count].iter().all(|b| !b)
+}
+
+fn executor_loop(shared: &Shared) {
+    loop {
+        // claim: the oldest queued job whose charged window is entirely
+        // free, plus (atomically, under the same lock) its batch mates
+        let mut inner = lock(&shared.inner);
+        let pos = loop {
+            if inner.shutdown && inner.queue.is_empty() {
+                return;
+            }
+            if !inner.paused || inner.shutdown {
+                if let Some(pos) =
+                    inner.queue.iter().position(|p| window_free(&inner.busy, &p.placement))
+                {
+                    break pos;
+                }
+            }
+            inner = shared.cv.wait(inner).unwrap_or_else(|e| e.into_inner());
+        };
+        let lead = inner.queue.remove(pos);
+        let mut batch = vec![lead];
+        if batch[0].batchable {
+            let key = batch[0].key.clone();
+            let mut i = 0;
+            while batch.len() < shared.cfg.max_batch && i < inner.queue.len() {
+                if inner.queue[i].batchable && inner.queue[i].key == key {
+                    batch.push(inner.queue.remove(i));
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        let placement = batch[0].placement;
+        let seg_key = (placement.group_start, placement.group_count);
+        let window = placement.group_start..placement.group_start + placement.group_count;
+        let conflicts = inner.busy[window.clone()].iter().filter(|&&b| b).count() as u64;
+        inner.stats.claim_conflicts += conflicts;
+        for b in &mut inner.busy[window] {
+            *b = true;
+        }
+        inner.groups_busy += placement.group_count;
+        inner.stats.peak_groups_busy = inner.stats.peak_groups_busy.max(inner.groups_busy);
+        let segment = inner.segments.remove(&seg_key);
+        drop(inner);
+
+        let segment = match segment {
+            Some(s) => s,
+            None => {
+                // busy flags make a double checkout impossible; if the
+                // invariant ever breaks, rebuild the window from the pool
+                // rather than wedging it forever
+                let mut pool = shared.pool.lock().unwrap_or_else(|e| e.into_inner());
+                lock(&shared.inner).stats.claim_conflicts += 1;
+                pool.segment(placement.worker_start, placement.workers)
+            }
+        };
+        let batch_size = batch.len();
+        let refunds: Vec<(Placement, f64)> = batch.iter().map(|p| (p.placement, p.cost)).collect();
+        let (segment, outcome) = run_batch(batch, segment, placement);
+
+        // return the window: segment back to the registry, groups freed,
+        // loads refunded where each job was charged (a batch mate's
+        // charged window can differ from the leader's it executed on)
+        let mut inner = lock(&shared.inner);
+        if let Some(segment) = segment {
+            inner.segments.insert(seg_key, segment);
+        }
+        for b in &mut inner.busy[placement.group_start..placement.group_start + placement.group_count]
+        {
+            *b = false;
+        }
+        inner.groups_busy -= placement.group_count;
+        for (charged, cost) in refunds {
+            for l in &mut inner.loads[charged.group_start..charged.group_start + charged.group_count]
+            {
+                *l -= cost;
+            }
+        }
+        inner.stats.completed += outcome.completed;
+        inner.stats.failed += outcome.failed;
+        if batch_size > 1 {
+            inner.stats.batches += 1;
+            inner.stats.batched_jobs += batch_size as u64;
+        }
+        drop(inner);
+        shared.cv.notify_all();
+    }
+}
+
+/// Per-batch completion counts for the stats rollup.
+struct BatchOutcome {
+    completed: u64,
+    failed: u64,
+}
+
+/// Execute one claimed batch on its window — one session, each job's
+/// right-hand side through [`Solver::run_with`] — and send every job's
+/// result. Returns the segment for reinsertion (`None` only on the
+/// impossible-by-construction build failure, which consumes it; the
+/// next claim of that window rebuilds one from the pool).
+fn run_batch(
+    batch: Vec<Pending>,
+    segment: PoolSegment,
+    placement: Placement,
+) -> (Option<PoolSegment>, BatchOutcome) {
+    let batch_size = batch.len();
+    let lead_cfg = batch[0].spec.cfg.clone();
+    let mut outcome = BatchOutcome { completed: 0, failed: 0 };
+    match Solver::builder(&lead_cfg).segment(segment).build() {
+        Ok(mut solver) => {
+            let mut zero: Option<Grid3> = None;
+            for p in batch {
+                let Pending { spec, tx, .. } = p;
+                let JobSpec { cfg, u0, f, h2 } = spec;
+                let mut u = u0;
+                let res = {
+                    let fref = match &f {
+                        Some(f) => f,
+                        None => zero.get_or_insert_with(|| {
+                            let (nz, ny, nx) = lead_cfg.size;
+                            Grid3::zeros(nz, ny, nx)
+                        }),
+                    };
+                    solver.run_with(&mut u, fref, h2, cfg.iters)
+                };
+                match res {
+                    Ok(()) => {
+                        outcome.completed += 1;
+                        let _ = tx.send(Ok(JobOutput { u, placement, batch_size }));
+                    }
+                    Err(e) => {
+                        outcome.failed += 1;
+                        let _ = tx.send(Err(e));
+                    }
+                }
+            }
+            (Some(solver.into_segment().expect("segment-bound session")), outcome)
+        }
+        Err(e) => {
+            // admission re-validates everything build checks, so this
+            // path is unreachable by construction — but a wedged window
+            // would be worse than a surfaced error, so fail the tickets
+            // instead of panicking the executor
+            let msg = format!("{e:#}");
+            outcome.failed = batch.len() as u64;
+            for p in batch {
+                let _ = p.tx.send(Err(anyhow::anyhow!("batch session build failed: {msg}")));
+            }
+            (None, outcome)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Scheme;
+
+    fn svc_cfg() -> ServiceConfig {
+        ServiceConfig { groups: 2, group_width: 4, ..Default::default() }
+    }
+
+    fn job_cfg(scheme: Scheme) -> RunConfig {
+        RunConfig { scheme, size: (10, 12, 9), t: 4, groups: 2, iters: 4, ..Default::default() }
+    }
+
+    #[test]
+    fn jobs_run_and_match_the_serial_reference() {
+        let mut svc = SolverService::new(svc_cfg()).unwrap();
+        for (i, scheme) in [Scheme::JacobiWavefront, Scheme::GsMultiGroup, Scheme::JacobiBaseline]
+            .into_iter()
+            .enumerate()
+        {
+            let cfg = job_cfg(scheme);
+            let f = Grid3::random(10, 12, 9, 7 + i as u64);
+            let u0 = Grid3::random(10, 12, 9, 80 + i as u64);
+            let out =
+                svc.run_job(JobSpec::new(cfg.clone(), u0.clone()).rhs(f.clone(), 0.9)).unwrap();
+            let solver = Solver::builder(&cfg).build().unwrap();
+            let want = solver.reference_with(&u0, &f, 0.9, cfg.iters);
+            assert_eq!(out.u.max_abs_diff(&want), 0.0, "{scheme:?}");
+            assert!(out.placement.group_count >= 1);
+        }
+        let stats = svc.stats();
+        assert_eq!(stats.submitted, 3);
+        assert_eq!(stats.completed, 3);
+        assert_eq!(stats.failed, 0);
+        assert_eq!(stats.claim_conflicts, 0);
+        assert!(svc.loads().iter().all(|&l| l == 0.0), "loads refund on completion");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn admission_rejects_jobs_wider_than_the_machine() {
+        let svc = SolverService::new(ServiceConfig {
+            groups: 2,
+            group_width: 2,
+            ..Default::default()
+        })
+        .unwrap();
+        // GsWavefront team = t * groups = 8 > 2 * 2 workers
+        let cfg = job_cfg(Scheme::GsWavefront);
+        let err = svc.submit(JobSpec::new(cfg, Grid3::zeros(10, 12, 9))).map(|_| ()).unwrap_err();
+        let typed = err.downcast_ref::<AdmissionError>().expect("typed admission error");
+        assert_eq!(typed.team, 8);
+        assert_eq!(typed.needed_groups, 4);
+        assert_eq!(typed.groups, 2);
+        assert_eq!(svc.stats().submitted, 0, "rejected jobs are not counted as submitted");
+    }
+
+    #[test]
+    fn placement_balances_load_and_ties_go_low() {
+        let svc = ServiceConfig { groups: 3, group_width: 4, ..Default::default() };
+        // three identical one-group jobs spread across the groups; the
+        // fourth ties on peak load and lands back on group 0
+        let job = job_cfg(Scheme::JacobiWavefront); // team = t = 4 -> 1 group
+        let plan = svc.admit_plan(&[job.clone(), job.clone(), job.clone(), job.clone()]).unwrap();
+        let starts: Vec<usize> = plan.iter().map(|p| p.group_start).collect();
+        assert_eq!(starts, vec![0, 1, 2, 0]);
+        assert!(plan.iter().all(|p| p.group_count == 1 && p.workers == 4));
+        // deterministic: the same sequence admits to the same plan
+        assert_eq!(
+            svc.admit_plan(&[job.clone(), job.clone(), job.clone(), job]).unwrap(),
+            plan
+        );
+    }
+
+    #[test]
+    fn paused_submissions_follow_the_pure_admission_plan() {
+        let mut svc = SolverService::new(ServiceConfig {
+            groups: 3,
+            group_width: 2,
+            ..Default::default()
+        })
+        .unwrap();
+        // distinct configs so batching cannot merge them
+        let jobs = [
+            job_cfg(Scheme::JacobiMultiGroup),                            // team 2 -> 1 group
+            RunConfig { t: 2, ..job_cfg(Scheme::GsWavefront) },           // team 4 -> 2 groups
+            RunConfig { iters: 8, ..job_cfg(Scheme::JacobiWavefront) },   // team 4 -> 2 groups
+        ];
+        let plan = svc.shared.cfg.admit_plan(&jobs).unwrap();
+        svc.pause();
+        let tickets: Vec<JobTicket> = jobs
+            .iter()
+            .map(|cfg| {
+                svc.submit(JobSpec::new(cfg.clone(), Grid3::random(10, 12, 9, cfg.iters as u64)))
+                    .unwrap()
+            })
+            .collect();
+        // with no completions in between, live placement == the pure plan
+        let charged: Vec<Placement> = tickets.iter().map(|t| t.placement()).collect();
+        assert_eq!(charged, plan);
+        svc.resume();
+        for t in tickets {
+            t.wait().unwrap();
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn batched_jobs_stay_bit_exact() {
+        let mut svc = SolverService::new(svc_cfg()).unwrap();
+        let cfg = job_cfg(Scheme::JacobiWavefront);
+        svc.pause();
+        let tickets: Vec<JobTicket> = (0..3)
+            .map(|i| {
+                let u0 = Grid3::random(10, 12, 9, 100 + i);
+                let f = Grid3::random(10, 12, 9, 200 + i);
+                svc.submit(JobSpec::new(cfg.clone(), u0).rhs(f, 0.8)).unwrap()
+            })
+            .collect();
+        svc.resume();
+        let solver = Solver::builder(&cfg).build().unwrap();
+        for (i, t) in tickets.into_iter().enumerate() {
+            let out = t.wait().unwrap();
+            assert_eq!(out.batch_size, 3, "all three staged jobs share one window");
+            let u0 = Grid3::random(10, 12, 9, 100 + i as u64);
+            let f = Grid3::random(10, 12, 9, 200 + i as u64);
+            let want = solver.reference_with(&u0, &f, 0.8, cfg.iters);
+            assert_eq!(out.u.max_abs_diff(&want), 0.0, "batched job {i}");
+        }
+        let stats = svc.stats();
+        assert_eq!(stats.batches, 1);
+        assert_eq!(stats.batched_jobs, 3);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn oversized_grids_are_never_batched() {
+        let mut svc = SolverService::new(ServiceConfig {
+            batch_cells: 10, // smaller than any valid grid here
+            ..svc_cfg()
+        })
+        .unwrap();
+        let cfg = job_cfg(Scheme::JacobiWavefront);
+        svc.pause();
+        let tickets: Vec<JobTicket> = (0..2)
+            .map(|i| {
+                svc.submit(JobSpec::new(cfg.clone(), Grid3::random(10, 12, 9, i))).unwrap()
+            })
+            .collect();
+        svc.resume();
+        for t in tickets {
+            assert_eq!(t.wait().unwrap().batch_size, 1);
+        }
+        assert_eq!(svc.stats().batches, 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_queued_jobs_and_rejects_new_ones() {
+        let mut svc = SolverService::new(svc_cfg()).unwrap();
+        svc.pause();
+        let cfg = job_cfg(Scheme::GsMultiGroup);
+        let t1 = svc.submit(JobSpec::new(cfg.clone(), Grid3::random(10, 12, 9, 1))).unwrap();
+        let t2 = svc.submit(JobSpec::new(cfg.clone(), Grid3::random(10, 12, 9, 2))).unwrap();
+        svc.shutdown(); // overrides pause: both queued jobs still run
+        assert!(t1.wait().is_ok());
+        assert!(t2.wait().is_ok());
+        let err = svc.submit(JobSpec::new(cfg, Grid3::random(10, 12, 9, 3))).map(|_| ());
+        assert!(err.unwrap_err().to_string().contains("shut down"));
+    }
+
+    #[test]
+    fn multi_rank_jobs_are_rejected() {
+        let svc = SolverService::new(svc_cfg()).unwrap();
+        let cfg = RunConfig { ranks: 2, size: (32, 12, 9), ..job_cfg(Scheme::JacobiWavefront) };
+        let err = svc
+            .submit(JobSpec::new(cfg, Grid3::zeros(32, 12, 9)))
+            .map(|_| ())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("single-rank"), "{err}");
+    }
+
+    #[test]
+    fn mismatched_grids_are_rejected_at_submit() {
+        let svc = SolverService::new(svc_cfg()).unwrap();
+        let cfg = job_cfg(Scheme::JacobiWavefront);
+        assert!(svc.submit(JobSpec::new(cfg.clone(), Grid3::zeros(8, 8, 8))).is_err());
+        let bad_rhs = JobSpec::new(cfg, Grid3::zeros(10, 12, 9)).rhs(Grid3::zeros(8, 8, 8), 1.0);
+        assert!(svc.submit(bad_rhs).is_err());
+    }
+
+    #[test]
+    fn for_host_yields_a_valid_shape() {
+        let cfg = ServiceConfig::for_host();
+        cfg.validate().unwrap();
+        assert!(cfg.groups >= 1 && cfg.group_width >= 1);
+    }
+}

@@ -33,7 +33,7 @@ use crate::stencil::op::{OpInstance, OpKind};
 use crate::Result;
 
 use super::affinity::{pin_hook, PinPolicy, Topology};
-use super::pool::WorkerPool;
+use super::pool::{Dispatch, PoolSegment, WorkerPool};
 use super::runner::{runner_for, SchemeRunner};
 
 /// Builder for a [`Solver`] session. Obtained from [`Solver::builder`];
@@ -41,6 +41,7 @@ use super::runner::{runner_for, SchemeRunner};
 pub struct SolverBuilder {
     cfg: RunConfig,
     pool: Option<WorkerPool>,
+    segment: Option<PoolSegment>,
     pin: PinPolicy,
     rhs: Option<(Grid3, f64)>,
     op: Option<OpInstance>,
@@ -58,6 +59,22 @@ impl SolverBuilder {
     /// [`build`]: SolverBuilder::build
     pub fn pool(mut self, pool: WorkerPool) -> Self {
         self.pool = Some(pool);
+        self
+    }
+
+    /// Bind the session to a [`PoolSegment`] window of a shared pool
+    /// instead of an owned team — the multi-tenant path: sessions on
+    /// disjoint segments of one pool run concurrently, each with its
+    /// own progress table and scratch arena. The segment must hold at
+    /// least the scheme's team (checked at [`build`]; a segment never
+    /// grows — sizing is the pool owner's placement decision), and the
+    /// pin policy is ignored: segment workers are already spawned and
+    /// placed by the pool owner. Mutually exclusive with
+    /// [`SolverBuilder::pool`].
+    ///
+    /// [`build`]: SolverBuilder::build
+    pub fn segment(mut self, segment: PoolSegment) -> Self {
+        self.segment = Some(segment);
         self
     }
 
@@ -112,28 +129,51 @@ impl SolverBuilder {
             None if is_gs => (Grid3::zeros(1, 1, 1), 1.0),
             None => (Grid3::zeros(nz, ny, nx), 1.0),
         };
-        let mut pool = self.pool.unwrap_or_else(|| WorkerPool::new(0));
-        let topo = self
-            .cfg
-            .machine_spec()
-            .map(|m| Topology::of_machine(&m))
-            .unwrap_or_else(Topology::host);
-        // An SMT run with no explicit placement gets the sibling-pair
-        // map: co-scheduled workers (adjacent ids — e.g. one GS
-        // pipeline pair) share a core's two hardware threads, which is
-        // the whole point of asking for SMT (Sec. 6). An explicit
-        // policy always wins.
-        let pin = if self.pin == PinPolicy::None && self.cfg.smt {
-            PinPolicy::SmtPair
-        } else {
-            self.pin
+        let team = match self.segment {
+            Some(segment) => {
+                anyhow::ensure!(
+                    self.pool.is_none(),
+                    "a session binds an owned pool or a borrowed segment, not both"
+                );
+                let need = runner.team_size(&self.cfg);
+                anyhow::ensure!(
+                    need <= segment.capacity(),
+                    "scheme {:?} needs {need} workers but the bound segment holds {} — \
+                     segments never grow; sizing is the pool owner's placement decision",
+                    self.cfg.scheme,
+                    segment.capacity()
+                );
+                // pinning is the pool owner's job: segment workers are
+                // already spawned, so a hook installed here would never
+                // fire anyway
+                Team::Segment(segment)
+            }
+            None => {
+                let mut pool = self.pool.unwrap_or_else(|| WorkerPool::new(0));
+                let topo = self
+                    .cfg
+                    .machine_spec()
+                    .map(|m| Topology::of_machine(&m))
+                    .unwrap_or_else(Topology::host);
+                // An SMT run with no explicit placement gets the
+                // sibling-pair map: co-scheduled workers (adjacent ids —
+                // e.g. one GS pipeline pair) share a core's two hardware
+                // threads, which is the whole point of asking for SMT
+                // (Sec. 6). An explicit policy always wins.
+                let pin = if self.pin == PinPolicy::None && self.cfg.smt {
+                    PinPolicy::SmtPair
+                } else {
+                    self.pin
+                };
+                match pin_hook(pin, topo) {
+                    Some(hook) => pool.set_start_hook(hook),
+                    // a reused pool may carry the previous session's hook
+                    None => pool.clear_start_hook(),
+                }
+                pool.ensure_workers(runner.team_size(&self.cfg));
+                Team::Pool(pool)
+            }
         };
-        match pin_hook(pin, topo) {
-            Some(hook) => pool.set_start_hook(hook),
-            // a reused pool may carry the previous session's hook
-            None => pool.clear_start_hook(),
-        }
-        pool.ensure_workers(runner.team_size(&self.cfg));
         let op = match self.op {
             Some(op) => {
                 anyhow::ensure!(
@@ -147,19 +187,36 @@ impl SolverBuilder {
             }
             None => self.cfg.op.instantiate(self.cfg.size),
         };
-        Ok(Solver { cfg: self.cfg, runner, op, pool, f, h2 })
+        Ok(Solver { cfg: self.cfg, runner, op, team, f, h2 })
+    }
+}
+
+/// The execution resource a session dispatches on: an owned pool, or a
+/// borrowed window of a shared one (the multi-tenant path).
+enum Team {
+    Pool(WorkerPool),
+    Segment(PoolSegment),
+}
+
+impl Team {
+    fn dispatch(&mut self) -> &mut dyn Dispatch {
+        match self {
+            Team::Pool(p) => p,
+            Team::Segment(s) => s,
+        }
     }
 }
 
 /// A reusable execution session: config validated once, scheme resolved
 /// from the registry, team spawned (and optionally pinned) once, scratch
-/// owned by the pool and reused across every [`Solver::run`] call.
+/// owned by the pool or segment and reused across every [`Solver::run`]
+/// call.
 pub struct Solver {
     cfg: RunConfig,
     runner: &'static dyn SchemeRunner,
     /// The session's op instance (coefficient grids live here).
     op: OpInstance,
-    pool: WorkerPool,
+    team: Team,
     f: Grid3,
     h2: f64,
 }
@@ -168,7 +225,14 @@ impl Solver {
     /// Start building a session for `cfg` (the config is cloned; the
     /// builder seeds its pin policy from `cfg.pin`).
     pub fn builder(cfg: &RunConfig) -> SolverBuilder {
-        SolverBuilder { pin: cfg.pin, cfg: cfg.clone(), pool: None, rhs: None, op: None }
+        SolverBuilder {
+            pin: cfg.pin,
+            cfg: cfg.clone(),
+            pool: None,
+            segment: None,
+            rhs: None,
+            op: None,
+        }
     }
 
     /// The scheme this session executes.
@@ -181,12 +245,17 @@ impl Solver {
         self.op.kind()
     }
 
-    /// Workers the session's pool holds. Pool workers are never retired,
-    /// so a `team_size` that stays constant across [`Solver::run`] calls
-    /// proves the session spawned no new threads after
-    /// [`SolverBuilder::build`] — the accounting the tests assert.
+    /// Workers the session's team holds: the pool size for an owned
+    /// team (workers are never retired, so a `team_size` that stays
+    /// constant across [`Solver::run`] calls proves the session spawned
+    /// no new threads after [`SolverBuilder::build`] — the accounting
+    /// the tests assert), or the fixed window capacity for a
+    /// segment-bound session.
     pub fn team_size(&self) -> usize {
-        self.pool.size()
+        match &self.team {
+            Team::Pool(p) => p.size(),
+            Team::Segment(s) => s.capacity(),
+        }
     }
 
     /// Updates performed by one [`Solver::step`] — the scheme's natural
@@ -208,7 +277,28 @@ impl Solver {
             u.shape(),
             self.cfg.size
         );
-        self.runner.execute(&mut self.pool, &self.op, u, &self.f, self.h2, &self.cfg, iters)
+        self.runner.execute(self.team.dispatch(), &self.op, u, &self.f, self.h2, &self.cfg, iters)
+    }
+
+    /// Perform `iters` updates of `u` against a caller-provided rhs,
+    /// leaving the session's stored rhs untouched — the many-RHS /
+    /// one-session path: the multi-tenant service batches small-grid
+    /// jobs with identical configurations through one session, swapping
+    /// only each tenant's grids.
+    pub fn run_with(&mut self, u: &mut Grid3, f: &Grid3, h2: f64, iters: usize) -> Result<()> {
+        anyhow::ensure!(
+            u.shape() == self.cfg.size,
+            "grid shape {:?} does not match the session's configured size {:?}",
+            u.shape(),
+            self.cfg.size
+        );
+        anyhow::ensure!(
+            f.shape() == self.cfg.size,
+            "rhs shape {:?} does not match the session's configured size {:?}",
+            f.shape(),
+            self.cfg.size
+        );
+        self.runner.execute(self.team.dispatch(), &self.op, u, f, h2, &self.cfg, iters)
     }
 
     /// One natural pass of the scheme ([`Solver::step_iters`] updates).
@@ -223,16 +313,41 @@ impl Solver {
         self.runner.reference(&self.op, u0, &self.f, self.h2, &self.cfg, iters)
     }
 
+    /// The serial reference against a caller-provided rhs — what a
+    /// [`Solver::run_with`] call must match bit-exactly.
+    pub fn reference_with(&self, u0: &Grid3, f: &Grid3, h2: f64, iters: usize) -> Grid3 {
+        self.runner.reference(&self.op, u0, f, h2, &self.cfg, iters)
+    }
+
     /// Modeled MLUP/s of this session's configuration on a Tab. 1
     /// machine (the scheme runner's performance-model leg).
     pub fn predict(&self, machine: &crate::simulator::machine::MachineSpec) -> f64 {
         self.runner.predict(machine, &self.cfg)
     }
 
-    /// Tear the session down, returning the pool (team and scratch
-    /// intact) for reuse by another session.
+    /// Tear the session down, returning the owned pool (team and
+    /// scratch intact) for reuse by another session.
+    ///
+    /// # Panics
+    /// When the session is bound to a borrowed [`PoolSegment`] — use
+    /// [`Solver::into_segment`] there.
     pub fn into_pool(self) -> WorkerPool {
-        self.pool
+        match self.team {
+            Team::Pool(pool) => pool,
+            Team::Segment(_) => {
+                panic!("session is bound to a borrowed PoolSegment; use into_segment()")
+            }
+        }
+    }
+
+    /// Tear a segment-bound session down, returning the segment (with
+    /// its warmed scratch arena) to the pool owner; `None` for sessions
+    /// on an owned pool.
+    pub fn into_segment(self) -> Option<PoolSegment> {
+        match self.team {
+            Team::Segment(segment) => Some(segment),
+            Team::Pool(_) => None,
+        }
     }
 }
 
@@ -380,6 +495,94 @@ mod tests {
             let want = serial_reference(&u0, &f, 1.0, 4);
             assert_eq!(u.max_abs_diff(&want), 0.0, "{pin:?}");
         }
+    }
+
+    #[test]
+    fn segment_bound_session_matches_reference() {
+        let mut pool = WorkerPool::new(4);
+        let c = cfg(Scheme::JacobiMultiGroup, (10, 12, 9)); // team = groups = 2
+        let f = Grid3::random(10, 12, 9, 13);
+        let mut solver =
+            Solver::builder(&c).segment(pool.segment(2, 2)).rhs(f, 0.8).build().unwrap();
+        assert_eq!(solver.team_size(), 2, "window capacity, not pool size");
+        let u0 = Grid3::random(10, 12, 9, 14);
+        let mut u = u0.clone();
+        solver.run(&mut u, 8).unwrap();
+        let want = solver.reference(&u0, 8);
+        assert_eq!(u.max_abs_diff(&want), 0.0);
+        assert_eq!(pool.size(), 4, "segment sessions never grow the pool");
+        let seg = solver.into_segment().expect("segment binding comes back");
+        assert_eq!(seg.worker_range(), (2, 2));
+    }
+
+    #[test]
+    fn undersized_segment_is_rejected_at_build() {
+        let mut pool = WorkerPool::new(0);
+        let c = cfg(Scheme::GsWavefront, (10, 12, 9)); // team = t * groups = 8
+        let err = Solver::builder(&c)
+            .segment(pool.segment(0, 4))
+            .build()
+            .map(|_| ())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("needs 8 workers"), "{err}");
+        assert!(err.contains("holds 4"), "{err}");
+    }
+
+    #[test]
+    fn concurrent_sessions_on_one_pool_stay_bit_exact() {
+        // the multi-tenant acceptance: two sessions on disjoint segments
+        // of one pool, running at the same time from different threads,
+        // each bit-identical to its serial reference
+        let mut pool = WorkerPool::new(4);
+        let seg_a = pool.segment(0, 2);
+        let seg_b = pool.segment(2, 2);
+        let mk = |scheme, seed: u64, seg| {
+            let c = cfg(scheme, (10, 12, 9));
+            let f = Grid3::random(10, 12, 9, seed);
+            let solver = Solver::builder(&c).segment(seg).rhs(f, 0.9).build().unwrap();
+            let u0 = Grid3::random(10, 12, 9, seed ^ 0xA5A5);
+            (solver, u0)
+        };
+        let (mut sa, ua0) = mk(Scheme::JacobiMultiGroup, 31, seg_a);
+        let (mut sb, ub0) = mk(Scheme::GsMultiGroup, 32, seg_b);
+        let ta = std::thread::spawn(move || {
+            let mut u = ua0.clone();
+            for _ in 0..4 {
+                sa.run(&mut u, 4).unwrap();
+            }
+            u.max_abs_diff(&sa.reference(&ua0, 16))
+        });
+        let tb = std::thread::spawn(move || {
+            let mut u = ub0.clone();
+            for _ in 0..4 {
+                sb.run(&mut u, 4).unwrap();
+            }
+            u.max_abs_diff(&sb.reference(&ub0, 16))
+        });
+        assert_eq!(ta.join().unwrap(), 0.0, "tenant A diverged");
+        assert_eq!(tb.join().unwrap(), 0.0, "tenant B diverged");
+        assert_eq!(pool.size(), 4, "no growth under concurrent tenants");
+    }
+
+    #[test]
+    fn run_with_leaves_the_session_rhs_untouched() {
+        let c = cfg(Scheme::JacobiWavefront, (10, 9, 8));
+        let f1 = Grid3::random(10, 9, 8, 41);
+        let f2 = Grid3::random(10, 9, 8, 42);
+        let mut solver = Solver::builder(&c).rhs(f1.clone(), 0.7).build().unwrap();
+        let u0 = Grid3::random(10, 9, 8, 43);
+        // a foreign rhs runs against its own reference...
+        let mut u = u0.clone();
+        solver.run_with(&mut u, &f2, 0.5, 4).unwrap();
+        assert_eq!(u.max_abs_diff(&solver.reference_with(&u0, &f2, 0.5, 4)), 0.0);
+        // ...and the stored rhs still drives plain run()
+        let mut v = u0.clone();
+        solver.run(&mut v, 4).unwrap();
+        assert_eq!(v.max_abs_diff(&serial_reference(&u0, &f1, 0.7, 4)), 0.0);
+        // shape mismatches are rejected up front
+        let bad = Grid3::zeros(8, 8, 8);
+        assert!(solver.run_with(&mut u, &bad, 1.0, 4).is_err());
     }
 
     #[test]

@@ -49,7 +49,7 @@ use crate::stencil::op::{StarWindow, StencilOp, MAX_RADIUS};
 use crate::stencil::simd;
 use crate::Result;
 
-use super::pool::WorkerPool;
+use super::pool::Dispatch;
 use super::schedule::{Progress, Schedule};
 use super::wavefront::tmp_slots;
 
@@ -328,14 +328,15 @@ impl<O: StencilOp> Schedule for MultiGroupSchedule<'_, O> {
 }
 
 /// Run `passes` multi-group passes of `op` on `pool` with one schedule —
-/// the pool-level entry point the [`SchemeRunner`] registry, tests and
-/// benches drive. All scratch (plane rings, boundary arrays, per-worker
-/// x-lines) comes from the pool's reusable
-/// [`Scratch`](super::pool::Scratch).
+/// the entry point the [`SchemeRunner`] registry, tests and benches
+/// drive. All scratch (plane rings, boundary arrays, per-worker
+/// x-lines) comes from the dispatcher's reusable
+/// [`Scratch`](super::pool::Scratch) arena, returned by the RAII guard
+/// even when a sweep panics.
 ///
 /// [`SchemeRunner`]: super::runner::SchemeRunner
 pub fn multigroup_passes<O: StencilOp>(
-    pool: &mut WorkerPool,
+    pool: &mut dyn Dispatch,
     op: &O,
     u: &mut Grid3,
     f: &Grid3,
@@ -350,30 +351,21 @@ pub fn multigroup_passes<O: StencilOp>(
     if nz < 2 * r + 1 || ny < 2 * r + 1 || nx < 2 * r + 1 || passes == 0 {
         return Ok(());
     }
-    let mut scratch = pool.take_scratch();
-    let result = (|| -> Result<()> {
-        let schedule = MultiGroupSchedule::new(
-            op,
-            u,
-            f,
-            &mut scratch.planes,
-            &mut scratch.bnd,
-            &mut scratch.lines,
-            h2,
-            cfg,
-        )?;
-        for _ in 0..passes {
-            pool.run(&schedule)?;
-        }
-        Ok(())
-    })();
-    pool.restore_scratch(scratch);
-    result
+    let mut scratch = pool.scratch();
+    // split the guard once so the three arenas borrow disjointly
+    let s = &mut *scratch;
+    let schedule =
+        MultiGroupSchedule::new(op, u, f, &mut s.planes, &mut s.bnd, &mut s.lines, h2, cfg)?;
+    for _ in 0..passes {
+        pool.run(&schedule)?;
+    }
+    Ok(())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::pool::WorkerPool;
     use crate::coordinator::wavefront::{check_iters_multiple, serial_reference, serial_reference_op};
     use crate::stencil::op::{ConstLaplace7, Laplace13, VarCoeff7};
 

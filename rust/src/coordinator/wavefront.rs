@@ -19,8 +19,9 @@
 //! slots.
 //!
 //! The pass is expressed as a [`Schedule`] and dispatched on the
-//! persistent [`WorkerPool`]; repeated passes reuse one thread team and
-//! one temporary ring.
+//! persistent [`WorkerPool`](super::pool::WorkerPool) (or one tenant's
+//! [`PoolSegment`](super::pool::PoolSegment) window of it); repeated
+//! passes reuse one thread team and one temporary ring.
 //!
 //! ## Safety argument (also enforced by the progress protocol)
 //!
@@ -49,7 +50,7 @@ use crate::stencil::op::{op_jacobi_sweep, StarWindow, StencilOp, MAX_RADIUS};
 use crate::Result;
 
 use super::barrier::AnyBarrier;
-use super::pool::WorkerPool;
+use super::pool::Dispatch;
 use super::schedule::{Progress, Schedule};
 
 /// Temporary-ring slots per odd update level for halo radius `r`.
@@ -308,14 +309,16 @@ impl<O: StencilOp> Schedule for WavefrontJacobiSchedule<'_, O> {
 }
 
 /// Run `passes` wavefront passes of `op` on `pool`, one team, one
-/// temporary ring (the ring lives in the pool's reusable
-/// [`Scratch`](super::pool::Scratch), so repeated calls reuse one
-/// allocation). The pool-level entry point the [`SchemeRunner`]
-/// registry, tests and benches drive.
+/// temporary ring (the ring lives in the dispatcher's reusable
+/// [`Scratch`](super::pool::Scratch) arena, so repeated calls reuse one
+/// allocation; the RAII guard hands it back even when a sweep panics).
+/// The entry point the [`SchemeRunner`] registry, tests and benches
+/// drive — `pool` may be a whole [`WorkerPool`](super::pool::WorkerPool)
+/// or one tenant's [`PoolSegment`](super::pool::PoolSegment).
 ///
 /// [`SchemeRunner`]: super::runner::SchemeRunner
 pub fn wavefront_jacobi_passes<O: StencilOp>(
-    pool: &mut WorkerPool,
+    pool: &mut dyn Dispatch,
     op: &O,
     u: &mut Grid3,
     f: &Grid3,
@@ -330,16 +333,12 @@ pub fn wavefront_jacobi_passes<O: StencilOp>(
     if nz < 2 * r + 1 || ny < 2 * r + 1 || nx < 2 * r + 1 || passes == 0 {
         return Ok(());
     }
-    let mut scratch = pool.take_scratch();
-    let result = (|| -> Result<()> {
-        let schedule = WavefrontJacobiSchedule::new(op, u, f, &mut scratch.planes, h2, cfg)?;
-        for _ in 0..passes {
-            pool.run(&schedule)?;
-        }
-        Ok(())
-    })();
-    pool.restore_scratch(scratch);
-    result
+    let mut scratch = pool.scratch();
+    let schedule = WavefrontJacobiSchedule::new(op, u, f, &mut scratch.planes, h2, cfg)?;
+    for _ in 0..passes {
+        pool.run(&schedule)?;
+    }
+    Ok(())
 }
 
 /// Check the iteration count divides into whole passes.
@@ -382,6 +381,7 @@ pub fn serial_reference_op<O: StencilOp + ?Sized>(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::pool::WorkerPool;
     use crate::stencil::op::{ConstLaplace7, Laplace13};
 
     fn run_wf<O: StencilOp>(

@@ -18,8 +18,8 @@
 //!   sweep `s-1` both finished the halo planes sweep `s` reads *and*
 //!   stopped reading the planes sweep `s` writes.
 //!
-//! The pass is a [`Schedule`] on the persistent [`WorkerPool`]
-//! (`S × width` workers). Bit-identical to `S` serial sweeps — asserted
+//! The pass is a [`Schedule`] on the persistent
+//! [`WorkerPool`](super::pool::WorkerPool) (`S × width` workers). Bit-identical to `S` serial sweeps — asserted
 //! by tests for all shapes, group counts, pipeline widths and radii.
 
 use std::marker::PhantomData;
@@ -30,7 +30,7 @@ use crate::stencil::op::{op_gs_line_raw, op_gs_sweep, StencilOp};
 use crate::Result;
 
 use super::pipeline::chunk_lines_r;
-use super::pool::WorkerPool;
+use super::pool::Dispatch;
 use super::schedule::{Progress, Schedule};
 
 /// Configuration of a GS wavefront pass.
@@ -155,7 +155,7 @@ impl<O: StencilOp> Schedule for GsWavefrontSchedule<'_, O> {
 
 /// Run `passes` wavefront passes of `op` on `pool` with one schedule.
 pub fn wavefront_gs_passes<O: StencilOp>(
-    pool: &mut WorkerPool,
+    pool: &mut dyn Dispatch,
     op: &O,
     u: &mut Grid3,
     cfg: &GsWavefrontConfig,
@@ -187,7 +187,7 @@ pub fn wavefront_gs_passes<O: StencilOp>(
 ///
 /// [`SchemeRunner`]: super::runner::SchemeRunner
 pub fn wavefront_gs_iters_passes<O: StencilOp>(
-    pool: &mut WorkerPool,
+    pool: &mut dyn Dispatch,
     op: &O,
     u: &mut Grid3,
     cfg: &GsWavefrontConfig,
@@ -206,6 +206,7 @@ pub fn wavefront_gs_iters_passes<O: StencilOp>(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::pool::WorkerPool;
     use crate::stencil::gauss_seidel::gs_sweeps;
     use crate::stencil::op::{op_gs_sweeps, ConstLaplace7, Laplace13};
 

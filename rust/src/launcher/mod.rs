@@ -16,6 +16,8 @@
 use crate::config::{RunConfig, Scheme};
 use crate::coordinator::pool::panic_message;
 use crate::coordinator::rank::RankSet;
+use crate::coordinator::runner::runner_for;
+use crate::coordinator::service::{JobSpec, ServiceConfig, ServiceStats, SolverService};
 use crate::coordinator::solver::Solver;
 use crate::metrics::{mlups, timed};
 use crate::stencil::grid::Grid3;
@@ -136,6 +138,121 @@ pub fn sweep(configs: Vec<RunConfig>, max_parallel: usize) -> Vec<Result<RunRepo
     out
 }
 
+/// Outcome of one job in a service launch.
+#[derive(Clone, Debug)]
+pub struct ServiceJobReport {
+    /// Submission-order index of the job in the job file.
+    pub job: usize,
+    pub scheme: Scheme,
+    pub op: OpKind,
+    pub size: (usize, usize, usize),
+    pub iters: usize,
+    /// First cache group the job executed on.
+    pub group_start: usize,
+    /// Cache groups the job's window spans.
+    pub group_count: usize,
+    /// Jobs that shared the claimed window (1 = unbatched).
+    pub batch_size: usize,
+    /// Max |diff| against the serial reference (must be 0.0).
+    pub verification_diff: f64,
+}
+
+/// Aggregate outcome of a [`run_service_jobs`] launch.
+#[derive(Clone, Debug)]
+pub struct ServiceReport {
+    pub jobs: Vec<ServiceJobReport>,
+    /// Wall seconds from first submission to last completion.
+    pub seconds: f64,
+    /// Aggregate interior updates over those wall seconds.
+    pub throughput_mlups: f64,
+    pub stats: ServiceStats,
+}
+
+/// Run a job file through the multi-tenant [`SolverService`] —
+/// everything submitted up front, completions in flight concurrently —
+/// and verify every tenant's grid against its serial reference (the
+/// launcher's exactness contract applies per tenant, not just per
+/// process). Grids are seeded per job index, so a service launch is as
+/// reproducible as a `run` launch.
+pub fn run_service_jobs(svc_cfg: ServiceConfig, jobs: &[RunConfig]) -> Result<ServiceReport> {
+    let mut svc = SolverService::new(svc_cfg)?;
+    let inputs: Vec<(Grid3, Grid3)> = jobs
+        .iter()
+        .enumerate()
+        .map(|(i, cfg)| {
+            let (nz, ny, nx) = cfg.size;
+            (Grid3::random(nz, ny, nx, 7 + i as u64), Grid3::random(nz, ny, nx, 1008 + i as u64))
+        })
+        .collect();
+    let h2 = 1.0;
+    let (outputs, dt) = {
+        let (res, dt) = timed(|| -> Result<Vec<_>> {
+            let tickets: Vec<_> = jobs
+                .iter()
+                .zip(&inputs)
+                .map(|(cfg, (f, u0))| {
+                    svc.submit(JobSpec::new(cfg.clone(), u0.clone()).rhs(f.clone(), h2))
+                })
+                .collect::<Result<_>>()?;
+            tickets.into_iter().map(|t| t.wait()).collect()
+        });
+        (res?, dt)
+    };
+    let mut reports = Vec::with_capacity(jobs.len());
+    let mut updates = 0u64;
+    for (i, (cfg, ((f, u0), out))) in jobs.iter().zip(inputs.iter().zip(outputs)).enumerate() {
+        let r = cfg.op.radius();
+        let (nz, ny, nx) = cfg.size;
+        updates += ((nz - 2 * r) * (ny - 2 * r) * (nx - 2 * r) * cfg.iters) as u64;
+        // the registry reference needs no pool of its own
+        let op = cfg.op.instantiate(cfg.size);
+        let want = runner_for(cfg.scheme, cfg.op)?.reference(&op, u0, f, h2, cfg, cfg.iters);
+        reports.push(ServiceJobReport {
+            job: i,
+            scheme: cfg.scheme,
+            op: cfg.op,
+            size: cfg.size,
+            iters: cfg.iters,
+            group_start: out.placement.group_start,
+            group_count: out.placement.group_count,
+            batch_size: out.batch_size,
+            verification_diff: out.u.max_abs_diff(&want),
+        });
+    }
+    let stats = svc.stats();
+    svc.shutdown();
+    Ok(ServiceReport {
+        jobs: reports,
+        seconds: dt.as_secs_f64(),
+        throughput_mlups: mlups(updates, dt),
+        stats,
+    })
+}
+
+/// Render a service report as a CSV block (one row per job).
+pub fn service_to_csv(report: &ServiceReport) -> String {
+    let mut s = String::from(
+        "job,scheme,op,nz,ny,nx,iters,group_start,group_count,batch_size,verify_diff\n",
+    );
+    for j in &report.jobs {
+        s += &format!(
+            "{},{:?},{},{},{},{},{},{},{},{},{:.3e}\n",
+            j.job,
+            j.scheme,
+            j.op.as_str(),
+            j.size.0,
+            j.size.1,
+            j.size.2,
+            j.iters,
+            j.group_start,
+            j.group_count,
+            j.batch_size,
+            j.verification_diff,
+        );
+    }
+    s
+}
+
 /// Render reports as a CSV block (one row per report).
 pub fn to_csv(reports: &[RunReport]) -> String {
     let mut s = String::from(
@@ -252,6 +369,32 @@ mod tests {
         for scheme in Scheme::ALL {
             assert!(csv.contains(&format!("{scheme:?},")), "{scheme:?} missing from:\n{csv}");
         }
+        assert!(csv.contains("GsMultiGroup,"));
+    }
+
+    #[test]
+    fn service_launch_verifies_every_tenant() {
+        // a mixed job file through the multi-tenant service: every
+        // tenant bit-exact, CSV row per job, coherent stats
+        let jobs = vec![
+            cfg(Scheme::JacobiWavefront),
+            cfg(Scheme::GsMultiGroup),
+            cfg(Scheme::JacobiWavefront), // identical twin -> batchable
+            cfg(Scheme::JacobiBaseline),
+        ];
+        let svc_cfg = ServiceConfig { groups: 2, group_width: 4, ..Default::default() };
+        let report = run_service_jobs(svc_cfg, &jobs).unwrap();
+        assert_eq!(report.jobs.len(), 4);
+        for j in &report.jobs {
+            assert_eq!(j.verification_diff, 0.0, "job {} ({:?}) diverged", j.job, j.scheme);
+            assert!(j.group_count >= 1);
+        }
+        assert_eq!(report.stats.completed, 4);
+        assert_eq!(report.stats.claim_conflicts, 0);
+        assert!(report.throughput_mlups > 0.0);
+        let csv = service_to_csv(&report);
+        assert_eq!(csv.lines().count(), 5);
+        assert!(csv.starts_with("job,scheme,"));
         assert!(csv.contains("GsMultiGroup,"));
     }
 

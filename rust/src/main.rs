@@ -9,11 +9,15 @@
 //!                modeled Tab. 1 bandwidths next to it.
 //! * `validate` — cross-layer check: rust engine vs the AOT Pallas
 //!                artifacts via PJRT.
+//! * `service`  — run a job file of experiments through the multi-tenant
+//!                solver service (one pool, ECM-cost placement onto cache
+//!                groups, small-grid batching), each tenant verified.
 //! * `machines` — list the modeled testbed.
 
 use stencilwave::cli::Args;
 use stencilwave::config::{RunConfig, Scheme};
 use stencilwave::coordinator::affinity::PinPolicy;
+use stencilwave::coordinator::service::ServiceConfig;
 use stencilwave::figures;
 use stencilwave::launcher;
 use stencilwave::metrics;
@@ -49,6 +53,15 @@ COMMANDS:
                --ranks shards the z axis across R halo-exchange-coupled
                rank sessions (deep 2R-per-sweep halos for the Jacobi
                family, per-sweep R halos for Gauss-Seidel)
+  service    run a job file through the multi-tenant solver service
+               --jobs <file> [--groups <G>] [--group-width <W>]
+               [--machine <name>] [--max-batch <B>] [--csv]
+               the job file holds `run` config blocks separated by `---`
+               lines; jobs are admitted onto cache-group windows by the
+               ECM-cost placement model, identical small-grid jobs batch
+               through one schedule, and every tenant's result is
+               verified against its serial reference. Defaults to the
+               host's cache-group shape (sysfs)
   figures    regenerate paper tables/figures
                [id|all] --out-dir <dir>
                ids: tab1 fig3a fig3b fig4a fig4b fig8 fig9 fig10 barrier
@@ -117,6 +130,53 @@ fn cmd_run(args: &Args) -> Result<()> {
             "verification failed: schedules must be bit-exact"
         );
     }
+    Ok(())
+}
+
+fn cmd_service(args: &Args) -> Result<()> {
+    args.check_known(&["jobs", "groups", "group-width", "machine", "max-batch", "csv"])?;
+    let path = args
+        .get("jobs")
+        .ok_or_else(|| anyhow::anyhow!("service needs --jobs <file> (blocks separated by ---)"))?;
+    let jobs = RunConfig::load_job_file(std::path::Path::new(path))?;
+    anyhow::ensure!(!jobs.is_empty(), "job file '{path}' holds no jobs");
+    let host = ServiceConfig::for_host();
+    let svc_cfg = ServiceConfig {
+        groups: args.get_usize("groups", host.groups)?,
+        group_width: args.get_usize("group-width", host.group_width)?,
+        machine: args.get("machine").map(|s| s.to_string()),
+        max_batch: args.get_usize("max-batch", host.max_batch)?,
+        ..host
+    };
+    let report = launcher::run_service_jobs(svc_cfg, &jobs)?;
+    if args.get_bool("csv") {
+        print!("{}", launcher::service_to_csv(&report));
+    } else {
+        for j in &report.jobs {
+            println!(
+                "job {:>3}: {:?} op={} {:?} iters={} -> groups {}..{} batch={} max|diff|={:.1e}",
+                j.job,
+                j.scheme,
+                j.op.as_str(),
+                j.size,
+                j.iters,
+                j.group_start,
+                j.group_start + j.group_count,
+                j.batch_size,
+                j.verification_diff
+            );
+        }
+        println!(
+            "{} jobs in {:.3}s aggregate {:.1} MLUP/s ({} batched into {} windows)",
+            report.jobs.len(),
+            report.seconds,
+            report.throughput_mlups,
+            report.stats.batched_jobs,
+            report.stats.batches
+        );
+    }
+    let diverged = report.jobs.iter().filter(|j| j.verification_diff != 0.0).count();
+    anyhow::ensure!(diverged == 0, "{diverged} tenant(s) diverged from the serial reference");
     Ok(())
 }
 
@@ -227,6 +287,7 @@ fn main() -> Result<()> {
     let args = Args::parse(&raw[1..], &["csv", "smt"])?;
     match cmd {
         "run" => cmd_run(&args),
+        "service" => cmd_service(&args),
         "figures" => cmd_figures(&args),
         "stream" => cmd_stream(&args),
         "validate" => cmd_validate(&args),

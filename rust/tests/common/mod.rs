@@ -16,6 +16,8 @@
 
 use stencilwave::config::{RunConfig, Scheme};
 use stencilwave::coordinator::rank::RankSet;
+use stencilwave::coordinator::runner::runner_for;
+use stencilwave::coordinator::service::ServiceConfig;
 use stencilwave::coordinator::solver::Solver;
 use stencilwave::stencil::gauss_seidel::{gs_sweeps, GsKernel};
 use stencilwave::stencil::grid::Grid3;
@@ -177,6 +179,76 @@ pub fn assert_rank_matrix(ranks: usize, seed: u64) {
             assert_rank_parity(&rank_parity_config(scheme, op, ranks), seed);
         }
     }
+}
+
+/// One generated tenant job for the multi-tenant suites: a valid config
+/// plus the seed its grids derive from.
+#[derive(Clone, Debug)]
+pub struct TenantJob {
+    pub cfg: RunConfig,
+    pub seed: u64,
+}
+
+/// Seeded mixed tenant workload over `Scheme::ALL` × `OpKind::ALL`:
+/// `count` jobs drawn by `gen`, each at a parallel width drawn from
+/// `widths`, with `make` mapping (scheme, op, width) to a valid config —
+/// [`parity_config`] for the single-rank service suites,
+/// [`rank_parity_config`] for the distributed harness. One generator,
+/// every multi-tenant suite: the stress, property and rank harnesses
+/// draw from the same distribution, so a scheme × op combination cannot
+/// be stressed in one suite and silently absent from another.
+pub fn tenant_jobs_with(
+    gen: &mut Gen,
+    count: usize,
+    widths: &[usize],
+    make: impl Fn(Scheme, OpKind, usize) -> RunConfig,
+) -> Vec<TenantJob> {
+    (0..count)
+        .map(|_| {
+            let scheme = gen.pick(&Scheme::ALL);
+            let op = gen.pick(&OpKind::ALL);
+            let width = gen.pick(widths).max(1);
+            TenantJob { cfg: make(scheme, op, width), seed: gen.next() }
+        })
+        .collect()
+}
+
+/// [`tenant_jobs_with`] over [`parity_config`] — the service suites'
+/// default workload.
+pub fn tenant_jobs(gen: &mut Gen, count: usize, widths: &[usize]) -> Vec<TenantJob> {
+    tenant_jobs_with(gen, count, widths, parity_config)
+}
+
+/// A tenant job's grids, derived from its seed exactly as
+/// [`assert_bit_parity`] derives them: `(f, u0, h2)` with
+/// `f = random(seed)`, `u0 = random(seed ^ 0xA5A5)`, `h2 = 0.9`.
+pub fn tenant_grids(cfg: &RunConfig, seed: u64) -> (Grid3, Grid3, f64) {
+    let (nz, ny, nx) = cfg.size;
+    (Grid3::random(nz, ny, nx, seed), Grid3::random(nz, ny, nx, seed ^ 0xA5A5), 0.9)
+}
+
+/// The serial per-job reference a multi-tenant execution of this job
+/// must match bit-exactly — straight from the scheme registry, so no
+/// worker team is spawned just to verify.
+pub fn tenant_reference(cfg: &RunConfig, seed: u64) -> Grid3 {
+    let (f, u0, h2) = tenant_grids(cfg, seed);
+    let op = cfg.op.instantiate(cfg.size);
+    runner_for(cfg.scheme, cfg.op).unwrap().reference(&op, &u0, &f, h2, cfg, cfg.iters)
+}
+
+/// A service shape that admits every generated job: `group_width`-wide
+/// cache groups, enough of them for the widest team in `jobs` — and at
+/// least two, so the placement model always has a real choice. Sizing
+/// from the workload keeps the suites valid under any
+/// `STENCILWAVE_THREADS` width list.
+pub fn tenant_service_shape(jobs: &[TenantJob], group_width: usize) -> ServiceConfig {
+    let widest = jobs
+        .iter()
+        .map(|j| runner_for(j.cfg.scheme, j.cfg.op).unwrap().team_size(&j.cfg).max(1))
+        .max()
+        .unwrap_or(1);
+    let groups = widest.div_ceil(group_width).max(2);
+    ServiceConfig { groups, group_width, ..ServiceConfig::default() }
 }
 
 /// Seed-kernel serial reference for `iters` `ConstLaplace7` updates —

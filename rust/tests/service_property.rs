@@ -1,0 +1,168 @@
+//! Property layer for the service's admission/placement model, driven by
+//! the same seeded tenant-job generator as the stress suite. Three
+//! families of invariants, checked over randomized workloads:
+//!
+//! * **Determinism** — `ServiceConfig::admit_plan` is a pure function of
+//!   the job sequence: regenerating a workload from the same seed admits
+//!   to the identical plan, and the live (paused) service charges
+//!   exactly the plan's windows.
+//! * **No oversubscription** — every placement is a whole in-bounds
+//!   window of cache groups, live claims never find a busy group
+//!   (`claim_conflicts == 0`), and `peak_groups_busy` never exceeds the
+//!   machine. Rejected jobs leave the loads untouched.
+//! * **Batching is a scheduling decision** — the same jobs through a
+//!   batching service, a `max_batch = 1` service, and a private serial
+//!   reference produce bit-identical grids.
+
+mod common;
+
+use common::{
+    parity_config, tenant_grids, tenant_jobs, tenant_reference, tenant_service_shape,
+    thread_counts, Gen, TenantJob,
+};
+use stencilwave::config::{RunConfig, Scheme};
+use stencilwave::coordinator::service::{
+    AdmissionError, JobSpec, JobTicket, Placement, ServiceConfig, SolverService,
+};
+use stencilwave::stencil::grid::Grid3;
+use stencilwave::stencil::op::OpKind;
+
+fn cfgs(jobs: &[TenantJob]) -> Vec<RunConfig> {
+    jobs.iter().map(|j| j.cfg.clone()).collect()
+}
+
+#[test]
+fn admission_plans_are_deterministic_in_the_seed() {
+    let widths = thread_counts();
+    for trial in 0..6u64 {
+        let mut g1 = Gen((0x5EED << 4) | trial);
+        let mut g2 = Gen((0x5EED << 4) | trial);
+        let a = tenant_jobs(&mut g1, 12, &widths);
+        let b = tenant_jobs(&mut g2, 12, &widths);
+        let shape = tenant_service_shape(&a, 4);
+        let plan_a = shape.admit_plan(&cfgs(&a)).unwrap();
+        let plan_b = shape.admit_plan(&cfgs(&b)).unwrap();
+        assert_eq!(plan_a, plan_b, "trial {trial}: same seed, same jobs, same plan");
+        // and replanning the very same sequence is a fixpoint
+        assert_eq!(shape.admit_plan(&cfgs(&a)).unwrap(), plan_a);
+    }
+}
+
+#[test]
+fn plans_stay_inside_the_machine() {
+    let widths = thread_counts();
+    for trial in 0..6u64 {
+        let mut gen = Gen(0xB0_A2D + trial);
+        let jobs = tenant_jobs(&mut gen, 16, &widths);
+        let shape = tenant_service_shape(&jobs, 3); // odd width: rounding exercised
+        for (p, job) in shape.admit_plan(&cfgs(&jobs)).unwrap().iter().zip(&jobs) {
+            let ctx = format!("trial {trial}: {:?} x {:?} -> {p:?}", job.cfg.scheme, job.cfg.op);
+            assert!(p.group_count >= 1, "{ctx}");
+            assert!(p.group_start + p.group_count <= shape.groups, "{ctx}");
+            assert_eq!(p.worker_start, p.group_start * shape.group_width, "{ctx}");
+            assert_eq!(p.workers, p.group_count * shape.group_width, "{ctx}");
+        }
+    }
+}
+
+#[test]
+fn paused_services_charge_exactly_the_pure_plan() {
+    let widths = thread_counts();
+    let mut gen = Gen(0xAD417);
+    let jobs = tenant_jobs(&mut gen, 10, &widths);
+    let shape = tenant_service_shape(&jobs, 4);
+    let plan = shape.admit_plan(&cfgs(&jobs)).unwrap();
+    let mut svc = SolverService::new(shape).unwrap();
+    svc.pause();
+    let tickets: Vec<JobTicket> = jobs
+        .iter()
+        .map(|job| {
+            let (f, u0, h2) = tenant_grids(&job.cfg, job.seed);
+            svc.submit(JobSpec::new(job.cfg.clone(), u0).rhs(f, h2)).unwrap()
+        })
+        .collect();
+    let charged: Vec<Placement> = tickets.iter().map(|t| t.placement()).collect();
+    assert_eq!(charged, plan, "live admission under pause == the pure plan");
+    svc.resume();
+    for (job, t) in jobs.iter().zip(tickets) {
+        let out = t.wait().unwrap();
+        assert_eq!(out.u.max_abs_diff(&tenant_reference(&job.cfg, job.seed)), 0.0);
+    }
+    let stats = svc.stats();
+    assert_eq!(stats.claim_conflicts, 0, "no claim ever finds a busy group");
+    assert!(stats.peak_groups_busy <= svc.group_count());
+    svc.shutdown();
+}
+
+#[test]
+fn rejected_jobs_leave_the_service_untouched() {
+    // narrow staged jobs (width 1 -> teams of at most 2) on a 2 × 2
+    // service, then a GsWavefront job with a team of 8: admission must
+    // reject it with the typed error and charge nothing
+    let mut gen = Gen(0x2E_1EC7);
+    let jobs = tenant_jobs(&mut gen, 4, &[1]);
+    let mut svc =
+        SolverService::new(ServiceConfig { groups: 2, group_width: 2, ..Default::default() })
+            .unwrap();
+    svc.pause();
+    for job in &jobs {
+        let (f, u0, h2) = tenant_grids(&job.cfg, job.seed);
+        svc.submit(JobSpec::new(job.cfg.clone(), u0).rhs(f, h2)).unwrap();
+    }
+    let loads_before = svc.loads();
+    let stats_before = svc.stats();
+    let wide = parity_config(Scheme::GsWavefront, OpKind::ConstLaplace7, 4); // team 4 * 2 = 8
+    let (nz, ny, nx) = wide.size;
+    let err = svc.submit(JobSpec::new(wide, Grid3::zeros(nz, ny, nx))).map(|_| ()).unwrap_err();
+    let typed = err.downcast_ref::<AdmissionError>().expect("typed admission error");
+    assert!(typed.needed_groups > typed.groups, "{typed}");
+    assert_eq!(svc.loads(), loads_before, "rejected jobs charge nothing");
+    assert_eq!(svc.stats(), stats_before, "rejected jobs count nowhere");
+    svc.resume();
+    svc.shutdown(); // drains the four staged valid jobs
+    assert_eq!(svc.stats().completed, 4);
+}
+
+#[test]
+fn batching_is_invisible_in_the_bits() {
+    let widths = thread_counts();
+    let mut gen = Gen(0xB175);
+    let lead = tenant_jobs(&mut gen, 1, &widths).remove(0);
+    let seeds: Vec<u64> = (0..5).map(|_| gen.next()).collect();
+    let shape = tenant_service_shape(&[lead.clone()], 4);
+
+    // (a) staged through the batching service: one window, many RHS
+    let mut batching = SolverService::new(shape.clone()).unwrap();
+    batching.pause();
+    let tickets: Vec<JobTicket> = seeds
+        .iter()
+        .map(|&seed| {
+            let (f, u0, h2) = tenant_grids(&lead.cfg, seed);
+            batching.submit(JobSpec::new(lead.cfg.clone(), u0).rhs(f, h2)).unwrap()
+        })
+        .collect();
+    batching.resume();
+    let batched: Vec<Grid3> = tickets
+        .into_iter()
+        .map(|t| {
+            let out = t.wait().unwrap();
+            assert_eq!(out.batch_size, 5, "staged identical small jobs must actually batch");
+            out.u
+        })
+        .collect();
+    assert_eq!(batching.stats().batches, 1);
+    batching.shutdown();
+
+    // (b) the same jobs one-by-one through a batching-disabled service
+    let mut solo = SolverService::new(ServiceConfig { max_batch: 1, ..shape }).unwrap();
+    for (&seed, from_batch) in seeds.iter().zip(&batched) {
+        let (f, u0, h2) = tenant_grids(&lead.cfg, seed);
+        let out = solo.run_job(JobSpec::new(lead.cfg.clone(), u0).rhs(f, h2)).unwrap();
+        assert_eq!(out.batch_size, 1);
+        assert_eq!(out.u.max_abs_diff(from_batch), 0.0, "batched vs unbatched, seed {seed:#x}");
+        // (c) and both match the private serial reference
+        assert_eq!(out.u.max_abs_diff(&tenant_reference(&lead.cfg, seed)), 0.0);
+    }
+    assert_eq!(solo.stats().batches, 0, "max_batch = 1 disables batching outright");
+    solo.shutdown();
+}

@@ -1,0 +1,164 @@
+//! Multi-tenant `SolverService` concurrency stress: N client threads
+//! firing seeded mixed workloads (every `Scheme` × `OpKind`, widths from
+//! `STENCILWAVE_THREADS`) at one service, every result asserted
+//! bit-identical to a private serial per-job reference. Tenancy changes
+//! scheduling — which window a job lands on, what it batches with —
+//! never numerics. The stats invariants ride along: no claim ever finds
+//! a busy group (the oversubscription guard), every accepted job
+//! completes, and a staged storm of identical small jobs batches
+//! deterministically.
+
+mod common;
+
+use std::thread;
+
+use common::{
+    tenant_grids, tenant_jobs, tenant_reference, tenant_service_shape, thread_counts, Gen,
+};
+use stencilwave::coordinator::service::{JobSpec, JobTicket, ServiceConfig, SolverService};
+
+#[test]
+fn concurrent_clients_stay_bit_exact() {
+    let widths = thread_counts();
+    for clients in [2usize, 4] {
+        let per_client = 5usize;
+        let mut gen = Gen(0x57E55 + clients as u64);
+        let jobs = tenant_jobs(&mut gen, clients * per_client, &widths);
+        let mut svc = SolverService::new(tenant_service_shape(&jobs, 4)).unwrap();
+        thread::scope(|s| {
+            for (c, chunk) in jobs.chunks(per_client).enumerate() {
+                let svc = &svc;
+                s.spawn(move || {
+                    for job in chunk {
+                        let (f, u0, h2) = tenant_grids(&job.cfg, job.seed);
+                        let out = svc
+                            .run_job(JobSpec::new(job.cfg.clone(), u0).rhs(f, h2))
+                            .unwrap_or_else(|e| {
+                                panic!("client {c} {:?} x {:?}: {e:#}", job.cfg.scheme, job.cfg.op)
+                            });
+                        let want = tenant_reference(&job.cfg, job.seed);
+                        assert_eq!(
+                            out.u.max_abs_diff(&want),
+                            0.0,
+                            "client {c}: {:?} x {:?} under tenancy vs private serial run",
+                            job.cfg.scheme,
+                            job.cfg.op
+                        );
+                    }
+                });
+            }
+        });
+        let stats = svc.stats();
+        assert_eq!(stats.submitted, (clients * per_client) as u64);
+        assert_eq!(stats.completed, stats.submitted, "every accepted job completes");
+        assert_eq!(stats.failed, 0);
+        assert_eq!(stats.claim_conflicts, 0, "no claim may find a busy group");
+        assert!(stats.peak_groups_busy <= svc.group_count());
+        svc.shutdown();
+    }
+}
+
+#[test]
+fn pipelined_submissions_overlap_and_stay_bit_exact() {
+    // submit-all-then-wait from one client: windows run concurrently
+    // inside the service itself (distinct configs so batching cannot
+    // serialize them), results redeemed out of submission order
+    let widths = thread_counts();
+    let mut gen = Gen(0x0F_F10AD);
+    let jobs = tenant_jobs(&mut gen, 10, &widths);
+    let mut svc = SolverService::new(tenant_service_shape(&jobs, 4)).unwrap();
+    let tickets: Vec<JobTicket> = jobs
+        .iter()
+        .map(|job| {
+            let (f, u0, h2) = tenant_grids(&job.cfg, job.seed);
+            svc.submit(JobSpec::new(job.cfg.clone(), u0).rhs(f, h2)).unwrap()
+        })
+        .collect();
+    for (job, t) in jobs.iter().zip(tickets).rev() {
+        let out = t.wait().unwrap();
+        let want = tenant_reference(&job.cfg, job.seed);
+        assert_eq!(out.u.max_abs_diff(&want), 0.0, "{:?} x {:?}", job.cfg.scheme, job.cfg.op);
+    }
+    let stats = svc.stats();
+    assert_eq!(stats.completed, 10);
+    assert_eq!(stats.claim_conflicts, 0);
+    svc.shutdown();
+}
+
+#[test]
+fn a_staged_storm_of_identical_small_jobs_batches_exactly() {
+    // twelve tenants share one config (batch-eligible by size) but own
+    // distinct seeded grids; staging them behind pause() makes the batch
+    // split deterministic — max_batch mates ride the first window, the
+    // remainder the second — and every tenant still gets its own bits
+    let widths = thread_counts();
+    let mut gen = Gen(0xBA7C);
+    let lead = tenant_jobs(&mut gen, 1, &widths).remove(0);
+    let seeds: Vec<u64> = (0..12).map(|_| gen.next()).collect();
+    let shape = ServiceConfig { max_batch: 8, ..tenant_service_shape(&[lead.clone()], 4) };
+    assert!(
+        {
+            let (nz, ny, nx) = lead.cfg.size;
+            nz * ny * nx <= shape.batch_cells
+        },
+        "generated parity grids must stay batch-eligible"
+    );
+    let mut svc = SolverService::new(shape).unwrap();
+    svc.pause();
+    let tickets: Vec<JobTicket> = seeds
+        .iter()
+        .map(|&seed| {
+            let (f, u0, h2) = tenant_grids(&lead.cfg, seed);
+            svc.submit(JobSpec::new(lead.cfg.clone(), u0).rhs(f, h2)).unwrap()
+        })
+        .collect();
+    svc.resume();
+    let mut batch_sizes: Vec<usize> = Vec::new();
+    for (&seed, t) in seeds.iter().zip(tickets) {
+        let out = t.wait().unwrap();
+        batch_sizes.push(out.batch_size);
+        let want = tenant_reference(&lead.cfg, seed);
+        assert_eq!(out.u.max_abs_diff(&want), 0.0, "batched tenant seed {seed:#x}");
+    }
+    batch_sizes.sort_unstable();
+    assert_eq!(batch_sizes, [vec![4usize; 4], vec![8usize; 8]].concat());
+    let stats = svc.stats();
+    assert_eq!(stats.batches, 2, "12 staged mates split 8 + 4");
+    assert_eq!(stats.batched_jobs, 12);
+    assert_eq!(stats.completed, 12);
+    assert_eq!(stats.claim_conflicts, 0);
+    svc.shutdown();
+}
+
+#[test]
+fn shutdown_under_load_drains_every_outstanding_ticket() {
+    // shut down while jobs are queued and in flight: every ticket
+    // already handed out is still honored bit-exactly (the drain
+    // guarantee under load, not just on an idle queue), and the next
+    // submit is the typed "shut down" rejection — never a hang, never a
+    // dropped ticket
+    let widths = thread_counts();
+    let mut gen = Gen(0xD2A1A);
+    let jobs = tenant_jobs(&mut gen, 8, &widths);
+    let mut svc = SolverService::new(tenant_service_shape(&jobs, 4)).unwrap();
+    let tickets: Vec<JobTicket> = jobs
+        .iter()
+        .map(|job| {
+            let (f, u0, h2) = tenant_grids(&job.cfg, job.seed);
+            svc.submit(JobSpec::new(job.cfg.clone(), u0).rhs(f, h2)).unwrap()
+        })
+        .collect();
+    svc.shutdown();
+    for (job, t) in jobs.iter().zip(tickets) {
+        let out = t.wait().expect("accepted jobs survive the drain");
+        let want = tenant_reference(&job.cfg, job.seed);
+        assert_eq!(out.u.max_abs_diff(&want), 0.0, "{:?} x {:?}", job.cfg.scheme, job.cfg.op);
+    }
+    let stats = svc.stats();
+    assert_eq!(stats.completed, 8);
+    assert_eq!(stats.failed, 0);
+    let job = &jobs[0];
+    let (f, u0, h2) = tenant_grids(&job.cfg, job.seed);
+    let err = svc.submit(JobSpec::new(job.cfg.clone(), u0).rhs(f, h2)).map(|_| ()).unwrap_err();
+    assert!(err.to_string().contains("shut down"), "{err:#}");
+}
