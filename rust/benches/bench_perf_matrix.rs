@@ -1,12 +1,16 @@
 //! Scheme × nt_stores × smt performance matrix with machine-readable
 //! output.
 //!
-//! Runs the three headline schedules — wavefront Jacobi, wavefront GS
-//! and multi-group GS — through full [`Solver`] sessions at every
-//! `{nt_stores on/off} × {smt on/off}` combination, and writes the
-//! results to `BENCH_perf_matrix.json` (`{scheme, op, threads, smt,
-//! nt_stores, mlups}` records) so CI keeps a greppable perf history
-//! after the log scrolls off.
+//! Runs the headline schedules — wavefront Jacobi, diamond-tiled
+//! Jacobi, multi-group Jacobi, wavefront GS and multi-group GS —
+//! through full [`Solver`] sessions at every `{nt_stores on/off} ×
+//! {smt on/off}` combination, and writes the results to
+//! `BENCH_perf_matrix.json` (`{scheme, op, threads, smt, nt_stores,
+//! mlups}` records) so CI keeps a greppable perf history after the log
+//! scrolls off. The diamond/multigroup pair additionally records the
+//! model's crossover verdict (`*_predicted` rows) next to the measured
+//! numbers, so the predicted diamond-vs-multigroup winner can be
+//! checked against reality per machine.
 //!
 //! `nt_stores` changes the *executed* kernels here (streaming stores on
 //! the writes no schedule re-reads), not just the model's traffic
@@ -28,13 +32,21 @@
 use stencilwave::benchkit::{self, BenchRecord};
 use stencilwave::config::{RunConfig, Scheme};
 use stencilwave::coordinator::rank::RankSet;
+use stencilwave::coordinator::runner::runner_for;
 use stencilwave::coordinator::solver::Solver;
+use stencilwave::simulator::machine::MachineSpec;
 use stencilwave::stencil::grid::Grid3;
 
 fn main() {
     let smoke = benchkit::smoke();
     let (n, iters, reps) = if smoke { (32usize, 4usize, 2usize) } else { (96, 8, 3) };
-    let schemes = [Scheme::JacobiWavefront, Scheme::GsWavefront, Scheme::GsMultiGroup];
+    let schemes = [
+        Scheme::JacobiWavefront,
+        Scheme::JacobiDiamond,
+        Scheme::JacobiMultiGroup,
+        Scheme::GsWavefront,
+        Scheme::GsMultiGroup,
+    ];
 
     let mut records: Vec<BenchRecord> = Vec::new();
     benchkit::header("scheme × nt_stores × smt matrix (Solver sessions)");
@@ -79,6 +91,60 @@ fn main() {
             }
         }
     }
+
+    // ---- diamond vs multigroup crossover: the model's verdict on a
+    // Tab. 1 machine next to the measured host numbers at the same
+    // (op, t, groups). Recorded as `*_predicted` rows in the same JSON
+    // so CI history keeps predicted and measured side by side.
+    benchkit::header("diamond vs multigroup crossover (predicted vs measured)");
+    let machine = MachineSpec::by_name("Nehalem EP").unwrap();
+    let crossover_cfg = |scheme| RunConfig {
+        scheme,
+        size: (n, n, n),
+        t: 4,
+        groups: 2,
+        iters,
+        ..Default::default()
+    };
+    let measured = |records: &[BenchRecord], name: &str| {
+        records
+            .iter()
+            .find(|r| r.scheme == name && !r.smt && r.nt_stores)
+            .map(|r| r.mlups)
+            .unwrap_or(0.0)
+    };
+    let mut predicted = Vec::new();
+    for scheme in [Scheme::JacobiDiamond, Scheme::JacobiMultiGroup] {
+        let cfg = crossover_cfg(scheme);
+        let p = runner_for(scheme, cfg.op).unwrap().predict(&machine, &cfg);
+        println!(
+            "  {:<18} predicted {:>8.0} MLUP/s ({})   measured {:>8.2} MLUP/s (host)",
+            scheme.as_str(),
+            p,
+            machine.name,
+            measured(&records, scheme.as_str()),
+        );
+        predicted.push((scheme, p));
+        records.push(BenchRecord {
+            scheme: format!("{}_predicted", scheme.as_str()),
+            op: cfg.op.as_str().to_string(),
+            threads: cfg.t,
+            smt: false,
+            nt_stores: cfg.nt_stores,
+            ranks: 1,
+            mlups: p,
+        });
+    }
+    let predicted_winner = if predicted[0].1 >= predicted[1].1 { predicted[0].0 } else { predicted[1].0 };
+    let dia_meas = measured(&records, Scheme::JacobiDiamond.as_str());
+    let mg_meas = measured(&records, Scheme::JacobiMultiGroup.as_str());
+    let measured_winner =
+        if dia_meas >= mg_meas { Scheme::JacobiDiamond } else { Scheme::JacobiMultiGroup };
+    println!(
+        "  crossover: predicted winner = {}, measured winner = {}",
+        predicted_winner.as_str(),
+        measured_winner.as_str()
+    );
 
     let path = std::path::Path::new("BENCH_perf_matrix.json");
     benchkit::write_records(path, &records).unwrap();

@@ -38,16 +38,24 @@ pub enum Scheme {
     /// interface boundary arrays to the left neighbor under round-lag
     /// flow control.
     GsMultiGroup,
+    /// Diamond-tile temporally blocked Jacobi (Malas/Hager et al.,
+    /// arXiv:1410.3060 adapted to this pool): shrinking/growing y tiles
+    /// that exactly tile the interior at every temporal level, swept by
+    /// a z wavefront — no per-seam boundary arrays and no per-block
+    /// pipeline wind-up, at the price of a wider block requirement
+    /// (`2R·(t-1)` interior lines per tile interval).
+    JacobiDiamond,
 }
 
 impl Scheme {
     /// Every registered scheme (mirrors [`OpKind::ALL`]) — the single
     /// list the tests and sweeps iterate, so a new scheme cannot be
     /// silently missing from coverage.
-    pub const ALL: [Scheme; 6] = [
+    pub const ALL: [Scheme; 7] = [
         Scheme::JacobiBaseline,
         Scheme::JacobiWavefront,
         Scheme::JacobiMultiGroup,
+        Scheme::JacobiDiamond,
         Scheme::GsBaseline,
         Scheme::GsWavefront,
         Scheme::GsMultiGroup,
@@ -63,6 +71,7 @@ impl Scheme {
             Scheme::JacobiBaseline => "jacobi_baseline",
             Scheme::JacobiWavefront => "jacobi_wavefront",
             Scheme::JacobiMultiGroup => "jacobi_multigroup",
+            Scheme::JacobiDiamond => "jacobi_diamond",
             Scheme::GsBaseline => "gs_baseline",
             Scheme::GsWavefront => "gs_wavefront",
             Scheme::GsMultiGroup => "gs_multigroup",
@@ -84,6 +93,7 @@ impl Scheme {
             "jacobi_baseline" => Scheme::JacobiBaseline,
             "jacobi_wavefront" => Scheme::JacobiWavefront,
             "jacobi_multigroup" => Scheme::JacobiMultiGroup,
+            "jacobi_diamond" => Scheme::JacobiDiamond,
             "gs_baseline" => Scheme::GsBaseline,
             "gs_wavefront" => Scheme::GsWavefront,
             "gs_multigroup" => Scheme::GsMultiGroup,
@@ -99,8 +109,11 @@ impl Scheme {
 /// block (the serial forwarding pass for narrower blocks has no sound
 /// one-round-lag analog); the in-place GS decomposition only needs the
 /// `R`-line halo per block (the restriction is *lifted* to `R`: all
-/// levels live in one array, so no forwarded lines exist). Callers that
-/// want to branch on this failure downcast the [`anyhow::Error`]:
+/// levels live in one array, so no forwarded lines exist); the diamond
+/// decomposition needs `2R·(t-1)` lines per tile interval so that two
+/// growing tiles at adjacent seams never overlap at the deepest
+/// temporal level. Callers that want to branch on this failure
+/// downcast the [`anyhow::Error`]:
 ///
 /// ```
 /// use stencilwave::config::{BlockWidthError, RunConfig, Scheme};
@@ -129,10 +142,14 @@ pub struct BlockWidthError {
 
 impl BlockWidthError {
     /// Interior lines per block `scheme` requires for halo radius
-    /// `radius` (0 for schemes without a block decomposition).
-    pub fn required_lines(scheme: Scheme, radius: usize) -> usize {
+    /// `radius` and temporal depth `t` (0 for schemes without a block
+    /// decomposition). Only the diamond rule depends on `t`: its
+    /// growing seam tiles reach `R·(t-1)` lines into each neighboring
+    /// interval.
+    pub fn required_lines(scheme: Scheme, radius: usize, t: usize) -> usize {
         match scheme {
             Scheme::JacobiMultiGroup => 2 * radius,
+            Scheme::JacobiDiamond => 2 * radius * t.saturating_sub(1),
             Scheme::GsMultiGroup => radius,
             _ => 0,
         }
@@ -142,8 +159,8 @@ impl BlockWidthError {
     /// `ny` split into `groups` blocks — the single source every entry
     /// point (config validation and the schedule constructors) uses, so
     /// the error is identical wherever it surfaces.
-    pub fn check(scheme: Scheme, radius: usize, ny: usize, groups: usize) -> Result<()> {
-        let required = Self::required_lines(scheme, radius);
+    pub fn check(scheme: Scheme, radius: usize, ny: usize, groups: usize, t: usize) -> Result<()> {
+        let required = Self::required_lines(scheme, radius, t);
         let interior = ny.saturating_sub(2 * radius);
         if required == 0 || groups <= 1 || interior >= required * groups {
             return Ok(());
@@ -344,7 +361,7 @@ impl RunConfig {
     /// halos are unsound there (see the README halo-depth rule).
     pub fn rank_step(&self) -> usize {
         match self.scheme {
-            Scheme::JacobiWavefront | Scheme::JacobiMultiGroup => self.t,
+            Scheme::JacobiWavefront | Scheme::JacobiMultiGroup | Scheme::JacobiDiamond => self.t,
             _ => 1,
         }
     }
@@ -522,7 +539,10 @@ impl RunConfig {
         );
         anyhow::ensure!(self.t >= 1, "blocking factor must be >= 1");
         anyhow::ensure!(self.groups >= 1, "need at least one thread group");
-        if matches!(self.scheme, Scheme::JacobiWavefront | Scheme::JacobiMultiGroup) {
+        if matches!(
+            self.scheme,
+            Scheme::JacobiWavefront | Scheme::JacobiMultiGroup | Scheme::JacobiDiamond
+        ) {
             anyhow::ensure!(self.t % 2 == 0, "wavefront Jacobi needs even t (in-place tmp scheme)");
             anyhow::ensure!(
                 self.iters % self.t == 0,
@@ -531,7 +551,7 @@ impl RunConfig {
                 self.t
             );
         }
-        BlockWidthError::check(self.scheme, r, ny, self.groups)?;
+        BlockWidthError::check(self.scheme, r, ny, self.groups, self.t)?;
         anyhow::ensure!(self.ranks >= 1, "need at least one rank");
         RankWidthError::check(self.scheme, r, self.halo_depth(), nz, self.ranks)?;
         if let Some(name) = &self.machine {
@@ -696,6 +716,41 @@ mod tests {
         cfg.validate().unwrap();
         // hyphenated CLI spelling parses too
         assert_eq!(Scheme::parse("gs-multigroup").unwrap(), Scheme::GsMultiGroup);
+    }
+
+    #[test]
+    fn diamond_scheme_roundtrip_and_validation() {
+        let mut cfg =
+            RunConfig::from_text("scheme = \"jacobi_diamond\"\nsize = [16, 16, 16]\n").unwrap();
+        assert_eq!(cfg.scheme, Scheme::JacobiDiamond);
+        assert!(!cfg.scheme.is_gs());
+        // t = 4, radius 1: each tile interval needs 2·1·3 = 6 lines
+        cfg.groups = 2;
+        cfg.validate().unwrap(); // 14 interior lines >= 6 * 2
+        let back = RunConfig::from_text(&cfg.to_text()).unwrap();
+        assert_eq!(back.scheme, Scheme::JacobiDiamond);
+        cfg.groups = 3; // 14 < 6 * 3
+        let err = cfg.validate().unwrap_err();
+        let typed = err.downcast_ref::<BlockWidthError>().expect("typed error");
+        assert_eq!((typed.required, typed.groups), (6, 3));
+        // shallower temporal depth relaxes the requirement to 2R(t-1)
+        cfg.t = 2;
+        cfg.iters = 4;
+        cfg.groups = 7; // 14 >= 2 * 7
+        cfg.validate().unwrap();
+        // the even-t / iters-multiple gate applies like the other
+        // temporally blocked Jacobi schemes
+        cfg.t = 3;
+        assert!(cfg.validate().is_err());
+        cfg.t = 2;
+        cfg.iters = 5;
+        assert!(cfg.validate().is_err());
+        // deep-halo rank rule: a t-sweep temporal block per exchange
+        cfg.t = 4;
+        cfg.iters = 8;
+        assert_eq!((cfg.rank_step(), cfg.halo_depth()), (4, 4));
+        // hyphenated CLI spelling parses too
+        assert_eq!(Scheme::parse("jacobi-diamond").unwrap(), Scheme::JacobiDiamond);
     }
 
     #[test]

@@ -1,0 +1,508 @@
+//! Diamond-tile temporal blocking for Jacobi — the multicore wavefront
+//! diamond scheme (Malas/Hager et al., arXiv:1410.3060) adapted to this
+//! crate's pool/schedule core, generic over the [`StencilOp`] layer.
+//!
+//! [`super::spatial_mg`] decomposes y into blocks whose per-level update
+//! regions all skew *downward*; exactness across block seams then needs
+//! per-seam boundary arrays (saving odd-level lines the ring recycles)
+//! and every block pays the z-pipeline wind-up/wind-down waste once per
+//! temporal block. Diamond tiling removes both by alternating two tile
+//! shapes along y that *exactly tile* the interior at every temporal
+//! level:
+//!
+//! * **A tiles** (one per interval `i`) shrink with the level:
+//!   `[starts[i] + R(s-1), starts[i+1] - R(s-1))` (domain edges do not
+//!   shrink — the first/last A tile stays clamped at `R` / `ny-R`);
+//! * **B tiles** (one per interior seam `i = 1..G-1`) grow into the gap
+//!   the A tiles vacate: `[starts[i] - R(s-1), starts[i] + R(s-1))` —
+//!   empty at `s = 1`.
+//!
+//! At every level `s` the A and B regions partition `[R, ny-R)` with no
+//! overlap and no gap, so *one shared* `(t/2) × (2R+2)`-plane temporary
+//! ring holds every odd-level value — a reader indexes it by
+//! `(level, plane, y)` without knowing which tile produced the line,
+//! and no boundary arrays exist at all. The `2G-1` workers interleave
+//! `A_0, B_1, A_1, …, B_{G-1}, A_{G-1}` along y, so adjacent worker ids
+//! are spatially adjacent (which is exactly what
+//! [`PinPolicy::SmtPair`](super::affinity::PinPolicy) co-scheduling
+//! wants: seam neighbors share a core and its cache).
+//!
+//! All tiles co-traverse z as one wavefront (same plane/round mapping as
+//! the other temporally blocked schemes: level `s` updates plane
+//! `k = round + (R-1) - (R+1)(s-1)`), so the whole pass pays the
+//! z-pipeline fill once — not once per block.
+//!
+//! ## Why a symmetric one-round lag suffices (any radius)
+//!
+//! All cross-tile traffic is between y-adjacent tiles, i.e. adjacent
+//! worker ids. For the level-`s` update of plane `k` in round `ρ`:
+//!
+//! * *flow*: every level-`s-1` value read from the neighbor tile (src
+//!   lines for even `s-1`, shared-ring lines for odd `s-1`) was produced
+//!   at plane `<= k+R`, which is round `<= ρ-1` — the `R`-plane halo
+//!   shift exactly cancels one level of lag;
+//! * *anti (ring recycle)*: a tile's odd-level write of plane `k`
+//!   overwrites the ring slot holding plane `k - (2R+2)`, whose last
+//!   neighbor read (level `s+1`, plane `k - (2R+2) + R`) happens exactly
+//!   one round *before* the write — so waiting for the neighbor to
+//!   finish round `ρ-1` is exactly the necessary back-pressure;
+//! * *anti (src)*: an even-level write destroys level-`s-2` src values
+//!   whose last neighbor halo read lies `2R+1` rounds earlier.
+//!
+//! Hence worker `w` at round `ρ` waits for *both* neighbors (`w-1` and
+//! `w+1`) to have completed round `ρ-1`, works, and publishes `ρ`. The
+//! waits only ever reference completed rounds, so the protocol is
+//! acyclic and deadlock-free; `G = 1` degenerates to a single unwaited
+//! worker (the plain single-group wavefront).
+//!
+//! A Gauss-Seidel diamond member is *deferred*: the lexicographic
+//! in-place update order requires lower-y values of the same level
+//! before higher-y ones, but a growing B tile would have to update its
+//! seam lines before the A tile below it finishes that level — the
+//! A-before-B within-level order diamonds need contradicts the GS
+//! recursion (see ROADMAP).
+//!
+//! Result: bit-identical to `t` serial sweeps for every `(t, groups)`
+//! and radius — asserted by the tests, `tests/diamond.rs` and
+//! `launcher::run_experiment` on every launch.
+
+use std::marker::PhantomData;
+
+use crate::config::{BlockWidthError, Scheme};
+use crate::simulator::memory::StoreMode;
+use crate::stencil::grid::Grid3;
+use crate::stencil::op::{StarWindow, StencilOp, MAX_RADIUS};
+use crate::stencil::simd;
+use crate::Result;
+
+use super::pool::Dispatch;
+use super::schedule::{Progress, Schedule};
+use super::wavefront::tmp_slots;
+
+/// Configuration of a diamond-tiled (temporal blocking) pass.
+#[derive(Clone, Copy, Debug)]
+pub struct DiamondConfig {
+    /// Temporal blocking factor `t` (even, >= 2).
+    pub t: usize,
+    /// Tile intervals along y (>= 1). The pass runs `2·groups - 1`
+    /// workers (one A tile per interval, one B tile per interior seam);
+    /// each interval needs `>= 2R(t-1)` interior lines when
+    /// `groups > 1` so two growing seam tiles never meet.
+    pub groups: usize,
+    /// Store mode for the *final-level* (`s == t`) writes back into `u`.
+    /// Earlier even levels are re-read by deeper levels and by seam
+    /// neighbors, so they always use write-allocate stores.
+    pub store: StoreMode,
+    /// Fault-injection knob **for tests only**: weakens every neighbor
+    /// wait from "round - 1" to "round - 1 - wait_slack". 0 (the only
+    /// value the runner ever passes) is the exact protocol; larger
+    /// values let workers run ahead of their seam neighbors, which the
+    /// negative-control test uses to demonstrate the waits are
+    /// load-bearing (parity breaks).
+    pub wait_slack: usize,
+}
+
+impl Default for DiamondConfig {
+    fn default() -> Self {
+        Self { t: 4, groups: 2, store: StoreMode::NonTemporal, wait_slack: 0 }
+    }
+}
+
+impl DiamondConfig {
+    /// Validate the grid-independent part of the configuration (single
+    /// source for every entry point); the per-interval width requirement
+    /// needs the grid and the op radius and lives in
+    /// [`DiamondSchedule::new`].
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.t >= 2 && self.t % 2 == 0,
+            "diamond blocking needs even t >= 2, got {}",
+            self.t
+        );
+        anyhow::ensure!(self.groups >= 1, "need at least one tile interval");
+        Ok(())
+    }
+}
+
+/// One diamond-tiled pass (`t` fused updates of `op`) as a
+/// [`Schedule`]: even workers sweep shrinking A tiles, odd workers the
+/// growing B seam tiles, all time-shifted through z as one wavefront.
+pub struct DiamondSchedule<'g, O: StencilOp> {
+    op: &'g O,
+    src: *mut f64,
+    f: *const f64,
+    /// `(t/2) * (2R+2)` z-x planes — **one shared ring** for every tile
+    /// (the exact-tiling property makes the producer irrelevant).
+    tmp: *mut f64,
+    /// `(2·groups - 1) * nx` per-worker x-line update buffers (disjoint
+    /// slices of pool-owned scratch).
+    lines: *mut f64,
+    nz: usize,
+    ny: usize,
+    nx: usize,
+    t: usize,
+    r: usize,
+    groups: usize,
+    h2: f64,
+    store: StoreMode,
+    wait_slack: usize,
+    /// Interval boundaries over the interior lines `[R, ny-R)`.
+    starts: Vec<usize>,
+    last_round: isize,
+    _borrow: PhantomData<&'g mut f64>,
+}
+
+// SAFETY: at every level the A/B tiles partition the interior, so all
+// writes (shared ring, src, own line slice) are disjoint across
+// workers; the symmetric one-round-lag protocol orders every cross-tile
+// read/write pair (module docs).
+unsafe impl<O: StencilOp> Send for DiamondSchedule<'_, O> {}
+unsafe impl<O: StencilOp> Sync for DiamondSchedule<'_, O> {}
+
+impl<'g, O: StencilOp> DiamondSchedule<'g, O> {
+    /// Build a pass over `u`. `tmp` and `lines` are caller-owned scratch
+    /// buffers (typically the pool's reusable
+    /// [`Scratch`](super::pool::Scratch)), resized here; they must stay
+    /// alive (and untouched) for as long as the schedule runs.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        op: &'g O,
+        u: &'g mut Grid3,
+        f: &'g Grid3,
+        tmp: &'g mut Vec<f64>,
+        lines: &'g mut Vec<f64>,
+        h2: f64,
+        cfg: &DiamondConfig,
+    ) -> Result<Self> {
+        cfg.validate()?;
+        let t = cfg.t;
+        let groups = cfg.groups;
+        let r = op.radius();
+        anyhow::ensure!(r >= 1 && r <= MAX_RADIUS, "unsupported halo radius {r}");
+        anyhow::ensure!(u.shape() == f.shape(), "u/f shape mismatch");
+        op.validate_domain(u.shape())?;
+        let (nz, ny, nx) = u.shape();
+        anyhow::ensure!(
+            nz >= 2 * r + 1 && ny >= 2 * r + 1 && nx >= 2 * r + 1,
+            "grid too small for a radius-{r} diamond pass"
+        );
+        BlockWidthError::check(Scheme::JacobiDiamond, r, ny, groups, t)?;
+        let interior = ny - 2 * r;
+        let plane = ny * nx;
+        let slots = tmp_slots(r);
+        let levels = t / 2;
+        tmp.clear();
+        tmp.resize(levels * slots * plane, 0.0);
+        lines.clear();
+        lines.resize((2 * groups - 1) * nx, 0.0);
+        let starts: Vec<usize> = (0..=groups).map(|b| r + b * interior / groups).collect();
+        let lag = (r + 1) as isize;
+        Ok(Self {
+            op,
+            src: u.data_mut().as_mut_ptr(),
+            f: f.data().as_ptr(),
+            tmp: tmp.as_mut_ptr(),
+            lines: lines.as_mut_ptr(),
+            nz,
+            ny,
+            nx,
+            t,
+            r,
+            groups,
+            h2,
+            store: cfg.store,
+            wait_slack: cfg.wait_slack,
+            starts,
+            last_round: (nz - 2 * r) as isize + lag * (t as isize - 1),
+            _borrow: PhantomData,
+        })
+    }
+}
+
+impl<O: StencilOp> Schedule for DiamondSchedule<'_, O> {
+    fn workers(&self) -> usize {
+        2 * self.groups - 1
+    }
+
+    fn worker(&self, w: usize, progress: &Progress) {
+        let (nz, ny, nx, t, r) = (self.nz, self.ny, self.nx, self.t, self.r);
+        let plane = ny * nx;
+        let slots = tmp_slots(r);
+        let lag = (r + 1) as isize;
+        let n_workers = 2 * self.groups - 1;
+        let tmp = self.tmp;
+        let src = self.src;
+        let f_base = self.f;
+        // even worker 2i: A tile of interval i; odd worker 2i-1: B tile
+        // of seam i (the boundary starts[i])
+        let is_a = w % 2 == 0;
+        let idx = if is_a { w / 2 } else { (w + 1) / 2 };
+        let slack = self.wait_slack as isize;
+
+        // per-level y region of this tile (A shrinks, B grows; the
+        // domain-edge A tiles stay clamped — they absorb the skew the
+        // boundary shell would otherwise demand)
+        let region = |s: usize| -> (usize, usize) {
+            let shift = r * (s - 1);
+            if is_a {
+                let lo = if idx == 0 { r } else { self.starts[idx] + shift };
+                let hi =
+                    if idx + 1 == self.groups { ny - r } else { self.starts[idx + 1] - shift };
+                (lo, hi)
+            } else {
+                (self.starts[idx] - shift, self.starts[idx] + shift)
+            }
+        };
+
+        // level-(s-1) value of line (k, y): src for boundaries and even
+        // levels, the shared ring for odd levels — producer-agnostic, the
+        // exact tiling guarantees a unique writer per (level, k, y).
+        let read_line = |s: usize, k: usize, y: usize| -> *const f64 {
+            if k < r || k >= nz - r || y < r || y >= ny - r {
+                return unsafe { src.add((k * ny + y) * nx) as *const f64 };
+            }
+            let prev = s - 1;
+            if prev % 2 == 0 {
+                // even levels (incl. 0 = original) live in src
+                return unsafe { src.add((k * ny + y) * nx) as *const f64 };
+            }
+            let lvl = (prev - 1) / 2;
+            unsafe { tmp.add((lvl * slots + k % slots) * plane + y * nx) as *const f64 }
+        };
+
+        // scratch line reused across every (round, level, y) iteration —
+        // worker w's disjoint slice of the pool-owned line scratch.
+        // SAFETY: slice `[w*nx, (w+1)*nx)` is written by worker w only.
+        let out: &mut [f64] =
+            unsafe { std::slice::from_raw_parts_mut(self.lines.add(w * nx), nx) };
+        for round in 1..=self.last_round {
+            // symmetric one-round lag: both seam neighbors must have
+            // completed the previous round before this tile's reads
+            // (flow) and overwrites (ring recycle, even-level src) of
+            // shared lines are safe — see module docs. `wait_slack` is
+            // the tests' fault-injection knob; the runner passes 0.
+            if w > 0 {
+                progress.wait_min(w - 1, round - 1 - slack);
+            }
+            if w + 1 < n_workers {
+                progress.wait_min(w + 1, round - 1 - slack);
+            }
+            for s in 1..=t {
+                let k = round + (r as isize - 1) - lag * (s as isize - 1);
+                if k < r as isize || k > (nz - 1 - r) as isize {
+                    continue;
+                }
+                let k = k as usize;
+                let (y_lo, y_hi) = region(s);
+                let lvl = (s - 1) / 2; // ring level index for odd-s writes
+                for y in y_lo..y_hi {
+                    // SAFETY: the one-round-lag protocol freezes every
+                    // line the reads touch and the exact tiling gives
+                    // this tile exclusive write access to its region
+                    // (module docs).
+                    unsafe {
+                        let line = |p: *const f64| std::slice::from_raw_parts(p, nx);
+                        let c = line(read_line(s, k, y));
+                        let win = StarWindow::from_fn(c, r, |dz, dy| {
+                            let kk = (k as isize + dz) as usize;
+                            let yy = (y as isize + dy) as usize;
+                            line(read_line(s, kk, yy))
+                        });
+                        let rhs = std::slice::from_raw_parts(f_base.add((k * ny + y) * nx), nx);
+                        crate::stencil::op::copy_x_edges(out, c, r);
+                        // `out` is reused scratch every iteration — always
+                        // write-allocate; streaming happens on the final
+                        // copy back into `u` below.
+                        self.op.line_update(out, &win, rhs, self.h2, k, y, StoreMode::WriteAllocate);
+                        if s % 2 == 1 {
+                            let dst = tmp.add((lvl * slots + k % slots) * plane + y * nx);
+                            std::ptr::copy_nonoverlapping(out.as_ptr(), dst, nx);
+                        } else if s == t {
+                            // final level: nothing re-reads these lines
+                            // within the pass, so honor the configured
+                            // store mode (streaming skips write-allocate).
+                            let dst = std::slice::from_raw_parts_mut(src.add((k * ny + y) * nx), nx);
+                            simd::stream_copy(dst, out, self.store);
+                        } else {
+                            // intermediate even levels are re-read by
+                            // deeper levels and seam neighbors: keep them
+                            // cache-resident.
+                            let dst = src.add((k * ny + y) * nx);
+                            std::ptr::copy_nonoverlapping(out.as_ptr(), dst, nx);
+                        }
+                    }
+                }
+            }
+            progress.publish(w, round);
+        }
+    }
+}
+
+/// Run `passes` diamond-tiled passes of `op` on `pool` with one
+/// schedule — the entry point the [`SchemeRunner`] registry, tests and
+/// benches drive. All scratch (the shared plane ring and the per-worker
+/// x-lines) comes from the dispatcher's reusable
+/// [`Scratch`](super::pool::Scratch) arena, returned by the RAII guard
+/// even when a sweep panics.
+///
+/// [`SchemeRunner`]: super::runner::SchemeRunner
+pub fn diamond_passes<O: StencilOp>(
+    pool: &mut dyn Dispatch,
+    op: &O,
+    u: &mut Grid3,
+    f: &Grid3,
+    h2: f64,
+    cfg: &DiamondConfig,
+    passes: usize,
+) -> Result<()> {
+    cfg.validate()?;
+    anyhow::ensure!(u.shape() == f.shape(), "u/f shape mismatch");
+    let r = op.radius();
+    let (nz, ny, nx) = u.shape();
+    if nz < 2 * r + 1 || ny < 2 * r + 1 || nx < 2 * r + 1 || passes == 0 {
+        return Ok(());
+    }
+    let mut scratch = pool.scratch();
+    // split the guard once so the two arenas borrow disjointly
+    let s = &mut *scratch;
+    let schedule = DiamondSchedule::new(op, u, f, &mut s.planes, &mut s.lines, h2, cfg)?;
+    for _ in 0..passes {
+        pool.run(&schedule)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::pool::WorkerPool;
+    use crate::coordinator::wavefront::{check_iters_multiple, serial_reference, serial_reference_op};
+    use crate::stencil::op::{Aniso7, ConstLaplace7, Laplace13, VarCoeff7};
+
+    fn run_dia<O: StencilOp>(
+        op: &O,
+        u: &mut Grid3,
+        f: &Grid3,
+        h2: f64,
+        cfg: &DiamondConfig,
+        passes: usize,
+    ) -> Result<()> {
+        let mut pool = WorkerPool::new(0);
+        diamond_passes(&mut pool, op, u, f, h2, cfg, passes)
+    }
+
+    fn check(nz: usize, ny: usize, nx: usize, t: usize, groups: usize) {
+        let f = Grid3::random(nz, ny, nx, 47);
+        let mut u = Grid3::random(nz, ny, nx, 48);
+        let want = serial_reference(&u, &f, 1.1, t);
+        run_dia(&ConstLaplace7, &mut u, &f, 1.1, &DiamondConfig { t, groups, ..Default::default() }, 1)
+            .unwrap();
+        assert_eq!(u.max_abs_diff(&want), 0.0, "{nz}x{ny}x{nx} t={t} G={groups}");
+    }
+
+    fn check_r2(nz: usize, ny: usize, nx: usize, t: usize, groups: usize) {
+        let f = Grid3::random(nz, ny, nx, 57);
+        let mut u = Grid3::random(nz, ny, nx, 58);
+        let want = serial_reference_op(&Laplace13, &u, &f, 1.1, t);
+        run_dia(&Laplace13, &mut u, &f, 1.1, &DiamondConfig { t, groups, ..Default::default() }, 1)
+            .unwrap();
+        assert_eq!(u.max_abs_diff(&want), 0.0, "radius-2 {nz}x{ny}x{nx} t={t} G={groups}");
+    }
+
+    #[test]
+    fn single_interval_matches_serial() {
+        // G = 1 degenerates to the unwaited single-group wavefront
+        check(10, 9, 8, 2, 1);
+        check(10, 9, 8, 4, 1);
+        check(8, 7, 9, 6, 1);
+    }
+
+    #[test]
+    fn two_intervals_match_serial() {
+        check(10, 12, 8, 2, 2);
+        check(10, 16, 8, 4, 2);
+        check(8, 14, 9, 4, 2); // minimum width: 6 interior lines each
+        check(8, 22, 9, 6, 2); // t = 6: 10-line intervals
+    }
+
+    #[test]
+    fn many_intervals_match_serial() {
+        check(8, 11, 8, 2, 4);
+        check(8, 21, 8, 4, 3); // uneven: 19 interior lines over 3
+        check(6, 18, 7, 2, 7);
+    }
+
+    #[test]
+    fn radius2_intervals_match_serial() {
+        check_r2(10, 13, 9, 2, 2); // uneven: 4 + 5 interior lines
+        check_r2(10, 16, 9, 2, 2);
+        check_r2(11, 28, 9, 4, 2); // minimum width: 12 interior lines each
+        check_r2(9, 25, 8, 2, 3);
+    }
+
+    #[test]
+    fn stateful_and_stateless_ops_match_serial() {
+        let op = VarCoeff7::default_for((9, 16, 8));
+        let f = Grid3::random(9, 16, 8, 63);
+        let mut u = Grid3::random(9, 16, 8, 64);
+        let want = serial_reference_op(&op, &u, &f, 0.9, 4);
+        run_dia(&op, &mut u, &f, 0.9, &DiamondConfig { t: 4, groups: 2, ..Default::default() }, 1)
+            .unwrap();
+        assert_eq!(u.max_abs_diff(&want), 0.0);
+        let f = Grid3::random(9, 14, 8, 65);
+        let mut u = Grid3::random(9, 14, 8, 66);
+        let want = serial_reference_op(&Aniso7, &u, &f, 0.9, 2);
+        run_dia(&Aniso7, &mut u, &f, 0.9, &DiamondConfig { t: 2, groups: 3, ..Default::default() }, 1)
+            .unwrap();
+        assert_eq!(u.max_abs_diff(&want), 0.0);
+    }
+
+    #[test]
+    fn iters_multiple_passes_reuse_one_team() {
+        let f = Grid3::random(10, 14, 8, 5);
+        let mut u = Grid3::random(10, 14, 8, 6);
+        let want = serial_reference(&u, &f, 1.0, 12);
+        let cfg = DiamondConfig { t: 2, groups: 3, ..Default::default() };
+        check_iters_multiple(12, cfg.t).unwrap();
+        let mut pool = WorkerPool::new(5);
+        diamond_passes(&mut pool, &ConstLaplace7, &mut u, &f, 1.0, &cfg, 6).unwrap();
+        assert_eq!(u.max_abs_diff(&want), 0.0);
+        // non-multiple is an error at the iters layer
+        assert!(check_iters_multiple(7, cfg.t).is_err());
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let f = Grid3::zeros(8, 8, 8);
+        let mut u = Grid3::random(8, 8, 8, 1);
+        // odd t
+        assert!(run_dia(&ConstLaplace7, &mut u, &f, 1.0, &DiamondConfig { t: 3, groups: 2, ..Default::default() }, 1)
+            .is_err());
+        // zero intervals
+        assert!(run_dia(&ConstLaplace7, &mut u, &f, 1.0, &DiamondConfig { t: 2, groups: 0, ..Default::default() }, 1)
+            .is_err());
+        // intervals too narrow for the seam diamonds (6 interior lines
+        // < 2R(t-1) * 2 = 12): the typed BlockWidthError, same as
+        // RunConfig::validate raises
+        let err = run_dia(&ConstLaplace7, &mut u, &f, 1.0, &DiamondConfig { t: 4, groups: 2, ..Default::default() }, 1)
+            .unwrap_err();
+        let typed = err.downcast_ref::<BlockWidthError>().expect("typed width error");
+        assert_eq!((typed.required, typed.groups), (6, 2));
+        assert_eq!(typed.scheme, Scheme::JacobiDiamond);
+        // radius-2: 8 interior lines < 4 * 3 groups at t = 2
+        let mut v = Grid3::random(8, 12, 8, 2);
+        let fv = Grid3::zeros(8, 12, 8);
+        assert!(run_dia(&Laplace13, &mut v, &fv, 1.0, &DiamondConfig { t: 2, groups: 3, ..Default::default() }, 1)
+            .is_err());
+    }
+
+    #[test]
+    fn degenerate_grid_is_identity() {
+        let mut u = Grid3::random(2, 6, 6, 9);
+        let orig = u.clone();
+        let f = Grid3::zeros(2, 6, 6);
+        run_dia(&ConstLaplace7, &mut u, &f, 1.0, &DiamondConfig { t: 2, ..Default::default() }, 1)
+            .unwrap();
+        assert_eq!(u, orig);
+    }
+}

@@ -154,7 +154,7 @@ impl<'g, O: StencilOp> GsMultiGroupSchedule<'g, O> {
             nz >= 2 * r + 1 && ny >= 2 * r + 1 && nx >= 2 * r + 1,
             "grid too small for a radius-{r} blocked pass"
         );
-        BlockWidthError::check(Scheme::GsMultiGroup, r, ny, groups)?;
+        BlockWidthError::check(Scheme::GsMultiGroup, r, ny, groups, t)?;
         let interior = ny - 2 * r;
         bnd.clear();
         bnd.resize(groups.saturating_sub(1) * t.saturating_sub(1) * nz * r * nx, 0.0);

@@ -30,6 +30,10 @@
 //!   group runs the Fig. 5b pipeline over its y-block in place, saving
 //!   `R`-line per-level boundary arrays for the left neighbor's
 //!   old-value seam reads (width restriction lifted from `2R` to `R`).
+//! * [`diamond`] — diamond-tile temporal blocking (arXiv:1410.3060):
+//!   shrinking/growing y tiles that exactly tile the interior at every
+//!   level, co-swept through z as one wavefront — no boundary arrays,
+//!   no per-block pipeline wind-up, one shared temporary ring.
 //!
 //! Every scheme is generic over a [`StencilOp`](crate::stencil::op::StencilOp)
 //! — the kernel layer supplies the halo radius the schedules honor in
@@ -66,7 +70,7 @@
 //! migration table in the README. Pool-level entry points
 //! (`wavefront_jacobi_passes`, `pipeline_gs_passes`,
 //! `wavefront_gs_iters_passes`, `multigroup_passes`,
-//! `gs_multigroup_iters_passes`) remain public for callers that drive an
+//! `gs_multigroup_iters_passes`, `diamond_passes`) remain public for callers that drive an
 //! explicit [`pool::WorkerPool`] — or, since the multi-tenant service,
 //! any [`pool::Dispatch`] implementor such as a [`pool::PoolSegment`].
 //!
@@ -80,6 +84,7 @@
 
 pub mod affinity;
 pub mod barrier;
+pub mod diamond;
 pub mod gs_multigroup;
 pub mod pipeline;
 pub mod pool;

@@ -8,7 +8,7 @@
 //! single place a scheme lives — implement [`SchemeRunner`] (usually via
 //! one generic struct over [`OpFamily`]) and add the instantiations to
 //! the registry — and the stencil layer is the single place an operator
-//! lives: a new [`OpKind`] plus one registry line per scheme (six
+//! lives: a new [`OpKind`] plus one registry line per scheme (seven
 //! today) light it up in the
 //! [`Solver`](super::solver::Solver) session, the launcher and the CLI.
 //! Each (scheme, op) entry is a distinct monomorphization, so the
@@ -28,15 +28,16 @@ use crate::simulator::ecm::{EcmModel, KernelProfile, Prediction};
 use crate::simulator::machine::MachineSpec;
 use crate::simulator::memory::Dataset;
 use crate::simulator::perfmodel::{
-    multigroup_prediction, wavefront_prediction_for, WavefrontParams,
+    diamond_prediction, multigroup_prediction, wavefront_prediction_for, WavefrontParams,
 };
 use crate::stencil::grid::Grid3;
 use crate::stencil::op::{
-    op_gs_sweeps, op_jacobi_steps, op_jacobi_steps_stored, ConstLaplace7, FusedResidual7,
+    op_gs_sweeps, op_jacobi_steps, op_jacobi_steps_stored, Aniso7, ConstLaplace7, FusedResidual7,
     Laplace13, OpFamily, OpInstance, OpKind, VarCoeff7,
 };
 use crate::Result;
 
+use super::diamond::{diamond_passes, DiamondConfig};
 use super::gs_multigroup::{gs_multigroup_iters_passes, GsMultiGroupConfig};
 use super::pipeline::{pipeline_gs_passes, PipelineConfig};
 use super::pool::Dispatch;
@@ -290,6 +291,68 @@ impl<O: OpFamily> SchemeRunner for JacobiMultiGroupRunner<O> {
     }
 }
 
+/// Diamond-tile temporally blocked Jacobi-style scheme
+/// (arXiv:1410.3060 on this pool core).
+struct JacobiDiamondRunner<O>(PhantomData<O>);
+
+impl<O: OpFamily> SchemeRunner for JacobiDiamondRunner<O> {
+    fn scheme(&self) -> Scheme {
+        Scheme::JacobiDiamond
+    }
+    fn op_kind(&self) -> OpKind {
+        O::KIND
+    }
+    fn team_size(&self, cfg: &RunConfig) -> usize {
+        // one A tile per interval + one B tile per interior seam
+        if cfg.groups <= 1 {
+            1
+        } else {
+            2 * cfg.groups - 1
+        }
+    }
+    fn step_iters(&self, cfg: &RunConfig) -> usize {
+        cfg.t
+    }
+    fn execute(
+        &self,
+        pool: &mut dyn Dispatch,
+        op: &OpInstance,
+        u: &mut Grid3,
+        f: &Grid3,
+        h2: f64,
+        cfg: &RunConfig,
+        iters: usize,
+    ) -> Result<()> {
+        let dc = DiamondConfig {
+            t: cfg.t,
+            groups: cfg.groups,
+            store: cfg.store_mode(),
+            wait_slack: 0,
+        };
+        dc.validate()?;
+        check_iters_multiple(iters, dc.t)?;
+        diamond_passes(pool, O::extract(op), u, f, h2, &dc, iters / dc.t)
+    }
+    fn reference(
+        &self,
+        op: &OpInstance,
+        u0: &Grid3,
+        f: &Grid3,
+        h2: f64,
+        _cfg: &RunConfig,
+        iters: usize,
+    ) -> Grid3 {
+        op_jacobi_steps(O::extract(op), u0, f, h2, iters)
+    }
+    fn predict(&self, machine: &MachineSpec, cfg: &RunConfig) -> f64 {
+        // the diamond model leg: no boundary-array stream, same ring
+        // amortization — strictly less traffic per LUP than the
+        // multi-group decomposition at the same (op, t, groups)
+        diamond_prediction(machine, &wavefront_params(cfg), &profile_for(machine, cfg), cfg.size)
+            .mlups
+    }
+}
+
 /// Pipeline-parallel lexicographic Gauss-Seidel baseline (Fig. 5a).
 struct GsBaselineRunner<O>(PhantomData<O>);
 
@@ -457,25 +520,28 @@ impl<O: OpFamily> SchemeRunner for GsMultiGroupRunner<O> {
 /// `SchemeRunner` + one `op_column!` row. The launcher and CLI are
 /// data-driven over this slice.
 macro_rules! op_column {
-    ($runner:ident, $c7:ident, $vc:ident, $l13:ident, $f7:ident) => {
+    ($runner:ident, $c7:ident, $vc:ident, $l13:ident, $f7:ident, $a7:ident) => {
         static $c7: $runner<ConstLaplace7> = $runner(PhantomData);
         static $vc: $runner<VarCoeff7> = $runner(PhantomData);
         static $l13: $runner<Laplace13> = $runner(PhantomData);
         static $f7: $runner<FusedResidual7> = $runner(PhantomData);
+        static $a7: $runner<Aniso7> = $runner(PhantomData);
     };
 }
 
-op_column!(JacobiBaselineRunner, JB_C7, JB_VC, JB_L13, JB_F7);
-op_column!(JacobiWavefrontRunner, JW_C7, JW_VC, JW_L13, JW_F7);
-op_column!(JacobiMultiGroupRunner, JM_C7, JM_VC, JM_L13, JM_F7);
-op_column!(GsBaselineRunner, GB_C7, GB_VC, GB_L13, GB_F7);
-op_column!(GsWavefrontRunner, GW_C7, GW_VC, GW_L13, GW_F7);
-op_column!(GsMultiGroupRunner, GM_C7, GM_VC, GM_L13, GM_F7);
+op_column!(JacobiBaselineRunner, JB_C7, JB_VC, JB_L13, JB_F7, JB_A7);
+op_column!(JacobiWavefrontRunner, JW_C7, JW_VC, JW_L13, JW_F7, JW_A7);
+op_column!(JacobiMultiGroupRunner, JM_C7, JM_VC, JM_L13, JM_F7, JM_A7);
+op_column!(JacobiDiamondRunner, JD_C7, JD_VC, JD_L13, JD_F7, JD_A7);
+op_column!(GsBaselineRunner, GB_C7, GB_VC, GB_L13, GB_F7, GB_A7);
+op_column!(GsWavefrontRunner, GW_C7, GW_VC, GW_L13, GW_F7, GW_A7);
+op_column!(GsMultiGroupRunner, GM_C7, GM_VC, GM_L13, GM_F7, GM_A7);
 
 static REGISTRY: &[&dyn SchemeRunner] = &[
-    &JB_C7, &JB_VC, &JB_L13, &JB_F7, &JW_C7, &JW_VC, &JW_L13, &JW_F7, &JM_C7, &JM_VC, &JM_L13,
-    &JM_F7, &GB_C7, &GB_VC, &GB_L13, &GB_F7, &GW_C7, &GW_VC, &GW_L13, &GW_F7, &GM_C7, &GM_VC,
-    &GM_L13, &GM_F7,
+    &JB_C7, &JB_VC, &JB_L13, &JB_F7, &JB_A7, &JW_C7, &JW_VC, &JW_L13, &JW_F7, &JW_A7, &JM_C7,
+    &JM_VC, &JM_L13, &JM_F7, &JM_A7, &JD_C7, &JD_VC, &JD_L13, &JD_F7, &JD_A7, &GB_C7, &GB_VC,
+    &GB_L13, &GB_F7, &GB_A7, &GW_C7, &GW_VC, &GW_L13, &GW_F7, &GW_A7, &GM_C7, &GM_VC, &GM_L13,
+    &GM_F7, &GM_A7,
 ];
 
 /// All registered runners (one per scheme × op pair).
@@ -499,11 +565,15 @@ mod tests {
     use crate::simulator::perfmodel::BarrierKind;
 
     fn base_cfg(scheme: Scheme, op: OpKind) -> RunConfig {
+        // the diamond width rule (interior >= 2R(t-1)*groups) does not
+        // admit t = 4 at radius 2 on this 14-line grid; t = 2 fits every
+        // registered op and keeps iters = 4 a multiple of t
+        let t = if scheme == Scheme::JacobiDiamond { 2 } else { 4 };
         RunConfig {
             scheme,
             op,
             size: (14, 14, 14),
-            t: 4,
+            t,
             groups: 2,
             iters: 4,
             machine: Some("Nehalem EP".into()),
@@ -522,15 +592,15 @@ mod tests {
             }
         }
         assert_eq!(runners().count(), Scheme::ALL.len() * OpKind::ALL.len());
-        // 6 schemes x 4 ops, derived from the two ALL lists, never from a
+        // 7 schemes x 5 ops, derived from the two ALL lists, never from a
         // hand-maintained count
-        assert_eq!(runners().count(), 24);
+        assert_eq!(runners().count(), 35);
     }
 
     #[test]
     fn every_registered_runner_predicts_on_every_testbed_machine() {
         // registry-coverage half of the config/CLI round-trip satellite:
-        // all 24 entries resolve and their model leg works everywhere
+        // all 35 entries resolve and their model leg works everywhere
         for m in MachineSpec::testbed() {
             for scheme in Scheme::ALL {
                 for op in OpKind::ALL {
@@ -598,6 +668,24 @@ mod tests {
         // and the in-place signature prices less traffic per LUP than
         // the out-of-place Jacobi decomposition at the same parameters
         assert_ne!(gs_mg.predict(&m, &gs_cfg), mg.predict(&m, &cfg));
+    }
+
+    #[test]
+    fn diamond_prediction_is_specialized() {
+        // the diamond runner gets its own model leg — no boundary-array
+        // stream, 2G-1 workers — so it must not alias the plain
+        // wavefront number nor the multi-group one at equal parameters
+        // (the strict per-LUP traffic ordering vs multigroup is asserted
+        // leg-by-leg in perfmodel's own tests)
+        let m = MachineSpec::by_name("Nehalem EP").unwrap();
+        let cfg = base_cfg(Scheme::JacobiDiamond, OpKind::ConstLaplace7);
+        let dia = runner_for(Scheme::JacobiDiamond, OpKind::ConstLaplace7).unwrap();
+        let wf = runner_for(Scheme::JacobiWavefront, OpKind::ConstLaplace7).unwrap();
+        assert_ne!(dia.predict(&m, &cfg), wf.predict(&m, &cfg));
+        let mut mg_cfg = base_cfg(Scheme::JacobiMultiGroup, OpKind::ConstLaplace7);
+        mg_cfg.t = cfg.t; // base_cfg lowers t for the diamond scheme
+        let mg = runner_for(Scheme::JacobiMultiGroup, OpKind::ConstLaplace7).unwrap();
+        assert_ne!(dia.predict(&m, &cfg), mg.predict(&m, &mg_cfg));
     }
 
     #[test]

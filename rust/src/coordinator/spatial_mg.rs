@@ -150,7 +150,7 @@ impl<'g, O: StencilOp> MultiGroupSchedule<'g, O> {
             nz >= 2 * r + 1 && ny >= 2 * r + 1 && nx >= 2 * r + 1,
             "grid too small for a radius-{r} blocked pass"
         );
-        BlockWidthError::check(Scheme::JacobiMultiGroup, r, ny, groups)?;
+        BlockWidthError::check(Scheme::JacobiMultiGroup, r, ny, groups, t)?;
         let interior = ny - 2 * r;
         let plane = ny * nx;
         let slots = tmp_slots(r);

@@ -40,10 +40,11 @@ COMMANDS:
                --iters <I> --op <o> --ranks <R> --machine <name>
                --pin <none|compact|scatter|smtpair> --smt --csv
                schemes: jacobi-baseline jacobi-wavefront jacobi-multigroup
-                        gs-baseline gs-wavefront gs-multigroup
+                        jacobi-diamond gs-baseline gs-wavefront gs-multigroup
                ops:     laplace7 (paper 7-point) varcoeff (Helmholtz-style
                         coefficient grid) laplace13 (4th-order, radius 2)
                         fused7 (residual folded into the update sweep)
+                        aniso7 (7-point star, per-axis coefficients)
                --pin places workers on cores (cache-group and SMT aware;
                from the Tab. 1 model when --machine names one, else from
                sysfs; Linux backend, no-op elsewhere)

@@ -281,6 +281,108 @@ pub fn multigroup_prediction(
     Prediction::min3(compute, olc, mem, sync_eff)
 }
 
+/// Predicted performance of the diamond-tile temporal blocking scheme
+/// (`Scheme::JacobiDiamond`): `G` shrinking A tiles plus `G-1` growing
+/// B seam tiles exactly tile the y interior at every level, so — unlike
+/// the multi-group decomposition — **no boundary arrays exist** and no
+/// boundary bytes ever cross the memory interface.
+///
+/// Model structure, relative to [`multigroup_prediction`] at the same
+/// `(op, t, groups)`:
+///
+/// * **team** — `2G - 1` workers (one per tile), not `G`; the compute
+///   and OLC rooflines scale with the physical cores that team covers.
+/// * **memory** — the plain `t`-amortized stream,
+///   `mem_bytes_per_lup / t`, with *no* boundary term. This is strictly
+///   below the multi-group per-LUP byte count for `G >= 2`, which is
+///   the crossover the launcher's smoke bench records predicted vs
+///   measured (see [`diamond_crossover`]).
+/// * **synchronization** — per round each worker posts one watermark and
+///   waits on *both* spatial neighbors (the shared-ring recycle makes
+///   the dependency symmetric), so the hand-off is priced at two
+///   pairwise waits per round against one tile-column of work. On small
+///   tiles this can cost more than the multi-group's single wait — the
+///   traffic win and the sync cost are exactly the trade the crossover
+///   captures.
+///
+/// `groups <= 1` degenerates to the plain wavefront model (a single
+/// unwaited tile is just a wavefront sweep).
+pub fn diamond_prediction(
+    m: &MachineSpec,
+    p: &WavefrontParams,
+    profile: &KernelProfile,
+    size: (usize, usize, usize),
+) -> Prediction {
+    let (_nz, ny, nx) = size;
+    if p.groups <= 1 {
+        return wavefront_prediction_for(m, p, profile, size);
+    }
+    let radius = profile.sig.radius;
+    let team = 2 * p.groups - 1;
+    let smt_per_core = if p.smt { m.smt_per_core } else { 1 };
+    let physical_cores = team.div_ceil(smt_per_core).min(m.cores);
+
+    // --- compute / OLC rooflines: 2G-1 tile workers co-sweep one shared
+    // window through the hierarchy at the wavefront's in-cache cost.
+    let (compute, olc, cpl) = blocked_rooflines(m, profile, smt_per_core, physical_cores);
+
+    // --- memory roofline: the t-amortized main stream and nothing else —
+    // the exact tiling leaves no boundary-array stream to charge.
+    let nt = matches!(p.store, StoreMode::NonTemporal) && !profile.sig.in_place;
+    let mem_bytes = profile.sig.mem_bytes_per_lup(nt) / p.t as f64;
+    let mem = m.memory_bandwidth_gbs(team, nt) * 1e3 / mem_bytes;
+
+    // --- synchronization: two neighbor watermark waits per round; work
+    // per round is one tile's share of the interior across t levels.
+    let tile_y = (ny.saturating_sub(2 * radius) / team.max(1)).max(1);
+    let work_cycles = (tile_y * nx * p.t) as f64 * cpl;
+    let wait_cycles = 2.0 * p.barrier.cycles(2, p.smt);
+    let sync_eff = work_cycles / (work_cycles + wait_cycles);
+
+    Prediction::min3(compute, olc, mem, sync_eff)
+}
+
+/// The modeled diamond-vs-multigroup duel at one parameter point — the
+/// autotuned crossover the launcher smoke bench records (predicted
+/// winner next to the measured numbers).
+#[derive(Clone, Copy, Debug)]
+pub struct CrossoverChoice {
+    /// [`diamond_prediction`] at these parameters, MLUP/s.
+    pub diamond_mlups: f64,
+    /// [`multigroup_prediction`] at the same parameters, MLUP/s.
+    pub multigroup_mlups: f64,
+}
+
+impl CrossoverChoice {
+    /// Whether the model picks the diamond scheme here.
+    pub fn diamond_wins(&self) -> bool {
+        self.diamond_mlups >= self.multigroup_mlups
+    }
+
+    /// The winning scheme's config-file name.
+    pub fn winner_name(&self) -> &'static str {
+        if self.diamond_wins() {
+            "jacobi_diamond"
+        } else {
+            "jacobi_multigroup"
+        }
+    }
+}
+
+/// Evaluate the diamond-vs-multigroup crossover for one `(op, t, groups)`
+/// point: both specialized predictions on the same profile and size.
+pub fn diamond_crossover(
+    m: &MachineSpec,
+    p: &WavefrontParams,
+    profile: &KernelProfile,
+    size: (usize, usize, usize),
+) -> CrossoverChoice {
+    CrossoverChoice {
+        diamond_mlups: diamond_prediction(m, p, profile, size).mlups,
+        multigroup_mlups: multigroup_prediction(m, p, profile, size).mlups,
+    }
+}
+
 /// Predicted performance of a z-sharded rank decomposition
 /// ([`RankSet`](crate::coordinator::rank::RankSet)): the multigroup
 /// model extended to `(ranks × groups × t)` with a halo-traffic leg.
@@ -458,6 +560,79 @@ mod tests {
             SIZE,
         );
         assert!(p8.mem_mlups < p4.mem_mlups);
+    }
+
+    #[test]
+    fn diamond_prediction_drops_the_boundary_stream() {
+        use crate::stencil::op::OpKind;
+        let m = MachineSpec::nehalem_ep();
+        let base = WavefrontParams {
+            t: 4,
+            groups: 1,
+            smt: false,
+            kernel: Kernel::JacobiOpt,
+            store: StoreMode::NonTemporal,
+            barrier: BarrierKind::Spin,
+        };
+        for op in OpKind::ALL {
+            let profile = KernelProfile::of_op(op, false, true, m.arch);
+            // groups = 1 degenerates to the plain wavefront model
+            assert_eq!(
+                diamond_prediction(&m, &base, &profile, SIZE).mlups,
+                wavefront_prediction_for(&m, &base, &profile, SIZE).mlups,
+                "{op:?}"
+            );
+            for g in [2usize, 4, 8] {
+                let p = WavefrontParams { groups: g, ..base };
+                let dia = diamond_prediction(&m, &p, &profile, SIZE);
+                let mg = multigroup_prediction(&m, &p, &profile, SIZE);
+                assert!(dia.mlups.is_finite() && dia.mlups > 0.0, "{op:?} g={g}");
+                // the acceptance bound: the diamond memory leg charges
+                // strictly fewer bytes per LUP than the multi-group leg
+                // at the same (op, t, groups) — no boundary arrays, and
+                // its 2G-1 team never sees less bandwidth than G threads
+                assert!(
+                    dia.mem_mlups > mg.mem_mlups,
+                    "{op:?} g={g}: diamond mem {} !> multigroup mem {}",
+                    dia.mem_mlups,
+                    mg.mem_mlups
+                );
+            }
+        }
+        // the whole testbed yields finite positive diamond predictions
+        for machine in MachineSpec::testbed() {
+            let prof = KernelProfile::of_op(OpKind::Laplace13, false, true, machine.arch);
+            let p = WavefrontParams { groups: 3, ..base };
+            let pred = diamond_prediction(&machine, &p, &prof, SIZE);
+            assert!(pred.mlups.is_finite() && pred.mlups > 0.0, "{}", machine.name);
+        }
+    }
+
+    #[test]
+    fn diamond_crossover_reports_both_legs() {
+        use crate::stencil::op::OpKind;
+        let m = MachineSpec::nehalem_ep();
+        let profile = KernelProfile::of_op(OpKind::ConstLaplace7, false, true, m.arch);
+        let p = WavefrontParams {
+            t: 4,
+            groups: 4,
+            smt: false,
+            kernel: Kernel::JacobiOpt,
+            store: StoreMode::NonTemporal,
+            barrier: BarrierKind::Spin,
+        };
+        let c = diamond_crossover(&m, &p, &profile, SIZE);
+        assert_eq!(c.diamond_mlups, diamond_prediction(&m, &p, &profile, SIZE).mlups);
+        assert_eq!(c.multigroup_mlups, multigroup_prediction(&m, &p, &profile, SIZE).mlups);
+        assert_eq!(c.diamond_wins(), c.diamond_mlups >= c.multigroup_mlups);
+        let name = c.winner_name();
+        assert!(name == "jacobi_diamond" || name == "jacobi_multigroup");
+        // the winner must actually be the larger modeled number
+        if c.diamond_wins() {
+            assert!(c.diamond_mlups >= c.multigroup_mlups);
+        } else {
+            assert!(c.multigroup_mlups > c.diamond_mlups);
+        }
     }
 
     #[test]

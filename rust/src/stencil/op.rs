@@ -512,6 +512,93 @@ impl StencilOp for FusedResidual7 {
     }
 }
 
+/// Anisotropic constant-coefficient 7-point star (ROADMAP carry-over):
+/// a heat-equation-style operator with a distinct diffusion weight per
+/// axis, `-(cx ∂²x + cy ∂²y + cz ∂²z) u = f` on a unit-spacing grid.
+///
+/// Jacobi form:
+///
+/// ```text
+/// u = (cx·(u_W + u_E) + cy·(u_S + u_N) + cz·(u_B + u_T) + h²f) / (2(cx+cy+cz))
+/// ```
+///
+/// The GS form applies the homogeneous relaxation in place (new values
+/// behind, old ahead). The weights are compile-time constants chosen
+/// exactly representable in binary ([`Self::CX`] etc.), so the op stays
+/// stateless — same streams as `laplace7`, one more multiply per axis
+/// pair. Both update flavours are plain scalar loops; `store` is
+/// accepted for interface uniformity, values are bit-identical either
+/// way.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Aniso7;
+
+impl Aniso7 {
+    /// x-axis diffusion weight.
+    pub const CX: f64 = 1.0;
+    /// y-axis diffusion weight.
+    pub const CY: f64 = 2.0;
+    /// z-axis diffusion weight.
+    pub const CZ: f64 = 0.5;
+    /// The constant diagonal `2(cx + cy + cz)`.
+    pub const DIAG: f64 = 2.0 * (Self::CX + Self::CY + Self::CZ);
+}
+
+impl StencilOp for Aniso7 {
+    #[inline]
+    fn radius(&self) -> usize {
+        1
+    }
+    fn signature(&self) -> TrafficSignature {
+        OpKind::Aniso7.signature()
+    }
+    fn gs_signature(&self) -> TrafficSignature {
+        OpKind::Aniso7.gs_signature()
+    }
+    #[inline]
+    fn line_update(
+        &self,
+        dst: &mut [f64],
+        win: &StarWindow<'_>,
+        rhs: &[f64],
+        h2: f64,
+        _k: usize,
+        _j: usize,
+        _store: StoreMode,
+    ) {
+        let nx = dst.len();
+        if nx < 2 {
+            return;
+        }
+        for i in 1..nx - 1 {
+            let sx = win.center[i - 1] + win.center[i + 1];
+            let sy = win.ym[0][i] + win.yp[0][i];
+            let sz = win.zm[0][i] + win.zp[0][i];
+            dst[i] =
+                (Self::CX * sx + Self::CY * sy + Self::CZ * sz + h2 * rhs[i]) / Self::DIAG;
+        }
+    }
+    #[inline]
+    fn gs_line_update(
+        &self,
+        line: &mut [f64],
+        win: &GsWindow<'_>,
+        _k: usize,
+        _j: usize,
+        _kernel: GsKernel,
+    ) {
+        let nx = line.len();
+        if nx < 2 {
+            return;
+        }
+        for i in 1..nx - 1 {
+            let sx = line[i - 1] + line[i + 1];
+            let sy = win.ym_new[0][i] + win.yp_old[0][i];
+            let sz = win.zm_new[0][i] + win.zp_old[0][i];
+            line[i] = (Self::CX * sx + Self::CY * sy + Self::CZ * sz) / Self::DIAG;
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // op identity: config-level kind, runtime instance, static family
 
@@ -527,21 +614,32 @@ pub enum OpKind {
     Laplace13,
     /// Fused residual + correction 7-point update.
     FusedResidual7,
+    /// Anisotropic per-axis-coefficient 7-point star.
+    Aniso7,
 }
 
 impl OpKind {
     /// Every registered op kind.
-    pub const ALL: [OpKind; 4] =
-        [OpKind::ConstLaplace7, OpKind::VarCoeff7, OpKind::Laplace13, OpKind::FusedResidual7];
+    pub const ALL: [OpKind; 5] = [
+        OpKind::ConstLaplace7,
+        OpKind::VarCoeff7,
+        OpKind::Laplace13,
+        OpKind::FusedResidual7,
+        OpKind::Aniso7,
+    ];
 
-    /// Parse a `laplace7` / `varcoeff` / `laplace13` / `fused7` op name.
+    /// Parse a `laplace7` / `varcoeff` / `laplace13` / `fused7` /
+    /// `aniso7` op name.
     pub fn parse(s: &str) -> Result<Self> {
         Ok(match s.trim().replace('-', "_").as_str() {
             "laplace7" | "const7" | "const_laplace7" => OpKind::ConstLaplace7,
             "varcoeff" | "varcoeff7" | "helmholtz" => OpKind::VarCoeff7,
             "laplace13" | "radius2" => OpKind::Laplace13,
             "fused7" | "fused" | "residual7" | "fused_residual" => OpKind::FusedResidual7,
-            other => anyhow::bail!("unknown op '{other}' (laplace7/varcoeff/laplace13/fused7)"),
+            "aniso7" | "aniso" | "anisotropic7" => OpKind::Aniso7,
+            other => {
+                anyhow::bail!("unknown op '{other}' (laplace7/varcoeff/laplace13/fused7/aniso7)")
+            }
         })
     }
 
@@ -552,6 +650,7 @@ impl OpKind {
             OpKind::VarCoeff7 => "varcoeff",
             OpKind::Laplace13 => "laplace13",
             OpKind::FusedResidual7 => "fused7",
+            OpKind::Aniso7 => "aniso7",
         }
     }
 
@@ -559,7 +658,7 @@ impl OpKind {
     /// config validator and the performance model need it).
     pub fn radius(self) -> usize {
         match self {
-            OpKind::ConstLaplace7 | OpKind::VarCoeff7 | OpKind::FusedResidual7 => 1,
+            OpKind::ConstLaplace7 | OpKind::VarCoeff7 | OpKind::FusedResidual7 | OpKind::Aniso7 => 1,
             OpKind::Laplace13 => 2,
         }
     }
@@ -600,6 +699,15 @@ impl OpKind {
                 flops_per_lup: 11,
                 radius: 1,
             },
+            // same streams as laplace7; one extra multiply per axis pair
+            // (3 coefficient muls + 6 adds + rhs mul + diagonal mul)
+            OpKind::Aniso7 => TrafficSignature {
+                read_streams: 1,
+                write_streams: 1,
+                in_place: false,
+                flops_per_lup: 11,
+                radius: 1,
+            },
         }
     }
 
@@ -633,6 +741,7 @@ impl OpKind {
             OpKind::VarCoeff7 => OpInstance::VarCoeff(VarCoeff7::default_for_offset(size, z_offset)),
             OpKind::Laplace13 => OpInstance::L13(Laplace13),
             OpKind::FusedResidual7 => OpInstance::Fused7(FusedResidual7),
+            OpKind::Aniso7 => OpInstance::Aniso(Aniso7),
         }
     }
 }
@@ -647,6 +756,7 @@ pub enum OpInstance {
     VarCoeff(VarCoeff7),
     L13(Laplace13),
     Fused7(FusedResidual7),
+    Aniso(Aniso7),
 }
 
 impl OpInstance {
@@ -657,6 +767,7 @@ impl OpInstance {
             OpInstance::VarCoeff(_) => OpKind::VarCoeff7,
             OpInstance::L13(_) => OpKind::Laplace13,
             OpInstance::Fused7(_) => OpKind::FusedResidual7,
+            OpInstance::Aniso(_) => OpKind::Aniso7,
         }
     }
 
@@ -667,6 +778,7 @@ impl OpInstance {
             OpInstance::VarCoeff(op) => op,
             OpInstance::L13(op) => op,
             OpInstance::Fused7(op) => op,
+            OpInstance::Aniso(op) => op,
         }
     }
 }
@@ -722,6 +834,16 @@ impl OpFamily for FusedResidual7 {
         match inst {
             OpInstance::Fused7(op) => op,
             other => panic!("op mismatch: runner wants fused7, session holds {:?}", other.kind()),
+        }
+    }
+}
+
+impl OpFamily for Aniso7 {
+    const KIND: OpKind = OpKind::Aniso7;
+    fn extract(inst: &OpInstance) -> &Self {
+        match inst {
+            OpInstance::Aniso(op) => op,
+            other => panic!("op mismatch: runner wants aniso7, session holds {:?}", other.kind()),
         }
     }
 }
@@ -1086,6 +1208,47 @@ mod tests {
     }
 
     #[test]
+    fn aniso_matches_its_formula_and_names() {
+        let u = Grid3::random(6, 6, 6, 21);
+        let f = Grid3::random(6, 6, 6, 22);
+        let h2 = 0.8;
+        let mut dst = Grid3::zeros(6, 6, 6);
+        op_jacobi_sweep(&Aniso7, &mut dst, &u, &f, h2);
+        for k in 1..5 {
+            for j in 1..5 {
+                for i in 1..5 {
+                    let sx = u.get(k, j, i - 1) + u.get(k, j, i + 1);
+                    let sy = u.get(k, j - 1, i) + u.get(k, j + 1, i);
+                    let sz = u.get(k - 1, j, i) + u.get(k + 1, j, i);
+                    let want = (Aniso7::CX * sx
+                        + Aniso7::CY * sy
+                        + Aniso7::CZ * sz
+                        + h2 * f.get(k, j, i))
+                        / Aniso7::DIAG;
+                    assert_eq!(dst.get(k, j, i), want, "({k},{j},{i})");
+                }
+            }
+        }
+        // a constant grid with f = 0 is a bit-exact fixed point of both
+        // flavours (the weights sum to half the diagonal exactly)
+        let c0 = Grid3::from_fn(5, 5, 5, |_, _, _| 2.25);
+        let zf = Grid3::zeros(5, 5, 5);
+        let mut out = Grid3::zeros(5, 5, 5);
+        op_jacobi_sweep(&Aniso7, &mut out, &c0, &zf, 1.0);
+        assert_eq!(out, c0);
+        let mut v = c0.clone();
+        op_gs_sweep(&Aniso7, &mut v, GsKernel::Interleaved);
+        assert_eq!(v, c0);
+        let s = OpKind::Aniso7.signature();
+        assert_eq!((s.read_streams, s.write_streams, s.radius), (1, 1, 1));
+        assert_eq!(s.mem_bytes_per_lup(true), 16.0); // same streams as laplace7
+        assert!(OpKind::Aniso7.gs_signature().in_place);
+        assert_eq!(OpKind::parse("aniso7").unwrap(), OpKind::Aniso7);
+        assert_eq!(OpKind::parse("anisotropic7").unwrap(), OpKind::Aniso7);
+        assert_eq!(OpKind::Aniso7.as_str(), "aniso7");
+    }
+
+    #[test]
     fn slab_instantiation_matches_global_coefficients() {
         // a varcoeff slab starting at global plane 3 must hold exactly
         // the full-domain field's planes 3..8 — the property the rank
@@ -1107,7 +1270,8 @@ mod tests {
             }
         }
         // stateless ops ignore the offset
-        for kind in [OpKind::ConstLaplace7, OpKind::Laplace13, OpKind::FusedResidual7] {
+        for kind in [OpKind::ConstLaplace7, OpKind::Laplace13, OpKind::FusedResidual7, OpKind::Aniso7]
+        {
             assert_eq!(kind.instantiate_at((5, 5, 5), 7).kind(), kind);
         }
     }

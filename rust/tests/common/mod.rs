@@ -71,6 +71,9 @@ pub fn parity_config(scheme: Scheme, op: OpKind, threads: usize) -> RunConfig {
         Scheme::JacobiBaseline | Scheme::GsBaseline => (threads, 1, 3),
         Scheme::JacobiWavefront => (even(threads), 1, 2 * even(threads)),
         Scheme::JacobiMultiGroup => (4, threads, 8),
+        // t = 2 keeps the diamond width rule (2R(t-1) lines per interval)
+        // satisfiable at every STENCILWAVE_THREADS width on the ny below
+        Scheme::JacobiDiamond => (2, threads, 6),
         Scheme::GsWavefront => (threads, 2, 2 * threads + 1),
         Scheme::GsMultiGroup => (3, threads, 7),
     };
@@ -139,6 +142,7 @@ pub fn rank_parity_config(scheme: Scheme, op: OpKind, ranks: usize) -> RunConfig
         Scheme::JacobiBaseline | Scheme::GsBaseline => (2, 1, 3),
         Scheme::JacobiWavefront => (2, 1, 6),
         Scheme::JacobiMultiGroup => (4, 2, 8),
+        Scheme::JacobiDiamond => (2, 2, 4),
         Scheme::GsWavefront => (2, 2, 5),
         Scheme::GsMultiGroup => (3, 2, 5),
     };

@@ -1,0 +1,137 @@
+//! Diamond-scheme integration suite: randomized awkward extents across
+//! every op and radius, the `STENCILWAVE_THREADS` parity matrix,
+//! schedule-order invariance against the other Jacobi-family schemes,
+//! and a negative control proving the seam-neighbor waits are
+//! load-bearing (a weakened protocol corrupts the grid).
+
+mod common;
+
+use common::{assert_bit_parity, parity_config, thread_counts, Gen};
+use stencilwave::config::{RunConfig, Scheme};
+use stencilwave::coordinator::diamond::{diamond_passes, DiamondConfig, DiamondSchedule};
+use stencilwave::coordinator::pool::WorkerPool;
+use stencilwave::coordinator::schedule::{Progress, Schedule};
+use stencilwave::coordinator::solver::Solver;
+use stencilwave::coordinator::wavefront::serial_reference;
+use stencilwave::stencil::grid::Grid3;
+use stencilwave::stencil::op::{ConstLaplace7, OpKind};
+
+#[test]
+fn randomized_awkward_shapes_stay_bit_exact() {
+    // every op (radius 1 and 2) x t in {2, 4, 6} on grids hugging the
+    // diamond width floor, with deliberately uneven interval splits
+    let mut gen = Gen(0xD1A40D);
+    for op in OpKind::ALL {
+        let r = op.radius();
+        for t in [2usize, 4, 6] {
+            for _ in 0..2 {
+                let groups = gen.range(1, 3);
+                // interior floor: 2R(t-1) lines per interval, plus a
+                // few extra so splits come out uneven
+                let ny = 2 * r + 2 * r * (t - 1) * groups + gen.range(0, 5);
+                let nz = 2 * r + 2 + gen.range(0, 5);
+                let nx = 2 * r + 3 + gen.range(0, 4);
+                let cfg = RunConfig {
+                    scheme: Scheme::JacobiDiamond,
+                    op,
+                    size: (nz, ny, nx),
+                    t,
+                    groups,
+                    iters: 2 * t,
+                    ..Default::default()
+                };
+                cfg.validate().unwrap_or_else(|e| {
+                    panic!("{op:?} t={t} G={groups} {nz}x{ny}x{nx}: {e}")
+                });
+                assert_bit_parity(&cfg, gen.next());
+            }
+        }
+    }
+}
+
+#[test]
+fn thread_matrix_parity() {
+    // the STENCILWAVE_THREADS leg: the shared harness config for every
+    // op at every CI-pinned parallel width
+    for threads in thread_counts() {
+        for op in OpKind::ALL {
+            let cfg = parity_config(Scheme::JacobiDiamond, op, threads);
+            assert_bit_parity(&cfg, 0xD1A5 + threads as u64);
+        }
+    }
+}
+
+#[test]
+fn result_is_schedule_order_invariant() {
+    // one fixed problem through different tile counts, a repeated run,
+    // and the other Jacobi-family schemes: since every member shares the
+    // per-line update (same fp association), all results must be the
+    // identical bit pattern — the traversal order never leaks into the
+    // numerics
+    let (nz, ny, nx) = (12, 14, 9);
+    let f = Grid3::random(nz, ny, nx, 21);
+    let u0 = Grid3::random(nz, ny, nx, 22);
+    let (t, iters) = (2, 4);
+    let run_scheme = |scheme: Scheme, groups: usize| -> Grid3 {
+        let cfg =
+            RunConfig { scheme, size: (nz, ny, nx), t, groups, iters, ..Default::default() };
+        let mut solver = Solver::builder(&cfg).rhs(f.clone(), 0.9).build().unwrap();
+        let mut u = u0.clone();
+        solver.run(&mut u, iters).unwrap();
+        u
+    };
+    let base = run_scheme(Scheme::JacobiDiamond, 2);
+    for groups in [1usize, 3] {
+        assert_eq!(
+            base.max_abs_diff(&run_scheme(Scheme::JacobiDiamond, groups)),
+            0.0,
+            "tile count {groups} changed the bits"
+        );
+    }
+    // run-to-run stability at the same width
+    assert_eq!(base.max_abs_diff(&run_scheme(Scheme::JacobiDiamond, 2)), 0.0);
+    // cross-scheme: wavefront and multigroup compute the same updates
+    assert_eq!(base.max_abs_diff(&run_scheme(Scheme::JacobiWavefront, 1)), 0.0);
+    assert_eq!(base.max_abs_diff(&run_scheme(Scheme::JacobiMultiGroup, 2)), 0.0);
+}
+
+#[test]
+fn weakened_waits_break_parity() {
+    // negative control for the synchronization protocol. The exact
+    // schedule (wait_slack = 0) through the pool is bit-exact; the same
+    // schedule with its neighbor waits weakened into no-ops, executed in
+    // a deterministic dependency-violating order (each worker runs to
+    // completion before the next starts — no racing threads, so the
+    // corruption is reproducible), must NOT match the serial reference.
+    // A hypothetical diamond schedule whose waits were not load-bearing
+    // would pass both runs and fail this test.
+    let (nz, ny, nx) = (20, 12, 8);
+    let f = Grid3::random(nz, ny, nx, 31);
+    let u0 = Grid3::random(nz, ny, nx, 32);
+    let (t, groups) = (2, 2);
+    let want = serial_reference(&u0, &f, 1.0, t);
+
+    let mut u = u0.clone();
+    let mut pool = WorkerPool::new(0);
+    let exact = DiamondConfig { t, groups, wait_slack: 0, ..Default::default() };
+    diamond_passes(&mut pool, &ConstLaplace7, &mut u, &f, 1.0, &exact, 1).unwrap();
+    assert_eq!(u.max_abs_diff(&want), 0.0, "exact protocol must be bit-exact");
+
+    let mut v = u0.clone();
+    let mut tmp = Vec::new();
+    let mut lines = Vec::new();
+    let weak = DiamondConfig { t, groups, wait_slack: 1_000_000, ..Default::default() };
+    let schedule =
+        DiamondSchedule::new(&ConstLaplace7, &mut v, &f, &mut tmp, &mut lines, 1.0, &weak)
+            .unwrap();
+    let progress = Progress::new(schedule.workers());
+    for w in 0..schedule.workers() {
+        schedule.worker(w, &progress);
+    }
+    drop(schedule);
+    assert!(
+        v.max_abs_diff(&want) > 0.0,
+        "running tiles to completion out of dependency order must corrupt \
+         the result — the seam-neighbor waits are doing real work"
+    );
+}
