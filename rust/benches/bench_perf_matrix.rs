@@ -87,6 +87,7 @@ fn main() {
                     nt_stores,
                     ranks: 1,
                     mlups: s.mlups.unwrap(),
+                    extras: vec![],
                 });
             }
         }
@@ -133,6 +134,7 @@ fn main() {
             nt_stores: cfg.nt_stores,
             ranks: 1,
             mlups: p,
+            extras: vec![],
         });
     }
     let predicted_winner = if predicted[0].1 >= predicted[1].1 { predicted[0].0 } else { predicted[1].0 };
@@ -201,6 +203,7 @@ fn main() {
                 nt_stores: cfg.nt_stores,
                 ranks,
                 mlups: s.mlups.unwrap(),
+                extras: vec![],
             });
         }
     }

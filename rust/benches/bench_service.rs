@@ -13,7 +13,10 @@
 //!
 //! Results are written to `BENCH_service.json` (reusing the
 //! `BenchRecord` shape: `scheme` carries the strategy, `threads` the
-//! worker count) so CI keeps a greppable throughput history.
+//! worker count) so CI keeps a greppable throughput history. A fourth
+//! **queue-pressure** case oversubmits a bounded queue at 2× capacity
+//! and sheds a deadline-doomed refill; its `rejected_full` /
+//! `shed_expired` counters land in the JSON as record extras.
 //!
 //! `STENCILWAVE_BENCH_SMOKE=1` shrinks the job list and rep count — the
 //! CI configuration.
@@ -81,6 +84,7 @@ fn main() {
             nt_stores: false,
             ranks: 1,
             mlups,
+            extras: vec![],
         });
     };
 
@@ -139,6 +143,74 @@ fn main() {
         record(strategy, s.mlups.unwrap());
         drop(svc);
     }
+
+    // queue-pressure smoke: oversubmit a bounded queue at 2× capacity
+    // while paused — the second half must bounce with QueueFull — then
+    // drain the accepted half (that drain is the recorded throughput),
+    // then shed a deadline-doomed refill. The reject/shed counters ride
+    // into BENCH_service.json as record extras so CI history keeps the
+    // backpressure behavior greppable, not just the throughput.
+    let cap = 4usize;
+    let svc_cfg = ServiceConfig { max_batch: 1, queue_capacity: cap, ..shape.clone() };
+    let mut svc = SolverService::new(svc_cfg).unwrap();
+    let small = &jobs[0];
+    let grids = |i: usize| {
+        let (nz, ny, nx) = small.size;
+        (Grid3::random(nz, ny, nx, 7 + i as u64), Grid3::random(nz, ny, nx, 1008 + i as u64))
+    };
+    svc.pause();
+    let mut accepted = Vec::new();
+    let mut rejected = 0u64;
+    for i in 0..2 * cap {
+        let (f, u0) = grids(i);
+        match svc.submit(JobSpec::new(small.clone(), u0).rhs(f, 1.0)) {
+            Ok(t) => accepted.push(t),
+            Err(_) => rejected += 1,
+        }
+    }
+    let t0 = std::time::Instant::now();
+    svc.resume();
+    for t in accepted.drain(..) {
+        benchkit::black_box(t.wait().unwrap().u);
+    }
+    let drain = t0.elapsed();
+    let pressure_mlups = (total_updates(&vec![small.clone(); cap]) as f64)
+        / drain.as_secs_f64()
+        / 1e6;
+    // deadline-doomed refill: 1 ms deadlines on a paused queue shed
+    // as typed Expired results without ever starting
+    svc.pause();
+    let mut doomed = small.clone();
+    doomed.deadline_ms = Some(1);
+    let shed_tickets: Vec<JobTicket> = (0..cap)
+        .map(|i| {
+            let (f, u0) = grids(i);
+            svc.submit(JobSpec::new(doomed.clone(), u0).rhs(f, 1.0)).unwrap()
+        })
+        .collect();
+    // a doomed ticket resolves to a typed Expired error, never a hang
+    let shed = shed_tickets.into_iter().map(|t| t.wait()).filter(Result::is_err).count() as u64;
+    let stats = svc.stats();
+    println!(
+        "queue-pressure smoke: {} accepted / {rejected} rejected at capacity {cap}, \
+         {shed} shed on deadline, peak queue {}",
+        stats.completed, stats.max_queue_depth
+    );
+    records.push(BenchRecord {
+        scheme: "queue-pressure".to_string(),
+        op: "mixed".to_string(),
+        threads: workers,
+        smt: false,
+        nt_stores: false,
+        ranks: 1,
+        mlups: pressure_mlups,
+        extras: vec![
+            ("rejected_full".to_string(), stats.rejected_full as f64),
+            ("shed_expired".to_string(), stats.shed_expired as f64),
+            ("max_queue_depth".to_string(), stats.max_queue_depth as f64),
+        ],
+    });
+    svc.shutdown();
 
     let path = std::path::Path::new("BENCH_service.json");
     benchkit::write_records(path, &records).unwrap();

@@ -11,11 +11,11 @@ use std::time::{Duration, Instant};
 pub use std::hint::black_box;
 
 /// True when `STENCILWAVE_BENCH_SMOKE` asks for the CI smoke variant of
-/// a bench (one small case, two timed reps). Usual env-flag convention:
-/// unset, empty and `"0"` all mean off. One home for the check so every
-/// bench binary interprets the flag identically.
+/// a bench (one small case, two timed reps). Shares [`crate::env_flag`]'s
+/// convention (unset / empty / whitespace / `"0"` mean off) so every
+/// bench binary and the SIMD probe interpret flags identically.
 pub fn smoke() -> bool {
-    std::env::var("STENCILWAVE_BENCH_SMOKE").is_ok_and(|v| !v.is_empty() && v != "0")
+    crate::env_flag("STENCILWAVE_BENCH_SMOKE")
 }
 
 /// Timing summary of one benchmark case.
@@ -115,6 +115,10 @@ pub struct BenchRecord {
     pub ranks: usize,
     /// Best-rep throughput in MLUP/s.
     pub mlups: f64,
+    /// Case-specific numeric extras appended as additional JSON keys
+    /// (e.g. the queue-pressure smoke's `rejected_full`/`shed_expired`
+    /// counters). Empty for plain throughput records.
+    pub extras: Vec<(String, f64)>,
 }
 
 fn json_escape(s: &str) -> String {
@@ -135,9 +139,13 @@ fn json_escape(s: &str) -> String {
 pub fn records_to_json(records: &[BenchRecord]) -> String {
     let mut out = String::from("[\n");
     for (i, r) in records.iter().enumerate() {
+        let mut extras = String::new();
+        for (k, v) in &r.extras {
+            extras.push_str(&format!(", \"{}\": {v:.3}", json_escape(k)));
+        }
         out.push_str(&format!(
             "  {{\"scheme\": \"{}\", \"op\": \"{}\", \"threads\": {}, \
-             \"smt\": {}, \"nt_stores\": {}, \"ranks\": {}, \"mlups\": {:.3}}}{}\n",
+             \"smt\": {}, \"nt_stores\": {}, \"ranks\": {}, \"mlups\": {:.3}{}}}{}\n",
             json_escape(&r.scheme),
             json_escape(&r.op),
             r.threads,
@@ -145,6 +153,7 @@ pub fn records_to_json(records: &[BenchRecord]) -> String {
             r.nt_stores,
             r.ranks,
             r.mlups,
+            extras,
             if i + 1 < records.len() { "," } else { "" },
         ));
     }
@@ -192,6 +201,7 @@ mod tests {
                 nt_stores: true,
                 ranks: 1,
                 mlups: 123.456,
+                extras: vec![("rejected_full".into(), 4.0), ("shed_expired".into(), 2.0)],
             },
             BenchRecord {
                 scheme: "gs_multigroup".into(),
@@ -201,6 +211,7 @@ mod tests {
                 nt_stores: false,
                 ranks: 2,
                 mlups: 0.5,
+                extras: vec![],
             },
         ];
         let text = records_to_json(&records);
@@ -212,6 +223,10 @@ mod tests {
         assert_eq!(arr[0].get("nt_stores").unwrap().as_bool(), Some(true));
         assert!((arr[0].get("mlups").unwrap().as_f64().unwrap() - 123.456).abs() < 1e-9);
         assert_eq!(arr[0].get("ranks").unwrap().as_u64(), Some(1));
+        // extras ride as ordinary top-level keys; absent when empty
+        assert_eq!(arr[0].get("rejected_full").unwrap().as_f64(), Some(4.0));
+        assert_eq!(arr[0].get("shed_expired").unwrap().as_f64(), Some(2.0));
+        assert!(arr[1].get("rejected_full").is_none());
         assert_eq!(arr[1].get("op").unwrap().as_str(), Some("a\"b\\c"));
         assert_eq!(arr[1].get("smt").unwrap().as_bool(), Some(true));
         assert_eq!(arr[1].get("ranks").unwrap().as_u64(), Some(2));

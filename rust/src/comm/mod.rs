@@ -93,6 +93,22 @@ pub enum CommError {
         expected: u64,
         got: u64,
     },
+    /// A socket frame failed validation *before* its payload was
+    /// trusted: the wire-supplied length exceeds the receiver's
+    /// maximum expected halo payload, or its byte count would overflow.
+    /// A corrupt or hostile header must never drive an unbounded
+    /// allocation; the offending header rides along so the failure is
+    /// attributable.
+    Frame {
+        rank: usize,
+        peer: Peer,
+        /// Tag of the rejected frame, straight off the wire.
+        tag: u64,
+        /// Claimed payload length in f64 words, straight off the wire.
+        len: u64,
+        /// The receiver's configured maximum payload length.
+        limit: u64,
+    },
     /// The fabric itself is unusable (no such neighbor, socket setup
     /// failure, corrupt frame).
     Fabric(String),
@@ -108,6 +124,11 @@ impl std::fmt::Display for CommError {
                 f,
                 "rank {rank}: protocol violation from {peer} neighbor \
                  (expected tag {expected}, got {got})"
+            ),
+            CommError::Frame { rank, peer, tag, len, limit } => write!(
+                f,
+                "rank {rank}: oversized frame from {peer} neighbor \
+                 (tag {tag} claims {len} words, payload limit {limit})"
             ),
             CommError::Fabric(msg) => write!(f, "comm fabric error: {msg}"),
         }
@@ -240,16 +261,44 @@ fn write_frame(stream: &mut TcpStream, msg: &HaloMsg) -> std::io::Result<()> {
     stream.write_all(&buf)
 }
 
-fn read_frame(stream: &mut TcpStream) -> std::io::Result<HaloMsg> {
+/// A frame header the receiver refused to honor: the claimed payload
+/// length is over the configured limit (or `len * 8` would overflow
+/// the byte count). Produced by the reader thread, surfaced to the
+/// consumer as [`CommError::Frame`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FrameViolation {
+    pub tag: u64,
+    pub len: u64,
+    pub limit: u64,
+}
+
+fn read_frame(
+    stream: &mut TcpStream,
+    max_payload_len: usize,
+) -> std::io::Result<Result<HaloMsg, FrameViolation>> {
     let mut header = [0u8; 16];
     stream.read_exact(&mut header)?;
     let tag = u64::from_le_bytes(header[..8].try_into().unwrap());
-    let len = u64::from_le_bytes(header[8..].try_into().unwrap()) as usize;
-    let mut raw = vec![0u8; len * 8];
+    let len = u64::from_le_bytes(header[8..].try_into().unwrap());
+    // validate the wire length BEFORE allocating: the old `len * 8`
+    // could overflow usize (debug panic / release wrap into a short,
+    // non-multiple-of-8 buffer that `chunks_exact(8)` then silently
+    // truncated), and even a non-overflowing corrupt length triggered
+    // an unbounded allocation. Checked u64 arithmetic plus the
+    // receiver's halo-payload cap close both; `bytes` is exactly
+    // `len * 8` afterwards, so the f64 decode can never see a ragged
+    // remainder.
+    let bytes = match len.checked_mul(8).and_then(|b| usize::try_from(b).ok()) {
+        Some(b) if len <= max_payload_len as u64 => b,
+        _ => {
+            return Ok(Err(FrameViolation { tag, len, limit: max_payload_len as u64 }));
+        }
+    };
+    let mut raw = vec![0u8; bytes];
     stream.read_exact(&mut raw)?;
     let payload =
         raw.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect();
-    Ok(HaloMsg { tag, payload })
+    Ok(Ok(HaloMsg { tag, payload }))
 }
 
 /// Socket transport over localhost TCP — the same chain protocol as
@@ -264,17 +313,43 @@ fn read_frame(stream: &mut TcpStream) -> std::io::Result<HaloMsg> {
 pub struct SocketTransport {
     rank: usize,
     ranks: usize,
+    max_payload_len: usize,
     streams: [Option<TcpStream>; 2],
-    rx: [Option<Receiver<HaloMsg>>; 2],
+    rx: [Option<Receiver<Result<HaloMsg, FrameViolation>>>; 2],
 }
+
+/// Fallback frame-payload cap for [`SocketTransport::fabric_local`]
+/// when the caller has no tighter bound: 2^24 f64 words = 128 MiB per
+/// frame. Large enough for any halo this codebase exchanges, small
+/// enough that a corrupt header cannot OOM the receiver. Callers that
+/// know their geometry (the rank layer does: `depth × ny × nx`) should
+/// use [`SocketTransport::fabric_local_with_limit`] instead.
+pub const DEFAULT_MAX_FRAME_LEN: usize = 1 << 24;
 
 impl SocketTransport {
     /// Build a loopback fabric: `ranks` endpoints connected in a chain
-    /// over 127.0.0.1. Fails cleanly where an environment forbids
-    /// sockets — callers treat that as "fabric unavailable", not a bug.
+    /// over 127.0.0.1, frames capped at [`DEFAULT_MAX_FRAME_LEN`].
+    /// Fails cleanly where an environment forbids sockets — callers
+    /// treat that as "fabric unavailable", not a bug.
     pub fn fabric_local(ranks: usize) -> std::io::Result<Vec<SocketTransport>> {
+        Self::fabric_local_with_limit(ranks, DEFAULT_MAX_FRAME_LEN)
+    }
+
+    /// [`fabric_local`](Self::fabric_local) with an explicit per-frame
+    /// payload cap (in f64 words): a received header claiming more is
+    /// rejected as [`CommError::Frame`] before any allocation.
+    pub fn fabric_local_with_limit(
+        ranks: usize,
+        max_payload_len: usize,
+    ) -> std::io::Result<Vec<SocketTransport>> {
         let mut eps: Vec<SocketTransport> = (0..ranks)
-            .map(|rank| SocketTransport { rank, ranks, streams: [None, None], rx: [None, None] })
+            .map(|rank| SocketTransport {
+                rank,
+                ranks,
+                max_payload_len,
+                streams: [None, None],
+                rx: [None, None],
+            })
             .collect();
         for i in 0..ranks.saturating_sub(1) {
             let listener = TcpListener::bind("127.0.0.1:0")?;
@@ -289,21 +364,63 @@ impl SocketTransport {
         Ok(eps)
     }
 
+    /// Build a single endpoint over an already-established stream —
+    /// the injection hook the corrupt-frame tests use (the far side of
+    /// `stream` stays a raw socket the test writes arbitrary bytes
+    /// into), and the seam an out-of-process fabric would build on.
+    pub fn from_stream(
+        rank: usize,
+        ranks: usize,
+        peer: Peer,
+        stream: TcpStream,
+        max_payload_len: usize,
+    ) -> std::io::Result<SocketTransport> {
+        let mut ep = SocketTransport {
+            rank,
+            ranks,
+            max_payload_len,
+            streams: [None, None],
+            rx: [None, None],
+        };
+        ep.install(peer, stream)?;
+        Ok(ep)
+    }
+
     fn install(&mut self, peer: Peer, stream: TcpStream) -> std::io::Result<()> {
         let (tx, rx) = channel();
         let mut read_half = stream.try_clone()?;
+        let limit = self.max_payload_len;
         std::thread::spawn(move || {
             // EOF or any read error ends the feed; dropping `tx` then
-            // surfaces Disconnected to the consumer
-            while let Ok(msg) = read_frame(&mut read_half) {
-                if tx.send(msg).is_err() {
-                    break;
+            // surfaces Disconnected to the consumer. A frame violation
+            // is forwarded typed, then the feed stops too: the stream
+            // is desynchronized past a rejected header, so nothing
+            // after it can be trusted.
+            loop {
+                match read_frame(&mut read_half, limit) {
+                    Ok(frame) => {
+                        let poisoned = frame.is_err();
+                        if tx.send(frame).is_err() || poisoned {
+                            break;
+                        }
+                    }
+                    Err(_) => break,
                 }
             }
         });
         self.streams[peer.idx()] = Some(stream);
         self.rx[peer.idx()] = Some(rx);
         Ok(())
+    }
+
+    fn accept(&self, from: Peer, frame: Result<HaloMsg, FrameViolation>) -> CommResult<HaloMsg> {
+        frame.map_err(|v| CommError::Frame {
+            rank: self.rank,
+            peer: from,
+            tag: v.tag,
+            len: v.len,
+            limit: v.limit,
+        })
     }
 
     fn no_neighbor(&self, peer: Peer) -> CommError {
@@ -337,12 +454,15 @@ impl Transport for SocketTransport {
     }
     fn recv(&mut self, from: Peer) -> CommResult<HaloMsg> {
         let rx = self.rx[from.idx()].as_ref().ok_or_else(|| self.no_neighbor(from))?;
-        rx.recv().map_err(|_| CommError::Disconnected { rank: self.rank, peer: from })
+        match rx.recv() {
+            Ok(frame) => self.accept(from, frame),
+            Err(_) => Err(CommError::Disconnected { rank: self.rank, peer: from }),
+        }
     }
     fn try_recv(&mut self, from: Peer) -> CommResult<Option<HaloMsg>> {
         let rx = self.rx[from.idx()].as_ref().ok_or_else(|| self.no_neighbor(from))?;
         match rx.try_recv() {
-            Ok(msg) => Ok(Some(msg)),
+            Ok(frame) => self.accept(from, frame).map(Some),
             Err(TryRecvError::Empty) => Ok(None),
             Err(TryRecvError::Disconnected) => {
                 Err(CommError::Disconnected { rank: self.rank, peer: from })
@@ -576,6 +696,31 @@ mod tests {
         assert_eq!(*typed, CommError::Disconnected { rank: 2, peer: Peer::Left });
         let msg = err.to_string();
         assert!(msg.contains("rank 2") && msg.contains("left"), "{msg}");
+    }
+
+    #[test]
+    fn socket_fabric_enforces_its_payload_limit() {
+        // a frame over the receiver's cap is rejected typed at the
+        // receiver — before allocation — and the poisoned stream then
+        // reads as Disconnected; an at-the-cap frame passes untouched
+        let mut eps = match SocketTransport::fabric_local_with_limit(2, 3) {
+            Ok(eps) => eps,
+            Err(e) => {
+                eprintln!("skipping socket limit test (no loopback): {e}");
+                return;
+            }
+        };
+        eps[0].send(Peer::Right, HaloMsg { tag: 0, payload: vec![1.0, 2.0, 3.0] }).unwrap();
+        assert_eq!(eps[1].recv(Peer::Left).unwrap().payload.len(), 3);
+        eps[0].send(Peer::Right, HaloMsg { tag: 1, payload: vec![0.0; 4] }).unwrap();
+        assert_eq!(
+            eps[1].recv(Peer::Left).unwrap_err(),
+            CommError::Frame { rank: 1, peer: Peer::Left, tag: 1, len: 4, limit: 3 }
+        );
+        assert_eq!(
+            eps[1].recv(Peer::Left).unwrap_err(),
+            CommError::Disconnected { rank: 1, peer: Peer::Left }
+        );
     }
 
     #[test]

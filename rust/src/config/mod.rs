@@ -257,6 +257,12 @@ impl std::fmt::Display for RankWidthError {
 
 impl std::error::Error for RankWidthError {}
 
+/// Distinct scheduling priority levels a job may request
+/// (`priority = 0..PRIORITY_LEVELS`). Kept small and fixed so the
+/// solver service can hold one ready list per level; 0 is the default
+/// (lowest) urgency.
+pub const PRIORITY_LEVELS: usize = 4;
+
 /// One experiment description.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
@@ -295,6 +301,18 @@ pub struct RunConfig {
     /// `coordinator::rank::RankSet` of per-rank solvers coupled by
     /// halo exchange over a `comm::Transport`.
     pub ranks: usize,
+    /// Scheduling priority when this run is submitted to the solver
+    /// service (`priority` key / `--priority`): `0` (default, lowest)
+    /// to [`PRIORITY_LEVELS`]` - 1`. Higher levels are claimed first;
+    /// single-run execution ignores it.
+    pub priority: usize,
+    /// Admission deadline when this run is submitted to the solver
+    /// service (`deadline_ms` key / `--deadline-ms`): if the job has
+    /// not *started* within this many milliseconds of submission it is
+    /// shed with a typed `Expired` result instead of running late.
+    /// `None` (the default) never expires; single-run execution
+    /// ignores it.
+    pub deadline_ms: Option<u64>,
 }
 
 impl Default for RunConfig {
@@ -313,6 +331,8 @@ impl Default for RunConfig {
             machine: None,
             pin: PinPolicy::None,
             ranks: 1,
+            priority: 0,
+            deadline_ms: None,
         }
     }
 }
@@ -433,6 +453,8 @@ impl RunConfig {
                     }
                 }
                 "ranks" => cfg.ranks = value.parse()?,
+                "priority" => cfg.priority = value.parse()?,
+                "deadline_ms" => cfg.deadline_ms = Some(value.parse()?),
                 "machine" => cfg.machine = Some(value.to_string()),
                 "pin" => {
                     cfg.pin = PinPolicy::parse(value)
@@ -506,7 +528,7 @@ impl RunConfig {
         let mut s = format!(
             "scheme = \"{scheme}\"\nop = \"{}\"\nsize = [{}, {}, {}]\nt = {}\ngroups = {}\n\
              iters = {}\nsmt = {}\noptimized_kernel = {}\nnt_stores = {}\nbarrier = \"{barrier}\"\n\
-             pin = \"{}\"\nranks = {}\n",
+             pin = \"{}\"\nranks = {}\npriority = {}\n",
             self.op.as_str(),
             self.size.0,
             self.size.1,
@@ -519,7 +541,11 @@ impl RunConfig {
             self.nt_stores,
             self.pin.as_str(),
             self.ranks,
+            self.priority,
         );
+        if let Some(d) = self.deadline_ms {
+            s += &format!("deadline_ms = {d}\n");
+        }
         if let Some(m) = &self.machine {
             s += &format!("machine = \"{m}\"\n");
         }
@@ -553,6 +579,12 @@ impl RunConfig {
         }
         BlockWidthError::check(self.scheme, r, ny, self.groups, self.t)?;
         anyhow::ensure!(self.ranks >= 1, "need at least one rank");
+        anyhow::ensure!(
+            self.priority < PRIORITY_LEVELS,
+            "priority {} out of range (levels are 0..{})",
+            self.priority,
+            PRIORITY_LEVELS
+        );
         RankWidthError::check(self.scheme, r, self.halo_depth(), nz, self.ranks)?;
         if let Some(name) = &self.machine {
             anyhow::ensure!(MachineSpec::by_name(name).is_some(), "unknown machine '{name}'");
@@ -581,6 +613,8 @@ mod tests {
             machine: Some("Westmere".into()),
             pin: PinPolicy::Scatter,
             ranks: 2,
+            priority: 2,
+            deadline_ms: Some(1500),
         };
         let back = RunConfig::from_text(&cfg.to_text()).unwrap();
         assert_eq!(back.size, cfg.size);
@@ -593,7 +627,30 @@ mod tests {
         assert_eq!(back.machine.as_deref(), Some("Westmere"));
         assert_eq!(back.pin, PinPolicy::Scatter);
         assert_eq!(back.ranks, 2);
+        assert_eq!(back.priority, 2);
+        assert_eq!(back.deadline_ms, Some(1500));
         back.validate().unwrap();
+    }
+
+    #[test]
+    fn priority_and_deadline_keys_roundtrip_and_validate() {
+        // unparsed configs default to lowest priority, no deadline
+        let cfg = RunConfig::from_text("scheme = \"gs_baseline\"\n").unwrap();
+        assert_eq!(cfg.priority, 0);
+        assert_eq!(cfg.deadline_ms, None);
+        // `deadline_ms` is only printed when set (like `machine`)
+        assert!(!cfg.to_text().contains("deadline_ms"));
+        let cfg = RunConfig { priority: 3, deadline_ms: Some(250), ..Default::default() };
+        let text = cfg.to_text();
+        assert!(text.contains("priority = 3"), "{text}");
+        assert!(text.contains("deadline_ms = 250"), "{text}");
+        let back = RunConfig::from_text(&text).unwrap();
+        assert_eq!(back.priority, 3);
+        assert_eq!(back.deadline_ms, Some(250));
+        back.validate().unwrap();
+        // out-of-range priorities are rejected at validation
+        let cfg = RunConfig { priority: PRIORITY_LEVELS, ..Default::default() };
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

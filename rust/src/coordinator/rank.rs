@@ -442,11 +442,18 @@ impl RankSet {
                 .into_iter()
                 .map(|tp| Box::new(tp) as Box<dyn Transport>)
                 .collect(),
-            FabricKind::SocketLocal => SocketTransport::fabric_local(n)
-                .map_err(|e| anyhow!(CommError::Fabric(format!("socket fabric: {e}"))))?
-                .into_iter()
-                .map(|tp| Box::new(tp) as Box<dyn Transport>)
-                .collect(),
+            FabricKind::SocketLocal => {
+                // every frame on this fabric is at most one deep-halo
+                // shell of whole planes; cap the wire decoder there so
+                // a corrupt length can't drive an unbounded allocation
+                let (_, ny, nx) = self.cfg.size;
+                let limit = self.cfg.halo_depth().max(self.cfg.op.radius()) * ny * nx;
+                SocketTransport::fabric_local_with_limit(n, limit)
+                    .map_err(|e| anyhow!(CommError::Fabric(format!("socket fabric: {e}"))))?
+                    .into_iter()
+                    .map(|tp| Box::new(tp) as Box<dyn Transport>)
+                    .collect()
+            }
         };
         self.fabric = endpoints
             .into_iter()

@@ -24,6 +24,21 @@
 //!    ride one claimed window through a single session — one schedule,
 //!    many right-hand sides, via [`Solver::run_with`].
 //!
+//! Admission is **bounded and deadline/priority aware**: the queue
+//! holds at most [`ServiceConfig::queue_capacity`] jobs (overflow is
+//! rejected with a typed [`AdmissionError::QueueFull`] whose
+//! `retry_after_hint` is the ECM-predicted drain time of the least
+//! loaded eligible window), each job carries a
+//! [`priority`](crate::config::RunConfig::priority) level and an
+//! optional [`deadline_ms`](crate::config::RunConfig::deadline_ms)
+//! (never-started jobs past their deadline are shed with a typed
+//! [`ExpiredError`] instead of running late), and a starving job —
+//! e.g. a whole-machine-wide tenant behind a stream of narrow ones —
+//! is *aged* after [`ServiceConfig::age_after`] passed-over claim
+//! cycles: an aged job reserves its window so younger claims cannot
+//! leapfrog it, which bounds every job's wait (property-tested in
+//! `tests/service_property.rs`).
+//!
 //! Every job's result is bit-identical to a private per-job [`Solver`]
 //! run of the same configuration — tenancy changes scheduling, never
 //! numerics (locked down by `tests/service_stress.rs` and
@@ -43,12 +58,13 @@
 //! svc.shutdown();
 //! ```
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
-use crate::config::RunConfig;
+use crate::config::{RunConfig, PRIORITY_LEVELS};
 use crate::simulator::machine::MachineSpec;
 use crate::stencil::grid::Grid3;
 use crate::Result;
@@ -82,6 +98,17 @@ pub struct ServiceConfig {
     /// spawn; per-job `pin` keys are ignored — placement is the
     /// service's decision).
     pub pin: PinPolicy,
+    /// Most jobs the service queues at once (admitted-but-unstarted,
+    /// across every priority level). Submissions beyond this are
+    /// rejected with [`AdmissionError::QueueFull`] carrying an
+    /// ECM-predicted `retry_after_hint` — backpressure instead of an
+    /// unbounded queue.
+    pub queue_capacity: usize,
+    /// Claim cycles a queued job may be passed over (its window busy
+    /// while a younger or lower-priority job is claimed) before it is
+    /// *aged*: an aged job is scanned first and reserves its window, so
+    /// its wait is bounded by the in-flight batches holding that window.
+    pub age_after: u64,
 }
 
 impl Default for ServiceConfig {
@@ -93,6 +120,8 @@ impl Default for ServiceConfig {
             max_batch: 8,
             batch_cells: 32 * 32 * 32,
             pin: PinPolicy::None,
+            queue_capacity: 64,
+            age_after: 16,
         }
     }
 }
@@ -112,6 +141,8 @@ impl ServiceConfig {
         anyhow::ensure!(self.groups >= 1, "service needs at least one cache group");
         anyhow::ensure!(self.group_width >= 1, "cache groups need at least one worker");
         anyhow::ensure!(self.max_batch >= 1, "max_batch must be >= 1 (1 disables batching)");
+        anyhow::ensure!(self.queue_capacity >= 1, "queue_capacity must be >= 1");
+        anyhow::ensure!(self.age_after >= 1, "age_after must be >= 1 claim cycle");
         if let Some(name) = &self.machine {
             anyhow::ensure!(MachineSpec::by_name(name).is_some(), "unknown machine '{name}'");
         }
@@ -154,30 +185,80 @@ pub struct Placement {
     pub workers: usize,
 }
 
-/// Typed admission failure: the job's team needs more cache groups than
-/// the service holds. Callers branch on it by downcasting the
+/// Typed admission failure. Callers branch on it by downcasting the
 /// [`anyhow::Error`], like [`BlockWidthError`](crate::config::BlockWidthError).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub struct AdmissionError {
-    /// Workers the job's scheme dispatches.
-    pub team: usize,
-    /// Cache groups that team occupies after rounding up.
-    pub needed_groups: usize,
-    /// Cache groups the service holds.
-    pub groups: usize,
+///
+/// `TooWide` is permanent — the job can never run on this service
+/// shape. `QueueFull` is transient backpressure: the queue is at
+/// [`ServiceConfig::queue_capacity`] and the caller should retry after
+/// roughly `retry_after_hint` seconds, the ECM-predicted time for the
+/// least loaded window this job fits on to drain its outstanding
+/// modeled work. A rejected submission changes no service state.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum AdmissionError {
+    /// The job's team needs more cache groups than the service holds.
+    TooWide {
+        /// Workers the job's scheme dispatches.
+        team: usize,
+        /// Cache groups that team occupies after rounding up.
+        needed_groups: usize,
+        /// Cache groups the service holds.
+        groups: usize,
+    },
+    /// The queue is at capacity; retry after the hinted drain time.
+    QueueFull {
+        /// Jobs queued when the submission was rejected.
+        queued: usize,
+        /// The configured [`ServiceConfig::queue_capacity`].
+        capacity: usize,
+        /// ECM-predicted seconds until the least loaded eligible window
+        /// drains its outstanding modeled work — always finite and > 0.
+        retry_after_hint: f64,
+    },
 }
 
 impl std::fmt::Display for AdmissionError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(
-            f,
-            "job needs {} workers = {} cache groups but the service holds {}",
-            self.team, self.needed_groups, self.groups
-        )
+        match self {
+            AdmissionError::TooWide { team, needed_groups, groups } => write!(
+                f,
+                "job needs {team} workers = {needed_groups} cache groups but the service holds {groups}"
+            ),
+            AdmissionError::QueueFull { queued, capacity, retry_after_hint } => write!(
+                f,
+                "service queue is full ({queued}/{capacity} jobs); retry in ~{retry_after_hint:.3}s"
+            ),
+        }
     }
 }
 
 impl std::error::Error for AdmissionError {}
+
+/// Typed result for a job shed by deadline expiry: it was never started
+/// within its [`deadline_ms`](crate::config::RunConfig::deadline_ms),
+/// so the service refunded its load and dropped it instead of running
+/// it late. Delivered through [`JobTicket::wait`]; downcast to branch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ExpiredError {
+    /// Submission-order id of the shed job.
+    pub id: u64,
+    /// The deadline the job carried.
+    pub deadline_ms: u64,
+    /// Milliseconds the job actually waited before being shed.
+    pub waited_ms: u64,
+}
+
+impl std::fmt::Display for ExpiredError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "job {} expired: not started within its {} ms deadline (waited {} ms)",
+            self.id, self.deadline_ms, self.waited_ms
+        )
+    }
+}
+
+impl std::error::Error for ExpiredError {}
 
 /// One tenant job: a validated [`RunConfig`] plus the tenant's grids.
 pub struct JobSpec {
@@ -216,6 +297,14 @@ pub struct JobOutput {
     pub placement: Placement,
     /// Jobs that shared the claimed window with this one (1 = unbatched).
     pub batch_size: usize,
+    /// The priority level the job was queued at.
+    pub priority: usize,
+    /// Milliseconds between submission and the claim that started it.
+    pub wait_ms: f64,
+    /// Claim cycles that passed this job over (claimed some other job
+    /// while this one's window was busy) before it started — the
+    /// quantity the aging rule bounds.
+    pub skipped_cycles: u64,
 }
 
 /// Handle to a submitted job; redeem with [`JobTicket::wait`].
@@ -263,6 +352,32 @@ pub struct ServiceStats {
     /// checked out — 0 unless the oversubscription invariant broke (the
     /// property suite asserts it stays 0).
     pub claim_conflicts: u64,
+    /// Never-started jobs shed past their deadline (typed
+    /// [`ExpiredError`] results).
+    pub shed_expired: u64,
+    /// Submissions rejected with [`AdmissionError::QueueFull`].
+    pub rejected_full: u64,
+    /// Most jobs ever queued at once (`<= queue_capacity`).
+    pub max_queue_depth: usize,
+    /// Jobs promoted to the aged list after
+    /// [`ServiceConfig::age_after`] passed-over claim cycles.
+    pub aged_jobs: u64,
+    /// Started-job wait histogram per priority level:
+    /// `wait_hist[priority][bucket]` with bucket bounds
+    /// [`WAIT_BUCKET_BOUNDS_MS`] (the last bucket is unbounded).
+    pub wait_hist: [[u64; WAIT_BUCKETS]; PRIORITY_LEVELS],
+}
+
+/// Upper bounds (milliseconds) of the wait-histogram buckets; a fifth,
+/// unbounded bucket catches everything beyond the last bound.
+pub const WAIT_BUCKET_BOUNDS_MS: [f64; 4] = [1.0, 10.0, 100.0, 1000.0];
+
+/// Buckets per priority level in [`ServiceStats::wait_hist`].
+pub const WAIT_BUCKETS: usize = WAIT_BUCKET_BOUNDS_MS.len() + 1;
+
+/// The `wait_hist` bucket a wait of `ms` milliseconds falls into.
+pub fn wait_bucket(ms: f64) -> usize {
+    WAIT_BUCKET_BOUNDS_MS.iter().position(|&b| ms < b).unwrap_or(WAIT_BUCKETS - 1)
 }
 
 /// One queued job.
@@ -275,12 +390,110 @@ struct Pending {
     /// Numerics-relevant config key batch mates must share.
     key: String,
     batchable: bool,
+    priority: usize,
+    deadline_ms: Option<u64>,
+    submitted: Instant,
+    /// Claim cycles that passed this job over while it headed its ready
+    /// list (its window busy, some other job claimed).
+    skipped: u64,
+    /// Milliseconds waited, filled in at claim time under the lock.
+    wait_ms: f64,
     tx: mpsc::Sender<Result<JobOutput>>,
+}
+
+impl Pending {
+    fn expired(&self, now: Instant) -> bool {
+        self.deadline_ms.is_some_and(|d| {
+            now.saturating_duration_since(self.submitted) >= Duration::from_millis(d)
+        })
+    }
+
+    /// Time left until this job's deadline (`None` = no deadline).
+    fn remaining(&self, now: Instant) -> Option<Duration> {
+        self.deadline_ms.map(|d| {
+            Duration::from_millis(d).saturating_sub(now.saturating_duration_since(self.submitted))
+        })
+    }
+}
+
+/// The per-priority ready lists, keyed by window availability: within a
+/// level, jobs are bucketed by the `(group_start, group_count)` window
+/// admission charged them to, each bucket FIFO. A claim therefore costs
+/// O(windows) = O(groups²) bucket-front inspections instead of a linear
+/// rescan of the whole queue.
+#[derive(Default)]
+struct ReadyLists {
+    levels: Vec<HashMap<(usize, usize), VecDeque<Pending>>>,
+    /// Jobs promoted after `age_after` passed-over cycles, FIFO. Aged
+    /// jobs are scanned before every level and *reserve* their window
+    /// when blocked, so younger claims cannot leapfrog them.
+    aged: VecDeque<Pending>,
+    /// Total queued jobs across every level and the aged list.
+    queued: usize,
+}
+
+impl ReadyLists {
+    fn new() -> Self {
+        Self { levels: (0..PRIORITY_LEVELS).map(|_| HashMap::new()).collect(), ..Self::default() }
+    }
+
+    fn push(&mut self, p: Pending) {
+        let key = (p.placement.group_start, p.placement.group_count);
+        self.levels[p.priority].entry(key).or_default().push_back(p);
+        self.queued += 1;
+    }
+
+    fn is_empty(&self) -> bool {
+        self.queued == 0
+    }
+
+    /// Drain every job matching `pred` (expiry sweeps), preserving
+    /// bucket order for the rest.
+    fn drain_matching(&mut self, mut pred: impl FnMut(&Pending) -> bool) -> Vec<Pending> {
+        let mut out = Vec::new();
+        for level in &mut self.levels {
+            for q in level.values_mut() {
+                let mut keep = VecDeque::with_capacity(q.len());
+                for p in q.drain(..) {
+                    if pred(&p) {
+                        out.push(p);
+                    } else {
+                        keep.push_back(p);
+                    }
+                }
+                *q = keep;
+            }
+            level.retain(|_, q| !q.is_empty());
+        }
+        let mut keep = VecDeque::with_capacity(self.aged.len());
+        for p in self.aged.drain(..) {
+            if pred(&p) {
+                out.push(p);
+            } else {
+                keep.push_back(p);
+            }
+        }
+        self.aged = keep;
+        self.queued -= out.len();
+        out
+    }
+
+    /// Earliest deadline over every queued job (`None` = no deadlines),
+    /// as time remaining from `now` — the executors' wait timeout.
+    fn earliest_deadline(&self, now: Instant) -> Option<Duration> {
+        let level_min = self
+            .levels
+            .iter()
+            .flat_map(|l| l.values().flatten())
+            .filter_map(|p| p.remaining(now));
+        let aged_min = self.aged.iter().filter_map(|p| p.remaining(now));
+        level_min.chain(aged_min).min()
+    }
 }
 
 /// Mutable service state, guarded by [`Shared::inner`].
 struct Inner {
-    queue: Vec<Pending>,
+    ready: ReadyLists,
     /// Outstanding modeled seconds charged per cache group.
     loads: Vec<f64>,
     busy: Vec<bool>,
@@ -309,11 +522,13 @@ fn lock(m: &Mutex<Inner>) -> MutexGuard<'_, Inner> {
 }
 
 /// The numerics-relevant identity of a config: everything except the
-/// keys that only steer placement and prediction.
+/// keys that only steer placement, prediction, and scheduling.
 fn batch_key(cfg: &RunConfig) -> String {
     let mut c = cfg.clone();
     c.machine = None;
     c.pin = PinPolicy::None;
+    c.priority = 0;
+    c.deadline_ms = None;
     c.to_text()
 }
 
@@ -331,7 +546,7 @@ fn admit(svc: &ServiceConfig, job: &RunConfig, loads: &[f64]) -> Result<(Placeme
     let team = runner.team_size(job);
     let needed_groups = team.max(1).div_ceil(svc.group_width);
     if needed_groups > svc.groups {
-        return Err(anyhow::Error::new(AdmissionError {
+        return Err(anyhow::Error::new(AdmissionError::TooWide {
             team,
             needed_groups,
             groups: svc.groups,
@@ -413,7 +628,7 @@ impl SolverService {
         let groups = cfg.groups;
         let shared = Arc::new(Shared {
             inner: Mutex::new(Inner {
-                queue: Vec::new(),
+                ready: ReadyLists::new(),
                 loads: vec![0.0; groups],
                 busy: vec![false; groups],
                 groups_busy: 0,
@@ -449,9 +664,13 @@ impl SolverService {
         self.shared.cfg.group_width
     }
 
-    /// Admit a job: validate it, charge the cheapest window, queue it.
-    /// Fails with a downcastable [`AdmissionError`] when the job's team
-    /// exceeds the whole machine.
+    /// Admit a job: validate it, charge the cheapest window, queue it
+    /// on its priority's ready list. Fails with a downcastable
+    /// [`AdmissionError`]: `TooWide` when the job's team exceeds the
+    /// whole machine (permanent), `QueueFull` when the queue is at
+    /// [`ServiceConfig::queue_capacity`] (transient — retry after the
+    /// carried ECM drain hint). A rejected submission changes nothing
+    /// except, for `QueueFull`, the `rejected_full` counter.
     pub fn submit(&self, spec: JobSpec) -> Result<JobTicket> {
         anyhow::ensure!(
             spec.u0.shape() == spec.cfg.size,
@@ -471,6 +690,20 @@ impl SolverService {
         let mut inner = lock(&self.shared.inner);
         anyhow::ensure!(!inner.shutdown, "solver service is shut down");
         let (placement, cost) = admit(&self.shared.cfg, &spec.cfg, &inner.loads)?;
+        if inner.ready.queued >= self.shared.cfg.queue_capacity {
+            // backpressure: reject with the ECM-predicted drain time of
+            // the window admission just picked (the least loaded one
+            // this job fits on) — finite, and floored so an all-idle
+            // hint is still positive
+            let w = placement.group_start..placement.group_start + placement.group_count;
+            let hint = inner.loads[w].iter().fold(0.0f64, |a, &b| a.max(b)).max(1e-6);
+            inner.stats.rejected_full += 1;
+            return Err(anyhow::Error::new(AdmissionError::QueueFull {
+                queued: inner.ready.queued,
+                capacity: self.shared.cfg.queue_capacity,
+                retry_after_hint: hint,
+            }));
+        }
         let w = placement.group_start..placement.group_start + placement.group_count;
         for l in &mut inner.loads[w] {
             *l += cost;
@@ -480,15 +713,23 @@ impl SolverService {
         inner.stats.submitted += 1;
         let (nz, ny, nx) = spec.cfg.size;
         let batchable = self.shared.cfg.max_batch > 1 && nz * ny * nx <= self.shared.cfg.batch_cells;
-        inner.queue.push(Pending {
+        let priority = spec.cfg.priority;
+        let deadline_ms = spec.cfg.deadline_ms;
+        inner.ready.push(Pending {
             id,
             key: batch_key(&spec.cfg),
             batchable,
+            priority,
+            deadline_ms,
+            submitted: Instant::now(),
+            skipped: 0,
+            wait_ms: 0.0,
             spec,
             placement,
             cost,
             tx,
         });
+        inner.stats.max_queue_depth = inner.stats.max_queue_depth.max(inner.ready.queued);
         drop(inner);
         self.shared.cv.notify_all();
         Ok(JobTicket { id, placement, rx })
@@ -543,40 +784,178 @@ impl Drop for SolverService {
     }
 }
 
-fn window_free(busy: &[bool], p: &Placement) -> bool {
-    busy[p.group_start..p.group_start + p.group_count].iter().all(|b| !b)
+fn window_clear(busy: &[bool], reserved: &[bool], p: &Placement) -> bool {
+    (p.group_start..p.group_start + p.group_count).all(|g| !busy[g] && !reserved[g])
+}
+
+/// Where the claim scan found the next job to start.
+enum ClaimAt {
+    Aged(usize),
+    Bucket(usize, (usize, usize)),
+}
+
+/// The claim scan: aged jobs first (FIFO — a *blocked* aged job
+/// reserves its window so no younger candidate can leapfrog onto it,
+/// which is what bounds every aged job's wait), then priority levels
+/// high → low, where within a level the eligible window-bucket front
+/// with the smallest id wins (FIFO across the level). Cost is
+/// O(aged + windows), independent of queue depth.
+fn scan_claim(inner: &Inner) -> Option<ClaimAt> {
+    let busy = &inner.busy;
+    let mut reserved = vec![false; busy.len()];
+    for (i, p) in inner.ready.aged.iter().enumerate() {
+        if window_clear(busy, &reserved, &p.placement) {
+            return Some(ClaimAt::Aged(i));
+        }
+        for g in p.placement.group_start..p.placement.group_start + p.placement.group_count {
+            reserved[g] = true;
+        }
+    }
+    for level in (0..PRIORITY_LEVELS).rev() {
+        let mut best: Option<(u64, (usize, usize))> = None;
+        for (&key, q) in &inner.ready.levels[level] {
+            let front = q.front().expect("buckets are never empty");
+            if window_clear(busy, &reserved, &front.placement)
+                && best.map_or(true, |(id, _)| front.id < id)
+            {
+                best = Some((front.id, key));
+            }
+        }
+        if let Some((_, key)) = best {
+            return Some(ClaimAt::Bucket(level, key));
+        }
+    }
+    None
+}
+
+fn take_claim(ready: &mut ReadyLists, at: ClaimAt) -> Pending {
+    let p = match at {
+        ClaimAt::Aged(i) => ready.aged.remove(i).expect("aged claim index is valid"),
+        ClaimAt::Bucket(level, key) => {
+            let q = ready.levels[level].get_mut(&key).expect("claimed bucket exists");
+            let p = q.pop_front().expect("buckets are never empty");
+            if q.is_empty() {
+                ready.levels[level].remove(&key);
+            }
+            p
+        }
+    };
+    ready.queued -= 1;
+    p
+}
+
+/// Shed every queued job past its deadline: refund its charged load,
+/// count it, and fail its ticket with a typed [`ExpiredError`].
+fn shed_expired(inner: &mut Inner) {
+    let now = Instant::now();
+    for p in inner.ready.drain_matching(|p| p.expired(now)) {
+        let w = p.placement.group_start..p.placement.group_start + p.placement.group_count;
+        for l in &mut inner.loads[w] {
+            *l -= p.cost;
+        }
+        inner.stats.shed_expired += 1;
+        let waited_ms = now.saturating_duration_since(p.submitted).as_millis() as u64;
+        let _ = p.tx.send(Err(anyhow::Error::new(ExpiredError {
+            id: p.id,
+            deadline_ms: p.deadline_ms.unwrap_or(0),
+            waited_ms,
+        })));
+    }
+}
+
+/// After a successful claim, every job still heading a ready list was
+/// passed over this cycle: bump its skip count and promote fronts that
+/// crossed `age_after` to the aged list (in deterministic
+/// priority-then-id order). Aged jobs keep counting too, so
+/// [`JobOutput::skipped_cycles`] reports a job's full passed-over
+/// total.
+fn bump_passed_over(inner: &mut Inner, age_after: u64) {
+    // already-aged jobs first, so a job promoted below is not counted
+    // twice for the same cycle
+    for p in &mut inner.ready.aged {
+        p.skipped += 1;
+    }
+    let mut promote: Vec<(usize, (usize, usize), u64)> = Vec::new();
+    for (level, lv) in inner.ready.levels.iter_mut().enumerate() {
+        for (&key, q) in lv.iter_mut() {
+            let front = q.front_mut().expect("buckets are never empty");
+            front.skipped += 1;
+            if front.skipped >= age_after {
+                promote.push((level, key, front.id));
+            }
+        }
+    }
+    promote.sort_by(|a, b| b.0.cmp(&a.0).then(a.2.cmp(&b.2)));
+    for (level, key, _) in promote {
+        let q = inner.ready.levels[level].get_mut(&key).expect("promoted bucket exists");
+        let p = q.pop_front().expect("buckets are never empty");
+        if q.is_empty() {
+            inner.ready.levels[level].remove(&key);
+        }
+        inner.stats.aged_jobs += 1;
+        inner.ready.aged.push_back(p);
+    }
 }
 
 fn executor_loop(shared: &Shared) {
     loop {
-        // claim: the oldest queued job whose charged window is entirely
-        // free, plus (atomically, under the same lock) its batch mates
+        // claim: aged jobs first, then the highest-priority ready-list
+        // front whose charged window is entirely free, plus (atomically,
+        // under the same lock) its batch mates
         let mut inner = lock(&shared.inner);
-        let pos = loop {
-            if inner.shutdown && inner.queue.is_empty() {
+        let at = loop {
+            // deadline pass first so an expired job is never claimed
+            // (the scan below sees only live jobs)
+            shed_expired(&mut inner);
+            if inner.shutdown && inner.ready.is_empty() {
                 return;
             }
             if !inner.paused || inner.shutdown {
-                if let Some(pos) =
-                    inner.queue.iter().position(|p| window_free(&inner.busy, &p.placement))
-                {
-                    break pos;
+                if let Some(at) = scan_claim(&inner) {
+                    break at;
                 }
             }
-            inner = shared.cv.wait(inner).unwrap_or_else(|e| e.into_inner());
+            // sleep until notified — or until the earliest queued
+            // deadline, so expiry is shed promptly even when nothing
+            // else wakes the executors (pause included)
+            match inner.ready.earliest_deadline(Instant::now()) {
+                Some(d) => {
+                    let (g, _) = shared
+                        .cv
+                        .wait_timeout(inner, d.max(Duration::from_millis(1)))
+                        .unwrap_or_else(|e| e.into_inner());
+                    inner = g;
+                }
+                None => inner = shared.cv.wait(inner).unwrap_or_else(|e| e.into_inner()),
+            }
         };
-        let lead = inner.queue.remove(pos);
+        let lead = take_claim(&mut inner.ready, at);
         let mut batch = vec![lead];
         if batch[0].batchable {
+            // batch mates ride from any ready list in submission order,
+            // like the seed's whole-queue scan
             let key = batch[0].key.clone();
-            let mut i = 0;
-            while batch.len() < shared.cfg.max_batch && i < inner.queue.len() {
-                if inner.queue[i].batchable && inner.queue[i].key == key {
-                    batch.push(inner.queue.remove(i));
-                } else {
-                    i += 1;
-                }
-            }
+            let want = shared.cfg.max_batch - 1;
+            let mut ids: Vec<u64> = inner
+                .ready
+                .levels
+                .iter()
+                .flat_map(|l| l.values().flatten())
+                .chain(inner.ready.aged.iter())
+                .filter(|p| p.batchable && p.key == key)
+                .map(|p| p.id)
+                .collect();
+            ids.sort_unstable();
+            ids.truncate(want);
+            let mut mates = inner.ready.drain_matching(|p| ids.binary_search(&p.id).is_ok());
+            mates.sort_by_key(|p| p.id);
+            batch.extend(mates);
+        }
+        bump_passed_over(&mut inner, shared.cfg.age_after);
+        let now = Instant::now();
+        for p in &mut batch {
+            p.wait_ms = now.saturating_duration_since(p.submitted).as_secs_f64() * 1e3;
+            inner.stats.wait_hist[p.priority][wait_bucket(p.wait_ms)] += 1;
         }
         let placement = batch[0].placement;
         let seg_key = (placement.group_start, placement.group_count);
@@ -658,7 +1037,7 @@ fn run_batch(
         Ok(mut solver) => {
             let mut zero: Option<Grid3> = None;
             for p in batch {
-                let Pending { spec, tx, .. } = p;
+                let Pending { spec, tx, priority, wait_ms, skipped, .. } = p;
                 let JobSpec { cfg, u0, f, h2 } = spec;
                 let mut u = u0;
                 let res = {
@@ -674,7 +1053,14 @@ fn run_batch(
                 match res {
                     Ok(()) => {
                         outcome.completed += 1;
-                        let _ = tx.send(Ok(JobOutput { u, placement, batch_size }));
+                        let _ = tx.send(Ok(JobOutput {
+                            u,
+                            placement,
+                            batch_size,
+                            priority,
+                            wait_ms,
+                            skipped_cycles: skipped,
+                        }));
                     }
                     Err(e) => {
                         outcome.failed += 1;
@@ -750,10 +1136,142 @@ mod tests {
         let cfg = job_cfg(Scheme::GsWavefront);
         let err = svc.submit(JobSpec::new(cfg, Grid3::zeros(10, 12, 9))).map(|_| ()).unwrap_err();
         let typed = err.downcast_ref::<AdmissionError>().expect("typed admission error");
-        assert_eq!(typed.team, 8);
-        assert_eq!(typed.needed_groups, 4);
-        assert_eq!(typed.groups, 2);
+        assert_eq!(
+            *typed,
+            AdmissionError::TooWide { team: 8, needed_groups: 4, groups: 2 },
+            "too-wide rejections carry the team and group arithmetic"
+        );
         assert_eq!(svc.stats().submitted, 0, "rejected jobs are not counted as submitted");
+    }
+
+    #[test]
+    fn full_queues_reject_with_a_finite_retry_hint() {
+        let mut svc = SolverService::new(ServiceConfig {
+            queue_capacity: 3,
+            ..svc_cfg()
+        })
+        .unwrap();
+        svc.pause(); // nothing is claimed, so the queue really fills
+        let cfg = job_cfg(Scheme::JacobiWavefront);
+        let tickets: Vec<JobTicket> = (0..3)
+            .map(|i| svc.submit(JobSpec::new(cfg.clone(), Grid3::random(10, 12, 9, i))).unwrap())
+            .collect();
+        let loads_before = svc.loads();
+        let err = svc
+            .submit(JobSpec::new(cfg.clone(), Grid3::random(10, 12, 9, 9)))
+            .map(|_| ())
+            .unwrap_err();
+        match err.downcast_ref::<AdmissionError>().expect("typed admission error") {
+            AdmissionError::QueueFull { queued, capacity, retry_after_hint } => {
+                assert_eq!((*queued, *capacity), (3, 3));
+                assert!(retry_after_hint.is_finite() && *retry_after_hint > 0.0);
+            }
+            other => panic!("expected QueueFull, got {other:?}"),
+        }
+        // the rejection changed nothing but the counter
+        assert_eq!(svc.loads(), loads_before);
+        let stats = svc.stats();
+        assert_eq!(stats.rejected_full, 1);
+        assert_eq!(stats.submitted, 3);
+        assert_eq!(stats.max_queue_depth, 3);
+        svc.resume();
+        for t in tickets {
+            t.wait().unwrap();
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn expired_jobs_are_shed_with_a_typed_result() {
+        let mut svc = SolverService::new(svc_cfg()).unwrap();
+        svc.pause(); // the job can never start, so its deadline must fire
+        let cfg = RunConfig { deadline_ms: Some(1), ..job_cfg(Scheme::JacobiWavefront) };
+        let t = svc.submit(JobSpec::new(cfg, Grid3::random(10, 12, 9, 1))).unwrap();
+        let err = t.wait().map(|_| ()).unwrap_err();
+        let typed = err.downcast_ref::<ExpiredError>().expect("typed expiry result");
+        assert_eq!(typed.deadline_ms, 1);
+        assert!(typed.waited_ms >= 1);
+        let stats = svc.stats();
+        assert_eq!(stats.shed_expired, 1);
+        assert_eq!(stats.completed, 0);
+        assert!(svc.loads().iter().all(|&l| l == 0.0), "shed jobs refund their charge");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn higher_priority_jobs_are_claimed_first() {
+        let mut svc = SolverService::new(ServiceConfig {
+            groups: 1,
+            group_width: 4,
+            max_batch: 1, // no batching: strict one-at-a-time claim order
+            ..Default::default()
+        })
+        .unwrap();
+        svc.pause();
+        let lo = RunConfig { priority: 0, ..job_cfg(Scheme::JacobiWavefront) };
+        let hi = RunConfig { priority: 3, ..job_cfg(Scheme::JacobiWavefront) };
+        // submitted low before high; the single window forces serial
+        // execution in claim order
+        let t_lo = svc.submit(JobSpec::new(lo, Grid3::random(10, 12, 9, 1))).unwrap();
+        let t_hi = svc.submit(JobSpec::new(hi, Grid3::random(10, 12, 9, 2))).unwrap();
+        svc.resume();
+        let out_lo = t_lo.wait().unwrap();
+        let out_hi = t_hi.wait().unwrap();
+        assert_eq!(out_hi.priority, 3);
+        assert_eq!(out_lo.priority, 0);
+        assert!(
+            out_hi.wait_ms <= out_lo.wait_ms,
+            "the high-priority job started first (hi {} ms vs lo {} ms)",
+            out_hi.wait_ms,
+            out_lo.wait_ms
+        );
+        let stats = svc.stats();
+        assert_eq!(stats.completed, 2);
+        // both priorities landed in the wait histogram
+        assert_eq!(stats.wait_hist[3].iter().sum::<u64>(), 1);
+        assert_eq!(stats.wait_hist[0].iter().sum::<u64>(), 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn passed_over_jobs_age_deterministically() {
+        // single-window service, age_after = 1: claiming job A passes
+        // job B over exactly once, promoting it to the aged list, from
+        // which it runs when the window frees. Single-window
+        // serialization makes the cycle counts exact.
+        let mut svc = SolverService::new(ServiceConfig {
+            groups: 1,
+            group_width: 4,
+            max_batch: 1,
+            age_after: 1,
+            ..Default::default()
+        })
+        .unwrap();
+        svc.pause();
+        let cfg = job_cfg(Scheme::JacobiWavefront);
+        let ta = svc.submit(JobSpec::new(cfg.clone(), Grid3::random(10, 12, 9, 1))).unwrap();
+        let tb = svc.submit(JobSpec::new(cfg, Grid3::random(10, 12, 9, 2))).unwrap();
+        svc.resume();
+        let a = ta.wait().unwrap();
+        let b = tb.wait().unwrap();
+        assert_eq!(a.skipped_cycles, 0, "the first claim is never passed over");
+        assert_eq!(b.skipped_cycles, 1, "B was passed over once, by A's claim");
+        let stats = svc.stats();
+        assert_eq!(stats.aged_jobs, 1, "age_after = 1 promotes B on that one skip");
+        assert_eq!(stats.completed, 2);
+        assert_eq!(stats.claim_conflicts, 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn wait_buckets_partition_the_axis() {
+        assert_eq!(wait_bucket(0.0), 0);
+        assert_eq!(wait_bucket(0.99), 0);
+        assert_eq!(wait_bucket(1.0), 1);
+        assert_eq!(wait_bucket(99.9), 2);
+        assert_eq!(wait_bucket(100.0), 3);
+        assert_eq!(wait_bucket(1000.0), 4);
+        assert_eq!(wait_bucket(f64::INFINITY), WAIT_BUCKETS - 1);
     }
 
     #[test]

@@ -13,11 +13,14 @@
 //! parameter grid keeps the host busy end to end.
 
 
-use crate::config::{RunConfig, Scheme};
+use crate::config::{RunConfig, Scheme, PRIORITY_LEVELS};
 use crate::coordinator::pool::panic_message;
 use crate::coordinator::rank::RankSet;
 use crate::coordinator::runner::runner_for;
-use crate::coordinator::service::{JobSpec, ServiceConfig, ServiceStats, SolverService};
+use crate::coordinator::service::{
+    AdmissionError, ExpiredError, JobSpec, ServiceConfig, ServiceStats, SolverService,
+    WAIT_BUCKET_BOUNDS_MS,
+};
 use crate::coordinator::solver::Solver;
 use crate::metrics::{mlups, timed};
 use crate::stencil::grid::Grid3;
@@ -191,12 +194,16 @@ pub struct ServiceJobReport {
     pub op: OpKind,
     pub size: (usize, usize, usize),
     pub iters: usize,
+    /// Priority level the job was queued at.
+    pub priority: usize,
     /// First cache group the job executed on.
     pub group_start: usize,
     /// Cache groups the job's window spans.
     pub group_count: usize,
     /// Jobs that shared the claimed window (1 = unbatched).
     pub batch_size: usize,
+    /// Milliseconds between submission and the claim that started it.
+    pub wait_ms: f64,
     /// Max |diff| against the serial reference (must be 0.0).
     pub verification_diff: f64,
 }
@@ -204,7 +211,14 @@ pub struct ServiceJobReport {
 /// Aggregate outcome of a [`run_service_jobs`] launch.
 #[derive(Clone, Debug)]
 pub struct ServiceReport {
+    /// Completed jobs only — rejected and shed jobs have no result grid.
     pub jobs: Vec<ServiceJobReport>,
+    /// Jobs bounced at admission with `QueueFull`, as
+    /// `(job index, retry_after_hint seconds)` — overload is a reported
+    /// outcome of a launch, not a launch failure.
+    pub rejected: Vec<(usize, f64)>,
+    /// Jobs shed past their `deadline_ms` before starting (job indices).
+    pub shed: Vec<usize>,
     /// Wall seconds from first submission to last completion.
     pub seconds: f64,
     /// Aggregate interior updates over those wall seconds.
@@ -229,22 +243,42 @@ pub fn run_service_jobs(svc_cfg: ServiceConfig, jobs: &[RunConfig]) -> Result<Se
         })
         .collect();
     let h2 = 1.0;
+    let mut rejected: Vec<(usize, f64)> = Vec::new();
+    let mut shed: Vec<usize> = Vec::new();
+    // admission overload and deadline shedding are *reported* launch
+    // outcomes (the backpressure contract a front end consumes), not
+    // launch failures; anything else typed is still a hard error
     let (outputs, dt) = {
         let (res, dt) = timed(|| -> Result<Vec<_>> {
-            let tickets: Vec<_> = jobs
-                .iter()
-                .zip(&inputs)
-                .map(|(cfg, (f, u0))| {
-                    svc.submit(JobSpec::new(cfg.clone(), u0.clone()).rhs(f.clone(), h2))
-                })
-                .collect::<Result<_>>()?;
-            tickets.into_iter().map(|t| t.wait()).collect()
+            let mut tickets = Vec::with_capacity(jobs.len());
+            for (i, (cfg, (f, u0))) in jobs.iter().zip(&inputs).enumerate() {
+                match svc.submit(JobSpec::new(cfg.clone(), u0.clone()).rhs(f.clone(), h2)) {
+                    Ok(t) => tickets.push((i, t)),
+                    Err(e) => match e.downcast_ref::<AdmissionError>() {
+                        Some(AdmissionError::QueueFull { retry_after_hint, .. }) => {
+                            rejected.push((i, *retry_after_hint));
+                        }
+                        _ => return Err(e),
+                    },
+                }
+            }
+            let mut outs = Vec::with_capacity(tickets.len());
+            for (i, t) in tickets {
+                match t.wait() {
+                    Ok(out) => outs.push((i, out)),
+                    Err(e) if e.downcast_ref::<ExpiredError>().is_some() => shed.push(i),
+                    Err(e) => return Err(e),
+                }
+            }
+            Ok(outs)
         });
         (res?, dt)
     };
-    let mut reports = Vec::with_capacity(jobs.len());
+    let mut reports = Vec::with_capacity(outputs.len());
     let mut updates = 0u64;
-    for (i, (cfg, ((f, u0), out))) in jobs.iter().zip(inputs.iter().zip(outputs)).enumerate() {
+    for (i, out) in outputs {
+        let cfg = &jobs[i];
+        let (f, u0) = &inputs[i];
         let r = cfg.op.radius();
         let (nz, ny, nx) = cfg.size;
         updates += ((nz - 2 * r) * (ny - 2 * r) * (nx - 2 * r) * cfg.iters) as u64;
@@ -257,9 +291,11 @@ pub fn run_service_jobs(svc_cfg: ServiceConfig, jobs: &[RunConfig]) -> Result<Se
             op: cfg.op,
             size: cfg.size,
             iters: cfg.iters,
+            priority: out.priority,
             group_start: out.placement.group_start,
             group_count: out.placement.group_count,
             batch_size: out.batch_size,
+            wait_ms: out.wait_ms,
             verification_diff: out.u.max_abs_diff(&want),
         });
     }
@@ -267,6 +303,8 @@ pub fn run_service_jobs(svc_cfg: ServiceConfig, jobs: &[RunConfig]) -> Result<Se
     svc.shutdown();
     Ok(ServiceReport {
         jobs: reports,
+        rejected,
+        shed,
         seconds: dt.as_secs_f64(),
         throughput_mlups: mlups(updates, dt),
         stats,
@@ -276,11 +314,12 @@ pub fn run_service_jobs(svc_cfg: ServiceConfig, jobs: &[RunConfig]) -> Result<Se
 /// Render a service report as a CSV block (one row per job).
 pub fn service_to_csv(report: &ServiceReport) -> String {
     let mut s = String::from(
-        "job,scheme,op,nz,ny,nx,iters,group_start,group_count,batch_size,verify_diff\n",
+        "job,scheme,op,nz,ny,nx,iters,priority,group_start,group_count,batch_size,\
+         wait_ms,verify_diff\n",
     );
     for j in &report.jobs {
         s += &format!(
-            "{},{:?},{},{},{},{},{},{},{},{},{:.3e}\n",
+            "{},{:?},{},{},{},{},{},{},{},{},{},{:.3},{:.3e}\n",
             j.job,
             j.scheme,
             j.op.as_str(),
@@ -288,11 +327,51 @@ pub fn service_to_csv(report: &ServiceReport) -> String {
             j.size.1,
             j.size.2,
             j.iters,
+            j.priority,
             j.group_start,
             j.group_count,
             j.batch_size,
+            j.wait_ms,
             j.verification_diff,
         );
+    }
+    s
+}
+
+/// Stable label for wait-histogram bucket `b`: `le_<bound>ms` below each
+/// bound in [`WAIT_BUCKET_BOUNDS_MS`], `gt_<last>ms` for the open tail.
+fn wait_bucket_label(b: usize) -> String {
+    match WAIT_BUCKET_BOUNDS_MS.get(b) {
+        Some(bound) => format!("le_{bound}ms"),
+        None => format!("gt_{}ms", WAIT_BUCKET_BOUNDS_MS[WAIT_BUCKET_BOUNDS_MS.len() - 1]),
+    }
+}
+
+/// Render the service-level counters — admission, shedding, queue
+/// pressure and the per-priority wait histograms — as a two-column
+/// `metric,value` CSV block (the stats companion to
+/// [`service_to_csv`]'s per-job rows).
+pub fn service_stats_to_csv(stats: &ServiceStats) -> String {
+    let mut s = String::from("metric,value\n");
+    for (k, v) in [
+        ("submitted", stats.submitted),
+        ("completed", stats.completed),
+        ("failed", stats.failed),
+        ("shed_expired", stats.shed_expired),
+        ("rejected_full", stats.rejected_full),
+        ("aged_jobs", stats.aged_jobs),
+        ("batches", stats.batches),
+        ("batched_jobs", stats.batched_jobs),
+        ("claim_conflicts", stats.claim_conflicts),
+        ("max_queue_depth", stats.max_queue_depth as u64),
+        ("peak_groups_busy", stats.peak_groups_busy as u64),
+    ] {
+        s += &format!("{k},{v}\n");
+    }
+    for p in 0..PRIORITY_LEVELS {
+        for (b, count) in stats.wait_hist[p].iter().enumerate() {
+            s += &format!("wait_p{p}_{},{count}\n", wait_bucket_label(b));
+        }
     }
     s
 }
@@ -456,26 +535,81 @@ mod tests {
     fn service_launch_verifies_every_tenant() {
         // a mixed job file through the multi-tenant service: every
         // tenant bit-exact, CSV row per job, coherent stats
-        let jobs = vec![
+        let mut jobs = vec![
             cfg(Scheme::JacobiWavefront),
             cfg(Scheme::GsMultiGroup),
             cfg(Scheme::JacobiWavefront), // identical twin -> batchable
             cfg(Scheme::JacobiBaseline),
         ];
+        jobs[1].priority = 2; // priority must round-trip into the report
         let svc_cfg = ServiceConfig { groups: 2, group_width: 4, ..Default::default() };
         let report = run_service_jobs(svc_cfg, &jobs).unwrap();
         assert_eq!(report.jobs.len(), 4);
         for j in &report.jobs {
             assert_eq!(j.verification_diff, 0.0, "job {} ({:?}) diverged", j.job, j.scheme);
             assert!(j.group_count >= 1);
+            assert!(j.wait_ms >= 0.0);
         }
+        assert_eq!(report.jobs[1].priority, 2);
+        assert!(report.rejected.is_empty() && report.shed.is_empty());
         assert_eq!(report.stats.completed, 4);
         assert_eq!(report.stats.claim_conflicts, 0);
         assert!(report.throughput_mlups > 0.0);
         let csv = service_to_csv(&report);
         assert_eq!(csv.lines().count(), 5);
         assert!(csv.starts_with("job,scheme,"));
+        assert!(csv.lines().next().unwrap().contains(",priority,"));
+        assert!(csv.lines().next().unwrap().contains(",wait_ms,"));
         assert!(csv.contains("GsMultiGroup,"));
+    }
+
+    #[test]
+    fn service_stats_csv_carries_the_admission_counters() {
+        // the stats companion block: every admission/shedding counter
+        // and one histogram row per priority × bucket, labeled by the
+        // bucket bounds so downstream tooling never re-derives them
+        let stats = ServiceStats {
+            submitted: 7,
+            completed: 5,
+            shed_expired: 1,
+            rejected_full: 2,
+            aged_jobs: 1,
+            max_queue_depth: 4,
+            ..Default::default()
+        };
+        let csv = service_stats_to_csv(&stats);
+        assert!(csv.starts_with("metric,value\n"));
+        for row in
+            ["shed_expired,1", "rejected_full,2", "max_queue_depth,4", "aged_jobs,1"]
+        {
+            assert!(csv.contains(&format!("\n{row}\n")), "missing {row} in:\n{csv}");
+        }
+        let hist_rows = csv.lines().filter(|l| l.starts_with("wait_p")).count();
+        assert_eq!(hist_rows, PRIORITY_LEVELS * (WAIT_BUCKET_BOUNDS_MS.len() + 1));
+        assert!(csv.contains("wait_p0_le_1ms,0"));
+        assert!(csv.contains("wait_p3_gt_1000ms,0"));
+    }
+
+    #[test]
+    fn overloaded_launches_report_sheds_without_failing() {
+        // a deadline_ms = 0 job is shed before any claim can reach it
+        // (the shed pass runs at the top of every executor wakeup,
+        // under the same lock as the claim scan): the launch still
+        // succeeds, the shed job is reported by index with no result
+        // row, and the completed tenant stays verified
+        let mut jobs = vec![cfg(Scheme::JacobiBaseline), cfg(Scheme::JacobiWavefront)];
+        jobs[1].deadline_ms = Some(0);
+        let svc_cfg = ServiceConfig { groups: 2, group_width: 4, ..Default::default() };
+        let report = run_service_jobs(svc_cfg, &jobs).unwrap();
+        assert_eq!(report.shed, vec![1]);
+        assert!(report.rejected.is_empty());
+        assert_eq!(report.jobs.len(), 1);
+        assert_eq!(report.jobs[0].job, 0);
+        assert_eq!(report.jobs[0].verification_diff, 0.0);
+        assert_eq!(report.stats.shed_expired, 1);
+        assert_eq!(report.stats.completed, 1);
+        let csv = service_stats_to_csv(&report.stats);
+        assert!(csv.contains("\nshed_expired,1\n"), "{csv}");
     }
 
     #[test]

@@ -72,3 +72,45 @@ pub mod stencil;
 
 /// Crate-wide result type.
 pub type Result<T> = anyhow::Result<T>;
+
+/// One home for the `STENCILWAVE_*` boolean env-flag convention: unset,
+/// empty, whitespace-only and `"0"` (after trimming) all mean **off**;
+/// anything else means **on**. `benchkit::smoke` and the SIMD probe used
+/// to parse this independently and disagreed on whitespace (` 0 ` turned
+/// the SIMD override off but the bench smoke *on*); route every flag
+/// through here so they can't drift again.
+pub fn env_flag(name: &str) -> bool {
+    std::env::var(name).is_ok_and(|v| {
+        let v = v.trim();
+        !v.is_empty() && v != "0"
+    })
+}
+
+#[cfg(test)]
+mod env_flag_tests {
+    use super::env_flag;
+
+    #[test]
+    fn unset_empty_zero_and_whitespace_variants_agree() {
+        // one process-unique name per case; set/remove is process-global,
+        // so keep each name single-use to stay race-free under the
+        // parallel test harness
+        let cases: [(&str, Option<&str>, bool); 7] = [
+            ("STENCILWAVE_ENVFLAG_T0", None, false),
+            ("STENCILWAVE_ENVFLAG_T1", Some(""), false),
+            ("STENCILWAVE_ENVFLAG_T2", Some("0"), false),
+            ("STENCILWAVE_ENVFLAG_T3", Some(" 0 "), false),
+            ("STENCILWAVE_ENVFLAG_T4", Some("   "), false),
+            ("STENCILWAVE_ENVFLAG_T5", Some("1"), true),
+            ("STENCILWAVE_ENVFLAG_T6", Some(" yes "), true),
+        ];
+        for (name, value, want) in cases {
+            match value {
+                Some(v) => std::env::set_var(name, v),
+                None => std::env::remove_var(name),
+            }
+            assert_eq!(env_flag(name), want, "{name}={value:?}");
+            std::env::remove_var(name);
+        }
+    }
+}

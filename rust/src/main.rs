@@ -39,6 +39,9 @@ COMMANDS:
                --config <file> | --scheme <s> --n <N> --t <T> --groups <G>
                --iters <I> --op <o> --ranks <R> --machine <name>
                --pin <none|compact|scatter|smtpair> --smt --csv
+               --priority <0..3> --deadline-ms <ms>  (service queueing
+               keys; carried by the config/job-file round-trip and used
+               when the config is submitted to the solver service)
                schemes: jacobi-baseline jacobi-wavefront jacobi-multigroup
                         jacobi-diamond gs-baseline gs-wavefront gs-multigroup
                ops:     laplace7 (paper 7-point) varcoeff (Helmholtz-style
@@ -57,12 +60,18 @@ COMMANDS:
   service    run a job file through the multi-tenant solver service
                --jobs <file> [--groups <G>] [--group-width <W>]
                [--machine <name>] [--max-batch <B>] [--csv]
+               [--queue-capacity <N>] [--age-after <C>]
                the job file holds `run` config blocks separated by `---`
                lines; jobs are admitted onto cache-group windows by the
                ECM-cost placement model, identical small-grid jobs batch
                through one schedule, and every tenant's result is
                verified against its serial reference. Defaults to the
-               host's cache-group shape (sysfs)
+               host's cache-group shape (sysfs). Per-job `priority` and
+               `deadline_ms` keys steer the scheduler: claiming runs
+               high priority first, a full queue (--queue-capacity)
+               rejects with a typed retry hint, an expired deadline
+               sheds the job, and after --age-after passed-over claim
+               cycles a starving job outranks everything younger
   figures    regenerate paper tables/figures
                [id|all] --out-dir <dir>
                ids: tab1 fig3a fig3b fig4a fig4b fig8 fig9 fig10 barrier
@@ -76,7 +85,7 @@ COMMANDS:
 fn cmd_run(args: &Args) -> Result<()> {
     args.check_known(&[
         "config", "scheme", "op", "n", "t", "groups", "iters", "ranks", "machine", "csv", "smt",
-        "pin",
+        "pin", "priority", "deadline-ms",
     ])?;
     let mut cfg = match args.get("config") {
         Some(path) => RunConfig::load(std::path::Path::new(path))?,
@@ -105,6 +114,14 @@ fn cmd_run(args: &Args) -> Result<()> {
     if args.get("ranks").is_some() {
         // the flag overrides the config file's `ranks = N` key
         cfg.ranks = args.get_usize("ranks", 1)?;
+    }
+    if args.get("priority").is_some() {
+        // the flag overrides the config file's `priority = N` key
+        cfg.priority = args.get_usize("priority", 0)?;
+    }
+    if args.get("deadline-ms").is_some() {
+        // the flag overrides the config file's `deadline_ms = N` key
+        cfg.deadline_ms = Some(args.get_usize("deadline-ms", 0)? as u64);
     }
     let report = launcher::run_experiment(&cfg)?;
     if args.get_bool("csv") {
@@ -135,7 +152,16 @@ fn cmd_run(args: &Args) -> Result<()> {
 }
 
 fn cmd_service(args: &Args) -> Result<()> {
-    args.check_known(&["jobs", "groups", "group-width", "machine", "max-batch", "csv"])?;
+    args.check_known(&[
+        "jobs",
+        "groups",
+        "group-width",
+        "machine",
+        "max-batch",
+        "csv",
+        "queue-capacity",
+        "age-after",
+    ])?;
     let path = args
         .get("jobs")
         .ok_or_else(|| anyhow::anyhow!("service needs --jobs <file> (blocks separated by ---)"))?;
@@ -147,33 +173,51 @@ fn cmd_service(args: &Args) -> Result<()> {
         group_width: args.get_usize("group-width", host.group_width)?,
         machine: args.get("machine").map(|s| s.to_string()),
         max_batch: args.get_usize("max-batch", host.max_batch)?,
+        queue_capacity: args.get_usize("queue-capacity", host.queue_capacity)?,
+        age_after: args.get_usize("age-after", host.age_after as usize)? as u64,
         ..host
     };
     let report = launcher::run_service_jobs(svc_cfg, &jobs)?;
     if args.get_bool("csv") {
+        // two CSV blocks, blank-line separated: per-job rows, then the
+        // service-level admission/wait counters
         print!("{}", launcher::service_to_csv(&report));
+        print!("\n{}", launcher::service_stats_to_csv(&report.stats));
     } else {
+        for &(i, hint) in &report.rejected {
+            println!("job {i:>3}: REJECTED queue full — retry in ~{hint:.3}s");
+        }
+        for &i in &report.shed {
+            println!("job {i:>3}: EXPIRED before starting — shed past its deadline_ms");
+        }
         for j in &report.jobs {
             println!(
-                "job {:>3}: {:?} op={} {:?} iters={} -> groups {}..{} batch={} max|diff|={:.1e}",
+                "job {:>3}: {:?} op={} {:?} iters={} prio={} -> groups {}..{} batch={} \
+                 wait={:.1}ms max|diff|={:.1e}",
                 j.job,
                 j.scheme,
                 j.op.as_str(),
                 j.size,
                 j.iters,
+                j.priority,
                 j.group_start,
                 j.group_start + j.group_count,
                 j.batch_size,
+                j.wait_ms,
                 j.verification_diff
             );
         }
         println!(
-            "{} jobs in {:.3}s aggregate {:.1} MLUP/s ({} batched into {} windows)",
+            "{} jobs in {:.3}s aggregate {:.1} MLUP/s ({} batched into {} windows, \
+             {} shed expired, {} rejected full, peak queue {})",
             report.jobs.len(),
             report.seconds,
             report.throughput_mlups,
             report.stats.batched_jobs,
-            report.stats.batches
+            report.stats.batches,
+            report.stats.shed_expired,
+            report.stats.rejected_full,
+            report.stats.max_queue_depth
         );
     }
     let diverged = report.jobs.iter().filter(|j| j.verification_diff != 0.0).count();

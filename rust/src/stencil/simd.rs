@@ -83,10 +83,7 @@ impl Isa {
     }
 
     fn probe() -> Isa {
-        let forced_scalar = matches!(
-            std::env::var("STENCILWAVE_FORCE_SCALAR"),
-            Ok(v) if !v.trim().is_empty() && v.trim() != "0"
-        );
+        let forced_scalar = crate::env_flag("STENCILWAVE_FORCE_SCALAR");
         if !forced_scalar && hw_avx() {
             Isa::Avx
         } else {

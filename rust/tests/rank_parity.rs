@@ -7,12 +7,16 @@
 
 mod common;
 
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
 use std::time::Duration;
 
 use common::{
     assert_rank_matrix, assert_rank_parity, rank_counts, rank_parity_config, tenant_jobs_with, Gen,
 };
-use stencilwave::comm::CommError;
+use stencilwave::comm::{
+    CommError, HaloExchange, Peer, SharedHaloStats, SocketTransport, Transport,
+};
 use stencilwave::config::{RunConfig, Scheme};
 use stencilwave::coordinator::rank::{FabricKind, RankSet};
 use stencilwave::stencil::grid::Grid3;
@@ -141,4 +145,125 @@ fn socket_fabric_matches_shared_memory_bit_for_bit() {
         r => r.unwrap(),
     }
     assert_eq!(socket.max_abs_diff(&shared), 0.0, "wire framing must round-trip f64 bits");
+}
+
+// ---------------------------------------------------------------------------
+// corrupt-frame negative coverage: a hostile or garbled wire must
+// surface a typed CommError at the victim, never an unbounded
+// allocation, a silent misparse, or a deadlocked rank
+
+/// One loopback connection: the raw injector half (the test writes
+/// arbitrary bytes into it) and the victim half a `SocketTransport`
+/// endpoint is built on. `None` where the sandbox forbids sockets —
+/// callers skip, matching the other socket tests.
+fn loopback_injection_pair() -> Option<(TcpStream, TcpStream)> {
+    let wired = (|| {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let injector = TcpStream::connect(listener.local_addr()?)?;
+        let (victim, _) = listener.accept()?;
+        injector.set_nodelay(true)?;
+        Ok::<_, std::io::Error>((injector, victim))
+    })();
+    match wired {
+        Ok(pair) => Some(pair),
+        Err(e) => {
+            eprintln!("skipping corrupt-frame test (no loopback): {e}");
+            None
+        }
+    }
+}
+
+/// Encode one wire frame by hand: `[tag u64][len u64][payload f64...]`,
+/// little-endian — with `len` free to lie about the payload.
+fn raw_frame(tag: u64, claimed_len: u64, payload: &[f64]) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(16 + payload.len() * 8);
+    buf.extend_from_slice(&tag.to_le_bytes());
+    buf.extend_from_slice(&claimed_len.to_le_bytes());
+    for v in payload {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    buf
+}
+
+#[test]
+fn oversized_frame_lengths_are_rejected_before_allocation() {
+    // a header claiming more words than the receiver's halo limit —
+    // including the u64::MAX case whose byte count overflows usize —
+    // must come back as CommError::Frame carrying the offending
+    // tag/len, and the poisoned stream must then read as Disconnected
+    // (the reader stops; it cannot resynchronize past a rejected
+    // header). Endpoint ids run over the STENCILWAVE_RANKS matrix.
+    let limit = 8usize;
+    for ranks in rank_counts() {
+        let ranks = ranks.max(2);
+        let rank = ranks - 1; // rightmost rank: its Left neighbor is the injector
+        for hostile_len in [limit as u64 + 1, u64::MAX] {
+            let Some((mut injector, victim)) = loopback_injection_pair() else { return };
+            let mut ep =
+                SocketTransport::from_stream(rank, ranks, Peer::Left, victim, limit).unwrap();
+            injector.write_all(&raw_frame(3, hostile_len, &[])).unwrap();
+            let err = ep.recv(Peer::Left).unwrap_err();
+            assert_eq!(
+                err,
+                CommError::Frame {
+                    rank,
+                    peer: Peer::Left,
+                    tag: 3,
+                    len: hostile_len,
+                    limit: limit as u64
+                },
+                "ranks {ranks}"
+            );
+            // anything after the rejected header is untrusted: typed
+            // disconnect, not a hang and not a misparse
+            assert_eq!(
+                ep.recv(Peer::Left).unwrap_err(),
+                CommError::Disconnected { rank, peer: Peer::Left }
+            );
+        }
+    }
+}
+
+#[test]
+fn truncated_payloads_surface_disconnected_not_deadlock() {
+    // the header promises 4 words but the injector dies after 2: the
+    // victim's blocked recv must wake with a typed Disconnected when
+    // the stream ends mid-frame — never parse the short payload, never
+    // wait forever
+    for ranks in rank_counts() {
+        let ranks = ranks.max(2);
+        let rank = ranks - 1;
+        let Some((mut injector, victim)) = loopback_injection_pair() else { return };
+        let mut ep = SocketTransport::from_stream(rank, ranks, Peer::Left, victim, 64).unwrap();
+        let t = std::thread::spawn(move || {
+            injector.write_all(&raw_frame(0, 4, &[1.0, 2.0])).unwrap();
+            injector.flush().unwrap();
+            std::thread::sleep(Duration::from_millis(30));
+            drop(injector); // EOF with the frame still 2 words short
+        });
+        let err = ep.recv(Peer::Left).unwrap_err();
+        assert_eq!(err, CommError::Disconnected { rank, peer: Peer::Left }, "ranks {ranks}");
+        t.join().unwrap();
+    }
+}
+
+#[test]
+fn non_monotone_tags_are_a_typed_protocol_error() {
+    // a well-formed frame whose tag skips ahead of the watermark the
+    // exchange engine expects: typed CommError::Protocol with both
+    // tags, through the full socket decode path
+    for ranks in rank_counts() {
+        let ranks = ranks.max(2);
+        let rank = ranks - 1;
+        let Some((mut injector, victim)) = loopback_injection_pair() else { return };
+        let ep = SocketTransport::from_stream(rank, ranks, Peer::Left, victim, 64).unwrap();
+        let mut engine = HaloExchange::new(Box::new(ep), SharedHaloStats::new());
+        injector.write_all(&raw_frame(7, 1, &[0.5])).unwrap();
+        let err = engine.recv(Peer::Left).unwrap_err();
+        assert_eq!(
+            err,
+            CommError::Protocol { rank, peer: Peer::Left, expected: 0, got: 7 },
+            "ranks {ranks}"
+        );
+    }
 }

@@ -131,6 +131,85 @@ fn a_staged_storm_of_identical_small_jobs_batches_exactly() {
 }
 
 #[test]
+fn a_wide_job_is_not_starved_by_a_live_narrow_stream() {
+    // the seed scheduler's oldest-runnable scan starved exactly this
+    // shape: a whole-machine-wide job queued while a stream of
+    // single-group jobs keeps at least one window busy is passed over
+    // on every claim, indefinitely. The aging rule bounds it: after
+    // `age_after` passed-over cycles the wide job reserves its window
+    // and nothing younger can leapfrog it. A live feeder thread keeps
+    // the narrow pressure up until the wide job actually finishes.
+    use std::sync::atomic::{AtomicBool, Ordering};
+    let age_after = 4u64;
+    let shape = ServiceConfig {
+        groups: 2,
+        group_width: 1,
+        max_batch: 1, // every claim is its own cycle
+        age_after,
+        queue_capacity: 256,
+        ..Default::default()
+    };
+    // narrow: inline baseline (one group); wide: a t = 2 wavefront team
+    // spanning both single-worker groups
+    let narrow = common::parity_config(
+        stencilwave::config::Scheme::JacobiBaseline,
+        stencilwave::stencil::op::OpKind::ConstLaplace7,
+        1,
+    );
+    let wide = common::parity_config(
+        stencilwave::config::Scheme::JacobiWavefront,
+        stencilwave::stencil::op::OpKind::ConstLaplace7,
+        2,
+    );
+    let mut svc = SolverService::new(shape).unwrap();
+    svc.pause();
+    let mut narrow_tickets: Vec<JobTicket> = Vec::new();
+    for i in 0..4u64 {
+        let (f, u0, h2) = tenant_grids(&narrow, i);
+        narrow_tickets.push(svc.submit(JobSpec::new(narrow.clone(), u0).rhs(f, h2)).unwrap());
+    }
+    let (f, u0, h2) = tenant_grids(&wide, 0xA1DE);
+    let wide_ticket = svc.submit(JobSpec::new(wide.clone(), u0).rhs(f, h2)).unwrap();
+    svc.resume();
+    let wide_done = AtomicBool::new(false);
+    let (skipped, fed) = thread::scope(|s| {
+        let feeder = {
+            let svc = &svc;
+            let narrow = &narrow;
+            let wide_done = &wide_done;
+            s.spawn(move || {
+                let mut tickets = Vec::new();
+                let mut i = 100u64;
+                while !wide_done.load(Ordering::Acquire) && tickets.len() < 150 {
+                    let (f, u0, h2) = tenant_grids(narrow, i);
+                    tickets
+                        .push(svc.submit(JobSpec::new(narrow.clone(), u0).rhs(f, h2)).unwrap());
+                    i += 1;
+                }
+                tickets
+            })
+        };
+        let out = wide_ticket.wait().expect("the wide job must complete, not starve");
+        wide_done.store(true, Ordering::Release);
+        let fed = feeder.join().unwrap();
+        assert_eq!(out.u.max_abs_diff(&tenant_reference(&wide, 0xA1DE)), 0.0);
+        (out.skipped_cycles, fed)
+    });
+    assert!(
+        skipped <= age_after + 2,
+        "wide job passed over {skipped} cycles under live load (age_after {age_after} + slack 2)"
+    );
+    let fed_count = fed.len();
+    for t in narrow_tickets.into_iter().chain(fed) {
+        t.wait().unwrap();
+    }
+    let stats = svc.stats();
+    assert_eq!(stats.completed, 5 + fed_count as u64, "every accepted job still completes");
+    assert_eq!(stats.claim_conflicts, 0);
+    svc.shutdown();
+}
+
+#[test]
 fn shutdown_under_load_drains_every_outstanding_ticket() {
     // shut down while jobs are queued and in flight: every ticket
     // already handed out is still honored bit-exactly (the drain
